@@ -1,0 +1,115 @@
+"""AOT compile path: lower the L2 graphs to HLO text artifacts for Rust.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is shape-specialized. The Rust partitioner pads worker shards
+to the manifest's power-of-two row buckets with zero rows (exact for both
+the gradient and the local objective: zero rows contribute nothing), so a
+small set of artifacts serves every experiment in the paper:
+
+  * ``worker_grad_r{r}_p{p}``  — per-worker fused gradient + local loss
+  * ``linesearch_r{r}_p{p}``   — per-worker ||X d||^2 (eq. (3))
+  * ``fwht_n{n}_c{c}``         — orthonormal FWHT encode slab
+
+``manifest.json`` indexes them; Rust's ``runtime::artifacts`` reads it.
+
+Usage: ``python -m compile.aot --outdir ../artifacts [--quick]``
+(``--quick`` emits only the small quickstart/test shapes; CI-fast).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (rows, p) shard shapes: quickstart/tests, MF subproblems (p = embed+1 = 16),
+# and the ridge experiment (p = 6000; 256 = beta*n/m = 2*4096/32,
+# 128 = uncoded n/m).
+QUICK_GRAD_SHAPES = [(8, 4), (32, 16), (128, 64)]
+FULL_GRAD_SHAPES = QUICK_GRAD_SHAPES + [
+    (64, 16), (128, 16), (256, 16), (512, 16), (1024, 16),
+    (128, 6000), (256, 6000),
+]
+QUICK_FWHT_SHAPES = [(64, 8), (256, 16)]
+FULL_FWHT_SHAPES = QUICK_FWHT_SHAPES + [(1024, 16), (8192, 32)]
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jax.numpy.float32)
+
+
+def lower_worker_grad(r: int, p: int) -> str:
+    return to_hlo_text(
+        jax.jit(model.worker_grad).lower(_spec((r, p)), _spec((r, 1)), _spec((p, 1)))
+    )
+
+
+def lower_linesearch(r: int, p: int) -> str:
+    return to_hlo_text(
+        jax.jit(model.worker_linesearch).lower(_spec((r, p)), _spec((p, 1)))
+    )
+
+
+def lower_fwht(n: int, c: int) -> str:
+    return to_hlo_text(jax.jit(model.fwht_encode).lower(_spec((n, c))))
+
+
+def build(outdir: str, quick: bool = False) -> dict:
+    """Emit every artifact + manifest.json into ``outdir``; returns manifest."""
+    os.makedirs(outdir, exist_ok=True)
+    grad_shapes = QUICK_GRAD_SHAPES if quick else FULL_GRAD_SHAPES
+    fwht_shapes = QUICK_FWHT_SHAPES if quick else FULL_FWHT_SHAPES
+
+    entries = []
+
+    def emit(name: str, kind: str, dims: dict, text: str):
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        entries.append({"name": name, "kind": kind, "file": fname, **dims})
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    for r, p in grad_shapes:
+        emit(f"worker_grad_r{r}_p{p}", "worker_grad", {"rows": r, "p": p},
+             lower_worker_grad(r, p))
+        emit(f"linesearch_r{r}_p{p}", "linesearch", {"rows": r, "p": p},
+             lower_linesearch(r, p))
+    for n, c in fwht_shapes:
+        emit(f"fwht_n{n}_c{c}", "fwht", {"n": n, "cols": c}, lower_fwht(n, c))
+
+    manifest = {"format": "hlo-text-v1", "entries": entries}
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(entries)} artifacts -> {outdir}/manifest.json")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes only (fast CI)")
+    args = ap.parse_args()
+    build(args.outdir, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

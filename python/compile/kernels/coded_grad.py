@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: fused per-worker coded gradient.
+
+Computes, for one worker's encoded shard ``(X, y)`` (``X`` is ``S_i X_raw``,
+``y`` is ``S_i y_raw``) and the broadcast iterate ``w``::
+
+    g = X^T (X w - y)          # shape (p, 1)
+    f = || X w - y ||^2        # scalar, the worker's local objective term
+
+in a single pass over ``X``: the kernel is tiled over row blocks, each block
+materializes only its residual slice ``r_b = X_b w - y_b`` in VMEM and
+accumulates ``X_b^T r_b`` into the output. The naive two-matmul formulation
+reads ``X`` twice (once for ``Xw``, once for ``X^T r``); the fused kernel
+streams each row block HBM->VMEM exactly once, which is the memory-bound
+win on both TPU (VMEM) and CPU (LLC).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): both products hit the MXU;
+``blk_r`` is a multiple of 8 and ``p`` padded to a lane multiple by the
+caller when run on real hardware. Here we run interpret=True (CPU PJRT
+cannot execute Mosaic custom-calls), so the kernel is a *structural*
+artifact: the HLO it lowers to is what the Rust runtime executes.
+
+VMEM budget per grid step (f32): ``blk_r * p`` (X block) + ``p`` (w)
++ ``2 * blk_r`` (y block + residual) + ``p`` (accumulator) floats.
+For the ridge shard (blk_r=128, p=6000) that is ~3.1 MiB — comfortably
+inside a 16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _grad_kernel(x_ref, y_ref, w_ref, g_ref, f_ref):
+    """One row-block step: accumulate X_b^T (X_b w - y_b) and ||r_b||^2."""
+    step = pl.program_id(0)
+
+    x_b = x_ref[...]                      # (blk_r, p)
+    w = w_ref[...]                        # (p, 1)
+    y_b = y_ref[...]                      # (blk_r, 1)
+
+    # residual for this block only — never materialized at full length
+    r_b = jnp.dot(x_b, w, preferred_element_type=jnp.float32) - y_b
+
+    g_blk = jnp.dot(x_b.T, r_b, preferred_element_type=jnp.float32)
+    f_blk = jnp.sum(r_b * r_b)
+
+    # first block initializes the accumulators, later blocks add
+    @pl.when(step == 0)
+    def _init():
+        g_ref[...] = g_blk
+        f_ref[...] = f_blk.reshape(1, 1)
+
+    @pl.when(step != 0)
+    def _acc():
+        g_ref[...] += g_blk
+        f_ref[...] += f_blk.reshape(1, 1)
+
+
+def pick_block_rows(r: int) -> int:
+    """Largest power-of-two row block <= 128 that divides ``r``.
+
+    Shard row counts produced by the Rust partitioner are padded to powers
+    of two (>= 8), so this normally returns 128 (or ``r`` itself when the
+    shard is small). Falls back to 1 for pathological row counts so the
+    kernel stays correct for any input.
+    """
+    if r <= 0:
+        raise ValueError(f"need at least one row, got r={r}")
+    blk = 128
+    while blk > 1 and r % blk != 0:
+        blk //= 2
+    return blk
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def coded_grad(x, y, w, *, block_rows: int | None = None):
+    """Fused worker gradient ``(X^T(Xw - y), ||Xw - y||^2)``.
+
+    Args:
+      x: encoded shard, shape ``(r, p)`` float32.
+      y: encoded targets, shape ``(r, 1)`` float32.
+      w: current iterate, shape ``(p, 1)`` float32.
+      block_rows: row-tile size; must divide ``r``. Auto-picked if None.
+
+    Returns:
+      ``(g, f)`` with ``g`` of shape ``(p, 1)`` and ``f`` of shape ``(1, 1)``.
+    """
+    r, p = x.shape
+    if y.shape != (r, 1):
+        raise ValueError(f"y shape {y.shape} != ({r}, 1)")
+    if w.shape != (p, 1):
+        raise ValueError(f"w shape {w.shape} != ({p}, 1)")
+    blk = block_rows if block_rows is not None else pick_block_rows(r)
+    if r % blk != 0:
+        raise ValueError(f"block_rows={blk} does not divide r={r}")
+
+    grid = (r // blk,)
+    return pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, p), lambda i: (i, 0)),    # X row block
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),    # y row block
+            pl.BlockSpec((p, 1), lambda i: (0, 0)),      # w (replicated)
+        ],
+        out_specs=[
+            pl.BlockSpec((p, 1), lambda i: (0, 0)),      # g accumulator
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),      # f accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x, y, w)

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: blocked Fast Walsh-Hadamard Transform (encode path).
+
+The Hadamard/FWHT encoder of §4 ("fast transforms") forms ``S X`` by
+zero-padding + row-shuffling ``X`` to ``N = beta*n`` rows (a randomized
+Hadamard ensemble) and applying the N-point Walsh-Hadamard transform to
+every column: ``S X = H_N P X_aug`` up to normalization. The transform is
+the O(N log N) reason the coded scheme's encode overhead is amortizable
+(Fig 4 / App. D).
+
+Kernel layout: grid over column tiles. Each grid step owns a ``(N, blk_c)``
+VMEM slab and runs the full log2(N) butterfly in-register; stages are a
+static python loop so the lowered HLO is a fully unrolled add/sub network —
+no data-dependent control flow. On TPU every stage is a stride-permuted
+add/sub the VPU vectorizes (DESIGN.md §Hardware-Adaptation); column tiling
+keeps the slab inside VMEM for any N that fits ``N * blk_c * 4`` bytes.
+
+Normalization: plain (unnormalized) butterfly, matching the Rust-side
+``linalg::fwht``. Callers apply ``1/sqrt(N)`` (orthonormal) or the ETF
+scaling themselves.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht_kernel(n: int, x_ref, o_ref):
+    """Full n-point butterfly over one (n, blk_c) column slab."""
+    x = x_ref[...]
+    h = 1
+    while h < n:
+        # shape (pairs, 2, h, blk_c): butterfly partners along axis 1
+        xr = x.reshape(n // (2 * h), 2, h, -1)
+        a = xr[:, 0, :, :]
+        b = xr[:, 1, :, :]
+        x = jnp.stack((a + b, a - b), axis=1).reshape(n, -1)
+        h *= 2
+    o_ref[...] = x
+
+
+def pick_block_cols(n: int, c: int, vmem_budget_bytes: int = 8 << 20) -> int:
+    """Largest power-of-two column tile that divides c and fits the budget."""
+    if c <= 0 or n <= 0:
+        raise ValueError(f"need positive dims, got n={n} c={c}")
+    max_cols = max(1, vmem_budget_bytes // (4 * n * 2))  # in + out slab
+    blk = 1
+    while blk * 2 <= max_cols and c % (blk * 2) == 0:
+        blk *= 2
+    while c % blk != 0:
+        blk //= 2
+    return max(blk, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols",))
+def fwht(x, *, block_cols: int | None = None):
+    """Walsh-Hadamard transform along axis 0 of ``x`` (shape ``(n, c)``).
+
+    ``n`` must be a power of two. Unnormalized (H @ x with +/-1 entries).
+    """
+    n, c = x.shape
+    if n & (n - 1) != 0:
+        raise ValueError(f"FWHT length must be a power of two, got {n}")
+    blk = block_cols if block_cols is not None else pick_block_cols(n, c)
+    if c % blk != 0:
+        raise ValueError(f"block_cols={blk} does not divide c={c}")
+
+    return pl.pallas_call(
+        functools.partial(_fwht_kernel, n),
+        grid=(c // blk,),
+        in_specs=[pl.BlockSpec((n, blk), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((n, blk), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=True,
+    )(x)

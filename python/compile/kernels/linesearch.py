@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: exact-line-search curvature term.
+
+Equation (3) of the paper needs, from each line-search worker ``i`` in
+``D_t``, the scalar ``d^T X~_i^T X~_i d = ||X~_i d||^2`` for the proposed
+descent direction ``d``. (The paper notes exact line search costs one
+matrix-vector product for quadratics — this kernel is exactly that product,
+fused with the squared-norm reduction so the ``X~_i d`` vector is never
+written back to HBM.)
+
+Same row-block streaming layout as ``coded_grad``: one HBM->VMEM pass over
+the shard per call.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .coded_grad import pick_block_rows
+
+
+def _ls_kernel(x_ref, d_ref, q_ref):
+    step = pl.program_id(0)
+    xd = jnp.dot(x_ref[...], d_ref[...], preferred_element_type=jnp.float32)
+    q_blk = jnp.sum(xd * xd).reshape(1, 1)
+
+    @pl.when(step == 0)
+    def _init():
+        q_ref[...] = q_blk
+
+    @pl.when(step != 0)
+    def _acc():
+        q_ref[...] += q_blk
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def linesearch_quad(x, d, *, block_rows: int | None = None):
+    """``||X d||^2`` as a ``(1, 1)`` array, single pass over ``x``.
+
+    Args:
+      x: encoded shard, shape ``(r, p)`` float32.
+      d: descent direction, shape ``(p, 1)`` float32.
+      block_rows: row-tile size; must divide ``r``. Auto-picked if None.
+    """
+    r, p = x.shape
+    if d.shape != (p, 1):
+        raise ValueError(f"d shape {d.shape} != ({p}, 1)")
+    blk = block_rows if block_rows is not None else pick_block_rows(r)
+    if r % blk != 0:
+        raise ValueError(f"block_rows={blk} does not divide r={r}")
+
+    return pl.pallas_call(
+        _ls_kernel,
+        grid=(r // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, p), lambda i: (i, 0)),
+            pl.BlockSpec((p, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(x, d)

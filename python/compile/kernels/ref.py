@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the correctness ground truth: ``python/tests`` asserts the Pallas
+kernels (and therefore the HLO artifacts the Rust runtime executes) match
+these to float32 tolerance across hypothesis-driven shape/value sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def coded_grad_ref(x, y, w):
+    """Reference ``(X^T(Xw - y), ||Xw - y||^2)``; shapes as coded_grad."""
+    r = x @ w - y
+    return x.T @ r, jnp.sum(r * r).reshape(1, 1)
+
+
+def linesearch_quad_ref(x, d):
+    """Reference ``||X d||^2`` as a ``(1, 1)`` array."""
+    xd = x @ d
+    return jnp.sum(xd * xd).reshape(1, 1)
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Sylvester Hadamard matrix H_n (n a power of two), +/-1 entries."""
+    if n & (n - 1) != 0 or n <= 0:
+        raise ValueError(f"n must be a positive power of two, got {n}")
+    h = np.array([[1.0]])
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def fwht_ref(x):
+    """Reference unnormalized WHT along axis 0: ``H_n @ x``."""
+    n = x.shape[0]
+    return jnp.asarray(hadamard_matrix(n), dtype=x.dtype) @ x

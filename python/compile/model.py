@@ -1,0 +1,50 @@
+"""L2: the per-worker compute graph of the encoded optimization system.
+
+The paper's "model" is the distributed quadratic objective (1)/(2). Each
+worker's iteration-time compute is:
+
+  * ``worker_grad``  — gradient shard ``g_i = X~_i^T (X~_i w - y~_i)`` and
+    local objective ``f_i = ||X~_i w - y~_i||^2`` (broadcast step, eq. in §2);
+  * ``linesearch_quad`` — curvature scalar ``||X~_i d||^2`` for the exact
+    line search, eq. (3);
+  * ``fwht_encode`` — the one-time FWHT encode pass (fast-transform codes,
+    §4) used when workers encode their own column blocks (App. D layout).
+
+All three call the L1 Pallas kernels so the lowered HLO the Rust runtime
+executes is the kernelized pipeline, not a re-derivation. This module is
+build-time only: ``aot.py`` lowers it to HLO text, Rust loads the text.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.coded_grad import coded_grad
+from .kernels.fwht import fwht
+from .kernels.linesearch import linesearch_quad
+
+
+def worker_grad(x, y, w):
+    """Worker gradient step: ``(g_i, f_i)``; see ``kernels.coded_grad``.
+
+    Returned as a 2-tuple so the AOT artifact is a single executable the
+    Rust ``XlaEngine`` calls once per iteration per worker.
+    """
+    g, f = coded_grad(x, y, w)
+    return g, f
+
+
+def worker_linesearch(x, d):
+    """Line-search curvature ``||X~_i d||^2`` (eq. (3) denominator term)."""
+    return (linesearch_quad(x, d),)
+
+
+def fwht_encode(x_aug):
+    """Orthonormal randomized-Hadamard encode of a padded column block.
+
+    ``x_aug`` is the zero-padded, row-shuffled ``(N, c)`` slab (N a power of
+    two); returns ``H_N x_aug / sqrt(N)`` so that the full encoder satisfies
+    ``S^T S = I`` scaling per column (tight-frame normalization, §4).
+    """
+    n = x_aug.shape[0]
+    return (fwht(x_aug) * (1.0 / jnp.sqrt(jnp.float32(n))),)

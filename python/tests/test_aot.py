@@ -1,0 +1,76 @@
+"""AOT pipeline tests: lowering emits parseable HLO text + sane manifest.
+
+These don't execute the HLO (that's the Rust integration tests' job) but
+assert the text artifacts have the structure the Rust loader expects:
+an ENTRY computation, the right parameter count, and a tuple root
+(gen path lowers with return_tuple=True).
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+class TestLowering:
+    def test_worker_grad_hlo_structure(self):
+        text = aot.lower_worker_grad(8, 4)
+        assert "ENTRY" in text
+        assert "f32[8,4]" in text      # X parameter
+        assert "f32[8,1]" in text      # y parameter
+        assert "f32[4,1]" in text      # w parameter / g output
+        assert text.count("parameter(") >= 3
+        assert "(f32[4,1]" in text     # tuple-root output includes g
+
+    def test_linesearch_hlo_structure(self):
+        text = aot.lower_linesearch(16, 8)
+        assert "ENTRY" in text
+        assert "f32[16,8]" in text and "f32[8,1]" in text
+        assert "f32[1,1]" in text      # scalar output
+
+    def test_fwht_hlo_structure(self):
+        text = aot.lower_fwht(64, 4)
+        assert "ENTRY" in text
+        assert "f32[64,4]" in text
+
+    def test_lowering_is_deterministic(self):
+        assert aot.lower_worker_grad(8, 4) == aot.lower_worker_grad(8, 4)
+
+
+class TestBuild:
+    @pytest.fixture(scope="class")
+    def built(self, tmp_path_factory):
+        outdir = tmp_path_factory.mktemp("artifacts")
+        manifest = aot.build(str(outdir), quick=True)
+        return outdir, manifest
+
+    def test_manifest_written_and_loadable(self, built):
+        outdir, manifest = built
+        with open(os.path.join(outdir, "manifest.json")) as f:
+            on_disk = json.load(f)
+        assert on_disk == manifest
+        assert on_disk["format"] == "hlo-text-v1"
+
+    def test_every_entry_file_exists_nonempty(self, built):
+        outdir, manifest = built
+        for e in manifest["entries"]:
+            path = os.path.join(outdir, e["file"])
+            assert os.path.getsize(path) > 100, e
+
+    def test_entry_kinds_and_dims(self, built):
+        _, manifest = built
+        kinds = {e["kind"] for e in manifest["entries"]}
+        assert kinds == {"worker_grad", "linesearch", "fwht"}
+        for e in manifest["entries"]:
+            if e["kind"] in ("worker_grad", "linesearch"):
+                assert e["rows"] >= 1 and e["p"] >= 1
+            else:
+                assert e["n"] & (e["n"] - 1) == 0  # power of two
+
+    def test_quick_shapes_cover_quickstart(self, built):
+        _, manifest = built
+        names = {e["name"] for e in manifest["entries"]}
+        assert "worker_grad_r128_p64" in names
+        assert "linesearch_r128_p64" in names

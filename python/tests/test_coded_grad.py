@@ -1,0 +1,140 @@
+"""Kernel-vs-oracle correctness for the fused worker-gradient kernel.
+
+This is the CORE correctness signal for the compute hot path: the HLO the
+Rust runtime executes is lowered from exactly this kernel.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.coded_grad import coded_grad, pick_block_rows
+from compile.kernels.ref import coded_grad_ref
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def _mk(rng, r, p, scale=1.0):
+    x = jnp.asarray(rng.normal(size=(r, p)) * scale, dtype=jnp.float32)
+    y = jnp.asarray(rng.normal(size=(r, 1)) * scale, dtype=jnp.float32)
+    w = jnp.asarray(rng.normal(size=(p, 1)), dtype=jnp.float32)
+    return x, y, w
+
+
+def _check(x, y, w, **kw):
+    g, f = coded_grad(x, y, w, **kw)
+    gr, fr = coded_grad_ref(x, y, w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(fr), rtol=RTOL, atol=ATOL)
+
+
+class TestAgainstReference:
+    @pytest.mark.parametrize("r,p", [(8, 4), (32, 16), (128, 64), (256, 33),
+                                     (96, 7), (1, 1), (5, 3), (512, 16)])
+    def test_shapes(self, r, p):
+        _check(*_mk(np.random.default_rng(r * 1000 + p), r, p))
+
+    @pytest.mark.parametrize("blk", [1, 2, 4, 8, 16, 32, 64])
+    def test_explicit_block_sizes(self, blk):
+        _check(*_mk(np.random.default_rng(blk), 64, 12), block_rows=blk)
+
+    def test_single_block_covers_all_rows(self):
+        _check(*_mk(np.random.default_rng(7), 48, 5), block_rows=48)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        r_exp=st.integers(0, 7),
+        p=st.integers(1, 40),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([1e-3, 1.0, 1e2]),
+    )
+    def test_hypothesis_sweep(self, r_exp, p, seed, scale):
+        r = 2 ** r_exp
+        _check(*_mk(np.random.default_rng(seed), r, p, scale))
+
+
+class TestSemantics:
+    def test_zero_residual_gives_zero_gradient(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(32, 8)), dtype=jnp.float32)
+        w = jnp.asarray(rng.normal(size=(8, 1)), dtype=jnp.float32)
+        y = x @ w  # exact fit
+        g, f = coded_grad(x, y, w)
+        np.testing.assert_allclose(np.asarray(g), 0.0, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(f), 0.0, atol=1e-6)
+
+    def test_zero_padded_rows_are_exact_noops(self):
+        # the Rust partitioner pads shards with zero rows to hit the
+        # power-of-two artifact buckets — this MUST be exact.
+        rng = np.random.default_rng(2)
+        x, y, w = _mk(rng, 24, 6)
+        pad = 8
+        xp = jnp.concatenate([x, jnp.zeros((pad, 6), jnp.float32)])
+        yp = jnp.concatenate([y, jnp.zeros((pad, 1), jnp.float32)])
+        g0, f0 = coded_grad(x, y, w)
+        g1, f1 = coded_grad(xp, yp, w)
+        np.testing.assert_allclose(np.asarray(g0), np.asarray(g1), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(f0), np.asarray(f1), rtol=1e-5, atol=1e-5)
+
+    def test_linearity_in_y(self):
+        rng = np.random.default_rng(3)
+        x, y, w = _mk(rng, 16, 4)
+        g_y, _ = coded_grad(x, y, w)
+        g_2y, _ = coded_grad(x, 2.0 * y, w)
+        g_0, _ = coded_grad(x, jnp.zeros_like(y), w)
+        # g(y) = X^T X w - X^T y is affine in y
+        np.testing.assert_allclose(
+            np.asarray(g_2y - g_0), 2.0 * np.asarray(g_y - g_0), rtol=1e-4, atol=1e-4
+        )
+
+    def test_gradient_is_derivative_of_local_loss(self):
+        # finite-difference check: f(w) = ||Xw-y||^2, grad = 2 X^T(Xw-y) = 2g
+        rng = np.random.default_rng(4)
+        x, y, w = _mk(rng, 32, 5)
+        g, f = coded_grad(x, y, w)
+        eps = 1e-2
+        for j in range(5):
+            e = np.zeros((5, 1), np.float32)
+            e[j] = eps
+            _, fp = coded_grad(x, y, w + jnp.asarray(e))
+            _, fm = coded_grad(x, y, w - jnp.asarray(e))
+            fd = (float(fp[0, 0]) - float(fm[0, 0])) / (2 * eps)
+            assert abs(fd - 2.0 * float(g[j, 0])) < 5e-2 * max(1.0, abs(fd))
+
+
+class TestValidation:
+    def test_rejects_bad_y_shape(self):
+        rng = np.random.default_rng(0)
+        x, y, w = _mk(rng, 8, 4)
+        with pytest.raises(ValueError):
+            coded_grad(x, y.reshape(1, 8), w)
+
+    def test_rejects_bad_w_shape(self):
+        rng = np.random.default_rng(0)
+        x, y, w = _mk(rng, 8, 4)
+        with pytest.raises(ValueError):
+            coded_grad(x, y, w.reshape(1, 4))
+
+    def test_rejects_nondividing_block(self):
+        rng = np.random.default_rng(0)
+        x, y, w = _mk(rng, 12, 4)
+        with pytest.raises(ValueError):
+            coded_grad(x, y, w, block_rows=5)
+
+
+class TestBlockPicker:
+    @pytest.mark.parametrize("r,expect", [(128, 128), (256, 128), (8, 8),
+                                          (1, 1), (96, 32), (33, 1), (512, 128)])
+    def test_pick(self, r, expect):
+        assert pick_block_rows(r) == expect
+
+    def test_pick_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            pick_block_rows(0)
+
+    @settings(max_examples=30, deadline=None)
+    @given(r=st.integers(1, 4096))
+    def test_pick_always_divides(self, r):
+        blk = pick_block_rows(r)
+        assert r % blk == 0 and 1 <= blk <= 128

@@ -1,0 +1,65 @@
+"""The AOT shape manifest must cover every shard shape the paper's
+experiments produce — otherwise the Rust XlaEngine fails at startup.
+
+These tests encode the contract between `aot.py`'s shape lists and the
+Rust partitioner's padding rules (power-of-two buckets ≥ 8)."""
+
+import math
+
+from compile import aot
+
+
+def pad_bucket(rows: int) -> int:
+    """Mirror of rust `problem::pad_bucket`."""
+    return max(8, 1 << math.ceil(math.log2(max(rows, 1))))
+
+
+class TestShapeCoverage:
+    def grad_shapes(self):
+        return set(aot.FULL_GRAD_SHAPES)
+
+    def test_ridge_experiment_shards_covered(self):
+        # Fig. 4: n=4096, beta=2 FWHT -> 8192 rows over m=32 -> 256 x 6000;
+        # uncoded: 4096/32 = 128 x 6000
+        shapes = self.grad_shapes()
+        assert (256, 6000) in shapes
+        assert (128, 6000) in shapes
+
+    def test_mf_experiment_buckets_covered(self):
+        # MF subproblems: p = embed+1 = 16, distributed rows padded to
+        # power-of-two buckets; shard rows = bucket*2/m for beta=2 —
+        # need buckets 64..1024 at p=16
+        shapes = self.grad_shapes()
+        for bucket in (64, 128, 256, 512, 1024):
+            assert (bucket, 16) in shapes, f"missing MF bucket {bucket}"
+
+    def test_quickstart_shapes_covered(self):
+        # examples/quickstart.rs: n=512, p=64, beta=2, m=8 -> 128 x 64
+        assert (128, 64) in self.grad_shapes()
+
+    def test_every_grad_shape_gets_a_linesearch_artifact(self, tmp_path):
+        # aot.build emits a linesearch program for each grad shape
+        manifest = aot.build(str(tmp_path), quick=True)
+        grads = {(e["rows"], e["p"]) for e in manifest["entries"] if e["kind"] == "worker_grad"}
+        ls = {(e["rows"], e["p"]) for e in manifest["entries"] if e["kind"] == "linesearch"}
+        assert grads == ls
+
+    def test_grad_shape_rows_are_valid_buckets(self):
+        for r, p in aot.FULL_GRAD_SHAPES:
+            assert r >= 8 and (r & (r - 1)) == 0, f"rows {r} not a bucket"
+            assert p >= 1
+
+    def test_quick_is_subset_of_full(self):
+        assert set(aot.QUICK_GRAD_SHAPES) <= set(aot.FULL_GRAD_SHAPES)
+        assert set(aot.QUICK_FWHT_SHAPES) <= set(aot.FULL_FWHT_SHAPES)
+
+    def test_fwht_shapes_are_powers_of_two(self):
+        for n, c in aot.FULL_FWHT_SHAPES:
+            assert n & (n - 1) == 0 and c >= 1
+
+    def test_pad_bucket_mirror(self):
+        # the python mirror used above agrees with the rust rule on the
+        # boundary cases the partitioner hits
+        for rows, expect in [(1, 8), (8, 8), (9, 16), (100, 128), (256, 256),
+                             (257, 512)]:
+            assert pad_bucket(rows) == expect, rows

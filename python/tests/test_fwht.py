@@ -1,0 +1,89 @@
+"""FWHT encode-kernel correctness: oracle match + transform identities."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fwht import fwht, pick_block_cols
+from compile.kernels.ref import fwht_ref, hadamard_matrix
+
+
+def _mk(rng, n, c, scale=1.0):
+    return jnp.asarray(rng.normal(size=(n, c)) * scale, dtype=jnp.float32)
+
+
+class TestAgainstReference:
+    @pytest.mark.parametrize("n,c", [(2, 1), (4, 3), (8, 8), (32, 5),
+                                     (64, 16), (256, 2), (1024, 3)])
+    def test_shapes(self, n, c):
+        x = _mk(np.random.default_rng(n + c), n, c)
+        np.testing.assert_allclose(
+            np.asarray(fwht(x)), np.asarray(fwht_ref(x)), rtol=1e-3, atol=1e-3
+        )
+
+    @pytest.mark.parametrize("blk", [1, 2, 4, 8])
+    def test_explicit_column_blocks(self, blk):
+        x = _mk(np.random.default_rng(blk), 64, 8)
+        np.testing.assert_allclose(
+            np.asarray(fwht(x, block_cols=blk)), np.asarray(fwht_ref(x)),
+            rtol=1e-3, atol=1e-3,
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(n_exp=st.integers(1, 9), c=st.integers(1, 12),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, n_exp, c, seed):
+        x = _mk(np.random.default_rng(seed), 2 ** n_exp, c)
+        np.testing.assert_allclose(
+            np.asarray(fwht(x)), np.asarray(fwht_ref(x)), rtol=1e-3, atol=1e-3
+        )
+
+
+class TestIdentities:
+    def test_involution(self):
+        # H (H x) = n x for unnormalized WHT
+        x = _mk(np.random.default_rng(0), 64, 4)
+        np.testing.assert_allclose(
+            np.asarray(fwht(fwht(x))), 64.0 * np.asarray(x), rtol=1e-3, atol=1e-2
+        )
+
+    def test_parseval(self):
+        # ||H x||^2 = n ||x||^2 column-wise
+        x = _mk(np.random.default_rng(1), 128, 3)
+        hx = np.asarray(fwht(x))
+        np.testing.assert_allclose(
+            (hx ** 2).sum(axis=0), 128.0 * (np.asarray(x) ** 2).sum(axis=0),
+            rtol=1e-3,
+        )
+
+    def test_dc_column(self):
+        # transform of all-ones puts all energy in the first row
+        x = jnp.ones((32, 2), jnp.float32)
+        hx = np.asarray(fwht(x))
+        assert np.allclose(hx[0], 32.0) and np.allclose(hx[1:], 0.0, atol=1e-4)
+
+    def test_matches_explicit_matrix(self):
+        h = hadamard_matrix(16)
+        x = _mk(np.random.default_rng(2), 16, 4)
+        np.testing.assert_allclose(
+            np.asarray(fwht(x)), h @ np.asarray(x), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestValidation:
+    def test_rejects_non_power_of_two(self):
+        with pytest.raises(ValueError):
+            fwht(jnp.zeros((12, 2), jnp.float32))
+
+    def test_rejects_nondividing_block(self):
+        with pytest.raises(ValueError):
+            fwht(jnp.zeros((8, 3), jnp.float32), block_cols=2)
+
+    @settings(max_examples=25, deadline=None)
+    @given(n_exp=st.integers(1, 13), c=st.integers(1, 64))
+    def test_block_picker_divides_and_fits(self, n_exp, c):
+        n = 2 ** n_exp
+        blk = pick_block_cols(n, c)
+        assert c % blk == 0
+        assert 2 * 4 * n * blk <= (8 << 20) or blk == 1

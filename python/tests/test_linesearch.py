@@ -1,0 +1,70 @@
+"""Line-search curvature-kernel correctness (eq. (3) denominator)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.linesearch import linesearch_quad
+from compile.kernels.ref import linesearch_quad_ref
+
+
+def _mk(rng, r, p, scale=1.0):
+    x = jnp.asarray(rng.normal(size=(r, p)) * scale, dtype=jnp.float32)
+    d = jnp.asarray(rng.normal(size=(p, 1)), dtype=jnp.float32)
+    return x, d
+
+
+class TestAgainstReference:
+    @pytest.mark.parametrize("r,p", [(8, 4), (32, 16), (128, 64), (1, 1),
+                                     (64, 7), (96, 3), (512, 16)])
+    def test_shapes(self, r, p):
+        x, d = _mk(np.random.default_rng(r + 17 * p), r, p)
+        np.testing.assert_allclose(
+            np.asarray(linesearch_quad(x, d)),
+            np.asarray(linesearch_quad_ref(x, d)),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    @pytest.mark.parametrize("blk", [1, 4, 16, 64])
+    def test_explicit_block_sizes(self, blk):
+        x, d = _mk(np.random.default_rng(blk), 64, 9)
+        np.testing.assert_allclose(
+            np.asarray(linesearch_quad(x, d, block_rows=blk)),
+            np.asarray(linesearch_quad_ref(x, d)),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(r_exp=st.integers(0, 8), p=st.integers(1, 32),
+           seed=st.integers(0, 2**31 - 1),
+           scale=st.sampled_from([1e-2, 1.0, 1e2]))
+    def test_hypothesis_sweep(self, r_exp, p, seed, scale):
+        x, d = _mk(np.random.default_rng(seed), 2 ** r_exp, p, scale)
+        np.testing.assert_allclose(
+            np.asarray(linesearch_quad(x, d)),
+            np.asarray(linesearch_quad_ref(x, d)),
+            rtol=2e-4, atol=2e-4,
+        )
+
+
+class TestSemantics:
+    def test_nonnegative(self):
+        x, d = _mk(np.random.default_rng(0), 32, 8)
+        assert float(linesearch_quad(x, d)[0, 0]) >= 0.0
+
+    def test_quadratic_scaling_in_d(self):
+        x, d = _mk(np.random.default_rng(1), 32, 8)
+        q1 = float(linesearch_quad(x, d)[0, 0])
+        q3 = float(linesearch_quad(x, 3.0 * d)[0, 0])
+        assert abs(q3 - 9.0 * q1) < 1e-3 * max(1.0, q3)
+
+    def test_zero_direction(self):
+        x, _ = _mk(np.random.default_rng(2), 16, 4)
+        q = float(linesearch_quad(x, jnp.zeros((4, 1), jnp.float32))[0, 0])
+        assert q == 0.0
+
+    def test_rejects_bad_d_shape(self):
+        x, d = _mk(np.random.default_rng(3), 8, 4)
+        with pytest.raises(ValueError):
+            linesearch_quad(x, d.reshape(1, 4))

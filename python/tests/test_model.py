@@ -1,0 +1,65 @@
+"""L2 model-level tests: the graphs that get lowered to HLO artifacts."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels.ref import coded_grad_ref, fwht_ref, linesearch_quad_ref
+
+
+def _mk(seed, r, p):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(r, p)), dtype=jnp.float32)
+    y = jnp.asarray(rng.normal(size=(r, 1)), dtype=jnp.float32)
+    w = jnp.asarray(rng.normal(size=(p, 1)), dtype=jnp.float32)
+    return x, y, w
+
+
+class TestWorkerGrad:
+    def test_matches_oracle(self):
+        x, y, w = _mk(0, 64, 12)
+        g, f = model.worker_grad(x, y, w)
+        gr, fr = coded_grad_ref(x, y, w)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(f), np.asarray(fr), rtol=1e-4, atol=1e-4)
+
+    def test_output_arity_and_shapes(self):
+        x, y, w = _mk(1, 32, 8)
+        out = model.worker_grad(x, y, w)
+        assert len(out) == 2
+        assert out[0].shape == (8, 1) and out[1].shape == (1, 1)
+
+
+class TestWorkerLinesearch:
+    def test_matches_oracle(self):
+        x, _, w = _mk(2, 48, 6)
+        (q,) = model.worker_linesearch(x, w)
+        np.testing.assert_allclose(
+            np.asarray(q), np.asarray(linesearch_quad_ref(x, w)), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestFwhtEncode:
+    def test_orthonormal_scaling(self):
+        # encode preserves column norms exactly (tight frame, S^T S = I scale)
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(128, 4)), dtype=jnp.float32)
+        (sx,) = model.fwht_encode(x)
+        np.testing.assert_allclose(
+            (np.asarray(sx) ** 2).sum(axis=0),
+            (np.asarray(x) ** 2).sum(axis=0),
+            rtol=1e-3,
+        )
+
+    def test_matches_scaled_reference(self):
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.normal(size=(64, 3)), dtype=jnp.float32)
+        (sx,) = model.fwht_encode(x)
+        np.testing.assert_allclose(
+            np.asarray(sx), np.asarray(fwht_ref(x)) / 8.0, rtol=1e-3, atol=1e-3
+        )
+
+    def test_rejects_non_power_of_two(self):
+        with pytest.raises(ValueError):
+            model.fwht_encode(jnp.zeros((10, 2), jnp.float32))

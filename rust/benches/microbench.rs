@@ -1,0 +1,153 @@
+//! Performance microbenches — the §Perf evidence in EXPERIMENTS.md.
+//!
+//! Measures the system's hot paths in isolation:
+//!  * fused worker gradient (one-pass) vs naive two-pass gemv/gemv_t
+//!  * FWHT O(N log N) encode vs dense O(N²) encode
+//!  * blocked+threaded GEMM throughput
+//!  * full cluster gradient round (native engine) — leader overhead
+//!  * XLA engine round latency (artifacts required; skipped otherwise)
+//!
+//! Run: `cargo bench --bench microbench`.
+
+use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
+use codedopt::encoding::EncoderKind;
+use codedopt::linalg::{self, Mat};
+use codedopt::problem::{EncodedProblem, QuadProblem};
+use codedopt::rng::Pcg64;
+use codedopt::runtime::{ComputeEngine, Manifest, NativeEngine, XlaEngine};
+
+fn time_ms(reps: usize, mut f: impl FnMut()) -> f64 {
+    // warmup
+    f();
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+}
+
+fn bench_fused_grad() {
+    println!("--- fused worker gradient: one-pass vs two-pass (r=512, p=512) ---");
+    let mut rng = Pcg64::seeded(1);
+    let x = Mat::from_fn(512, 512, |_, _| rng.next_gaussian());
+    let w: Vec<f64> = (0..512).map(|_| rng.next_gaussian()).collect();
+    let y: Vec<f64> = (0..512).map(|_| rng.next_gaussian()).collect();
+    let mut g = vec![0.0; 512];
+    let mut buf = vec![0.0; 512];
+
+    let fused = time_ms(50, || {
+        let f = x.fused_grad(&w, &y, &mut g, &mut buf);
+        std::hint::black_box(f);
+    });
+    let two_pass = time_ms(50, || {
+        let resid = linalg::sub(&x.gemv(&w), &y);
+        let g2 = x.gemv_t(&resid);
+        let f: f64 = linalg::dot(&resid, &resid);
+        std::hint::black_box((g2, f));
+    });
+    let flops = 2.0 * 2.0 * 512.0 * 512.0;
+    println!(
+        "fused: {fused:.3} ms ({:.2} GFLOP/s)   two-pass: {two_pass:.3} ms   speedup {:.2}x",
+        flops / fused / 1e6,
+        two_pass / fused
+    );
+}
+
+fn bench_fwht_encode() {
+    println!("\n--- encode: FWHT fast path vs dense S·X (n=2048→N=4096, p=16) ---");
+    let n = 2048;
+    let mut rng = Pcg64::seeded(2);
+    let x = Mat::from_fn(n, 16, |_, _| rng.next_gaussian());
+    let enc = EncoderKind::Hadamard.build(n, 2.0, 3).unwrap();
+    let fast = time_ms(5, || {
+        std::hint::black_box(enc.encode(&x));
+    });
+    let s = enc.materialize();
+    let dense = time_ms(2, || {
+        std::hint::black_box(s.matmul(&x));
+    });
+    println!("fwht: {fast:.2} ms   dense: {dense:.2} ms   speedup {:.1}x", dense / fast);
+}
+
+fn bench_gemm() {
+    println!("\n--- GEMM throughput (512×512×512, blocked + threaded) ---");
+    let mut rng = Pcg64::seeded(3);
+    let a = Mat::from_fn(512, 512, |_, _| rng.next_gaussian());
+    let b = Mat::from_fn(512, 512, |_, _| rng.next_gaussian());
+    let ms = time_ms(10, || {
+        std::hint::black_box(a.matmul(&b));
+    });
+    let gflops = 2.0 * 512f64.powi(3) / ms / 1e6;
+    println!("matmul: {ms:.2} ms  ({gflops:.2} GFLOP/s)");
+}
+
+fn bench_cluster_round() {
+    println!("\n--- full gradient round, native engine (n=4096, p=512, m=32, β=2) ---");
+    let prob = QuadProblem::synthetic_gaussian(4096, 512, 0.05, 4);
+    let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 32, 4).unwrap();
+    let engine = Box::new(NativeEngine::new(&enc));
+    let cfg = ClusterConfig {
+        workers: 32,
+        wait_for: 12,
+        delay: DelayModel::Exp { mean_ms: 10.0 },
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed: 4,
+    };
+    let mut cluster = Cluster::new(&enc, engine, cfg).unwrap();
+    let w = vec![0.1; 512];
+    let round_ms = time_ms(10, || {
+        std::hint::black_box(cluster.grad_round(&w).unwrap());
+    });
+    // pure engine compute for comparison (leader overhead = difference)
+    let mut engine2 = NativeEngine::new(&enc);
+    let engine_ms = time_ms(10, || {
+        std::hint::black_box(engine2.worker_grad_all(&w).unwrap());
+    });
+    let mflops_round = enc
+        .shards
+        .iter()
+        .map(|s| 4.0 * s.x.rows() as f64 * s.x.cols() as f64 / 1e6)
+        .sum::<f64>();
+    println!(
+        "grad round: {round_ms:.2} ms wall  (engine alone {engine_ms:.2} ms, leader overhead {:.1}%)  {:.2} GFLOP/s aggregate",
+        100.0 * (round_ms - engine_ms) / round_ms,
+        mflops_round / round_ms / 1e3 * 1e3 / 1e3,
+    );
+    // aggregation cost
+    let (responses, _) = cluster.grad_round(&w).unwrap();
+    let agg_ms = time_ms(100, || {
+        std::hint::black_box(enc.aggregate_grad(&w, &responses));
+    });
+    println!("leader aggregation: {agg_ms:.4} ms per round");
+}
+
+fn bench_xla_round() {
+    println!("\n--- XLA engine round latency (p=64 artifact shapes) ---");
+    let dir = codedopt::runtime::artifacts::default_dir();
+    if Manifest::load(&dir).is_err() {
+        println!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let prob = QuadProblem::synthetic_gaussian(512, 64, 0.05, 5);
+    let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 5).unwrap();
+    let mut xla = XlaEngine::new(&enc, dir).expect("xla engine");
+    let mut native = NativeEngine::new(&enc);
+    let w = vec![0.1; 64];
+    let xla_ms = time_ms(20, || {
+        std::hint::black_box(xla.worker_grad_all(&w).unwrap());
+    });
+    let native_ms = time_ms(20, || {
+        std::hint::black_box(native.worker_grad_all(&w).unwrap());
+    });
+    println!("xla all-workers grad: {xla_ms:.3} ms   native: {native_ms:.3} ms   (xla/native {:.1}x)", xla_ms / native_ms);
+}
+
+fn main() {
+    println!("=== codedopt microbench (hot paths) ===");
+    bench_fused_grad();
+    bench_fwht_encode();
+    bench_gemm();
+    bench_cluster_round();
+    bench_xla_round();
+}

@@ -1,0 +1,135 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog [subcommand] [--flag value | --switch] [key=value ...]`.
+//! `--flag value` and `--flag=value` both work; bare `--switch` is a
+//! boolean; trailing `key=value` pairs become config overrides.
+
+use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, HashSet};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    switches: HashSet<String>,
+    pub overrides: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (program name excluded).
+    pub fn from_iter<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        // first non-flag token is the subcommand
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') && !first.contains('=') {
+                out.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--") && !n.contains('='))
+                    .unwrap_or(false)
+                    && !name.is_empty()
+                {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.insert(name.to_string());
+                }
+            } else if tok.contains('=') {
+                out.overrides.push(tok);
+            } else {
+                bail!("unexpected argument {tok:?}");
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Self> {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}: not an integer")),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}: not a number")),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}: not an integer")),
+        }
+    }
+
+    pub fn flag_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flags.get(name).map(|s| s.as_str()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::from_iter(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["ridge", "--workers", "32", "--k=12", "--verbose", "seed=7"]);
+        assert_eq!(a.subcommand.as_deref(), Some("ridge"));
+        assert_eq!(a.flag_usize("workers", 0).unwrap(), 32);
+        assert_eq!(a.flag_usize("k", 0).unwrap(), 12);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.overrides, vec!["seed=7"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.flag_usize("missing", 5).unwrap(), 5);
+        assert_eq!(a.flag_str("enc", "hadamard"), "hadamard");
+        assert!(!a.switch("anything"));
+    }
+
+    #[test]
+    fn trailing_switch_without_value() {
+        let a = parse(&["mf", "--fast"]);
+        assert!(a.switch("fast"));
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::from_iter(["mf".to_string(), "oops".to_string()]).is_err());
+    }
+
+    #[test]
+    fn flag_type_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.flag_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,289 @@
+//! `codedopt` command-line interface.
+//!
+//! Subcommands:
+//! * `ridge`     — one encoded ridge-regression run (the Fig. 4 workload)
+//! * `mf`        — synthetic-MovieLens matrix factorization (Fig. 5/6)
+//! * `spectrum`  — `S_AᵀS_A` spectra per encoder (Fig. 2/3)
+//! * `check-artifacts` — validate + compile every AOT artifact
+//!
+//! All take `--flag value` options; `--help` prints per-command usage.
+
+pub mod args;
+
+pub use args::Args;
+
+use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
+use crate::encoding::EncoderKind;
+use crate::optim::{CodedGd, CodedLbfgs, GdConfig, LbfgsConfig, Optimizer};
+use crate::problem::{EncodedProblem, QuadProblem};
+use crate::runtime::{build_engine, EngineKind};
+use anyhow::{Context, Result};
+
+const HELP: &str = "\
+codedopt — straggler mitigation in distributed optimization through data encoding
+            (Karakus, Sun, Yin, Diggavi — NIPS 2017)
+
+USAGE: codedopt <subcommand> [--flag value ...]
+
+SUBCOMMANDS
+  ridge             encoded distributed ridge regression (Fig. 4 workload)
+    --n 4096 --p 6000 --lambda 0.05 --workers 32 --k 12 --beta 2.0
+    --encoder hadamard|uncoded|replication|gaussian|paley|hadamard-etf|steiner|dft
+    --algo lbfgs|gd --iters 100 --engine native|xla --delay exp:10 --seed 0
+    --csv <path>    write the per-iteration trace as CSV
+
+  mf                coded matrix factorization on synthetic MovieLens (Fig. 5/6)
+    --users 240 --items 160 --ratings 8000 --embed 15 --lambda 10
+    --epochs 5 --workers 8 --k 4 --encoder hadamard --beta 2.0
+    --dist-threshold 64 --iters 8 --seed 0
+
+  spectrum          eigenvalue spectra of S_A^T S_A (Fig. 2/3)
+    --n 64 --beta 2.0 --workers 32 --k 16 --trials 10 --seed 0
+    --encoders hadamard,gaussian,paley    comma-separated list
+    --hist          print ASCII histograms
+
+  check-artifacts   compile every artifact in the manifest on PJRT
+    --dir artifacts
+
+  help              this message
+";
+
+/// CLI entry point (also used by `main.rs`).
+pub fn main_entry() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Dispatch a parsed command line (testable without process exit).
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("ridge") => cmd_ridge(args),
+        Some("mf") => cmd_mf(args),
+        Some("spectrum") => cmd_spectrum(args),
+        Some("check-artifacts") => cmd_check_artifacts(args),
+        Some("help") | None => {
+            println!("{HELP}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown subcommand {other:?} (try `codedopt help`)"),
+    }
+}
+
+fn cmd_ridge(args: &Args) -> Result<()> {
+    let n = args.flag_usize("n", 1024)?;
+    let p = args.flag_usize("p", 256)?;
+    let lambda = args.flag_f64("lambda", 0.05)?;
+    let m = args.flag_usize("workers", 16)?;
+    let k = args.flag_usize("k", m)?;
+    let beta = args.flag_f64("beta", 2.0)?;
+    let iters = args.flag_usize("iters", 100)?;
+    let seed = args.flag_u64("seed", 0)?;
+    let kind = EncoderKind::parse(args.flag_str("encoder", "hadamard"))?;
+    let engine_kind = EngineKind::parse(args.flag_str("engine", "native"))?;
+    let delay = DelayModel::parse(args.flag_str("delay", "exp:10"))?;
+    let algo = args.flag_str("algo", "lbfgs");
+
+    println!(
+        "# ridge: n={n} p={p} λ={lambda} m={m} k={k} β={beta} encoder={kind} engine={engine_kind:?} algo={algo}"
+    );
+    let prob = QuadProblem::synthetic_gaussian(n, p, lambda, seed);
+    let enc = EncodedProblem::encode(&prob, kind, beta, m, seed)?;
+    let engine = build_engine(engine_kind, &enc)?;
+    let ccfg = ClusterConfig {
+        workers: m,
+        wait_for: k,
+        delay,
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed,
+    };
+    let mut cluster = Cluster::new(&enc, engine, ccfg)?;
+    let out = match algo {
+        "gd" => CodedGd::new(GdConfig { seed, ..Default::default() }).run(&enc, &mut cluster, iters)?,
+        "lbfgs" => {
+            CodedLbfgs::new(LbfgsConfig { seed, ..Default::default() }).run(&enc, &mut cluster, iters)?
+        }
+        other => anyhow::bail!("unknown --algo {other:?} (gd|lbfgs)"),
+    };
+    let f_star = prob
+        .exact_solution()
+        .map(|w| prob.objective(&w))
+        .unwrap_or(f64::NAN);
+    println!("iter  f(w)          f_est         alpha       |A|   sim_ms");
+    let stride = (out.trace.len() / 20).max(1);
+    for r in out.trace.records.iter().step_by(stride) {
+        println!(
+            "{:>4}  {:.6e}  {:.6e}  {:.3e}  {:>3}  {:>9.2}",
+            r.iter, r.f_true, r.f_est, r.alpha, r.responders, r.sim_ms
+        );
+    }
+    println!(
+        "# final f={:.6e}  f*={:.6e}  diverged={}  total sim time={:.1} ms",
+        out.trace.last_objective(),
+        f_star,
+        out.trace.diverged(),
+        out.trace.total_sim_ms()
+    );
+    if let Some(path) = args.flag("csv") {
+        std::fs::write(path, out.trace.to_csv()).with_context(|| format!("writing {path}"))?;
+        println!("# trace written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_mf(args: &Args) -> Result<()> {
+    use crate::mf::{synthetic_movielens, train, MfConfig, SyntheticConfig};
+    let seed = args.flag_u64("seed", 0)?;
+    let scfg = SyntheticConfig {
+        n_users: args.flag_usize("users", 240)?,
+        n_items: args.flag_usize("items", 160)?,
+        n_ratings: args.flag_usize("ratings", 8000)?,
+        ..SyntheticConfig::small(seed)
+    };
+    let m = args.flag_usize("workers", 8)?;
+    let cfg = MfConfig {
+        embed: args.flag_usize("embed", 15)?,
+        lambda: args.flag_f64("lambda", 10.0)?,
+        epochs: args.flag_usize("epochs", 5)?,
+        m,
+        k: args.flag_usize("k", (m / 2).max(1))?,
+        encoder: EncoderKind::parse(args.flag_str("encoder", "hadamard"))?,
+        beta: args.flag_f64("beta", 2.0)?,
+        dist_threshold: args.flag_usize("dist-threshold", 64)?,
+        lbfgs_iters: args.flag_usize("iters", 8)?,
+        delay: DelayModel::parse(args.flag_str("delay", "exp:10"))?,
+        seed,
+        ..Default::default()
+    };
+    println!(
+        "# mf: users={} items={} ratings~{} embed={} m={} k={} encoder={}",
+        scfg.n_users, scfg.n_items, scfg.n_ratings, cfg.embed, cfg.m, cfg.k, cfg.encoder
+    );
+    let all = synthetic_movielens(&scfg);
+    let (tr, te) = all.split(0.2, seed ^ 0x5117);
+    let out = train(&tr, &te, &cfg)?;
+    println!("epoch  train_rmse  test_rmse");
+    for (e, (trr, ter)) in out.train_rmse.iter().zip(&out.test_rmse).enumerate() {
+        println!("{:>5}  {:>10.4}  {:>9.4}", e + 1, trr, ter);
+    }
+    println!(
+        "# sim time: distributed={:.1} ms, local={:.1} ms ({} dist / {} local solves, {} capped)",
+        out.sim_ms, out.local_ms, out.dist_solves, out.local_solves, out.capped
+    );
+    Ok(())
+}
+
+fn cmd_spectrum(args: &Args) -> Result<()> {
+    use crate::encoding::spectrum::{histogram, sample_spectrum};
+    let n = args.flag_usize("n", 64)?;
+    let beta = args.flag_f64("beta", 2.0)?;
+    let m = args.flag_usize("workers", 32)?;
+    let k = args.flag_usize("k", 16)?;
+    let trials = args.flag_usize("trials", 10)?;
+    let seed = args.flag_u64("seed", 0)?;
+    let list = args.flag_str("encoders", "uncoded,gaussian,hadamard,paley,hadamard-etf,steiner");
+    println!("# spectrum of S_A^T S_A/(c·η): n={n} β={beta} m={m} k={k} trials={trials}");
+    println!("{:<14} {:>9} {:>9} {:>9} {:>7}", "encoder", "λmin", "λmax", "ε", "bulk");
+    for name in list.split(',') {
+        let kind = EncoderKind::parse(name.trim())?;
+        let enc = kind.build(n, beta, seed)?;
+        let s = enc.materialize();
+        let stats = sample_spectrum(&s, m, k, trials, seed, enc.gram_scale());
+        println!(
+            "{:<14} {:>9.4} {:>9.4} {:>9.4} {:>6.1}%",
+            kind.label(),
+            stats.lambda_min,
+            stats.lambda_max,
+            stats.epsilon,
+            100.0 * stats.bulk_fraction
+        );
+        if args.switch("hist") {
+            let h = histogram(&stats.eigs, 0.0, 2.0, 40);
+            let max = *h.iter().max().unwrap_or(&1) as f64;
+            for (b, &c) in h.iter().enumerate() {
+                if c > 0 {
+                    let lo = b as f64 * 0.05;
+                    let bar = "#".repeat(((c as f64 / max) * 50.0).ceil() as usize);
+                    println!("    [{:4.2},{:4.2}) {bar} {c}", lo, lo + 0.05);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_check_artifacts(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.flag_str("dir", "artifacts"));
+    let manifest = crate::runtime::Manifest::load(&dir)?;
+    println!("# {} artifacts in {dir:?}", manifest.entries.len());
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT: {e:?}"))?;
+    for e in &manifest.entries {
+        let path = dir.join(&e.file);
+        let text_len = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|err| anyhow::anyhow!("parse {}: {err:?}", e.name))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|err| anyhow::anyhow!("compile {}: {err:?}", e.name))?;
+        println!("  ok {} ({} bytes, kind={}, dims={:?})", e.name, text_len, e.kind, e.dims);
+    }
+    println!("# all artifacts compile on PJRT cpu");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(toks: &[&str]) -> Result<()> {
+        dispatch(&Args::from_iter(toks.iter().map(|s| s.to_string())).unwrap())
+    }
+
+    #[test]
+    fn help_runs() {
+        run(&["help"]).unwrap();
+    }
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(run(&["frobnicate"]).is_err());
+    }
+
+    #[test]
+    fn tiny_ridge_runs() {
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "5",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn tiny_spectrum_runs() {
+        run(&[
+            "spectrum", "--n", "16", "--workers", "8", "--k", "4", "--trials", "2",
+            "--encoders", "gaussian,hadamard",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn ridge_rejects_bad_algo() {
+        assert!(run(&["ridge", "--n", "32", "--p", "4", "--algo", "sgd", "--iters", "1"]).is_err());
+    }
+}

@@ -1,0 +1,464 @@
+//! Simulated leader/worker cluster with first-k-of-m gather — the
+//! distributed substrate the paper runs on (Figure 1).
+//!
+//! The paper's two testbeds are (a) a 32-node EC2 cluster with natural
+//! network stragglers and (b) a 32-core machine with **injected**
+//! `Δ ~ exp(10ms)` delays (§5, MovieLens experiment). We implement (b)
+//! directly, with a family of delay models ([`DelayModel`]): per round,
+//! every worker computes its shard task, each response is assigned
+//! `arrival = compute_time + sampled delay`, and the leader admits the
+//! **first k** arrivals (`A_t`); the round's simulated duration is the
+//! k-th arrival time. Late responses are dropped (the paper's
+//! "drop their updates upon arrival" option).
+//!
+//! Two clocks:
+//! * [`ClockMode::Virtual`] — compute time from a deterministic flop-cost
+//!   model; fully reproducible (tests, convergence figures).
+//! * [`ClockMode::Measured`] — compute time measured on the wall clock
+//!   (runtime figures with a real engine in the loop).
+//!
+//! The cluster is engine-agnostic ([`ComputeEngine`]): the same rounds run
+//! on the native Rust kernels or the PJRT/XLA artifacts.
+
+use crate::problem::EncodedProblem;
+use crate::rng::Pcg64;
+use crate::runtime::ComputeEngine;
+use anyhow::{ensure, Result};
+
+/// Straggler delay model (per worker, per round), milliseconds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DelayModel {
+    /// No injected delay (all workers equally fast).
+    None,
+    /// Constant delay for every worker.
+    Constant { ms: f64 },
+    /// i.i.d. exponential — the paper's MovieLens model (`exp(10ms)`).
+    Exp { mean_ms: f64 },
+    /// Shifted exponential: `shift + exp(mean)`; classic straggler model.
+    ShiftedExp { shift_ms: f64, mean_ms: f64 },
+    /// Heavy-tailed Pareto(scale, shape).
+    Pareto { scale_ms: f64, shape: f64 },
+    /// Exponential with a per-worker fail-stop probability: a failed
+    /// worker never responds that round (delay = ∞).
+    ExpWithFailures { mean_ms: f64, p_fail: f64 },
+    /// Heterogeneous: exponential whose mean is `mean_ms * factor[i]`
+    /// (persistent slow nodes).
+    HeteroExp { mean_ms: f64, factors: Vec<f64> },
+}
+
+impl DelayModel {
+    /// Sample worker `i`'s injected delay for one round.
+    pub fn sample(&self, rng: &mut Pcg64, worker: usize) -> f64 {
+        match self {
+            DelayModel::None => 0.0,
+            DelayModel::Constant { ms } => *ms,
+            DelayModel::Exp { mean_ms } => rng.next_exp(*mean_ms),
+            DelayModel::ShiftedExp { shift_ms, mean_ms } => shift_ms + rng.next_exp(*mean_ms),
+            DelayModel::Pareto { scale_ms, shape } => rng.next_pareto(*scale_ms, *shape),
+            DelayModel::ExpWithFailures { mean_ms, p_fail } => {
+                if rng.next_f64() < *p_fail {
+                    f64::INFINITY
+                } else {
+                    rng.next_exp(*mean_ms)
+                }
+            }
+            DelayModel::HeteroExp { mean_ms, factors } => {
+                let f = factors.get(worker % factors.len().max(1)).copied().unwrap_or(1.0);
+                rng.next_exp(mean_ms * f)
+            }
+        }
+    }
+
+    /// Parse CLI forms like `exp:10`, `shifted:5:10`, `pareto:2:1.5`,
+    /// `expfail:10:0.05`, `const:3`, `none`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |i: usize| -> Result<f64> {
+            parts
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("delay model {s:?}: missing field {i}"))?
+                .parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("delay model {s:?}: {e}"))
+        };
+        Ok(match parts[0] {
+            "none" => DelayModel::None,
+            "const" => DelayModel::Constant { ms: num(1)? },
+            "exp" => DelayModel::Exp { mean_ms: num(1)? },
+            "shifted" => DelayModel::ShiftedExp { shift_ms: num(1)?, mean_ms: num(2)? },
+            "pareto" => DelayModel::Pareto { scale_ms: num(1)?, shape: num(2)? },
+            "expfail" => DelayModel::ExpWithFailures { mean_ms: num(1)?, p_fail: num(2)? },
+            other => anyhow::bail!("unknown delay model {other:?}"),
+        })
+    }
+}
+
+/// How the per-round compute time entering the clock is obtained.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClockMode {
+    /// Deterministic flop-cost model (reproducible).
+    Virtual,
+    /// Wall-clock measurement of the engine call.
+    Measured,
+}
+
+/// Leader gather policy. `FirstK` is the paper's scheme; `WaitAll`
+/// (k = m) is the "perfect"/batch baseline in Figure 5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GatherPolicy {
+    FirstK(usize),
+    WaitAll,
+}
+
+impl GatherPolicy {
+    pub fn k(&self, m: usize) -> usize {
+        match self {
+            GatherPolicy::FirstK(k) => (*k).min(m),
+            GatherPolicy::WaitAll => m,
+        }
+    }
+}
+
+/// Cluster configuration.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Worker count m (must match the encoded problem's shard count).
+    pub workers: usize,
+    /// k — responses the leader waits for per round.
+    pub wait_for: usize,
+    pub delay: DelayModel,
+    pub clock: ClockMode,
+    /// Virtual-clock compute cost in ms per million multiply-adds.
+    pub ms_per_mflop: f64,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            workers: 8,
+            wait_for: 8,
+            delay: DelayModel::Exp { mean_ms: 10.0 },
+            clock: ClockMode::Virtual,
+            ms_per_mflop: 0.5, // ~2 GFLOP/s per worker — m1.small-ish
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of one synchronous round.
+#[derive(Clone, Debug)]
+pub struct Round {
+    /// Admitted workers `A_t` in arrival order (`|A_t| = k` unless
+    /// failures left fewer responders).
+    pub admitted: Vec<usize>,
+    /// All finite arrivals `(worker, arrival_ms)`, sorted.
+    pub arrivals: Vec<(usize, f64)>,
+    /// Simulated round duration: the k-th arrival time.
+    pub elapsed_ms: f64,
+    /// Workers that never responded (failures).
+    pub failed: Vec<usize>,
+}
+
+/// Per-round gradient responses from the admitted set, arrival-ordered.
+pub type GradResponses = Vec<(usize, Vec<f64>, f64)>;
+/// Per-round line-search responses from the admitted set.
+pub type CurvResponses = Vec<(usize, f64)>;
+
+/// The simulated cluster: an engine plus the straggler/round machinery.
+pub struct Cluster {
+    cfg: ClusterConfig,
+    engine: Box<dyn ComputeEngine>,
+    rng: Pcg64,
+    /// Flop cost per worker per gradient round (for the virtual clock).
+    grad_mflops: Vec<f64>,
+    ls_mflops: Vec<f64>,
+    /// Accumulated simulated time.
+    pub sim_ms: f64,
+    pub rounds_run: u64,
+}
+
+impl Cluster {
+    /// Build over an encoded problem with the given engine.
+    pub fn new(
+        prob: &EncodedProblem,
+        engine: Box<dyn ComputeEngine>,
+        cfg: ClusterConfig,
+    ) -> Result<Self> {
+        ensure!(
+            cfg.workers == prob.m(),
+            "config workers {} != problem shards {}",
+            cfg.workers,
+            prob.m()
+        );
+        ensure!(
+            cfg.wait_for >= 1 && cfg.wait_for <= cfg.workers,
+            "wait_for must be in 1..=workers"
+        );
+        ensure!(
+            engine.workers() == prob.m(),
+            "engine workers {} != problem shards {}",
+            engine.workers(),
+            prob.m()
+        );
+        let grad_mflops = prob
+            .shards
+            .iter()
+            .map(|s| 2.0 * s.x.rows() as f64 * s.x.cols() as f64 * 2.0 / 1e6)
+            .collect();
+        let ls_mflops = prob
+            .shards
+            .iter()
+            .map(|s| 2.0 * s.x.rows() as f64 * s.x.cols() as f64 / 1e6)
+            .collect();
+        let rng = Pcg64::new(cfg.seed, 0xc105);
+        Ok(Cluster {
+            cfg,
+            engine,
+            rng,
+            grad_mflops,
+            ls_mflops,
+            sim_ms: 0.0,
+            rounds_run: 0,
+        })
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Override k between runs (η sweeps reuse the staged cluster).
+    pub fn set_wait_for(&mut self, k: usize) {
+        assert!(k >= 1 && k <= self.cfg.workers);
+        self.cfg.wait_for = k;
+    }
+
+    /// Sample one round's arrival schedule and admit the first k.
+    fn gather(&mut self, compute_ms: &[f64]) -> Round {
+        let m = self.cfg.workers;
+        let mut arrivals: Vec<(usize, f64)> = Vec::with_capacity(m);
+        let mut failed = Vec::new();
+        for i in 0..m {
+            let delay = self.cfg.delay.sample(&mut self.rng, i);
+            if delay.is_finite() {
+                arrivals.push((i, compute_ms[i] + delay));
+            } else {
+                failed.push(i);
+            }
+        }
+        arrivals.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let k = self.cfg.wait_for.min(arrivals.len());
+        let admitted: Vec<usize> = arrivals[..k].iter().map(|&(w, _)| w).collect();
+        let elapsed_ms = arrivals.get(k.saturating_sub(1)).map(|&(_, t)| t).unwrap_or(0.0);
+        Round { admitted, arrivals, elapsed_ms, failed }
+    }
+
+    fn compute_times(&mut self, mflops: &[f64], measured_ms: Option<f64>) -> Vec<f64> {
+        match self.cfg.clock {
+            ClockMode::Virtual => mflops.iter().map(|f| f * self.cfg.ms_per_mflop).collect(),
+            ClockMode::Measured => {
+                // All workers computed inside one engine batch; attribute the
+                // mean per-worker share to each (the engine parallelizes).
+                let per = measured_ms.unwrap_or(0.0) / self.cfg.workers.max(1) as f64;
+                vec![per; self.cfg.workers]
+            }
+        }
+    }
+
+    /// One gradient round: broadcast `w`, all workers compute
+    /// `(g_i, f_i)`, leader admits first k. Returns the admitted responses
+    /// (arrival order) and the round record; advances the simulated clock.
+    pub fn grad_round(&mut self, w: &[f64]) -> Result<(GradResponses, Round)> {
+        let t0 = std::time::Instant::now();
+        let all = self.engine.worker_grad_all(w)?;
+        let measured = t0.elapsed().as_secs_f64() * 1e3;
+        let compute = self.compute_times(&self.grad_mflops.clone(), Some(measured));
+        let round = self.gather(&compute);
+        let responses: GradResponses = round
+            .admitted
+            .iter()
+            .map(|&i| {
+                let (g, f) = all[i].clone();
+                (i, g, f)
+            })
+            .collect();
+        self.sim_ms += round.elapsed_ms;
+        self.rounds_run += 1;
+        Ok((responses, round))
+    }
+
+    /// One line-search round over a fresh first-k set `D_t` (eq. (3)).
+    pub fn linesearch_round(&mut self, d: &[f64]) -> Result<(CurvResponses, Round)> {
+        let t0 = std::time::Instant::now();
+        let all = self.engine.linesearch_all(d)?;
+        let measured = t0.elapsed().as_secs_f64() * 1e3;
+        let compute = self.compute_times(&self.ls_mflops.clone(), Some(measured));
+        let round = self.gather(&compute);
+        let responses: CurvResponses =
+            round.admitted.iter().map(|&i| (i, all[i])).collect();
+        self.sim_ms += round.elapsed_ms;
+        self.rounds_run += 1;
+        Ok((responses, round))
+    }
+
+    /// Engine name (metrics/labels).
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::EncoderKind;
+    use crate::problem::QuadProblem;
+    use crate::runtime::NativeEngine;
+
+    fn cluster(k: usize, delay: DelayModel, seed: u64) -> (EncodedProblem, Cluster) {
+        let prob = QuadProblem::synthetic_gaussian(64, 6, 0.0, 1);
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 2).unwrap();
+        let eng = Box::new(NativeEngine::new(&enc));
+        let cfg = ClusterConfig {
+            workers: 8,
+            wait_for: k,
+            delay,
+            clock: ClockMode::Virtual,
+            ms_per_mflop: 0.5,
+            seed,
+        };
+        let c = Cluster::new(&enc, eng, cfg).unwrap();
+        (enc, c)
+    }
+
+    #[test]
+    fn first_k_gather_admits_exactly_k() {
+        let (_, mut c) = cluster(5, DelayModel::Exp { mean_ms: 10.0 }, 3);
+        let w = vec![0.1; 6];
+        for _ in 0..10 {
+            let (responses, round) = c.grad_round(&w).unwrap();
+            assert_eq!(round.admitted.len(), 5);
+            assert_eq!(responses.len(), 5);
+            // admitted are the k smallest arrivals
+            let kth = round.arrivals[4].1;
+            for &(_, t) in &round.arrivals[5..] {
+                assert!(t >= kth);
+            }
+            assert_eq!(round.elapsed_ms, kth);
+        }
+        assert_eq!(c.rounds_run, 10);
+        assert!(c.sim_ms > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let w = vec![0.2; 6];
+        let (_, mut c1) = cluster(4, DelayModel::Exp { mean_ms: 10.0 }, 7);
+        let (_, mut c2) = cluster(4, DelayModel::Exp { mean_ms: 10.0 }, 7);
+        for _ in 0..5 {
+            let (r1, round1) = c1.grad_round(&w).unwrap();
+            let (r2, round2) = c2.grad_round(&w).unwrap();
+            assert_eq!(round1.admitted, round2.admitted);
+            assert_eq!(round1.elapsed_ms, round2.elapsed_ms);
+            for (a, b) in r1.iter().zip(&r2) {
+                assert_eq!(a.0, b.0);
+                assert_eq!(a.2, b.2);
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_give_different_straggler_sets() {
+        let w = vec![0.2; 6];
+        let (_, mut c1) = cluster(3, DelayModel::Exp { mean_ms: 10.0 }, 1);
+        let (_, mut c2) = cluster(3, DelayModel::Exp { mean_ms: 10.0 }, 2);
+        let mut any_diff = false;
+        for _ in 0..10 {
+            let (_, round1) = c1.grad_round(&w).unwrap();
+            let (_, round2) = c2.grad_round(&w).unwrap();
+            if round1.admitted != round2.admitted {
+                any_diff = true;
+            }
+        }
+        assert!(any_diff);
+    }
+
+    #[test]
+    fn no_delay_means_zero_wait_spread() {
+        let (_, mut c) = cluster(8, DelayModel::None, 0);
+        let (_, round) = c.grad_round(&vec![0.0; 6]).unwrap();
+        // all arrivals equal compute time; k = m admits everyone
+        assert_eq!(round.admitted.len(), 8);
+        assert!(round.failed.is_empty());
+    }
+
+    #[test]
+    fn failures_shrink_admitted_set() {
+        let (_, mut c) = cluster(8, DelayModel::ExpWithFailures { mean_ms: 1.0, p_fail: 0.5 }, 5);
+        let mut saw_failure = false;
+        for _ in 0..20 {
+            let (responses, round) = c.grad_round(&vec![0.0; 6]).unwrap();
+            assert_eq!(responses.len(), round.admitted.len());
+            assert!(round.admitted.len() + round.failed.len() <= 8);
+            if !round.failed.is_empty() {
+                saw_failure = true;
+                assert!(round.admitted.len() < 8);
+            }
+        }
+        assert!(saw_failure);
+    }
+
+    #[test]
+    fn smaller_k_gives_smaller_round_time() {
+        // E[k-th order statistic] grows with k — the Fig. 4-right effect
+        let w = vec![0.1; 6];
+        let mut t_small = 0.0;
+        let mut t_large = 0.0;
+        let (_, mut c_small) = cluster(2, DelayModel::Exp { mean_ms: 10.0 }, 11);
+        let (_, mut c_large) = cluster(8, DelayModel::Exp { mean_ms: 10.0 }, 11);
+        for _ in 0..50 {
+            t_small += c_small.grad_round(&w).unwrap().1.elapsed_ms;
+            t_large += c_large.grad_round(&w).unwrap().1.elapsed_ms;
+        }
+        assert!(
+            t_small < t_large * 0.8,
+            "k=2 time {t_small:.1} not well below k=8 time {t_large:.1}"
+        );
+    }
+
+    #[test]
+    fn linesearch_round_uses_fresh_subset() {
+        let (_, mut c) = cluster(4, DelayModel::Exp { mean_ms: 10.0 }, 13);
+        let w = vec![0.1; 6];
+        let d = vec![-0.1; 6];
+        let (_, ra) = c.grad_round(&w).unwrap();
+        let (_, rd) = c.linesearch_round(&d).unwrap();
+        assert_eq!(ra.admitted.len(), 4);
+        assert_eq!(rd.admitted.len(), 4);
+        // not guaranteed different, but the rng must have advanced
+        assert_eq!(c.rounds_run, 2);
+    }
+
+    #[test]
+    fn delay_model_parsing() {
+        assert_eq!(DelayModel::parse("none").unwrap(), DelayModel::None);
+        assert_eq!(DelayModel::parse("exp:10").unwrap(), DelayModel::Exp { mean_ms: 10.0 });
+        assert_eq!(
+            DelayModel::parse("shifted:5:10").unwrap(),
+            DelayModel::ShiftedExp { shift_ms: 5.0, mean_ms: 10.0 }
+        );
+        assert_eq!(
+            DelayModel::parse("expfail:10:0.05").unwrap(),
+            DelayModel::ExpWithFailures { mean_ms: 10.0, p_fail: 0.05 }
+        );
+        assert!(DelayModel::parse("bogus:1").is_err());
+        assert!(DelayModel::parse("exp").is_err());
+    }
+
+    #[test]
+    fn rejects_mismatched_config() {
+        let prob = QuadProblem::synthetic_gaussian(32, 4, 0.0, 0);
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Identity, 1.0, 4, 0).unwrap();
+        let eng = Box::new(NativeEngine::new(&enc));
+        let cfg = ClusterConfig { workers: 8, wait_for: 4, ..Default::default() };
+        assert!(Cluster::new(&enc, eng, cfg).is_err());
+    }
+}

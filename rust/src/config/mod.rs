@@ -1,0 +1,140 @@
+//! Experiment configuration: a small typed layer over key=value files and
+//! CLI-style overrides (serde/clap are unavailable in the offline build).
+//!
+//! Format: one `key = value` per line, `#` comments, sections ignored
+//! (`[section]` headers allowed for readability). Values: int, float,
+//! bool, string. Every experiment binary accepts `--config <file>` plus
+//! `key=value` overrides; see `examples/` and `rust/benches/`.
+
+pub mod json;
+
+pub use json::Json;
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A flat, ordered key→value config map with typed getters.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse the key=value format (see module docs).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("config line {}: expected key = value, got {raw:?}", lineno + 1);
+            };
+            map.insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config file {path}"))?;
+        Self::parse(&text)
+    }
+
+    /// Apply `key=value` override strings (CLI tail arguments).
+    pub fn apply_overrides<'a>(&mut self, overrides: impl IntoIterator<Item = &'a str>) -> Result<()> {
+        for o in overrides {
+            let Some((k, v)) = o.split_once('=') else {
+                bail!("override {o:?}: expected key=value");
+            };
+            self.set(k.trim(), v.trim());
+        }
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}: not an integer")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}: not a number")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}: not an integer")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.map.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("config {key}={v}: not a bool"),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.map.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_typed_getters() {
+        let cfg = Config::parse(
+            "# experiment\n[cluster]\nworkers = 32\nwait_for=12\nbeta = 2.0\nencoder = \"hadamard\"\nvirtual = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_usize("workers", 0).unwrap(), 32);
+        assert_eq!(cfg.get_usize("wait_for", 0).unwrap(), 12);
+        assert_eq!(cfg.get_f64("beta", 0.0).unwrap(), 2.0);
+        assert_eq!(cfg.get_str("encoder", ""), "hadamard");
+        assert!(cfg.get_bool("virtual", false).unwrap());
+        assert_eq!(cfg.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut cfg = Config::parse("a = 1\nb = 2\n").unwrap();
+        cfg.apply_overrides(["a=10", "c=3"]).unwrap();
+        assert_eq!(cfg.get_usize("a", 0).unwrap(), 10);
+        assert_eq!(cfg.get_usize("b", 0).unwrap(), 2);
+        assert_eq!(cfg.get_usize("c", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("key without equals\n").is_err());
+        let cfg = Config::parse("x = abc\n").unwrap();
+        assert!(cfg.get_usize("x", 0).is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! Real Fourier (DCT-II) ensemble encoder — the paper's second
+//! fast-transform family ("FFT, if S is chosen as a subsampled DFT
+//! matrix"). We use the orthonormal DCT-II as the real orthogonal
+//! transform: `S = √(N/n) · C_N · D · E` with random row embedding `E`
+//! and sign flips `D`, giving `SᵀS = (N/n)·I` exactly.
+//!
+//! Kept dense (O(N·n) apply) — this family exists for spectrum comparisons
+//! and tests; the FWHT encoder is the fast path used in the experiments.
+
+use super::Encoder;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// Orthonormal DCT-II ensemble encoder.
+pub struct DftEncoder {
+    n: usize,
+    n_out: usize,
+    s: Mat,
+}
+
+impl DftEncoder {
+    pub fn new(n: usize, beta: f64, seed: u64) -> Self {
+        let n_out = (beta * n as f64).round().max(n as f64) as usize;
+        let mut rng = Pcg64::new(seed, 0xd347);
+        let positions = rng.sample_indices(n_out, n);
+        let signs: Vec<f64> = (0..n)
+            .map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        // Orthonormal DCT-II: C[k][j] = a_k cos(pi (j + 1/2) k / N),
+        // a_0 = sqrt(1/N), a_k = sqrt(2/N).
+        let nf = n_out as f64;
+        let scale = (n_out as f64 / n as f64).sqrt();
+        let s = Mat::from_fn(n_out, n, |k, i| {
+            let j = positions[i] as f64;
+            let a = if k == 0 { (1.0 / nf).sqrt() } else { (2.0 / nf).sqrt() };
+            scale * signs[i] * a * (std::f64::consts::PI * (j + 0.5) * k as f64 / nf).cos()
+        });
+        DftEncoder { n, n_out, s }
+    }
+}
+
+impl Encoder for DftEncoder {
+    fn name(&self) -> &'static str {
+        "dft"
+    }
+
+    fn rows_in(&self) -> usize {
+        self.n
+    }
+
+    fn rows_out(&self) -> usize {
+        self.n_out
+    }
+
+    fn encode(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.n, "encode: row mismatch");
+        self.s.matmul(x)
+    }
+
+    fn materialize(&self) -> Mat {
+        self.s.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tight_frame_exact() {
+        let enc = DftEncoder::new(20, 2.0, 1);
+        let g = enc.materialize().gram();
+        assert!(g.max_abs_diff(&Mat::eye(20).scaled(2.0)) < 1e-10);
+    }
+
+    #[test]
+    fn beta_effective() {
+        let enc = DftEncoder::new(10, 2.5, 0);
+        assert_eq!(enc.rows_out(), 25);
+        assert!((enc.beta() - 2.5).abs() < 1e-12);
+    }
+}

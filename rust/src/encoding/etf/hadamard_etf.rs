@@ -1,0 +1,175 @@
+//! Hadamard ETF (§4; cf. Szöllősi 2013, Goethals–Seidel regular two-graphs).
+//!
+//! Real ETFs arise from **regular symmetric Hadamard matrices with constant
+//! diagonal** (RSHCD). We build one by Kronecker powers of the order-4 seed
+//! `A = J₄ − 2I` (symmetric Hadamard, constant diagonal −1, row sum 2):
+//! `H = A^{⊗k}` has order `N = 4^k`, is symmetric with `H² = N·I` and
+//! constant diagonal `d = (−1)^k`.
+//!
+//! The zero-diagonal signature `C = H − dI` satisfies
+//! `C² = (N−1)I − 2dC`, so its eigenvalues are `−d ± √N` and
+//!
+//! `G = (C + (d + √N) I) / (2√N)`
+//!
+//! is a projection of rank `(N + d√N)/2` with constant diagonal
+//! `(d+√N)/(2√N)` and constant off-diagonal magnitude `1/(2√N)` — an
+//! equiangular Gram. Factoring it gives `N` unit-norm frame vectors in
+//! `R^{(N+d√N)/2}`: an ETF with redundancy `β = 2√N/(√N+d) ≈ 2`.
+//!
+//! (Distinct from the *fast-transform* Hadamard encoder, which subsamples
+//! a Sylvester matrix directly — the paper makes the same distinction.)
+//!
+//! Arbitrary `n`: smallest Kronecker power whose rank ≥ n, then
+//! column-subsample (bank approach, §5) — tightness is preserved exactly.
+
+use super::frame_from_projection_gram;
+use crate::encoding::Encoder;
+use crate::linalg::Mat;
+
+/// Regular-Hadamard two-graph ETF encoder (β ≈ 2).
+pub struct HadamardEtfEncoder {
+    n: usize,
+    s: Mat,
+    gram_scale: f64,
+}
+
+/// RSHCD of order `4^k`: Kronecker power of `J₄ − 2I`.
+/// Symmetric, entries ±1, `H² = N·I`, constant diagonal `(−1)^k`.
+pub(crate) fn rshcd(k: u32) -> Mat {
+    assert!(k >= 1, "need at least one Kronecker factor");
+    let seed = Mat::from_fn(4, 4, |i, j| if i == j { -1.0 } else { 1.0 });
+    let mut h = seed.clone();
+    for _ in 1..k {
+        h = kron(&h, &seed);
+    }
+    h
+}
+
+/// Kronecker product `a ⊗ b`.
+pub(crate) fn kron(a: &Mat, b: &Mat) -> Mat {
+    let (ar, ac, br, bc) = (a.rows(), a.cols(), b.rows(), b.cols());
+    Mat::from_fn(ar * br, ac * bc, |i, j| {
+        a.get(i / br, j / bc) * b.get(i % br, j % bc)
+    })
+}
+
+/// Rank of the `+(−d+√N)`-eigenspace projection for order `N = 4^k`.
+pub(crate) fn construction_rank(k: u32) -> usize {
+    let n = 4usize.pow(k);
+    let d = if k % 2 == 0 { 1i64 } else { -1i64 };
+    ((n as i64 + d * (n as f64).sqrt() as i64) / 2) as usize
+}
+
+impl HadamardEtfEncoder {
+    pub fn new(n: usize, seed: u64) -> Self {
+        // smallest Kronecker power with rank >= n
+        let mut k = 1u32;
+        while construction_rank(k) < n {
+            k += 1;
+        }
+        let h = rshcd(k);
+        let big_n = h.rows();
+        let d = if k % 2 == 0 { 1.0 } else { -1.0 };
+        let sq = (big_n as f64).sqrt();
+        // G = (C + (d + sqrt(N)) I)/(2 sqrt(N)),  C = H - dI
+        let g = Mat::from_fn(big_n, big_n, |i, j| {
+            if i == j {
+                (d + sq) / (2.0 * sq)
+            } else {
+                h.get(i, j) / (2.0 * sq)
+            }
+        });
+        let (s, gram_scale) = frame_from_projection_gram(&g, n, seed);
+        HadamardEtfEncoder { n, s, gram_scale }
+    }
+}
+
+impl Encoder for HadamardEtfEncoder {
+    fn name(&self) -> &'static str {
+        "hadamard-etf"
+    }
+
+    fn rows_in(&self) -> usize {
+        self.n
+    }
+
+    fn rows_out(&self) -> usize {
+        self.s.rows()
+    }
+
+    fn encode(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.n, "encode: row mismatch");
+        self.s.matmul(x)
+    }
+
+    fn materialize(&self) -> Mat {
+        self.s.clone()
+    }
+
+    fn gram_scale(&self) -> f64 {
+        self.gram_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::etf::{row_coherence, welch_bound};
+
+    #[test]
+    fn rshcd_identities() {
+        for k in 1..=3u32 {
+            let h = rshcd(k);
+            let n = h.rows();
+            assert_eq!(n, 4usize.pow(k));
+            assert!(h.max_abs_diff(&h.transpose()) < 1e-15, "symmetric");
+            let d = if k % 2 == 0 { 1.0 } else { -1.0 };
+            for i in 0..n {
+                assert_eq!(h.get(i, i), d, "constant diagonal");
+            }
+            let hh = h.matmul(&h.transpose());
+            assert!(hh.max_abs_diff(&Mat::eye(n).scaled(n as f64)) < 1e-9);
+            // regular: constant row sum = ±2^k
+            let rs: Vec<f64> = (0..n).map(|i| h.row(i).iter().sum()).collect();
+            assert!(rs.iter().all(|&s| (s - rs[0]).abs() < 1e-12), "regular");
+            assert!((rs[0].abs() - (n as f64).sqrt()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn full_size_is_equiangular_tight() {
+        // k=2: N=16, rank 10 — full ETF of 16 vectors in R^10
+        let n = construction_rank(2); // 10
+        let enc = HadamardEtfEncoder::new(n, 0);
+        let s = enc.materialize();
+        assert_eq!(s.rows(), 16);
+        let c = enc.gram_scale(); // 2*4/(4+1) = 1.6
+        assert!((c - 1.6).abs() < 1e-9);
+        assert!(s.gram().max_abs_diff(&Mat::eye(n).scaled(c)) < 1e-7);
+        for i in 0..16 {
+            assert!((crate::linalg::norm2(s.row(i)) - 1.0).abs() < 1e-7);
+        }
+        let coh = row_coherence(&s);
+        let wb = welch_bound(16, 10);
+        assert!((coh - wb).abs() < 1e-6, "coherence {coh} vs welch {wb}");
+    }
+
+    #[test]
+    fn subsampled_still_tight_at_construction_scale() {
+        let enc = HadamardEtfEncoder::new(24, 1);
+        let s = enc.materialize();
+        assert_eq!(s.rows(), 64); // k=3: rank 28 >= 24
+        let c = enc.gram_scale(); // 2*8/(8-1) = 16/7
+        assert!((c - 16.0 / 7.0).abs() < 1e-9);
+        assert!(s.gram().max_abs_diff(&Mat::eye(24).scaled(c)) < 1e-7);
+        assert!(enc.beta() > 2.0);
+    }
+
+    #[test]
+    fn construction_rank_values() {
+        assert_eq!(construction_rank(1), 1);   // N=4,  d=-1: (4-2)/2
+        assert_eq!(construction_rank(2), 10);  // N=16, d=+1: (16+4)/2
+        assert_eq!(construction_rank(3), 28);  // N=64, d=-1: (64-8)/2
+        assert_eq!(construction_rank(4), 136); // N=256,d=+1: (256+16)/2
+    }
+}

@@ -1,0 +1,224 @@
+//! Paley equiangular tight frame (§4; Paley 1933, Goethals–Seidel 1967).
+//!
+//! For a prime `q ≡ 1 (mod 4)` the Paley construction gives a symmetric
+//! conference matrix `C` of order `q+1` (zero diagonal, ±1 off-diagonal,
+//! `C Cᵀ = q I`) from the quadratic-residue character of GF(q). Its
+//! `+√q`-eigenspace projection `G = (I + C/√q)/2` has rank `(q+1)/2` and
+//! constant off-diagonal magnitude `1/(2√q)` — an equiangular Gram — so
+//! the factored frame is a `(q+1)`-vector ETF in `R^{(q+1)/2}` with β = 2,
+//! meeting the Welch bound.
+//!
+//! Arbitrary `n`: pick the smallest valid `q` with `(q+1)/2 ≥ n` and
+//! column-subsample (the paper's bank-of-matrices approach, §5).
+
+use super::frame_from_projection_gram;
+use crate::encoding::Encoder;
+use crate::linalg::Mat;
+use anyhow::{ensure, Result};
+
+/// Paley-conference-matrix ETF encoder (β ≈ 2).
+pub struct PaleyEtfEncoder {
+    n: usize,
+    s: Mat,
+    gram_scale: f64,
+}
+
+/// Deterministic Miller–Rabin for u64 (enough witnesses for < 3.3e24).
+pub(crate) fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n % p == 0 {
+            return n == p;
+        }
+    }
+    let mut d = n - 1;
+    let mut r = 0;
+    while d % 2 == 0 {
+        d /= 2;
+        r += 1;
+    }
+    'witness: for a in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = mod_pow(a, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..r - 1 {
+            x = mod_mul(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+fn mod_mul(a: u64, b: u64, m: u64) -> u64 {
+    ((a as u128 * b as u128) % m as u128) as u64
+}
+
+fn mod_pow(mut base: u64, mut exp: u64, m: u64) -> u64 {
+    let mut acc = 1u64;
+    base %= m;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = mod_mul(acc, base, m);
+        }
+        base = mod_mul(base, base, m);
+        exp >>= 1;
+    }
+    acc
+}
+
+/// Smallest prime `q ≡ 1 (mod 4)` with `q >= lo`.
+pub(crate) fn next_paley_prime(lo: u64) -> u64 {
+    let mut q = lo.max(5);
+    // align to 1 mod 4
+    q += (4 - (q % 4) + 1) % 4;
+    while !is_prime(q) {
+        q += 4;
+    }
+    q
+}
+
+/// Quadratic character χ(a) over GF(q): +1 residue, −1 non-residue, 0 at 0.
+fn quadratic_character(a: u64, q: u64) -> f64 {
+    if a % q == 0 {
+        return 0.0;
+    }
+    let e = mod_pow(a % q, (q - 1) / 2, q);
+    if e == 1 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Symmetric Paley conference matrix of order `q + 1` (q ≡ 1 mod 4 prime).
+pub(crate) fn paley_conference(q: u64) -> Mat {
+    let n = (q + 1) as usize;
+    let mut c = Mat::zeros(n, n);
+    // index 0 = ∞, indices 1..=q correspond to field elements 0..q-1
+    for j in 1..n {
+        c.set(0, j, 1.0);
+        c.set(j, 0, 1.0);
+    }
+    for i in 1..n {
+        for j in 1..n {
+            if i != j {
+                let diff = ((i as i64 - j as i64).rem_euclid(q as i64)) as u64;
+                c.set(i, j, quadratic_character(diff, q));
+            }
+        }
+    }
+    c
+}
+
+impl PaleyEtfEncoder {
+    pub fn new(n: usize, seed: u64) -> Result<Self> {
+        ensure!(n >= 2, "Paley ETF needs n >= 2, got {n}");
+        // need rank (q+1)/2 >= n  =>  q >= 2n - 1
+        let q = next_paley_prime((2 * n - 1) as u64);
+        let c = paley_conference(q);
+        let sq = (q as f64).sqrt();
+        let dim = c.rows();
+        let g = Mat::from_fn(dim, dim, |i, j| {
+            let base = if i == j { 1.0 } else { 0.0 };
+            0.5 * (base + c.get(i, j) / sq)
+        });
+        let (s, gram_scale) = frame_from_projection_gram(&g, n, seed);
+        Ok(PaleyEtfEncoder { n, s, gram_scale })
+    }
+}
+
+impl Encoder for PaleyEtfEncoder {
+    fn name(&self) -> &'static str {
+        "paley"
+    }
+
+    fn rows_in(&self) -> usize {
+        self.n
+    }
+
+    fn rows_out(&self) -> usize {
+        self.s.rows()
+    }
+
+    fn encode(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.n, "encode: row mismatch");
+        self.s.matmul(x)
+    }
+
+    fn materialize(&self) -> Mat {
+        self.s.clone()
+    }
+
+    fn gram_scale(&self) -> f64 {
+        self.gram_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::etf::{row_coherence, welch_bound};
+
+    #[test]
+    fn primality_helper() {
+        assert!(is_prime(5) && is_prime(13) && is_prime(97) && is_prime(7919));
+        assert!(!is_prime(1) && !is_prime(91) && !is_prime(100));
+    }
+
+    #[test]
+    fn next_paley_prime_is_1_mod_4() {
+        for lo in [5u64, 10, 50, 123, 1000] {
+            let q = next_paley_prime(lo);
+            assert!(q >= lo && q % 4 == 1 && is_prime(q));
+        }
+    }
+
+    #[test]
+    fn conference_matrix_identity() {
+        // C C^T = q I, symmetric, zero diagonal
+        for q in [5u64, 13, 17] {
+            let c = paley_conference(q);
+            let n = c.rows();
+            assert!(c.max_abs_diff(&c.transpose()) < 1e-12, "symmetric");
+            for i in 0..n {
+                assert_eq!(c.get(i, i), 0.0);
+            }
+            let cct = c.matmul(&c.transpose());
+            assert!(cct.max_abs_diff(&Mat::eye(n).scaled(q as f64)) < 1e-9, "q={q}");
+        }
+    }
+
+    #[test]
+    fn full_size_paley_is_equiangular_at_welch_bound() {
+        // n = (q+1)/2 exactly: no subsampling, true ETF
+        let q = 13u64;
+        let n = ((q + 1) / 2) as usize; // 7
+        let enc = PaleyEtfEncoder::new(n, 0).unwrap();
+        let s = enc.materialize();
+        assert_eq!(s.rows(), (q + 1) as usize);
+        // tight
+        assert!(s.gram().max_abs_diff(&Mat::eye(n).scaled(2.0)) < 1e-7);
+        // rows unit norm
+        for i in 0..s.rows() {
+            assert!((crate::linalg::norm2(s.row(i)) - 1.0).abs() < 1e-7);
+        }
+        // coherence == Welch bound
+        let coh = row_coherence(&s);
+        let wb = welch_bound(s.rows(), n);
+        assert!((coh - wb).abs() < 1e-6, "coherence {coh} vs welch {wb}");
+    }
+
+    #[test]
+    fn subsampled_paley_still_tight() {
+        let enc = PaleyEtfEncoder::new(20, 3).unwrap();
+        let s = enc.materialize();
+        assert!(s.gram().max_abs_diff(&Mat::eye(20).scaled(2.0)) < 1e-7);
+        assert!(enc.beta() >= 2.0);
+    }
+}

@@ -1,0 +1,218 @@
+//! Steiner ETF — Appendix D construction (Fickus–Mixon–Tremain 2012).
+//!
+//! `v` a power of two; `V ∈ {0,1}^{v × v(v−1)/2}` the incidence matrix of
+//! all 2-element subsets of `{1..v}` (each column has exactly two 1s, each
+//! row exactly `v−1`). Each `1` in row `i` is replaced by a distinct
+//! non-constant column of the Hadamard matrix `H_v` and the result scaled
+//! by `1/√(v−1)`, giving `S ∈ R^{v² × v(v−1)/2}` with unit-norm rows,
+//! redundancy `β = 2v/(v−1)`, and — because distinct Hadamard columns are
+//! orthogonal within each block-row — `SᵀS = β·I` exactly (tight).
+//!
+//! Two fast paths from the appendix are implemented:
+//!  * **block-local FWHT encode**: block `i`'s slab of `S·X` equals the
+//!    `v`-point FWHT of a `v × p` buffer holding the rows of `X` indexed
+//!    by row-`i`'s support, placed at their assigned Hadamard-column
+//!    positions (`O(v² log v · p / v)` total instead of dense `O(v³ p)`).
+//!  * **post-encode row shuffle**: the appendix notes performance improves
+//!    markedly when rows of `SX` are shuffled so stragglers don't knock
+//!    out structured row groups; we shuffle with the encoder's seed.
+
+use crate::encoding::Encoder;
+use crate::linalg::fwht::fwht_columns;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use anyhow::{ensure, Result};
+
+/// Steiner ETF encoder (Appendix D), β = 2v/(v−1) ≈ 2.
+pub struct SteinerEtfEncoder {
+    n: usize,
+    v: usize,
+    /// support[i] = the (v−1) input-row indices with V[i, col] = 1, in the
+    /// order their Hadamard columns h_2.. are assigned; entries ≥ n are
+    /// padding (the appendix's "append zero rows" dimension fix).
+    support: Vec<Vec<usize>>,
+    /// post-encode row permutation (shuffle fix from the appendix)
+    perm: Vec<usize>,
+}
+
+/// Column index of the 2-subset {a, b} (a < b) in colex/appendix order:
+/// subsets are grouped by their smaller element, matching the B₁/B₂ index
+/// sets of Appendix D.
+fn pair_col(a: usize, b: usize, v: usize) -> usize {
+    debug_assert!(a < b && b < v);
+    // number of pairs with smaller element < a:  sum_{j<a} (v-1-j)
+    a * (2 * v - 1 - a) / 2 + (b - a - 1)
+}
+
+impl SteinerEtfEncoder {
+    pub fn new(n: usize, seed: u64) -> Result<Self> {
+        ensure!(n >= 1, "Steiner ETF needs n >= 1");
+        // smallest power-of-two v with v(v-1)/2 >= n
+        let mut v = 2usize;
+        while v * (v - 1) / 2 < n {
+            v *= 2;
+        }
+        ensure!(v >= 2, "internal: bad v");
+        // row i's support: all pairs containing i => columns pair_col(min,max)
+        // Hadamard columns h_2..h_v assigned in ascending partner order.
+        let support: Vec<Vec<usize>> = (0..v)
+            .map(|i| {
+                (0..v)
+                    .filter(|&j| j != i)
+                    .map(|j| pair_col(i.min(j), i.max(j), v))
+                    .collect()
+            })
+            .collect();
+        let mut rng = Pcg64::new(seed, 0x57e1);
+        let perm = rng.permutation(v * v);
+        Ok(SteinerEtfEncoder { n, v, support, perm })
+    }
+
+    /// Construction order `v` (block count and block height).
+    pub fn v(&self) -> usize {
+        self.v
+    }
+}
+
+impl Encoder for SteinerEtfEncoder {
+    fn name(&self) -> &'static str {
+        "steiner"
+    }
+
+    fn rows_in(&self) -> usize {
+        self.n
+    }
+
+    fn rows_out(&self) -> usize {
+        self.v * self.v
+    }
+
+    fn encode(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.n, "encode: row mismatch");
+        let (v, p) = (self.v, x.cols());
+        let scale = 1.0 / ((v - 1) as f64).sqrt();
+        let mut out = Mat::zeros(v * v, p);
+        // block i: FWHT of a v×p buffer with x-rows at positions 1.. (h_2..h_v
+        // are Hadamard columns 1..v-1 in Sylvester indexing; position 0 — the
+        // all-ones column h_1 — stays empty, matching the appendix example).
+        let mut buf = vec![0.0; v * p];
+        for (i, sup) in self.support.iter().enumerate() {
+            buf.fill(0.0);
+            for (slot, &col_idx) in sup.iter().enumerate() {
+                if col_idx < self.n {
+                    buf[(slot + 1) * p..(slot + 2) * p].copy_from_slice(x.row(col_idx));
+                }
+            }
+            fwht_columns(&mut buf, v, p);
+            for r in 0..v {
+                let dst = out.row_mut(self.perm[i * v + r]);
+                for j in 0..p {
+                    dst[j] = scale * buf[r * p + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn materialize(&self) -> Mat {
+        self.encode(&Mat::eye(self.n))
+    }
+
+    fn gram_scale(&self) -> f64 {
+        // construction tightness: SᵀS = (2v/(v−1))·I, preserved under the
+        // padding-column drop (principal submatrix of a scaled identity)
+        2.0 * self.v as f64 / (self.v as f64 - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::etf::row_coherence;
+
+    #[test]
+    fn pair_col_enumerates_all_pairs() {
+        let v = 8;
+        let mut seen = vec![false; v * (v - 1) / 2];
+        for a in 0..v {
+            for b in a + 1..v {
+                let c = pair_col(a, b, v);
+                assert!(!seen[c], "duplicate column {c}");
+                seen[c] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn full_size_tight_and_unit_rows() {
+        // v = 4: n = 6 exactly, beta = 8/3
+        let enc = SteinerEtfEncoder::new(6, 0).unwrap();
+        assert_eq!(enc.v(), 4);
+        assert_eq!(enc.rows_out(), 16);
+        let s = enc.materialize();
+        let beta = enc.beta(); // 16/6 = 8/3
+        assert!(s.gram().max_abs_diff(&Mat::eye(6).scaled(beta)) < 1e-9);
+        for i in 0..16 {
+            assert!((crate::linalg::norm2(s.row(i)) - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn equiangularity_full_size() {
+        // all non-zero pairwise inner products have the same magnitude
+        let enc = SteinerEtfEncoder::new(6, 0).unwrap();
+        let s = enc.materialize();
+        let m = s.rows();
+        let mut mags = vec![];
+        for i in 0..m {
+            for j in 0..i {
+                let ip = crate::linalg::dot(s.row(i), s.row(j)).abs();
+                if ip > 1e-9 {
+                    mags.push(ip);
+                }
+            }
+        }
+        let first = mags[0];
+        assert!(mags.iter().all(|&x| (x - first).abs() < 1e-9),
+            "Steiner ETF: non-constant angles");
+        assert!(row_coherence(&s) > 0.0);
+    }
+
+    #[test]
+    fn padded_dimension_still_tight() {
+        // n = 5 < 6 = v(v-1)/2: one padding column dropped
+        let enc = SteinerEtfEncoder::new(5, 1).unwrap();
+        let s = enc.materialize();
+        let beta_col = 2.0 * enc.v() as f64 / (enc.v() as f64 - 1.0);
+        assert!(s.gram().max_abs_diff(&Mat::eye(5).scaled(beta_col)) < 1e-9);
+    }
+
+    #[test]
+    fn shuffle_is_seeded_permutation() {
+        let mut rng = Pcg64::seeded(5);
+        let x = Mat::from_fn(6, 2, |_, _| rng.next_gaussian());
+        let a = SteinerEtfEncoder::new(6, 3).unwrap().encode(&x);
+        let b = SteinerEtfEncoder::new(6, 3).unwrap().encode(&x);
+        assert!(a.max_abs_diff(&b) < 1e-15, "deterministic");
+        let c = SteinerEtfEncoder::new(6, 4).unwrap().encode(&x);
+        // same multiset of rows, different order
+        assert!(a.max_abs_diff(&c) > 1e-9);
+        let mut na: Vec<f64> = (0..a.rows()).map(|i| crate::linalg::norm2(a.row(i))).collect();
+        let mut nc: Vec<f64> = (0..c.rows()).map(|i| crate::linalg::norm2(c.row(i))).collect();
+        na.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        nc.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for (u, w) in na.iter().zip(&nc) {
+            assert!((u - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn larger_construction_scales() {
+        // v = 8 => n up to 28, rows 64, beta = 16/7
+        let enc = SteinerEtfEncoder::new(28, 0).unwrap();
+        assert_eq!(enc.v(), 8);
+        let s = enc.materialize();
+        assert!(s.gram().max_abs_diff(&Mat::eye(28).scaled(enc.beta())) < 1e-9);
+    }
+}

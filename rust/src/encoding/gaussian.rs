@@ -1,0 +1,105 @@
+//! i.i.d. Gaussian encoding (§4 "Random matrices").
+//!
+//! Entries `S_ij ~ N(0, 1/n)` so rows have unit norm in expectation and
+//! `E[SᵀS] = β I`. Eqs. (6)–(7) of the paper give the asymptotic extreme
+//! eigenvalues of `S_AᵀS_A/(βηn)` — scaled to our convention,
+//! `λ(S_AᵀS_A/(βη)) ∈ [(1−√(1/βη))², (1+√(1/βη))²]` w.h.p., i.e. property
+//! (4) holds with `ε = O(1/√(βη))` **independent of problem size** — the
+//! paper's headline redundancy argument.
+//!
+//! Gaussian codes are *not* tight frames at finite β: even at `k = m` the
+//! encoded optimum differs slightly from the true optimum
+//! (`exact_at_full_participation() == false`).
+
+use super::Encoder;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// Dense i.i.d. `N(0, 1/n)` encoder.
+pub struct GaussianEncoder {
+    n: usize,
+    rows_out: usize,
+    s: Mat,
+}
+
+impl GaussianEncoder {
+    pub fn new(n: usize, beta: f64, seed: u64) -> Self {
+        let rows_out = (beta * n as f64).round().max(n as f64) as usize;
+        let std = (1.0 / n as f64).sqrt();
+        let mut rng = Pcg64::new(seed, 0x6a55);
+        let s = Mat::from_fn(rows_out, n, |_, _| std * rng.next_gaussian());
+        GaussianEncoder { n, rows_out, s }
+    }
+}
+
+impl Encoder for GaussianEncoder {
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+
+    fn rows_in(&self) -> usize {
+        self.n
+    }
+
+    fn rows_out(&self) -> usize {
+        self.rows_out
+    }
+
+    fn encode(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.n, "encode: row mismatch");
+        self.s.matmul(x)
+    }
+
+    fn materialize(&self) -> Mat {
+        self.s.clone()
+    }
+
+    fn exact_at_full_participation(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_determinism() {
+        let a = GaussianEncoder::new(16, 2.0, 9);
+        let b = GaussianEncoder::new(16, 2.0, 9);
+        assert_eq!(a.rows_out(), 32);
+        assert!(a.materialize().max_abs_diff(&b.materialize()) < 1e-15);
+        let c = GaussianEncoder::new(16, 2.0, 10);
+        assert!(a.materialize().max_abs_diff(&c.materialize()) > 1e-3);
+    }
+
+    #[test]
+    fn row_norms_concentrate_near_one() {
+        let enc = GaussianEncoder::new(256, 2.0, 1);
+        let s = enc.materialize();
+        let mean: f64 = (0..s.rows())
+            .map(|i| crate::linalg::dot(s.row(i), s.row(i)))
+            .sum::<f64>()
+            / s.rows() as f64;
+        assert!((mean - 1.0).abs() < 0.05, "mean row norm^2 {mean}");
+    }
+
+    #[test]
+    fn gram_near_beta_identity_at_high_redundancy() {
+        let enc = GaussianEncoder::new(32, 16.0, 2);
+        let g = enc.materialize().gram();
+        // diag near beta, off-diag near 0 (concentration; ~4σ tolerance)
+        for i in 0..32 {
+            assert!((g.get(i, i) - 16.0).abs() < 4.0);
+            for j in 0..i {
+                assert!(g.get(i, j).abs() < 4.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fractional_beta_rounds_rows() {
+        let enc = GaussianEncoder::new(10, 1.7, 0);
+        assert_eq!(enc.rows_out(), 17);
+    }
+}

@@ -1,0 +1,132 @@
+//! Randomized subsampled-Hadamard encoding via FWHT (§4 "Fast transforms").
+//!
+//! The paper: "insert rows of zeroes at random locations into the data pair
+//! (X, y), and then take the FWHT of each column of the augmented matrix
+//! — a randomized Hadamard ensemble, known to satisfy the RIP w.h.p."
+//!
+//! Concretely `S = (1/√n) · H_N · D · E`, where `N = 2^⌈log₂ βn⌉`, `E` is
+//! an `N × n` selector placing the `n` data rows at uniformly random
+//! distinct positions (the "zero rows" insertion), `D` a random ±1
+//! diagonal (sign flips — free extra randomization), and `H_N` the
+//! unnormalized Sylvester Hadamard. Then `SᵀS = (N/n)·I = β_eff I`
+//! *exactly* — a tight frame — and the encode costs `O(N log N)` per
+//! column instead of the dense `O(N·n)`.
+//!
+//! This is the encoder used for the ridge-regression experiment (Fig. 4,
+//! "Hadamard (FWHT)-coded").
+
+use super::Encoder;
+use crate::linalg::fwht::fwht_columns;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// FWHT-based randomized Hadamard encoder.
+pub struct HadamardEncoder {
+    n: usize,
+    n_out: usize,
+    /// position[i] = row of the augmented matrix holding data row i
+    positions: Vec<usize>,
+    /// sign[i] = ±1 flip applied to data row i before the transform
+    signs: Vec<f64>,
+}
+
+impl HadamardEncoder {
+    pub fn new(n: usize, beta: f64, seed: u64) -> Self {
+        let target = (beta * n as f64).round().max(n as f64) as usize;
+        let n_out = target.next_power_of_two();
+        let mut rng = Pcg64::new(seed, 0xfa57);
+        let positions = rng.sample_indices(n_out, n);
+        let signs = (0..n)
+            .map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        HadamardEncoder { n, n_out, positions, signs }
+    }
+}
+
+impl Encoder for HadamardEncoder {
+    fn name(&self) -> &'static str {
+        "hadamard"
+    }
+
+    fn rows_in(&self) -> usize {
+        self.n
+    }
+
+    fn rows_out(&self) -> usize {
+        self.n_out
+    }
+
+    fn encode(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.n, "encode: row mismatch");
+        let c = x.cols();
+        let mut buf = vec![0.0; self.n_out * c];
+        for (i, (&pos, &sign)) in self.positions.iter().zip(&self.signs).enumerate() {
+            let src = x.row(i);
+            let dst = &mut buf[pos * c..(pos + 1) * c];
+            for j in 0..c {
+                dst[j] = sign * src[j];
+            }
+        }
+        fwht_columns(&mut buf, self.n_out, c);
+        let scale = 1.0 / (self.n as f64).sqrt();
+        for v in &mut buf {
+            *v *= scale;
+        }
+        Mat::from_vec(self.n_out, c, buf)
+    }
+
+    fn materialize(&self) -> Mat {
+        // S = encode(I): one FWHT per basis column — O(N^2 log N) total,
+        // used only by spectrum analysis and tests.
+        self.encode(&Mat::eye(self.n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn rows_out_is_power_of_two() {
+        for &(n, beta) in &[(24usize, 2.0), (100, 2.0), (64, 2.0), (7, 3.0)] {
+            let enc = HadamardEncoder::new(n, beta, 0);
+            assert!(enc.rows_out().is_power_of_two());
+            assert!(enc.rows_out() as f64 >= beta * n as f64);
+            assert!(enc.beta() >= beta);
+        }
+    }
+
+    #[test]
+    fn tight_frame_exact() {
+        let enc = HadamardEncoder::new(24, 2.0, 5);
+        let g = enc.materialize().gram();
+        let beta_eff = enc.beta(); // 64/24
+        assert!(g.max_abs_diff(&Mat::eye(24).scaled(beta_eff)) < 1e-10);
+    }
+
+    #[test]
+    fn encode_preserves_scaled_energy() {
+        let mut rng = Pcg64::seeded(1);
+        let x = Mat::from_fn(48, 3, |_, _| rng.next_gaussian());
+        let enc = HadamardEncoder::new(48, 2.0, 2);
+        let sx = enc.encode(&x);
+        // ||Sx||^2 = beta_eff ||x||^2 per column (S^T S = beta I)
+        for j in 0..3 {
+            let e_in: f64 = x.col(j).iter().map(|v| v * v).sum();
+            let e_out: f64 = sx.col(j).iter().map(|v| v * v).sum();
+            assert!((e_out - enc.beta() * e_in).abs() < 1e-8 * e_out.max(1.0));
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut rng = Pcg64::seeded(3);
+        let x = Mat::from_fn(16, 2, |_, _| rng.next_gaussian());
+        let a = HadamardEncoder::new(16, 2.0, 7).encode(&x);
+        let b = HadamardEncoder::new(16, 2.0, 7).encode(&x);
+        let c = HadamardEncoder::new(16, 2.0, 8).encode(&x);
+        assert!(a.max_abs_diff(&b) < 1e-15);
+        assert!(a.max_abs_diff(&c) > 1e-6);
+    }
+}

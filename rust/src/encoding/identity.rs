@@ -1,0 +1,56 @@
+//! Uncoded baseline: `S = I` (the paper's "uncoded" scheme).
+
+use super::Encoder;
+use crate::linalg::Mat;
+
+/// `S = I_n`. With first-k gather this degenerates to plain sub-sampled
+/// distributed gradient descent — the baseline the paper shows failing to
+/// converge at small η (Fig. 4).
+#[derive(Debug, Clone)]
+pub struct IdentityEncoder {
+    n: usize,
+}
+
+impl IdentityEncoder {
+    pub fn new(n: usize) -> Self {
+        IdentityEncoder { n }
+    }
+}
+
+impl Encoder for IdentityEncoder {
+    fn name(&self) -> &'static str {
+        "uncoded"
+    }
+
+    fn rows_in(&self) -> usize {
+        self.n
+    }
+
+    fn rows_out(&self) -> usize {
+        self.n
+    }
+
+    fn encode(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.n, "encode: row mismatch");
+        x.clone()
+    }
+
+    fn materialize(&self) -> Mat {
+        Mat::eye(self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn encode_is_identity() {
+        let mut rng = Pcg64::seeded(0);
+        let x = Mat::from_fn(10, 4, |_, _| rng.next_gaussian());
+        let enc = IdentityEncoder::new(10);
+        assert!(enc.encode(&x).max_abs_diff(&x) < 1e-15);
+        assert_eq!(enc.beta(), 1.0);
+    }
+}

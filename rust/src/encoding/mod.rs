@@ -1,0 +1,273 @@
+//! Encoding-matrix library — §4 "Code Design" of the paper.
+//!
+//! An [`Encoder`] owns a fixed encoding matrix `S ∈ R^{(βn)×n}` (implicitly
+//! or explicitly) and applies it to data: `X̃ = S X`, `ỹ = S y`. The system
+//! is *coding-oblivious* downstream — workers never see `S`.
+//!
+//! Normalization convention across every family: `SᵀS = β I` (tight-frame
+//! scaling; exact for the ETFs, the fast transforms, and replication; in
+//! expectation for Gaussian). Under this convention the first-k gradient
+//! estimate `(1/(βηn)) X̃_Aᵀ(X̃_A w − ỹ_A)` is an unbiased-scale estimate of
+//! `∇f`, and property (4) reads `λ(S_AᵀS_A/(βη)) ∈ [1−ε, 1+ε]` — which is
+//! what [`spectrum`] measures for Figures 2–3.
+//!
+//! Families (paper → module):
+//!
+//! | paper §4            | here |
+//! |---------------------|------|
+//! | uncoded `S = I`     | [`identity`] |
+//! | replication         | [`replication`] |
+//! | i.i.d. Gaussian     | [`gaussian`] |
+//! | fast transforms (FWHT randomized Hadamard) | [`hadamard`] |
+//! | fast transforms (real DFT/DCT ensemble)    | [`dft`] |
+//! | Paley ETF           | [`etf::paley`] |
+//! | Hadamard ETF        | [`etf::hadamard_etf`] |
+//! | Steiner ETF (App. D)| [`etf::steiner`] |
+
+pub mod dft;
+pub mod etf;
+pub mod gaussian;
+pub mod hadamard;
+pub mod identity;
+pub mod replication;
+pub mod spectrum;
+
+use crate::linalg::Mat;
+use anyhow::{bail, Result};
+
+pub use spectrum::{normalized_gram_eigs, SpectrumStats};
+
+/// A data-encoding operator `S ∈ R^{rows_out × rows_in}` with `SᵀS = β I`.
+pub trait Encoder: Send + Sync {
+    /// Human-readable family name (used by the CLI / bench tables).
+    fn name(&self) -> &'static str;
+
+    /// Input (raw data) row count `n`.
+    fn rows_in(&self) -> usize;
+
+    /// Output (encoded) row count `βn` (after any padding the family needs).
+    fn rows_out(&self) -> usize;
+
+    /// Effective redundancy factor `β = rows_out / rows_in`.
+    fn beta(&self) -> f64 {
+        self.rows_out() as f64 / self.rows_in() as f64
+    }
+
+    /// Apply `S` to an `n × p` matrix (columns encoded independently).
+    fn encode(&self, x: &Mat) -> Mat {
+        // default: dense multiply; fast-transform families override
+        self.materialize().matmul(x)
+    }
+
+    /// Dense `S` (spectrum analysis, tests). May be expensive.
+    fn materialize(&self) -> Mat;
+
+    /// The exact (or expected) multiple `c` with `SᵀS = c·I`.
+    ///
+    /// Equals [`Encoder::beta`] for row-homogeneous families, but differs
+    /// for ETFs built from a larger bank and column-subsampled (the
+    /// paper's §5 bank approach): a column subset of a tight frame stays
+    /// tight at the *construction* scale (e.g. 2 for Paley), while the
+    /// effective redundancy `rows_out/rows_in` is slightly larger. The
+    /// optimizer's gradient normalization must divide by this, not β.
+    fn gram_scale(&self) -> f64 {
+        self.beta()
+    }
+
+    /// Whether `k = m` recovers the *exact* original optimum (true for
+    /// tight frames / replication / identity; false for Gaussian — §4).
+    fn exact_at_full_participation(&self) -> bool {
+        true
+    }
+}
+
+/// Encoder family selector (CLI/config surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EncoderKind {
+    /// Uncoded baseline, `S = I` (β forced to 1).
+    Identity,
+    /// Partition replication (integer β).
+    Replication,
+    /// i.i.d. `N(0, 1/n)` entries.
+    Gaussian,
+    /// Randomized subsampled Hadamard via FWHT (fast transform).
+    Hadamard,
+    /// Real DFT (orthonormal DCT-II) ensemble (fast transform family).
+    Dft,
+    /// Paley conference-matrix ETF (β ≈ 2).
+    PaleyEtf,
+    /// Sylvester-Hadamard projection ETF (β ≈ 2).
+    HadamardEtf,
+    /// Steiner ETF, Appendix D construction (β ≈ 2, block-sparse, FWHT-fast).
+    SteinerEtf,
+}
+
+impl EncoderKind {
+    /// All families, in the order the paper's tables list them.
+    pub const ALL: [EncoderKind; 8] = [
+        EncoderKind::Identity,
+        EncoderKind::Replication,
+        EncoderKind::Gaussian,
+        EncoderKind::Hadamard,
+        EncoderKind::Dft,
+        EncoderKind::PaleyEtf,
+        EncoderKind::HadamardEtf,
+        EncoderKind::SteinerEtf,
+    ];
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "identity" | "uncoded" | "none" => EncoderKind::Identity,
+            "replication" | "repl" => EncoderKind::Replication,
+            "gaussian" | "gauss" => EncoderKind::Gaussian,
+            "hadamard" | "fwht" => EncoderKind::Hadamard,
+            "dft" | "dct" | "fourier" => EncoderKind::Dft,
+            "paley" | "paley-etf" => EncoderKind::PaleyEtf,
+            "hadamard-etf" | "hetf" => EncoderKind::HadamardEtf,
+            "steiner" | "steiner-etf" => EncoderKind::SteinerEtf,
+            other => bail!("unknown encoder kind: {other:?}"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EncoderKind::Identity => "uncoded",
+            EncoderKind::Replication => "replication",
+            EncoderKind::Gaussian => "gaussian",
+            EncoderKind::Hadamard => "hadamard",
+            EncoderKind::Dft => "dft",
+            EncoderKind::PaleyEtf => "paley",
+            EncoderKind::HadamardEtf => "hadamard-etf",
+            EncoderKind::SteinerEtf => "steiner",
+        }
+    }
+
+    /// Build an encoder for `n` input rows with target redundancy `beta`.
+    ///
+    /// Families with structural constraints round `βn` up (Hadamard: next
+    /// power of two; ETFs: next valid construction size) — check
+    /// [`Encoder::beta`] for the effective factor. `seed` drives any
+    /// randomization (Gaussian entries, row placement, shuffles).
+    pub fn build(&self, n: usize, beta: f64, seed: u64) -> Result<Box<dyn Encoder>> {
+        if n == 0 {
+            bail!("encoder needs at least one input row");
+        }
+        if beta < 1.0 {
+            bail!("redundancy beta must be >= 1, got {beta}");
+        }
+        Ok(match self {
+            EncoderKind::Identity => Box::new(identity::IdentityEncoder::new(n)),
+            EncoderKind::Replication => {
+                Box::new(replication::ReplicationEncoder::new(n, beta.round() as usize)?)
+            }
+            EncoderKind::Gaussian => Box::new(gaussian::GaussianEncoder::new(n, beta, seed)),
+            EncoderKind::Hadamard => Box::new(hadamard::HadamardEncoder::new(n, beta, seed)),
+            EncoderKind::Dft => Box::new(dft::DftEncoder::new(n, beta, seed)),
+            EncoderKind::PaleyEtf => Box::new(etf::paley::PaleyEtfEncoder::new(n, seed)?),
+            EncoderKind::HadamardEtf => Box::new(etf::hadamard_etf::HadamardEtfEncoder::new(n, seed)),
+            EncoderKind::SteinerEtf => Box::new(etf::steiner::SteinerEtfEncoder::new(n, seed)?),
+        })
+    }
+}
+
+impl std::fmt::Display for EncoderKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Shared conformance check: SᵀS ≈ β I and encode() ≡ materialize()·X.
+    fn conformance(kind: EncoderKind, n: usize, beta: f64, tol_tight: f64) {
+        let enc = kind.build(n, beta, 7).unwrap();
+        assert_eq!(enc.rows_in(), n);
+        let s = enc.materialize();
+        assert_eq!(s.rows(), enc.rows_out());
+        assert_eq!(s.cols(), n);
+        // S^T S ≈ gram_scale · I (construction tightness)
+        let gram = s.gram();
+        let c = enc.gram_scale();
+        let target = Mat::eye(n).scaled(c);
+        let err = gram.max_abs_diff(&target);
+        assert!(
+            err < tol_tight * c,
+            "{kind}: ||S^T S - c I||_max = {err:.4} (gram_scale={c:.3})"
+        );
+        assert!(enc.beta() >= 1.0 && enc.beta() + 1e-9 >= c * 0.99,
+            "{kind}: beta {} vs gram_scale {c}", enc.beta());
+        // encode agrees with dense multiply
+        let mut rng = Pcg64::seeded(3);
+        let x = Mat::from_fn(n, 3, |_, _| rng.next_gaussian());
+        let direct = s.matmul(&x);
+        let fast = enc.encode(&x);
+        assert!(
+            fast.max_abs_diff(&direct) < 1e-8,
+            "{kind}: encode() disagrees with materialize()@X"
+        );
+    }
+
+    #[test]
+    fn identity_conformance() {
+        conformance(EncoderKind::Identity, 24, 1.0, 1e-12);
+    }
+
+    #[test]
+    fn replication_conformance() {
+        conformance(EncoderKind::Replication, 24, 2.0, 1e-12);
+    }
+
+    #[test]
+    fn gaussian_conformance_loose() {
+        // Gaussian is tight only in expectation — allow loose tolerance.
+        conformance(EncoderKind::Gaussian, 32, 8.0, 0.45);
+    }
+
+    #[test]
+    fn hadamard_conformance() {
+        conformance(EncoderKind::Hadamard, 24, 2.0, 1e-9);
+    }
+
+    #[test]
+    fn dft_conformance() {
+        conformance(EncoderKind::Dft, 20, 2.0, 1e-9);
+    }
+
+    #[test]
+    fn paley_conformance() {
+        conformance(EncoderKind::PaleyEtf, 24, 2.0, 1e-6);
+    }
+
+    #[test]
+    fn hadamard_etf_conformance() {
+        conformance(EncoderKind::HadamardEtf, 24, 2.0, 1e-6);
+    }
+
+    #[test]
+    fn steiner_conformance() {
+        conformance(EncoderKind::SteinerEtf, 24, 2.0, 1e-9);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for kind in EncoderKind::ALL {
+            assert_eq!(EncoderKind::parse(kind.label()).unwrap(), kind);
+        }
+        assert!(EncoderKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn build_rejects_bad_args() {
+        assert!(EncoderKind::Gaussian.build(0, 2.0, 0).is_err());
+        assert!(EncoderKind::Gaussian.build(8, 0.5, 0).is_err());
+    }
+
+    #[test]
+    fn exactness_flags() {
+        assert!(EncoderKind::Hadamard.build(16, 2.0, 0).unwrap().exact_at_full_participation());
+        assert!(!EncoderKind::Gaussian.build(16, 2.0, 0).unwrap().exact_at_full_participation());
+    }
+}

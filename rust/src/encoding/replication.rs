@@ -1,0 +1,81 @@
+//! Replication baseline: each row stored `β` times (integer β).
+//!
+//! `S = [Iₙ; Iₙ; …]` — `SᵀS = βI` exactly. The *scheme* semantics (leader
+//! keeps the fastest arriving copy of each partition, §5) live in the
+//! coordinator's gather policy; this encoder just realizes the storage
+//! layout. Partition-aware placement (copies of the same partition on
+//! different workers) is handled by the partitioner in `problem/`.
+
+use super::Encoder;
+use crate::linalg::Mat;
+use anyhow::{ensure, Result};
+
+/// β-fold row replication.
+#[derive(Debug, Clone)]
+pub struct ReplicationEncoder {
+    n: usize,
+    beta: usize,
+}
+
+impl ReplicationEncoder {
+    pub fn new(n: usize, beta: usize) -> Result<Self> {
+        ensure!(beta >= 1, "replication factor must be >= 1, got {beta}");
+        Ok(ReplicationEncoder { n, beta })
+    }
+}
+
+impl Encoder for ReplicationEncoder {
+    fn name(&self) -> &'static str {
+        "replication"
+    }
+
+    fn rows_in(&self) -> usize {
+        self.n
+    }
+
+    fn rows_out(&self) -> usize {
+        self.n * self.beta
+    }
+
+    fn encode(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.n, "encode: row mismatch");
+        let blocks: Vec<&Mat> = std::iter::repeat(x).take(self.beta).collect();
+        Mat::vstack(&blocks)
+    }
+
+    fn materialize(&self) -> Mat {
+        let eye = Mat::eye(self.n);
+        let blocks: Vec<&Mat> = std::iter::repeat(&eye).take(self.beta).collect();
+        Mat::vstack(&blocks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn stacks_beta_copies() {
+        let mut rng = Pcg64::seeded(0);
+        let x = Mat::from_fn(6, 2, |_, _| rng.next_gaussian());
+        let enc = ReplicationEncoder::new(6, 3).unwrap();
+        let sx = enc.encode(&x);
+        assert_eq!(sx.rows(), 18);
+        for c in 0..3 {
+            assert!(sx.row_band(c * 6, (c + 1) * 6).max_abs_diff(&x) < 1e-15);
+        }
+    }
+
+    #[test]
+    fn gram_is_beta_identity() {
+        let enc = ReplicationEncoder::new(5, 4).unwrap();
+        let g = enc.materialize().gram();
+        assert!(g.max_abs_diff(&Mat::eye(5).scaled(4.0)) < 1e-12);
+    }
+
+    #[test]
+    fn rejects_zero_beta() {
+        assert!(ReplicationEncoder::new(5, 0).is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! Spectrum analysis of `S_Aᵀ S_A` — the empirical side of property (4).
+//!
+//! Figures 2 and 3 of the paper plot the eigenvalue distribution of the
+//! (normalized) Gram matrix of the straggler-surviving row-submatrix
+//! `S_A` for each encoding family. This module computes exactly that:
+//! rows of `S` are partitioned into `m` contiguous worker blocks, a
+//! uniformly random `k`-subset `A` of blocks is drawn, and the eigenvalues
+//! of `S_Aᵀ S_A / (βη)` (with `η = k/m`) are pooled over trials.
+//!
+//! The normalization makes the ideal spectrum ≡ 1: property (4) asks all
+//! eigenvalues to lie in `[1−ε, 1+ε]`, and the realized `ε` per trial is
+//! `max(λ_max − 1, 1 − λ_min)`.
+
+use crate::linalg::{sym_eigenvalues, Mat};
+use crate::rng::Pcg64;
+
+/// Pooled spectrum statistics over subset trials.
+#[derive(Debug, Clone)]
+pub struct SpectrumStats {
+    /// All pooled eigenvalues (sorted ascending) of the normalized Gram.
+    pub eigs: Vec<f64>,
+    /// Smallest / largest eigenvalue observed across trials.
+    pub lambda_min: f64,
+    pub lambda_max: f64,
+    /// Worst-case property-(4) ε over trials: `max(λmax−1, 1−λmin)`.
+    pub epsilon: f64,
+    /// Fraction of pooled eigenvalues within `1 ± bulk_tol`.
+    pub bulk_fraction: f64,
+    /// Tolerance used for `bulk_fraction`.
+    pub bulk_tol: f64,
+}
+
+/// Split `rows` into `m` near-equal contiguous blocks; returns `[lo, hi)`.
+pub fn partition_rows(rows: usize, m: usize) -> Vec<(usize, usize)> {
+    assert!(m >= 1 && rows >= m, "cannot split {rows} rows into {m} blocks");
+    let base = rows / m;
+    let extra = rows % m;
+    let mut out = Vec::with_capacity(m);
+    let mut lo = 0;
+    for i in 0..m {
+        let sz = base + usize::from(i < extra);
+        out.push((lo, lo + sz));
+        lo += sz;
+    }
+    out
+}
+
+/// Rows of `S` belonging to the worker blocks in `a` (given a partition).
+pub fn submatrix_for_subset(s: &Mat, part: &[(usize, usize)], a: &[usize]) -> Mat {
+    let blocks: Vec<Mat> = a.iter().map(|&i| s.row_band(part[i].0, part[i].1)).collect();
+    let refs: Vec<&Mat> = blocks.iter().collect();
+    Mat::vstack(&refs)
+}
+
+/// Eigenvalues of `S_Aᵀ S_A / (c·η)` for one explicit subset `a`, where
+/// `c` is the encoder's [`gram_scale`](crate::encoding::Encoder::gram_scale)
+/// (`SᵀS = c·I`), so the ideal spectrum is identically 1.
+pub fn normalized_gram_eigs(s: &Mat, m: usize, a: &[usize], gram_scale: f64) -> Vec<f64> {
+    let part = partition_rows(s.rows(), m);
+    let sa = submatrix_for_subset(s, &part, a);
+    let eta = a.len() as f64 / m as f64;
+    let gram = sa.gram().scaled(1.0 / (gram_scale * eta));
+    sym_eigenvalues(&gram)
+}
+
+/// Eigenvalues of `(1/c)·S_Aᵀ S_A` — the **paper's figure normalization**
+/// (Figures 2–3, Proposition 2): for a tight frame, the surviving bulk
+/// sits at exactly 1 and straggler damage shows as eigenvalues below it.
+pub fn paper_norm_gram_eigs(s: &Mat, m: usize, a: &[usize], gram_scale: f64) -> Vec<f64> {
+    let part = partition_rows(s.rows(), m);
+    let sa = submatrix_for_subset(s, &part, a);
+    let gram = sa.gram().scaled(1.0 / gram_scale);
+    sym_eigenvalues(&gram)
+}
+
+/// Pooled spectrum over `trials` uniformly random `k`-of-`m` subsets.
+///
+/// `eta_norm = true` divides by `c·η` (property-(4) / ε estimation, ideal
+/// spectrum ≡ 1); `false` divides by `c` only (the figures' normalization).
+pub fn sample_spectrum_norm(
+    s: &Mat,
+    m: usize,
+    k: usize,
+    trials: usize,
+    seed: u64,
+    gram_scale: f64,
+    eta_norm: bool,
+) -> SpectrumStats {
+    assert!(k >= 1 && k <= m, "need 1 <= k <= m (k={k}, m={m})");
+    let mut rng = Pcg64::new(seed, 0x5bec);
+    let mut eigs = Vec::new();
+    for _ in 0..trials {
+        let a = rng.sample_indices(m, k);
+        if eta_norm {
+            eigs.extend(normalized_gram_eigs(s, m, &a, gram_scale));
+        } else {
+            eigs.extend(paper_norm_gram_eigs(s, m, &a, gram_scale));
+        }
+    }
+    eigs.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let lambda_min = *eigs.first().unwrap();
+    let lambda_max = *eigs.last().unwrap();
+    let epsilon = (lambda_max - 1.0).max(1.0 - lambda_min).max(0.0);
+    let bulk_tol = 0.1;
+    let within = eigs
+        .iter()
+        .filter(|&&x| (x - 1.0).abs() <= bulk_tol)
+        .count();
+    SpectrumStats {
+        bulk_fraction: within as f64 / eigs.len() as f64,
+        eigs,
+        lambda_min,
+        lambda_max,
+        epsilon,
+        bulk_tol,
+    }
+}
+
+/// [`sample_spectrum_norm`] with the property-(4) `c·η` normalization
+/// (what the optimizers' ε estimation uses).
+pub fn sample_spectrum(
+    s: &Mat,
+    m: usize,
+    k: usize,
+    trials: usize,
+    seed: u64,
+    gram_scale: f64,
+) -> SpectrumStats {
+    sample_spectrum_norm(s, m, k, trials, seed, gram_scale, true)
+}
+
+/// Histogram of pooled eigenvalues over `[lo, hi)` with `bins` buckets
+/// (the actual Figure 2/3 series; out-of-range mass is clamped to the
+/// edge bins so nothing is silently dropped).
+pub fn histogram(eigs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins >= 1 && hi > lo);
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in eigs {
+        let b = (((x - lo) / w).floor() as isize).clamp(0, bins as isize - 1) as usize;
+        h[b] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::EncoderKind;
+
+    #[test]
+    fn partition_covers_all_rows() {
+        for &(rows, m) in &[(10usize, 3usize), (64, 8), (17, 5), (8, 8)] {
+            let p = partition_rows(rows, m);
+            assert_eq!(p.len(), m);
+            assert_eq!(p[0].0, 0);
+            assert_eq!(p.last().unwrap().1, rows);
+            for w in p.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+                assert!(w[0].1 > w[0].0, "nonempty");
+            }
+        }
+    }
+
+    #[test]
+    fn full_subset_of_tight_frame_is_identity_spectrum() {
+        // k = m on a tight frame: S^T S/(beta) = I exactly
+        let enc = EncoderKind::Hadamard.build(16, 2.0, 0).unwrap();
+        let s = enc.materialize();
+        let a: Vec<usize> = (0..8).collect();
+        let eigs = normalized_gram_eigs(&s, 8, &a, enc.gram_scale());
+        for e in eigs {
+            assert!((e - 1.0).abs() < 1e-9, "eig {e}");
+        }
+    }
+
+    #[test]
+    fn proposition_2_multiplicity_of_unit_eigenvalues() {
+        // Prop 2 (Cauchy interlacing): for a tight frame S with SᵀS = c·I,
+        // dropping `r` rows leaves S_AᵀS_A = cI − (rank ≤ r perturbation),
+        // so S_AᵀS_A/c has at least n − r eigenvalues exactly 1 — the
+        // paper's n(1 − β(1−η)) with r = β(1−η)n.
+        // Hadamard ETF, n=8, rows=16; m=16 single-row blocks, k=15.
+        let enc = EncoderKind::HadamardEtf.build(8, 2.0, 0).unwrap();
+        let s = enc.materialize();
+        let (m, k) = (16usize, 15usize);
+        let a: Vec<usize> = (0..k).collect();
+        let part = partition_rows(s.rows(), m);
+        let sa = submatrix_for_subset(&s, &part, &a);
+        let gram = sa.gram().scaled(1.0 / enc.gram_scale());
+        let eigs = sym_eigenvalues(&gram);
+        let dropped_rows = s.rows() - sa.rows(); // 1
+        let expected_units = 8 - dropped_rows; // 7
+        let units = eigs.iter().filter(|&&x| (x - 1.0).abs() < 1e-8).count();
+        assert!(
+            units >= expected_units,
+            "Prop 2: expected >= {expected_units} unit eigenvalues, got {units} ({eigs:?})"
+        );
+    }
+
+    #[test]
+    fn etf_tighter_than_gaussian_at_equal_beta() {
+        // the qualitative claim behind Figure 2
+        let n = 24;
+        let (m, k, trials) = (12, 6, 8);
+        let etf = EncoderKind::HadamardEtf.build(n, 2.0, 1).unwrap();
+        let gauss = EncoderKind::Gaussian.build(n, 2.0, 1).unwrap();
+        let se = sample_spectrum(&etf.materialize(), m, k, trials, 42, etf.gram_scale());
+        let sg = sample_spectrum(&gauss.materialize(), m, k, trials, 42, gauss.gram_scale());
+        assert!(
+            se.epsilon < sg.epsilon,
+            "ETF eps {} !< Gaussian eps {}",
+            se.epsilon,
+            sg.epsilon
+        );
+    }
+
+    #[test]
+    fn histogram_conserves_mass() {
+        let eigs = vec![0.1, 0.5, 0.9, 1.0, 1.5, 3.0, -1.0];
+        let h = histogram(&eigs, 0.0, 2.0, 4);
+        assert_eq!(h.iter().sum::<usize>(), eigs.len());
+    }
+
+    #[test]
+    fn epsilon_zero_iff_identity() {
+        let enc = EncoderKind::Identity.build(12, 1.0, 0).unwrap();
+        let s = enc.materialize();
+        let stats = sample_spectrum(&s, 12, 12, 1, 0, enc.gram_scale());
+        assert!(stats.epsilon < 1e-9);
+    }
+}

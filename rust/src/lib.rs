@@ -1,0 +1,45 @@
+//! # codedopt — straggler mitigation in distributed optimization through data encoding
+//!
+//! A full-system reproduction of Karakus, Sun, Yin, Diggavi (NIPS 2017).
+//!
+//! The library implements the paper's *encoded distributed optimization*
+//! framework as a three-layer stack:
+//!
+//! * **L3 (this crate)** — the coordination system: a leader/worker
+//!   gradient-aggregation runtime with **first-k-of-m gather** ([`cluster`]),
+//!   the coding-oblivious batch algorithms (gradient descent and
+//!   overlap-L-BFGS with exact line search, [`optim`]), the encoding-matrix
+//!   library (ETFs, fast transforms, random matrices, [`encoding`]), the
+//!   encoded-problem assembly ([`problem`]), and the MovieLens-style
+//!   matrix-factorization application ([`mf`]).
+//! * **L2/L1 (python/, build-time only)** — the per-worker compute graph
+//!   (JAX) and its fused Pallas kernels, AOT-lowered to HLO text artifacts
+//!   that [`runtime::XlaEngine`] loads and executes through PJRT. Python
+//!   never runs on the request path.
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
+//! reproduced figures/tables.
+
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod encoding;
+pub mod linalg;
+pub mod metrics;
+pub mod mf;
+pub mod optim;
+pub mod problem;
+pub mod rng;
+pub mod runtime;
+pub mod testutil;
+
+/// Convenience re-exports for the common experiment-driving surface.
+pub mod prelude {
+    pub use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, GatherPolicy};
+    pub use crate::config::Config;
+    pub use crate::encoding::{Encoder, EncoderKind};
+    pub use crate::linalg::Mat;
+    pub use crate::optim::{CodedFista, CodedGd, CodedLbfgs, FistaConfig, GdConfig, LbfgsConfig, Optimizer, Prox, RunOutput, Trace};
+    pub use crate::problem::{EncodedProblem, QuadProblem, Scheme};
+    pub use crate::runtime::{build_engine, ComputeEngine, EngineKind, NativeEngine, XlaEngine};
+}

@@ -1,0 +1,247 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! Used for (a) the local `n < 500` ridge subproblems in the matrix-
+//! factorization experiment (the paper uses `numpy.linalg.solve` there —
+//! §5) and (b) small exact solves in tests (closed-form least squares to
+//! validate the iterative solvers against).
+
+use crate::linalg::Mat;
+
+/// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
+///
+/// `A` must be symmetric positive definite; returns `None` if a
+/// non-positive pivot is hit (not SPD / numerically singular).
+pub fn cholesky_factor(a: &Mat) -> Option<Mat> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky: matrix must be square");
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.get(i, j);
+            for k in 0..j {
+                s -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l.set(i, j, s.sqrt());
+            } else {
+                l.set(i, j, s / l.get(j, j));
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `A x = b` given the Cholesky factor `L` of `A`.
+pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n, "cholesky_solve: rhs mismatch");
+    // forward: L z = b
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.get(i, k) * z[k];
+        }
+        z[i] = s / l.get(i, i);
+    }
+    // backward: Lᵀ x = z
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for k in i + 1..n {
+            s -= l.get(k, i) * x[k];
+        }
+        x[i] = s / l.get(i, i);
+    }
+    x
+}
+
+/// One-shot SPD solve `A x = b`; returns `None` if `A` is not SPD.
+pub fn solve_spd(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    cholesky_factor(a).map(|l| cholesky_solve(&l, b))
+}
+
+/// Closed-form ridge solve: `(XᵀX + λ n I) w = Xᵀ y`.
+///
+/// Matches the objective convention `f(w) = (1/2n)||Xw−y||² + (λ/2)||w||²`,
+/// whose stationarity condition is `(1/n)Xᵀ(Xw−y) + λw = 0`.
+pub fn ridge_exact(x: &Mat, y: &[f64], lambda: f64) -> Option<Vec<f64>> {
+    let n = x.rows() as f64;
+    let mut gram = x.gram();
+    for i in 0..gram.rows() {
+        let v = gram.get(i, i) + lambda * n;
+        gram.set(i, i, v);
+    }
+    let rhs = x.gemv_t(y);
+    solve_spd(&gram, &rhs)
+}
+
+/// Pivoted Cholesky of a PSD matrix: `P A Pᵀ ≈ L Lᵀ` truncated at
+/// numerical rank. Returns `L` as an `n × rank` matrix **in the original
+/// (unpermuted) row order**, i.e. `A ≈ L Lᵀ` exactly for PSD `A`.
+///
+/// Used by the ETF constructions (§4 / DESIGN.md): the equiangular Gram
+/// matrix `G = (I + C/√q)/2` is an exact projection of rank `n/2`; its
+/// pivoted Cholesky rows are the frame vectors (`G = L Lᵀ`, rows of `L`
+/// the φᵢ), and for a projection `LᵀL = I` automatically, which makes
+/// `S = √β L` a tight frame.
+pub fn pivoted_cholesky(a: &Mat, tol: f64) -> Mat {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "pivoted_cholesky: matrix must be square");
+    let mut diag: Vec<f64> = (0..n).map(|i| a.get(i, i)).collect();
+    let mut perm: Vec<usize> = (0..n).collect();
+    // l_rows[i] holds the i-th row of L in permuted order, built column by column
+    let mut l = Mat::zeros(n, n);
+    let mut rank = 0;
+    let thresh = tol * diag.iter().cloned().fold(0.0, f64::max).max(1e-300);
+    for k in 0..n {
+        // find pivot
+        let (piv, &dmax) = diag[k..]
+            .iter()
+            .enumerate()
+            .max_by(|(_, x), (_, y)| x.partial_cmp(y).unwrap())
+            .map(|(i, v)| (i + k, v))
+            .unwrap();
+        if dmax <= thresh {
+            break;
+        }
+        perm.swap(k, piv);
+        diag.swap(k, piv);
+        // swap already-computed L rows
+        for j in 0..k {
+            let (a_, b_) = (l.get(k, j), l.get(piv, j));
+            l.set(k, j, b_);
+            l.set(piv, j, a_);
+        }
+        let lkk = dmax.sqrt();
+        l.set(k, k, lkk);
+        for i in k + 1..n {
+            let mut s = a.get(perm[i], perm[k]);
+            for j in 0..k {
+                s -= l.get(i, j) * l.get(k, j);
+            }
+            let v = s / lkk;
+            l.set(i, k, v);
+            diag[i] -= v * v;
+        }
+        rank += 1;
+    }
+    // un-permute rows and truncate columns at rank
+    let mut out = Mat::zeros(n, rank);
+    for i in 0..n {
+        for j in 0..rank {
+            out.set(perm[i], j, l.get(i, j));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+
+    fn random_spd(rng: &mut Pcg64, n: usize) -> Mat {
+        let b = Mat::from_fn(n, n, |_, _| rng.next_gaussian());
+        let mut a = b.gram();
+        for i in 0..n {
+            a.set(i, i, a.get(i, i) + n as f64); // well conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Pcg64::seeded(1);
+        for &n in &[1usize, 2, 5, 20] {
+            let a = random_spd(&mut rng, n);
+            let l = cholesky_factor(&a).expect("SPD");
+            let recon = l.matmul(&l.transpose());
+            assert!(recon.max_abs_diff(&a) < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_matches_identity() {
+        let b = vec![3.0, -1.0, 2.0];
+        let x = solve_spd(&Mat::eye(3), &b).unwrap();
+        for (u, v) in x.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn solve_random_system() {
+        let mut rng = Pcg64::seeded(2);
+        let n = 12;
+        let a = random_spd(&mut rng, n);
+        let x_true: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let b = a.gemv(&x_true);
+        let x = solve_spd(&a, &b).unwrap();
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky_factor(&a).is_none());
+    }
+
+    #[test]
+    fn pivoted_cholesky_full_rank_reconstructs() {
+        let mut rng = Pcg64::seeded(10);
+        let a = random_spd(&mut rng, 10);
+        let l = pivoted_cholesky(&a, 1e-12);
+        assert_eq!(l.cols(), 10);
+        assert!(l.matmul(&l.transpose()).max_abs_diff(&a) < 1e-8);
+    }
+
+    #[test]
+    fn pivoted_cholesky_low_rank() {
+        // rank-3 PSD from a 12x3 factor
+        let mut rng = Pcg64::seeded(11);
+        let b = Mat::from_fn(12, 3, |_, _| rng.next_gaussian());
+        let a = b.matmul(&b.transpose());
+        let l = pivoted_cholesky(&a, 1e-10);
+        assert_eq!(l.cols(), 3, "numerical rank");
+        assert!(l.matmul(&l.transpose()).max_abs_diff(&a) < 1e-8);
+    }
+
+    #[test]
+    fn pivoted_cholesky_projection_has_orthonormal_columns() {
+        // For projection G, L^T L = I (the tight-frame property the ETF
+        // constructions rely on). Build G as V_1 V_1^T from a random
+        // orthonormal basis.
+        let mut rng = Pcg64::seeded(12);
+        let b = Mat::from_fn(8, 8, |_, _| rng.next_gaussian());
+        let (_, v) = crate::linalg::sym_eigen(&b.add(&b.transpose()));
+        let v1 = v.select_cols(&[0, 1, 2, 3]);
+        let g = v1.matmul(&v1.transpose());
+        let l = pivoted_cholesky(&g, 1e-10);
+        assert_eq!(l.cols(), 4);
+        assert!(l.gram().max_abs_diff(&Mat::eye(4)) < 1e-8);
+    }
+
+    #[test]
+    fn ridge_exact_satisfies_stationarity() {
+        let mut rng = Pcg64::seeded(3);
+        let (n, p) = (40, 6);
+        let x = Mat::from_fn(n, p, |_, _| rng.next_gaussian());
+        let y: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let lambda = 0.05;
+        let w = ridge_exact(&x, &y, lambda).unwrap();
+        // grad = (1/n) X^T (Xw - y) + lambda w == 0
+        let resid = crate::linalg::sub(&x.gemv(&w), &y);
+        let mut grad = x.gemv_t(&resid);
+        for (gi, wi) in grad.iter_mut().zip(&w) {
+            *gi = *gi / n as f64 + lambda * wi;
+        }
+        assert!(crate::linalg::norm2(&grad) < 1e-9);
+    }
+}

@@ -1,0 +1,317 @@
+//! Symmetric eigensolver: Householder tridiagonalization + implicit-shift QL.
+//!
+//! Needed by (a) the spectrum experiments (Figures 2–3 plot the eigenvalue
+//! distribution of `S_Aᵀ S_A` for each encoder) and (b) the ETF
+//! constructions, which factor a projection Gram matrix `P = F ᵀF` through
+//! its eigendecomposition. This is the classical `tred2`/`tql2` pair
+//! (Numerical Recipes / EISPACK lineage), O(n³), ample for the `n ≤ 4096`
+//! matrices the experiments use.
+
+use crate::linalg::Mat;
+
+/// Eigenvalues of a symmetric matrix, ascending. Panics if not square;
+/// symmetry is the caller's contract (only the values are used).
+pub fn sym_eigenvalues(a: &Mat) -> Vec<f64> {
+    let (mut d, mut e, _) = tridiagonalize(a, false);
+    ql_implicit(&mut d, &mut e, None);
+    d.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    d
+}
+
+/// Full eigendecomposition `A = V diag(d) Vᵀ` of a symmetric matrix.
+/// Returns `(d, V)` with eigenvalues ascending and eigenvectors as the
+/// *columns* of `V`, orthonormal.
+pub fn sym_eigen(a: &Mat) -> (Vec<f64>, Mat) {
+    let (mut d, mut e, mut v) = tridiagonalize(a, true);
+    {
+        let vmat = v.as_mut().unwrap();
+        ql_implicit(&mut d, &mut e, Some(vmat));
+    }
+    let mut v = v.unwrap();
+    // sort ascending, permuting columns accordingly
+    let n = d.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let d_sorted: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let v_sorted = v.select_cols(&order);
+    v = v_sorted;
+    (d_sorted, v)
+}
+
+/// Householder reduction to tridiagonal form (tred2).
+/// Returns `(d, e, V)`: diagonal, subdiagonal (e[0] unused), and the
+/// accumulated orthogonal transform if `want_vectors`.
+fn tridiagonalize(a: &Mat, want_vectors: bool) -> (Vec<f64>, Vec<f64>, Option<Mat>) {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "sym_eigen: matrix must be square");
+    // work on a copy, row-major
+    let mut z: Vec<f64> = a.data().to_vec();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        let mut scale = 0.0;
+        if l > 0 {
+            for k in 0..=l {
+                scale += z[i * n + k].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[i * n + l];
+            } else {
+                for k in 0..=l {
+                    z[i * n + k] /= scale;
+                    h += z[i * n + k] * z[i * n + k];
+                }
+                let mut f = z[i * n + l];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[i * n + l] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    if want_vectors {
+                        z[j * n + i] = z[i * n + j] / h;
+                    }
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[j * n + k] * z[i * n + k];
+                    }
+                    for k in j + 1..=l {
+                        g += z[k * n + j] * z[i * n + k];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[i * n + j];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[i * n + j];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        z[j * n + k] -= f * e[k] + g * z[i * n + k];
+                    }
+                }
+            }
+        } else {
+            e[i] = z[i * n + l];
+        }
+        d[i] = h;
+    }
+
+    if want_vectors {
+        d[0] = 0.0;
+    }
+    e[0] = 0.0;
+
+    for i in 0..n {
+        if want_vectors {
+            let l = i; // columns 0..i already transformed
+            if d[i] != 0.0 {
+                for j in 0..l {
+                    let mut g = 0.0;
+                    for k in 0..l {
+                        g += z[i * n + k] * z[k * n + j];
+                    }
+                    for k in 0..l {
+                        z[k * n + j] -= g * z[k * n + i];
+                    }
+                }
+            }
+            d[i] = z[i * n + i];
+            z[i * n + i] = 1.0;
+            for j in 0..l {
+                z[j * n + i] = 0.0;
+                z[i * n + j] = 0.0;
+            }
+        } else {
+            d[i] = z[i * n + i];
+        }
+    }
+
+    let v = if want_vectors { Some(Mat::from_vec(n, n, z)) } else { None };
+    (d, e, v)
+}
+
+/// Implicit-shift QL on a tridiagonal (tql2). `d` = diagonal, `e` =
+/// subdiagonal with `e[0]` unused. If `v` is given, accumulates the
+/// rotations into its columns (so its columns end as eigenvectors).
+fn ql_implicit(d: &mut [f64], e: &mut [f64], mut v: Option<&mut Mat>) {
+    let n = d.len();
+    if n == 0 {
+        return;
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    // Absolute deflation floor: rank-deficient matrices have runs of
+    // (near-)zero diagonal entries for which the classical relative test
+    // `|e[m]| <= eps (|d[m]|+|d[m+1]|)` never fires; anchor it to the
+    // overall matrix scale instead.
+    let scale = d
+        .iter()
+        .map(|x| x.abs())
+        .chain(e.iter().map(|x| x.abs()))
+        .fold(0.0f64, f64::max)
+        .max(f64::MIN_POSITIVE);
+    let floor = f64::EPSILON * scale;
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find small subdiagonal element
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd + floor {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 50, "ql_implicit: too many iterations");
+            // form shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r.abs() } else { -r.abs() });
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                if let Some(vm) = v.as_deref_mut() {
+                    let nn = vm.rows();
+                    for k in 0..nn {
+                        f = vm.get(k, i + 1);
+                        let vki = vm.get(k, i);
+                        vm.set(k, i + 1, s * vki + c * f);
+                        vm.set(k, i, c * vki - s * f);
+                    }
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+
+    fn random_sym(rng: &mut Pcg64, n: usize) -> Mat {
+        let b = Mat::from_fn(n, n, |_, _| rng.next_gaussian());
+        b.add(&b.transpose()).scaled(0.5)
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { (i as f64) - 1.5 } else { 0.0 });
+        let ev = sym_eigenvalues(&a);
+        let expected = [-1.5, -0.5, 0.5, 1.5];
+        for (x, y) in ev.iter().zip(&expected) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1, 3
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let ev = sym_eigenvalues(&a);
+        assert!((ev[0] - 1.0).abs() < 1e-12 && (ev[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_and_det_preserved() {
+        let mut rng = Pcg64::seeded(1);
+        for &n in &[3usize, 8, 25] {
+            let a = random_sym(&mut rng, n);
+            let ev = sym_eigenvalues(&a);
+            let trace: f64 = (0..n).map(|i| a.get(i, i)).sum();
+            let ev_sum: f64 = ev.iter().sum();
+            assert!((trace - ev_sum).abs() < 1e-8 * trace.abs().max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn decomposition_reconstructs() {
+        let mut rng = Pcg64::seeded(2);
+        for &n in &[2usize, 5, 16, 40] {
+            let a = random_sym(&mut rng, n);
+            let (d, v) = sym_eigen(&a);
+            // A V = V diag(d)
+            let av = a.matmul(&v);
+            let vd = Mat::from_fn(n, n, |i, j| v.get(i, j) * d[j]);
+            assert!(av.max_abs_diff(&vd) < 1e-8, "n={n}");
+            // V orthonormal
+            let vtv = v.gram();
+            assert!(vtv.max_abs_diff(&Mat::eye(n)) < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn eigenvalues_sorted_ascending() {
+        let mut rng = Pcg64::seeded(3);
+        let a = random_sym(&mut rng, 30);
+        let ev = sym_eigenvalues(&a);
+        for w in ev.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn psd_gram_has_nonnegative_spectrum() {
+        let mut rng = Pcg64::seeded(4);
+        let b = Mat::from_fn(20, 8, |_, _| rng.next_gaussian());
+        let ev = sym_eigenvalues(&b.gram());
+        assert!(ev.iter().all(|&x| x > -1e-9));
+    }
+
+    #[test]
+    fn values_match_vectors_path() {
+        let mut rng = Pcg64::seeded(5);
+        let a = random_sym(&mut rng, 12);
+        let ev1 = sym_eigenvalues(&a);
+        let (ev2, _) = sym_eigen(&a);
+        for (x, y) in ev1.iter().zip(&ev2) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rank_deficient_projection() {
+        // P = v v^T / ||v||^2 has eigenvalues {1, 0, 0}
+        let v = [1.0, 2.0, 2.0];
+        let n2 = 9.0;
+        let p = Mat::from_fn(3, 3, |i, j| v[i] * v[j] / n2);
+        let ev = sym_eigenvalues(&p);
+        assert!(ev[0].abs() < 1e-12 && ev[1].abs() < 1e-12 && (ev[2] - 1.0).abs() < 1e-12);
+    }
+}

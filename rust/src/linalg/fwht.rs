@@ -1,0 +1,139 @@
+//! Fast Walsh–Hadamard Transform — the O(N log N) encode path of the
+//! fast-transform codes (§4 "Fast transforms", Appendix D).
+//!
+//! Unnormalized Sylvester ordering, matching the L1 Pallas kernel
+//! (`python/compile/kernels/fwht.py`); callers apply `1/sqrt(N)` for the
+//! orthonormal/tight-frame scaling.
+
+/// In-place N-point WHT of a vector. `v.len()` must be a power of two.
+pub fn fwht_inplace(v: &mut [f64]) {
+    let n = v.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    let mut h = 1;
+    while h < n {
+        for block in (0..n).step_by(2 * h) {
+            for i in block..block + h {
+                let (a, b) = (v[i], v[i + h]);
+                v[i] = a + b;
+                v[i + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// WHT applied to every column of a row-major `n × c` matrix buffer.
+///
+/// Works column-block-wise directly on the row-major layout: for each
+/// butterfly stage the partner rows are `i` and `i + h`, and the add/sub
+/// runs vectorized across the full row — this is the CPU analog of the
+/// Pallas kernel's stride-permuted VPU stages and is much faster than
+/// transposing or gathering per-column.
+pub fn fwht_columns(data: &mut [f64], n: usize, c: usize) {
+    assert_eq!(data.len(), n * c, "fwht_columns: buffer mismatch");
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    let mut h = 1;
+    while h < n {
+        for block in (0..n).step_by(2 * h) {
+            for i in block..block + h {
+                let (top, bot) = data.split_at_mut((i + h) * c);
+                let a_row = &mut top[i * c..(i + 1) * c];
+                let b_row = &mut bot[..c];
+                for j in 0..c {
+                    let (a, b) = (a_row[j], b_row[j]);
+                    a_row[j] = a + b;
+                    b_row[j] = a - b;
+                }
+            }
+        }
+        h *= 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+
+    /// Dense Sylvester Hadamard H_n (test oracle).
+    pub fn hadamard_dense(n: usize) -> Mat {
+        assert!(n.is_power_of_two());
+        let mut h = Mat::from_vec(1, 1, vec![1.0]);
+        while h.rows() < n {
+            let m = h.rows();
+            let mut next = Mat::zeros(2 * m, 2 * m);
+            for i in 0..m {
+                for j in 0..m {
+                    let v = h.get(i, j);
+                    next.set(i, j, v);
+                    next.set(i, j + m, v);
+                    next.set(i + m, j, v);
+                    next.set(i + m, j + m, -v);
+                }
+            }
+            h = next;
+        }
+        h
+    }
+
+    #[test]
+    fn matches_dense_hadamard() {
+        let mut rng = Pcg64::seeded(1);
+        for &n in &[1usize, 2, 4, 8, 32, 128] {
+            let mut v: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let expected = hadamard_dense(n).gemv(&v);
+            fwht_inplace(&mut v);
+            for (a, b) in v.iter().zip(&expected) {
+                assert!((a - b).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn involution_property() {
+        let mut rng = Pcg64::seeded(2);
+        let n = 64;
+        let orig: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mut v = orig.clone();
+        fwht_inplace(&mut v);
+        fwht_inplace(&mut v);
+        for (a, b) in v.iter().zip(&orig) {
+            assert!((a - n as f64 * b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let mut rng = Pcg64::seeded(3);
+        let n = 256;
+        let orig: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mut v = orig.clone();
+        fwht_inplace(&mut v);
+        let e_in: f64 = orig.iter().map(|x| x * x).sum();
+        let e_out: f64 = v.iter().map(|x| x * x).sum();
+        assert!((e_out - n as f64 * e_in).abs() < 1e-7 * e_out.max(1.0));
+    }
+
+    #[test]
+    fn columns_variant_matches_per_column() {
+        let mut rng = Pcg64::seeded(4);
+        let (n, c) = (32, 5);
+        let m = Mat::from_fn(n, c, |_, _| rng.next_gaussian());
+        let mut buf = m.data().to_vec();
+        fwht_columns(&mut buf, n, c);
+        for j in 0..c {
+            let mut col = m.col(j);
+            fwht_inplace(&mut col);
+            for i in 0..n {
+                assert!((buf[i * c + j] - col[i]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        fwht_inplace(&mut [1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,630 @@
+//! Row-major dense matrix with cache-blocked, multi-threaded products.
+//!
+//! [`Mat`] is the single dense container used across the system: raw data,
+//! encoded shards, encoding matrices, Gram matrices. The products that sit
+//! on the optimization hot path are:
+//!
+//! * [`Mat::gemv`] / [`Mat::gemv_t`] — the worker gradient
+//!   `Xᵀ(Xw − y)` is one `gemv` + one `gemv_t` per worker per iteration;
+//! * [`Mat::matmul`] — encode-time `S·X` for dense encoders and the
+//!   `S_Aᵀ S_A` Gram matrices for the spectrum figures.
+//!
+//! GEMM uses i-k-j loop order (unit-stride inner loop), 64×256 L1/L2
+//! blocking, and std::thread row-band parallelism above a size threshold.
+
+use std::fmt;
+
+/// Dense row-major `rows × cols` matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+/// Below this many multiply-adds, threading overhead dominates — stay serial.
+const PAR_FLOP_THRESHOLD: usize = 1 << 20;
+
+fn n_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl Mat {
+    // ---------------------------------------------------------- constructors
+
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// From a row-major buffer (length must be `rows * cols`).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_vec: buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// From a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// A column vector from a slice.
+    pub fn col_vec(v: &[f64]) -> Self {
+        Mat { rows: v.len(), cols: 1, data: v.to_vec() }
+    }
+
+    // ---------------------------------------------------------------- access
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Row `i` as a mutable slice.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Full row-major buffer.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the row-major buffer.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// f32 copy of the buffer (for PJRT literals).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    // ------------------------------------------------------------- reshaping
+
+    /// New matrix from a subset of rows (in the given order).
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            assert!(i < self.rows, "select_rows: index {i} out of range");
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// New matrix from a subset of columns (in the given order).
+    pub fn select_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (c, &j) in idx.iter().enumerate() {
+                assert!(j < self.cols, "select_cols: index {j} out of range");
+                dst[c] = src[j];
+            }
+        }
+        out
+    }
+
+    /// Contiguous row band `[lo, hi)` as a new matrix.
+    pub fn row_band(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows, "row_band: bad range {lo}..{hi}");
+        Mat {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// Stack matrices vertically.
+    pub fn vstack(blocks: &[&Mat]) -> Mat {
+        assert!(!blocks.is_empty(), "vstack: empty input");
+        let cols = blocks[0].cols;
+        assert!(blocks.iter().all(|b| b.cols == cols), "vstack: column mismatch");
+        let rows = blocks.iter().map(|b| b.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for b in blocks {
+            data.extend_from_slice(&b.data);
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Zero-pad to `new_rows` rows (exact no-op for gradient/objective).
+    pub fn pad_rows(&self, new_rows: usize) -> Mat {
+        assert!(new_rows >= self.rows, "pad_rows: cannot shrink");
+        let mut data = self.data.clone();
+        data.resize(new_rows * self.cols, 0.0);
+        Mat { rows: new_rows, cols: self.cols, data }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // simple blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    // ------------------------------------------------------------- elementwise
+
+    /// `self + other`.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols), "add: shape mismatch");
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols), "sub: shape mismatch");
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `alpha * self`.
+    pub fn scaled(&self, alpha: f64) -> Mat {
+        let data = self.data.iter().map(|a| alpha * a).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place scale.
+    pub fn scale_inplace(&mut self, alpha: f64) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    // --------------------------------------------------------------- products
+
+    /// Matrix–vector product `self * x`.
+    pub fn gemv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "gemv: dimension mismatch");
+        let mut y = vec![0.0; self.rows];
+        self.gemv_into(x, &mut y);
+        y
+    }
+
+    /// `y = self * x` into a caller buffer (no allocation on the hot path).
+    pub fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "gemv: dimension mismatch");
+        assert_eq!(y.len(), self.rows, "gemv: output mismatch");
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = super::dot(self.row(i), x);
+        }
+    }
+
+    /// Transposed matrix–vector product `selfᵀ * x`.
+    pub fn gemv_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "gemv_t: dimension mismatch");
+        let mut y = vec![0.0; self.cols];
+        self.gemv_t_into(x, &mut y);
+        y
+    }
+
+    /// `y = selfᵀ x` into a caller buffer. Row-major friendly: axpy per row.
+    pub fn gemv_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "gemv_t: dimension mismatch");
+        assert_eq!(y.len(), self.cols, "gemv_t: output mismatch");
+        y.fill(0.0);
+        for i in 0..self.rows {
+            super::axpy(x[i], self.row(i), y);
+        }
+    }
+
+    /// Fused worker gradient: `g = selfᵀ(self·w − y)`, returning
+    /// `(g, ||self·w − y||²)`. This is the Rust mirror of the L1 Pallas
+    /// kernel (`python/compile/kernels/coded_grad.py`): one pass over the
+    /// rows, residual never fully materialized.
+    ///
+    /// Rows are processed in pairs (§Perf iteration 2): the two dot
+    /// products share one pass over `w` and the two rank-1 updates share
+    /// one pass over `g`, cutting hot-loop memory traffic from `3p` to
+    /// `2p` doubles per row.
+    pub fn fused_grad(&self, w: &[f64], y: &[f64], g: &mut [f64], resid_buf: &mut [f64]) -> f64 {
+        assert_eq!(w.len(), self.cols, "fused_grad: w mismatch");
+        assert_eq!(y.len(), self.rows, "fused_grad: y mismatch");
+        assert_eq!(g.len(), self.cols, "fused_grad: g mismatch");
+        assert_eq!(resid_buf.len(), self.rows, "fused_grad: buffer mismatch");
+        g.fill(0.0);
+        let mut f = 0.0;
+        let mut i = 0;
+        while i + 1 < self.rows {
+            let row0 = self.row(i);
+            let row1 = &self.data[(i + 1) * self.cols..(i + 2) * self.cols];
+            // paired dot: one pass over w
+            let (mut d0a, mut d0b, mut d1a, mut d1b) = (0.0, 0.0, 0.0, 0.0);
+            let chunks = self.cols / 2;
+            for c in 0..chunks {
+                let j = 2 * c;
+                d0a += row0[j] * w[j];
+                d0b += row0[j + 1] * w[j + 1];
+                d1a += row1[j] * w[j];
+                d1b += row1[j + 1] * w[j + 1];
+            }
+            let mut r0 = d0a + d0b;
+            let mut r1 = d1a + d1b;
+            if self.cols % 2 == 1 {
+                let j = self.cols - 1;
+                r0 += row0[j] * w[j];
+                r1 += row1[j] * w[j];
+            }
+            r0 -= y[i];
+            r1 -= y[i + 1];
+            resid_buf[i] = r0;
+            resid_buf[i + 1] = r1;
+            f += r0 * r0 + r1 * r1;
+            // paired rank-1 update: one pass over g
+            for ((gj, &a), &b) in g.iter_mut().zip(row0).zip(row1) {
+                *gj += r0 * a + r1 * b;
+            }
+            i += 2;
+        }
+        if i < self.rows {
+            let row = self.row(i);
+            let r = super::dot(row, w) - y[i];
+            resid_buf[i] = r;
+            f += r * r;
+            super::axpy(r, row, g);
+        }
+        f
+    }
+
+    /// Matrix product `self * other`, blocked and threaded.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul: inner dimension mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        let flops = m * k * n;
+        let threads = if flops >= PAR_FLOP_THRESHOLD { n_threads().min(m) } else { 1 };
+        if threads <= 1 {
+            gemm_block(&self.data, &other.data, &mut out.data, 0, m, k, n);
+        } else {
+            let band = m.div_ceil(threads);
+            let a = &self.data;
+            let b = &other.data;
+            // split the output into disjoint row bands, one thread each
+            let chunks: Vec<(usize, &mut [f64])> = {
+                let mut v = Vec::new();
+                let mut rest: &mut [f64] = &mut out.data;
+                let mut lo = 0;
+                while lo < m {
+                    let hi = (lo + band).min(m);
+                    let (head, tail) = rest.split_at_mut((hi - lo) * n);
+                    v.push((lo, head));
+                    rest = tail;
+                    lo = hi;
+                }
+                v
+            };
+            std::thread::scope(|s| {
+                for (lo, chunk) in chunks {
+                    s.spawn(move || {
+                        let rows = chunk.len() / n;
+                        gemm_band(a, b, chunk, lo, rows, k, n);
+                    });
+                }
+            });
+        }
+        out
+    }
+
+    /// Gram matrix `selfᵀ * self` (symmetric; computed via matmul for now).
+    pub fn gram(&self) -> Mat {
+        self.transpose().matmul(self)
+    }
+
+    /// Largest eigenvalue of `selfᵀ self` by power iteration (this is
+    /// `M = λ_max(XᵀX)` in the step-size rule of Theorem 1).
+    pub fn spectral_bound(&self, iters: usize, seed: u64) -> f64 {
+        let mut rng = crate::rng::Pcg64::seeded(seed);
+        let mut v: Vec<f64> = (0..self.cols).map(|_| rng.next_gaussian()).collect();
+        let norm = super::norm2(&v);
+        super::scale(1.0 / norm, &mut v);
+        let mut lambda = 0.0;
+        let mut xv = vec![0.0; self.rows];
+        let mut xtxv = vec![0.0; self.cols];
+        for _ in 0..iters {
+            self.gemv_into(&v, &mut xv);
+            self.gemv_t_into(&xv, &mut xtxv);
+            lambda = super::dot(&v, &xtxv);
+            let n = super::norm2(&xtxv);
+            if n == 0.0 {
+                return 0.0;
+            }
+            for (vi, xi) in v.iter_mut().zip(&xtxv) {
+                *vi = xi / n;
+            }
+        }
+        lambda
+    }
+}
+
+/// Serial GEMM over a row band `[row_lo, row_lo + rows)` of the output.
+/// i-k-j order: unit stride over both B and C rows; 64×256 cache blocking;
+/// k unrolled by 2 so each pass over the C row folds two B rows
+/// (§Perf iteration 3 — halves C-row traffic).
+fn gemm_band(a: &[f64], b: &[f64], c_band: &mut [f64], row_lo: usize, rows: usize, k: usize, n: usize) {
+    const BK: usize = 64;
+    const BJ: usize = 256;
+    for kb in (0..k).step_by(BK) {
+        let kmax = (kb + BK).min(k);
+        for jb in (0..n).step_by(BJ) {
+            let jmax = (jb + BJ).min(n);
+            for i in 0..rows {
+                let a_row = &a[(row_lo + i) * k..(row_lo + i + 1) * k];
+                let c_row = &mut c_band[i * n..(i + 1) * n];
+                let mut kk = kb;
+                while kk + 1 < kmax {
+                    let aik0 = a_row[kk];
+                    let aik1 = a_row[kk + 1];
+                    if aik0 == 0.0 && aik1 == 0.0 {
+                        kk += 2;
+                        continue; // encode matrices are often sparse-ish
+                    }
+                    let b0 = &b[kk * n..kk * n + n];
+                    let b1 = &b[(kk + 1) * n..(kk + 1) * n + n];
+                    for j in jb..jmax {
+                        c_row[j] += aik0 * b0[j] + aik1 * b1[j];
+                    }
+                    kk += 2;
+                }
+                if kk < kmax {
+                    let aik = a_row[kk];
+                    if aik != 0.0 {
+                        let b_row = &b[kk * n..(kk + 1) * n];
+                        for j in jb..jmax {
+                            c_row[j] += aik * b_row[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn gemm_block(a: &[f64], b: &[f64], c: &mut [f64], row_lo: usize, rows: usize, k: usize, n: usize) {
+    gemm_band(a, b, c, row_lo, rows, k, n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_mat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.next_gaussian())
+    }
+
+    fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for kk in 0..a.cols() {
+                    s += a.get(i, kk) * b.get(kk, j);
+                }
+                out.set(i, j, s);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive_small() {
+        let mut rng = Pcg64::seeded(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 9, 13), (64, 64, 64)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let c = a.matmul(&b);
+            assert!(c.max_abs_diff(&matmul_naive(&a, &b)) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive_threaded() {
+        let mut rng = Pcg64::seeded(2);
+        // large enough to cross PAR_FLOP_THRESHOLD
+        let a = random_mat(&mut rng, 150, 120);
+        let b = random_mat(&mut rng, 120, 130);
+        let c = a.matmul(&b);
+        assert!(c.max_abs_diff(&matmul_naive(&a, &b)) < 1e-9);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::seeded(3);
+        let a = random_mat(&mut rng, 20, 20);
+        assert!(a.matmul(&Mat::eye(20)).max_abs_diff(&a) < 1e-14);
+        assert!(Mat::eye(20).matmul(&a).max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn gemv_consistent_with_matmul() {
+        let mut rng = Pcg64::seeded(4);
+        let a = random_mat(&mut rng, 12, 7);
+        let x: Vec<f64> = (0..7).map(|_| rng.next_gaussian()).collect();
+        let y = a.gemv(&x);
+        let xm = Mat::col_vec(&x);
+        let ym = a.matmul(&xm);
+        for i in 0..12 {
+            assert!((y[i] - ym.get(i, 0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gemv_t_consistent_with_transpose() {
+        let mut rng = Pcg64::seeded(5);
+        let a = random_mat(&mut rng, 9, 14);
+        let x: Vec<f64> = (0..9).map(|_| rng.next_gaussian()).collect();
+        let y1 = a.gemv_t(&x);
+        let y2 = a.transpose().gemv(&x);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fused_grad_matches_composition() {
+        let mut rng = Pcg64::seeded(6);
+        let a = random_mat(&mut rng, 30, 8);
+        let w: Vec<f64> = (0..8).map(|_| rng.next_gaussian()).collect();
+        let y: Vec<f64> = (0..30).map(|_| rng.next_gaussian()).collect();
+        let mut g = vec![0.0; 8];
+        let mut buf = vec![0.0; 30];
+        let f = a.fused_grad(&w, &y, &mut g, &mut buf);
+        let resid = crate::linalg::sub(&a.gemv(&w), &y);
+        let g_ref = a.gemv_t(&resid);
+        let f_ref = crate::linalg::dot(&resid, &resid);
+        assert!((f - f_ref).abs() < 1e-10);
+        for (u, v) in g.iter().zip(&g_ref) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(7);
+        let a = random_mat(&mut rng, 23, 41);
+        assert!(a.transpose().transpose().max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn select_rows_and_cols() {
+        let a = Mat::from_fn(4, 3, |i, j| (i * 10 + j) as f64);
+        let r = a.select_rows(&[2, 0]);
+        assert_eq!(r.row(0), &[20.0, 21.0, 22.0]);
+        assert_eq!(r.row(1), &[0.0, 1.0, 2.0]);
+        let c = a.select_cols(&[1]);
+        assert_eq!(c.col(0), vec![1.0, 11.0, 21.0, 31.0]);
+    }
+
+    #[test]
+    fn vstack_and_row_band_roundtrip() {
+        let a = Mat::from_fn(3, 2, |i, j| (i + j) as f64);
+        let b = Mat::from_fn(2, 2, |i, j| (i * j) as f64);
+        let s = Mat::vstack(&[&a, &b]);
+        assert_eq!(s.rows(), 5);
+        assert!(s.row_band(0, 3).max_abs_diff(&a) < 1e-15);
+        assert!(s.row_band(3, 5).max_abs_diff(&b) < 1e-15);
+    }
+
+    #[test]
+    fn pad_rows_preserves_gradient() {
+        let mut rng = Pcg64::seeded(8);
+        let a = random_mat(&mut rng, 10, 4);
+        let w: Vec<f64> = (0..4).map(|_| rng.next_gaussian()).collect();
+        let y: Vec<f64> = (0..10).map(|_| rng.next_gaussian()).collect();
+        let ap = a.pad_rows(16);
+        let mut yp = y.clone();
+        yp.resize(16, 0.0);
+        let mut g1 = vec![0.0; 4];
+        let mut g2 = vec![0.0; 4];
+        let mut b1 = vec![0.0; 10];
+        let mut b2 = vec![0.0; 16];
+        let f1 = a.fused_grad(&w, &y, &mut g1, &mut b1);
+        let f2 = ap.fused_grad(&w, &yp, &mut g2, &mut b2);
+        assert!((f1 - f2).abs() < 1e-12);
+        for (u, v) in g1.iter().zip(&g2) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spectral_bound_on_known_matrix() {
+        // X = diag(1, 2, 3) => lambda_max(X^T X) = 9
+        let x = Mat::from_fn(3, 3, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
+        let m = x.spectral_bound(200, 0);
+        assert!((m - 9.0).abs() < 1e-6, "got {m}");
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Pcg64::seeded(9);
+        let a = random_mat(&mut rng, 15, 6);
+        let g = a.gram();
+        for i in 0..6 {
+            assert!(g.get(i, i) >= 0.0);
+            for j in 0..6 {
+                assert!((g.get(i, j) - g.get(j, i)).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimension mismatch")]
+    fn matmul_shape_mismatch_panics() {
+        Mat::zeros(2, 3).matmul(&Mat::zeros(2, 3));
+    }
+}

@@ -1,0 +1,201 @@
+//! Run instrumentation: per-iteration traces, summary statistics, CSV
+//! emission for the figure-regeneration benches.
+
+use std::fmt::Write as _;
+
+/// One optimizer iteration's record.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// True objective f(w) on the *raw* problem (what the paper plots).
+    pub f_true: f64,
+    /// Leader-side encoded objective estimate.
+    pub f_est: f64,
+    /// Norm of the aggregated gradient estimate.
+    pub grad_norm: f64,
+    /// Step size taken.
+    pub alpha: f64,
+    /// |A_t| actually admitted.
+    pub responders: usize,
+    /// Simulated cluster time at the *end* of this iteration (ms).
+    pub sim_ms: f64,
+}
+
+/// Full run trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub records: Vec<IterRecord>,
+}
+
+impl Trace {
+    pub fn push(&mut self, rec: IterRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn last_objective(&self) -> f64 {
+        self.records.last().map(|r| r.f_true).unwrap_or(f64::NAN)
+    }
+
+    pub fn best_objective(&self) -> f64 {
+        self.records.iter().map(|r| r.f_true).fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn total_sim_ms(&self) -> f64 {
+        self.records.last().map(|r| r.sim_ms).unwrap_or(0.0)
+    }
+
+    /// Objective-vs-time series (the Figure 4-left axes).
+    pub fn objective_series(&self) -> Vec<(f64, f64)> {
+        self.records.iter().map(|r| (r.sim_ms, r.f_true)).collect()
+    }
+
+    /// True iff the objective sequence is (numerically) diverging —
+    /// used to report the uncoded scheme's failure mode in Fig. 4.
+    pub fn diverged(&self) -> bool {
+        match (self.records.first(), self.records.last()) {
+            (Some(a), Some(b)) => !b.f_true.is_finite() || b.f_true > 10.0 * a.f_true.max(1e-12),
+            _ => false,
+        }
+    }
+
+    /// CSV with header; columns match [`IterRecord`].
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("iter,f_true,f_est,grad_norm,alpha,responders,sim_ms\n");
+        for r in &self.records {
+            let _ = writeln!(
+                s,
+                "{},{:.10e},{:.10e},{:.6e},{:.6e},{},{:.4}",
+                r.iter, r.f_true, r.f_est, r.grad_norm, r.alpha, r.responders, r.sim_ms
+            );
+        }
+        s
+    }
+}
+
+/// Streaming mean/min/max/std accumulator for bench summaries.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Wall-clock stopwatch (bench harness helper).
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, f: f64, t: f64) -> IterRecord {
+        IterRecord {
+            iter,
+            f_true: f,
+            f_est: f,
+            grad_norm: 0.0,
+            alpha: 0.1,
+            responders: 4,
+            sim_ms: t,
+        }
+    }
+
+    #[test]
+    fn trace_accessors() {
+        let mut t = Trace::default();
+        t.push(rec(0, 10.0, 5.0));
+        t.push(rec(1, 3.0, 11.0));
+        t.push(rec(2, 4.0, 18.0));
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.last_objective(), 4.0);
+        assert_eq!(t.best_objective(), 3.0);
+        assert_eq!(t.total_sim_ms(), 18.0);
+        assert!(!t.diverged());
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("iter,"));
+    }
+
+    #[test]
+    fn divergence_detection() {
+        let mut t = Trace::default();
+        t.push(rec(0, 1.0, 1.0));
+        t.push(rec(1, 1e6, 2.0));
+        assert!(t.diverged());
+        let mut t2 = Trace::default();
+        t2.push(rec(0, 1.0, 1.0));
+        t2.push(rec(1, f64::NAN, 2.0));
+        assert!(t2.diverged());
+    }
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+}

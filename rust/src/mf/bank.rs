@@ -1,0 +1,96 @@
+//! Encoder bank: one pre-built encoding matrix per padded-size bucket.
+//!
+//! The paper (§5): "To reduce overhead, we create a bank of encoding
+//! matrices {S_n} … and then given a problem instance, subsample the
+//! columns of the appropriate matrix S_n to match the dimensions." We do
+//! the equivalent with power-of-two row buckets: a subproblem with `r`
+//! rows is zero-padded to `bucket = 2^⌈log₂ r⌉` (exact for gradients) and
+//! encoded with the cached `S_bucket`. ETF construction cost (pivoted
+//! Cholesky of the signature Gram) is thus paid once per bucket, not per
+//! subproblem — this is what makes coded MF's encode overhead amortizable
+//! (Fig. 6 runtimes include it).
+
+use crate::encoding::{Encoder, EncoderKind};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Per-bucket encoder cache for one (kind, β, seed) family.
+pub struct EncoderBank {
+    kind: EncoderKind,
+    beta: f64,
+    seed: u64,
+    min_bucket: usize,
+    cache: HashMap<usize, Box<dyn Encoder>>,
+}
+
+impl EncoderBank {
+    pub fn new(kind: EncoderKind, beta: f64, seed: u64) -> Self {
+        EncoderBank { kind, beta, seed, min_bucket: 8, cache: HashMap::new() }
+    }
+
+    pub fn kind(&self) -> EncoderKind {
+        self.kind
+    }
+
+    /// Bucket size a problem with `rows` raw rows pads to.
+    pub fn bucket_for(&self, rows: usize) -> usize {
+        rows.next_power_of_two().max(self.min_bucket)
+    }
+
+    /// The encoder for `rows` raw rows (builds + caches the bucket's S).
+    pub fn get(&mut self, rows: usize) -> Result<&dyn Encoder> {
+        let bucket = self.bucket_for(rows);
+        if !self.cache.contains_key(&bucket) {
+            let enc = self.kind.build(bucket, self.beta, self.seed ^ bucket as u64)?;
+            self.cache.insert(bucket, enc);
+        }
+        Ok(self.cache.get(&bucket).unwrap().as_ref())
+    }
+
+    /// Number of distinct buckets built so far (amortization diagnostic).
+    pub fn built(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_rounding() {
+        let bank = EncoderBank::new(EncoderKind::Gaussian, 2.0, 0);
+        assert_eq!(bank.bucket_for(3), 8);
+        assert_eq!(bank.bucket_for(8), 8);
+        assert_eq!(bank.bucket_for(9), 16);
+        assert_eq!(bank.bucket_for(600), 1024);
+    }
+
+    #[test]
+    fn encoders_are_cached_per_bucket() {
+        let mut bank = EncoderBank::new(EncoderKind::Hadamard, 2.0, 1);
+        let _ = bank.get(10).unwrap();
+        let _ = bank.get(12).unwrap(); // same bucket (16)
+        let _ = bank.get(20).unwrap(); // bucket 32
+        assert_eq!(bank.built(), 2);
+    }
+
+    #[test]
+    fn banked_encoder_matches_requested_bucket() {
+        let mut bank = EncoderBank::new(EncoderKind::Gaussian, 2.0, 2);
+        let enc = bank.get(100).unwrap();
+        assert_eq!(enc.rows_in(), 128);
+        assert!(enc.beta() >= 2.0);
+    }
+
+    #[test]
+    fn distinct_buckets_have_distinct_seeds() {
+        let mut bank = EncoderBank::new(EncoderKind::Gaussian, 2.0, 3);
+        let s8 = bank.get(8).unwrap().materialize();
+        let s16 = bank.get(16).unwrap().materialize();
+        // different sizes, trivially different; check the 8-bucket isn't a
+        // prefix of the 16-bucket (independent draws)
+        let sub = s16.row_band(0, 16).select_cols(&(0..8).collect::<Vec<_>>());
+        assert!(s8.max_abs_diff(&sub) > 1e-6);
+    }
+}

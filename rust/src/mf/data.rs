@@ -1,0 +1,300 @@
+//! Ratings data: sparse store, train/test split, and the synthetic
+//! MovieLens-1M-compatible generator.
+//!
+//! The paper evaluates on MovieLens-1M (6040 users × 3952 movies, ~1M
+//! ratings, 1–5 stars). That dataset isn't available in this offline
+//! environment, so we generate a statistically compatible substitute
+//! (DESIGN.md §3): a planted low-rank + bias model
+//! `R_ij = clamp(round(μ + u_i + v_j + x_iᵀy_j + noise), 1, 5)` observed
+//! on a power-law sampled (user, movie) pattern that matches ML-1M's
+//! heavy-tailed per-user/per-movie activity and global mean ≈ 3.58. The
+//! experiment measures *relative robustness of encodings* inside the
+//! alternating-ridge solver, which depends on the subproblem structure
+//! (row counts, sparsity pattern, conditioning) — all preserved.
+
+use crate::rng::Pcg64;
+
+/// One observed rating.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rating {
+    pub user: u32,
+    pub item: u32,
+    pub value: f32,
+}
+
+/// Sparse ratings with per-user and per-item adjacency.
+#[derive(Clone, Debug, Default)]
+pub struct Ratings {
+    pub n_users: usize,
+    pub n_items: usize,
+    pub entries: Vec<Rating>,
+    /// entry indices by user / by item (built by `reindex`)
+    by_user: Vec<Vec<u32>>,
+    by_item: Vec<Vec<u32>>,
+}
+
+impl Ratings {
+    pub fn new(n_users: usize, n_items: usize, entries: Vec<Rating>) -> Self {
+        let mut r = Ratings { n_users, n_items, entries, by_user: vec![], by_item: vec![] };
+        r.reindex();
+        r
+    }
+
+    fn reindex(&mut self) {
+        self.by_user = vec![Vec::new(); self.n_users];
+        self.by_item = vec![Vec::new(); self.n_items];
+        for (idx, e) in self.entries.iter().enumerate() {
+            self.by_user[e.user as usize].push(idx as u32);
+            self.by_item[e.item as usize].push(idx as u32);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entry indices rated by `user`.
+    pub fn user_entries(&self, user: usize) -> &[u32] {
+        &self.by_user[user]
+    }
+
+    /// Entry indices rating `item`.
+    pub fn item_entries(&self, item: usize) -> &[u32] {
+        &self.by_item[item]
+    }
+
+    /// Global mean rating.
+    pub fn mean(&self) -> f64 {
+        if self.entries.is_empty() {
+            return 0.0;
+        }
+        self.entries.iter().map(|e| e.value as f64).sum::<f64>() / self.len() as f64
+    }
+
+    /// Random split into (train, test) with `test_frac` withheld (the
+    /// paper's 80/20 protocol).
+    pub fn split(&self, test_frac: f64, seed: u64) -> (Ratings, Ratings) {
+        let mut rng = Pcg64::new(seed, 0x5b11);
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        let n_test = (self.len() as f64 * test_frac).round() as usize;
+        let test_set: std::collections::HashSet<usize> =
+            idx[..n_test].iter().copied().collect();
+        let mut train = Vec::with_capacity(self.len() - n_test);
+        let mut test = Vec::with_capacity(n_test);
+        for (i, e) in self.entries.iter().enumerate() {
+            if test_set.contains(&i) {
+                test.push(*e);
+            } else {
+                train.push(*e);
+            }
+        }
+        (
+            Ratings::new(self.n_users, self.n_items, train),
+            Ratings::new(self.n_users, self.n_items, test),
+        )
+    }
+}
+
+/// Synthetic-ML1M generator parameters.
+#[derive(Clone, Debug)]
+pub struct SyntheticConfig {
+    pub n_users: usize,
+    pub n_items: usize,
+    pub n_ratings: usize,
+    /// Planted latent dimension.
+    pub rank: usize,
+    /// Global mean μ (ML-1M ≈ 3.58).
+    pub mu: f64,
+    /// Std of planted user/item biases.
+    pub bias_std: f64,
+    /// Std of latent factors (per coordinate).
+    pub factor_std: f64,
+    /// Observation-noise std before rounding.
+    pub noise_std: f64,
+    /// Power-law exponent for user/item popularity (≈0.8 matches ML-1M's
+    /// activity skew).
+    pub popularity_alpha: f64,
+    pub seed: u64,
+}
+
+impl SyntheticConfig {
+    /// Full ML-1M-scale config.
+    pub fn ml1m(seed: u64) -> Self {
+        SyntheticConfig {
+            n_users: 6040,
+            n_items: 3952,
+            n_ratings: 1_000_209,
+            rank: 8,
+            mu: 3.58,
+            bias_std: 0.35,
+            factor_std: 0.25,
+            noise_std: 0.6,
+            popularity_alpha: 0.8,
+            seed,
+        }
+    }
+
+    /// Scaled-down config for tests/benches (same shape, ~1/50 size).
+    pub fn small(seed: u64) -> Self {
+        SyntheticConfig {
+            n_users: 240,
+            n_items: 160,
+            n_ratings: 8_000,
+            rank: 6,
+            mu: 3.58,
+            bias_std: 0.35,
+            factor_std: 0.25,
+            noise_std: 0.6,
+            popularity_alpha: 0.8,
+            seed,
+        }
+    }
+}
+
+/// Zipf-ish popularity sampler: index ∝ 1/(rank+1)^alpha via inverse-CDF
+/// over precomputed cumulative weights.
+struct Popularity {
+    cdf: Vec<f64>,
+}
+
+impl Popularity {
+    fn new(n: usize, alpha: f64, rng: &mut Pcg64) -> Self {
+        // random permutation so "popular" ids are scattered, as in ML-1M
+        let perm = rng.permutation(n);
+        let mut w = vec![0.0; n];
+        for (rank, &id) in perm.iter().enumerate() {
+            w[id] = 1.0 / ((rank + 1) as f64).powf(alpha);
+        }
+        let total: f64 = w.iter().sum();
+        let mut acc = 0.0;
+        let cdf = w
+            .iter()
+            .map(|x| {
+                acc += x / total;
+                acc
+            })
+            .collect();
+        Popularity { cdf }
+    }
+
+    fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        match self.cdf.binary_search_by(|probe| probe.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+/// Generate the synthetic ratings dataset.
+pub fn synthetic_movielens(cfg: &SyntheticConfig) -> Ratings {
+    let mut rng = Pcg64::new(cfg.seed, 0x3117);
+    // planted model
+    let u_bias: Vec<f64> = (0..cfg.n_users).map(|_| cfg.bias_std * rng.next_gaussian()).collect();
+    let v_bias: Vec<f64> = (0..cfg.n_items).map(|_| cfg.bias_std * rng.next_gaussian()).collect();
+    let x: Vec<f64> = (0..cfg.n_users * cfg.rank)
+        .map(|_| cfg.factor_std * rng.next_gaussian())
+        .collect();
+    let y: Vec<f64> = (0..cfg.n_items * cfg.rank)
+        .map(|_| cfg.factor_std * rng.next_gaussian())
+        .collect();
+    let user_pop = Popularity::new(cfg.n_users, cfg.popularity_alpha, &mut rng);
+    let item_pop = Popularity::new(cfg.n_items, cfg.popularity_alpha, &mut rng);
+
+    let mut seen = std::collections::HashSet::with_capacity(cfg.n_ratings * 2);
+    let mut entries = Vec::with_capacity(cfg.n_ratings);
+    let mut attempts = 0usize;
+    while entries.len() < cfg.n_ratings && attempts < cfg.n_ratings * 30 {
+        attempts += 1;
+        let ui = user_pop.sample(&mut rng);
+        let vi = item_pop.sample(&mut rng);
+        let key = (ui as u64) << 32 | vi as u64;
+        if !seen.insert(key) {
+            continue;
+        }
+        let dot: f64 = (0..cfg.rank)
+            .map(|r| x[ui * cfg.rank + r] * y[vi * cfg.rank + r])
+            .sum();
+        let raw = cfg.mu + u_bias[ui] + v_bias[vi] + dot + cfg.noise_std * rng.next_gaussian();
+        let val = raw.round().clamp(1.0, 5.0) as f32;
+        entries.push(Rating { user: ui as u32, item: vi as u32, value: val });
+    }
+    Ratings::new(cfg.n_users, cfg.n_items, entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_hits_target_size_and_range() {
+        let r = synthetic_movielens(&SyntheticConfig::small(1));
+        assert!(r.len() >= 7_500, "got {} ratings", r.len());
+        for e in &r.entries {
+            assert!((1.0..=5.0).contains(&e.value));
+            assert!((e.user as usize) < r.n_users);
+            assert!((e.item as usize) < r.n_items);
+        }
+    }
+
+    #[test]
+    fn global_mean_is_ml1m_like() {
+        let r = synthetic_movielens(&SyntheticConfig::small(2));
+        let m = r.mean();
+        assert!((3.2..=3.9).contains(&m), "mean {m}");
+    }
+
+    #[test]
+    fn popularity_is_heavy_tailed() {
+        let r = synthetic_movielens(&SyntheticConfig::small(3));
+        let mut counts: Vec<usize> = (0..r.n_users).map(|u| r.user_entries(u).len()).collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top_decile: usize = counts[..r.n_users / 10].iter().sum();
+        let total: usize = counts.iter().sum();
+        assert!(
+            top_decile as f64 > 0.25 * total as f64,
+            "top 10% of users hold {} of {} ratings — not skewed",
+            top_decile,
+            total
+        );
+    }
+
+    #[test]
+    fn split_is_disjoint_and_complete() {
+        let r = synthetic_movielens(&SyntheticConfig::small(4));
+        let (train, test) = r.split(0.2, 7);
+        assert_eq!(train.len() + test.len(), r.len());
+        assert!((test.len() as f64 / r.len() as f64 - 0.2).abs() < 0.01);
+        // adjacency rebuilt correctly
+        let total_by_user: usize = (0..train.n_users).map(|u| train.user_entries(u).len()).sum();
+        assert_eq!(total_by_user, train.len());
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        let r = synthetic_movielens(&SyntheticConfig::small(5));
+        let (a, _) = r.split(0.2, 9);
+        let (b, _) = r.split(0.2, 9);
+        assert_eq!(a.entries, b.entries);
+    }
+
+    #[test]
+    fn adjacency_indexes_match_entries() {
+        let r = synthetic_movielens(&SyntheticConfig::small(6));
+        for u in 0..r.n_users {
+            for &ei in r.user_entries(u) {
+                assert_eq!(r.entries[ei as usize].user as usize, u);
+            }
+        }
+        for v in 0..r.n_items.min(50) {
+            for &ei in r.item_entries(v) {
+                assert_eq!(r.entries[ei as usize].item as usize, v);
+            }
+        }
+    }
+}

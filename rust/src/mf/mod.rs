@@ -1,0 +1,16 @@
+//! Matrix-factorization application (§5, MovieLens experiment).
+//!
+//! Alternating minimization over the biased MF objective (eq. (8)):
+//! user/item ridge subproblems solved either locally (Cholesky, small
+//! instances — the paper uses `numpy.linalg.solve` under `n < 500`) or
+//! **distributedly with coded L-BFGS** over the straggler cluster. The
+//! encoding matrices come from a per-size bank ([`bank::EncoderBank`]),
+//! mirroring the paper's pre-built `{S_n}` bank.
+
+pub mod bank;
+pub mod data;
+pub mod solver;
+
+pub use bank::EncoderBank;
+pub use data::{synthetic_movielens, Rating, Ratings, SyntheticConfig};
+pub use solver::{train, MfConfig, MfModel, MfOutput};

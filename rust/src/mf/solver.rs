@@ -1,0 +1,428 @@
+//! Alternating-minimization MF trainer with the coded distributed ridge
+//! subsolver (§5 of the paper, eq. (8)).
+//!
+//! Model: `R_ij ≈ μ + u_i + v_j + x_iᵀ y_j`; the paper fixes μ (=3),
+//! embedding p (=15), λ (=10). Each half-step solves, per user i (resp.
+//! item j), the ridge problem over that row's observed ratings with
+//! design rows `[y_jᵀ, 1]` and targets `R_ij − v_j − μ`. Instances with
+//! at least `dist_threshold` rows go to the straggler cluster via coded
+//! L-BFGS (first-k gather, exp-delay injection — exactly the paper's
+//! simulation); smaller ones are solved locally by Cholesky. Simulated
+//! cluster time accumulates into [`MfOutput::sim_ms`], which is what the
+//! Fig. 6 runtime bench reports.
+
+use super::bank::EncoderBank;
+use super::data::Ratings;
+use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
+use crate::encoding::EncoderKind;
+use crate::linalg::{self, Mat};
+use crate::optim::{CodedLbfgs, LbfgsConfig, Optimizer};
+use crate::problem::{EncodedProblem, QuadProblem};
+use crate::runtime::NativeEngine;
+use anyhow::{ensure, Result};
+
+/// MF training configuration (defaults = the paper's §5 settings).
+#[derive(Clone, Debug)]
+pub struct MfConfig {
+    /// Embedding dimension p (paper: 15; the solve dimension is p+1).
+    pub embed: usize,
+    /// Regularizer λ on the eq.-(8) scale (paper: 10).
+    pub lambda: f64,
+    /// Fixed global bias μ (paper: 3).
+    pub mu: f64,
+    /// Alternating epochs (paper: 5).
+    pub epochs: usize,
+    /// Cluster size m and first-k wait.
+    pub m: usize,
+    pub k: usize,
+    /// Encoding scheme + redundancy for the distributed solves.
+    pub encoder: EncoderKind,
+    pub beta: f64,
+    /// Subproblems with ≥ this many rows are solved distributedly
+    /// (paper: 500 at ML-1M scale).
+    pub dist_threshold: usize,
+    /// L-BFGS iterations per distributed subproblem.
+    pub lbfgs_iters: usize,
+    /// Straggler model for the cluster (paper: exp(10ms)).
+    pub delay: DelayModel,
+    /// Virtual-clock cost constant (ms per MFLOP).
+    pub ms_per_mflop: f64,
+    /// Row cap per subproblem (rare popular-item outliers are subsampled
+    /// to keep ETF bank sizes bounded; recorded in `MfOutput::capped`).
+    pub max_rows: usize,
+    pub seed: u64,
+}
+
+impl Default for MfConfig {
+    fn default() -> Self {
+        MfConfig {
+            embed: 15,
+            lambda: 10.0,
+            mu: 3.0,
+            epochs: 5,
+            m: 8,
+            k: 4,
+            encoder: EncoderKind::Hadamard,
+            beta: 2.0,
+            dist_threshold: 64,
+            lbfgs_iters: 8,
+            delay: DelayModel::Exp { mean_ms: 10.0 },
+            ms_per_mflop: 0.5,
+            max_rows: 2048,
+            seed: 0,
+        }
+    }
+}
+
+/// Learned factors/biases.
+#[derive(Clone, Debug)]
+pub struct MfModel {
+    /// User factors, `n_users × p`.
+    pub x: Mat,
+    /// User biases.
+    pub u: Vec<f64>,
+    /// Item factors, `n_items × p`.
+    pub y: Mat,
+    /// Item biases.
+    pub v: Vec<f64>,
+    pub mu: f64,
+}
+
+impl MfModel {
+    pub fn predict(&self, user: usize, item: usize) -> f64 {
+        self.mu
+            + self.u[user]
+            + self.v[item]
+            + linalg::dot(self.x.row(user), self.y.row(item))
+    }
+
+    /// RMSE over a ratings set.
+    pub fn rmse(&self, ratings: &Ratings) -> f64 {
+        if ratings.is_empty() {
+            return 0.0;
+        }
+        let se: f64 = ratings
+            .entries
+            .iter()
+            .map(|e| {
+                let d = self.predict(e.user as usize, e.item as usize) - e.value as f64;
+                d * d
+            })
+            .sum();
+        (se / ratings.len() as f64).sqrt()
+    }
+}
+
+/// Training output: model + per-epoch RMSE curves + simulated runtime.
+#[derive(Clone, Debug)]
+pub struct MfOutput {
+    pub model: MfModel,
+    pub train_rmse: Vec<f64>,
+    pub test_rmse: Vec<f64>,
+    /// Total simulated cluster time (ms), distributed solves only.
+    pub sim_ms: f64,
+    /// Simulated time attributed to local solves + encoding (ms).
+    pub local_ms: f64,
+    /// Distributed / local solve counts.
+    pub dist_solves: usize,
+    pub local_solves: usize,
+    /// Subproblems that hit the `max_rows` cap.
+    pub capped: usize,
+}
+
+impl MfOutput {
+    /// Total simulated wall time in ms.
+    pub fn total_ms(&self) -> f64 {
+        self.sim_ms + self.local_ms
+    }
+}
+
+/// Solve one ridge subproblem; returns (w, sim_ms, was_distributed).
+#[allow(clippy::too_many_arguments)]
+fn solve_subproblem(
+    a: Mat,
+    t: Vec<f64>,
+    lambda_abs: f64,
+    warm: Vec<f64>,
+    cfg: &MfConfig,
+    bank: &mut EncoderBank,
+    sub_seed: u64,
+    capped: &mut usize,
+) -> Result<(Vec<f64>, f64, bool)> {
+    let rows = a.rows();
+    let dim = a.cols();
+    // QuadProblem convention: f = (1/2n)||Aw-t||^2 + (l/2)||w||^2 matches
+    // eq. (8)'s ||Aw-t||^2 + lambda ||w||^2 when l = lambda_abs / n.
+    let lam = lambda_abs / rows as f64;
+
+    if rows < cfg.dist_threshold {
+        // local Cholesky path (the paper's numpy.linalg.solve)
+        let prob = QuadProblem::new(a, t, lam);
+        let w = prob
+            .exact_solution()
+            .ok_or_else(|| anyhow::anyhow!("local ridge solve failed (not SPD?)"))?;
+        // virtual cost: forming A^T A (r*d^2) + Cholesky (d^3/3) madds
+        let mflops = (rows as f64 * (dim * dim) as f64 + (dim * dim * dim) as f64 / 3.0) / 1e6;
+        return Ok((w, mflops * cfg.ms_per_mflop, false));
+    }
+
+    // distributed coded path
+    let (a, t) = if rows > cfg.max_rows {
+        *capped += 1;
+        let keep: Vec<usize> = (0..cfg.max_rows).collect(); // deterministic prefix
+        (a.select_rows(&keep), t[..cfg.max_rows].to_vec())
+    } else {
+        (a, t)
+    };
+    let rows = a.rows();
+    let bucket = bank.bucket_for(rows);
+    let a_pad = a.pad_rows(bucket);
+    let mut t_pad = t;
+    t_pad.resize(bucket, 0.0);
+    // lambda on the padded problem: same absolute regularizer
+    let lam_pad = lambda_abs / bucket as f64;
+    let prob = QuadProblem::new(a_pad, t_pad, lam_pad);
+
+    let enc = match cfg.encoder {
+        EncoderKind::Replication => {
+            EncodedProblem::encode(&prob, cfg.encoder, cfg.beta, cfg.m, sub_seed)?
+        }
+        _ => {
+            let bank_kind = bank.kind();
+            let encoder = bank.get(rows)?;
+            EncodedProblem::encode_with(&prob, encoder, bank_kind, cfg.m)?
+        }
+    };
+    let engine = Box::new(NativeEngine::new(&enc));
+    let ccfg = ClusterConfig {
+        workers: cfg.m,
+        wait_for: cfg.k,
+        delay: cfg.delay.clone(),
+        clock: ClockMode::Virtual,
+        ms_per_mflop: cfg.ms_per_mflop,
+        seed: sub_seed,
+    };
+    let mut cluster = Cluster::new(&enc, engine, ccfg)?;
+    let lbfgs = CodedLbfgs::new(LbfgsConfig {
+        // MF runs pick ν from a fixed mild ε (re-estimating spectra per
+        // subproblem would dominate runtime; the paper banks S for the
+        // same reason)
+        epsilon: Some(0.25),
+        ..Default::default()
+    });
+    let out = lbfgs.run_from(&enc, &mut cluster, cfg.lbfgs_iters, Some(warm.clone()))?;
+    // ALS block-descent guard: accept the distributed solve only if it
+    // improved this block's true subproblem objective; otherwise keep the
+    // warm start. Coded solves pass this essentially always; it stops the
+    // uncoded k≪m scheme's occasional diverging solve from destroying the
+    // whole model (it still converges far more slowly — the Fig. 5 story).
+    let w = if prob.objective(&out.w) <= prob.objective(&warm) {
+        out.w
+    } else {
+        warm
+    };
+    Ok((w, cluster.sim_ms, true))
+}
+
+/// Train the MF model with coded distributed alternating minimization.
+pub fn train(train_set: &Ratings, test_set: &Ratings, cfg: &MfConfig) -> Result<MfOutput> {
+    ensure!(cfg.k >= 1 && cfg.k <= cfg.m, "need 1 <= k <= m");
+    ensure!(cfg.epochs >= 1, "need at least one epoch");
+    let p = cfg.embed;
+    let dim = p + 1; // [factors, bias]
+    let mut rng = crate::rng::Pcg64::new(cfg.seed, 0x3f);
+
+    // init: small random factors, zero biases
+    let mut model = MfModel {
+        x: Mat::from_fn(train_set.n_users, p, |_, _| 0.1 * rng.next_gaussian()),
+        u: vec![0.0; train_set.n_users],
+        y: Mat::from_fn(train_set.n_items, p, |_, _| 0.1 * rng.next_gaussian()),
+        v: vec![0.0; train_set.n_items],
+        mu: cfg.mu,
+    };
+
+    let mut bank = EncoderBank::new(cfg.encoder, cfg.beta, cfg.seed);
+    let mut out = MfOutput {
+        model: model.clone(),
+        train_rmse: Vec::new(),
+        test_rmse: Vec::new(),
+        sim_ms: 0.0,
+        local_ms: 0.0,
+        dist_solves: 0,
+        local_solves: 0,
+        capped: 0,
+    };
+
+    for epoch in 0..cfg.epochs {
+        // ---- user half-step: solve w_i = [x_i; u_i] for every user ----
+        for user in 0..train_set.n_users {
+            let idx = train_set.user_entries(user);
+            if idx.is_empty() {
+                continue;
+            }
+            let rows = idx.len();
+            let mut a = Mat::zeros(rows, dim);
+            let mut t = vec![0.0; rows];
+            for (r, &ei) in idx.iter().enumerate() {
+                let e = &train_set.entries[ei as usize];
+                let item = e.item as usize;
+                a.row_mut(r)[..p].copy_from_slice(model.y.row(item));
+                a.row_mut(r)[p] = 1.0;
+                t[r] = e.value as f64 - model.v[item] - cfg.mu;
+            }
+            let mut warm = model.x.row(user).to_vec();
+            warm.push(model.u[user]);
+            let sub_seed = cfg.seed ^ (epoch as u64) << 40 ^ (user as u64) << 1;
+            let (w, ms, dist) =
+                solve_subproblem(a, t, cfg.lambda, warm, cfg, &mut bank, sub_seed, &mut out.capped)?;
+            model.x.row_mut(user).copy_from_slice(&w[..p]);
+            model.u[user] = w[p];
+            if dist {
+                out.sim_ms += ms;
+                out.dist_solves += 1;
+            } else {
+                out.local_ms += ms;
+                out.local_solves += 1;
+            }
+        }
+
+        // ---- item half-step: solve w_j = [y_j; v_j] for every item ----
+        for item in 0..train_set.n_items {
+            let idx = train_set.item_entries(item);
+            if idx.is_empty() {
+                continue;
+            }
+            let rows = idx.len();
+            let mut a = Mat::zeros(rows, dim);
+            let mut t = vec![0.0; rows];
+            for (r, &ei) in idx.iter().enumerate() {
+                let e = &train_set.entries[ei as usize];
+                let user = e.user as usize;
+                a.row_mut(r)[..p].copy_from_slice(model.x.row(user));
+                a.row_mut(r)[p] = 1.0;
+                t[r] = e.value as f64 - model.u[user] - cfg.mu;
+            }
+            let mut warm = model.y.row(item).to_vec();
+            warm.push(model.v[item]);
+            let sub_seed = cfg.seed ^ (epoch as u64) << 40 ^ 0x8000_0000 ^ (item as u64) << 1;
+            let (w, ms, dist) =
+                solve_subproblem(a, t, cfg.lambda, warm, cfg, &mut bank, sub_seed, &mut out.capped)?;
+            model.y.row_mut(item).copy_from_slice(&w[..p]);
+            model.v[item] = w[p];
+            if dist {
+                out.sim_ms += ms;
+                out.dist_solves += 1;
+            } else {
+                out.local_ms += ms;
+                out.local_solves += 1;
+            }
+        }
+
+        out.train_rmse.push(model.rmse(train_set));
+        out.test_rmse.push(model.rmse(test_set));
+    }
+
+    out.model = model;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mf::data::{synthetic_movielens, SyntheticConfig};
+
+    fn tiny_cfg(encoder: EncoderKind, k: usize) -> MfConfig {
+        MfConfig {
+            embed: 6,
+            lambda: 5.0,
+            mu: 3.58,
+            epochs: 2,
+            m: 4,
+            k,
+            encoder,
+            beta: 2.0,
+            dist_threshold: 48,
+            lbfgs_iters: 6,
+            max_rows: 512,
+            seed: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn training_reduces_rmse() {
+        let all = synthetic_movielens(&SyntheticConfig::small(10));
+        let (tr, te) = all.split(0.2, 3);
+        let out = train(&tr, &te, &tiny_cfg(EncoderKind::Hadamard, 4)).unwrap();
+        // RMSE after training well below the ~1.1 std of raw ratings
+        let final_train = *out.train_rmse.last().unwrap();
+        let final_test = *out.test_rmse.last().unwrap();
+        assert!(final_train < 0.95, "train rmse {final_train}");
+        assert!(final_test < 1.15, "test rmse {final_test}");
+        // epochs don't increase train RMSE much
+        assert!(out.train_rmse.last().unwrap() <= &(out.train_rmse[0] + 1e-9));
+    }
+
+    #[test]
+    fn mixes_local_and_distributed_solves() {
+        let all = synthetic_movielens(&SyntheticConfig::small(11));
+        let (tr, te) = all.split(0.2, 4);
+        let out = train(&tr, &te, &tiny_cfg(EncoderKind::Gaussian, 3)).unwrap();
+        assert!(out.local_solves > 0, "expected local solves");
+        assert!(out.dist_solves > 0, "expected distributed solves");
+        assert!(out.sim_ms > 0.0 && out.local_ms > 0.0);
+    }
+
+    #[test]
+    fn perfect_k_equals_m_is_most_accurate() {
+        let all = synthetic_movielens(&SyntheticConfig::small(12));
+        let (tr, te) = all.split(0.2, 5);
+        let out_perfect = train(&tr, &te, &tiny_cfg(EncoderKind::Hadamard, 4)).unwrap();
+        let out_k1 = train(&tr, &te, &tiny_cfg(EncoderKind::Hadamard, 1)).unwrap();
+        // k = m should do at least as well as k = 1 on train fit
+        assert!(
+            out_perfect.train_rmse.last().unwrap() <= &(out_k1.train_rmse.last().unwrap() + 0.05),
+            "perfect {} vs k=1 {}",
+            out_perfect.train_rmse.last().unwrap(),
+            out_k1.train_rmse.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn smaller_k_gives_smaller_simulated_runtime() {
+        let all = synthetic_movielens(&SyntheticConfig::small(13));
+        let (tr, te) = all.split(0.2, 6);
+        let out_k1 = train(&tr, &te, &tiny_cfg(EncoderKind::Hadamard, 1)).unwrap();
+        let out_k4 = train(&tr, &te, &tiny_cfg(EncoderKind::Hadamard, 4)).unwrap();
+        assert!(
+            out_k1.sim_ms < out_k4.sim_ms,
+            "k=1 sim {} not below k=4 sim {}",
+            out_k1.sim_ms,
+            out_k4.sim_ms
+        );
+    }
+
+    #[test]
+    fn replication_scheme_trains() {
+        let all = synthetic_movielens(&SyntheticConfig::small(14));
+        let (tr, te) = all.split(0.2, 7);
+        let out = train(&tr, &te, &tiny_cfg(EncoderKind::Replication, 2)).unwrap();
+        assert!(out.train_rmse.last().unwrap().is_finite());
+        assert!(*out.train_rmse.last().unwrap() < 1.2);
+    }
+
+    #[test]
+    fn rmse_of_constant_mu_model_matches_std() {
+        // sanity: untrained model (zero factors/biases) RMSE ≈ rating std
+        let all = synthetic_movielens(&SyntheticConfig::small(15));
+        let model = MfModel {
+            x: Mat::zeros(all.n_users, 4),
+            u: vec![0.0; all.n_users],
+            y: Mat::zeros(all.n_items, 4),
+            v: vec![0.0; all.n_items],
+            mu: all.mean(),
+        };
+        let rmse = model.rmse(&all);
+        assert!((0.6..=1.4).contains(&rmse), "rmse {rmse}");
+    }
+}

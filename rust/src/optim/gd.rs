@@ -1,0 +1,215 @@
+//! Gradient descent with constant step size — Theorem 1's algorithm.
+//!
+//! `w_{t+1} = w_t − α·ĝ_t` with `ĝ_t` the first-k aggregated gradient
+//! estimate and `α = 2ζ / (M(1+ε))`: `M` the smoothness constant of the
+//! raw problem (power iteration), `ε` the property-(4) constant (estimated
+//! from sampled spectra, or supplied), `0 < ζ ≤ 1` a safety factor.
+
+use super::{Optimizer, RunOutput};
+use crate::cluster::Cluster;
+use crate::linalg;
+use crate::metrics::{IterRecord, Trace};
+use crate::problem::EncodedProblem;
+use anyhow::{ensure, Result};
+
+/// Gradient-descent configuration.
+#[derive(Clone, Debug)]
+pub struct GdConfig {
+    /// Safety factor ζ in `α = 2ζ/(M(1+ε))`.
+    pub zeta: f64,
+    /// Property-(4) ε; `None` → estimate by sampled spectra at run start.
+    pub epsilon: Option<f64>,
+    /// Fully explicit step size (overrides the Theorem-1 rule if set).
+    pub alpha_override: Option<f64>,
+    /// Trials for the ε spectral estimate.
+    pub eps_trials: usize,
+    pub seed: u64,
+}
+
+impl Default for GdConfig {
+    fn default() -> Self {
+        GdConfig { zeta: 0.5, epsilon: None, alpha_override: None, eps_trials: 5, seed: 0 }
+    }
+}
+
+/// Coding-oblivious distributed gradient descent.
+pub struct CodedGd {
+    cfg: GdConfig,
+}
+
+impl CodedGd {
+    pub fn new(cfg: GdConfig) -> Self {
+        ensure_valid(&cfg);
+        CodedGd { cfg }
+    }
+
+    /// The Theorem-1 step size for this problem (also used by tests).
+    pub fn step_size(&self, prob: &EncodedProblem, k: usize) -> Result<f64> {
+        if let Some(a) = self.cfg.alpha_override {
+            return Ok(a);
+        }
+        let m_smooth = prob.raw.smoothness();
+        let eps = match self.cfg.epsilon {
+            Some(e) => e,
+            None => match prob.scheme {
+                crate::problem::Scheme::Coded => prob
+                    .estimate_epsilon(k, self.cfg.eps_trials, self.cfg.seed)
+                    .unwrap_or(0.5)
+                    .min(0.9),
+                // uncoded/replication have no spectral guarantee; be safe
+                _ => 0.5,
+            },
+        };
+        Ok(2.0 * self.cfg.zeta / (m_smooth * (1.0 + eps)))
+    }
+}
+
+fn ensure_valid(cfg: &GdConfig) {
+    assert!(cfg.zeta > 0.0 && cfg.zeta <= 1.0, "zeta must be in (0, 1]");
+}
+
+impl Optimizer for CodedGd {
+    fn run_from(
+        &self,
+        prob: &EncodedProblem,
+        cluster: &mut Cluster,
+        iters: usize,
+        w0: Option<Vec<f64>>,
+    ) -> Result<RunOutput> {
+        let p = prob.p();
+        let mut w = w0.unwrap_or_else(|| vec![0.0; p]);
+        ensure!(w.len() == p, "w0 dimension mismatch");
+        let alpha = self.step_size(prob, cluster.config().wait_for)?;
+        let mut trace = Trace::default();
+        for t in 0..iters {
+            let (responses, round) = cluster.grad_round(&w)?;
+            let (g, f_est) = prob.aggregate_grad(&w, &responses);
+            linalg::axpy(-alpha, &g, &mut w);
+            trace.push(IterRecord {
+                iter: t,
+                f_true: prob.raw.objective(&w),
+                f_est,
+                grad_norm: linalg::norm2(&g),
+                alpha,
+                responders: round.admitted.len(),
+                sim_ms: cluster.sim_ms,
+            });
+        }
+        Ok(RunOutput { w, trace })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClockMode, ClusterConfig, DelayModel};
+    use crate::encoding::EncoderKind;
+    use crate::problem::QuadProblem;
+    use crate::runtime::NativeEngine;
+
+    fn setup(
+        kind: EncoderKind,
+        beta: f64,
+        m: usize,
+        k: usize,
+        seed: u64,
+    ) -> (EncodedProblem, Cluster) {
+        let prob = QuadProblem::synthetic_gaussian(128, 8, 0.05, 21);
+        let enc = EncodedProblem::encode(&prob, kind, beta, m, seed).unwrap();
+        let eng = Box::new(NativeEngine::new(&enc));
+        let cfg = ClusterConfig {
+            workers: m,
+            wait_for: k,
+            delay: DelayModel::Exp { mean_ms: 10.0 },
+            clock: ClockMode::Virtual,
+            ms_per_mflop: 0.5,
+            seed,
+        };
+        let cluster = Cluster::new(&enc, eng, cfg).unwrap();
+        (enc, cluster)
+    }
+
+    #[test]
+    fn full_participation_converges_to_optimum() {
+        let (enc, mut cluster) = setup(EncoderKind::Hadamard, 2.0, 8, 8, 3);
+        let gd = CodedGd::new(GdConfig { zeta: 0.9, epsilon: Some(0.0), ..Default::default() });
+        let out = gd.run(&enc, &mut cluster, 400).unwrap();
+        let f_star = enc.raw.objective(&enc.raw.exact_solution().unwrap());
+        let f_end = out.trace.last_objective();
+        assert!(
+            f_end < f_star * 1.01 + 1e-9,
+            "f_end {f_end} vs f* {f_star}"
+        );
+    }
+
+    #[test]
+    fn partial_participation_reaches_neighborhood() {
+        let (enc, mut cluster) = setup(EncoderKind::Hadamard, 2.0, 8, 6, 5);
+        let gd = CodedGd::new(GdConfig::default());
+        let out = gd.run(&enc, &mut cluster, 300).unwrap();
+        let f0 = enc.raw.objective(&vec![0.0; 8]);
+        let f_star = enc.raw.objective(&enc.raw.exact_solution().unwrap());
+        let f_end = out.trace.last_objective();
+        // Theorem 1: linear convergence to a neighborhood of f*
+        assert!(f_end.is_finite() && !out.trace.diverged());
+        assert!(
+            f_end < f_star + 0.2 * (f0 - f_star),
+            "f_end {f_end} not in neighborhood (f0 {f0}, f* {f_star})"
+        );
+    }
+
+    #[test]
+    fn monotone_descent_with_all_workers_and_safe_step() {
+        let (enc, mut cluster) = setup(EncoderKind::Hadamard, 2.0, 8, 8, 7);
+        let gd = CodedGd::new(GdConfig { zeta: 0.5, epsilon: Some(0.0), ..Default::default() });
+        let out = gd.run(&enc, &mut cluster, 50).unwrap();
+        for w in out.trace.records.windows(2) {
+            assert!(
+                w[1].f_true <= w[0].f_true + 1e-12,
+                "non-monotone at iter {}",
+                w[1].iter
+            );
+        }
+    }
+
+    #[test]
+    fn trace_records_are_complete() {
+        let (enc, mut cluster) = setup(EncoderKind::Gaussian, 2.0, 8, 4, 9);
+        let gd = CodedGd::new(GdConfig::default());
+        let out = gd.run(&enc, &mut cluster, 10).unwrap();
+        assert_eq!(out.trace.len(), 10);
+        for (i, r) in out.trace.records.iter().enumerate() {
+            assert_eq!(r.iter, i);
+            assert_eq!(r.responders, 4);
+            assert!(r.sim_ms > 0.0 && r.alpha > 0.0);
+        }
+        // sim time is cumulative
+        for w in out.trace.records.windows(2) {
+            assert!(w[1].sim_ms >= w[0].sim_ms);
+        }
+    }
+
+    #[test]
+    fn alpha_override_wins() {
+        let (enc, _) = setup(EncoderKind::Hadamard, 2.0, 8, 8, 0);
+        let gd = CodedGd::new(GdConfig { alpha_override: Some(0.123), ..Default::default() });
+        assert_eq!(gd.step_size(&enc, 8).unwrap(), 0.123);
+    }
+
+    #[test]
+    fn warm_start_is_respected() {
+        let (enc, mut cluster) = setup(EncoderKind::Hadamard, 2.0, 8, 8, 1);
+        let w_star = enc.raw.exact_solution().unwrap();
+        let gd = CodedGd::new(GdConfig { zeta: 0.5, epsilon: Some(0.0), ..Default::default() });
+        let out = gd.run_from(&enc, &mut cluster, 3, Some(w_star.clone())).unwrap();
+        let f_star = enc.raw.objective(&w_star);
+        // starting at the optimum, we stay there
+        assert!((out.trace.last_objective() - f_star).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "zeta")]
+    fn rejects_bad_zeta() {
+        CodedGd::new(GdConfig { zeta: 0.0, ..Default::default() });
+    }
+}

@@ -1,0 +1,359 @@
+//! Coded L-BFGS — Theorem 2's algorithm (§3 "Limited-memory-BFGS").
+//!
+//! Standard L-BFGS is a batch method and has no convergence story under
+//! arbitrary first-k participation; the paper adapts the multi-batch
+//! technique of Berahas–Nocedal–Takáč: the curvature pair at iteration t
+//! uses only gradient components common to two consecutive rounds,
+//!
+//! `r_t ∝ Σ_{i ∈ A_t ∩ A_{t−1}} (g_i(w_t) − g_i(w_{t−1}))  (+ λ u_t)`,
+//!
+//! which the leader forms for free from its response cache — no recompute,
+//! no extra round. The inverse-Hessian is applied through the two-loop
+//! recursion over the last σ accepted pairs; non-positive-curvature pairs
+//! are skipped (Lemma 1's `r_tᵀu_t > 0` requirement, guaranteed when
+//! property (5) holds, guarded numerically here).
+//!
+//! Step size: exact line search (eq. (3)) over a *fresh* first-k set
+//! `D_t`, with back-off `ν = (1−ε)/(1+ε)`.
+
+use super::{Optimizer, RunOutput};
+use crate::cluster::Cluster;
+use crate::linalg;
+use crate::metrics::{IterRecord, Trace};
+use crate::problem::EncodedProblem;
+use anyhow::{ensure, Result};
+use std::collections::HashMap;
+
+/// L-BFGS configuration.
+#[derive(Clone, Debug)]
+pub struct LbfgsConfig {
+    /// Memory σ (number of curvature pairs kept).
+    pub memory: usize,
+    /// Property-(4) ε for the back-off `ν = (1−ε)/(1+ε)`;
+    /// `None` → estimate from sampled spectra at run start.
+    pub epsilon: Option<f64>,
+    /// Explicit back-off ν override (takes precedence over ε).
+    pub nu_override: Option<f64>,
+    /// Curvature-pair acceptance threshold: require
+    /// `rᵀu > curvature_tol · ‖u‖²`.
+    pub curvature_tol: f64,
+    /// Trials for the ε spectral estimate.
+    pub eps_trials: usize,
+    /// Cap on the step size (guards the uncoded scheme's blow-ups from
+    /// producing inf/NaN that would poison the trace; the paper's uncoded
+    /// runs still diverge under this guard, just measurably).
+    pub alpha_max: f64,
+    pub seed: u64,
+}
+
+impl Default for LbfgsConfig {
+    fn default() -> Self {
+        LbfgsConfig {
+            memory: 10,
+            epsilon: None,
+            nu_override: None,
+            curvature_tol: 1e-10,
+            eps_trials: 5,
+            alpha_max: 1e3,
+            seed: 0,
+        }
+    }
+}
+
+/// Coding-oblivious distributed L-BFGS with overlap curvature pairs.
+pub struct CodedLbfgs {
+    cfg: LbfgsConfig,
+}
+
+impl CodedLbfgs {
+    pub fn new(cfg: LbfgsConfig) -> Self {
+        assert!(cfg.memory >= 1, "memory must be >= 1");
+        CodedLbfgs { cfg }
+    }
+
+    /// Back-off factor ν = (1−ε)/(1+ε).
+    pub fn backoff(&self, prob: &EncodedProblem, k: usize) -> f64 {
+        if let Some(nu) = self.cfg.nu_override {
+            return nu;
+        }
+        let eps = match self.cfg.epsilon {
+            Some(e) => e,
+            None => match prob.scheme {
+                crate::problem::Scheme::Coded => prob
+                    .estimate_epsilon(k, self.cfg.eps_trials, self.cfg.seed)
+                    .unwrap_or(0.5)
+                    .min(0.9),
+                _ => 0.5,
+            },
+        };
+        ((1.0 - eps) / (1.0 + eps)).clamp(0.05, 1.0)
+    }
+}
+
+/// Two-loop recursion: `d = −H g` over the stored pairs, with
+/// `H⁰ = (uᵀr)/(rᵀr)·I` scaling from the newest pair.
+fn two_loop(g: &[f64], pairs: &[(Vec<f64>, Vec<f64>)]) -> Vec<f64> {
+    let mut q = g.to_vec();
+    if pairs.is_empty() {
+        linalg::scale(-1.0, &mut q);
+        return q;
+    }
+    let mut alphas = vec![0.0; pairs.len()];
+    // newest last; first loop runs newest → oldest
+    for (idx, (u, r)) in pairs.iter().enumerate().rev() {
+        let rho = 1.0 / linalg::dot(r, u);
+        let a = rho * linalg::dot(u, &q);
+        alphas[idx] = a;
+        linalg::axpy(-a, r, &mut q);
+    }
+    let (u_new, r_new) = pairs.last().unwrap();
+    let gamma = linalg::dot(u_new, r_new) / linalg::dot(r_new, r_new);
+    linalg::scale(gamma, &mut q);
+    for (idx, (u, r)) in pairs.iter().enumerate() {
+        let rho = 1.0 / linalg::dot(r, u);
+        let b = rho * linalg::dot(r, &q);
+        linalg::axpy(alphas[idx] - b, u, &mut q);
+    }
+    linalg::scale(-1.0, &mut q);
+    q
+}
+
+impl Optimizer for CodedLbfgs {
+    fn run_from(
+        &self,
+        prob: &EncodedProblem,
+        cluster: &mut Cluster,
+        iters: usize,
+        w0: Option<Vec<f64>>,
+    ) -> Result<RunOutput> {
+        let p = prob.p();
+        let mut w = w0.unwrap_or_else(|| vec![0.0; p]);
+        ensure!(w.len() == p, "w0 dimension mismatch");
+        let nu = self.backoff(prob, cluster.config().wait_for);
+
+        let mut trace = Trace::default();
+        // (u_j, r_j) pairs, oldest → newest
+        let mut pairs: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+        // leader's response cache from the previous round
+        let mut prev_grads: HashMap<usize, Vec<f64>> = HashMap::new();
+        let mut w_prev: Option<Vec<f64>> = None;
+
+        for t in 0..iters {
+            let (responses, round) = cluster.grad_round(&w)?;
+            let (g, f_est) = prob.aggregate_grad(&w, &responses);
+
+            // overlap curvature pair from A_t ∩ A_{t−1}
+            if let Some(wp) = &w_prev {
+                let u = linalg::sub(&w, wp);
+                let diffs: Vec<(usize, Vec<f64>)> = responses
+                    .iter()
+                    .filter_map(|(wid, gi, _)| {
+                        prev_grads
+                            .get(wid)
+                            .map(|gprev| (*wid, linalg::sub(gi, gprev)))
+                    })
+                    .collect();
+                if !diffs.is_empty() {
+                    let r = prob.aggregate_grad_diff(&u, &diffs);
+                    let ru = linalg::dot(&r, &u);
+                    if ru > self.cfg.curvature_tol * linalg::dot(&u, &u) {
+                        pairs.push((u, r));
+                        if pairs.len() > self.cfg.memory {
+                            pairs.remove(0);
+                        }
+                    }
+                }
+            }
+
+            // descent direction via two-loop recursion
+            let d = two_loop(&g, &pairs);
+
+            // exact line search over a fresh first-k set D_t (eq. (3))
+            let (ls_responses, _ls_round) = cluster.linesearch_round(&d)?;
+            let curv = prob.aggregate_curvature(&d, &ls_responses);
+            let dg = linalg::dot(&d, &g);
+            let alpha = if curv > 0.0 && dg < 0.0 {
+                (-nu * dg / curv).min(self.cfg.alpha_max)
+            } else {
+                // non-descent direction (can happen uncoded): reset memory,
+                // fall back to a tiny gradient step
+                pairs.clear();
+                1e-4
+            };
+
+            // cache this round's responses for the next overlap
+            prev_grads = responses
+                .iter()
+                .map(|(wid, gi, _)| (*wid, gi.clone()))
+                .collect();
+            w_prev = Some(w.clone());
+
+            linalg::axpy(alpha, &d, &mut w);
+
+            trace.push(IterRecord {
+                iter: t,
+                f_true: prob.raw.objective(&w),
+                f_est,
+                grad_norm: linalg::norm2(&g),
+                alpha,
+                responders: round.admitted.len(),
+                sim_ms: cluster.sim_ms,
+            });
+        }
+        Ok(RunOutput { w, trace })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClockMode, ClusterConfig, DelayModel};
+    use crate::encoding::EncoderKind;
+    use crate::problem::QuadProblem;
+    use crate::runtime::NativeEngine;
+
+    fn setup(
+        kind: EncoderKind,
+        beta: f64,
+        m: usize,
+        k: usize,
+        seed: u64,
+    ) -> (EncodedProblem, Cluster) {
+        let prob = QuadProblem::synthetic_gaussian(128, 8, 0.05, 33);
+        let enc = EncodedProblem::encode(&prob, kind, beta, m, seed).unwrap();
+        let eng = Box::new(NativeEngine::new(&enc));
+        let cfg = ClusterConfig {
+            workers: m,
+            wait_for: k,
+            delay: DelayModel::Exp { mean_ms: 10.0 },
+            clock: ClockMode::Virtual,
+            ms_per_mflop: 0.5,
+            seed,
+        };
+        let cluster = Cluster::new(&enc, eng, cfg).unwrap();
+        (enc, cluster)
+    }
+
+    #[test]
+    fn two_loop_on_identity_pairs_is_gradient_descent() {
+        // with no pairs, d = -g
+        let g = vec![1.0, -2.0, 3.0];
+        let d = two_loop(&g, &[]);
+        assert_eq!(d, vec![-1.0, 2.0, -3.0]);
+    }
+
+    #[test]
+    fn two_loop_solves_quadratic_hessian() {
+        // For f = 0.5 w^T H w with H = diag(1, 4), pairs (u, Hu) teach the
+        // recursion the metric: after pairs spanning the space, d ≈ -H^{-1}g.
+        let pairs = vec![
+            (vec![1.0, 0.0], vec![1.0, 0.0]),
+            (vec![0.0, 1.0], vec![0.0, 4.0]),
+        ];
+        let g = vec![2.0, 8.0];
+        let d = two_loop(&g, &pairs);
+        // H^{-1} g = [2, 2]
+        assert!((d[0] + 2.0).abs() < 1e-10, "{d:?}");
+        assert!((d[1] + 2.0).abs() < 1e-10, "{d:?}");
+    }
+
+    #[test]
+    fn full_participation_converges_fast() {
+        let (enc, mut cluster) = setup(EncoderKind::Hadamard, 2.0, 8, 8, 3);
+        let lb = CodedLbfgs::new(LbfgsConfig { epsilon: Some(0.0), ..Default::default() });
+        let out = lb.run(&enc, &mut cluster, 60).unwrap();
+        let f_star = enc.raw.objective(&enc.raw.exact_solution().unwrap());
+        let f_end = out.trace.last_objective();
+        assert!(
+            (f_end - f_star) / f_star.max(1e-12) < 1e-3,
+            "f_end {f_end} vs f* {f_star}"
+        );
+    }
+
+    #[test]
+    fn lbfgs_beats_gd_iteration_count() {
+        let (enc, mut cl_gd) = setup(EncoderKind::Hadamard, 2.0, 8, 8, 5);
+        let (_, mut cl_lb) = setup(EncoderKind::Hadamard, 2.0, 8, 8, 5);
+        let gd = super::super::gd::CodedGd::new(super::super::gd::GdConfig {
+            zeta: 0.9,
+            epsilon: Some(0.0),
+            ..Default::default()
+        });
+        let lb = CodedLbfgs::new(LbfgsConfig { epsilon: Some(0.0), ..Default::default() });
+        use super::super::Optimizer as _;
+        let out_gd = gd.run(&enc, &mut cl_gd, 40).unwrap();
+        let out_lb = lb.run(&enc, &mut cl_lb, 40).unwrap();
+        let f_star = enc.raw.objective(&enc.raw.exact_solution().unwrap());
+        let gap_gd = out_gd.trace.last_objective() - f_star;
+        let gap_lb = out_lb.trace.last_objective() - f_star;
+        assert!(
+            gap_lb < gap_gd * 0.5,
+            "L-BFGS gap {gap_lb:.3e} not well below GD gap {gap_gd:.3e}"
+        );
+    }
+
+    #[test]
+    fn coded_partial_participation_stays_stable() {
+        // k = 6 of 8: coded L-BFGS must converge to a small neighborhood
+        let (enc, mut cluster) = setup(EncoderKind::Hadamard, 2.0, 8, 6, 7);
+        let lb = CodedLbfgs::new(LbfgsConfig::default());
+        let out = lb.run(&enc, &mut cluster, 120).unwrap();
+        assert!(!out.trace.diverged(), "coded L-BFGS diverged");
+        let f_star = enc.raw.objective(&enc.raw.exact_solution().unwrap());
+        let f0 = enc.raw.objective(&vec![0.0; 8]);
+        let f_end = out.trace.best_objective();
+        assert!(
+            f_end - f_star < 0.1 * (f0 - f_star),
+            "no convergence: end {f_end}, f* {f_star}, f0 {f0}"
+        );
+    }
+
+    #[test]
+    fn overlap_pairs_accumulate() {
+        // with k = m the overlap is everything and pairs build up to memory
+        let (enc, mut cluster) = setup(EncoderKind::Hadamard, 2.0, 8, 8, 9);
+        let lb = CodedLbfgs::new(LbfgsConfig { memory: 3, epsilon: Some(0.0), ..Default::default() });
+        let out = lb.run(&enc, &mut cluster, 20).unwrap();
+        // all steps after the first should use curvature (alpha != fallback)
+        for r in &out.trace.records[1..] {
+            assert!(r.alpha > 1e-4, "iter {} fell back", r.iter);
+        }
+    }
+
+    #[test]
+    fn replication_scheme_runs() {
+        let (enc, mut cluster) = setup(EncoderKind::Replication, 2.0, 8, 6, 11);
+        let lb = CodedLbfgs::new(LbfgsConfig::default());
+        let out = lb.run(&enc, &mut cluster, 60).unwrap();
+        assert!(!out.trace.diverged());
+        assert!(out.trace.last_objective().is_finite());
+    }
+
+    #[test]
+    fn uncoded_small_k_is_worse_than_coded() {
+        // the Fig. 4 story at small eta: coded converges closer than uncoded
+        let iters = 120;
+        let (enc_c, mut cl_c) = setup(EncoderKind::Hadamard, 2.0, 8, 3, 13);
+        let lb = CodedLbfgs::new(LbfgsConfig::default());
+        let out_c = lb.run(&enc_c, &mut cl_c, iters).unwrap();
+        let (enc_u, mut cl_u) = setup(EncoderKind::Identity, 1.0, 8, 3, 13);
+        let out_u = lb.run(&enc_u, &mut cl_u, iters).unwrap();
+        let f_star = enc_c.raw.objective(&enc_c.raw.exact_solution().unwrap());
+        let gap_c = out_c.trace.best_objective() - f_star;
+        let gap_u = out_u.trace.best_objective() - f_star;
+        assert!(
+            gap_c < gap_u,
+            "coded gap {gap_c:.3e} should beat uncoded gap {gap_u:.3e}"
+        );
+        let _ = enc_u;
+    }
+
+    #[test]
+    fn memory_is_bounded() {
+        let lb = CodedLbfgs::new(LbfgsConfig { memory: 2, ..Default::default() });
+        let (enc, mut cluster) = setup(EncoderKind::Hadamard, 2.0, 8, 8, 15);
+        // run enough iterations that pairs would exceed memory if unbounded
+        let out = lb.run(&enc, &mut cluster, 15).unwrap();
+        assert_eq!(out.trace.len(), 15);
+    }
+}

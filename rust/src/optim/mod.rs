@@ -1,0 +1,49 @@
+//! Coding-oblivious batch optimizers (§3): gradient descent with constant
+//! step (Theorem 1) and limited-memory BFGS with overlap-based Hessian
+//! estimation and exact line search (Theorem 2).
+//!
+//! Both drive a [`Cluster`] through synchronous first-k rounds; neither
+//! ever sees the encoding matrix — exactly the paper's obliviousness
+//! contract. Traces record the *true* objective `f(w_t)` on the raw
+//! problem, which is what the convergence guarantees (and Figure 4) are
+//! stated in.
+
+pub mod fista;
+pub mod gd;
+pub mod lbfgs;
+
+pub use fista::{CodedFista, FistaConfig, Prox};
+pub use gd::{CodedGd, GdConfig};
+pub use lbfgs::{CodedLbfgs, LbfgsConfig};
+
+pub use crate::metrics::Trace;
+
+use crate::cluster::Cluster;
+use crate::problem::EncodedProblem;
+use anyhow::Result;
+
+/// Result of an optimizer run.
+#[derive(Clone, Debug)]
+pub struct RunOutput {
+    /// Final iterate.
+    pub w: Vec<f64>,
+    /// Per-iteration trace (true objective, simulated time, ...).
+    pub trace: Trace,
+}
+
+/// Common driver surface so experiments can swap algorithms.
+pub trait Optimizer {
+    /// Run `iters` iterations from `w0` (zeros if `None`).
+    fn run_from(
+        &self,
+        prob: &EncodedProblem,
+        cluster: &mut Cluster,
+        iters: usize,
+        w0: Option<Vec<f64>>,
+    ) -> Result<RunOutput>;
+
+    /// Run from the zero vector.
+    fn run(&self, prob: &EncodedProblem, cluster: &mut Cluster, iters: usize) -> Result<RunOutput> {
+        self.run_from(prob, cluster, iters, None)
+    }
+}

@@ -1,0 +1,712 @@
+//! Problem assembly: the raw quadratic problem (eq. (1)) and its encoded,
+//! partitioned form (eq. (2) + Figure 1 right).
+//!
+//! [`QuadProblem`] is the ground truth `f(w) = (1/2n)‖Xw−y‖² + (λ/2)‖w‖²`
+//! the convergence guarantees are stated against. [`EncodedProblem`] is
+//! what the cluster actually stores: `m` worker shards of `(S_iX, S_iy)`,
+//! plus the aggregation rules the leader applies to first-k responses —
+//! including the replication scheme's fastest-copy-per-partition dedup
+//! (§5) and the uncoded baseline's subsample rescaling.
+
+use crate::encoding::EncoderKind;
+use crate::linalg::{self, Mat};
+use crate::rng::Pcg64;
+use anyhow::{ensure, Result};
+
+/// The original (uncoded) regularized least-squares problem, eq. (1):
+/// `f(w) = (1/2n)‖Xw − y‖² + (λ/2)‖w‖²`.
+#[derive(Clone)]
+pub struct QuadProblem {
+    pub x: Mat,
+    pub y: Vec<f64>,
+    /// Ridge coefficient λ (0 for plain least squares).
+    pub lambda: f64,
+}
+
+impl QuadProblem {
+    pub fn new(x: Mat, y: Vec<f64>, lambda: f64) -> Self {
+        assert_eq!(x.rows(), y.len(), "QuadProblem: X rows != y length");
+        QuadProblem { x, y, lambda }
+    }
+
+    /// The paper's synthetic ridge workload (§5): `X_ij ~ N(0,1)`,
+    /// `y_i ~ N(0, p)`.
+    pub fn synthetic_gaussian(n: usize, p: usize, lambda: f64, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 0x9e0);
+        let x = Mat::from_fn(n, p, |_, _| rng.next_gaussian());
+        let sp = (p as f64).sqrt();
+        let y = (0..n).map(|_| sp * rng.next_gaussian()).collect();
+        QuadProblem { x, y, lambda }
+    }
+
+    /// A well-conditioned planted problem: `y = Xw* + noise` — useful in
+    /// tests where a known solution neighborhood matters.
+    pub fn planted(n: usize, p: usize, lambda: f64, noise: f64, seed: u64) -> (Self, Vec<f64>) {
+        let mut rng = Pcg64::new(seed, 0x91a);
+        let x = Mat::from_fn(n, p, |_, _| rng.next_gaussian());
+        let w_star: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let mut y = x.gemv(&w_star);
+        for yi in &mut y {
+            *yi += noise * rng.next_gaussian();
+        }
+        (QuadProblem { x, y, lambda }, w_star)
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// True objective `f(w)`.
+    pub fn objective(&self, w: &[f64]) -> f64 {
+        let resid = linalg::sub(&self.x.gemv(w), &self.y);
+        let n = self.n() as f64;
+        linalg::dot(&resid, &resid) / (2.0 * n)
+            + 0.5 * self.lambda * linalg::dot(w, w)
+    }
+
+    /// True gradient `∇f(w) = (1/n)Xᵀ(Xw−y) + λw`.
+    pub fn grad(&self, w: &[f64]) -> Vec<f64> {
+        let resid = linalg::sub(&self.x.gemv(w), &self.y);
+        let mut g = self.x.gemv_t(&resid);
+        let n = self.n() as f64;
+        for (gi, wi) in g.iter_mut().zip(w) {
+            *gi = *gi / n + self.lambda * wi;
+        }
+        g
+    }
+
+    /// Closed-form optimum via Cholesky on the normal equations.
+    pub fn exact_solution(&self) -> Option<Vec<f64>> {
+        crate::linalg::ridge_exact(&self.x, &self.y, self.lambda)
+    }
+
+    /// `M = λ_max((1/n)XᵀX) + λ` — the smoothness constant in Theorem 1's
+    /// step-size rule (power iteration).
+    pub fn smoothness(&self) -> f64 {
+        self.x.spectral_bound(60, 0xb0) / self.n() as f64 + self.lambda
+    }
+}
+
+/// Which aggregation semantics the leader applies (§2 / §5 baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// Coded: every worker holds `S_i X`; first-k responses are averaged
+    /// with the `1/(c·η·n)` normalization.
+    Coded,
+    /// Replication: `partitions = m/β` raw partitions, each stored on β
+    /// workers; the leader uses the fastest copy of each partition.
+    Replicated { partitions: usize },
+    /// Uncoded `S = I`: one raw partition per worker; first-k responses
+    /// give a rescaled-subsample gradient.
+    Uncoded,
+    /// Gradient coding (Tandon et al., the paper's ref. [20]) with the
+    /// fractional-repetition construction: `groups = m/(s+1)` worker
+    /// groups, each group's workers all store the same `s+1` partitions
+    /// and report their *sum*; the leader needs one responder per group
+    /// for the **exact** gradient (tolerates any `s` stragglers at
+    /// redundancy `β = s+1`). The comparator the paper's intro argues
+    /// against: exactness costs redundancy linear in the straggler count.
+    GradientCoded { groups: usize },
+}
+
+/// One worker's stored shard (already encoded + zero-padded).
+#[derive(Clone)]
+pub struct WorkerShard {
+    /// Encoded rows (padded to `rows_padded`) × p.
+    pub x: Mat,
+    /// Encoded targets, length = `x.rows()`.
+    pub y: Vec<f64>,
+    /// Rows before zero-padding (diagnostics only — padding is exact).
+    pub rows_real: usize,
+    /// Which raw partition this shard replicates (replication scheme);
+    /// equals the worker index otherwise.
+    pub partition_id: usize,
+}
+
+/// The encoded, partitioned problem the cluster serves (Figure 1, right).
+pub struct EncodedProblem {
+    pub shards: Vec<WorkerShard>,
+    pub scheme: Scheme,
+    pub kind: EncoderKind,
+    /// Effective redundancy `rows_out / n`.
+    pub beta: f64,
+    /// `c` with `SᵀS = c·I` — the gradient normalization constant.
+    pub gram_scale: f64,
+    /// Raw problem (kept for true-objective evaluation in traces).
+    pub raw: QuadProblem,
+}
+
+/// Round shard rows up to a power of two (≥ 8) so they match the AOT
+/// artifact buckets; zero rows are exact no-ops for gradient + objective.
+pub fn pad_bucket(rows: usize) -> usize {
+    rows.next_power_of_two().max(8)
+}
+
+impl EncodedProblem {
+    /// Encode `prob` with the given family and distribute over `m` workers.
+    ///
+    /// * Coded families split the `βn` encoded rows into `m` near-equal
+    ///   contiguous blocks.
+    /// * `EncoderKind::Identity` produces the uncoded scheme (β forced 1).
+    /// * `EncoderKind::Replication` splits the raw rows into `m/β`
+    ///   partitions and places copy `c` of partition `j` on worker
+    ///   `c·m/β + j` (copies live on distinct workers, as in §5).
+    pub fn encode(
+        prob: &QuadProblem,
+        kind: EncoderKind,
+        beta: f64,
+        m: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        ensure!(m >= 1, "need at least one worker");
+        let n = prob.n();
+
+        match kind {
+            EncoderKind::Replication => {
+                let b = beta.round() as usize;
+                ensure!(b >= 1, "replication beta must round to >= 1");
+                ensure!(
+                    m % b == 0,
+                    "replication: m={m} must be divisible by beta={b}"
+                );
+                let partitions = m / b;
+                ensure!(n >= partitions, "fewer rows than partitions");
+                let part = crate::encoding::spectrum::partition_rows(n, partitions);
+                let mut shards = Vec::with_capacity(m);
+                for _copy in 0..b {
+                    for (j, &(lo, hi)) in part.iter().enumerate() {
+                        let xs = prob.x.row_band(lo, hi);
+                        let mut ys = prob.y[lo..hi].to_vec();
+                        let rows_real = xs.rows();
+                        let padded = pad_bucket(rows_real);
+                        let xs = xs.pad_rows(padded);
+                        ys.resize(padded, 0.0);
+                        shards.push(WorkerShard { x: xs, y: ys, rows_real, partition_id: j });
+                    }
+                }
+                Ok(EncodedProblem {
+                    shards,
+                    scheme: Scheme::Replicated { partitions },
+                    kind,
+                    beta: b as f64,
+                    gram_scale: 1.0, // per-partition gradients are raw-scale
+                    raw: prob.clone(),
+                })
+            }
+            _ => {
+                let enc = kind.build(n, beta, seed)?;
+                Self::encode_with(prob, enc.as_ref(), kind, m)
+            }
+        }
+    }
+
+    /// Gradient-coding baseline (paper ref. [20], fractional repetition):
+    /// tolerate any `s` stragglers with the **exact** gradient, at storage
+    /// redundancy `β = s+1`.
+    ///
+    /// Workers are split into `m/(s+1)` groups; every worker in group `g`
+    /// stores the concatenation of group `g`'s `s+1` raw partitions (so its
+    /// response is the *sum* of their gradients), and the leader dedups one
+    /// response per group. With `k ≥ m − s`, every group is guaranteed a
+    /// responder, so the aggregate equals the full gradient exactly.
+    pub fn encode_gradient_coding(
+        prob: &QuadProblem,
+        s: usize,
+        m: usize,
+        _seed: u64,
+    ) -> Result<Self> {
+        ensure!(m >= 1, "need at least one worker");
+        let rep = s + 1;
+        ensure!(
+            m % rep == 0,
+            "gradient coding: m={m} must be divisible by s+1={rep}"
+        );
+        let groups = m / rep;
+        let n = prob.n();
+        ensure!(n >= groups, "fewer rows than groups");
+        // group g owns the contiguous row range part[g]
+        let part = crate::encoding::spectrum::partition_rows(n, groups);
+        let mut shards = Vec::with_capacity(m);
+        for _copy in 0..rep {
+            for (g, &(lo, hi)) in part.iter().enumerate() {
+                let xs = prob.x.row_band(lo, hi);
+                let mut ys = prob.y[lo..hi].to_vec();
+                let rows_real = xs.rows();
+                let padded = pad_bucket(rows_real);
+                let xs = xs.pad_rows(padded);
+                ys.resize(padded, 0.0);
+                shards.push(WorkerShard { x: xs, y: ys, rows_real, partition_id: g });
+            }
+        }
+        Ok(EncodedProblem {
+            shards,
+            scheme: Scheme::GradientCoded { groups },
+            kind: EncoderKind::Replication, // closest CLI label; scheme disambiguates
+            beta: rep as f64,
+            gram_scale: 1.0,
+            raw: prob.clone(),
+        })
+    }
+
+    /// Encode with a pre-built encoder (the §5 "bank" path: matrix
+    /// factorization reuses one encoder per padded-size bucket instead of
+    /// rebuilding ETFs per subproblem). `encoder.rows_in()` must equal
+    /// `prob.n()`; pad the problem rows first if needed.
+    pub fn encode_with(
+        prob: &QuadProblem,
+        enc: &dyn crate::encoding::Encoder,
+        kind: EncoderKind,
+        m: usize,
+    ) -> Result<Self> {
+        ensure!(m >= 1, "need at least one worker");
+        ensure!(
+            enc.rows_in() == prob.n(),
+            "encoder built for n={} but problem has n={}",
+            enc.rows_in(),
+            prob.n()
+        );
+        ensure!(
+            kind != EncoderKind::Replication,
+            "replication does not go through encode_with"
+        );
+        let y_mat = Mat::col_vec(&prob.y);
+        let sx = enc.encode(&prob.x);
+        let sy_mat = enc.encode(&y_mat);
+        let sy: Vec<f64> = (0..sy_mat.rows()).map(|i| sy_mat.get(i, 0)).collect();
+        let rows_out = enc.rows_out();
+        ensure!(rows_out >= m, "fewer encoded rows than workers");
+        let part = crate::encoding::spectrum::partition_rows(rows_out, m);
+        let shards = part
+            .iter()
+            .enumerate()
+            .map(|(i, &(lo, hi))| {
+                let xs = sx.row_band(lo, hi);
+                let mut ys = sy[lo..hi].to_vec();
+                let rows_real = xs.rows();
+                let padded = pad_bucket(rows_real);
+                let xs = xs.pad_rows(padded);
+                ys.resize(padded, 0.0);
+                WorkerShard { x: xs, y: ys, rows_real, partition_id: i }
+            })
+            .collect();
+        let scheme = if kind == EncoderKind::Identity {
+            Scheme::Uncoded
+        } else {
+            Scheme::Coded
+        };
+        Ok(EncodedProblem {
+            shards,
+            scheme,
+            kind,
+            beta: enc.beta(),
+            gram_scale: enc.gram_scale(),
+            raw: prob.clone(),
+        })
+    }
+
+    pub fn m(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn p(&self) -> usize {
+        self.raw.p()
+    }
+
+    pub fn n_raw(&self) -> usize {
+        self.raw.n()
+    }
+
+    /// Count of *distinct* data contributions in a responder set: distinct
+    /// partitions for replication, responder count otherwise.
+    fn effective_responders(&self, responders: &[usize]) -> Vec<usize> {
+        match self.scheme {
+            Scheme::Replicated { partitions } | Scheme::GradientCoded { groups: partitions } => {
+                let mut seen = vec![false; partitions];
+                let mut keep = Vec::new();
+                for &wid in responders {
+                    let pid = self.shards[wid].partition_id;
+                    if !seen[pid] {
+                        seen[pid] = true;
+                        keep.push(wid);
+                    }
+                }
+                keep
+            }
+            _ => responders.to_vec(),
+        }
+    }
+
+    /// Leader-side gradient aggregation over first-k responses (§2):
+    /// returns `(∇̂f(w), f̂(w))` — the descent-driving estimate of the
+    /// *raw* gradient/objective, ridge term included.
+    ///
+    /// `responses` holds `(worker_id, g_i, f_i)` with
+    /// `g_i = X̃_iᵀ(X̃_i w − ỹ_i)` and `f_i = ‖X̃_i w − ỹ_i‖²` in arrival
+    /// order; only the entries the gather policy admitted should be passed.
+    pub fn aggregate_grad(
+        &self,
+        w: &[f64],
+        responses: &[(usize, Vec<f64>, f64)],
+    ) -> (Vec<f64>, f64) {
+        let p = self.p();
+        let mut g = vec![0.0; p];
+        let mut f = 0.0;
+        let responders: Vec<usize> = responses.iter().map(|r| r.0).collect();
+        let used = self.effective_responders(&responders);
+        let scale = self.gradient_scale(&used);
+        for (wid, gi, fi) in responses {
+            if used.contains(wid) {
+                linalg::axpy(scale, gi, &mut g);
+                f += scale * fi;
+            }
+        }
+        let lambda = self.raw.lambda;
+        for (gi, wi) in g.iter_mut().zip(w) {
+            *gi += lambda * wi;
+        }
+        let f_est = 0.5 * f + 0.5 * lambda * linalg::dot(w, w);
+        (g, f_est)
+    }
+
+    /// Overlap gradient-difference aggregation for L-BFGS (§3): given
+    /// `Δg_i = g_i(w_t) − g_i(w_{t−1})` from the workers in
+    /// `A_t ∩ A_{t−1}`, estimates `r_t ≈ ∇f(w_t) − ∇f(w_{t−1})`
+    /// (ridge curvature `λ·u_t` included). This is the paper's `r_t`
+    /// re-expressed in our `SᵀS = c·I` normalization.
+    pub fn aggregate_grad_diff(&self, u: &[f64], diffs: &[(usize, Vec<f64>)]) -> Vec<f64> {
+        let mut r = vec![0.0; self.p()];
+        let responders: Vec<usize> = diffs.iter().map(|d| d.0).collect();
+        let used = self.effective_responders(&responders);
+        let scale = self.gradient_scale(&used);
+        for (wid, dg) in diffs {
+            if used.contains(wid) {
+                linalg::axpy(scale, dg, &mut r);
+            }
+        }
+        for (ri, ui) in r.iter_mut().zip(u) {
+            *ri += self.raw.lambda * ui;
+        }
+        r
+    }
+
+    /// Line-search curvature aggregation (eq. (3) denominator): combines
+    /// per-worker `q_i = ‖X̃_i d‖²` from the `D_t` responders into the
+    /// estimate of `dᵀ∇²f d = (1/n)‖Xd‖² + λ‖d‖²`.
+    pub fn aggregate_curvature(&self, d: &[f64], responses: &[(usize, f64)]) -> f64 {
+        let responders: Vec<usize> = responses.iter().map(|r| r.0).collect();
+        let used = self.effective_responders(&responders);
+        let scale = self.gradient_scale(&used);
+        let mut q = 0.0;
+        for (wid, qi) in responses {
+            if used.contains(wid) {
+                q += scale * qi;
+            }
+        }
+        q + self.raw.lambda * linalg::dot(d, d)
+    }
+
+    /// Normalization applied to summed worker terms so the estimate is on
+    /// the raw-gradient scale `1/n · Xᵀ(...)`:
+    /// * Coded / Uncoded: `1/(c·η·n)` with `η = |A|/m` (`c = 1` uncoded).
+    /// * Replication: `1/(rows covered by distinct partitions)`.
+    fn gradient_scale(&self, used: &[usize]) -> f64 {
+        match self.scheme {
+            Scheme::Replicated { .. } | Scheme::GradientCoded { .. } => {
+                let rows: usize = used.iter().map(|&w| self.shards[w].rows_real).sum();
+                if rows == 0 {
+                    0.0
+                } else {
+                    1.0 / rows as f64
+                }
+            }
+            _ => {
+                let eta = used.len() as f64 / self.m() as f64;
+                if eta == 0.0 {
+                    0.0
+                } else {
+                    1.0 / (self.gram_scale * eta * self.n_raw() as f64)
+                }
+            }
+        }
+    }
+
+    /// Property-(4) ε estimate for a given η, by sampled spectra (used to
+    /// pick the GD step size and the L-BFGS back-off ν).
+    pub fn estimate_epsilon(&self, k: usize, trials: usize, seed: u64) -> Result<f64> {
+        ensure!(k >= 1 && k <= self.m(), "bad k");
+        ensure!(
+            !matches!(self.scheme, Scheme::Replicated { .. }),
+            "epsilon estimation applies to coded/uncoded schemes"
+        );
+        // rebuild the encoder to materialize S (shards don't keep it)
+        let enc = self.kind.build(self.n_raw(), self.beta, seed)?;
+        let s = enc.materialize();
+        let stats = crate::encoding::spectrum::sample_spectrum(
+            &s,
+            self.m(),
+            k,
+            trials,
+            seed ^ 0xe51,
+            enc.gram_scale(),
+        );
+        Ok(stats.epsilon)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_problem() -> QuadProblem {
+        QuadProblem::synthetic_gaussian(64, 8, 0.05, 42)
+    }
+
+    #[test]
+    fn objective_and_grad_consistent() {
+        let prob = small_problem();
+        let mut rng = Pcg64::seeded(1);
+        let w: Vec<f64> = (0..8).map(|_| rng.next_gaussian()).collect();
+        // finite difference check
+        let g = prob.grad(&w);
+        let eps = 1e-6;
+        for j in 0..8 {
+            let mut wp = w.clone();
+            wp[j] += eps;
+            let mut wm = w.clone();
+            wm[j] -= eps;
+            let fd = (prob.objective(&wp) - prob.objective(&wm)) / (2.0 * eps);
+            assert!((fd - g[j]).abs() < 1e-5, "coord {j}: fd {fd} vs g {}", g[j]);
+        }
+    }
+
+    #[test]
+    fn exact_solution_zeroes_gradient() {
+        let prob = small_problem();
+        let w = prob.exact_solution().unwrap();
+        assert!(linalg::norm2(&prob.grad(&w)) < 1e-9);
+    }
+
+    #[test]
+    fn smoothness_upper_bounds_rayleigh() {
+        let prob = small_problem();
+        let m = prob.smoothness();
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..5 {
+            let v: Vec<f64> = (0..8).map(|_| rng.next_gaussian()).collect();
+            let xv = prob.x.gemv(&v);
+            let r = linalg::dot(&xv, &xv) / prob.n() as f64 / linalg::dot(&v, &v) + prob.lambda;
+            assert!(r <= m * 1.001, "rayleigh {r} > M {m}");
+        }
+    }
+
+    #[test]
+    fn coded_full_participation_matches_true_gradient() {
+        let prob = small_problem();
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 7).unwrap();
+        let mut rng = Pcg64::seeded(5);
+        let w: Vec<f64> = (0..8).map(|_| rng.next_gaussian()).collect();
+        // all workers respond
+        let responses: Vec<(usize, Vec<f64>, f64)> = enc
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let mut g = vec![0.0; 8];
+                let mut buf = vec![0.0; s.x.rows()];
+                let f = s.x.fused_grad(&w, &s.y, &mut g, &mut buf);
+                (i, g, f)
+            })
+            .collect();
+        let (g_est, f_est) = enc.aggregate_grad(&w, &responses);
+        let g_true = prob.grad(&w);
+        let f_true = prob.objective(&w);
+        for (a, b) in g_est.iter().zip(&g_true) {
+            assert!((a - b).abs() < 1e-8, "grad mismatch {a} vs {b}");
+        }
+        assert!((f_est - f_true).abs() < 1e-8, "obj {f_est} vs {f_true}");
+    }
+
+    #[test]
+    fn uncoded_full_participation_matches_true_gradient() {
+        let prob = small_problem();
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Identity, 1.0, 8, 0).unwrap();
+        let w = vec![0.1; 8];
+        let responses: Vec<(usize, Vec<f64>, f64)> = enc
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let mut g = vec![0.0; 8];
+                let mut buf = vec![0.0; s.x.rows()];
+                let f = s.x.fused_grad(&w, &s.y, &mut g, &mut buf);
+                (i, g, f)
+            })
+            .collect();
+        let (g_est, _) = enc.aggregate_grad(&w, &responses);
+        let g_true = prob.grad(&w);
+        for (a, b) in g_est.iter().zip(&g_true) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn replication_dedups_partitions() {
+        let prob = small_problem();
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Replication, 2.0, 8, 0).unwrap();
+        assert_eq!(enc.m(), 8);
+        assert_eq!(enc.scheme, Scheme::Replicated { partitions: 4 });
+        // worker i and i+4 hold the same partition
+        for j in 0..4 {
+            assert_eq!(enc.shards[j].partition_id, enc.shards[j + 4].partition_id);
+            assert!(enc.shards[j].x.max_abs_diff(&enc.shards[j + 4].x) < 1e-15);
+        }
+        let w = vec![0.05; 8];
+        let compute = |i: usize| {
+            let s = &enc.shards[i];
+            let mut g = vec![0.0; 8];
+            let mut buf = vec![0.0; s.x.rows()];
+            let f = s.x.fused_grad(&w, &s.y, &mut g, &mut buf);
+            (i, g, f)
+        };
+        // both copies of partitions 0..4 respond: dedup must make the
+        // estimate equal the full true gradient
+        let responses: Vec<_> = (0..8).map(compute).collect();
+        let (g_est, _) = enc.aggregate_grad(&w, &responses);
+        let g_true = prob.grad(&w);
+        for (a, b) in g_est.iter().zip(&g_true) {
+            assert!((a - b).abs() < 1e-9, "dedup: {a} vs {b}");
+        }
+        // only copies of partitions {0,1} respond → partial but consistent
+        let partial: Vec<_> = [0usize, 4, 1, 5].iter().map(|&i| compute(i)).collect();
+        let (g_part, _) = enc.aggregate_grad(&w, &partial);
+        assert!(linalg::norm2(&g_part) > 0.0);
+    }
+
+    #[test]
+    fn coded_subset_estimate_is_close() {
+        // with a tight code and eta = 3/4, the gradient estimate should be
+        // near (not equal to) the true gradient
+        let prob = small_problem();
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 3).unwrap();
+        let w = vec![0.2; 8];
+        let responses: Vec<(usize, Vec<f64>, f64)> = (0..6)
+            .map(|i| {
+                let s = &enc.shards[i];
+                let mut g = vec![0.0; 8];
+                let mut buf = vec![0.0; s.x.rows()];
+                let f = s.x.fused_grad(&w, &s.y, &mut g, &mut buf);
+                (i, g, f)
+            })
+            .collect();
+        let (g_est, _) = enc.aggregate_grad(&w, &responses);
+        let g_true = prob.grad(&w);
+        let rel = linalg::norm2(&linalg::sub(&g_est, &g_true)) / linalg::norm2(&g_true);
+        assert!(rel < 0.8, "relative grad error {rel}");
+        assert!(rel > 1e-6, "subset estimate should not be exact");
+    }
+
+    #[test]
+    fn curvature_aggregation_full_matches_truth() {
+        let prob = small_problem();
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 11).unwrap();
+        let d = vec![0.3; 8];
+        let responses: Vec<(usize, f64)> = enc
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let xd = s.x.gemv(&d);
+                (i, linalg::dot(&xd, &xd))
+            })
+            .collect();
+        let q = enc.aggregate_curvature(&d, &responses);
+        let xd = prob.x.gemv(&d);
+        let q_true = linalg::dot(&xd, &xd) / prob.n() as f64 + prob.lambda * linalg::dot(&d, &d);
+        assert!((q - q_true).abs() < 1e-8, "{q} vs {q_true}");
+    }
+
+    #[test]
+    fn shards_are_padded_to_buckets() {
+        let prob = QuadProblem::synthetic_gaussian(100, 4, 0.0, 0);
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Gaussian, 2.0, 7, 0).unwrap();
+        for s in &enc.shards {
+            assert!(s.x.rows().is_power_of_two() && s.x.rows() >= 8);
+            assert_eq!(s.x.rows(), s.y.len());
+            assert!(s.rows_real <= s.x.rows());
+        }
+    }
+
+    #[test]
+    fn gradient_coding_exact_under_any_s_stragglers() {
+        // FRC with s=2, m=6 (2 groups of 3): ANY 4 responders contain at
+        // least one member of each group => exact gradient, every subset.
+        let prob = small_problem();
+        let (s, m) = (2usize, 6usize);
+        let enc = EncodedProblem::encode_gradient_coding(&prob, s, m, 0).unwrap();
+        assert_eq!(enc.scheme, Scheme::GradientCoded { groups: 2 });
+        assert!((enc.beta - 3.0).abs() < 1e-12);
+        let w = vec![0.15; 8];
+        let mut all = Vec::new();
+        for shard in &enc.shards {
+            let mut g = vec![0.0; 8];
+            let mut buf = vec![0.0; shard.x.rows()];
+            let f = shard.x.fused_grad(&w, &shard.y, &mut g, &mut buf);
+            all.push((g, f));
+        }
+        let g_true = prob.grad(&w);
+        // every (m - s)-subset of responders decodes exactly
+        for drop_a in 0..m {
+            for drop_b in drop_a + 1..m {
+                let responders: Vec<(usize, Vec<f64>, f64)> = (0..m)
+                    .filter(|&i| i != drop_a && i != drop_b)
+                    .map(|i| (i, all[i].0.clone(), all[i].1))
+                    .collect();
+                let (g_est, _) = enc.aggregate_grad(&w, &responders);
+                for (a, b) in g_est.iter().zip(&g_true) {
+                    assert!(
+                        (a - b).abs() < 1e-9,
+                        "GC not exact dropping {{{drop_a},{drop_b}}}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_coding_requires_divisibility() {
+        let prob = small_problem();
+        assert!(EncodedProblem::encode_gradient_coding(&prob, 2, 8, 0).is_err());
+        assert!(EncodedProblem::encode_gradient_coding(&prob, 1, 8, 0).is_ok());
+    }
+
+    #[test]
+    fn gradient_coding_redundancy_grows_with_tolerance() {
+        // the paper's argument against ref. [20]: beta = s+1
+        let prob = small_problem();
+        for s in [1usize, 3] {
+            let enc = EncodedProblem::encode_gradient_coding(&prob, s, 8, 0).unwrap();
+            assert!((enc.beta - (s + 1) as f64).abs() < 1e-12);
+            // per-worker storage grows linearly in s
+            let rows: usize = enc.shards[0].rows_real;
+            assert_eq!(rows, 64 * (s + 1) / 8);
+        }
+    }
+
+    #[test]
+    fn replication_requires_divisibility() {
+        let prob = small_problem();
+        assert!(EncodedProblem::encode(&prob, EncoderKind::Replication, 3.0, 8, 0).is_err());
+    }
+
+    #[test]
+    fn planted_problem_solution_is_near_truth() {
+        let (prob, w_star) = QuadProblem::planted(200, 6, 0.0, 0.01, 9);
+        let w_hat = prob.exact_solution().unwrap();
+        let rel = linalg::norm2(&linalg::sub(&w_hat, &w_star)) / linalg::norm2(&w_star);
+        assert!(rel < 0.05, "planted recovery rel err {rel}");
+    }
+}

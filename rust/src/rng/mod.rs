@@ -1,0 +1,258 @@
+//! Deterministic pseudo-randomness for the whole stack.
+//!
+//! Every stochastic component (data generation, Gaussian encoders, straggler
+//! delays, shuffles, train/test splits) draws from a seeded [`Pcg64`] so that
+//! experiments and tests are exactly reproducible. PCG-XSL-RR 128/64 —
+//! O'Neill's PCG family; small, fast, and statistically strong enough for
+//! simulation workloads (we are not doing cryptography).
+
+/// PCG-XSL-RR 128/64 pseudo-random generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Box–Muller produces variates in pairs; the second is cached here.
+    cached_gaussian: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id (any values are fine).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 64) | 0xda3e_39cb_94b9_5bdb) | 1;
+        let mut rng = Pcg64 { state: 0, inc, cached_gaussian: None };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Seed-only constructor (stream 0).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent child generator (used to give each worker /
+    /// shard its own stream without coupling draws).
+    pub fn split(&mut self, stream: u64) -> Self {
+        Self::new(self.next_u64(), stream.wrapping_mul(2).wrapping_add(1))
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) (Lemire-style rejection-free enough:
+    /// use 128-bit multiply with rejection for exactness).
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "bound must be positive");
+        // widening multiply + rejection to remove modulo bias
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            if (m as u64) >= threshold {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (both variates used).
+    pub fn next_gaussian(&mut self) -> f64 {
+        match self.cached_gaussian.take() {
+            Some(g) => g,
+            None => {
+                // avoid log(0)
+                let u1 = loop {
+                    let u = self.next_f64();
+                    if u > 1e-300 {
+                        break u;
+                    }
+                };
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                let theta = 2.0 * core::f64::consts::PI * u2;
+                self.cached_gaussian = Some(r * theta.sin());
+                r * theta.cos()
+            }
+        }
+    }
+
+    /// Exponential with the given mean.
+    pub fn next_exp(&mut self, mean: f64) -> f64 {
+        assert!(mean > 0.0);
+        let u = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        -mean * u.ln()
+    }
+
+    /// Pareto(scale, shape) — heavy-tailed delays.
+    pub fn next_pareto(&mut self, scale: f64, shape: f64) -> f64 {
+        assert!(scale > 0.0 && shape > 0.0);
+        let u = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        scale / u.powf(1.0 / shape)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// A uniformly random `k`-subset of `0..n`, in shuffled order.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} of {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        // partial Fisher–Yates: first k entries are the sample
+        for i in 0..k {
+            let j = i + self.next_below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        let same = (0..32).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::seeded(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_respects_bound_and_hits_everything() {
+        let mut r = Pcg64::seeded(3);
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            seen[r.next_below(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::seeded(11);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.next_gaussian();
+            s1 += g;
+            s2 += g * g;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = Pcg64::seeded(13);
+        let n = 100_000;
+        let m: f64 = (0..n).map(|_| r.next_exp(10.0)).sum::<f64>() / n as f64;
+        assert!((m - 10.0).abs() < 0.2, "mean {m}");
+    }
+
+    #[test]
+    fn pareto_exceeds_scale() {
+        let mut r = Pcg64::seeded(17);
+        for _ in 0..1_000 {
+            assert!(r.next_pareto(2.0, 1.5) >= 2.0);
+        }
+    }
+
+    #[test]
+    fn sample_indices_unique_and_in_range() {
+        let mut r = Pcg64::seeded(19);
+        for _ in 0..50 {
+            let s = r.sample_indices(20, 8);
+            assert_eq!(s.len(), 8);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 8);
+            assert!(s.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn permutation_is_bijection() {
+        let mut r = Pcg64::seeded(23);
+        let p = r.permutation(64);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_are_independent_and_deterministic() {
+        let mut parent1 = Pcg64::seeded(5);
+        let mut parent2 = Pcg64::seeded(5);
+        let mut c1 = parent1.split(1);
+        let mut c2 = parent2.split(1);
+        for _ in 0..32 {
+            assert_eq!(c1.next_u64(), c2.next_u64());
+        }
+        let mut c3 = parent1.split(2);
+        let same = (0..32).filter(|_| c1.next_u64() == c3.next_u64()).count();
+        assert!(same < 2);
+    }
+}

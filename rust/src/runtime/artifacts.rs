@@ -1,0 +1,179 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` plus one
+//! `<name>.hlo.txt` per shape-specialized executable. This module parses
+//! the manifest (with the in-tree JSON parser — no serde offline) and
+//! resolves the artifact for a requested kind/shape.
+
+use crate::config::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One artifact entry (shape-specialized HLO text program).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    /// worker_grad / linesearch: (rows, p); fwht: (n, cols).
+    pub dims: (usize, usize),
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<Entry>,
+}
+
+/// Default artifact directory: `$CODEDOPT_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("CODEDOPT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        match v.get("format").and_then(Json::as_str) {
+            Some("hlo-text-v1") => {}
+            other => bail!("unsupported manifest format {other:?}"),
+        }
+        let Some(arr) = v.get("entries").and_then(Json::as_arr) else {
+            bail!("manifest.json: missing entries array");
+        };
+        let mut entries = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .with_context(|| format!("entry {i}: missing name"))?
+                .to_string();
+            let kind = e
+                .get("kind")
+                .and_then(Json::as_str)
+                .with_context(|| format!("entry {i}: missing kind"))?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .with_context(|| format!("entry {i}: missing file"))?
+                .to_string();
+            let dims = match kind.as_str() {
+                "worker_grad" | "linesearch" => (
+                    e.get("rows").and_then(Json::as_usize).context("rows")?,
+                    e.get("p").and_then(Json::as_usize).context("p")?,
+                ),
+                "fwht" => (
+                    e.get("n").and_then(Json::as_usize).context("n")?,
+                    e.get("cols").and_then(Json::as_usize).context("cols")?,
+                ),
+                other => bail!("entry {i}: unknown kind {other:?}"),
+            };
+            entries.push(Entry { name, kind, file, dims });
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    /// Artifact path for an exact kind + dims match.
+    pub fn find(&self, kind: &str, dims: (usize, usize)) -> Option<PathBuf> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.dims == dims)
+            .map(|e| self.dir.join(&e.file))
+    }
+
+    /// Smallest worker_grad row bucket that fits `rows` at dimension `p`
+    /// (shards are zero-padded up to it). None if no bucket covers it.
+    pub fn grad_bucket(&self, rows: usize, p: usize) -> Option<usize> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == "worker_grad" && e.dims.1 == p && e.dims.0 >= rows)
+            .map(|e| e.dims.0)
+            .min()
+    }
+
+    /// All (rows, p) worker_grad shapes available.
+    pub fn grad_shapes(&self) -> Vec<(usize, usize)> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == "worker_grad")
+            .map(|e| e.dims)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("codedopt-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text-v1",
+      "entries": [
+        {"name": "worker_grad_r8_p4", "kind": "worker_grad", "file": "worker_grad_r8_p4.hlo.txt", "rows": 8, "p": 4},
+        {"name": "worker_grad_r32_p4", "kind": "worker_grad", "file": "worker_grad_r32_p4.hlo.txt", "rows": 32, "p": 4},
+        {"name": "linesearch_r8_p4", "kind": "linesearch", "file": "linesearch_r8_p4.hlo.txt", "rows": 8, "p": 4},
+        {"name": "fwht_n64_c8", "kind": "fwht", "file": "fwht_n64_c8.hlo.txt", "n": 64, "cols": 8}
+      ]
+    }"#;
+
+    #[test]
+    fn load_and_query() {
+        let dir = tmpdir("load");
+        write_manifest(&dir, SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 4);
+        assert!(m.find("worker_grad", (8, 4)).is_some());
+        assert!(m.find("worker_grad", (16, 4)).is_none());
+        assert_eq!(m.grad_bucket(5, 4), Some(8));
+        assert_eq!(m.grad_bucket(9, 4), Some(32));
+        assert_eq!(m.grad_bucket(33, 4), None);
+        assert_eq!(m.grad_bucket(8, 5), None);
+        assert_eq!(m.grad_shapes().len(), 2);
+    }
+
+    #[test]
+    fn missing_manifest_is_friendly_error() {
+        let dir = tmpdir("missing");
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "err: {err}");
+    }
+
+    #[test]
+    fn rejects_unknown_format() {
+        let dir = tmpdir("badformat");
+        write_manifest(&dir, r#"{"format": "v999", "entries": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let dir = tmpdir("badkind");
+        write_manifest(
+            &dir,
+            r#"{"format": "hlo-text-v1", "entries": [{"name": "x", "kind": "mystery", "file": "x", "rows": 1, "p": 1}]}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Compute engines: who actually executes the per-worker math.
+//!
+//! The coordinator is engine-agnostic. Two engines implement the same
+//! [`ComputeEngine`] contract:
+//!
+//! * [`NativeEngine`] — pure-Rust fused kernels (`Mat::fused_grad`),
+//!   multithreaded across workers. Default for simulation-scale runs and
+//!   the deterministic test suite.
+//! * [`XlaEngine`] — the production path: loads the HLO-text artifacts the
+//!   Python L2/L1 layers AOT-compiled (`make artifacts`), compiles them on
+//!   the PJRT CPU client once, stages each worker's shard as persistent
+//!   device buffers, and executes per round. Python never runs here.
+//!
+//! Artifacts are shape-specialized; the partitioner pads shards to
+//! power-of-two row buckets (exact no-op padding) so a small artifact set
+//! covers every experiment. [`artifacts::Manifest`] indexes them.
+
+pub mod artifacts;
+pub mod native;
+pub mod xla_engine;
+
+pub use artifacts::Manifest;
+pub use native::NativeEngine;
+pub use xla_engine::XlaEngine;
+
+use crate::problem::EncodedProblem;
+use anyhow::Result;
+
+/// Engine selector for CLI/config surfaces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-Rust fused kernels.
+    Native,
+    /// PJRT execution of the AOT HLO artifacts.
+    Xla,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "rust" => Ok(EngineKind::Native),
+            "xla" | "pjrt" => Ok(EngineKind::Xla),
+            other => anyhow::bail!("unknown engine kind {other:?}"),
+        }
+    }
+}
+
+/// Executes worker-side compute for an [`EncodedProblem`].
+///
+/// The contract mirrors the L2 graphs:
+/// * `worker_grad`: `(g_i, f_i) = (X̃_iᵀ(X̃_i w − ỹ_i), ‖X̃_i w − ỹ_i‖²)`
+/// * `linesearch`: `q_i = ‖X̃_i d‖²`
+///
+/// `worker_grad_all` computes all m workers for one broadcast `w` — the
+/// shape the synchronous round actually needs — and is the hook engines
+/// use for cross-worker parallelism.
+pub trait ComputeEngine: Send {
+    /// Human-readable engine name for logs/metrics.
+    fn name(&self) -> &'static str;
+
+    /// Gradient + local objective for one worker.
+    fn worker_grad(&mut self, worker: usize, w: &[f64]) -> Result<(Vec<f64>, f64)>;
+
+    /// `‖X̃_i d‖²` for one worker.
+    fn linesearch(&mut self, worker: usize, d: &[f64]) -> Result<f64>;
+
+    /// All workers for one broadcast (default: serial loop).
+    fn worker_grad_all(&mut self, w: &[f64]) -> Result<Vec<(Vec<f64>, f64)>> {
+        (0..self.workers()).map(|i| self.worker_grad(i, w)).collect()
+    }
+
+    /// All workers' line-search terms (default: serial loop).
+    fn linesearch_all(&mut self, d: &[f64]) -> Result<Vec<f64>> {
+        (0..self.workers()).map(|i| self.linesearch(i, d)).collect()
+    }
+
+    /// Worker count.
+    fn workers(&self) -> usize;
+}
+
+/// Build an engine over the problem's shards.
+pub fn build_engine(kind: EngineKind, prob: &EncodedProblem) -> Result<Box<dyn ComputeEngine>> {
+    Ok(match kind {
+        EngineKind::Native => Box::new(NativeEngine::new(prob)),
+        EngineKind::Xla => Box::new(XlaEngine::new(prob, artifacts::default_dir())?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("native").unwrap(), EngineKind::Native);
+        assert_eq!(EngineKind::parse("XLA").unwrap(), EngineKind::Xla);
+        assert!(EngineKind::parse("gpu").is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Pure-Rust compute engine: the fused worker kernels on std threads.
+
+use super::ComputeEngine;
+use crate::linalg::{self, Mat};
+use crate::problem::EncodedProblem;
+use anyhow::Result;
+
+/// One worker's staged data + scratch (no allocation on the hot path).
+struct Slot {
+    x: Mat,
+    y: Vec<f64>,
+    grad_buf: Vec<f64>,
+    resid_buf: Vec<f64>,
+}
+
+/// Fused-kernel engine; `worker_grad_all` fans out over std threads.
+pub struct NativeEngine {
+    slots: Vec<Slot>,
+    p: usize,
+    threads: usize,
+}
+
+impl NativeEngine {
+    pub fn new(prob: &EncodedProblem) -> Self {
+        let p = prob.p();
+        let slots = prob
+            .shards
+            .iter()
+            .map(|s| Slot {
+                x: s.x.clone(),
+                y: s.y.clone(),
+                grad_buf: vec![0.0; p],
+                resid_buf: vec![0.0; s.x.rows()],
+            })
+            .collect();
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        NativeEngine { slots, p, threads }
+    }
+
+    /// Cap the fan-out thread count (bench/tuning hook).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+}
+
+impl ComputeEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn worker_grad(&mut self, worker: usize, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let slot = &mut self.slots[worker];
+        let f = slot.x.fused_grad(w, &slot.y, &mut slot.grad_buf, &mut slot.resid_buf);
+        Ok((slot.grad_buf.clone(), f))
+    }
+
+    fn linesearch(&mut self, worker: usize, d: &[f64]) -> Result<f64> {
+        let slot = &mut self.slots[worker];
+        slot.x.gemv_into(d, &mut slot.resid_buf);
+        Ok(linalg::dot(&slot.resid_buf, &slot.resid_buf))
+    }
+
+    fn worker_grad_all(&mut self, w: &[f64]) -> Result<Vec<(Vec<f64>, f64)>> {
+        let threads = self.threads.min(self.slots.len()).max(1);
+        if threads == 1 {
+            return (0..self.slots.len()).map(|i| self.worker_grad(i, w)).collect();
+        }
+        let mut out: Vec<(Vec<f64>, f64)> = Vec::with_capacity(self.slots.len());
+        let chunk = self.slots.len().div_ceil(threads);
+        let results: Vec<Vec<(Vec<f64>, f64)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .slots
+                .chunks_mut(chunk)
+                .map(|slots| {
+                    scope.spawn(move || {
+                        slots
+                            .iter_mut()
+                            .map(|slot| {
+                                let f = slot.x.fused_grad(
+                                    w,
+                                    &slot.y,
+                                    &mut slot.grad_buf,
+                                    &mut slot.resid_buf,
+                                );
+                                (slot.grad_buf.clone(), f)
+                            })
+                            .collect()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+        for r in results {
+            out.extend(r);
+        }
+        Ok(out)
+    }
+
+    fn linesearch_all(&mut self, d: &[f64]) -> Result<Vec<f64>> {
+        let threads = self.threads.min(self.slots.len()).max(1);
+        if threads == 1 {
+            return (0..self.slots.len()).map(|i| self.linesearch(i, d)).collect();
+        }
+        let chunk = self.slots.len().div_ceil(threads);
+        let results: Vec<Vec<f64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .slots
+                .chunks_mut(chunk)
+                .map(|slots| {
+                    scope.spawn(move || {
+                        slots
+                            .iter_mut()
+                            .map(|slot| {
+                                slot.x.gemv_into(d, &mut slot.resid_buf);
+                                linalg::dot(&slot.resid_buf, &slot.resid_buf)
+                            })
+                            .collect()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+        Ok(results.into_iter().flatten().collect())
+    }
+
+    fn workers(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+impl NativeEngine {
+    /// Problem dimension p.
+    pub fn dim(&self) -> usize {
+        self.p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::EncoderKind;
+    use crate::problem::QuadProblem;
+
+    fn engine() -> (EncodedProblem, NativeEngine) {
+        let prob = QuadProblem::synthetic_gaussian(64, 6, 0.0, 1);
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 2).unwrap();
+        let eng = NativeEngine::new(&enc);
+        (enc, eng)
+    }
+
+    #[test]
+    fn grad_matches_direct_computation() {
+        let (enc, mut eng) = engine();
+        let w = vec![0.3; 6];
+        for i in 0..8 {
+            let (g, f) = eng.worker_grad(i, &w).unwrap();
+            let s = &enc.shards[i];
+            let resid = linalg::sub(&s.x.gemv(&w), &s.y);
+            let g_ref = s.x.gemv_t(&resid);
+            let f_ref = linalg::dot(&resid, &resid);
+            assert!((f - f_ref).abs() < 1e-10);
+            for (a, b) in g.iter().zip(&g_ref) {
+                assert!((a - b).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_all_matches_serial() {
+        let (_, mut eng) = engine();
+        let w = vec![0.1; 6];
+        let par = eng.worker_grad_all(&w).unwrap();
+        let ser: Vec<_> = (0..8).map(|i| eng.worker_grad(i, &w).unwrap()).collect();
+        assert_eq!(par.len(), ser.len());
+        for ((gp, fp), (gs, fs)) in par.iter().zip(&ser) {
+            assert!((fp - fs).abs() < 1e-12);
+            for (a, b) in gp.iter().zip(gs) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn linesearch_matches_direct() {
+        let (enc, mut eng) = engine();
+        let d = vec![-0.2; 6];
+        let all = eng.linesearch_all(&d).unwrap();
+        for i in 0..8 {
+            let xd = enc.shards[i].x.gemv(&d);
+            assert!((all[i] - linalg::dot(&xd, &xd)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn single_thread_mode_works() {
+        let (_, eng) = engine();
+        let mut eng = eng.with_threads(1);
+        let w = vec![0.4; 6];
+        let out = eng.worker_grad_all(&w).unwrap();
+        assert_eq!(out.len(), 8);
+    }
+}

@@ -1,0 +1,67 @@
+//! Seeded property-testing helpers (proptest is unavailable offline).
+//!
+//! [`property`] runs a closure over `cases` pseudo-random inputs drawn
+//! from a seeded generator; on failure it reports the case index and seed
+//! so the exact input reproduces with zero flakiness. This is the
+//! mechanism behind the coordinator-invariant property tests in
+//! `rust/tests/`.
+
+use crate::rng::Pcg64;
+
+/// Run `f(case_rng)` for `cases` independent seeded cases; panics with the
+/// failing case's seed on error.
+pub fn property(name: &str, cases: usize, mut f: impl FnMut(&mut Pcg64)) {
+    for case in 0..cases {
+        let seed = 0x9d5f_0000 + case as u64;
+        let mut rng = Pcg64::new(seed, 0x7e57);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Uniform integer in [lo, hi] (inclusive) — shorthand for case generation.
+pub fn gen_range(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    assert!(hi >= lo);
+    lo + rng.next_below((hi - lo + 1) as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_passes_when_invariant_holds() {
+        property("addition commutes", 20, |rng| {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn property_reports_failing_case() {
+        property("always fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_range_is_inclusive() {
+        let mut rng = Pcg64::seeded(0);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..500 {
+            let v = gen_range(&mut rng, 2, 4);
+            assert!((2..=4).contains(&v));
+            seen_lo |= v == 2;
+            seen_hi |= v == 4;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+}

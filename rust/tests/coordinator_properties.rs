@@ -1,0 +1,302 @@
+//! Property tests on the coordinator invariants: routing (first-k gather),
+//! batching (aggregation semantics), and state (L-BFGS overlap machinery)
+//! across randomized cluster shapes, delay models, and encoder families.
+//!
+//! Uses the in-tree seeded property harness (`codedopt::testutil`) —
+//! proptest is unavailable in the offline build; every failure reports a
+//! reproducing seed.
+
+use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
+use codedopt::encoding::EncoderKind;
+use codedopt::linalg;
+use codedopt::optim::{CodedGd, CodedLbfgs, GdConfig, LbfgsConfig, Optimizer};
+use codedopt::problem::{EncodedProblem, QuadProblem, Scheme};
+use codedopt::rng::Pcg64;
+use codedopt::runtime::{ComputeEngine, NativeEngine};
+use codedopt::testutil::{gen_range, property};
+
+fn random_cluster_shape(rng: &mut Pcg64) -> (usize, usize) {
+    let m = gen_range(rng, 2, 12);
+    let k = gen_range(rng, 1, m);
+    (m, k)
+}
+
+fn random_delay(rng: &mut Pcg64) -> DelayModel {
+    match rng.next_below(4) {
+        0 => DelayModel::Exp { mean_ms: 1.0 + 20.0 * rng.next_f64() },
+        1 => DelayModel::ShiftedExp { shift_ms: 2.0, mean_ms: 5.0 },
+        2 => DelayModel::Pareto { scale_ms: 1.0, shape: 1.5 },
+        _ => DelayModel::Constant { ms: 3.0 },
+    }
+}
+
+fn build(
+    rng: &mut Pcg64,
+    kind: EncoderKind,
+    beta: f64,
+    m: usize,
+    k: usize,
+) -> (EncodedProblem, Cluster) {
+    let n = gen_range(rng, m.max(8), 96).next_power_of_two();
+    let p = gen_range(rng, 2, 12);
+    let seed = rng.next_u64();
+    let prob = QuadProblem::synthetic_gaussian(n, p, 0.01, seed);
+    let enc = EncodedProblem::encode(&prob, kind, beta, m, seed).expect("encode");
+    let engine = Box::new(NativeEngine::new(&enc));
+    let cfg = ClusterConfig {
+        workers: m,
+        wait_for: k,
+        delay: random_delay(rng),
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed,
+    };
+    let cluster = Cluster::new(&enc, engine, cfg).expect("cluster");
+    (enc, cluster)
+}
+
+/// Routing invariant: every round admits exactly k workers (absent
+/// failures), they are distinct and valid ids, in ascending arrival
+/// order, and the round duration is the k-th arrival.
+#[test]
+fn prop_first_k_gather_invariants() {
+    property("first-k gather", 30, |rng| {
+        let (m, k) = random_cluster_shape(rng);
+        let (enc, mut cluster) = build(rng, EncoderKind::Gaussian, 2.0, m, k);
+        let w = vec![0.1; enc.p()];
+        for _ in 0..5 {
+            let (responses, round) = cluster.grad_round(&w).unwrap();
+            assert_eq!(round.admitted.len(), k, "admitted exactly k");
+            assert_eq!(responses.len(), k);
+            let mut seen = std::collections::HashSet::new();
+            for &wid in &round.admitted {
+                assert!(wid < m, "worker id in range");
+                assert!(seen.insert(wid), "no duplicate workers");
+            }
+            // arrival times sorted, k-th defines elapsed
+            for pair in round.arrivals.windows(2) {
+                assert!(pair[0].1 <= pair[1].1, "arrivals sorted");
+            }
+            assert_eq!(round.elapsed_ms, round.arrivals[k - 1].1);
+            // admitted = k smallest arrivals
+            let cutoff = round.arrivals[k - 1].1;
+            for &(wid, t) in &round.arrivals[k..] {
+                assert!(t >= cutoff, "worker {wid} arrived early but not admitted");
+            }
+        }
+    });
+}
+
+/// Batching invariant: coded/uncoded aggregation over ALL workers equals
+/// the true raw gradient exactly (tight frames) and the objective matches.
+#[test]
+fn prop_full_aggregation_is_exact() {
+    property("full aggregation exact", 25, |rng| {
+        let kind = match rng.next_below(3) {
+            0 => EncoderKind::Hadamard,
+            1 => EncoderKind::Dft,
+            _ => EncoderKind::Identity,
+        };
+        let beta = if kind == EncoderKind::Identity { 1.0 } else { 2.0 };
+        let m = gen_range(rng, 2, 8);
+        let (enc, _) = build(rng, kind, beta, m, m);
+        let p = enc.p();
+        let w: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let mut engine = NativeEngine::new(&enc);
+        let all = engine.worker_grad_all(&w).unwrap();
+        let responses: Vec<(usize, Vec<f64>, f64)> = all
+            .into_iter()
+            .enumerate()
+            .map(|(i, (g, f))| (i, g, f))
+            .collect();
+        let (g_est, f_est) = enc.aggregate_grad(&w, &responses);
+        let g_true = enc.raw.grad(&w);
+        let f_true = enc.raw.objective(&w);
+        let g_err = linalg::norm2(&linalg::sub(&g_est, &g_true))
+            / linalg::norm2(&g_true).max(1e-12);
+        assert!(g_err < 1e-6, "gradient rel err {g_err} ({kind:?})");
+        assert!(
+            (f_est - f_true).abs() / f_true.max(1e-12) < 1e-6,
+            "objective {f_est} vs {f_true}"
+        );
+    });
+}
+
+/// Batching invariant: aggregation is permutation-invariant in arrival
+/// order (the leader must not depend on who answered first).
+#[test]
+fn prop_aggregation_order_invariant() {
+    property("aggregation order-invariant", 20, |rng| {
+        let (m, k) = random_cluster_shape(rng);
+        let (enc, mut cluster) = build(rng, EncoderKind::Hadamard, 2.0, m, k);
+        let p = enc.p();
+        let w: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let (mut responses, _) = cluster.grad_round(&w).unwrap();
+        let (g1, f1) = enc.aggregate_grad(&w, &responses);
+        // shuffle arrival order
+        for i in (1..responses.len()).rev() {
+            let j = rng.next_below((i + 1) as u64) as usize;
+            responses.swap(i, j);
+        }
+        let (g2, f2) = enc.aggregate_grad(&w, &responses);
+        assert!((f1 - f2).abs() < 1e-12);
+        for (a, b) in g1.iter().zip(&g2) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    });
+}
+
+/// Replication dedup invariant: duplicate copies of a partition never
+/// change the estimate, regardless of which copies respond.
+#[test]
+fn prop_replication_dedup() {
+    property("replication dedup", 20, |rng| {
+        let partitions = gen_range(rng, 2, 5);
+        let m = partitions * 2; // beta 2
+        let n = (partitions * gen_range(rng, 4, 16)).next_power_of_two();
+        let p = gen_range(rng, 2, 8);
+        let seed = rng.next_u64();
+        let prob = QuadProblem::synthetic_gaussian(n, p, 0.0, seed);
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Replication, 2.0, m, seed).unwrap();
+        assert_eq!(enc.scheme, Scheme::Replicated { partitions });
+        let w: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let mut engine = NativeEngine::new(&enc);
+        let all = engine.worker_grad_all(&w).unwrap();
+        let resp = |ids: &[usize]| -> Vec<(usize, Vec<f64>, f64)> {
+            ids.iter().map(|&i| (i, all[i].0.clone(), all[i].1)).collect()
+        };
+        // one copy of partition j vs both copies: same estimate
+        for j in 0..partitions {
+            let (g_one, _) = enc.aggregate_grad(&w, &resp(&[j]));
+            let (g_both, _) = enc.aggregate_grad(&w, &resp(&[j, j + partitions]));
+            for (a, b) in g_one.iter().zip(&g_both) {
+                assert!((a - b).abs() < 1e-10, "partition {j}: dedup failed");
+            }
+        }
+    });
+}
+
+/// State invariant: optimizer runs are exactly reproducible from the seed
+/// (bitwise trace equality).
+#[test]
+fn prop_runs_are_deterministic() {
+    property("deterministic runs", 10, |rng| {
+        let (m, k) = random_cluster_shape(rng);
+        let kind = match rng.next_below(3) {
+            0 => EncoderKind::Hadamard,
+            1 => EncoderKind::Gaussian,
+            _ => EncoderKind::Identity,
+        };
+        let beta = if kind == EncoderKind::Identity { 1.0 } else { 2.0 };
+        let seed_snapshot = rng.clone();
+        let run = |rng: &mut Pcg64| {
+            let (enc, mut cluster) = build(rng, kind, beta, m, k);
+            let lb = CodedLbfgs::new(LbfgsConfig { epsilon: Some(0.3), ..Default::default() });
+            lb.run(&enc, &mut cluster, 8).unwrap()
+        };
+        let out1 = run(&mut seed_snapshot.clone());
+        let out2 = run(&mut seed_snapshot.clone());
+        assert_eq!(out1.trace.len(), out2.trace.len());
+        for (a, b) in out1.trace.records.iter().zip(&out2.trace.records) {
+            assert_eq!(a.f_true.to_bits(), b.f_true.to_bits(), "bitwise reproducible");
+            assert_eq!(a.responders, b.responders);
+        }
+    });
+}
+
+/// State invariant: GD with a Theorem-1 step on full participation never
+/// increases the true objective.
+#[test]
+fn prop_gd_monotone_at_full_participation() {
+    property("GD monotone (k=m)", 15, |rng| {
+        let m = gen_range(rng, 2, 8);
+        let (enc, mut cluster) = build(rng, EncoderKind::Hadamard, 2.0, m, m);
+        let gd = CodedGd::new(GdConfig { zeta: 0.5, epsilon: Some(0.0), ..Default::default() });
+        let out = gd.run(&enc, &mut cluster, 15).unwrap();
+        for pair in out.trace.records.windows(2) {
+            assert!(
+                pair[1].f_true <= pair[0].f_true + 1e-9,
+                "objective increased at iter {}",
+                pair[1].iter
+            );
+        }
+    });
+}
+
+/// Clock invariant: simulated time is nonnegative per round and additive
+/// across rounds.
+#[test]
+fn prop_sim_clock_monotone() {
+    property("sim clock", 15, |rng| {
+        let (m, k) = random_cluster_shape(rng);
+        let (enc, mut cluster) = build(rng, EncoderKind::Gaussian, 2.0, m, k);
+        let w = vec![0.0; enc.p()];
+        let mut last = 0.0;
+        for _ in 0..6 {
+            let (_, round) = cluster.grad_round(&w).unwrap();
+            assert!(round.elapsed_ms >= 0.0);
+            let now = cluster.sim_ms;
+            assert!(now >= last, "clock went backwards");
+            assert!((now - last - round.elapsed_ms).abs() < 1e-9, "clock additivity");
+            last = now;
+        }
+    });
+}
+
+/// Encoding invariant: for every coded family, shard rows partition the
+/// encoded rows and padding rows are exactly zero.
+#[test]
+fn prop_shard_partition_covers_encoded_rows() {
+    property("shard partition", 20, |rng| {
+        let kinds = [
+            EncoderKind::Gaussian,
+            EncoderKind::Hadamard,
+            EncoderKind::Dft,
+            EncoderKind::PaleyEtf,
+            EncoderKind::HadamardEtf,
+            EncoderKind::SteinerEtf,
+        ];
+        let kind = kinds[rng.next_below(kinds.len() as u64) as usize];
+        let m = gen_range(rng, 2, 6);
+        let n = gen_range(rng, 16, 48);
+        let p = gen_range(rng, 2, 6);
+        let seed = rng.next_u64();
+        let prob = QuadProblem::synthetic_gaussian(n, p, 0.0, seed);
+        let enc = EncodedProblem::encode(&prob, kind, 2.0, m, seed).expect("encode");
+        assert_eq!(enc.m(), m);
+        let real_rows: usize = enc.shards.iter().map(|s| s.rows_real).sum();
+        assert!(
+            (real_rows as f64 - enc.beta * n as f64).abs() < 1.0,
+            "{kind:?}: shard rows {real_rows} != beta*n = {}",
+            enc.beta * n as f64
+        );
+        for s in &enc.shards {
+            assert!(s.x.rows() >= s.rows_real);
+            assert!(s.x.rows().is_power_of_two() && s.x.rows() >= 8);
+            // padding rows are exactly zero
+            for r in s.rows_real..s.x.rows() {
+                assert!(s.x.row(r).iter().all(|&v| v == 0.0));
+                assert_eq!(s.y[r], 0.0);
+            }
+        }
+    });
+}
+
+/// L-BFGS state invariant: the overlap pair machinery never produces a
+/// non-finite iterate, across delay models and small k (worst case for
+/// overlap size), for coded encoders.
+#[test]
+fn prop_lbfgs_iterates_stay_finite() {
+    property("lbfgs finite", 15, |rng| {
+        let m = gen_range(rng, 3, 10);
+        let k = gen_range(rng, 1, m);
+        let (enc, mut cluster) = build(rng, EncoderKind::Hadamard, 2.0, m, k);
+        let lb = CodedLbfgs::new(LbfgsConfig { epsilon: Some(0.3), ..Default::default() });
+        let out = lb.run(&enc, &mut cluster, 12).unwrap();
+        assert!(out.w.iter().all(|x| x.is_finite()), "non-finite iterate");
+        for r in &out.trace.records {
+            assert!(r.f_true.is_finite(), "non-finite objective at {}", r.iter);
+            assert!(r.alpha.is_finite() && r.alpha > 0.0);
+        }
+    });
+}

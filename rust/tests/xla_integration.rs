@@ -1,0 +1,111 @@
+//! Integration: the PJRT/XLA engine executes the AOT HLO artifacts and
+//! matches the native Rust engine bit-for-bit-ish (f32 tolerance).
+//!
+//! This is the cross-layer correctness proof: Pallas kernel (L1) → JAX
+//! graph (L2) → HLO text → PJRT executable → Rust coordinator (L3).
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
+use codedopt::encoding::EncoderKind;
+use codedopt::optim::{CodedLbfgs, LbfgsConfig, Optimizer};
+use codedopt::problem::{EncodedProblem, QuadProblem};
+use codedopt::runtime::{ComputeEngine, Manifest, NativeEngine, XlaEngine};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = codedopt::runtime::artifacts::default_dir();
+    if Manifest::load(&dir).is_ok() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+/// p=64 matches the quickstart artifact bucket set.
+fn test_problem(seed: u64) -> (QuadProblem, EncodedProblem) {
+    let prob = QuadProblem::synthetic_gaussian(256, 64, 0.05, seed);
+    let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, seed).unwrap();
+    (prob, enc)
+}
+
+#[test]
+fn xla_engine_matches_native_gradients() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (_, enc) = test_problem(1);
+    let mut native = NativeEngine::new(&enc);
+    let mut xla = XlaEngine::new(&enc, dir).expect("XlaEngine init");
+    let w: Vec<f64> = (0..64).map(|i| 0.01 * (i as f64 - 32.0)).collect();
+    for worker in 0..8 {
+        let (gn, fn_) = native.worker_grad(worker, &w).unwrap();
+        let (gx, fx) = xla.worker_grad(worker, &w).unwrap();
+        // f32 kernel vs f64 native: relative tolerance
+        let scale = fn_.abs().max(1.0);
+        assert!(
+            (fn_ - fx).abs() / scale < 1e-4,
+            "worker {worker}: f native {fn_} vs xla {fx}"
+        );
+        for (j, (a, b)) in gn.iter().zip(&gx).enumerate() {
+            let s = a.abs().max(1.0);
+            assert!(
+                (a - b).abs() / s < 1e-3,
+                "worker {worker} grad[{j}]: native {a} vs xla {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_engine_matches_native_linesearch() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (_, enc) = test_problem(2);
+    let mut native = NativeEngine::new(&enc);
+    let mut xla = XlaEngine::new(&enc, dir).expect("XlaEngine init");
+    let d: Vec<f64> = (0..64).map(|i| ((i * 7 % 13) as f64 - 6.0) * 0.1).collect();
+    for worker in 0..8 {
+        let qn = native.linesearch(worker, &d).unwrap();
+        let qx = xla.linesearch(worker, &d).unwrap();
+        assert!(
+            (qn - qx).abs() / qn.max(1.0) < 1e-4,
+            "worker {worker}: q native {qn} vs xla {qx}"
+        );
+    }
+}
+
+#[test]
+fn full_lbfgs_run_on_xla_engine_converges() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (prob, enc) = test_problem(3);
+    let engine = Box::new(XlaEngine::new(&enc, dir).expect("XlaEngine init"));
+    let cfg = ClusterConfig {
+        workers: 8,
+        wait_for: 6,
+        delay: DelayModel::Exp { mean_ms: 10.0 },
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed: 3,
+    };
+    let mut cluster = Cluster::new(&enc, engine, cfg).unwrap();
+    let lbfgs = CodedLbfgs::new(LbfgsConfig { epsilon: Some(0.2), ..Default::default() });
+    let out = lbfgs.run(&enc, &mut cluster, 30).unwrap();
+    assert!(!out.trace.diverged(), "XLA-engine L-BFGS diverged");
+    let f_star = prob.objective(&prob.exact_solution().unwrap());
+    let f0 = prob.objective(&vec![0.0; 64]);
+    let f_end = out.trace.best_objective();
+    assert!(
+        f_end - f_star < 0.15 * (f0 - f_star),
+        "no convergence on XLA engine: end {f_end}, f* {f_star}, f0 {f0}"
+    );
+}
+
+#[test]
+fn xla_engine_fails_fast_on_missing_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    // p = 13 has no artifacts
+    let prob = QuadProblem::synthetic_gaussian(64, 13, 0.0, 4);
+    let enc = EncodedProblem::encode(&prob, EncoderKind::Gaussian, 2.0, 4, 4).unwrap();
+    let err = match XlaEngine::new(&enc, dir) {
+        Ok(_) => panic!("expected missing-shape error"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("artifact"), "unexpected error: {err}");
+}
