@@ -122,6 +122,51 @@ fn bench_cluster_round() {
     println!("leader aggregation: {agg_ms:.4} ms per round");
 }
 
+fn bench_streaming_gather() {
+    println!("\n--- streaming first-k gather: measured clock, straggler cancellation (n=4096, p=512, m=32, β=2) ---");
+    let prob = QuadProblem::synthetic_gaussian(4096, 512, 0.05, 6);
+    let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 32, 6).unwrap();
+    let w = vec![0.1; 512];
+    let mut wall = |k: usize| -> f64 {
+        let engine = Box::new(NativeEngine::new(&enc));
+        let cfg = ClusterConfig {
+            workers: 32,
+            wait_for: k,
+            delay: DelayModel::None,
+            clock: ClockMode::Measured,
+            ms_per_mflop: 0.5,
+            seed: 6,
+        };
+        let mut cluster = Cluster::new(&enc, engine, cfg).unwrap();
+        time_ms(10, || {
+            std::hint::black_box(cluster.grad_round(&w).unwrap());
+        })
+    };
+    let full = wall(32);
+    let first12 = wall(12);
+    println!(
+        "wall per round: k=32 {full:.2} ms   k=12 {first12:.2} ms   cancellation saves {:.1}%",
+        100.0 * (1.0 - first12 / full)
+    );
+    // per-worker measured times actually differ (no mean-share smearing)
+    let engine = Box::new(NativeEngine::new(&enc));
+    let cfg = ClusterConfig {
+        workers: 32,
+        wait_for: 32,
+        delay: DelayModel::None,
+        clock: ClockMode::Measured,
+        ms_per_mflop: 0.5,
+        seed: 6,
+    };
+    let mut cluster = Cluster::new(&enc, engine, cfg).unwrap();
+    let (_, round) = cluster.grad_round(&w).unwrap();
+    let finite: Vec<f64> = round.compute_ms.iter().copied().filter(|t| t.is_finite()).collect();
+    let (lo, hi) = finite
+        .iter()
+        .fold((f64::INFINITY, 0.0f64), |(lo, hi), &t| (lo.min(t), hi.max(t)));
+    println!("per-worker measured compute spread: min {lo:.3} ms, max {hi:.3} ms");
+}
+
 fn bench_xla_round() {
     println!("\n--- XLA engine round latency (p=64 artifact shapes) ---");
     let dir = codedopt::runtime::artifacts::default_dir();
@@ -149,5 +194,6 @@ fn main() {
     bench_fwht_encode();
     bench_gemm();
     bench_cluster_round();
+    bench_streaming_gather();
     bench_xla_round();
 }

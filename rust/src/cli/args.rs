@@ -10,9 +10,11 @@ use std::collections::{HashMap, HashSet};
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First positional token, if any.
     pub subcommand: Option<String>,
     flags: HashMap<String, String>,
     switches: HashSet<String>,
+    /// Trailing `key=value` config overrides.
     pub overrides: Vec<String>,
 }
 
@@ -55,14 +57,17 @@ impl Args {
         Self::from_iter(std::env::args().skip(1))
     }
 
+    /// Raw value of `--name`, if given.
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// True if the bare switch `--name` was given.
     pub fn switch(&self, name: &str) -> bool {
         self.switches.contains(name)
     }
 
+    /// `--name` as usize, or `default` when absent.
     pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.flags.get(name) {
             None => Ok(default),
@@ -70,6 +75,7 @@ impl Args {
         }
     }
 
+    /// `--name` as f64, or `default` when absent.
     pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.flags.get(name) {
             None => Ok(default),
@@ -77,6 +83,7 @@ impl Args {
         }
     }
 
+    /// `--name` as u64, or `default` when absent.
     pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.flags.get(name) {
             None => Ok(default),
@@ -84,6 +91,7 @@ impl Args {
         }
     }
 
+    /// `--name` as a string, or `default` when absent.
     pub fn flag_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.flags.get(name).map(|s| s.as_str()).unwrap_or(default)
     }

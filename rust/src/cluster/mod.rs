@@ -1,5 +1,5 @@
-//! Simulated leader/worker cluster with first-k-of-m gather — the
-//! distributed substrate the paper runs on (Figure 1).
+//! Simulated leader/worker cluster with streaming first-k-of-m gather —
+//! the distributed substrate the paper runs on (Figure 1).
 //!
 //! The paper's two testbeds are (a) a 32-node EC2 cluster with natural
 //! network stragglers and (b) a 32-core machine with **injected**
@@ -7,22 +7,33 @@
 //! directly, with a family of delay models ([`DelayModel`]): per round,
 //! every worker computes its shard task, each response is assigned
 //! `arrival = compute_time + sampled delay`, and the leader admits the
-//! **first k** arrivals (`A_t`); the round's simulated duration is the
-//! k-th arrival time. Late responses are dropped (the paper's
+//! **first k** responses (`A_t`). Late responses are dropped (the paper's
 //! "drop their updates upon arrival" option).
 //!
-//! Two clocks:
-//! * [`ClockMode::Virtual`] — compute time from a deterministic flop-cost
-//!   model; fully reproducible (tests, convergence figures).
-//! * [`ClockMode::Measured`] — compute time measured on the wall clock
-//!   (runtime figures with a real engine in the loop).
+//! Rounds are **event-driven**: the engine streams each worker's response
+//! into the round's [`Collector`](crate::runtime::Collector) the moment
+//! that worker finishes (one OS thread per shard on the native engine),
+//! and the two clocks differ in how the leader consumes that stream:
+//!
+//! * [`ClockMode::Virtual`] — compute time comes from a deterministic
+//!   flop-cost model and admission is decided post hoc from the sampled
+//!   arrival schedule; fully reproducible (tests, convergence figures).
+//!   Byte-identical to the historical batch-synchronous gather: same RNG
+//!   stream, same admitted set, same `elapsed_ms`.
+//! * [`ClockMode::Measured`] — each worker's compute time is its **own
+//!   wall-clock measurement**, admission follows true arrival order, and
+//!   the k-th admission flips the round's cancellation flag so workers
+//!   that have not started yet skip their shard entirely (runtime figures
+//!   with a real engine in the loop). Injected delay *magnitudes* belong
+//!   to the virtual simulator and are ignored here; only fail-stop events
+//!   (infinite delay) carry over.
 //!
 //! The cluster is engine-agnostic ([`ComputeEngine`]): the same rounds run
 //! on the native Rust kernels or the PJRT/XLA artifacts.
 
 use crate::problem::EncodedProblem;
 use crate::rng::Pcg64;
-use crate::runtime::ComputeEngine;
+use crate::runtime::{Collected, ComputeEngine, CurvCollector, GradCollector};
 use anyhow::{ensure, Result};
 
 /// Straggler delay model (per worker, per round), milliseconds.
@@ -31,19 +42,45 @@ pub enum DelayModel {
     /// No injected delay (all workers equally fast).
     None,
     /// Constant delay for every worker.
-    Constant { ms: f64 },
+    Constant {
+        /// Delay applied to every worker, ms.
+        ms: f64,
+    },
     /// i.i.d. exponential — the paper's MovieLens model (`exp(10ms)`).
-    Exp { mean_ms: f64 },
+    Exp {
+        /// Mean of the exponential, ms.
+        mean_ms: f64,
+    },
     /// Shifted exponential: `shift + exp(mean)`; classic straggler model.
-    ShiftedExp { shift_ms: f64, mean_ms: f64 },
+    ShiftedExp {
+        /// Deterministic shift, ms.
+        shift_ms: f64,
+        /// Mean of the exponential part, ms.
+        mean_ms: f64,
+    },
     /// Heavy-tailed Pareto(scale, shape).
-    Pareto { scale_ms: f64, shape: f64 },
+    Pareto {
+        /// Pareto scale (minimum delay), ms.
+        scale_ms: f64,
+        /// Pareto tail exponent (smaller = heavier tail).
+        shape: f64,
+    },
     /// Exponential with a per-worker fail-stop probability: a failed
     /// worker never responds that round (delay = ∞).
-    ExpWithFailures { mean_ms: f64, p_fail: f64 },
+    ExpWithFailures {
+        /// Mean of the exponential, ms.
+        mean_ms: f64,
+        /// Per-round probability a worker never responds.
+        p_fail: f64,
+    },
     /// Heterogeneous: exponential whose mean is `mean_ms * factor[i]`
     /// (persistent slow nodes).
-    HeteroExp { mean_ms: f64, factors: Vec<f64> },
+    HeteroExp {
+        /// Base mean, ms.
+        mean_ms: f64,
+        /// Per-worker multipliers, cycled if shorter than the worker count.
+        factors: Vec<f64>,
+    },
 }
 
 impl DelayModel {
@@ -69,8 +106,19 @@ impl DelayModel {
         }
     }
 
-    /// Parse CLI forms like `exp:10`, `shifted:5:10`, `pareto:2:1.5`,
-    /// `expfail:10:0.05`, `const:3`, `none`.
+    /// Parse a delay model from its CLI form. This table is the single
+    /// source of truth for the grammar (used by `codedopt ridge --delay`,
+    /// `codedopt mf --delay`, and the bench/config surfaces):
+    ///
+    /// | variant | form | example |
+    /// |---------|------|---------|
+    /// | [`DelayModel::None`] | `none` | `none` |
+    /// | [`DelayModel::Constant`] | `const:MS` | `const:3` |
+    /// | [`DelayModel::Exp`] | `exp:MEAN_MS` | `exp:10` |
+    /// | [`DelayModel::ShiftedExp`] | `shifted:SHIFT_MS:MEAN_MS` | `shifted:5:10` |
+    /// | [`DelayModel::Pareto`] | `pareto:SCALE_MS:SHAPE` | `pareto:2:1.5` |
+    /// | [`DelayModel::ExpWithFailures`] | `expfail:MEAN_MS:P_FAIL` | `expfail:10:0.05` |
+    /// | [`DelayModel::HeteroExp`] | `hetero:MEAN_MS:F1,F2,...` | `hetero:10:1,1,4` |
     pub fn parse(s: &str) -> Result<Self> {
         let parts: Vec<&str> = s.split(':').collect();
         let num = |i: usize| -> Result<f64> {
@@ -87,6 +135,21 @@ impl DelayModel {
             "shifted" => DelayModel::ShiftedExp { shift_ms: num(1)?, mean_ms: num(2)? },
             "pareto" => DelayModel::Pareto { scale_ms: num(1)?, shape: num(2)? },
             "expfail" => DelayModel::ExpWithFailures { mean_ms: num(1)?, p_fail: num(2)? },
+            "hetero" => {
+                let mean_ms = num(1)?;
+                let factors = parts
+                    .get(2)
+                    .ok_or_else(|| anyhow::anyhow!("delay model {s:?}: missing factor list"))?
+                    .split(',')
+                    .map(|f| {
+                        f.trim()
+                            .parse::<f64>()
+                            .map_err(|e| anyhow::anyhow!("delay model {s:?}: factor {f:?}: {e}"))
+                    })
+                    .collect::<Result<Vec<f64>>>()?;
+                ensure!(!factors.is_empty(), "delay model {s:?}: empty factor list");
+                DelayModel::HeteroExp { mean_ms, factors }
+            }
             other => anyhow::bail!("unknown delay model {other:?}"),
         })
     }
@@ -95,21 +158,40 @@ impl DelayModel {
 /// How the per-round compute time entering the clock is obtained.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ClockMode {
-    /// Deterministic flop-cost model (reproducible).
+    /// Deterministic flop-cost model (reproducible); injected delays are
+    /// added to the modeled compute times to form the arrival schedule.
     Virtual,
-    /// Wall-clock measurement of the engine call.
+    /// Per-worker wall-clock measurement taken inside each worker's
+    /// streamed computation (distinct times for unequal shards), with
+    /// straggler cancellation once the k-th response is admitted. Real
+    /// timing only: injected delay magnitudes are ignored (the hardware
+    /// provides the stragglers); fail-stop events still apply.
     Measured,
+}
+
+impl ClockMode {
+    /// Parse the CLI forms `virtual`/`sim` and `measured`/`wall`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "virtual" | "sim" => Ok(ClockMode::Virtual),
+            "measured" | "wall" => Ok(ClockMode::Measured),
+            other => anyhow::bail!("unknown clock mode {other:?} (virtual|measured)"),
+        }
+    }
 }
 
 /// Leader gather policy. `FirstK` is the paper's scheme; `WaitAll`
 /// (k = m) is the "perfect"/batch baseline in Figure 5.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum GatherPolicy {
+    /// Admit the first `k` responses.
     FirstK(usize),
+    /// Wait for every worker (the k = m baseline).
     WaitAll,
 }
 
 impl GatherPolicy {
+    /// The effective k for a cluster of `m` workers.
     pub fn k(&self, m: usize) -> usize {
         match self {
             GatherPolicy::FirstK(k) => (*k).min(m),
@@ -125,10 +207,13 @@ pub struct ClusterConfig {
     pub workers: usize,
     /// k — responses the leader waits for per round.
     pub wait_for: usize,
+    /// Injected straggler delay model.
     pub delay: DelayModel,
+    /// Clock source for per-worker compute times.
     pub clock: ClockMode,
     /// Virtual-clock compute cost in ms per million multiply-adds.
     pub ms_per_mflop: f64,
+    /// Seed for the delay-sampling RNG.
     pub seed: u64,
 }
 
@@ -148,15 +233,27 @@ impl Default for ClusterConfig {
 /// Outcome of one synchronous round.
 #[derive(Clone, Debug)]
 pub struct Round {
-    /// Admitted workers `A_t` in arrival order (`|A_t| = k` unless
-    /// failures left fewer responders).
+    /// Admitted workers `A_t` (`|A_t| = k` unless failures left fewer
+    /// responders). Under [`ClockMode::Virtual`] these are the k smallest
+    /// sampled arrivals in arrival order; under [`ClockMode::Measured`]
+    /// they are the first k responses in true delivery order.
     pub admitted: Vec<usize>,
-    /// All finite arrivals `(worker, arrival_ms)`, sorted.
+    /// Arrivals `(worker, arrival_ms)` sorted by arrival time. Virtual
+    /// rounds list every non-failed worker with
+    /// `arrival = compute + injected delay`; measured rounds list only
+    /// workers that actually computed (cancelled stragglers never produce
+    /// an arrival), with `arrival =` that worker's measured compute time —
+    /// injected delay magnitudes never enter measured timing.
     pub arrivals: Vec<(usize, f64)>,
-    /// Simulated round duration: the k-th arrival time.
+    /// Simulated round duration: the k-th (last admitted) arrival time.
     pub elapsed_ms: f64,
     /// Workers that never responded (failures).
     pub failed: Vec<usize>,
+    /// Per-worker compute time (ms), indexed by worker id: the flop-model
+    /// cost under [`ClockMode::Virtual`], the worker's own wall-clock
+    /// measurement under [`ClockMode::Measured`]. `NaN` for workers that
+    /// were cancelled before computing.
+    pub compute_ms: Vec<f64>,
 }
 
 /// Per-round gradient responses from the admitted set, arrival-ordered.
@@ -174,6 +271,7 @@ pub struct Cluster {
     ls_mflops: Vec<f64>,
     /// Accumulated simulated time.
     pub sim_ms: f64,
+    /// Rounds executed so far (gradient + line-search).
     pub rounds_run: u64,
 }
 
@@ -222,6 +320,7 @@ impl Cluster {
         })
     }
 
+    /// The active configuration.
     pub fn config(&self) -> &ClusterConfig {
         &self.cfg
     }
@@ -232,13 +331,22 @@ impl Cluster {
         self.cfg.wait_for = k;
     }
 
-    /// Sample one round's arrival schedule and admit the first k.
-    fn gather(&mut self, compute_ms: &[f64]) -> Round {
+    /// Sample this round's injected delays, worker-index order (the RNG
+    /// consumption order is part of the reproducibility contract).
+    fn sample_delays(&mut self) -> Vec<f64> {
+        (0..self.cfg.workers)
+            .map(|i| self.cfg.delay.sample(&mut self.rng, i))
+            .collect()
+    }
+
+    /// Virtual-clock round: deterministic post-hoc admission over the
+    /// sampled arrival schedule `arrival_i = compute_i + delay_i`. This is
+    /// the historical batch gather, byte for byte.
+    fn virtual_round(&self, compute_ms: Vec<f64>, delays: &[f64]) -> Round {
         let m = self.cfg.workers;
         let mut arrivals: Vec<(usize, f64)> = Vec::with_capacity(m);
         let mut failed = Vec::new();
-        for i in 0..m {
-            let delay = self.cfg.delay.sample(&mut self.rng, i);
+        for (i, &delay) in delays.iter().enumerate() {
             if delay.is_finite() {
                 arrivals.push((i, compute_ms[i] + delay));
             } else {
@@ -249,38 +357,80 @@ impl Cluster {
         let k = self.cfg.wait_for.min(arrivals.len());
         let admitted: Vec<usize> = arrivals[..k].iter().map(|&(w, _)| w).collect();
         let elapsed_ms = arrivals.get(k.saturating_sub(1)).map(|&(_, t)| t).unwrap_or(0.0);
-        Round { admitted, arrivals, elapsed_ms, failed }
+        Round { admitted, arrivals, elapsed_ms, failed, compute_ms }
     }
 
-    fn compute_times(&mut self, mflops: &[f64], measured_ms: Option<f64>) -> Vec<f64> {
-        match self.cfg.clock {
-            ClockMode::Virtual => mflops.iter().map(|f| f * self.cfg.ms_per_mflop).collect(),
-            ClockMode::Measured => {
-                // All workers computed inside one engine batch; attribute the
-                // mean per-worker share to each (the engine parallelizes).
-                let per = measured_ms.unwrap_or(0.0) / self.cfg.workers.max(1) as f64;
-                vec![per; self.cfg.workers]
+    /// Measured-clock round record from a finished first-k collector:
+    /// admission already happened in delivery order, and all timing is
+    /// the workers' own measurements. Injected delay *magnitudes* are a
+    /// virtual-clock concept and do not enter measured timing (mixing
+    /// them in would let a delay that never influenced admission dominate
+    /// the round duration); only fail-stop events (infinite delay) apply.
+    fn measured_round<T>(collected: &Collected<T>, delays: &[f64]) -> Round {
+        let m = delays.len();
+        let compute_ms: Vec<f64> = (0..m)
+            .map(|i| collected.responses[i].as_ref().map(|r| r.1).unwrap_or(f64::NAN))
+            .collect();
+        let mut arrivals: Vec<(usize, f64)> = Vec::new();
+        let mut failed = Vec::new();
+        for (i, &delay) in delays.iter().enumerate() {
+            if !delay.is_finite() {
+                failed.push(i);
+            } else if compute_ms[i].is_finite() {
+                arrivals.push((i, compute_ms[i]));
             }
         }
+        arrivals.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let admitted = collected.admitted.clone();
+        let elapsed_ms = admitted.iter().map(|&w| compute_ms[w]).fold(0.0, f64::max);
+        Round { admitted, arrivals, elapsed_ms, failed, compute_ms }
     }
 
-    /// One gradient round: broadcast `w`, all workers compute
-    /// `(g_i, f_i)`, leader admits first k. Returns the admitted responses
-    /// (arrival order) and the round record; advances the simulated clock.
-    pub fn grad_round(&mut self, w: &[f64]) -> Result<(GradResponses, Round)> {
-        let t0 = std::time::Instant::now();
-        let all = self.engine.worker_grad_all(w)?;
-        let measured = t0.elapsed().as_secs_f64() * 1e3;
-        let compute = self.compute_times(&self.grad_mflops.clone(), Some(measured));
-        let round = self.gather(&compute);
-        let responses: GradResponses = round
+    /// Extract the admitted workers' payloads in admitted order.
+    fn take_admitted<T>(round: &Round, collected: Collected<T>) -> Result<Vec<(usize, T)>> {
+        let mut responses = collected.responses;
+        round
             .admitted
             .iter()
-            .map(|&i| {
-                let (g, f) = all[i].clone();
-                (i, g, f)
+            .map(|&wid| {
+                responses[wid]
+                    .take()
+                    .map(|(payload, _)| (wid, payload))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("engine delivered no response for admitted worker {wid}")
+                    })
             })
-            .collect();
+            .collect()
+    }
+
+    /// One gradient round: broadcast `w`, workers stream `(g_i, f_i)`
+    /// responses, leader admits the first k. Returns the admitted
+    /// responses (admitted order) and the round record; advances the
+    /// simulated clock.
+    pub fn grad_round(&mut self, w: &[f64]) -> Result<(GradResponses, Round)> {
+        let m = self.cfg.workers;
+        let delays = self.sample_delays();
+        let (responses, round) = match self.cfg.clock {
+            ClockMode::Virtual => {
+                let sink = GradCollector::collect_all(m);
+                self.engine.worker_grad_streamed(w, &sink)?;
+                let collected = sink.into_collected();
+                let compute: Vec<f64> =
+                    self.grad_mflops.iter().map(|f| f * self.cfg.ms_per_mflop).collect();
+                let round = self.virtual_round(compute, &delays);
+                (Self::take_admitted(&round, collected)?, round)
+            }
+            ClockMode::Measured => {
+                let eligible: Vec<bool> = delays.iter().map(|d| d.is_finite()).collect();
+                let sink = GradCollector::first_k(m, self.cfg.wait_for, eligible);
+                self.engine.worker_grad_streamed(w, &sink)?;
+                let collected = sink.into_collected();
+                let round = Self::measured_round(&collected, &delays);
+                (Self::take_admitted(&round, collected)?, round)
+            }
+        };
+        let responses: GradResponses =
+            responses.into_iter().map(|(wid, (g, f))| (wid, g, f)).collect();
         self.sim_ms += round.elapsed_ms;
         self.rounds_run += 1;
         Ok((responses, round))
@@ -288,13 +438,27 @@ impl Cluster {
 
     /// One line-search round over a fresh first-k set `D_t` (eq. (3)).
     pub fn linesearch_round(&mut self, d: &[f64]) -> Result<(CurvResponses, Round)> {
-        let t0 = std::time::Instant::now();
-        let all = self.engine.linesearch_all(d)?;
-        let measured = t0.elapsed().as_secs_f64() * 1e3;
-        let compute = self.compute_times(&self.ls_mflops.clone(), Some(measured));
-        let round = self.gather(&compute);
-        let responses: CurvResponses =
-            round.admitted.iter().map(|&i| (i, all[i])).collect();
+        let m = self.cfg.workers;
+        let delays = self.sample_delays();
+        let (responses, round) = match self.cfg.clock {
+            ClockMode::Virtual => {
+                let sink = CurvCollector::collect_all(m);
+                self.engine.linesearch_streamed(d, &sink)?;
+                let collected = sink.into_collected();
+                let compute: Vec<f64> =
+                    self.ls_mflops.iter().map(|f| f * self.cfg.ms_per_mflop).collect();
+                let round = self.virtual_round(compute, &delays);
+                (Self::take_admitted(&round, collected)?, round)
+            }
+            ClockMode::Measured => {
+                let eligible: Vec<bool> = delays.iter().map(|d| d.is_finite()).collect();
+                let sink = CurvCollector::first_k(m, self.cfg.wait_for, eligible);
+                self.engine.linesearch_streamed(d, &sink)?;
+                let collected = sink.into_collected();
+                let round = Self::measured_round(&collected, &delays);
+                (Self::take_admitted(&round, collected)?, round)
+            }
+        };
         self.sim_ms += round.elapsed_ms;
         self.rounds_run += 1;
         Ok((responses, round))
@@ -310,7 +474,7 @@ impl Cluster {
 mod tests {
     use super::*;
     use crate::encoding::EncoderKind;
-    use crate::problem::QuadProblem;
+    use crate::problem::{QuadProblem, Scheme, WorkerShard};
     use crate::runtime::NativeEngine;
 
     fn cluster(k: usize, delay: DelayModel, seed: u64) -> (EncodedProblem, Cluster) {
@@ -449,8 +613,22 @@ mod tests {
             DelayModel::parse("expfail:10:0.05").unwrap(),
             DelayModel::ExpWithFailures { mean_ms: 10.0, p_fail: 0.05 }
         );
+        assert_eq!(
+            DelayModel::parse("hetero:10:1,1,4").unwrap(),
+            DelayModel::HeteroExp { mean_ms: 10.0, factors: vec![1.0, 1.0, 4.0] }
+        );
+        assert!(DelayModel::parse("hetero:10:").is_err());
+        assert!(DelayModel::parse("hetero:10").is_err());
         assert!(DelayModel::parse("bogus:1").is_err());
         assert!(DelayModel::parse("exp").is_err());
+    }
+
+    #[test]
+    fn clock_mode_parsing() {
+        assert_eq!(ClockMode::parse("virtual").unwrap(), ClockMode::Virtual);
+        assert_eq!(ClockMode::parse("Measured").unwrap(), ClockMode::Measured);
+        assert_eq!(ClockMode::parse("wall").unwrap(), ClockMode::Measured);
+        assert!(ClockMode::parse("atomic").is_err());
     }
 
     #[test]
@@ -460,5 +638,138 @@ mod tests {
         let eng = Box::new(NativeEngine::new(&enc));
         let cfg = ClusterConfig { workers: 8, wait_for: 4, ..Default::default() };
         assert!(Cluster::new(&enc, eng, cfg).is_err());
+    }
+
+    #[test]
+    fn virtual_round_reports_flop_model_compute_times() {
+        let (_, mut c) = cluster(8, DelayModel::None, 0);
+        let (_, round) = c.grad_round(&vec![0.0; 6]).unwrap();
+        assert_eq!(round.compute_ms.len(), 8);
+        // equal shards => equal virtual compute times, matching the model
+        for (i, &t) in round.compute_ms.iter().enumerate() {
+            assert!(t.is_finite() && t > 0.0, "worker {i}: bad virtual time {t}");
+            assert!((t - round.compute_ms[0]).abs() < 1e-15);
+        }
+    }
+
+    /// Two shards whose row counts differ by ~4000×: the measured clock
+    /// must attribute each worker its own wall-clock time, not the
+    /// historical uniform mean share.
+    #[test]
+    fn measured_clock_gives_nonuniform_times_for_unequal_shards() {
+        let (rows_small, rows_big, p) = (8usize, 32768usize, 64usize);
+        let prob = QuadProblem::synthetic_gaussian(rows_small + rows_big, p, 0.0, 1);
+        let shards = vec![
+            WorkerShard {
+                x: prob.x.row_band(0, rows_small),
+                y: prob.y[..rows_small].to_vec(),
+                rows_real: rows_small,
+                partition_id: 0,
+            },
+            WorkerShard {
+                x: prob.x.row_band(rows_small, rows_small + rows_big),
+                y: prob.y[rows_small..].to_vec(),
+                rows_real: rows_big,
+                partition_id: 1,
+            },
+        ];
+        let enc = EncodedProblem {
+            shards,
+            scheme: Scheme::Uncoded,
+            kind: EncoderKind::Identity,
+            beta: 1.0,
+            gram_scale: 1.0,
+            raw: prob,
+        };
+        let eng = Box::new(NativeEngine::new(&enc));
+        let cfg = ClusterConfig {
+            workers: 2,
+            wait_for: 2,
+            delay: DelayModel::None,
+            clock: ClockMode::Measured,
+            ms_per_mflop: 0.5,
+            seed: 0,
+        };
+        let mut c = Cluster::new(&enc, eng, cfg).unwrap();
+        let (responses, round) = c.grad_round(&vec![0.1; p]).unwrap();
+        assert_eq!(responses.len(), 2);
+        let (small, big) = (round.compute_ms[0], round.compute_ms[1]);
+        assert!(small.is_finite() && big.is_finite(), "times: {small} vs {big}");
+        assert_ne!(small, big, "mean-share regression: uniform measured times");
+        assert!(
+            big > small * 1.5,
+            "4096x larger shard should measure clearly slower: small {small} ms, big {big} ms"
+        );
+        // the round clock advanced by the measured (not virtual) time
+        assert!(round.elapsed_ms >= big);
+    }
+
+    /// Measured mode with a serial (default-impl) engine: cancellation is
+    /// deterministic — workers after the k-th are skipped entirely.
+    #[test]
+    fn measured_round_cancels_stragglers() {
+        struct SerialMock {
+            p: usize,
+            m: usize,
+        }
+        impl ComputeEngine for SerialMock {
+            fn name(&self) -> &'static str {
+                "serial-mock"
+            }
+            fn worker_grad(&mut self, worker: usize, _w: &[f64]) -> Result<(Vec<f64>, f64)> {
+                Ok((vec![worker as f64; self.p], worker as f64))
+            }
+            fn linesearch(&mut self, worker: usize, _d: &[f64]) -> Result<f64> {
+                Ok(worker as f64)
+            }
+            fn workers(&self) -> usize {
+                self.m
+            }
+        }
+        let prob = QuadProblem::synthetic_gaussian(64, 6, 0.0, 1);
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 2).unwrap();
+        let eng = Box::new(SerialMock { p: 6, m: 8 });
+        let cfg = ClusterConfig {
+            workers: 8,
+            wait_for: 3,
+            delay: DelayModel::None,
+            clock: ClockMode::Measured,
+            ms_per_mflop: 0.5,
+            seed: 0,
+        };
+        let mut c = Cluster::new(&enc, eng, cfg).unwrap();
+        let (responses, round) = c.grad_round(&vec![0.0; 6]).unwrap();
+        // serial delivery order is 0, 1, 2 — then the round cancels
+        assert_eq!(round.admitted, vec![0, 1, 2]);
+        assert_eq!(responses.len(), 3);
+        for (i, (wid, g, f)) in responses.iter().enumerate() {
+            assert_eq!(*wid, i);
+            assert_eq!(*f, i as f64);
+            assert!(g.iter().all(|&x| x == i as f64));
+        }
+        // cancelled workers never computed: no compute time, no arrival
+        for w in 3..8 {
+            assert!(round.compute_ms[w].is_nan(), "worker {w} should be cancelled");
+        }
+        assert_eq!(round.arrivals.len(), 3);
+        assert!(round.failed.is_empty());
+    }
+
+    /// Measured mode respects fail-stop workers: their responses are
+    /// never admitted even when they deliver first.
+    #[test]
+    fn measured_round_excludes_failed_workers() {
+        let (_, mut c) = cluster(8, DelayModel::ExpWithFailures { mean_ms: 1.0, p_fail: 0.5 }, 5);
+        c.cfg.clock = ClockMode::Measured;
+        let mut saw_failure = false;
+        for _ in 0..10 {
+            let (responses, round) = c.grad_round(&vec![0.0; 6]).unwrap();
+            assert_eq!(responses.len(), round.admitted.len());
+            for wid in &round.admitted {
+                assert!(!round.failed.contains(wid), "failed worker {wid} admitted");
+            }
+            saw_failure |= !round.failed.is_empty();
+        }
+        assert!(saw_failure);
     }
 }

@@ -12,15 +12,22 @@ use std::collections::BTreeMap;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (key-sorted).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (rejects trailing characters).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -34,6 +41,7 @@ impl Json {
 
     // -------- typed accessors (None on type mismatch / missing key) --------
 
+    /// Object field lookup (None for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -41,6 +49,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -48,6 +57,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -55,6 +65,7 @@ impl Json {
         }
     }
 
+    /// The value as a nonnegative integer, if it is one exactly.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
@@ -62,6 +73,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -69,6 +81,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),

@@ -20,6 +20,7 @@ pub struct Config {
 }
 
 impl Config {
+    /// Empty config.
     pub fn new() -> Self {
         Self::default()
     }
@@ -40,6 +41,7 @@ impl Config {
         Ok(Config { map })
     }
 
+    /// Load and parse a config file.
     pub fn load(path: &str) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config file {path}"))?;
@@ -57,14 +59,17 @@ impl Config {
         Ok(())
     }
 
+    /// Set (or overwrite) one key.
     pub fn set(&mut self, key: &str, value: &str) {
         self.map.insert(key.to_string(), value.to_string());
     }
 
+    /// Raw string value for `key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.map.get(key).map(|s| s.as_str())
     }
 
+    /// `key` as usize, or `default` when absent; errors on non-integers.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.map.get(key) {
             None => Ok(default),
@@ -72,6 +77,7 @@ impl Config {
         }
     }
 
+    /// `key` as f64, or `default` when absent; errors on non-numbers.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.map.get(key) {
             None => Ok(default),
@@ -79,6 +85,7 @@ impl Config {
         }
     }
 
+    /// `key` as u64, or `default` when absent; errors on non-integers.
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.map.get(key) {
             None => Ok(default),
@@ -86,6 +93,7 @@ impl Config {
         }
     }
 
+    /// `key` as bool (`true/1/yes` vs `false/0/no`), or `default`.
     pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
         match self.map.get(key).map(|s| s.as_str()) {
             None => Ok(default),
@@ -95,10 +103,12 @@ impl Config {
         }
     }
 
+    /// `key` as a string, or `default` when absent.
     pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.map.get(key).map(|s| s.as_str()).unwrap_or(default)
     }
 
+    /// All keys, sorted.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.map.keys().map(|s| s.as_str())
     }

@@ -19,6 +19,8 @@ pub struct DftEncoder {
 }
 
 impl DftEncoder {
+    /// Build for `n` input rows at target redundancy `beta` (rows are
+    /// placed and sign-flipped pseudo-randomly from `seed`).
     pub fn new(n: usize, beta: f64, seed: u64) -> Self {
         let n_out = (beta * n as f64).round().max(n as f64) as usize;
         let mut rng = Pcg64::new(seed, 0xd347);

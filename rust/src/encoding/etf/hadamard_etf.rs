@@ -61,6 +61,8 @@ pub(crate) fn construction_rank(k: u32) -> usize {
 }
 
 impl HadamardEtfEncoder {
+    /// Build the smallest Sylvester-Hadamard projection ETF covering `n`
+    /// columns (`seed` drives the column subsample).
     pub fn new(n: usize, seed: u64) -> Self {
         // smallest Kronecker power with rank >= n
         let mut k = 1u32;

@@ -117,6 +117,8 @@ pub(crate) fn paley_conference(q: u64) -> Mat {
 }
 
 impl PaleyEtfEncoder {
+    /// Build the smallest Paley conference-matrix ETF covering `n`
+    /// columns (`seed` drives the column subsample).
     pub fn new(n: usize, seed: u64) -> Result<Self> {
         ensure!(n >= 2, "Paley ETF needs n >= 2, got {n}");
         // need rank (q+1)/2 >= n  =>  q >= 2n - 1

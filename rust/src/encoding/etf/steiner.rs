@@ -45,6 +45,8 @@ fn pair_col(a: usize, b: usize, v: usize) -> usize {
 }
 
 impl SteinerEtfEncoder {
+    /// Build the smallest Steiner-system ETF (Appendix D) covering `n`
+    /// columns (`seed` drives the column subsample).
     pub fn new(n: usize, seed: u64) -> Result<Self> {
         ensure!(n >= 1, "Steiner ETF needs n >= 1");
         // smallest power-of-two v with v(v-1)/2 >= n

@@ -23,6 +23,8 @@ pub struct GaussianEncoder {
 }
 
 impl GaussianEncoder {
+    /// Draw a dense `round(beta*n) x n` matrix of i.i.d. `N(0, 1/n)`
+    /// entries from `seed`.
     pub fn new(n: usize, beta: f64, seed: u64) -> Self {
         let rows_out = (beta * n as f64).round().max(n as f64) as usize;
         let std = (1.0 / n as f64).sqrt();

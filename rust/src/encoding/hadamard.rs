@@ -31,6 +31,8 @@ pub struct HadamardEncoder {
 }
 
 impl HadamardEncoder {
+    /// Build for `n` input rows at target redundancy `beta`; the output
+    /// row count is rounded up to the next power of two for the FWHT.
     pub fn new(n: usize, beta: f64, seed: u64) -> Self {
         let target = (beta * n as f64).round().max(n as f64) as usize;
         let n_out = target.next_power_of_two();

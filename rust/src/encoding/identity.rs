@@ -12,6 +12,7 @@ pub struct IdentityEncoder {
 }
 
 impl IdentityEncoder {
+    /// The `n x n` identity (uncoded baseline).
     pub fn new(n: usize) -> Self {
         IdentityEncoder { n }
     }

@@ -115,6 +115,7 @@ impl EncoderKind {
         EncoderKind::SteinerEtf,
     ];
 
+    /// Parse a CLI name (accepts the aliases listed per arm).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "identity" | "uncoded" | "none" => EncoderKind::Identity,
@@ -129,6 +130,7 @@ impl EncoderKind {
         })
     }
 
+    /// Canonical CLI/table label for this family.
     pub fn label(&self) -> &'static str {
         match self {
             EncoderKind::Identity => "uncoded",

@@ -18,6 +18,7 @@ pub struct ReplicationEncoder {
 }
 
 impl ReplicationEncoder {
+    /// `beta`-fold replication of `n` rows (integer redundancy).
     pub fn new(n: usize, beta: usize) -> Result<Self> {
         ensure!(beta >= 1, "replication factor must be >= 1, got {beta}");
         Ok(ReplicationEncoder { n, beta })

@@ -19,8 +19,9 @@ use crate::rng::Pcg64;
 pub struct SpectrumStats {
     /// All pooled eigenvalues (sorted ascending) of the normalized Gram.
     pub eigs: Vec<f64>,
-    /// Smallest / largest eigenvalue observed across trials.
+    /// Smallest eigenvalue observed across trials.
     pub lambda_min: f64,
+    /// Largest eigenvalue observed across trials.
     pub lambda_max: f64,
     /// Worst-case property-(4) ε over trials: `max(λmax−1, 1−λmin)`.
     pub epsilon: f64,

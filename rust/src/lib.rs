@@ -20,6 +20,8 @@
 //! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
 //! reproduced figures/tables.
 
+#![warn(missing_docs)]
+
 pub mod cli;
 pub mod cluster;
 pub mod config;
@@ -35,11 +37,14 @@ pub mod testutil;
 
 /// Convenience re-exports for the common experiment-driving surface.
 pub mod prelude {
-    pub use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, GatherPolicy};
+    pub use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, GatherPolicy, Round};
     pub use crate::config::Config;
     pub use crate::encoding::{Encoder, EncoderKind};
     pub use crate::linalg::Mat;
     pub use crate::optim::{CodedFista, CodedGd, CodedLbfgs, FistaConfig, GdConfig, LbfgsConfig, Optimizer, Prox, RunOutput, Trace};
     pub use crate::problem::{EncodedProblem, QuadProblem, Scheme};
-    pub use crate::runtime::{build_engine, ComputeEngine, EngineKind, NativeEngine, XlaEngine};
+    pub use crate::runtime::{
+        build_engine, ComputeEngine, CurvCollector, EngineKind, GradCollector, NativeEngine,
+        XlaEngine,
+    };
 }

@@ -76,19 +76,23 @@ impl Mat {
 
     // ---------------------------------------------------------------- access
 
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Element `(i, j)`.
     pub fn get(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j]
     }
 
+    /// Set element `(i, j)`.
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j] = v;
@@ -109,6 +113,7 @@ impl Mat {
         &self.data
     }
 
+    /// Mutable row-major buffer.
     pub fn data_mut(&mut self) -> &mut [f64] {
         &mut self.data
     }

@@ -6,6 +6,7 @@ use std::fmt::Write as _;
 /// One optimizer iteration's record.
 #[derive(Clone, Debug)]
 pub struct IterRecord {
+    /// Iteration index (0-based).
     pub iter: usize,
     /// True objective f(w) on the *raw* problem (what the paper plots).
     pub f_true: f64,
@@ -24,30 +25,37 @@ pub struct IterRecord {
 /// Full run trace.
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
+    /// Per-iteration records, in order.
     pub records: Vec<IterRecord>,
 }
 
 impl Trace {
+    /// Append one iteration's record.
     pub fn push(&mut self, rec: IterRecord) {
         self.records.push(rec);
     }
 
+    /// Number of recorded iterations.
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
+    /// True if nothing was recorded.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
 
+    /// Final true objective (NaN on an empty trace).
     pub fn last_objective(&self) -> f64 {
         self.records.last().map(|r| r.f_true).unwrap_or(f64::NAN)
     }
 
+    /// Best (minimum) true objective over the run.
     pub fn best_objective(&self) -> f64 {
         self.records.iter().map(|r| r.f_true).fold(f64::INFINITY, f64::min)
     }
 
+    /// Total simulated time at the end of the run (ms).
     pub fn total_sim_ms(&self) -> f64 {
         self.records.last().map(|r| r.sim_ms).unwrap_or(0.0)
     }
@@ -91,10 +99,12 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Add one observation.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -104,14 +114,17 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Observation count.
     pub fn count(&self) -> usize {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Sample standard deviation (0 below two observations).
     pub fn std(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -120,10 +133,12 @@ impl Summary {
         }
     }
 
+    /// Smallest observation.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest observation.
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -133,10 +148,12 @@ impl Summary {
 pub struct Stopwatch(std::time::Instant);
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch(std::time::Instant::now())
     }
 
+    /// Elapsed milliseconds since `start`.
     pub fn ms(&self) -> f64 {
         self.0.elapsed().as_secs_f64() * 1e3
     }

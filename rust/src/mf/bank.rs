@@ -24,10 +24,12 @@ pub struct EncoderBank {
 }
 
 impl EncoderBank {
+    /// Empty bank for one `(kind, beta, seed)` family.
     pub fn new(kind: EncoderKind, beta: f64, seed: u64) -> Self {
         EncoderBank { kind, beta, seed, min_bucket: 8, cache: HashMap::new() }
     }
 
+    /// The encoder family this bank builds.
     pub fn kind(&self) -> EncoderKind {
         self.kind
     }

@@ -17,16 +17,22 @@ use crate::rng::Pcg64;
 /// One observed rating.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Rating {
+    /// User index (0-based).
     pub user: u32,
+    /// Item index (0-based).
     pub item: u32,
+    /// Star rating (1-5).
     pub value: f32,
 }
 
 /// Sparse ratings with per-user and per-item adjacency.
 #[derive(Clone, Debug, Default)]
 pub struct Ratings {
+    /// Number of users (index space, not distinct raters).
     pub n_users: usize,
+    /// Number of items.
     pub n_items: usize,
+    /// All observed ratings.
     pub entries: Vec<Rating>,
     /// entry indices by user / by item (built by `reindex`)
     by_user: Vec<Vec<u32>>,
@@ -34,6 +40,7 @@ pub struct Ratings {
 }
 
 impl Ratings {
+    /// Build the store and its per-user/per-item adjacency.
     pub fn new(n_users: usize, n_items: usize, entries: Vec<Rating>) -> Self {
         let mut r = Ratings { n_users, n_items, entries, by_user: vec![], by_item: vec![] };
         r.reindex();
@@ -49,10 +56,12 @@ impl Ratings {
         }
     }
 
+    /// Number of observed ratings.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True if no ratings are stored.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -103,8 +112,11 @@ impl Ratings {
 /// Synthetic-ML1M generator parameters.
 #[derive(Clone, Debug)]
 pub struct SyntheticConfig {
+    /// Number of users to generate.
     pub n_users: usize,
+    /// Number of items to generate.
     pub n_items: usize,
+    /// Target number of observed ratings.
     pub n_ratings: usize,
     /// Planted latent dimension.
     pub rank: usize,
@@ -119,6 +131,7 @@ pub struct SyntheticConfig {
     /// Power-law exponent for user/item popularity (≈0.8 matches ML-1M's
     /// activity skew).
     pub popularity_alpha: f64,
+    /// Generator seed.
     pub seed: u64,
 }
 

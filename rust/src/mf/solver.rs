@@ -34,9 +34,11 @@ pub struct MfConfig {
     pub epochs: usize,
     /// Cluster size m and first-k wait.
     pub m: usize,
+    /// Responses the leader waits for per round (k ≤ m).
     pub k: usize,
     /// Encoding scheme + redundancy for the distributed solves.
     pub encoder: EncoderKind,
+    /// Redundancy factor β for the encoder.
     pub beta: f64,
     /// Subproblems with ≥ this many rows are solved distributedly
     /// (paper: 500 at ML-1M scale).
@@ -47,9 +49,15 @@ pub struct MfConfig {
     pub delay: DelayModel,
     /// Virtual-clock cost constant (ms per MFLOP).
     pub ms_per_mflop: f64,
+    /// Clock mode for the distributed subsolver clusters:
+    /// [`ClockMode::Virtual`] for reproducible simulated runtimes (the
+    /// Fig. 6 bench), [`ClockMode::Measured`] for per-worker wall-clock
+    /// timing with straggler cancellation.
+    pub clock: ClockMode,
     /// Row cap per subproblem (rare popular-item outliers are subsampled
     /// to keep ETF bank sizes bounded; recorded in `MfOutput::capped`).
     pub max_rows: usize,
+    /// Master seed for data/cluster randomness.
     pub seed: u64,
 }
 
@@ -68,6 +76,7 @@ impl Default for MfConfig {
             lbfgs_iters: 8,
             delay: DelayModel::Exp { mean_ms: 10.0 },
             ms_per_mflop: 0.5,
+            clock: ClockMode::Virtual,
             max_rows: 2048,
             seed: 0,
         }
@@ -85,10 +94,12 @@ pub struct MfModel {
     pub y: Mat,
     /// Item biases.
     pub v: Vec<f64>,
+    /// Fixed global bias μ.
     pub mu: f64,
 }
 
 impl MfModel {
+    /// Predicted rating `μ + u_i + v_j + x_iᵀ y_j`.
     pub fn predict(&self, user: usize, item: usize) -> f64 {
         self.mu
             + self.u[user]
@@ -116,8 +127,11 @@ impl MfModel {
 /// Training output: model + per-epoch RMSE curves + simulated runtime.
 #[derive(Clone, Debug)]
 pub struct MfOutput {
+    /// Learned model after the final epoch.
     pub model: MfModel,
+    /// Train-set RMSE after each epoch.
     pub train_rmse: Vec<f64>,
+    /// Test-set RMSE after each epoch.
     pub test_rmse: Vec<f64>,
     /// Total simulated cluster time (ms), distributed solves only.
     pub sim_ms: f64,
@@ -125,6 +139,7 @@ pub struct MfOutput {
     pub local_ms: f64,
     /// Distributed / local solve counts.
     pub dist_solves: usize,
+    /// Subproblems solved locally by Cholesky.
     pub local_solves: usize,
     /// Subproblems that hit the `max_rows` cap.
     pub capped: usize,
@@ -198,7 +213,7 @@ fn solve_subproblem(
         workers: cfg.m,
         wait_for: cfg.k,
         delay: cfg.delay.clone(),
-        clock: ClockMode::Virtual,
+        clock: cfg.clock,
         ms_per_mflop: cfg.ms_per_mflop,
         seed: sub_seed,
     };

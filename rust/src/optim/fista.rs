@@ -74,6 +74,7 @@ impl Prox {
 /// FISTA configuration.
 #[derive(Clone, Debug)]
 pub struct FistaConfig {
+    /// Proximal operator for the non-smooth term `h`.
     pub prox: Prox,
     /// Safety factor ζ in `α = ζ/(M(1+ε))`.
     pub zeta: f64,
@@ -81,7 +82,9 @@ pub struct FistaConfig {
     pub epsilon: Option<f64>,
     /// Nesterov acceleration on/off (off = ISTA).
     pub accelerate: bool,
+    /// Trials for the ε spectral estimate.
     pub eps_trials: usize,
+    /// Seed for the ε estimation subsets.
     pub seed: u64,
 }
 
@@ -104,6 +107,7 @@ pub struct CodedFista {
 }
 
 impl CodedFista {
+    /// Validate the configuration (panics on ζ ∉ (0, 1]).
     pub fn new(cfg: FistaConfig) -> Self {
         assert!(cfg.zeta > 0.0 && cfg.zeta <= 1.0, "zeta must be in (0, 1]");
         CodedFista { cfg }

@@ -23,6 +23,7 @@ pub struct GdConfig {
     pub alpha_override: Option<f64>,
     /// Trials for the ε spectral estimate.
     pub eps_trials: usize,
+    /// Seed for the ε estimation subsets.
     pub seed: u64,
 }
 
@@ -38,6 +39,7 @@ pub struct CodedGd {
 }
 
 impl CodedGd {
+    /// Validate the configuration (panics on ζ ∉ (0, 1]).
     pub fn new(cfg: GdConfig) -> Self {
         ensure_valid(&cfg);
         CodedGd { cfg }

@@ -43,6 +43,7 @@ pub struct LbfgsConfig {
     /// producing inf/NaN that would poison the trace; the paper's uncoded
     /// runs still diverge under this guard, just measurably).
     pub alpha_max: f64,
+    /// Seed for the ε estimation subsets.
     pub seed: u64,
 }
 
@@ -66,6 +67,7 @@ pub struct CodedLbfgs {
 }
 
 impl CodedLbfgs {
+    /// Validate the configuration (panics on memory = 0).
     pub fn new(cfg: LbfgsConfig) -> Self {
         assert!(cfg.memory >= 1, "memory must be >= 1");
         CodedLbfgs { cfg }

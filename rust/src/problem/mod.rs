@@ -17,13 +17,16 @@ use anyhow::{ensure, Result};
 /// `f(w) = (1/2n)‖Xw − y‖² + (λ/2)‖w‖²`.
 #[derive(Clone)]
 pub struct QuadProblem {
+    /// Design matrix `X` (n x p).
     pub x: Mat,
+    /// Targets `y` (length n).
     pub y: Vec<f64>,
     /// Ridge coefficient λ (0 for plain least squares).
     pub lambda: f64,
 }
 
 impl QuadProblem {
+    /// Assemble from parts (panics on row/length mismatch).
     pub fn new(x: Mat, y: Vec<f64>, lambda: f64) -> Self {
         assert_eq!(x.rows(), y.len(), "QuadProblem: X rows != y length");
         QuadProblem { x, y, lambda }
@@ -52,10 +55,12 @@ impl QuadProblem {
         (QuadProblem { x, y, lambda }, w_star)
     }
 
+    /// Sample count n.
     pub fn n(&self) -> usize {
         self.x.rows()
     }
 
+    /// Dimension p.
     pub fn p(&self) -> usize {
         self.x.cols()
     }
@@ -129,8 +134,11 @@ pub struct WorkerShard {
 
 /// The encoded, partitioned problem the cluster serves (Figure 1, right).
 pub struct EncodedProblem {
+    /// Per-worker encoded shards (length m).
     pub shards: Vec<WorkerShard>,
+    /// Aggregation semantics the leader applies.
     pub scheme: Scheme,
+    /// Encoder family that produced the shards.
     pub kind: EncoderKind,
     /// Effective redundancy `rows_out / n`.
     pub beta: f64,
@@ -308,14 +316,17 @@ impl EncodedProblem {
         })
     }
 
+    /// Worker/shard count m.
     pub fn m(&self) -> usize {
         self.shards.len()
     }
 
+    /// Problem dimension p.
     pub fn p(&self) -> usize {
         self.raw.p()
     }
 
+    /// Raw (pre-encoding) sample count n.
     pub fn n_raw(&self) -> usize {
         self.raw.n()
     }

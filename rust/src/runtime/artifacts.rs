@@ -13,8 +13,11 @@ use std::path::{Path, PathBuf};
 /// One artifact entry (shape-specialized HLO text program).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Entry {
+    /// Unique artifact name (e.g. `worker_grad_r32_p64`).
     pub name: String,
+    /// Artifact kind: `worker_grad`, `linesearch`, or `fwht`.
     pub kind: String,
+    /// File name relative to the manifest directory.
     pub file: String,
     /// worker_grad / linesearch: (rows, p); fwht: (n, cols).
     pub dims: (usize, usize),
@@ -23,7 +26,9 @@ pub struct Entry {
 /// Parsed `manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// All artifact entries.
     pub entries: Vec<Entry>,
 }
 

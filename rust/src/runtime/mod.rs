@@ -14,13 +14,21 @@
 //! Artifacts are shape-specialized; the partitioner pads shards to
 //! power-of-two row buckets (exact no-op padding) so a small artifact set
 //! covers every experiment. [`artifacts::Manifest`] indexes them.
+//!
+//! Both engines also expose the **streaming** surface
+//! ([`ComputeEngine::worker_grad_streamed`]): responses are delivered
+//! through a [`stream::Collector`] as each worker finishes, which is what
+//! the cluster's event-driven first-k gather and straggler cancellation
+//! run on (see [`stream`]).
 
 pub mod artifacts;
 pub mod native;
+pub mod stream;
 pub mod xla_engine;
 
 pub use artifacts::Manifest;
 pub use native::NativeEngine;
+pub use stream::{Collected, Collector, CurvCollector, GradCollector};
 pub use xla_engine::XlaEngine;
 
 use crate::problem::EncodedProblem;
@@ -36,6 +44,7 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Parse the CLI forms `native`/`rust` and `xla`/`pjrt`.
     pub fn parse(s: &str) -> Result<Self> {
         match s.to_ascii_lowercase().as_str() {
             "native" | "rust" => Ok(EngineKind::Native),
@@ -52,8 +61,12 @@ impl EngineKind {
 /// * `linesearch`: `q_i = ‖X̃_i d‖²`
 ///
 /// `worker_grad_all` computes all m workers for one broadcast `w` — the
-/// shape the synchronous round actually needs — and is the hook engines
-/// use for cross-worker parallelism.
+/// batch-synchronous shape — while `worker_grad_streamed` delivers each
+/// worker's response through a [`Collector`] **as it completes**, with a
+/// per-worker measured compute time, honoring the collector's
+/// cancellation flag. The streamed surface is what the cluster's
+/// first-k gather actually runs on; the batch surface remains the
+/// reference implementation and the bench baseline.
 pub trait ComputeEngine: Send {
     /// Human-readable engine name for logs/metrics.
     fn name(&self) -> &'static str;
@@ -72,6 +85,43 @@ pub trait ComputeEngine: Send {
     /// All workers' line-search terms (default: serial loop).
     fn linesearch_all(&mut self, d: &[f64]) -> Result<Vec<f64>> {
         (0..self.workers()).map(|i| self.linesearch(i, d)).collect()
+    }
+
+    /// Stream one gradient round into `sink`: compute each worker's
+    /// `(g_i, f_i)`, deliver it with the worker's own measured compute
+    /// time (wall-clock ms), and skip workers once
+    /// [`Collector::is_cancelled`] is set. Returns when every worker has
+    /// either delivered or been cancelled.
+    ///
+    /// Default: serial loop with per-worker timing and a cancellation
+    /// check between workers (correct for any engine; no cross-worker
+    /// parallelism). [`NativeEngine`] overrides this with one OS thread
+    /// per worker shard.
+    fn worker_grad_streamed(&mut self, w: &[f64], sink: &GradCollector) -> Result<()> {
+        for i in 0..self.workers() {
+            if sink.is_cancelled() {
+                break;
+            }
+            let t0 = std::time::Instant::now();
+            let (g, f) = self.worker_grad(i, w)?;
+            sink.deliver(i, (g, f), t0.elapsed().as_secs_f64() * 1e3);
+        }
+        Ok(())
+    }
+
+    /// Stream one line-search round into `sink`; the streamed counterpart
+    /// of [`ComputeEngine::linesearch_all`], with the same contract as
+    /// [`ComputeEngine::worker_grad_streamed`].
+    fn linesearch_streamed(&mut self, d: &[f64], sink: &CurvCollector) -> Result<()> {
+        for i in 0..self.workers() {
+            if sink.is_cancelled() {
+                break;
+            }
+            let t0 = std::time::Instant::now();
+            let q = self.linesearch(i, d)?;
+            sink.deliver(i, q, t0.elapsed().as_secs_f64() * 1e3);
+        }
+        Ok(())
     }
 
     /// Worker count.

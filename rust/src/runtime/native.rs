@@ -1,5 +1,17 @@
 //! Pure-Rust compute engine: the fused worker kernels on std threads.
+//!
+//! Two fan-out shapes:
+//! * `worker_grad_all` / `linesearch_all` — batch: shards are chunked over
+//!   a bounded thread pool, all results returned together.
+//! * `worker_grad_streamed` / `linesearch_streamed` — streaming: one
+//!   scoped thread per worker shard (capped at the engine's thread
+//!   bound), each delivering into the round's
+//!   [`Collector`](super::stream::Collector) the moment a shard finishes,
+//!   with that worker's own wall-clock compute time; threads observe the
+//!   collector's cancellation flag and skip remaining shards once the
+//!   leader has admitted k responses.
 
+use super::stream::{CurvCollector, GradCollector};
 use super::ComputeEngine;
 use crate::linalg::{self, Mat};
 use crate::problem::EncodedProblem;
@@ -21,6 +33,7 @@ pub struct NativeEngine {
 }
 
 impl NativeEngine {
+    /// Stage every shard of `prob` (data + preallocated scratch buffers).
     pub fn new(prob: &EncodedProblem) -> Self {
         let p = prob.p();
         let slots = prob
@@ -124,6 +137,61 @@ impl ComputeEngine for NativeEngine {
         Ok(results.into_iter().flatten().collect())
     }
 
+    /// One scoped thread per worker shard, capped at the engine's thread
+    /// bound ([`NativeEngine::with_threads`]): with fewer threads than
+    /// shards, each thread walks a contiguous shard range, still timing
+    /// and delivering every worker individually and checking the
+    /// cancellation flag before each shard.
+    fn worker_grad_streamed(&mut self, w: &[f64], sink: &GradCollector) -> Result<()> {
+        let threads = self.threads.min(self.slots.len()).max(1);
+        let chunk = self.slots.len().div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (ci, slots) in self.slots.chunks_mut(chunk).enumerate() {
+                scope.spawn(move || {
+                    for (j, slot) in slots.iter_mut().enumerate() {
+                        if sink.is_cancelled() {
+                            return;
+                        }
+                        let t0 = std::time::Instant::now();
+                        let f = slot.x.fused_grad(
+                            w,
+                            &slot.y,
+                            &mut slot.grad_buf,
+                            &mut slot.resid_buf,
+                        );
+                        let ms = t0.elapsed().as_secs_f64() * 1e3;
+                        sink.deliver(ci * chunk + j, (slot.grad_buf.clone(), f), ms);
+                    }
+                });
+            }
+        });
+        Ok(())
+    }
+
+    /// Streamed line-search rounds; same fan-out shape as
+    /// [`ComputeEngine::worker_grad_streamed`].
+    fn linesearch_streamed(&mut self, d: &[f64], sink: &CurvCollector) -> Result<()> {
+        let threads = self.threads.min(self.slots.len()).max(1);
+        let chunk = self.slots.len().div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (ci, slots) in self.slots.chunks_mut(chunk).enumerate() {
+                scope.spawn(move || {
+                    for (j, slot) in slots.iter_mut().enumerate() {
+                        if sink.is_cancelled() {
+                            return;
+                        }
+                        let t0 = std::time::Instant::now();
+                        slot.x.gemv_into(d, &mut slot.resid_buf);
+                        let q = linalg::dot(&slot.resid_buf, &slot.resid_buf);
+                        let ms = t0.elapsed().as_secs_f64() * 1e3;
+                        sink.deliver(ci * chunk + j, q, ms);
+                    }
+                });
+            }
+        });
+        Ok(())
+    }
+
     fn workers(&self) -> usize {
         self.slots.len()
     }
@@ -199,5 +267,40 @@ mod tests {
         let w = vec![0.4; 6];
         let out = eng.worker_grad_all(&w).unwrap();
         assert_eq!(out.len(), 8);
+    }
+
+    #[test]
+    fn streamed_payloads_match_batch_bitwise() {
+        let (_, mut eng) = engine();
+        let w = vec![0.7; 6];
+        let batch = eng.worker_grad_all(&w).unwrap();
+        let sink = GradCollector::collect_all(8);
+        eng.worker_grad_streamed(&w, &sink).unwrap();
+        let got = sink.into_collected();
+        assert_eq!(got.delivery_order.len(), 8);
+        for (i, (gb, fb)) in batch.iter().enumerate() {
+            let (ref payload, ms) = *got.responses[i].as_ref().unwrap();
+            let (gs, fs) = payload;
+            assert_eq!(fs.to_bits(), fb.to_bits(), "worker {i} objective differs");
+            assert_eq!(gs.len(), gb.len());
+            for (a, b) in gs.iter().zip(gb) {
+                assert_eq!(a.to_bits(), b.to_bits(), "worker {i} gradient differs");
+            }
+            assert!(ms >= 0.0);
+        }
+    }
+
+    #[test]
+    fn streamed_linesearch_matches_batch_bitwise() {
+        let (_, mut eng) = engine();
+        let d = vec![-0.3; 6];
+        let batch = eng.linesearch_all(&d).unwrap();
+        let sink = CurvCollector::collect_all(8);
+        eng.linesearch_streamed(&d, &sink).unwrap();
+        let got = sink.into_collected();
+        for (i, qb) in batch.iter().enumerate() {
+            let (qs, _) = got.responses[i].unwrap();
+            assert_eq!(qs.to_bits(), qb.to_bits(), "worker {i} curvature differs");
+        }
     }
 }

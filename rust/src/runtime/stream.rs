@@ -1,0 +1,241 @@
+//! Streaming first-k gather plumbing: the response channel between the
+//! worker-side compute engines and the leader's admission logic.
+//!
+//! The batch-synchronous path (`worker_grad_all`) computes every worker's
+//! response before the leader sees any of them, so per-worker completion
+//! times are invisible and stragglers cannot be cancelled. The streaming
+//! path inverts that: the leader hands the engine a [`Collector`], the
+//! engine delivers each worker's response **as it completes** (one OS
+//! thread per worker shard on the native engine), and the collector
+//! applies the admission policy *at delivery time*:
+//!
+//! * [`Collector::collect_all`] — admit everything; used by
+//!   [`ClockMode::Virtual`](crate::cluster::ClockMode) rounds, which need
+//!   all responses so the deterministic post-hoc arrival sampling stays
+//!   byte-identical to the historical batch path.
+//! * [`Collector::first_k`] — admit the first `k` eligible responses in
+//!   true arrival order and flip the round's cancellation flag the moment
+//!   the k-th lands, so workers that have not yet started their shard
+//!   skip it entirely (the paper's "drop their updates upon arrival",
+//!   upgraded to "don't even compute them").
+//!
+//! Engines observe cancellation through [`Collector::is_cancelled`]; a
+//! worker that checks the flag after the k-th admission returns without
+//! computing, and its slot reports no measured compute time.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Admission policy a [`Collector`] applies as responses land.
+enum Admission {
+    /// Admit every delivery (virtual-clock rounds).
+    All,
+    /// Admit the first `k` deliveries whose worker is `eligible` (finite
+    /// injected delay), then cancel the rest.
+    FirstK {
+        /// Number of responses the leader waits for.
+        k: usize,
+        /// Per-worker eligibility mask (failed workers never count).
+        eligible: Vec<bool>,
+    },
+}
+
+/// Per-worker state the collector accumulates.
+struct Inner<T> {
+    /// Response payload + measured compute time (ms), indexed by worker.
+    responses: Vec<Option<(T, f64)>>,
+    /// Workers in true delivery order (every delivery, admitted or not).
+    delivery_order: Vec<usize>,
+    /// Admitted workers in admission order (`FirstK` only; empty for
+    /// `All`, where admission is decided post hoc by the caller).
+    admitted: Vec<usize>,
+    admission: Admission,
+}
+
+/// Thread-safe streamed-response sink handed to
+/// [`ComputeEngine::worker_grad_streamed`](crate::runtime::ComputeEngine::worker_grad_streamed).
+///
+/// `T` is the per-worker payload: `(Vec<f64>, f64)` for gradient rounds
+/// (gradient, local objective), `f64` for line-search rounds.
+pub struct Collector<T> {
+    inner: Mutex<Inner<T>>,
+    cancel: AtomicBool,
+    workers: usize,
+    first_k: bool,
+}
+
+/// Everything a finished round's collector observed, by worker.
+pub struct Collected<T> {
+    /// `(payload, compute_ms)` per worker; `None` if the worker was
+    /// cancelled (or the engine failed to deliver it).
+    pub responses: Vec<Option<(T, f64)>>,
+    /// Workers in true delivery order.
+    pub delivery_order: Vec<usize>,
+    /// Admitted workers in admission order (first-k collectors only).
+    pub admitted: Vec<usize>,
+}
+
+impl<T> Collector<T> {
+    /// Collector that admits every response and never cancels.
+    pub fn collect_all(workers: usize) -> Self {
+        Collector {
+            inner: Mutex::new(Inner {
+                responses: (0..workers).map(|_| None).collect(),
+                delivery_order: Vec::with_capacity(workers),
+                admitted: Vec::new(),
+                admission: Admission::All,
+            }),
+            cancel: AtomicBool::new(false),
+            workers,
+            first_k: false,
+        }
+    }
+
+    /// Collector that admits the first `k` eligible responses in delivery
+    /// order and cancels the round once the k-th lands. `eligible[i]`
+    /// false marks worker `i` as failed this round (infinite injected
+    /// delay): its response, if any, is recorded but never admitted.
+    pub fn first_k(workers: usize, k: usize, eligible: Vec<bool>) -> Self {
+        assert_eq!(eligible.len(), workers, "eligibility mask length mismatch");
+        let k_eff = k.min(eligible.iter().filter(|&&e| e).count());
+        let c = Collector {
+            inner: Mutex::new(Inner {
+                responses: (0..workers).map(|_| None).collect(),
+                delivery_order: Vec::with_capacity(workers),
+                admitted: Vec::with_capacity(k_eff),
+                admission: Admission::FirstK { k: k_eff, eligible },
+            }),
+            cancel: AtomicBool::new(false),
+            workers,
+            first_k: true,
+        };
+        if k_eff == 0 {
+            // nothing can ever be admitted (all workers failed)
+            c.cancel.store(true, Ordering::Release);
+        }
+        c
+    }
+
+    /// Worker count this collector expects.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// True when admission happens at delivery time (first-k sinks), so
+    /// per-worker delivery order, timing, and cancellation are
+    /// load-bearing. False for collect-all sinks, where an engine may use
+    /// its fastest batch path (e.g. the XLA engine's single-broadcast
+    /// `GradAll`) and deliver everything at the end.
+    pub fn streaming_admission(&self) -> bool {
+        self.first_k
+    }
+
+    /// True once the admission policy no longer needs more responses.
+    /// Workers should check this before starting (or between phases of)
+    /// their shard computation and bail out if set.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Acquire)
+    }
+
+    /// Deliver worker `worker`'s response with its measured compute time.
+    /// Called by engine worker threads; safe from any thread. Deliveries
+    /// after cancellation are still recorded (the leader "drops their
+    /// updates upon arrival") but never admitted.
+    pub fn deliver(&self, worker: usize, payload: T, compute_ms: f64) {
+        let mut guard = self.inner.lock().expect("collector poisoned");
+        let inner = &mut *guard;
+        assert!(worker < self.workers, "worker id {worker} out of range");
+        assert!(inner.responses[worker].is_none(), "duplicate delivery for worker {worker}");
+        inner.responses[worker] = Some((payload, compute_ms));
+        inner.delivery_order.push(worker);
+        if let Admission::FirstK { k, ref eligible } = inner.admission {
+            if eligible[worker] && inner.admitted.len() < k {
+                inner.admitted.push(worker);
+                if inner.admitted.len() == k {
+                    self.cancel.store(true, Ordering::Release);
+                }
+            }
+        }
+    }
+
+    /// Consume the collector after the engine call returns.
+    pub fn into_collected(self) -> Collected<T> {
+        let inner = self.inner.into_inner().expect("collector poisoned");
+        Collected {
+            responses: inner.responses,
+            delivery_order: inner.delivery_order,
+            admitted: inner.admitted,
+        }
+    }
+}
+
+/// Collector for gradient rounds: payload is `(gradient, local objective)`.
+pub type GradCollector = Collector<(Vec<f64>, f64)>;
+/// Collector for line-search rounds: payload is `‖X̃_i d‖²`.
+pub type CurvCollector = Collector<f64>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collect_all_never_cancels() {
+        let c: Collector<u32> = Collector::collect_all(3);
+        for i in [2usize, 0, 1] {
+            assert!(!c.is_cancelled());
+            c.deliver(i, i as u32, 1.0);
+        }
+        let got = c.into_collected();
+        assert_eq!(got.delivery_order, vec![2, 0, 1]);
+        assert!(got.admitted.is_empty());
+        assert!(got.responses.iter().all(|r| r.is_some()));
+    }
+
+    #[test]
+    fn first_k_cancels_after_kth_eligible() {
+        let c: Collector<u32> = Collector::first_k(4, 2, vec![true; 4]);
+        c.deliver(3, 0, 1.0);
+        assert!(!c.is_cancelled());
+        c.deliver(1, 0, 1.0);
+        assert!(c.is_cancelled());
+        // late delivery is recorded but not admitted
+        c.deliver(0, 0, 1.0);
+        let got = c.into_collected();
+        assert_eq!(got.admitted, vec![3, 1]);
+        assert_eq!(got.delivery_order, vec![3, 1, 0]);
+    }
+
+    #[test]
+    fn ineligible_workers_never_admitted() {
+        let c: Collector<u32> = Collector::first_k(3, 2, vec![true, false, true]);
+        c.deliver(1, 0, 1.0); // failed worker responds — ignored
+        assert!(!c.is_cancelled());
+        c.deliver(0, 0, 1.0);
+        c.deliver(2, 0, 1.0);
+        let got = c.into_collected();
+        assert_eq!(got.admitted, vec![0, 2]);
+    }
+
+    #[test]
+    fn all_failed_cancels_immediately() {
+        let c: Collector<u32> = Collector::first_k(2, 2, vec![false, false]);
+        assert!(c.is_cancelled());
+    }
+
+    #[test]
+    fn k_capped_by_eligible_count() {
+        // k = 3 but only 1 eligible: cancel after that one
+        let c: Collector<u32> = Collector::first_k(3, 3, vec![false, true, false]);
+        c.deliver(1, 7, 0.5);
+        assert!(c.is_cancelled());
+        assert_eq!(c.into_collected().admitted, vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate delivery")]
+    fn duplicate_delivery_panics() {
+        let c: Collector<u32> = Collector::collect_all(2);
+        c.deliver(0, 1, 0.1);
+        c.deliver(0, 2, 0.1);
+    }
+}

@@ -14,304 +14,423 @@
 //! both outputs. Missing shapes are a hard startup error (fail fast, not
 //! mid-run).
 
-use super::artifacts::Manifest;
-use super::ComputeEngine;
-use crate::problem::EncodedProblem;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
-use std::path::PathBuf;
-use std::sync::mpsc;
+//!
+//! **Feature gating:** the PJRT bindings (the `xla` crate) are not
+//! available in the offline build environment, so the real engine is
+//! compiled only with `--features xla` — which additionally requires
+//! adding the vendored `xla` crate to `[dependencies]` (see the feature
+//! comment in `rust/Cargo.toml`). Without it, [`XlaEngine`] is a stub
+//! with the same construction signature that fails fast with a clear
+//! error; every non-XLA code path (the whole tier-1 test suite) builds
+//! and runs unchanged.
 
-enum Request {
-    Grad { worker: usize, w: Vec<f32> },
-    /// Broadcast round: stage `w` once, run every worker (§Perf iter. 4).
-    GradAll { w: Vec<f32> },
-    Linesearch { worker: usize, d: Vec<f32> },
-    LinesearchAll { d: Vec<f32> },
-    Shutdown,
-}
+#[cfg(feature = "xla")]
+mod imp {
+    use crate::runtime::artifacts::Manifest;
+    use crate::runtime::stream::{CurvCollector, GradCollector};
+    use crate::runtime::ComputeEngine;
+    use crate::problem::EncodedProblem;
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::sync::mpsc;
 
-enum Reply {
-    Grad(Result<(Vec<f64>, f64)>),
-    GradAll(Result<Vec<(Vec<f64>, f64)>>),
-    Linesearch(Result<f64>),
-    LinesearchAll(Result<Vec<f64>>),
-}
+    enum Request {
+        Grad { worker: usize, w: Vec<f32> },
+        /// Broadcast round: stage `w` once, run every worker (§Perf iter. 4).
+        GradAll { w: Vec<f32> },
+        Linesearch { worker: usize, d: Vec<f32> },
+        LinesearchAll { d: Vec<f32> },
+        Shutdown,
+    }
 
-/// `Send` handle to the PJRT service thread.
-pub struct XlaEngine {
-    tx: mpsc::Sender<Request>,
-    rx: mpsc::Receiver<Reply>,
-    workers: usize,
-    p: usize,
-    handle: Option<std::thread::JoinHandle<()>>,
-}
+    enum Reply {
+        Grad(Result<(Vec<f64>, f64)>),
+        GradAll(Result<Vec<(Vec<f64>, f64)>>),
+        Linesearch(Result<f64>),
+        LinesearchAll(Result<Vec<f64>>),
+    }
 
-/// Per-worker staged data living on the service thread.
-struct StagedWorker {
-    x_buf: xla::PjRtBuffer,
-    y_buf: xla::PjRtBuffer,
-    /// (rows_bucket, p) — key into the executable maps.
-    shape: (usize, usize),
-}
-
-struct Service {
-    client: xla::PjRtClient,
-    grad_exes: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
-    ls_exes: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
-    staged: Vec<StagedWorker>,
-    p: usize,
-}
-
-impl Service {
-    fn build(
-        shards: Vec<(Vec<f32>, Vec<f32>, usize)>, // (x row-major, y, rows_bucket)
+    /// `Send` handle to the PJRT service thread.
+    pub struct XlaEngine {
+        tx: mpsc::Sender<Request>,
+        rx: mpsc::Receiver<Reply>,
+        workers: usize,
         p: usize,
-        manifest: &Manifest,
-    ) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        let mut grad_exes = HashMap::new();
-        let mut ls_exes = HashMap::new();
-        let mut staged = Vec::with_capacity(shards.len());
-        for (x, y, rows) in &shards {
-            let shape = (*rows, p);
-            if !grad_exes.contains_key(&shape) {
-                let grad_path = manifest
-                    .find("worker_grad", shape)
-                    .with_context(|| format!("no worker_grad artifact for shape {shape:?}"))?;
-                let ls_path = manifest
-                    .find("linesearch", shape)
-                    .with_context(|| format!("no linesearch artifact for shape {shape:?}"))?;
-                grad_exes.insert(shape, compile(&client, &grad_path)?);
-                ls_exes.insert(shape, compile(&client, &ls_path)?);
-            }
-            let x_buf = client
-                .buffer_from_host_buffer::<f32>(x, &[*rows, p], None)
-                .map_err(|e| anyhow!("staging X: {e:?}"))?;
-            let y_buf = client
-                .buffer_from_host_buffer::<f32>(y, &[*rows, 1], None)
-                .map_err(|e| anyhow!("staging y: {e:?}"))?;
-            staged.push(StagedWorker { x_buf, y_buf, shape });
-        }
-        Ok(Service { client, grad_exes, ls_exes, staged, p })
+        handle: Option<std::thread::JoinHandle<()>>,
     }
 
-    fn grad(&self, worker: usize, w: &[f32]) -> Result<(Vec<f64>, f64)> {
-        let w_buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(w, &[self.p, 1], None)
-            .map_err(|e| anyhow!("staging w: {e:?}"))?;
-        self.grad_with_buf(worker, &w_buf)
+    /// Per-worker staged data living on the service thread.
+    struct StagedWorker {
+        x_buf: xla::PjRtBuffer,
+        y_buf: xla::PjRtBuffer,
+        /// (rows_bucket, p) — key into the executable maps.
+        shape: (usize, usize),
     }
 
-    /// One worker's gradient against an already-staged broadcast buffer.
-    fn grad_with_buf(&self, worker: usize, w_buf: &xla::PjRtBuffer) -> Result<(Vec<f64>, f64)> {
-        let sw = &self.staged[worker];
-        let exe = &self.grad_exes[&sw.shape];
-        let outs = exe
-            .execute_b(&[&sw.x_buf, &sw.y_buf, w_buf])
-            .map_err(|e| anyhow!("execute worker_grad: {e:?}"))?;
-        let lit = outs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("readback: {e:?}"))?;
-        let (g_lit, f_lit) = lit.to_tuple2().map_err(|e| anyhow!("tuple: {e:?}"))?;
-        let g32 = g_lit.to_vec::<f32>().map_err(|e| anyhow!("g readback: {e:?}"))?;
-        let f32v = f_lit.to_vec::<f32>().map_err(|e| anyhow!("f readback: {e:?}"))?;
-        Ok((g32.iter().map(|&v| v as f64).collect(), f32v[0] as f64))
+    struct Service {
+        client: xla::PjRtClient,
+        grad_exes: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+        ls_exes: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+        staged: Vec<StagedWorker>,
+        p: usize,
     }
 
-    /// Broadcast gradient round: upload `w` once, execute all workers.
-    fn grad_all(&self, w: &[f32]) -> Result<Vec<(Vec<f64>, f64)>> {
-        let w_buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(w, &[self.p, 1], None)
-            .map_err(|e| anyhow!("staging w: {e:?}"))?;
-        (0..self.staged.len()).map(|i| self.grad_with_buf(i, &w_buf)).collect()
-    }
-
-    fn linesearch(&self, worker: usize, d: &[f32]) -> Result<f64> {
-        let d_buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(d, &[self.p, 1], None)
-            .map_err(|e| anyhow!("staging d: {e:?}"))?;
-        self.linesearch_with_buf(worker, &d_buf)
-    }
-
-    fn linesearch_with_buf(&self, worker: usize, d_buf: &xla::PjRtBuffer) -> Result<f64> {
-        let sw = &self.staged[worker];
-        let exe = &self.ls_exes[&sw.shape];
-        let outs = exe
-            .execute_b(&[&sw.x_buf, d_buf])
-            .map_err(|e| anyhow!("execute linesearch: {e:?}"))?;
-        let lit = outs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("readback: {e:?}"))?;
-        let q_lit = lit.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
-        let q = q_lit.to_vec::<f32>().map_err(|e| anyhow!("q readback: {e:?}"))?;
-        Ok(q[0] as f64)
-    }
-
-    fn linesearch_all(&self, d: &[f32]) -> Result<Vec<f64>> {
-        let d_buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(d, &[self.p, 1], None)
-            .map_err(|e| anyhow!("staging d: {e:?}"))?;
-        (0..self.staged.len()).map(|i| self.linesearch_with_buf(i, &d_buf)).collect()
-    }
-}
-
-fn compile(client: &xla::PjRtClient, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
-    let path_str = path
-        .to_str()
-        .with_context(|| format!("non-UTF8 artifact path {path:?}"))?;
-    let proto = xla::HloModuleProto::from_text_file(path_str)
-        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
-}
-
-impl XlaEngine {
-    /// Stage the problem's shards and compile its artifacts.
-    ///
-    /// Fails fast if `dir` has no manifest or lacks a shape bucket for any
-    /// shard (`make artifacts` regenerates them).
-    pub fn new(prob: &EncodedProblem, dir: PathBuf) -> Result<Self> {
-        let manifest = Manifest::load(&dir)?;
-        let p = prob.p();
-        // Round every shard up to its artifact bucket (zero-pad = exact).
-        let mut shards = Vec::with_capacity(prob.shards.len());
-        for (i, s) in prob.shards.iter().enumerate() {
-            let rows = s.x.rows();
-            let bucket = manifest.grad_bucket(rows, p).with_context(|| {
-                format!(
-                    "worker {i}: no worker_grad artifact bucket for rows={rows}, p={p} \
-                     (available: {:?}) — extend python/compile/aot.py shapes",
-                    manifest.grad_shapes()
-                )
-            })?;
-            let padded = s.x.pad_rows(bucket);
-            let mut y32: Vec<f32> = s.y.iter().map(|&v| v as f32).collect();
-            y32.resize(bucket, 0.0);
-            shards.push((padded.to_f32(), y32, bucket));
-        }
-        if manifest.find("linesearch", (shards[0].2, p)).is_none() {
-            bail!("manifest lacks linesearch artifacts for p={p}");
-        }
-
-        let (tx, service_rx) = mpsc::channel::<Request>();
-        let (service_tx, rx) = mpsc::channel::<Reply>();
-        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
-        let workers = shards.len();
-        let manifest_clone = manifest.clone();
-        let handle = std::thread::Builder::new()
-            .name("xla-service".into())
-            .spawn(move || {
-                let service = match Service::build(shards, p, &manifest_clone) {
-                    Ok(s) => {
-                        let _ = init_tx.send(Ok(()));
-                        s
-                    }
-                    Err(e) => {
-                        let _ = init_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(req) = service_rx.recv() {
-                    match req {
-                        Request::Grad { worker, w } => {
-                            let _ = service_tx.send(Reply::Grad(service.grad(worker, &w)));
-                        }
-                        Request::GradAll { w } => {
-                            let _ = service_tx.send(Reply::GradAll(service.grad_all(&w)));
-                        }
-                        Request::Linesearch { worker, d } => {
-                            let _ =
-                                service_tx.send(Reply::Linesearch(service.linesearch(worker, &d)));
-                        }
-                        Request::LinesearchAll { d } => {
-                            let _ = service_tx
-                                .send(Reply::LinesearchAll(service.linesearch_all(&d)));
-                        }
-                        Request::Shutdown => break,
-                    }
+    impl Service {
+        fn build(
+            shards: Vec<(Vec<f32>, Vec<f32>, usize)>, // (x row-major, y, rows_bucket)
+            p: usize,
+            manifest: &Manifest,
+        ) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+            let mut grad_exes = HashMap::new();
+            let mut ls_exes = HashMap::new();
+            let mut staged = Vec::with_capacity(shards.len());
+            for (x, y, rows) in &shards {
+                let shape = (*rows, p);
+                if !grad_exes.contains_key(&shape) {
+                    let grad_path = manifest
+                        .find("worker_grad", shape)
+                        .with_context(|| format!("no worker_grad artifact for shape {shape:?}"))?;
+                    let ls_path = manifest
+                        .find("linesearch", shape)
+                        .with_context(|| format!("no linesearch artifact for shape {shape:?}"))?;
+                    grad_exes.insert(shape, compile(&client, &grad_path)?);
+                    ls_exes.insert(shape, compile(&client, &ls_path)?);
                 }
-            })
-            .context("spawning xla service thread")?;
-        init_rx
-            .recv()
-            .context("xla service thread died during init")??;
-        Ok(XlaEngine { tx, rx, workers, p, handle: Some(handle) })
+                let x_buf = client
+                    .buffer_from_host_buffer::<f32>(x, &[*rows, p], None)
+                    .map_err(|e| anyhow!("staging X: {e:?}"))?;
+                let y_buf = client
+                    .buffer_from_host_buffer::<f32>(y, &[*rows, 1], None)
+                    .map_err(|e| anyhow!("staging y: {e:?}"))?;
+                staged.push(StagedWorker { x_buf, y_buf, shape });
+            }
+            Ok(Service { client, grad_exes, ls_exes, staged, p })
+        }
+
+        fn grad(&self, worker: usize, w: &[f32]) -> Result<(Vec<f64>, f64)> {
+            let w_buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(w, &[self.p, 1], None)
+                .map_err(|e| anyhow!("staging w: {e:?}"))?;
+            self.grad_with_buf(worker, &w_buf)
+        }
+
+        /// One worker's gradient against an already-staged broadcast buffer.
+        fn grad_with_buf(&self, worker: usize, w_buf: &xla::PjRtBuffer) -> Result<(Vec<f64>, f64)> {
+            let sw = &self.staged[worker];
+            let exe = &self.grad_exes[&sw.shape];
+            let outs = exe
+                .execute_b(&[&sw.x_buf, &sw.y_buf, w_buf])
+                .map_err(|e| anyhow!("execute worker_grad: {e:?}"))?;
+            let lit = outs[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("readback: {e:?}"))?;
+            let (g_lit, f_lit) = lit.to_tuple2().map_err(|e| anyhow!("tuple: {e:?}"))?;
+            let g32 = g_lit.to_vec::<f32>().map_err(|e| anyhow!("g readback: {e:?}"))?;
+            let f32v = f_lit.to_vec::<f32>().map_err(|e| anyhow!("f readback: {e:?}"))?;
+            Ok((g32.iter().map(|&v| v as f64).collect(), f32v[0] as f64))
+        }
+
+        /// Broadcast gradient round: upload `w` once, execute all workers.
+        fn grad_all(&self, w: &[f32]) -> Result<Vec<(Vec<f64>, f64)>> {
+            let w_buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(w, &[self.p, 1], None)
+                .map_err(|e| anyhow!("staging w: {e:?}"))?;
+            (0..self.staged.len()).map(|i| self.grad_with_buf(i, &w_buf)).collect()
+        }
+
+        fn linesearch(&self, worker: usize, d: &[f32]) -> Result<f64> {
+            let d_buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(d, &[self.p, 1], None)
+                .map_err(|e| anyhow!("staging d: {e:?}"))?;
+            self.linesearch_with_buf(worker, &d_buf)
+        }
+
+        fn linesearch_with_buf(&self, worker: usize, d_buf: &xla::PjRtBuffer) -> Result<f64> {
+            let sw = &self.staged[worker];
+            let exe = &self.ls_exes[&sw.shape];
+            let outs = exe
+                .execute_b(&[&sw.x_buf, d_buf])
+                .map_err(|e| anyhow!("execute linesearch: {e:?}"))?;
+            let lit = outs[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("readback: {e:?}"))?;
+            let q_lit = lit.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+            let q = q_lit.to_vec::<f32>().map_err(|e| anyhow!("q readback: {e:?}"))?;
+            Ok(q[0] as f64)
+        }
+
+        fn linesearch_all(&self, d: &[f32]) -> Result<Vec<f64>> {
+            let d_buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(d, &[self.p, 1], None)
+                .map_err(|e| anyhow!("staging d: {e:?}"))?;
+            (0..self.staged.len()).map(|i| self.linesearch_with_buf(i, &d_buf)).collect()
+        }
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-UTF8 artifact path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
+    }
+
+    impl XlaEngine {
+        /// Stage the problem's shards and compile its artifacts.
+        ///
+        /// Fails fast if `dir` has no manifest or lacks a shape bucket for any
+        /// shard (`make artifacts` regenerates them).
+        pub fn new(prob: &EncodedProblem, dir: PathBuf) -> Result<Self> {
+            let manifest = Manifest::load(&dir)?;
+            let p = prob.p();
+            // Round every shard up to its artifact bucket (zero-pad = exact).
+            let mut shards = Vec::with_capacity(prob.shards.len());
+            for (i, s) in prob.shards.iter().enumerate() {
+                let rows = s.x.rows();
+                let bucket = manifest.grad_bucket(rows, p).with_context(|| {
+                    format!(
+                        "worker {i}: no worker_grad artifact bucket for rows={rows}, p={p} \
+                         (available: {:?}) — extend python/compile/aot.py shapes",
+                        manifest.grad_shapes()
+                    )
+                })?;
+                let padded = s.x.pad_rows(bucket);
+                let mut y32: Vec<f32> = s.y.iter().map(|&v| v as f32).collect();
+                y32.resize(bucket, 0.0);
+                shards.push((padded.to_f32(), y32, bucket));
+            }
+            if manifest.find("linesearch", (shards[0].2, p)).is_none() {
+                bail!("manifest lacks linesearch artifacts for p={p}");
+            }
+
+            let (tx, service_rx) = mpsc::channel::<Request>();
+            let (service_tx, rx) = mpsc::channel::<Reply>();
+            let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+            let workers = shards.len();
+            let manifest_clone = manifest.clone();
+            let handle = std::thread::Builder::new()
+                .name("xla-service".into())
+                .spawn(move || {
+                    let service = match Service::build(shards, p, &manifest_clone) {
+                        Ok(s) => {
+                            let _ = init_tx.send(Ok(()));
+                            s
+                        }
+                        Err(e) => {
+                            let _ = init_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    while let Ok(req) = service_rx.recv() {
+                        match req {
+                            Request::Grad { worker, w } => {
+                                let _ = service_tx.send(Reply::Grad(service.grad(worker, &w)));
+                            }
+                            Request::GradAll { w } => {
+                                let _ = service_tx.send(Reply::GradAll(service.grad_all(&w)));
+                            }
+                            Request::Linesearch { worker, d } => {
+                                let _ =
+                                    service_tx.send(Reply::Linesearch(service.linesearch(worker, &d)));
+                            }
+                            Request::LinesearchAll { d } => {
+                                let _ = service_tx
+                                    .send(Reply::LinesearchAll(service.linesearch_all(&d)));
+                            }
+                            Request::Shutdown => break,
+                        }
+                    }
+                })
+                .context("spawning xla service thread")?;
+            init_rx
+                .recv()
+                .context("xla service thread died during init")??;
+            Ok(XlaEngine { tx, rx, workers, p, handle: Some(handle) })
+        }
+    }
+
+    impl ComputeEngine for XlaEngine {
+        fn name(&self) -> &'static str {
+            "xla"
+        }
+
+        fn worker_grad(&mut self, worker: usize, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+            let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+            self.tx
+                .send(Request::Grad { worker, w: w32 })
+                .map_err(|_| anyhow!("xla service thread gone"))?;
+            match self.rx.recv().map_err(|_| anyhow!("xla service thread gone"))? {
+                Reply::Grad(r) => r,
+                _ => bail!("protocol error: unexpected reply type"),
+            }
+        }
+
+        fn linesearch(&mut self, worker: usize, d: &[f64]) -> Result<f64> {
+            let d32: Vec<f32> = d.iter().map(|&v| v as f32).collect();
+            self.tx
+                .send(Request::Linesearch { worker, d: d32 })
+                .map_err(|_| anyhow!("xla service thread gone"))?;
+            match self.rx.recv().map_err(|_| anyhow!("xla service thread gone"))? {
+                Reply::Linesearch(r) => r,
+                _ => bail!("protocol error: unexpected reply type"),
+            }
+        }
+
+        fn worker_grad_all(&mut self, w: &[f64]) -> Result<Vec<(Vec<f64>, f64)>> {
+            let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+            self.tx
+                .send(Request::GradAll { w: w32 })
+                .map_err(|_| anyhow!("xla service thread gone"))?;
+            match self.rx.recv().map_err(|_| anyhow!("xla service thread gone"))? {
+                Reply::GradAll(r) => r,
+                _ => bail!("protocol error: unexpected reply type"),
+            }
+        }
+
+        fn linesearch_all(&mut self, d: &[f64]) -> Result<Vec<f64>> {
+            let d32: Vec<f32> = d.iter().map(|&v| v as f32).collect();
+            self.tx
+                .send(Request::LinesearchAll { d: d32 })
+                .map_err(|_| anyhow!("xla service thread gone"))?;
+            match self.rx.recv().map_err(|_| anyhow!("xla service thread gone"))? {
+                Reply::LinesearchAll(r) => r,
+                _ => bail!("protocol error: unexpected reply type"),
+            }
+        }
+
+        /// Collect-all sinks take the `GradAll` broadcast path (`w` is
+        /// staged on device once for all workers — §Perf iter. 4) with
+        /// the batch time attributed evenly; first-k sinks stream one
+        /// worker per service round trip so true per-worker timing and
+        /// cancellation apply.
+        fn worker_grad_streamed(&mut self, w: &[f64], sink: &GradCollector) -> Result<()> {
+            if !sink.streaming_admission() {
+                let t0 = std::time::Instant::now();
+                let all = self.worker_grad_all(w)?;
+                let per = t0.elapsed().as_secs_f64() * 1e3 / all.len().max(1) as f64;
+                for (i, resp) in all.into_iter().enumerate() {
+                    sink.deliver(i, resp, per);
+                }
+                return Ok(());
+            }
+            for i in 0..self.workers {
+                if sink.is_cancelled() {
+                    break;
+                }
+                let t0 = std::time::Instant::now();
+                let (g, f) = self.worker_grad(i, w)?;
+                sink.deliver(i, (g, f), t0.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(())
+        }
+
+        /// Same batch-vs-streaming split as
+        /// [`XlaEngine::worker_grad_streamed`], for line-search rounds.
+        fn linesearch_streamed(&mut self, d: &[f64], sink: &CurvCollector) -> Result<()> {
+            if !sink.streaming_admission() {
+                let t0 = std::time::Instant::now();
+                let all = self.linesearch_all(d)?;
+                let per = t0.elapsed().as_secs_f64() * 1e3 / all.len().max(1) as f64;
+                for (i, q) in all.into_iter().enumerate() {
+                    sink.deliver(i, q, per);
+                }
+                return Ok(());
+            }
+            for i in 0..self.workers {
+                if sink.is_cancelled() {
+                    break;
+                }
+                let t0 = std::time::Instant::now();
+                let q = self.linesearch(i, d)?;
+                sink.deliver(i, q, t0.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(())
+        }
+
+        fn workers(&self) -> usize {
+            self.workers
+        }
+    }
+
+    impl Drop for XlaEngine {
+        fn drop(&mut self) {
+            let _ = self.tx.send(Request::Shutdown);
+            if let Some(h) = self.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    impl XlaEngine {
+        /// Problem dimension p.
+        pub fn dim(&self) -> usize {
+            self.p
+        }
     }
 }
 
-impl ComputeEngine for XlaEngine {
-    fn name(&self) -> &'static str {
-        "xla"
+#[cfg(feature = "xla")]
+pub use imp::XlaEngine;
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use crate::problem::EncodedProblem;
+    use crate::runtime::ComputeEngine;
+    use anyhow::{bail, Result};
+    use std::path::PathBuf;
+
+    /// Stub XLA engine compiled when the `xla` feature is off: keeps the
+    /// construction signature so callers (CLI `--engine xla`, benches,
+    /// integration tests) compile, but always fails at `new` — the
+    /// PJRT bindings are not linked into this build.
+    pub struct XlaEngine {
+        _private: (),
     }
 
-    fn worker_grad(&mut self, worker: usize, w: &[f64]) -> Result<(Vec<f64>, f64)> {
-        let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
-        self.tx
-            .send(Request::Grad { worker, w: w32 })
-            .map_err(|_| anyhow!("xla service thread gone"))?;
-        match self.rx.recv().map_err(|_| anyhow!("xla service thread gone"))? {
-            Reply::Grad(r) => r,
-            _ => bail!("protocol error: unexpected reply type"),
+    impl XlaEngine {
+        /// Always errors: this binary was built without `--features xla`.
+        pub fn new(_prob: &EncodedProblem, dir: PathBuf) -> Result<Self> {
+            bail!(
+                "XlaEngine unavailable: built without the `xla` feature \
+                 (artifacts dir {dir:?}); rebuild with `--features xla` \
+                 and a vendored `xla` crate, or use `--engine native`"
+            )
+        }
+
+        /// Problem dimension p (API parity with the real engine).
+        pub fn dim(&self) -> usize {
+            unreachable!("stub XlaEngine cannot be constructed")
         }
     }
 
-    fn linesearch(&mut self, worker: usize, d: &[f64]) -> Result<f64> {
-        let d32: Vec<f32> = d.iter().map(|&v| v as f32).collect();
-        self.tx
-            .send(Request::Linesearch { worker, d: d32 })
-            .map_err(|_| anyhow!("xla service thread gone"))?;
-        match self.rx.recv().map_err(|_| anyhow!("xla service thread gone"))? {
-            Reply::Linesearch(r) => r,
-            _ => bail!("protocol error: unexpected reply type"),
+    impl ComputeEngine for XlaEngine {
+        fn name(&self) -> &'static str {
+            "xla-stub"
         }
-    }
 
-    fn worker_grad_all(&mut self, w: &[f64]) -> Result<Vec<(Vec<f64>, f64)>> {
-        let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
-        self.tx
-            .send(Request::GradAll { w: w32 })
-            .map_err(|_| anyhow!("xla service thread gone"))?;
-        match self.rx.recv().map_err(|_| anyhow!("xla service thread gone"))? {
-            Reply::GradAll(r) => r,
-            _ => bail!("protocol error: unexpected reply type"),
+        fn worker_grad(&mut self, _worker: usize, _w: &[f64]) -> Result<(Vec<f64>, f64)> {
+            unreachable!("stub XlaEngine cannot be constructed")
         }
-    }
 
-    fn linesearch_all(&mut self, d: &[f64]) -> Result<Vec<f64>> {
-        let d32: Vec<f32> = d.iter().map(|&v| v as f32).collect();
-        self.tx
-            .send(Request::LinesearchAll { d: d32 })
-            .map_err(|_| anyhow!("xla service thread gone"))?;
-        match self.rx.recv().map_err(|_| anyhow!("xla service thread gone"))? {
-            Reply::LinesearchAll(r) => r,
-            _ => bail!("protocol error: unexpected reply type"),
+        fn linesearch(&mut self, _worker: usize, _d: &[f64]) -> Result<f64> {
+            unreachable!("stub XlaEngine cannot be constructed")
         }
-    }
 
-    fn workers(&self) -> usize {
-        self.workers
-    }
-}
-
-impl Drop for XlaEngine {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Request::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        fn workers(&self) -> usize {
+            unreachable!("stub XlaEngine cannot be constructed")
         }
     }
 }
 
-impl XlaEngine {
-    /// Problem dimension p.
-    pub fn dim(&self) -> usize {
-        self.p
-    }
-}
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaEngine;

@@ -1,0 +1,202 @@
+//! Streaming-vs-batch equivalence: the streaming first-k gather must be
+//! an exact drop-in for the historical batch-synchronous path under
+//! `ClockMode::Virtual` — same RNG stream, same admitted set, bit-equal
+//! round records and gradient payloads — while `ClockMode::Measured`
+//! exercises the genuinely event-driven path end to end.
+
+use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
+use codedopt::encoding::EncoderKind;
+use codedopt::optim::{CodedLbfgs, LbfgsConfig, Optimizer};
+use codedopt::problem::{EncodedProblem, QuadProblem};
+use codedopt::rng::Pcg64;
+use codedopt::runtime::{ComputeEngine, CurvCollector, GradCollector, NativeEngine};
+use codedopt::testutil::{gen_range, property};
+
+fn random_delay(rng: &mut Pcg64) -> DelayModel {
+    match rng.next_below(5) {
+        0 => DelayModel::Exp { mean_ms: 1.0 + 20.0 * rng.next_f64() },
+        1 => DelayModel::ShiftedExp { shift_ms: 2.0, mean_ms: 5.0 },
+        2 => DelayModel::ExpWithFailures { mean_ms: 5.0, p_fail: 0.3 },
+        3 => DelayModel::Constant { ms: 3.0 },
+        _ => DelayModel::None,
+    }
+}
+
+/// Replica of the historical (pre-streaming) batch gather: the cluster's
+/// delay RNG stream (`Pcg64::new(seed, 0xc105)`), worker-index sampling
+/// order, stable sort by arrival, first-k admission, k-th arrival as the
+/// round duration. Any divergence from this is a reproducibility break.
+struct LegacyGather {
+    rng: Pcg64,
+    wait_for: usize,
+    delay: DelayModel,
+    compute_ms: Vec<f64>,
+}
+
+impl LegacyGather {
+    fn new(cfg: &ClusterConfig, enc: &EncodedProblem) -> Self {
+        let compute_ms = enc
+            .shards
+            .iter()
+            .map(|s| 2.0 * s.x.rows() as f64 * s.x.cols() as f64 * 2.0 / 1e6 * cfg.ms_per_mflop)
+            .collect();
+        LegacyGather {
+            rng: Pcg64::new(cfg.seed, 0xc105),
+            wait_for: cfg.wait_for,
+            delay: cfg.delay.clone(),
+            compute_ms,
+        }
+    }
+
+    /// One round's (admitted, arrivals, elapsed_ms, failed).
+    fn round(&mut self) -> (Vec<usize>, Vec<(usize, f64)>, f64, Vec<usize>) {
+        let m = self.compute_ms.len();
+        let mut arrivals: Vec<(usize, f64)> = Vec::with_capacity(m);
+        let mut failed = Vec::new();
+        for i in 0..m {
+            let delay = self.delay.sample(&mut self.rng, i);
+            if delay.is_finite() {
+                arrivals.push((i, self.compute_ms[i] + delay));
+            } else {
+                failed.push(i);
+            }
+        }
+        arrivals.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let k = self.wait_for.min(arrivals.len());
+        let admitted: Vec<usize> = arrivals[..k].iter().map(|&(w, _)| w).collect();
+        let elapsed = arrivals.get(k.saturating_sub(1)).map(|&(_, t)| t).unwrap_or(0.0);
+        (admitted, arrivals, elapsed, failed)
+    }
+}
+
+/// The tentpole acceptance property: a seeded `ClockMode::Virtual` run
+/// produces bit-identical `Round` records (admitted set, arrivals,
+/// `elapsed_ms`) and bit-identical admitted gradients through the
+/// streaming refactor, across cluster shapes and delay models.
+#[test]
+fn prop_virtual_streaming_is_bit_identical_to_legacy_batch() {
+    property("virtual streaming ≡ legacy batch", 25, |rng| {
+        let m = gen_range(rng, 2, 10);
+        let k = gen_range(rng, 1, m);
+        let n = gen_range(rng, m.max(8), 64).next_power_of_two();
+        let p = gen_range(rng, 2, 10);
+        let seed = rng.next_u64();
+        let prob = QuadProblem::synthetic_gaussian(n, p, 0.01, seed);
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, m, seed).unwrap();
+        let cfg = ClusterConfig {
+            workers: m,
+            wait_for: k,
+            delay: random_delay(rng),
+            clock: ClockMode::Virtual,
+            ms_per_mflop: 0.5,
+            seed,
+        };
+        let mut cluster =
+            Cluster::new(&enc, Box::new(NativeEngine::new(&enc)), cfg.clone()).unwrap();
+        let mut legacy = LegacyGather::new(&cfg, &enc);
+        let mut batch_engine = NativeEngine::new(&enc);
+
+        for r in 0..4 {
+            let w: Vec<f64> = (0..p).map(|j| 0.1 * (r as f64 + 1.0) * (j as f64 - 1.0)).collect();
+            let (responses, round) = cluster.grad_round(&w).unwrap();
+            let all = batch_engine.worker_grad_all(&w).unwrap();
+            let (admitted, arrivals, elapsed, failed) = legacy.round();
+
+            assert_eq!(round.admitted, admitted, "admitted set changed");
+            assert_eq!(round.failed, failed, "failed set changed");
+            assert_eq!(
+                round.elapsed_ms.to_bits(),
+                elapsed.to_bits(),
+                "elapsed_ms not bit-identical"
+            );
+            assert_eq!(round.arrivals.len(), arrivals.len());
+            for ((w1, t1), (w2, t2)) in round.arrivals.iter().zip(&arrivals) {
+                assert_eq!(w1, w2, "arrival order changed");
+                assert_eq!(t1.to_bits(), t2.to_bits(), "arrival time not bit-identical");
+            }
+            // admitted payloads == the batch surface's, bit for bit
+            assert_eq!(responses.len(), admitted.len());
+            for ((wid, g, f), &expect_wid) in responses.iter().zip(&admitted) {
+                assert_eq!(*wid, expect_wid);
+                let (g_ref, f_ref) = &all[*wid];
+                assert_eq!(f.to_bits(), f_ref.to_bits(), "objective payload differs");
+                for (a, b) in g.iter().zip(g_ref) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "gradient payload differs");
+                }
+            }
+        }
+    });
+}
+
+/// The engine-surface half of the satellite: `worker_grad_streamed` into
+/// a collect-all sink delivers exactly the `worker_grad_all` payload set.
+#[test]
+fn prop_streamed_surface_matches_batch_surface() {
+    property("streamed surface ≡ batch surface", 20, |rng| {
+        let m = gen_range(rng, 2, 10);
+        let n = gen_range(rng, m.max(8), 64).next_power_of_two();
+        let p = gen_range(rng, 2, 10);
+        let seed = rng.next_u64();
+        let prob = QuadProblem::synthetic_gaussian(n, p, 0.0, seed);
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Gaussian, 2.0, m, seed).unwrap();
+        let mut eng = NativeEngine::new(&enc);
+        let w: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+
+        let batch = eng.worker_grad_all(&w).unwrap();
+        let sink = GradCollector::collect_all(m);
+        eng.worker_grad_streamed(&w, &sink).unwrap();
+        let got = sink.into_collected();
+        assert_eq!(got.delivery_order.len(), m, "all workers must deliver");
+        for i in 0..m {
+            let (payload, ms) = got.responses[i].as_ref().expect("missing response");
+            assert!(*ms >= 0.0);
+            assert_eq!(payload.1.to_bits(), batch[i].1.to_bits());
+            for (a, b) in payload.0.iter().zip(&batch[i].0) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+
+        let d: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let ls_batch = eng.linesearch_all(&d).unwrap();
+        let ls_sink = CurvCollector::collect_all(m);
+        eng.linesearch_streamed(&d, &ls_sink).unwrap();
+        let ls = ls_sink.into_collected();
+        for i in 0..m {
+            let (q, _) = ls.responses[i].expect("missing linesearch response");
+            assert_eq!(q.to_bits(), ls_batch[i].to_bits());
+        }
+    });
+}
+
+/// Measured-clock end to end: a full coded L-BFGS run on the streaming
+/// gather with real per-worker timing converges like the virtual one and
+/// advances a strictly positive wall-clock-derived simulated time.
+#[test]
+fn measured_clock_full_run_converges() {
+    let prob = QuadProblem::synthetic_gaussian(256, 16, 0.05, 7);
+    let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 7).unwrap();
+    let cfg = ClusterConfig {
+        workers: 8,
+        wait_for: 6,
+        delay: DelayModel::Exp { mean_ms: 1.0 },
+        clock: ClockMode::Measured,
+        ms_per_mflop: 0.5,
+        seed: 7,
+    };
+    let mut cluster = Cluster::new(&enc, Box::new(NativeEngine::new(&enc)), cfg).unwrap();
+    let out = CodedLbfgs::new(LbfgsConfig { epsilon: Some(0.2), ..Default::default() })
+        .run(&enc, &mut cluster, 40)
+        .unwrap();
+    assert!(!out.trace.diverged(), "measured-clock L-BFGS diverged");
+    let f_star = prob.objective(&prob.exact_solution().unwrap());
+    let f0 = prob.objective(&vec![0.0; 16]);
+    assert!(
+        out.trace.best_objective() - f_star < 0.15 * (f0 - f_star),
+        "no convergence on the measured-clock streaming path"
+    );
+    assert!(cluster.sim_ms > 0.0, "measured clock never advanced");
+    // every round admitted exactly k
+    for r in &out.trace.records {
+        assert_eq!(r.responders, 6);
+    }
+}
