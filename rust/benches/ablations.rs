@@ -18,6 +18,7 @@ use codedopt::optim::{CodedLbfgs, LbfgsConfig, Optimizer, RunOutput};
 use codedopt::problem::{EncodedProblem, QuadProblem};
 use codedopt::runtime::NativeEngine;
 
+#[allow(clippy::too_many_arguments)]
 fn run(
     prob: &QuadProblem,
     kind: EncoderKind,

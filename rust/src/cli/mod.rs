@@ -14,7 +14,9 @@ pub use args::Args;
 
 use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
 use crate::encoding::EncoderKind;
-use crate::optim::{CodedGd, CodedLbfgs, GdConfig, LbfgsConfig, Optimizer};
+use crate::optim::{
+    CodedGd, CodedLbfgs, CodedSgd, GdConfig, LbfgsConfig, LrSchedule, Optimizer, SgdConfig,
+};
 use crate::problem::{EncodedProblem, QuadProblem};
 use crate::runtime::{build_engine, EngineKind};
 use anyhow::{Context, Result};
@@ -29,11 +31,21 @@ SUBCOMMANDS
   ridge             encoded distributed ridge regression (Fig. 4 workload)
     --n 4096 --p 6000 --lambda 0.05 --workers 32 --k 12 --beta 2.0
     --encoder hadamard|uncoded|replication|gaussian|paley|hadamard-etf|steiner|dft
-    --algo lbfgs|gd --iters 100 --engine native|xla --delay exp:10 --seed 0
+    --optimizer lbfgs|gd|sgd (alias --algo) --iters 100
+    --engine native|xla --delay exp:10 --seed 0
     --clock virtual|measured   virtual: deterministic flop-model round times;
                                measured: per-worker wall-clock with straggler
                                cancellation (streaming first-k gather)
     --csv <path>    write the per-iteration trace as CSV
+    SGD-only flags (--optimizer sgd):
+    --batch-frac 0.1           per-round block-row mini-batch fraction (0,1];
+                               1.0 reproduces gd's iterates bit for bit
+    --lr 0.05                  base step size (default: the Theorem-1 rule)
+    --lr-schedule constant|invt[:T0]|cosine:PERIOD
+    --momentum 0.0             Polyak heavy-ball momentum in [0,1)
+    --epoch-len 0              rounds per plateau epoch (0 = one data pass)
+    --plateau-patience 0       non-improving epochs before early stop (0 = off)
+    --plateau-tol 0.001        relative encoded-objective improvement threshold
 
   mf                coded matrix factorization on synthetic MovieLens (Fig. 5/6)
     --users 240 --items 160 --ratings 8000 --embed 15 --lambda 10
@@ -99,7 +111,8 @@ fn cmd_ridge(args: &Args) -> Result<()> {
     let engine_kind = EngineKind::parse(args.flag_str("engine", "native"))?;
     let delay = DelayModel::parse(args.flag_str("delay", "exp:10"))?;
     let clock = ClockMode::parse(args.flag_str("clock", "virtual"))?;
-    let algo = args.flag_str("algo", "lbfgs");
+    // --optimizer is canonical; --algo stays as the historical alias
+    let algo = args.flag("optimizer").unwrap_or_else(|| args.flag_str("algo", "lbfgs"));
 
     println!(
         "# ridge: n={n} p={p} λ={lambda} m={m} k={k} β={beta} encoder={kind} engine={engine_kind:?} clock={clock:?} algo={algo}"
@@ -121,7 +134,25 @@ fn cmd_ridge(args: &Args) -> Result<()> {
         "lbfgs" => {
             CodedLbfgs::new(LbfgsConfig { seed, ..Default::default() }).run(&enc, &mut cluster, iters)?
         }
-        other => anyhow::bail!("unknown --algo {other:?} (gd|lbfgs)"),
+        "sgd" => {
+            let lr = args
+                .flag("lr")
+                .map(|v| v.parse::<f64>().with_context(|| format!("--lr {v}: not a number")))
+                .transpose()?;
+            let cfg = SgdConfig {
+                lr,
+                schedule: LrSchedule::parse(args.flag_str("lr-schedule", "constant"))?,
+                momentum: args.flag_f64("momentum", 0.0)?,
+                batch_frac: args.flag_f64("batch-frac", 0.1)?,
+                epoch_len: args.flag_usize("epoch-len", 0)?,
+                patience: args.flag_usize("plateau-patience", 0)?,
+                plateau_tol: args.flag_f64("plateau-tol", 1e-3)?,
+                seed,
+            };
+            cfg.validate()?;
+            CodedSgd::new(cfg).run(&enc, &mut cluster, iters)?
+        }
+        other => anyhow::bail!("unknown --optimizer {other:?} (gd|lbfgs|sgd)"),
     };
     let f_star = prob
         .exact_solution()
@@ -319,6 +350,44 @@ mod tests {
 
     #[test]
     fn ridge_rejects_bad_algo() {
-        assert!(run(&["ridge", "--n", "32", "--p", "4", "--algo", "sgd", "--iters", "1"]).is_err());
+        let r = run(&["ridge", "--n", "32", "--p", "4", "--algo", "bogus", "--iters", "1"]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn tiny_ridge_sgd_runs() {
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "6",
+            "--optimizer", "sgd", "--batch-frac", "0.5", "--lr-schedule", "invt:5",
+            "--momentum", "0.5",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn ridge_sgd_via_algo_alias_runs() {
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "4", "--iters", "3",
+            "--algo", "sgd", "--batch-frac", "1.0",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn ridge_sgd_rejects_bad_lr_schedule() {
+        assert!(run(&[
+            "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "4", "--iters", "1",
+            "--optimizer", "sgd", "--lr-schedule", "warp:3",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn ridge_sgd_rejects_bad_batch_frac() {
+        assert!(run(&[
+            "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "4", "--iters", "1",
+            "--optimizer", "sgd", "--batch-frac", "1.5",
+        ])
+        .is_err());
     }
 }

@@ -31,7 +31,7 @@
 //! The cluster is engine-agnostic ([`ComputeEngine`]): the same rounds run
 //! on the native Rust kernels or the PJRT/XLA artifacts.
 
-use crate::problem::EncodedProblem;
+use crate::problem::{BatchPlan, EncodedProblem};
 use crate::rng::Pcg64;
 use crate::runtime::{Collected, ComputeEngine, CurvCollector, GradCollector};
 use anyhow::{ensure, Result};
@@ -256,6 +256,20 @@ pub struct Round {
     pub compute_ms: Vec<f64>,
 }
 
+impl Round {
+    /// Mean per-worker compute time over the admitted set (ms) — the
+    /// per-iteration `compute_ms` summary the traces/CSVs record. Cancelled
+    /// workers (`NaN` slots) are never admitted, so the mean is over
+    /// finite values; 0 on an empty admitted set.
+    pub fn admitted_compute_ms(&self) -> f64 {
+        if self.admitted.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self.admitted.iter().map(|&w| self.compute_ms[w]).sum();
+        sum / self.admitted.len() as f64
+    }
+}
+
 /// Per-round gradient responses from the admitted set, arrival-ordered.
 pub type GradResponses = Vec<(usize, Vec<f64>, f64)>;
 /// Per-round line-search responses from the admitted set.
@@ -269,6 +283,9 @@ pub struct Cluster {
     /// Flop cost per worker per gradient round (for the virtual clock).
     grad_mflops: Vec<f64>,
     ls_mflops: Vec<f64>,
+    /// Padded row count per shard (scales the virtual flop model down to
+    /// the sampled rows in mini-batch rounds).
+    shard_rows: Vec<usize>,
     /// Accumulated simulated time.
     pub sim_ms: f64,
     /// Rounds executed so far (gradient + line-search).
@@ -308,6 +325,7 @@ impl Cluster {
             .iter()
             .map(|s| 2.0 * s.x.rows() as f64 * s.x.cols() as f64 / 1e6)
             .collect();
+        let shard_rows = prob.shards.iter().map(|s| s.x.rows()).collect();
         let rng = Pcg64::new(cfg.seed, 0xc105);
         Ok(Cluster {
             cfg,
@@ -315,6 +333,7 @@ impl Cluster {
             rng,
             grad_mflops,
             ls_mflops,
+            shard_rows,
             sim_ms: 0.0,
             rounds_run: 0,
         })
@@ -424,6 +443,55 @@ impl Cluster {
                 let eligible: Vec<bool> = delays.iter().map(|d| d.is_finite()).collect();
                 let sink = GradCollector::first_k(m, self.cfg.wait_for, eligible);
                 self.engine.worker_grad_streamed(w, &sink)?;
+                let collected = sink.into_collected();
+                let round = Self::measured_round(&collected, &delays);
+                (Self::take_admitted(&round, collected)?, round)
+            }
+        };
+        let responses: GradResponses =
+            responses.into_iter().map(|(wid, (g, f))| (wid, g, f)).collect();
+        self.sim_ms += round.elapsed_ms;
+        self.rounds_run += 1;
+        Ok((responses, round))
+    }
+
+    /// One mini-batch gradient round: broadcast `w`, each worker streams
+    /// `(g_i, f_i)` computed over its [`BatchPlan`] row segments, leader
+    /// admits the first k. Same round machinery as
+    /// [`Cluster::grad_round`] — identical delay-RNG consumption, both
+    /// clock modes — except the virtual-clock flop model is scaled to the
+    /// sampled rows (`b_i / rows_i` of the full-shard cost), so smaller
+    /// batches finish proportionally faster on the simulated clock too.
+    pub fn grad_batch_round(
+        &mut self,
+        w: &[f64],
+        plan: &BatchPlan,
+    ) -> Result<(GradResponses, Round)> {
+        let m = self.cfg.workers;
+        ensure!(
+            plan.workers() == m,
+            "batch plan covers {} workers, cluster has {m}",
+            plan.workers()
+        );
+        let delays = self.sample_delays();
+        let (responses, round) = match self.cfg.clock {
+            ClockMode::Virtual => {
+                let sink = GradCollector::collect_all(m);
+                self.engine.worker_grad_batch_streamed(w, plan, &sink)?;
+                let collected = sink.into_collected();
+                let compute: Vec<f64> = (0..m)
+                    .map(|i| {
+                        let frac = plan.rows(i) as f64 / self.shard_rows[i] as f64;
+                        self.grad_mflops[i] * frac * self.cfg.ms_per_mflop
+                    })
+                    .collect();
+                let round = self.virtual_round(compute, &delays);
+                (Self::take_admitted(&round, collected)?, round)
+            }
+            ClockMode::Measured => {
+                let eligible: Vec<bool> = delays.iter().map(|d| d.is_finite()).collect();
+                let sink = GradCollector::first_k(m, self.cfg.wait_for, eligible);
+                self.engine.worker_grad_batch_streamed(w, plan, &sink)?;
                 let collected = sink.into_collected();
                 let round = Self::measured_round(&collected, &delays);
                 (Self::take_admitted(&round, collected)?, round)
@@ -548,7 +616,7 @@ mod tests {
     #[test]
     fn no_delay_means_zero_wait_spread() {
         let (_, mut c) = cluster(8, DelayModel::None, 0);
-        let (_, round) = c.grad_round(&vec![0.0; 6]).unwrap();
+        let (_, round) = c.grad_round(&[0.0; 6]).unwrap();
         // all arrivals equal compute time; k = m admits everyone
         assert_eq!(round.admitted.len(), 8);
         assert!(round.failed.is_empty());
@@ -559,7 +627,7 @@ mod tests {
         let (_, mut c) = cluster(8, DelayModel::ExpWithFailures { mean_ms: 1.0, p_fail: 0.5 }, 5);
         let mut saw_failure = false;
         for _ in 0..20 {
-            let (responses, round) = c.grad_round(&vec![0.0; 6]).unwrap();
+            let (responses, round) = c.grad_round(&[0.0; 6]).unwrap();
             assert_eq!(responses.len(), round.admitted.len());
             assert!(round.admitted.len() + round.failed.len() <= 8);
             if !round.failed.is_empty() {
@@ -599,6 +667,65 @@ mod tests {
         assert_eq!(rd.admitted.len(), 4);
         // not guaranteed different, but the rng must have advanced
         assert_eq!(c.rounds_run, 2);
+    }
+
+    #[test]
+    fn batch_round_admits_k_and_scales_virtual_compute() {
+        let (enc, mut c) = cluster(5, DelayModel::None, 3);
+        let w = vec![0.1; 6];
+        let mut rng = crate::rng::Pcg64::seeded(4);
+        let plan = enc.sample_batch(0.25, &mut rng);
+        let (_, full_round) = c.grad_round(&w).unwrap();
+        let (responses, round) = c.grad_batch_round(&w, &plan).unwrap();
+        assert_eq!(round.admitted.len(), 5);
+        assert_eq!(responses.len(), 5);
+        // quarter batch => quarter virtual compute time per worker
+        for i in 0..8 {
+            let frac = plan.rows(i) as f64 / enc.shards[i].x.rows() as f64;
+            assert!(
+                (round.compute_ms[i] - full_round.compute_ms[i] * frac).abs() < 1e-12,
+                "worker {i}: {} vs {} * {frac}",
+                round.compute_ms[i],
+                full_round.compute_ms[i]
+            );
+        }
+        assert_eq!(c.rounds_run, 2);
+    }
+
+    #[test]
+    fn batch_round_full_plan_matches_grad_round_payloads() {
+        let w = vec![0.3; 6];
+        let (enc, mut c1) = cluster(4, DelayModel::Exp { mean_ms: 10.0 }, 9);
+        let (_, mut c2) = cluster(4, DelayModel::Exp { mean_ms: 10.0 }, 9);
+        let mut rng = crate::rng::Pcg64::seeded(0);
+        let plan = enc.sample_batch(1.0, &mut rng);
+        let (r1, round1) = c1.grad_round(&w).unwrap();
+        let (r2, round2) = c2.grad_batch_round(&w, &plan).unwrap();
+        assert_eq!(round1.admitted, round2.admitted);
+        for ((wa, ga, fa), (wb, gb, fb)) in r1.iter().zip(&r2) {
+            assert_eq!(wa, wb);
+            assert_eq!(fa.to_bits(), fb.to_bits());
+            for (x, y) in ga.iter().zip(gb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_round_rejects_mismatched_plan() {
+        let (_, mut c) = cluster(4, DelayModel::None, 1);
+        let plan = BatchPlan { segments: vec![vec![(0, 4)]; 3] };
+        assert!(c.grad_batch_round(&[0.0; 6], &plan).is_err());
+    }
+
+    #[test]
+    fn admitted_compute_ms_summarizes_round() {
+        let (_, mut c) = cluster(8, DelayModel::None, 0);
+        let (_, round) = c.grad_round(&[0.0; 6]).unwrap();
+        let mean = round.admitted_compute_ms();
+        assert!(mean > 0.0 && mean.is_finite());
+        // equal shards => the mean equals any single worker's time
+        assert!((mean - round.compute_ms[0]).abs() < 1e-12);
     }
 
     #[test]
@@ -643,7 +770,7 @@ mod tests {
     #[test]
     fn virtual_round_reports_flop_model_compute_times() {
         let (_, mut c) = cluster(8, DelayModel::None, 0);
-        let (_, round) = c.grad_round(&vec![0.0; 6]).unwrap();
+        let (_, round) = c.grad_round(&[0.0; 6]).unwrap();
         assert_eq!(round.compute_ms.len(), 8);
         // equal shards => equal virtual compute times, matching the model
         for (i, &t) in round.compute_ms.iter().enumerate() {
@@ -738,7 +865,7 @@ mod tests {
             seed: 0,
         };
         let mut c = Cluster::new(&enc, eng, cfg).unwrap();
-        let (responses, round) = c.grad_round(&vec![0.0; 6]).unwrap();
+        let (responses, round) = c.grad_round(&[0.0; 6]).unwrap();
         // serial delivery order is 0, 1, 2 — then the round cancels
         assert_eq!(round.admitted, vec![0, 1, 2]);
         assert_eq!(responses.len(), 3);
@@ -763,7 +890,7 @@ mod tests {
         c.cfg.clock = ClockMode::Measured;
         let mut saw_failure = false;
         for _ in 0..10 {
-            let (responses, round) = c.grad_round(&vec![0.0; 6]).unwrap();
+            let (responses, round) = c.grad_round(&[0.0; 6]).unwrap();
             assert_eq!(responses.len(), round.admitted.len());
             for wid in &round.admitted {
                 assert!(!round.failed.contains(wid), "failed worker {wid} admitted");

@@ -273,7 +273,7 @@ mod tests {
     fn scalars() {
         assert_eq!(Json::parse("42").unwrap().as_f64().unwrap(), 42.0);
         assert_eq!(Json::parse("-1.5e2").unwrap().as_f64().unwrap(), -150.0);
-        assert_eq!(Json::parse("true").unwrap().as_bool().unwrap(), true);
+        assert!(Json::parse("true").unwrap().as_bool().unwrap());
         assert_eq!(Json::parse("null").unwrap(), Json::Null);
         assert_eq!(Json::parse("\"a\\nb\"").unwrap().as_str().unwrap(), "a\nb");
     }

@@ -38,11 +38,14 @@ pub mod testutil;
 /// Convenience re-exports for the common experiment-driving surface.
 pub mod prelude {
     pub use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, GatherPolicy, Round};
-    pub use crate::config::Config;
+    pub use crate::config::{Config, Json};
     pub use crate::encoding::{Encoder, EncoderKind};
     pub use crate::linalg::Mat;
-    pub use crate::optim::{CodedFista, CodedGd, CodedLbfgs, FistaConfig, GdConfig, LbfgsConfig, Optimizer, Prox, RunOutput, Trace};
-    pub use crate::problem::{EncodedProblem, QuadProblem, Scheme};
+    pub use crate::optim::{
+        CodedFista, CodedGd, CodedLbfgs, CodedSgd, FistaConfig, GdConfig, LbfgsConfig, LrSchedule,
+        Optimizer, Prox, RunOutput, SgdConfig, Trace,
+    };
+    pub use crate::problem::{BatchPlan, EncodedProblem, QuadProblem, Scheme};
     pub use crate::runtime::{
         build_engine, ComputeEngine, CurvCollector, EngineKind, GradCollector, NativeEngine,
         XlaEngine,

@@ -298,14 +298,37 @@ impl Mat {
     /// one pass over `g`, cutting hot-loop memory traffic from `3p` to
     /// `2p` doubles per row.
     pub fn fused_grad(&self, w: &[f64], y: &[f64], g: &mut [f64], resid_buf: &mut [f64]) -> f64 {
+        g.fill(0.0);
+        self.fused_grad_range(w, y, g, resid_buf, 0, self.rows)
+    }
+
+    /// Row-restricted, **accumulating** variant of [`Mat::fused_grad`]:
+    /// processes only rows `[lo, hi)` and adds their contribution into `g`
+    /// (which is *not* zeroed — callers compose multiple disjoint ranges,
+    /// e.g. the two segments of a wrap-around mini-batch block, and must
+    /// clear `g` themselves before the first call). Returns the partial
+    /// objective `Σ_{i∈[lo,hi)} (x_iᵀw − y_i)²`.
+    ///
+    /// For `(lo, hi) = (0, rows)` the arithmetic (pairing, summation
+    /// order) is identical to the historical full-shard kernel, which is
+    /// what keeps the batch path bit-compatible at batch fraction 1.
+    pub fn fused_grad_range(
+        &self,
+        w: &[f64],
+        y: &[f64],
+        g: &mut [f64],
+        resid_buf: &mut [f64],
+        lo: usize,
+        hi: usize,
+    ) -> f64 {
         assert_eq!(w.len(), self.cols, "fused_grad: w mismatch");
         assert_eq!(y.len(), self.rows, "fused_grad: y mismatch");
         assert_eq!(g.len(), self.cols, "fused_grad: g mismatch");
         assert_eq!(resid_buf.len(), self.rows, "fused_grad: buffer mismatch");
-        g.fill(0.0);
+        assert!(lo <= hi && hi <= self.rows, "fused_grad_range: bad range {lo}..{hi}");
         let mut f = 0.0;
-        let mut i = 0;
-        while i + 1 < self.rows {
+        let mut i = lo;
+        while i + 1 < hi {
             let row0 = self.row(i);
             let row1 = &self.data[(i + 1) * self.cols..(i + 2) * self.cols];
             // paired dot: one pass over w
@@ -336,7 +359,7 @@ impl Mat {
             }
             i += 2;
         }
-        if i < self.rows {
+        if i < hi {
             let row = self.row(i);
             let r = super::dot(row, w) - y[i];
             resid_buf[i] = r;
@@ -556,6 +579,59 @@ mod tests {
         for (u, v) in g.iter().zip(&g_ref) {
             assert!((u - v).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn fused_grad_range_full_matches_fused_grad_bitwise() {
+        let mut rng = Pcg64::seeded(16);
+        let a = random_mat(&mut rng, 27, 9);
+        let w: Vec<f64> = (0..9).map(|_| rng.next_gaussian()).collect();
+        let y: Vec<f64> = (0..27).map(|_| rng.next_gaussian()).collect();
+        let mut g1 = vec![0.0; 9];
+        let mut g2 = vec![0.0; 9];
+        let mut b1 = vec![0.0; 27];
+        let mut b2 = vec![0.0; 27];
+        let f1 = a.fused_grad(&w, &y, &mut g1, &mut b1);
+        g2.fill(0.0);
+        let f2 = a.fused_grad_range(&w, &y, &mut g2, &mut b2, 0, 27);
+        assert_eq!(f1.to_bits(), f2.to_bits());
+        for (u, v) in g1.iter().zip(&g2) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn fused_grad_range_segments_compose() {
+        // two disjoint ranges accumulate to the same gradient as the
+        // row-subset computed directly
+        let mut rng = Pcg64::seeded(17);
+        let a = random_mat(&mut rng, 20, 5);
+        let w: Vec<f64> = (0..5).map(|_| rng.next_gaussian()).collect();
+        let y: Vec<f64> = (0..20).map(|_| rng.next_gaussian()).collect();
+        let mut g = vec![0.0; 5];
+        let mut buf = vec![0.0; 20];
+        let f = a.fused_grad_range(&w, &y, &mut g, &mut buf, 14, 20)
+            + a.fused_grad_range(&w, &y, &mut g, &mut buf, 0, 3);
+        // reference: rows {14..20, 0..3} as an explicit submatrix
+        let idx: Vec<usize> = (14..20).chain(0..3).collect();
+        let sub = a.select_rows(&idx);
+        let ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+        let resid = crate::linalg::sub(&sub.gemv(&w), &ys);
+        let g_ref = sub.gemv_t(&resid);
+        let f_ref = crate::linalg::dot(&resid, &resid);
+        assert!((f - f_ref).abs() < 1e-10);
+        for (u, v) in g.iter().zip(&g_ref) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bad range")]
+    fn fused_grad_range_rejects_bad_range() {
+        let a = Mat::zeros(4, 2);
+        let mut g = vec![0.0; 2];
+        let mut buf = vec![0.0; 4];
+        a.fused_grad_range(&[0.0; 2], &[0.0; 4], &mut g, &mut buf, 2, 6);
     }
 
     #[test]

@@ -20,6 +20,13 @@ pub struct IterRecord {
     pub responders: usize,
     /// Simulated cluster time at the *end* of this iteration (ms).
     pub sim_ms: f64,
+    /// Mean per-worker compute time over the admitted set for this
+    /// iteration's gradient round (ms) — [`Round::admitted_compute_ms`]
+    /// (the flop-model cost under the virtual clock, measured wall-clock
+    /// under the measured clock).
+    ///
+    /// [`Round::admitted_compute_ms`]: crate::cluster::Round::admitted_compute_ms
+    pub compute_ms: f64,
 }
 
 /// Full run trace.
@@ -76,12 +83,20 @@ impl Trace {
 
     /// CSV with header; columns match [`IterRecord`].
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("iter,f_true,f_est,grad_norm,alpha,responders,sim_ms\n");
+        let mut s =
+            String::from("iter,f_true,f_est,grad_norm,alpha,responders,sim_ms,compute_ms\n");
         for r in &self.records {
             let _ = writeln!(
                 s,
-                "{},{:.10e},{:.10e},{:.6e},{:.6e},{},{:.4}",
-                r.iter, r.f_true, r.f_est, r.grad_norm, r.alpha, r.responders, r.sim_ms
+                "{},{:.10e},{:.10e},{:.6e},{:.6e},{},{:.4},{:.4}",
+                r.iter,
+                r.f_true,
+                r.f_est,
+                r.grad_norm,
+                r.alpha,
+                r.responders,
+                r.sim_ms,
+                r.compute_ms
             );
         }
         s
@@ -172,6 +187,7 @@ mod tests {
             alpha: 0.1,
             responders: 4,
             sim_ms: t,
+            compute_ms: 1.5,
         }
     }
 

@@ -175,6 +175,7 @@ impl Optimizer for CodedFista {
                 alpha,
                 responders: round.admitted.len(),
                 sim_ms: cluster.sim_ms,
+                compute_ms: round.admitted_compute_ms(),
             });
         }
         Ok(RunOutput { w, trace })
@@ -243,7 +244,7 @@ mod tests {
         });
         let out = fista.run(&enc, &mut cluster, 120).unwrap();
         let f_star = enc.raw.objective(&enc.raw.exact_solution().unwrap());
-        let f0 = enc.raw.objective(&vec![0.0; 16]);
+        let f0 = enc.raw.objective(&[0.0; 16]);
         assert!(
             out.trace.best_objective() - f_star < 1e-3 * (f0 - f_star),
             "no convergence: {} vs f* {}",

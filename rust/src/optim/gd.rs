@@ -95,6 +95,7 @@ impl Optimizer for CodedGd {
                 alpha,
                 responders: round.admitted.len(),
                 sim_ms: cluster.sim_ms,
+                compute_ms: round.admitted_compute_ms(),
             });
         }
         Ok(RunOutput { w, trace })
@@ -149,7 +150,7 @@ mod tests {
         let (enc, mut cluster) = setup(EncoderKind::Hadamard, 2.0, 8, 6, 5);
         let gd = CodedGd::new(GdConfig::default());
         let out = gd.run(&enc, &mut cluster, 300).unwrap();
-        let f0 = enc.raw.objective(&vec![0.0; 8]);
+        let f0 = enc.raw.objective(&[0.0; 8]);
         let f_star = enc.raw.objective(&enc.raw.exact_solution().unwrap());
         let f_end = out.trace.last_objective();
         // Theorem 1: linear convergence to a neighborhood of f*

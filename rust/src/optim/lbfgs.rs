@@ -200,6 +200,7 @@ impl Optimizer for CodedLbfgs {
                 alpha,
                 responders: round.admitted.len(),
                 sim_ms: cluster.sim_ms,
+                compute_ms: round.admitted_compute_ms(),
             });
         }
         Ok(RunOutput { w, trace })
@@ -302,7 +303,7 @@ mod tests {
         let out = lb.run(&enc, &mut cluster, 120).unwrap();
         assert!(!out.trace.diverged(), "coded L-BFGS diverged");
         let f_star = enc.raw.objective(&enc.raw.exact_solution().unwrap());
-        let f0 = enc.raw.objective(&vec![0.0; 8]);
+        let f0 = enc.raw.objective(&[0.0; 8]);
         let f_end = out.trace.best_objective();
         assert!(
             f_end - f_star < 0.1 * (f0 - f_star),

@@ -1,20 +1,25 @@
-//! Coding-oblivious batch optimizers (§3): gradient descent with constant
-//! step (Theorem 1) and limited-memory BFGS with overlap-based Hessian
-//! estimation and exact line search (Theorem 2).
+//! Coding-oblivious optimizers: the paper's batch algorithms (§3) —
+//! gradient descent with constant step (Theorem 1) and limited-memory
+//! BFGS with overlap-based Hessian estimation and exact line search
+//! (Theorem 2) — the proximal/FISTA generalization, and the stochastic
+//! extension [`CodedSgd`] (block-row mini-batch SGD, following the
+//! authors' JMLR 2018 follow-up).
 //!
-//! Both drive a [`Cluster`] through synchronous first-k rounds; neither
-//! ever sees the encoding matrix — exactly the paper's obliviousness
-//! contract. Traces record the *true* objective `f(w_t)` on the raw
-//! problem, which is what the convergence guarantees (and Figure 4) are
-//! stated in.
+//! All drive a [`Cluster`] through synchronous first-k rounds; none ever
+//! sees the encoding matrix — exactly the paper's obliviousness contract.
+//! Traces record the *true* objective `f(w_t)` on the raw problem, which
+//! is what the convergence guarantees (and Figure 4) are stated in. See
+//! DESIGN.md's "Optimizer surface" section for when to pick which.
 
 pub mod fista;
 pub mod gd;
 pub mod lbfgs;
+pub mod sgd;
 
 pub use fista::{CodedFista, FistaConfig, Prox};
 pub use gd::{CodedGd, GdConfig};
 pub use lbfgs::{CodedLbfgs, LbfgsConfig};
+pub use sgd::{CodedSgd, LrSchedule, SgdConfig};
 
 pub use crate::metrics::Trace;
 

@@ -1,0 +1,587 @@
+//! Coded stochastic gradient descent — the stochastic-methods extension
+//! of the paper's framework (Karakus et al., *Redundancy Techniques for
+//! Straggler Mitigation in Distributed Optimization and Learning*, JMLR
+//! 2018; see also Bitar et al., *Stochastic Gradient Coding*, 2019).
+//!
+//! Each round the leader samples a **block-row mini-batch plan**
+//! ([`EncodedProblem::sample_batch`]): every worker computes its gradient
+//! on a seeded circular row-block of its *encoded* shard, so sampling
+//! composes with every encoding scheme and the optimizer stays exactly as
+//! coding-oblivious as [`CodedGd`] — it never sees `S`, only the
+//! aggregated estimate. The leader's normalization
+//! ([`EncodedProblem::aggregate_grad_batch`]) extends the paper's
+//! `1/(c·η·n)` by the per-worker subsample factor, i.e. `1/(c·η·n·b)` at
+//! uniform batch fraction `b`, which keeps the estimate unbiased over the
+//! sampling RNG (pinned by a seeded property test).
+//!
+//! Surface: step-size schedules (constant, `1/t`, cosine), optional
+//! Polyak (heavy-ball) momentum, and epoch-based early termination when
+//! the *encoded* objective estimate plateaus. At `batch_frac = 1` the
+//! optimizer takes the full-gradient round path and reproduces
+//! [`CodedGd`] iterates **bit for bit** under [`ClockMode::Virtual`]
+//! (pinned by `rust/tests/sgd_equivalence.rs`).
+//!
+//! [`ClockMode::Virtual`]: crate::cluster::ClockMode::Virtual
+
+use super::gd::{CodedGd, GdConfig};
+use super::{Optimizer, RunOutput};
+use crate::cluster::Cluster;
+use crate::config::Json;
+use crate::linalg;
+use crate::metrics::{IterRecord, Trace};
+use crate::problem::EncodedProblem;
+use crate::rng::Pcg64;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::fmt;
+
+/// Step-size schedule: `α_t = α₀ · factor(t)` over 0-based round index t.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// `factor(t) = 1` — fixed step.
+    Constant,
+    /// `factor(t) = t0 / (t0 + t)` — the classic `1/t` decay (Robbins–
+    /// Monro); `t0` controls how late the decay kicks in.
+    InvT {
+        /// Decay offset `t0 > 0` (`invt:T0`; default 1).
+        t0: f64,
+    },
+    /// Cosine annealing to zero over `period` rounds:
+    /// `factor(t) = ½(1 + cos(π·min(t, period)/period))`. Set the period
+    /// to (roughly) the planned round budget; past it the factor holds
+    /// at 0.
+    Cosine {
+        /// Annealing horizon in rounds (`cosine:PERIOD`, ≥ 1).
+        period: usize,
+    },
+}
+
+impl LrSchedule {
+    /// The multiplier applied to the base step at round `t` (0-based).
+    pub fn factor(&self, t: usize) -> f64 {
+        match self {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::InvT { t0 } => t0 / (t0 + t as f64),
+            LrSchedule::Cosine { period } => {
+                let x = t.min(*period) as f64 / *period as f64;
+                0.5 * (1.0 + (std::f64::consts::PI * x).cos())
+            }
+        }
+    }
+
+    /// Parse the CLI/config grammar. This table is the single source of
+    /// truth (used by `--lr-schedule` and the JSON config surface):
+    ///
+    /// | variant | form | example |
+    /// |---------|------|---------|
+    /// | [`LrSchedule::Constant`] | `constant` (alias `const`) | `constant` |
+    /// | [`LrSchedule::InvT`] | `invt[:T0]` (alias `1/t`) | `invt:10` |
+    /// | [`LrSchedule::Cosine`] | `cosine:PERIOD` | `cosine:200` |
+    ///
+    /// Anything else — unknown names, missing/extra fields, non-numeric or
+    /// non-positive parameters — is rejected with a descriptive error.
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let head = parts[0].to_ascii_lowercase();
+        match (head.as_str(), parts.len()) {
+            ("constant", 1) | ("const", 1) => Ok(LrSchedule::Constant),
+            ("invt", 1) | ("1/t", 1) => Ok(LrSchedule::InvT { t0: 1.0 }),
+            ("invt", 2) | ("1/t", 2) => {
+                let t0: f64 = parts[1]
+                    .parse()
+                    .map_err(|e| anyhow!("lr schedule {s:?}: t0: {e}"))?;
+                ensure!(
+                    t0.is_finite() && t0 > 0.0,
+                    "lr schedule {s:?}: t0 must be positive and finite"
+                );
+                Ok(LrSchedule::InvT { t0 })
+            }
+            ("cosine", 2) => {
+                let period: usize = parts[1]
+                    .parse()
+                    .map_err(|e| anyhow!("lr schedule {s:?}: period: {e}"))?;
+                ensure!(period >= 1, "lr schedule {s:?}: period must be >= 1");
+                Ok(LrSchedule::Cosine { period })
+            }
+            ("cosine", 1) => bail!("lr schedule {s:?}: cosine needs a period (cosine:PERIOD)"),
+            _ => bail!("unknown lr schedule {s:?} (constant | invt[:T0] | cosine:PERIOD)"),
+        }
+    }
+}
+
+impl fmt::Display for LrSchedule {
+    /// Canonical form; round-trips through [`LrSchedule::parse`].
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LrSchedule::Constant => write!(f, "constant"),
+            LrSchedule::InvT { t0 } => write!(f, "invt:{t0}"),
+            LrSchedule::Cosine { period } => write!(f, "cosine:{period}"),
+        }
+    }
+}
+
+/// SGD configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SgdConfig {
+    /// Base step size α₀; `None` → the Theorem-1 rule
+    /// `2ζ/(M(1+ε))` via [`CodedGd::step_size`] (safe default that adapts
+    /// to the problem's smoothness, like the batch optimizers).
+    pub lr: Option<f64>,
+    /// Step-size schedule applied on top of α₀.
+    pub schedule: LrSchedule,
+    /// Polyak (heavy-ball) momentum μ ∈ [0, 1); 0 disables (and takes the
+    /// exact [`CodedGd`] update path).
+    pub momentum: f64,
+    /// Mini-batch fraction b ∈ (0, 1]: each worker samples
+    /// `⌈b · rows_real⌉` rows per round. 1 = full-gradient rounds
+    /// (bit-identical to [`CodedGd`]).
+    pub batch_frac: f64,
+    /// Rounds per epoch for the plateau check; 0 → `⌈1/batch_frac⌉`
+    /// (one expected pass over the data).
+    pub epoch_len: usize,
+    /// Consecutive non-improving epochs before early termination;
+    /// 0 disables early stopping.
+    pub patience: usize,
+    /// Relative improvement in the per-epoch mean *encoded* objective
+    /// below which an epoch counts as non-improving.
+    pub plateau_tol: f64,
+    /// Seed for the batch-sampling RNG stream (independent of the
+    /// cluster's delay stream).
+    pub seed: u64,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig {
+            lr: None,
+            schedule: LrSchedule::Constant,
+            momentum: 0.0,
+            batch_frac: 0.1,
+            epoch_len: 0,
+            patience: 0,
+            plateau_tol: 1e-3,
+            seed: 0,
+        }
+    }
+}
+
+impl SgdConfig {
+    /// Check every field's domain; the error names the offending field.
+    pub fn validate(&self) -> Result<()> {
+        if let Some(a) = self.lr {
+            ensure!(a.is_finite() && a > 0.0, "lr must be positive and finite, got {a}");
+        }
+        ensure!(
+            self.batch_frac > 0.0 && self.batch_frac <= 1.0,
+            "batch_frac must be in (0, 1], got {}",
+            self.batch_frac
+        );
+        ensure!(
+            (0.0..1.0).contains(&self.momentum),
+            "momentum must be in [0, 1), got {}",
+            self.momentum
+        );
+        ensure!(
+            self.plateau_tol.is_finite() && self.plateau_tol >= 0.0,
+            "plateau_tol must be nonnegative and finite, got {}",
+            self.plateau_tol
+        );
+        Ok(())
+    }
+
+    /// Serialize to the JSON config form; round-trips through
+    /// [`SgdConfig::from_json`] (seeds above 2⁵³ are not representable in
+    /// JSON numbers).
+    pub fn to_json(&self) -> String {
+        let lr = match self.lr {
+            Some(a) => format!("{a}"),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"lr\": {lr}, \"lr_schedule\": \"{}\", \"momentum\": {}, \
+             \"batch_frac\": {}, \"epoch_len\": {}, \"patience\": {}, \
+             \"plateau_tol\": {}, \"seed\": {}}}",
+            self.schedule,
+            self.momentum,
+            self.batch_frac,
+            self.epoch_len,
+            self.patience,
+            self.plateau_tol,
+            self.seed
+        )
+    }
+
+    /// Deserialize from a parsed JSON object. Missing keys keep their
+    /// defaults; present keys must have the right type, `lr_schedule`
+    /// must satisfy the [`LrSchedule::parse`] grammar, and the assembled
+    /// config must pass [`SgdConfig::validate`].
+    pub fn from_json(j: &Json) -> Result<Self> {
+        ensure!(matches!(j, Json::Obj(_)), "sgd config: expected a JSON object");
+        let mut cfg = SgdConfig::default();
+        if let Some(v) = j.get("lr") {
+            cfg.lr = match v {
+                Json::Null => None,
+                _ => Some(
+                    v.as_f64()
+                        .ok_or_else(|| anyhow!("sgd config: lr must be a number or null"))?,
+                ),
+            };
+        }
+        if let Some(v) = j.get("lr_schedule") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("sgd config: lr_schedule must be a string"))?;
+            cfg.schedule = LrSchedule::parse(s)?;
+        }
+        let num = |key: &str| -> Result<Option<f64>> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_f64()
+                    .map(Some)
+                    .ok_or_else(|| anyhow!("sgd config: {key} must be a number")),
+            }
+        };
+        let count = |key: &str| -> Result<Option<usize>> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_usize()
+                    .map(Some)
+                    .ok_or_else(|| anyhow!("sgd config: {key} must be a nonnegative integer")),
+            }
+        };
+        if let Some(x) = num("momentum")? {
+            cfg.momentum = x;
+        }
+        if let Some(x) = num("batch_frac")? {
+            cfg.batch_frac = x;
+        }
+        if let Some(x) = count("epoch_len")? {
+            cfg.epoch_len = x;
+        }
+        if let Some(x) = count("patience")? {
+            cfg.patience = x;
+        }
+        if let Some(x) = num("plateau_tol")? {
+            cfg.plateau_tol = x;
+        }
+        if let Some(x) = count("seed")? {
+            cfg.seed = x as u64;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Coding-oblivious distributed SGD over block-row mini-batches.
+pub struct CodedSgd {
+    cfg: SgdConfig,
+}
+
+impl CodedSgd {
+    /// Validate the configuration (panics with the offending field on a
+    /// domain error — same contract as the other optimizers' `new`).
+    pub fn new(cfg: SgdConfig) -> Self {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid SgdConfig: {e}");
+        }
+        CodedSgd { cfg }
+    }
+
+    /// The base step α₀ for this problem: the explicit `lr` when set,
+    /// otherwise the Theorem-1 rule via [`CodedGd::step_size`].
+    pub fn base_step(&self, prob: &EncodedProblem, k: usize) -> Result<f64> {
+        match self.cfg.lr {
+            Some(a) => Ok(a),
+            None => CodedGd::new(GdConfig { seed: self.cfg.seed, ..Default::default() })
+                .step_size(prob, k),
+        }
+    }
+
+    /// Rounds per plateau epoch: the configured length, or
+    /// `⌈1/batch_frac⌉` (one expected data pass) when unset.
+    pub fn epoch_len(&self) -> usize {
+        if self.cfg.epoch_len > 0 {
+            self.cfg.epoch_len
+        } else {
+            (1.0 / self.cfg.batch_frac).ceil().max(1.0) as usize
+        }
+    }
+}
+
+impl Optimizer for CodedSgd {
+    fn run_from(
+        &self,
+        prob: &EncodedProblem,
+        cluster: &mut Cluster,
+        iters: usize,
+        w0: Option<Vec<f64>>,
+    ) -> Result<RunOutput> {
+        let p = prob.p();
+        let mut w = w0.unwrap_or_else(|| vec![0.0; p]);
+        ensure!(w.len() == p, "w0 dimension mismatch");
+        let alpha0 = self.base_step(prob, cluster.config().wait_for)?;
+        // full-batch rounds take the exact CodedGd path (same engine call,
+        // same aggregation, no sampling RNG) — the bit-for-bit contract
+        let full_batch = self.cfg.batch_frac >= 1.0;
+        let mut rng = Pcg64::new(self.cfg.seed, 0xba7c);
+        let epoch_len = self.epoch_len();
+        let mut trace = Trace::default();
+        let mut velocity = vec![0.0; p];
+        // plateau state: best per-epoch mean of the encoded objective
+        let mut best_epoch = f64::INFINITY;
+        let mut stall = 0usize;
+        let (mut acc, mut acc_n) = (0.0f64, 0usize);
+
+        for t in 0..iters {
+            let alpha = alpha0 * self.cfg.schedule.factor(t);
+            let (g, f_est, round) = if full_batch {
+                let (responses, round) = cluster.grad_round(&w)?;
+                let (g, f_est) = prob.aggregate_grad(&w, &responses);
+                (g, f_est, round)
+            } else {
+                let plan = prob.sample_batch(self.cfg.batch_frac, &mut rng);
+                let (responses, round) = cluster.grad_batch_round(&w, &plan)?;
+                let (g, f_est) = prob.aggregate_grad_batch(&w, &responses, &plan);
+                (g, f_est, round)
+            };
+            if self.cfg.momentum == 0.0 {
+                linalg::axpy(-alpha, &g, &mut w);
+            } else {
+                for (v, gi) in velocity.iter_mut().zip(&g) {
+                    *v = self.cfg.momentum * *v + gi;
+                }
+                linalg::axpy(-alpha, &velocity, &mut w);
+            }
+            trace.push(IterRecord {
+                iter: t,
+                f_true: prob.raw.objective(&w),
+                f_est,
+                grad_norm: linalg::norm2(&g),
+                alpha,
+                responders: round.admitted.len(),
+                sim_ms: cluster.sim_ms,
+                compute_ms: round.admitted_compute_ms(),
+            });
+            if self.cfg.patience > 0 {
+                acc += f_est;
+                acc_n += 1;
+                if acc_n == epoch_len {
+                    let mean = acc / acc_n as f64;
+                    (acc, acc_n) = (0.0, 0);
+                    // the first epoch always counts as an improvement
+                    // (inf - mean > tol·inf would be false)
+                    let improved = best_epoch.is_infinite()
+                        || best_epoch - mean > self.cfg.plateau_tol * best_epoch.abs().max(1e-12);
+                    stall = if improved { 0 } else { stall + 1 };
+                    best_epoch = best_epoch.min(mean);
+                    if stall >= self.cfg.patience {
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(RunOutput { w, trace })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClockMode, ClusterConfig, DelayModel};
+    use crate::encoding::EncoderKind;
+    use crate::problem::QuadProblem;
+    use crate::runtime::NativeEngine;
+
+    fn setup(
+        kind: EncoderKind,
+        beta: f64,
+        m: usize,
+        k: usize,
+        seed: u64,
+    ) -> (EncodedProblem, Cluster) {
+        let prob = QuadProblem::synthetic_gaussian(128, 8, 0.05, 21);
+        let enc = EncodedProblem::encode(&prob, kind, beta, m, seed).unwrap();
+        let eng = Box::new(NativeEngine::new(&enc));
+        let cfg = ClusterConfig {
+            workers: m,
+            wait_for: k,
+            delay: DelayModel::Exp { mean_ms: 10.0 },
+            clock: ClockMode::Virtual,
+            ms_per_mflop: 0.5,
+            seed,
+        };
+        let cluster = Cluster::new(&enc, eng, cfg).unwrap();
+        (enc, cluster)
+    }
+
+    #[test]
+    fn schedule_factors() {
+        assert_eq!(LrSchedule::Constant.factor(123), 1.0);
+        let invt = LrSchedule::InvT { t0: 2.0 };
+        assert!((invt.factor(0) - 1.0).abs() < 1e-15);
+        assert!((invt.factor(2) - 0.5).abs() < 1e-15);
+        let cos = LrSchedule::Cosine { period: 10 };
+        assert!((cos.factor(0) - 1.0).abs() < 1e-15);
+        assert!((cos.factor(5) - 0.5).abs() < 1e-12);
+        assert!(cos.factor(10).abs() < 1e-12);
+        // past the period the factor holds at its floor
+        assert!(cos.factor(999).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedule_parse_and_display_round_trip() {
+        for s in ["constant", "invt:1", "invt:7.5", "cosine:200"] {
+            let sched = LrSchedule::parse(s).unwrap();
+            assert_eq!(LrSchedule::parse(&sched.to_string()).unwrap(), sched);
+        }
+        assert_eq!(LrSchedule::parse("const").unwrap(), LrSchedule::Constant);
+        assert_eq!(LrSchedule::parse("1/t").unwrap(), LrSchedule::InvT { t0: 1.0 });
+        assert_eq!(LrSchedule::parse("invt").unwrap(), LrSchedule::InvT { t0: 1.0 });
+    }
+
+    #[test]
+    fn schedule_rejects_malformed() {
+        for bad in [
+            "", "cosine", "cosine:0", "cosine:abc", "cosine:1:2", "invt:0", "invt:-2",
+            "invt:nan_", "warp:3", "constant:5",
+        ] {
+            assert!(LrSchedule::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn config_json_round_trip() {
+        let cfg = SgdConfig {
+            lr: Some(0.03),
+            schedule: LrSchedule::Cosine { period: 150 },
+            momentum: 0.9,
+            batch_frac: 0.25,
+            epoch_len: 12,
+            patience: 3,
+            plateau_tol: 1e-4,
+            seed: 42,
+        };
+        let back = SgdConfig::from_json(&Json::parse(&cfg.to_json()).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        // lr = None round-trips through JSON null
+        let cfg2 = SgdConfig { lr: None, ..cfg };
+        let back2 = SgdConfig::from_json(&Json::parse(&cfg2.to_json()).unwrap()).unwrap();
+        assert_eq!(back2, cfg2);
+    }
+
+    #[test]
+    fn config_json_rejects_malformed() {
+        for bad in [
+            "{\"lr_schedule\": \"warp:3\"}",
+            "{\"lr_schedule\": \"cosine\"}",
+            "{\"lr_schedule\": 5}",
+            "{\"lr\": \"fast\"}",
+            "{\"batch_frac\": 0}",
+            "{\"batch_frac\": 1.5}",
+            "{\"momentum\": 1.0}",
+            "{\"epoch_len\": -1}",
+            "[1, 2]",
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(SgdConfig::from_json(&j).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn full_batch_constant_lr_matches_coded_gd_bitwise() {
+        let (enc, mut cl_sgd) = setup(EncoderKind::Hadamard, 2.0, 8, 6, 5);
+        let (_, mut cl_gd) = setup(EncoderKind::Hadamard, 2.0, 8, 6, 5);
+        let alpha = 0.017;
+        let sgd = CodedSgd::new(SgdConfig {
+            lr: Some(alpha),
+            batch_frac: 1.0,
+            ..Default::default()
+        });
+        let gd = CodedGd::new(GdConfig { alpha_override: Some(alpha), ..Default::default() });
+        let out_s = sgd.run(&enc, &mut cl_sgd, 30).unwrap();
+        let out_g = gd.run(&enc, &mut cl_gd, 30).unwrap();
+        assert_eq!(out_s.w.len(), out_g.w.len());
+        for (a, b) in out_s.w.iter().zip(&out_g.w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (ra, rb) in out_s.trace.records.iter().zip(&out_g.trace.records) {
+            assert_eq!(ra.f_true.to_bits(), rb.f_true.to_bits());
+            assert_eq!(ra.sim_ms.to_bits(), rb.sim_ms.to_bits());
+            assert_eq!(ra.responders, rb.responders);
+        }
+    }
+
+    #[test]
+    fn minibatch_sgd_decreases_objective() {
+        let (enc, mut cluster) = setup(EncoderKind::Hadamard, 2.0, 8, 8, 3);
+        let sgd = CodedSgd::new(SgdConfig { batch_frac: 0.5, ..Default::default() });
+        let out = sgd.run(&enc, &mut cluster, 200).unwrap();
+        let f0 = enc.raw.objective(&[0.0; 8]);
+        let f_star = enc.raw.objective(&enc.raw.exact_solution().unwrap());
+        let f_end = out.trace.best_objective();
+        assert!(!out.trace.diverged());
+        assert!(
+            f_end - f_star < 0.3 * (f0 - f_star),
+            "SGD made no progress: end {f_end}, f0 {f0}, f* {f_star}"
+        );
+    }
+
+    #[test]
+    fn momentum_and_decay_run_stable() {
+        let (enc, mut cluster) = setup(EncoderKind::Hadamard, 2.0, 8, 6, 7);
+        let sgd = CodedSgd::new(SgdConfig {
+            batch_frac: 0.25,
+            momentum: 0.8,
+            schedule: LrSchedule::InvT { t0: 20.0 },
+            ..Default::default()
+        });
+        let out = sgd.run(&enc, &mut cluster, 150).unwrap();
+        assert_eq!(out.trace.len(), 150);
+        assert!(!out.trace.diverged());
+        // the schedule actually decays the recorded step
+        let first = out.trace.records.first().unwrap().alpha;
+        let last = out.trace.records.last().unwrap().alpha;
+        assert!(last < first * 0.5, "alpha did not decay: {first} -> {last}");
+    }
+
+    #[test]
+    fn plateau_termination_stops_early() {
+        let (enc, mut cluster) = setup(EncoderKind::Hadamard, 2.0, 8, 8, 9);
+        // an absurd improvement requirement: every epoch counts as a
+        // plateau, so the run stops after patience * epoch_len rounds
+        let sgd = CodedSgd::new(SgdConfig {
+            batch_frac: 0.5,
+            epoch_len: 4,
+            patience: 2,
+            plateau_tol: 10.0,
+            ..Default::default()
+        });
+        let out = sgd.run(&enc, &mut cluster, 500).unwrap();
+        // epoch 1 is the free improvement; epochs 2 and 3 stall
+        assert_eq!(out.trace.len(), 12, "expected (1 + patience(2)) * epoch_len(4) rounds");
+    }
+
+    #[test]
+    fn trace_records_compute_ms() {
+        let (enc, mut cluster) = setup(EncoderKind::Gaussian, 2.0, 8, 4, 11);
+        let sgd = CodedSgd::new(SgdConfig { batch_frac: 0.5, ..Default::default() });
+        let out = sgd.run(&enc, &mut cluster, 10).unwrap();
+        for r in &out.trace.records {
+            assert!(r.compute_ms > 0.0 && r.compute_ms.is_finite());
+            assert_eq!(r.responders, 4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "batch_frac")]
+    fn rejects_bad_batch_frac() {
+        CodedSgd::new(SgdConfig { batch_frac: 0.0, ..Default::default() });
+    }
+
+    #[test]
+    #[should_panic(expected = "momentum")]
+    fn rejects_bad_momentum() {
+        CodedSgd::new(SgdConfig { momentum: 1.0, ..Default::default() });
+    }
+}

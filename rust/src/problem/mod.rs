@@ -154,6 +154,42 @@ pub fn pad_bucket(rows: usize) -> usize {
     rows.next_power_of_two().max(8)
 }
 
+/// One round's mini-batch plan: which rows of each worker's shard that
+/// worker computes its gradient on (the stochastic-coded-optimization
+/// subsystem's sampling unit).
+///
+/// Sampling is **coding-oblivious**: the plan is pure row indices into the
+/// already-encoded shards, so it composes with every encoding scheme —
+/// workers never see `S`, and the leader's normalization
+/// ([`EncodedProblem::aggregate_grad_batch`]) is the only place the
+/// subsample size enters.
+///
+/// Each worker's block is a *circular* contiguous row-block of its
+/// `rows_real` real rows (padding rows are never sampled): a uniformly
+/// random start offset plus a fixed length, wrapping around the shard end.
+/// Circularity is what makes every row's inclusion probability exactly
+/// `b_i / rows_real` — the property the unbiasedness guarantee (and its
+/// property test) rests on. A wrapped block is represented as two
+/// half-open `(lo, hi)` segments.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// Per-worker row segments (1 segment, or 2 when the circular block
+    /// wraps), half-open `(lo, hi)` ranges into the shard's real rows.
+    pub segments: Vec<Vec<(usize, usize)>>,
+}
+
+impl BatchPlan {
+    /// Worker count the plan covers.
+    pub fn workers(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Sampled row count `b_i` for one worker.
+    pub fn rows(&self, worker: usize) -> usize {
+        self.segments[worker].iter().map(|&(lo, hi)| hi - lo).sum()
+    }
+}
+
 impl EncodedProblem {
     /// Encode `prob` with the given family and distribute over `m` workers.
     ///
@@ -373,6 +409,89 @@ impl EncodedProblem {
             if used.contains(wid) {
                 linalg::axpy(scale, gi, &mut g);
                 f += scale * fi;
+            }
+        }
+        let lambda = self.raw.lambda;
+        for (gi, wi) in g.iter_mut().zip(w) {
+            *gi += lambda * wi;
+        }
+        let f_est = 0.5 * f + 0.5 * lambda * linalg::dot(w, w);
+        (g, f_est)
+    }
+
+    /// Sample one round's block-row mini-batch plan: every worker gets a
+    /// circular contiguous block of `⌈batch_frac · rows_real⌉` of its real
+    /// rows at a uniformly random offset (so each row's inclusion
+    /// probability is exactly `b_i / rows_real`). `batch_frac = 1`
+    /// deterministically yields the full shard `(0, rows_real)` without
+    /// consuming randomness — the full-batch plan is the full gradient
+    /// round, bit for bit.
+    ///
+    /// The RNG is the caller's (normally [`CodedSgd`]'s seeded batch
+    /// stream); draws are consumed in worker-index order, which is part of
+    /// the reproducibility contract.
+    ///
+    /// [`CodedSgd`]: crate::optim::CodedSgd
+    pub fn sample_batch(&self, batch_frac: f64, rng: &mut Pcg64) -> BatchPlan {
+        assert!(
+            batch_frac > 0.0 && batch_frac <= 1.0,
+            "batch_frac must be in (0, 1], got {batch_frac}"
+        );
+        let segments = self
+            .shards
+            .iter()
+            .map(|s| {
+                let rows = s.rows_real;
+                debug_assert!(rows >= 1, "shard with no real rows");
+                let b = ((batch_frac * rows as f64).ceil() as usize).clamp(1, rows);
+                if b == rows {
+                    vec![(0, rows)]
+                } else {
+                    let start = rng.next_below(rows as u64) as usize;
+                    if start + b <= rows {
+                        vec![(start, start + b)]
+                    } else {
+                        vec![(start, rows), (0, start + b - rows)]
+                    }
+                }
+            })
+            .collect();
+        BatchPlan { segments }
+    }
+
+    /// Leader-side aggregation of mini-batch gradient responses — the
+    /// batch counterpart of [`EncodedProblem::aggregate_grad`], with the
+    /// scheme-aware normalization extended by the per-worker subsample
+    /// factor: each worker's term is scaled by `rows_real_i / b_i` before
+    /// the usual scheme scale, i.e. `1/(c·η·n·b)` overall for the
+    /// coded/uncoded schemes at uniform batch fraction `b`.
+    ///
+    /// With [`BatchPlan`]'s circular blocks this makes the estimate
+    /// **unbiased** over the sampling RNG, conditional on the responder
+    /// set: `E[ĝ_batch | A] = ĝ_full(A)` (pinned by a seeded property
+    /// test). At `batch_frac = 1` every factor is 1 and this reduces to
+    /// `aggregate_grad` exactly.
+    pub fn aggregate_grad_batch(
+        &self,
+        w: &[f64],
+        responses: &[(usize, Vec<f64>, f64)],
+        plan: &BatchPlan,
+    ) -> (Vec<f64>, f64) {
+        let p = self.p();
+        let mut g = vec![0.0; p];
+        let mut f = 0.0;
+        let responders: Vec<usize> = responses.iter().map(|r| r.0).collect();
+        let used = self.effective_responders(&responders);
+        let scale = self.gradient_scale(&used);
+        for (wid, gi, fi) in responses {
+            if used.contains(wid) {
+                let b = plan.rows(*wid);
+                // hard assert: a hand-built empty plan would otherwise
+                // divide by zero and silently poison the gradient with NaN
+                assert!(b >= 1, "aggregate_grad_batch: empty batch for worker {wid}");
+                let unbias = self.shards[*wid].rows_real as f64 / b as f64;
+                linalg::axpy(scale * unbias, gi, &mut g);
+                f += scale * unbias * fi;
             }
         }
         let lambda = self.raw.lambda;
@@ -711,6 +830,110 @@ mod tests {
     fn replication_requires_divisibility() {
         let prob = small_problem();
         assert!(EncodedProblem::encode(&prob, EncoderKind::Replication, 3.0, 8, 0).is_err());
+    }
+
+    #[test]
+    fn batch_plan_blocks_are_circular_and_sized() {
+        let prob = small_problem();
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 3).unwrap();
+        let mut rng = Pcg64::seeded(9);
+        for _ in 0..50 {
+            let plan = enc.sample_batch(0.3, &mut rng);
+            assert_eq!(plan.workers(), 8);
+            for (i, segs) in plan.segments.iter().enumerate() {
+                let rows = enc.shards[i].rows_real;
+                let want = ((0.3 * rows as f64).ceil() as usize).clamp(1, rows);
+                assert_eq!(plan.rows(i), want, "worker {i}");
+                assert!(segs.len() <= 2, "worker {i}: {} segments", segs.len());
+                for &(lo, hi) in segs {
+                    assert!(lo < hi && hi <= rows, "worker {i}: bad segment {lo}..{hi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_plan_full_fraction_is_deterministic_full_shard() {
+        let prob = small_problem();
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 3).unwrap();
+        let mut rng = Pcg64::seeded(1);
+        let before = rng.clone().next_u64();
+        let plan = enc.sample_batch(1.0, &mut rng);
+        // no randomness consumed at batch_frac = 1
+        assert_eq!(rng.next_u64(), before);
+        for (i, segs) in plan.segments.iter().enumerate() {
+            assert_eq!(segs, &[(0, enc.shards[i].rows_real)]);
+        }
+    }
+
+    #[test]
+    fn batch_aggregation_at_full_fraction_matches_aggregate_grad() {
+        let prob = small_problem();
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 7).unwrap();
+        let w = vec![0.3; 8];
+        let responses: Vec<(usize, Vec<f64>, f64)> = enc
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let mut g = vec![0.0; 8];
+                let mut buf = vec![0.0; s.x.rows()];
+                let f = s.x.fused_grad(&w, &s.y, &mut g, &mut buf);
+                (i, g, f)
+            })
+            .collect();
+        let mut rng = Pcg64::seeded(0);
+        let plan = enc.sample_batch(1.0, &mut rng);
+        let (g_full, f_full) = enc.aggregate_grad(&w, &responses);
+        let (g_batch, f_batch) = enc.aggregate_grad_batch(&w, &responses, &plan);
+        assert_eq!(f_full.to_bits(), f_batch.to_bits());
+        for (a, b) in g_full.iter().zip(&g_batch) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn batch_gradient_is_unbiased_in_expectation() {
+        // coded scheme, full participation: the full aggregate equals the
+        // true gradient exactly, so the mean over sampled plans must
+        // approach it (the integration suite runs the larger version).
+        let prob = small_problem();
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 5).unwrap();
+        let w = vec![0.2; 8];
+        let mut rng = Pcg64::seeded(77);
+        let trials = 2000;
+        let mut mean = vec![0.0; 8];
+        for _ in 0..trials {
+            let plan = enc.sample_batch(0.5, &mut rng);
+            let responses: Vec<(usize, Vec<f64>, f64)> = enc
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let mut g = vec![0.0; 8];
+                    let mut buf = vec![0.0; s.x.rows()];
+                    let mut f = 0.0;
+                    for &(lo, hi) in &plan.segments[i] {
+                        f += s.x.fused_grad_range(&w, &s.y, &mut g, &mut buf, lo, hi);
+                    }
+                    (i, g, f)
+                })
+                .collect();
+            let (g, _) = enc.aggregate_grad_batch(&w, &responses, &plan);
+            linalg::axpy(1.0 / trials as f64, &g, &mut mean);
+        }
+        let g_true = prob.grad(&w);
+        let rel = linalg::norm2(&linalg::sub(&mean, &g_true)) / linalg::norm2(&g_true);
+        assert!(rel < 0.05, "batch gradient biased: rel err {rel}");
+    }
+
+    #[test]
+    #[should_panic(expected = "batch_frac")]
+    fn sample_batch_rejects_bad_fraction() {
+        let prob = small_problem();
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Identity, 1.0, 4, 0).unwrap();
+        let mut rng = Pcg64::seeded(0);
+        enc.sample_batch(0.0, &mut rng);
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub use native::NativeEngine;
 pub use stream::{Collected, Collector, CurvCollector, GradCollector};
 pub use xla_engine::XlaEngine;
 
-use crate::problem::EncodedProblem;
+use crate::problem::{BatchPlan, EncodedProblem};
 use anyhow::Result;
 
 /// Engine selector for CLI/config surfaces.
@@ -104,6 +104,56 @@ pub trait ComputeEngine: Send {
             }
             let t0 = std::time::Instant::now();
             let (g, f) = self.worker_grad(i, w)?;
+            sink.deliver(i, (g, f), t0.elapsed().as_secs_f64() * 1e3);
+        }
+        Ok(())
+    }
+
+    /// Mini-batch gradient + local objective for one worker, restricted to
+    /// the row segments `segs` of that worker's shard (one round's slice of
+    /// a [`BatchPlan`]): `(g_i, f_i)` over rows `∪ segs` only.
+    ///
+    /// Engines whose staged compute is full-shard-shaped only (the XLA
+    /// engine's AOT artifacts are fixed-shape) may not support this; the
+    /// default implementation errors, and the stochastic optimizers
+    /// surface that error at the first batch round. [`NativeEngine`]
+    /// overrides it with the range-restricted fused kernel.
+    fn worker_grad_batch(
+        &mut self,
+        worker: usize,
+        w: &[f64],
+        segs: &[(usize, usize)],
+    ) -> Result<(Vec<f64>, f64)> {
+        let _ = (worker, w, segs);
+        anyhow::bail!(
+            "engine {:?} does not support mini-batch gradient rounds \
+             (use --engine native for --optimizer sgd with batch-frac < 1)",
+            self.name()
+        )
+    }
+
+    /// Stream one mini-batch gradient round into `sink`: the batch
+    /// counterpart of [`ComputeEngine::worker_grad_streamed`], delivering
+    /// each worker's [`ComputeEngine::worker_grad_batch`] result with its
+    /// measured compute time and honoring the collector's cancellation
+    /// flag. `plan` must cover exactly [`ComputeEngine::workers`] workers.
+    ///
+    /// Default: serial loop (correct for any engine that implements
+    /// `worker_grad_batch`); [`NativeEngine`] overrides this with one
+    /// scoped thread per worker shard, mirroring its full-gradient
+    /// streaming fan-out.
+    fn worker_grad_batch_streamed(
+        &mut self,
+        w: &[f64],
+        plan: &BatchPlan,
+        sink: &GradCollector,
+    ) -> Result<()> {
+        for i in 0..self.workers() {
+            if sink.is_cancelled() {
+                break;
+            }
+            let t0 = std::time::Instant::now();
+            let (g, f) = self.worker_grad_batch(i, w, &plan.segments[i])?;
             sink.deliver(i, (g, f), t0.elapsed().as_secs_f64() * 1e3);
         }
         Ok(())

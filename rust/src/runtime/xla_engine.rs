@@ -13,6 +13,13 @@
 //! the smallest manifest bucket for its `p`; zero-row padding is exact for
 //! both outputs. Missing shapes are a hard startup error (fail fast, not
 //! mid-run).
+//!
+//! **Mini-batch rounds:** the AOT artifacts are fixed full-shard shapes,
+//! so the engine inherits the trait's failing default for
+//! `worker_grad_batch`/`worker_grad_batch_streamed` — `CodedSgd` with
+//! `batch_frac < 1` needs `--engine native` (or batch-shaped artifacts, a
+//! listed follow-up). `batch_frac = 1` takes the full-gradient round path
+//! and runs on either engine.
 
 //!
 //! **Feature gating:** the PJRT bindings (the `xla` crate) are not

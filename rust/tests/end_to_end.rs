@@ -9,6 +9,7 @@ use codedopt::optim::{CodedGd, CodedLbfgs, GdConfig, LbfgsConfig, Optimizer, Run
 use codedopt::problem::{EncodedProblem, QuadProblem};
 use codedopt::runtime::NativeEngine;
 
+#[allow(clippy::too_many_arguments)]
 fn run(
     prob: &QuadProblem,
     kind: EncoderKind,
@@ -49,7 +50,7 @@ fn run(
 fn all_coded_families_converge_with_stragglers() {
     let (prob, _) = QuadProblem::planted(256, 24, 0.0, 0.01, 11);
     let f_star = prob.objective(&prob.exact_solution().unwrap());
-    let f0 = prob.objective(&vec![0.0; 24]);
+    let f0 = prob.objective(&[0.0; 24]);
     for kind in [
         EncoderKind::Gaussian,
         EncoderKind::Hadamard,
@@ -168,7 +169,7 @@ fn coded_survives_failstop_workers() {
         .unwrap();
     assert!(!out.trace.diverged(), "diverged under fail-stop");
     let f_star = prob.objective(&prob.exact_solution().unwrap());
-    let f0 = prob.objective(&vec![0.0; 16]);
+    let f0 = prob.objective(&[0.0; 16]);
     assert!(
         out.trace.best_objective() - f_star < 0.1 * (f0 - f_star),
         "no convergence under failures"

@@ -1,0 +1,154 @@
+//! Stochastic-subsystem contracts, end to end:
+//!
+//! 1. `CodedSgd` at `batch_frac = 1.0` with a constant step reproduces
+//!    `CodedGd` iterates **bit for bit** under `ClockMode::Virtual`, for
+//!    every scheme and every k (the full-batch path *is* the full
+//!    gradient round).
+//! 2. The sampled encoded mini-batch gradient is **unbiased** in
+//!    expectation over the sampling RNG stream: averaged over many
+//!    `BatchPlan`s, the leader's `aggregate_grad_batch` estimate
+//!    converges to the full-round estimate (which at k = m, coded, is the
+//!    true gradient).
+//! 3. The `SgdConfig` JSON surface round-trips and rejects malformed
+//!    `lr-schedule` strings.
+
+use codedopt::prelude::*;
+use codedopt::rng::Pcg64;
+use codedopt::testutil::{gen_range, property};
+
+fn build_cluster(
+    kind: EncoderKind,
+    beta: f64,
+    m: usize,
+    k: usize,
+    seed: u64,
+) -> (EncodedProblem, Cluster) {
+    let prob = QuadProblem::synthetic_gaussian(128, 8, 0.05, 77);
+    let enc = EncodedProblem::encode(&prob, kind, beta, m, seed).unwrap();
+    let eng = Box::new(NativeEngine::new(&enc));
+    let cfg = ClusterConfig {
+        workers: m,
+        wait_for: k,
+        delay: DelayModel::Exp { mean_ms: 10.0 },
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed,
+    };
+    let cluster = Cluster::new(&enc, eng, cfg).unwrap();
+    (enc, cluster)
+}
+
+/// Acceptance contract (a): full-batch SGD ≡ GD, bit for bit, across
+/// random schemes, k, and seeds.
+#[test]
+fn sgd_full_batch_reproduces_gd_iterates_bitwise() {
+    property("sgd(batch=1) == gd bitwise", 8, |rng| {
+        let kinds = [EncoderKind::Hadamard, EncoderKind::Gaussian, EncoderKind::Identity];
+        let kind = kinds[gen_range(rng, 0, kinds.len() - 1)];
+        let beta = if kind == EncoderKind::Identity { 1.0 } else { 2.0 };
+        let m = 8;
+        let k = gen_range(rng, 2, m);
+        let seed = rng.next_u64() % 1000;
+        let alpha = 0.001 + 0.02 * rng.next_f64();
+
+        let (enc, mut cl_sgd) = build_cluster(kind, beta, m, k, seed);
+        let (_, mut cl_gd) = build_cluster(kind, beta, m, k, seed);
+        let sgd = CodedSgd::new(SgdConfig {
+            lr: Some(alpha),
+            batch_frac: 1.0,
+            schedule: LrSchedule::Constant,
+            ..Default::default()
+        });
+        let gd = CodedGd::new(GdConfig { alpha_override: Some(alpha), ..Default::default() });
+        let out_s = sgd.run(&enc, &mut cl_sgd, 25).unwrap();
+        let out_g = gd.run(&enc, &mut cl_gd, 25).unwrap();
+
+        for (a, b) in out_s.w.iter().zip(&out_g.w) {
+            assert_eq!(a.to_bits(), b.to_bits(), "iterate mismatch ({kind:?}, k={k})");
+        }
+        assert_eq!(out_s.trace.len(), out_g.trace.len());
+        for (ra, rb) in out_s.trace.records.iter().zip(&out_g.trace.records) {
+            assert_eq!(ra.f_true.to_bits(), rb.f_true.to_bits());
+            assert_eq!(ra.f_est.to_bits(), rb.f_est.to_bits());
+            assert_eq!(ra.grad_norm.to_bits(), rb.grad_norm.to_bits());
+            assert_eq!(ra.sim_ms.to_bits(), rb.sim_ms.to_bits());
+            assert_eq!(ra.compute_ms.to_bits(), rb.compute_ms.to_bits());
+            assert_eq!(ra.responders, rb.responders);
+        }
+    });
+}
+
+/// Acceptance contract (b): unbiasedness of the sampled encoded gradient
+/// over the RNG stream, through the full cluster path (engine → streaming
+/// collector → leader aggregation).
+#[test]
+fn sampled_encoded_gradient_is_unbiased_over_rng_stream() {
+    let m = 8;
+    let (enc, mut cluster) = build_cluster(EncoderKind::Hadamard, 2.0, m, m, 3);
+    let mut wrng = Pcg64::seeded(41);
+    let w: Vec<f64> = (0..8).map(|_| wrng.next_gaussian()).collect();
+    let g_true = enc.raw.grad(&w);
+
+    let mut rng = Pcg64::new(9, 0xba7c);
+    let trials = 2500;
+    let mut mean = vec![0.0; 8];
+    let mut max_single_dev: f64 = 0.0;
+    for _ in 0..trials {
+        let plan = enc.sample_batch(0.5, &mut rng);
+        let (responses, _) = cluster.grad_batch_round(&w, &plan).unwrap();
+        let (g, _) = enc.aggregate_grad_batch(&w, &responses, &plan);
+        let dev: f64 = g.iter().zip(&g_true).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        max_single_dev = max_single_dev.max(dev);
+        for (mi, gi) in mean.iter_mut().zip(&g) {
+            *mi += gi / trials as f64;
+        }
+    }
+    let num: f64 = mean.iter().zip(&g_true).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+    let den: f64 = g_true.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let rel = num / den;
+    assert!(rel < 0.05, "mean of sampled gradients biased: rel err {rel}");
+    // sanity: the estimator is actually stochastic, not secretly full-batch
+    assert!(max_single_dev > 1e-8, "single-round estimates never deviated");
+}
+
+/// Satellite: the SGD config JSON surface round-trips and malformed
+/// lr-schedule strings are rejected at every entry point.
+#[test]
+fn sgd_config_json_round_trip_and_rejection() {
+    let cfg = SgdConfig {
+        lr: Some(0.07),
+        schedule: LrSchedule::InvT { t0: 25.0 },
+        momentum: 0.5,
+        batch_frac: 0.2,
+        epoch_len: 5,
+        patience: 4,
+        plateau_tol: 0.01,
+        seed: 123,
+    };
+    let text = cfg.to_json();
+    let back = SgdConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, cfg);
+
+    for bad in ["warp", "cosine", "cosine:0", "invt:-1", "constant:7"] {
+        assert!(LrSchedule::parse(bad).is_err(), "parse should reject {bad:?}");
+        let doc = format!("{{\"lr_schedule\": \"{bad}\"}}");
+        let j = Json::parse(&doc).unwrap();
+        assert!(SgdConfig::from_json(&j).is_err(), "from_json should reject {bad:?}");
+    }
+}
+
+/// The per-iteration trace CSV carries the per-round compute-time column
+/// the `fig_sgd` bench relies on (`Round.compute_ms`, admitted-mean).
+#[test]
+fn sgd_trace_csv_has_populated_compute_ms_column() {
+    let (enc, mut cluster) = build_cluster(EncoderKind::Hadamard, 2.0, 8, 4, 5);
+    let sgd = CodedSgd::new(SgdConfig { batch_frac: 0.25, ..Default::default() });
+    let out = sgd.run(&enc, &mut cluster, 12).unwrap();
+    let csv = out.trace.to_csv();
+    let header = csv.lines().next().unwrap();
+    assert!(header.ends_with("sim_ms,compute_ms"), "header: {header}");
+    assert_eq!(csv.lines().count(), 13);
+    for r in &out.trace.records {
+        assert!(r.compute_ms > 0.0 && r.compute_ms.is_finite());
+    }
+}

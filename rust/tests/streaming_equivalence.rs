@@ -49,6 +49,7 @@ impl LegacyGather {
     }
 
     /// One round's (admitted, arrivals, elapsed_ms, failed).
+    #[allow(clippy::type_complexity)]
     fn round(&mut self) -> (Vec<usize>, Vec<(usize, f64)>, f64, Vec<usize>) {
         let m = self.compute_ms.len();
         let mut arrivals: Vec<(usize, f64)> = Vec::with_capacity(m);
@@ -189,7 +190,7 @@ fn measured_clock_full_run_converges() {
         .unwrap();
     assert!(!out.trace.diverged(), "measured-clock L-BFGS diverged");
     let f_star = prob.objective(&prob.exact_solution().unwrap());
-    let f0 = prob.objective(&vec![0.0; 16]);
+    let f0 = prob.objective(&[0.0; 16]);
     assert!(
         out.trace.best_objective() - f_star < 0.15 * (f0 - f_star),
         "no convergence on the measured-clock streaming path"

@@ -89,7 +89,7 @@ fn full_lbfgs_run_on_xla_engine_converges() {
     let out = lbfgs.run(&enc, &mut cluster, 30).unwrap();
     assert!(!out.trace.diverged(), "XLA-engine L-BFGS diverged");
     let f_star = prob.objective(&prob.exact_solution().unwrap());
-    let f0 = prob.objective(&vec![0.0; 64]);
+    let f0 = prob.objective(&[0.0; 64]);
     let f_end = out.trace.best_objective();
     assert!(
         f_end - f_star < 0.15 * (f0 - f_star),

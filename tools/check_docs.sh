@@ -1,0 +1,58 @@
+#!/usr/bin/env bash
+# Docs consistency gate (run by CI):
+#   1. every intra-repo markdown link in README/DESIGN/EXPERIMENTS/ROADMAP
+#      must point at a file or directory that exists;
+#   2. every `--flag` those docs mention must still exist somewhere in the
+#      Rust CLI/bench surface (rust/src, rust/benches, examples) — so the
+#      CLI reference cannot silently rot when a flag is renamed.
+#
+# Flags that belong to cargo/rustup/python tooling rather than codedopt are
+# allowlisted below.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+DOCS=(README.md DESIGN.md EXPERIMENTS.md ROADMAP.md)
+ALLOWLIST=(
+  # cargo / rustc / rustup
+  --release --bench --features --no-deps --open --check --example --profile
+  --component --all-targets --workspace
+  # python-side tooling (L2/L1 AOT emitter, pytest)
+  --outdir
+)
+
+fail=0
+
+for doc in "${DOCS[@]}"; do
+  [ -f "$doc" ] || continue
+
+  # 1. intra-repo links: [text](target), skipping http(s)/mailto/#anchors
+  while IFS= read -r target; do
+    [ -z "$target" ] && continue
+    target="${target%%#*}"
+    [ -z "$target" ] && continue
+    if [ ! -e "$target" ]; then
+      echo "BROKEN LINK in $doc: $target"
+      fail=1
+    fi
+  done < <(grep -oE '\]\([^)]+\)' "$doc" | sed -E 's/^\]\(//; s/\)$//' \
+           | grep -vE '^(https?:|mailto:|#)' || true)
+
+  # 2. referenced CLI flags must exist in the Rust surface
+  while IFS= read -r flag; do
+    skip=0
+    for allowed in "${ALLOWLIST[@]}"; do
+      [ "$flag" = "$allowed" ] && skip=1 && break
+    done
+    [ "$skip" = 1 ] && continue
+    if ! grep -rqF -- "$flag" rust/src rust/benches examples; then
+      echo "STALE FLAG in $doc: $flag (not found in rust/src, rust/benches, examples)"
+      fail=1
+    fi
+  done < <(grep -oE '(^|[^-[:alnum:]])--[a-z][a-z0-9-]*' "$doc" \
+           | grep -oE -- '--[a-z][a-z0-9-]*' | sort -u || true)
+done
+
+if [ "$fail" = 0 ]; then
+  echo "docs check OK: links resolve, referenced CLI flags exist"
+fi
+exit "$fail"
