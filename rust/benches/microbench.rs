@@ -2,6 +2,9 @@
 //!
 //! Measures the system's hot paths in isolation:
 //!  * fused worker gradient (one-pass) vs naive two-pass gemv/gemv_t
+//!  * blocked (row-paired, unrolled) gemv vs the naive scalar loop
+//!  * sparse (CSR) vs dense fused gradient on MovieLens-shaped shards,
+//!    with resident bytes per shard
 //!  * FWHT O(N log N) encode vs dense O(N²) encode
 //!  * blocked+threaded GEMM throughput
 //!  * full cluster gradient round (native engine) — leader overhead
@@ -11,7 +14,8 @@
 
 use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
 use codedopt::encoding::EncoderKind;
-use codedopt::linalg::{self, Mat};
+use codedopt::linalg::{self, DataMat, Mat};
+use codedopt::mf::{synthetic_movielens, SyntheticConfig};
 use codedopt::problem::{EncodedProblem, QuadProblem};
 use codedopt::rng::Pcg64;
 use codedopt::runtime::{ComputeEngine, Manifest, NativeEngine, XlaEngine};
@@ -50,6 +54,96 @@ fn bench_fused_grad() {
         "fused: {fused:.3} ms ({:.2} GFLOP/s)   two-pass: {two_pass:.3} ms   speedup {:.2}x",
         flops / fused / 1e6,
         two_pass / fused
+    );
+}
+
+fn bench_gemv_blocked_vs_naive() {
+    println!("\n--- gemv: blocked row-paired kernel vs naive scalar loop (r=2048, p=512) ---");
+    let (r, p) = (2048usize, 512usize);
+    let mut rng = Pcg64::seeded(7);
+    let x = Mat::from_fn(r, p, |_, _| rng.next_gaussian());
+    let v: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+    let naive_gemv = |m: &Mat, v: &[f64]| -> Vec<f64> {
+        let mut y = vec![0.0; m.rows()];
+        for i in 0..m.rows() {
+            let row = m.row(i);
+            let mut s = 0.0;
+            for (a, b) in row.iter().zip(v) {
+                s += a * b;
+            }
+            y[i] = s;
+        }
+        y
+    };
+    let blocked = time_ms(50, || {
+        std::hint::black_box(x.gemv(&v));
+    });
+    let naive = time_ms(50, || {
+        std::hint::black_box(naive_gemv(&x, &v));
+    });
+    let flops = 2.0 * r as f64 * p as f64;
+    println!(
+        "blocked: {blocked:.3} ms ({:.2} GFLOP/s)   naive: {naive:.3} ms   speedup {:.2}x",
+        flops / blocked / 1e6,
+        naive / blocked
+    );
+}
+
+fn bench_sparse_vs_dense_fused_grad() {
+    println!("\n--- fused_grad: CSR vs dense storage, MovieLens-shaped shard (one-hot design) ---");
+    let data = synthetic_movielens(&SyntheticConfig::small(7));
+    let (design, y) = data.to_design();
+    let rows = design.rows().min(4096);
+    let csr = design.row_band(0, rows);
+    let nnz = csr.nnz();
+    let sparse = DataMat::Csr(csr);
+    let dense = DataMat::Dense(sparse.to_dense());
+    let p = sparse.cols();
+    let mut rng = Pcg64::seeded(8);
+    let w: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+    let yb = &y[..rows];
+    let mut g = vec![0.0; p];
+    let mut buf = vec![0.0; rows];
+    let sparse_ms = time_ms(50, || {
+        let f = sparse.fused_grad(&w, yb, &mut g, &mut buf);
+        std::hint::black_box(f);
+    });
+    let dense_ms = time_ms(10, || {
+        let f = dense.fused_grad(&w, yb, &mut g, &mut buf);
+        std::hint::black_box(f);
+    });
+    println!(
+        "shard {rows}x{p} (nnz={nnz}): dense {dense_ms:.3} ms / {} bytes   \
+         csr {sparse_ms:.3} ms / {} bytes   speedup {:.1}x, memory {:.1}x smaller",
+        dense.mem_bytes(),
+        sparse.mem_bytes(),
+        dense_ms / sparse_ms,
+        dense.mem_bytes() as f64 / sparse.mem_bytes() as f64
+    );
+    // encoded-problem view: replication shards, both storages
+    let prob = QuadProblem::new(sparse.to_csr(), yb.to_vec(), 0.05);
+    let enc_sparse = EncodedProblem::encode_stored(
+        &prob,
+        EncoderKind::Replication,
+        2.0,
+        8,
+        7,
+        codedopt::linalg::StorageKind::Sparse,
+    )
+    .unwrap();
+    let enc_dense = EncodedProblem::encode_stored(
+        &prob,
+        EncoderKind::Replication,
+        2.0,
+        8,
+        7,
+        codedopt::linalg::StorageKind::Dense,
+    )
+    .unwrap();
+    println!(
+        "replication x2 over 8 workers: shard bytes total {} (csr) vs {} (dense)",
+        enc_sparse.shard_mem_bytes(),
+        enc_dense.shard_mem_bytes()
     );
 }
 
@@ -191,6 +285,8 @@ fn bench_xla_round() {
 fn main() {
     println!("=== codedopt microbench (hot paths) ===");
     bench_fused_grad();
+    bench_gemv_blocked_vs_naive();
+    bench_sparse_vs_dense_fused_grad();
     bench_fwht_encode();
     bench_gemm();
     bench_cluster_round();

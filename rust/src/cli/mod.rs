@@ -14,11 +14,12 @@ pub use args::Args;
 
 use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
 use crate::encoding::EncoderKind;
+use crate::linalg::StorageKind;
 use crate::optim::{
     CodedGd, CodedLbfgs, CodedSgd, GdConfig, LbfgsConfig, LrSchedule, Optimizer, SgdConfig,
 };
 use crate::problem::{EncodedProblem, QuadProblem};
-use crate::runtime::{build_engine, EngineKind};
+use crate::runtime::{build_engine_with, EngineKind};
 use anyhow::{Context, Result};
 
 const HELP: &str = "\
@@ -36,6 +37,11 @@ SUBCOMMANDS
     --clock virtual|measured   virtual: deterministic flop-model round times;
                                measured: per-worker wall-clock with straggler
                                cancellation (streaming first-k gather)
+    --storage dense|sparse|auto  shard storage backend: auto (default) keeps
+                               sparse data CSR where the scheme preserves it;
+                               sparse forces CSR (errors for densifying
+                               encoders; the xla engine needs dense)
+    --threads 0     native-engine worker fan-out cap (0 = all cores)
     --csv <path>    write the per-iteration trace as CSV
     SGD-only flags (--optimizer sgd):
     --batch-frac 0.1           per-round block-row mini-batch fraction (0,1];
@@ -51,7 +57,7 @@ SUBCOMMANDS
     --users 240 --items 160 --ratings 8000 --embed 15 --lambda 10
     --epochs 5 --workers 8 --k 4 --encoder hadamard --beta 2.0
     --dist-threshold 64 --iters 8 --delay exp:10 --clock virtual|measured
-    --seed 0
+    --storage dense|sparse|auto --threads 0 --seed 0
 
   spectrum          eigenvalue spectra of S_A^T S_A (Fig. 2/3)
     --n 64 --beta 2.0 --workers 32 --k 16 --trials 10 --seed 0
@@ -111,6 +117,8 @@ fn cmd_ridge(args: &Args) -> Result<()> {
     let engine_kind = EngineKind::parse(args.flag_str("engine", "native"))?;
     let delay = DelayModel::parse(args.flag_str("delay", "exp:10"))?;
     let clock = ClockMode::parse(args.flag_str("clock", "virtual"))?;
+    let storage = StorageKind::parse(args.flag_str("storage", "auto"))?;
+    let threads = args.flag_usize("threads", 0)?;
     // --optimizer is canonical; --algo stays as the historical alias
     let algo = args.flag("optimizer").unwrap_or_else(|| args.flag_str("algo", "lbfgs"));
 
@@ -118,8 +126,15 @@ fn cmd_ridge(args: &Args) -> Result<()> {
         "# ridge: n={n} p={p} λ={lambda} m={m} k={k} β={beta} encoder={kind} engine={engine_kind:?} clock={clock:?} algo={algo}"
     );
     let prob = QuadProblem::synthetic_gaussian(n, p, lambda, seed);
-    let enc = EncodedProblem::encode(&prob, kind, beta, m, seed)?;
-    let engine = build_engine(engine_kind, &enc)?;
+    let enc = EncodedProblem::encode_stored(&prob, kind, beta, m, seed, storage)?;
+    println!(
+        "# storage={} ({} shard bytes across {} workers){}",
+        enc.storage,
+        enc.shard_mem_bytes(),
+        enc.m(),
+        if threads > 0 { format!("  threads={threads}") } else { String::new() }
+    );
+    let engine = build_engine_with(engine_kind, &enc, threads)?;
     let ccfg = ClusterConfig {
         workers: m,
         wait_for: k,
@@ -202,12 +217,15 @@ fn cmd_mf(args: &Args) -> Result<()> {
         lbfgs_iters: args.flag_usize("iters", 8)?,
         delay: DelayModel::parse(args.flag_str("delay", "exp:10"))?,
         clock: ClockMode::parse(args.flag_str("clock", "virtual"))?,
+        storage: StorageKind::parse(args.flag_str("storage", "auto"))?,
+        threads: args.flag_usize("threads", 0)?,
         seed,
         ..Default::default()
     };
     println!(
-        "# mf: users={} items={} ratings~{} embed={} m={} k={} encoder={}",
-        scfg.n_users, scfg.n_items, scfg.n_ratings, cfg.embed, cfg.m, cfg.k, cfg.encoder
+        "# mf: users={} items={} ratings~{} embed={} m={} k={} encoder={} storage={}",
+        scfg.n_users, scfg.n_items, scfg.n_ratings, cfg.embed, cfg.m, cfg.k, cfg.encoder,
+        cfg.storage
     );
     let all = synthetic_movielens(&scfg);
     let (tr, te) = all.split(0.2, seed ^ 0x5117);
@@ -344,6 +362,42 @@ mod tests {
         run(&[
             "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "3",
             "--clock", "measured",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn tiny_ridge_sparse_storage_runs() {
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "3",
+            "--encoder", "uncoded", "--storage", "sparse",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn ridge_sparse_storage_rejects_densifying_encoder() {
+        assert!(run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "1",
+            "--encoder", "hadamard", "--storage", "sparse",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn ridge_rejects_bad_storage() {
+        assert!(run(&[
+            "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "4", "--iters", "1",
+            "--storage", "ram",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn tiny_ridge_thread_cap_runs() {
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "3",
+            "--threads", "2",
         ])
         .unwrap();
     }

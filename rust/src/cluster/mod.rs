@@ -155,6 +155,35 @@ impl DelayModel {
     }
 }
 
+impl std::fmt::Display for DelayModel {
+    /// Emits the exact [`DelayModel::parse`] grammar, so
+    /// `parse(x.to_string()) == x` — the config/JSON round-trip contract.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DelayModel::None => write!(f, "none"),
+            DelayModel::Constant { ms } => write!(f, "const:{ms}"),
+            DelayModel::Exp { mean_ms } => write!(f, "exp:{mean_ms}"),
+            DelayModel::ShiftedExp { shift_ms, mean_ms } => {
+                write!(f, "shifted:{shift_ms}:{mean_ms}")
+            }
+            DelayModel::Pareto { scale_ms, shape } => write!(f, "pareto:{scale_ms}:{shape}"),
+            DelayModel::ExpWithFailures { mean_ms, p_fail } => {
+                write!(f, "expfail:{mean_ms}:{p_fail}")
+            }
+            DelayModel::HeteroExp { mean_ms, factors } => {
+                write!(f, "hetero:{mean_ms}:")?;
+                for (i, x) in factors.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
 /// How the per-round compute time entering the clock is obtained.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ClockMode {
@@ -177,6 +206,21 @@ impl ClockMode {
             "measured" | "wall" => Ok(ClockMode::Measured),
             other => anyhow::bail!("unknown clock mode {other:?} (virtual|measured)"),
         }
+    }
+
+    /// Canonical CLI/config label (round-trips through
+    /// [`ClockMode::parse`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ClockMode::Virtual => "virtual",
+            ClockMode::Measured => "measured",
+        }
+    }
+}
+
+impl std::fmt::Display for ClockMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
     }
 }
 
@@ -315,15 +359,22 @@ impl Cluster {
             engine.workers(),
             prob.m()
         );
+        // Virtual-clock flop model, per storage backend: a gradient round
+        // is two gemv-shaped passes (2 flops per touched multiply-add), a
+        // line-search round is one. `DataMat::gemv_madds` is `rows·cols`
+        // for dense shards — identical to the historical model, bit for
+        // bit — and `nnz` for CSR shards, so sparse storage is not just a
+        // memory win: the straggler simulation charges each worker the
+        // flops its kernel actually executes.
         let grad_mflops = prob
             .shards
             .iter()
-            .map(|s| 2.0 * s.x.rows() as f64 * s.x.cols() as f64 * 2.0 / 1e6)
+            .map(|s| 2.0 * s.x.gemv_madds() * 2.0 / 1e6)
             .collect();
         let ls_mflops = prob
             .shards
             .iter()
-            .map(|s| 2.0 * s.x.rows() as f64 * s.x.cols() as f64 / 1e6)
+            .map(|s| 2.0 * s.x.gemv_madds() / 1e6)
             .collect();
         let shard_rows = prob.shards.iter().map(|s| s.x.rows()).collect();
         let rng = Pcg64::new(cfg.seed, 0xc105);
@@ -751,6 +802,66 @@ mod tests {
     }
 
     #[test]
+    fn delay_model_display_roundtrip() {
+        for model in [
+            DelayModel::None,
+            DelayModel::Constant { ms: 3.5 },
+            DelayModel::Exp { mean_ms: 10.0 },
+            DelayModel::ShiftedExp { shift_ms: 5.0, mean_ms: 10.0 },
+            DelayModel::Pareto { scale_ms: 2.0, shape: 1.5 },
+            DelayModel::ExpWithFailures { mean_ms: 10.0, p_fail: 0.05 },
+            DelayModel::HeteroExp { mean_ms: 10.0, factors: vec![1.0, 1.0, 4.0] },
+        ] {
+            assert_eq!(DelayModel::parse(&model.to_string()).unwrap(), model);
+        }
+    }
+
+    #[test]
+    fn virtual_flop_model_is_nnz_proportional_for_sparse_shards() {
+        // identical data, two storages: the sparse cluster's virtual
+        // compute (and hence round time) must be nnz-proportional
+        use crate::linalg::{CsrMat, StorageKind};
+        let n = 64usize;
+        let p = 33usize;
+        // 2 nnz per row → nnz/dense ratio = 2/p
+        let mut row_ptr = vec![0usize];
+        let (mut cols, mut vals, mut y) = (Vec::new(), Vec::new(), Vec::new());
+        for r in 0..n {
+            cols.push((r % (p - 1)) as u32);
+            cols.push((p - 1) as u32);
+            vals.extend_from_slice(&[1.0, 1.0]);
+            row_ptr.push(cols.len());
+            y.push(1.0);
+        }
+        let prob = QuadProblem::new(CsrMat::from_raw(n, p, row_ptr, cols, vals), y, 0.0);
+        let round_time = |storage: StorageKind| -> f64 {
+            let enc =
+                EncodedProblem::encode_stored(&prob, EncoderKind::Identity, 1.0, 4, 0, storage)
+                    .unwrap();
+            let eng = Box::new(NativeEngine::new(&enc));
+            let cfg = ClusterConfig {
+                workers: 4,
+                wait_for: 4,
+                delay: DelayModel::None,
+                clock: ClockMode::Virtual,
+                ms_per_mflop: 0.5,
+                seed: 0,
+            };
+            let mut c = Cluster::new(&enc, eng, cfg).unwrap();
+            c.grad_round(&vec![0.0; p]).unwrap().1.elapsed_ms
+        };
+        let dense_ms = round_time(StorageKind::Dense);
+        let sparse_ms = round_time(StorageKind::Sparse);
+        assert!(sparse_ms > 0.0);
+        let ratio = sparse_ms / dense_ms;
+        let expect = 2.0 / p as f64;
+        assert!(
+            (ratio - expect).abs() < 1e-9,
+            "sparse/dense virtual time ratio {ratio} != nnz ratio {expect}"
+        );
+    }
+
+    #[test]
     fn clock_mode_parsing() {
         assert_eq!(ClockMode::parse("virtual").unwrap(), ClockMode::Virtual);
         assert_eq!(ClockMode::parse("Measured").unwrap(), ClockMode::Measured);
@@ -806,6 +917,7 @@ mod tests {
             kind: EncoderKind::Identity,
             beta: 1.0,
             gram_scale: 1.0,
+            storage: crate::linalg::StorageKind::Dense,
             raw: prob,
         };
         let eng = Box::new(NativeEngine::new(&enc));

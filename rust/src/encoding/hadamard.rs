@@ -17,7 +17,7 @@
 
 use super::Encoder;
 use crate::linalg::fwht::fwht_columns;
-use crate::linalg::Mat;
+use crate::linalg::{DataMat, Mat};
 use crate::rng::Pcg64;
 
 /// FWHT-based randomized Hadamard encoder.
@@ -77,6 +77,36 @@ impl Encoder for HadamardEncoder {
         Mat::from_vec(self.n_out, c, buf)
     }
 
+    /// `S` is applied as an *operator*: sparse input rows scatter their
+    /// stored entries (sign-flipped, at their random positions) directly
+    /// into the FWHT buffer, so `S·A` never materializes a dense copy of
+    /// `A` just to encode. The transform output is dense by nature — the
+    /// randomized Hadamard ensemble mixes every row — so the result is
+    /// always dense storage.
+    fn encode_data(&self, x: &DataMat) -> DataMat {
+        match x {
+            DataMat::Dense(d) => DataMat::Dense(self.encode(d)),
+            DataMat::Csr(c) => {
+                assert_eq!(c.rows(), self.n, "encode: row mismatch");
+                let ncols = c.cols();
+                let mut buf = vec![0.0; self.n_out * ncols];
+                for (i, (&pos, &sign)) in self.positions.iter().zip(&self.signs).enumerate() {
+                    let dst = &mut buf[pos * ncols..(pos + 1) * ncols];
+                    let (cols, vals) = c.row(i);
+                    for (cc, vv) in cols.iter().zip(vals) {
+                        dst[*cc as usize] = sign * vv;
+                    }
+                }
+                fwht_columns(&mut buf, self.n_out, ncols);
+                let scale = 1.0 / (self.n as f64).sqrt();
+                for v in &mut buf {
+                    *v *= scale;
+                }
+                DataMat::Dense(Mat::from_vec(self.n_out, ncols, buf))
+            }
+        }
+    }
+
     fn materialize(&self) -> Mat {
         // S = encode(I): one FWHT per basis column — O(N^2 log N) total,
         // used only by spectrum analysis and tests.
@@ -119,6 +149,26 @@ mod tests {
             let e_out: f64 = sx.col(j).iter().map(|v| v * v).sum();
             assert!((e_out - enc.beta() * e_in).abs() < 1e-8 * e_out.max(1.0));
         }
+    }
+
+    #[test]
+    fn sparse_encode_matches_dense() {
+        use crate::linalg::{CsrMat, DataMat};
+        let x = Mat::from_fn(32, 5, |i, j| {
+            if (i + j) % 3 == 0 {
+                1.0 + i as f64 + 10.0 * j as f64
+            } else {
+                0.0
+            }
+        });
+        let enc = HadamardEncoder::new(32, 2.0, 9);
+        let dense_out = enc.encode(&x);
+        let sparse_out = enc.encode_data(&DataMat::Csr(CsrMat::from_dense(&x)));
+        assert!(!sparse_out.is_sparse(), "transform output must be dense");
+        // value-equal (the scatter skips zeros, so only the sign of exact
+        // zeros may differ from the dense `sign * 0.0` writes)
+        assert!(sparse_out.max_abs_diff(&DataMat::Dense(dense_out)) == 0.0);
+        assert!(!enc.preserves_sparsity());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Uncoded baseline: `S = I` (the paper's "uncoded" scheme).
 
 use super::Encoder;
-use crate::linalg::Mat;
+use crate::linalg::{DataMat, Mat};
 
 /// `S = I_n`. With first-k gather this degenerates to plain sub-sampled
 /// distributed gradient descent — the baseline the paper shows failing to
@@ -34,6 +34,15 @@ impl Encoder for IdentityEncoder {
     fn encode(&self, x: &Mat) -> Mat {
         assert_eq!(x.rows(), self.n, "encode: row mismatch");
         x.clone()
+    }
+
+    fn encode_data(&self, x: &DataMat) -> DataMat {
+        assert_eq!(x.rows(), self.n, "encode: row mismatch");
+        x.clone() // sparse in, sparse out — S = I preserves storage
+    }
+
+    fn preserves_sparsity(&self) -> bool {
+        true
     }
 
     fn materialize(&self) -> Mat {

@@ -32,7 +32,7 @@ pub mod identity;
 pub mod replication;
 pub mod spectrum;
 
-use crate::linalg::Mat;
+use crate::linalg::{DataMat, Mat};
 use anyhow::{bail, Result};
 
 pub use spectrum::{normalized_gram_eigs, SpectrumStats};
@@ -57,6 +57,26 @@ pub trait Encoder: Send + Sync {
     fn encode(&self, x: &Mat) -> Mat {
         // default: dense multiply; fast-transform families override
         self.materialize().matmul(x)
+    }
+
+    /// Apply `S` to a matrix in either storage backend. The default
+    /// densifies once and encodes (correct for every family — transforms
+    /// and random ensembles produce dense rows regardless); families that
+    /// preserve sparsity ([`identity`]) or consume sparse input without a
+    /// dense intermediate ([`hadamard`]'s FWHT scatter) override this.
+    fn encode_data(&self, x: &DataMat) -> DataMat {
+        match x {
+            DataMat::Dense(d) => DataMat::Dense(self.encode(d)),
+            _ => DataMat::Dense(self.encode(&x.to_dense())),
+        }
+    }
+
+    /// Whether `S·X` of a sparse `X` stays sparse (row-selection-like
+    /// families only: identity here, replication/gradient-coding at the
+    /// partitioner). Gates `--storage sparse`: requesting CSR shards from
+    /// a densifying family is a hard error, not a silent densify.
+    fn preserves_sparsity(&self) -> bool {
+        false
     }
 
     /// Dense `S` (spectrum analysis, tests). May be expensive.
@@ -251,6 +271,19 @@ mod tests {
     #[test]
     fn steiner_conformance() {
         conformance(EncoderKind::SteinerEtf, 24, 2.0, 1e-9);
+    }
+
+    #[test]
+    fn encode_data_default_densifies_sparse_input() {
+        use crate::linalg::{CsrMat, DataMat};
+        let enc = EncoderKind::Gaussian.build(16, 2.0, 1).unwrap();
+        let x = Mat::from_fn(16, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+        let sparse = DataMat::Csr(CsrMat::from_dense(&x));
+        let out = enc.encode_data(&sparse);
+        assert!(!out.is_sparse(), "random ensembles densify");
+        assert!(out.to_dense().max_abs_diff(&enc.encode(&x)) < 1e-12);
+        assert!(!enc.preserves_sparsity());
+        assert!(EncoderKind::Identity.build(16, 1.0, 0).unwrap().preserves_sparsity());
     }
 
     #[test]

@@ -40,14 +40,14 @@ pub mod prelude {
     pub use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, GatherPolicy, Round};
     pub use crate::config::{Config, Json};
     pub use crate::encoding::{Encoder, EncoderKind};
-    pub use crate::linalg::Mat;
+    pub use crate::linalg::{CsrMat, DataMat, Mat, StorageKind};
     pub use crate::optim::{
         CodedFista, CodedGd, CodedLbfgs, CodedSgd, FistaConfig, GdConfig, LbfgsConfig, LrSchedule,
         Optimizer, Prox, RunOutput, SgdConfig, Trace,
     };
     pub use crate::problem::{BatchPlan, EncodedProblem, QuadProblem, Scheme};
     pub use crate::runtime::{
-        build_engine, ComputeEngine, CurvCollector, EngineKind, GradCollector, NativeEngine,
-        XlaEngine,
+        build_engine, build_engine_with, ComputeEngine, CurvCollector, EngineKind, GradCollector,
+        NativeEngine, XlaEngine,
     };
 }

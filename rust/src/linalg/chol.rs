@@ -64,19 +64,24 @@ pub fn solve_spd(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
     cholesky_factor(a).map(|l| cholesky_solve(&l, b))
 }
 
-/// Closed-form ridge solve: `(XᵀX + λ n I) w = Xᵀ y`.
-///
-/// Matches the objective convention `f(w) = (1/2n)||Xw−y||² + (λ/2)||w||²`,
-/// whose stationarity condition is `(1/n)Xᵀ(Xw−y) + λw = 0`.
-pub fn ridge_exact(x: &Mat, y: &[f64], lambda: f64) -> Option<Vec<f64>> {
-    let n = x.rows() as f64;
-    let mut gram = x.gram();
+/// Normal-equations ridge solve given the precomputed Gram matrix and
+/// right-hand side: solves `(G + λ n I) w = rhs` with `G = XᵀX` and
+/// `rhs = Xᵀy`. This is the single home of the ridge convention
+/// `f(w) = (1/2n)||Xw−y||² + (λ/2)||w||²` (stationarity
+/// `(1/n)Xᵀ(Xw−y) + λw = 0`) — both the dense [`ridge_exact`] and the
+/// storage-generic `QuadProblem::exact_solution` delegate here.
+pub fn ridge_solve_normal(mut gram: Mat, rhs: &[f64], lambda: f64, n: f64) -> Option<Vec<f64>> {
     for i in 0..gram.rows() {
         let v = gram.get(i, i) + lambda * n;
         gram.set(i, i, v);
     }
-    let rhs = x.gemv_t(y);
-    solve_spd(&gram, &rhs)
+    solve_spd(&gram, rhs)
+}
+
+/// Closed-form ridge solve: `(XᵀX + λ n I) w = Xᵀ y` (see
+/// [`ridge_solve_normal`] for the convention).
+pub fn ridge_exact(x: &Mat, y: &[f64], lambda: f64) -> Option<Vec<f64>> {
+    ridge_solve_normal(x.gram(), &x.gemv_t(y), lambda, x.rows() as f64)
 }
 
 /// Pivoted Cholesky of a PSD matrix: `P A Pᵀ ≈ L Lᵀ` truncated at

@@ -262,11 +262,47 @@ impl Mat {
     }
 
     /// `y = self * x` into a caller buffer (no allocation on the hot path).
+    ///
+    /// Cache-blocked by row pairs (§Perf iteration 5): two dot products
+    /// share one pass over `x`, halving `x`-traffic, while each row keeps
+    /// the exact mod-4 accumulation order of [`super::dot`] — per-row
+    /// results are bit-identical to the historical per-row kernel (which
+    /// is also what the CSR mirror, `storage::CsrMat::gemv_into`,
+    /// reproduces).
     pub fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.cols, "gemv: dimension mismatch");
         assert_eq!(y.len(), self.rows, "gemv: output mismatch");
-        for (i, yi) in y.iter_mut().enumerate() {
-            *yi = super::dot(self.row(i), x);
+        let n = self.cols;
+        let chunks = n / 4;
+        let mut i = 0;
+        while i + 1 < self.rows {
+            let r0 = &self.data[i * n..(i + 1) * n];
+            let r1 = &self.data[(i + 1) * n..(i + 2) * n];
+            let mut a0 = [0.0f64; 4];
+            let mut a1 = [0.0f64; 4];
+            for c in 0..chunks {
+                let j = c * 4;
+                a0[0] += r0[j] * x[j];
+                a0[1] += r0[j + 1] * x[j + 1];
+                a0[2] += r0[j + 2] * x[j + 2];
+                a0[3] += r0[j + 3] * x[j + 3];
+                a1[0] += r1[j] * x[j];
+                a1[1] += r1[j + 1] * x[j + 1];
+                a1[2] += r1[j + 2] * x[j + 2];
+                a1[3] += r1[j + 3] * x[j + 3];
+            }
+            let mut s0 = a0[0] + a0[1] + a0[2] + a0[3];
+            let mut s1 = a1[0] + a1[1] + a1[2] + a1[3];
+            for j in chunks * 4..n {
+                s0 += r0[j] * x[j];
+                s1 += r1[j] * x[j];
+            }
+            y[i] = s0;
+            y[i + 1] = s1;
+            i += 2;
+        }
+        if i < self.rows {
+            y[i] = super::dot(self.row(i), x);
         }
     }
 
@@ -278,12 +314,26 @@ impl Mat {
         y
     }
 
-    /// `y = selfᵀ x` into a caller buffer. Row-major friendly: axpy per row.
+    /// `y = selfᵀ x` into a caller buffer. Row-major friendly scatter,
+    /// folded two rows per pass over `y` (§Perf iteration 5 — halves
+    /// `y`-traffic, same shape as the fused kernel's paired rank-1
+    /// update, which is also what the CSR mirror reproduces).
     pub fn gemv_t_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.rows, "gemv_t: dimension mismatch");
         assert_eq!(y.len(), self.cols, "gemv_t: output mismatch");
         y.fill(0.0);
-        for i in 0..self.rows {
+        let n = self.cols;
+        let mut i = 0;
+        while i + 1 < self.rows {
+            let (x0, x1) = (x[i], x[i + 1]);
+            let r0 = &self.data[i * n..(i + 1) * n];
+            let r1 = &self.data[(i + 1) * n..(i + 2) * n];
+            for ((yj, &a), &b) in y.iter_mut().zip(r0).zip(r1) {
+                *yj += x0 * a + x1 * b;
+            }
+            i += 2;
+        }
+        if i < self.rows {
             super::axpy(x[i], self.row(i), y);
         }
     }
@@ -408,34 +458,72 @@ impl Mat {
         out
     }
 
-    /// Gram matrix `selfᵀ * self` (symmetric; computed via matmul for now).
+    /// Gram matrix `selfᵀ * self`: rank-k update on the upper triangle
+    /// only (half the flops of the historical `transpose().matmul(self)`,
+    /// no transpose allocation), threaded over triangle-area-balanced
+    /// column bands, then mirrored into the lower triangle — so the
+    /// result is exactly symmetric by construction.
     pub fn gram(&self) -> Mat {
-        self.transpose().matmul(self)
+        let (n, p) = (self.rows, self.cols);
+        let mut g = Mat::zeros(p, p);
+        if p == 0 || n == 0 {
+            return g;
+        }
+        let flops = n * p * (p + 1) / 2;
+        let threads = if flops >= PAR_FLOP_THRESHOLD { n_threads().min(p) } else { 1 };
+        // band cut points with roughly equal upper-triangle area
+        let mut cuts = vec![0usize];
+        if threads > 1 {
+            let per = (p * (p + 1) / 2).div_ceil(threads);
+            let mut acc = 0usize;
+            for j in 0..p {
+                acc += p - j;
+                if acc >= per && j + 1 < p {
+                    cuts.push(j + 1);
+                    acc = 0;
+                }
+            }
+        }
+        cuts.push(p);
+        let a = &self.data;
+        // split g into disjoint row bands [cuts[b], cuts[b+1]), one thread each
+        let bands: Vec<(usize, usize, &mut [f64])> = {
+            let mut v = Vec::with_capacity(cuts.len() - 1);
+            let mut rest: &mut [f64] = &mut g.data;
+            for b in 0..cuts.len() - 1 {
+                let (jlo, jhi) = (cuts[b], cuts[b + 1]);
+                let (head, tail) = rest.split_at_mut((jhi - jlo) * p);
+                v.push((jlo, jhi, head));
+                rest = tail;
+            }
+            v
+        };
+        std::thread::scope(|s| {
+            for (jlo, jhi, band) in bands {
+                s.spawn(move || syrk_band(a, n, p, jlo, jhi, band));
+            }
+        });
+        // mirror the computed upper triangle into the lower one
+        for i in 0..p {
+            for j in i + 1..p {
+                let v = g.data[i * p + j];
+                g.data[j * p + i] = v;
+            }
+        }
+        g
     }
 
     /// Largest eigenvalue of `selfᵀ self` by power iteration (this is
     /// `M = λ_max(XᵀX)` in the step-size rule of Theorem 1).
     pub fn spectral_bound(&self, iters: usize, seed: u64) -> f64 {
-        let mut rng = crate::rng::Pcg64::seeded(seed);
-        let mut v: Vec<f64> = (0..self.cols).map(|_| rng.next_gaussian()).collect();
-        let norm = super::norm2(&v);
-        super::scale(1.0 / norm, &mut v);
-        let mut lambda = 0.0;
-        let mut xv = vec![0.0; self.rows];
-        let mut xtxv = vec![0.0; self.cols];
-        for _ in 0..iters {
-            self.gemv_into(&v, &mut xv);
-            self.gemv_t_into(&xv, &mut xtxv);
-            lambda = super::dot(&v, &xtxv);
-            let n = super::norm2(&xtxv);
-            if n == 0.0 {
-                return 0.0;
-            }
-            for (vi, xi) in v.iter_mut().zip(&xtxv) {
-                *vi = xi / n;
-            }
-        }
-        lambda
+        super::spectral_power_iteration(
+            self.rows,
+            self.cols,
+            iters,
+            seed,
+            |v, out| self.gemv_into(v, out),
+            |v, out| self.gemv_t_into(v, out),
+        )
     }
 }
 
@@ -484,6 +572,27 @@ fn gemm_band(a: &[f64], b: &[f64], c_band: &mut [f64], row_lo: usize, rows: usiz
 
 fn gemm_block(a: &[f64], b: &[f64], c: &mut [f64], row_lo: usize, rows: usize, k: usize, n: usize) {
     gemm_band(a, b, c, row_lo, rows, k, n);
+}
+
+/// Upper-triangle rank-k update for [`Mat::gram`]: accumulates
+/// `G[j][l] += A[i][j]·A[i][l]` for `l ≥ j`, `j ∈ [jlo, jhi)`, over all
+/// rows `i` — unit stride over both the data row and the output row, with
+/// the zero-skip that makes sparse-ish encode matrices cheap.
+fn syrk_band(a: &[f64], n_rows: usize, p: usize, jlo: usize, jhi: usize, out: &mut [f64]) {
+    for i in 0..n_rows {
+        let row = &a[i * p..(i + 1) * p];
+        for j in jlo..jhi {
+            let aij = row[j];
+            if aij == 0.0 {
+                continue;
+            }
+            let base = (j - jlo) * p;
+            let dst = &mut out[base + j..base + p];
+            for (d, &s) in dst.iter_mut().zip(&row[j..]) {
+                *d += aij * s;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -688,6 +797,40 @@ mod tests {
         let x = Mat::from_fn(3, 3, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
         let m = x.spectral_bound(200, 0);
         assert!((m - 9.0).abs() < 1e-6, "got {m}");
+    }
+
+    #[test]
+    fn gram_matches_transpose_matmul() {
+        let mut rng = Pcg64::seeded(18);
+        // 200×128 crosses PAR_FLOP_THRESHOLD → threaded triangle bands
+        for &(r, c) in &[(5usize, 3usize), (40, 17), (200, 128)] {
+            let a = random_mat(&mut rng, r, c);
+            let g = a.gram();
+            let g_ref = a.transpose().matmul(&a);
+            assert!(g.max_abs_diff(&g_ref) < 1e-9, "{r}x{c}");
+            // exactly symmetric by construction (mirrored triangle)
+            for i in 0..c {
+                for j in 0..c {
+                    assert_eq!(g.get(i, j).to_bits(), g.get(j, i).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_paired_rows_match_per_row_dot_bitwise() {
+        // the row-paired kernel must keep each row's historical
+        // accumulation order — this is the dense half of the bitwise
+        // storage-equivalence contract
+        let mut rng = Pcg64::seeded(19);
+        for &(r, c) in &[(1usize, 7usize), (8, 13), (9, 4), (2, 1), (5, 16)] {
+            let a = random_mat(&mut rng, r, c);
+            let x: Vec<f64> = (0..c).map(|_| rng.next_gaussian()).collect();
+            let y = a.gemv(&x);
+            for (i, yi) in y.iter().enumerate() {
+                assert_eq!(yi.to_bits(), crate::linalg::dot(a.row(i), &x).to_bits());
+            }
+        }
     }
 
     #[test]

@@ -1,7 +1,9 @@
-//! Dense linear algebra substrate (f64, row-major).
+//! Linear algebra substrate (f64): dense row-major and sparse CSR.
 //!
 //! The paper's system needs: blocked/threaded GEMM and GEMV for the worker
-//! hot path ([`mat`]), the Fast Walsh–Hadamard Transform for the
+//! hot path ([`mat`]), a compressed-sparse-rows backend with the same
+//! fused-kernel surface so encoded shards of sparse design matrices never
+//! densify ([`storage`]), the Fast Walsh–Hadamard Transform for the
 //! fast-transform encoders ([`fwht`]), Cholesky solves for the local
 //! (`n < 500`) matrix-factorization subproblems ([`chol`]), and a symmetric
 //! eigensolver for the `S_Aᵀ S_A` spectrum figures ([`eig`]).
@@ -15,15 +17,53 @@ pub mod chol;
 pub mod eig;
 pub mod fwht;
 pub mod mat;
+pub mod storage;
 
-pub use chol::{cholesky_factor, cholesky_solve, pivoted_cholesky, ridge_exact, solve_spd};
+pub use chol::{
+    cholesky_factor, cholesky_solve, pivoted_cholesky, ridge_exact, ridge_solve_normal, solve_spd,
+};
 pub use eig::{sym_eigenvalues, sym_eigen};
 pub use fwht::{fwht_inplace, fwht_columns};
 pub use mat::Mat;
+pub use storage::{CsrMat, DataMat, StorageKind};
 
 /// Euclidean norm of a vector.
 pub fn norm2(v: &[f64]) -> f64 {
     dot(v, v).sqrt()
+}
+
+/// Power iteration for `λ_max(XᵀX)` over any `(gemv, gemv_t)` pair — the
+/// shared core of [`Mat::spectral_bound`] and `DataMat::spectral_bound`
+/// (one implementation keeps the two storage backends' results
+/// bit-identical by construction).
+pub(crate) fn spectral_power_iteration(
+    rows: usize,
+    cols: usize,
+    iters: usize,
+    seed: u64,
+    mut gemv: impl FnMut(&[f64], &mut [f64]),
+    mut gemv_t: impl FnMut(&[f64], &mut [f64]),
+) -> f64 {
+    let mut rng = crate::rng::Pcg64::seeded(seed);
+    let mut v: Vec<f64> = (0..cols).map(|_| rng.next_gaussian()).collect();
+    let norm = norm2(&v);
+    scale(1.0 / norm, &mut v);
+    let mut lambda = 0.0;
+    let mut xv = vec![0.0; rows];
+    let mut xtxv = vec![0.0; cols];
+    for _ in 0..iters {
+        gemv(&v, &mut xv);
+        gemv_t(&xv, &mut xtxv);
+        lambda = dot(&v, &xtxv);
+        let n = norm2(&xtxv);
+        if n == 0.0 {
+            return 0.0;
+        }
+        for (vi, xi) in v.iter_mut().zip(&xtxv) {
+            *vi = xi / n;
+        }
+    }
+    lambda
 }
 
 /// Dot product.

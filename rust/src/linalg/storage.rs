@@ -1,0 +1,870 @@
+//! Pluggable data-matrix storage: dense row-major vs compressed sparse
+//! rows behind one [`DataMat`] surface.
+//!
+//! The paper's headline experiment is MovieLens matrix factorization —
+//! sparse data — yet a dense [`Mat`] shard of an identity- or
+//! replication-encoded sparse design matrix wastes `O(rows·p)` memory and
+//! compute on structural zeros. [`CsrMat`] stores only the nonzeros and
+//! implements the *same full fused-kernel surface* the worker hot path
+//! needs (`gemv`, `gemv_t`, `fused_grad`, `fused_grad_range`, `gram`), so
+//! every optimizer runs unchanged on either backend: coding-obliviousness
+//! extends to storage.
+//!
+//! **Bitwise contract.** The CSR kernels *mirror the dense accumulation
+//! order exactly* (the even/odd paired accumulators of the fused kernel,
+//! the mod-4 accumulators of [`dot`](super::dot), the row-pair folded
+//! scatter of `gemv_t`). A structural zero contributes `±0.0` to an
+//! accumulator, and under round-to-nearest a partial sum of nonzero
+//! products can never be `-0.0`, so skipping zeros is a bitwise no-op:
+//! dense and CSR kernels return **identical bits** on the same data.
+//! That is what lets `--storage sparse` reproduce the dense virtual-clock
+//! optimizer trace bit for bit (`rust/tests/storage_equivalence.rs`)
+//! while the simulated flop cost drops to the nnz-proportional truth.
+
+use super::Mat;
+use anyhow::{bail, Result};
+use std::fmt;
+
+// ---------------------------------------------------------------------------
+// StorageKind
+// ---------------------------------------------------------------------------
+
+/// Shard storage backend selector (CLI/config surface: `--storage`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StorageKind {
+    /// Dense row-major `Mat` shards (the historical representation).
+    Dense,
+    /// CSR shards; only valid where the encoding scheme preserves
+    /// sparsity (identity / replication / gradient coding — fast
+    /// transforms and random ensembles densify by construction).
+    Sparse,
+    /// Keep the input representation: sparse data stays CSR where the
+    /// scheme allows it, dense data stays dense. The default.
+    Auto,
+}
+
+impl StorageKind {
+    /// Parse the CLI forms `dense`, `sparse`/`csr`, `auto`.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dense" => StorageKind::Dense,
+            "sparse" | "csr" => StorageKind::Sparse,
+            "auto" => StorageKind::Auto,
+            other => bail!("unknown storage kind {other:?} (dense|sparse|auto)"),
+        })
+    }
+
+    /// Canonical CLI/table label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            StorageKind::Dense => "dense",
+            StorageKind::Sparse => "sparse",
+            StorageKind::Auto => "auto",
+        }
+    }
+}
+
+impl fmt::Display for StorageKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CsrMat
+// ---------------------------------------------------------------------------
+
+/// Compressed-sparse-rows `rows × cols` matrix of `f64`.
+///
+/// Per row, column indices are strictly increasing and every stored value
+/// is nonzero (both enforced by the constructors) — the invariants the
+/// bitwise kernel mirror relies on.
+#[derive(Clone, PartialEq)]
+pub struct CsrMat {
+    rows: usize,
+    cols: usize,
+    /// Row start offsets into `col_idx`/`vals`; length `rows + 1`.
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+impl fmt::Debug for CsrMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "CsrMat({}x{}, nnz={})", self.rows, self.cols, self.nnz())
+    }
+}
+
+impl CsrMat {
+    /// Build from raw CSR arrays. Panics unless `row_ptr` is a valid
+    /// monotone offset array, per-row columns are strictly increasing and
+    /// in range, and every value is nonzero.
+    pub fn from_raw(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<u32>,
+        vals: Vec<f64>,
+    ) -> Self {
+        assert_eq!(row_ptr.len(), rows + 1, "from_raw: row_ptr length");
+        assert_eq!(col_idx.len(), vals.len(), "from_raw: col/val length mismatch");
+        assert_eq!(*row_ptr.last().unwrap_or(&0), col_idx.len(), "from_raw: row_ptr end");
+        assert!(cols <= u32::MAX as usize, "from_raw: too many columns for u32 indices");
+        for i in 0..rows {
+            let (lo, hi) = (row_ptr[i], row_ptr[i + 1]);
+            assert!(lo <= hi, "from_raw: row_ptr not monotone at row {i}");
+            for t in lo..hi {
+                assert!((col_idx[t] as usize) < cols, "from_raw: column out of range");
+                assert!(vals[t] != 0.0, "from_raw: explicit zero stored at row {i}");
+                if t + 1 < hi {
+                    assert!(col_idx[t] < col_idx[t + 1], "from_raw: columns not sorted in row {i}");
+                }
+            }
+        }
+        CsrMat { rows, cols, row_ptr, col_idx, vals }
+    }
+
+    /// Compress a dense matrix (drops exact zeros, keeps everything else).
+    pub fn from_dense(m: &Mat) -> Self {
+        let (rows, cols) = (m.rows(), m.cols());
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        row_ptr.push(0);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..rows {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        assert!(cols <= u32::MAX as usize, "from_dense: too many columns for u32 indices");
+        CsrMat { rows, cols, row_ptr, col_idx, vals }
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored-nonzero count.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Fraction of entries stored (`nnz / (rows·cols)`; 0 for empty shapes).
+    pub fn density(&self) -> f64 {
+        let total = self.rows * self.cols;
+        if total == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / total as f64
+        }
+    }
+
+    /// Resident bytes of the three CSR arrays.
+    pub fn mem_bytes(&self) -> usize {
+        self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.col_idx.len() * std::mem::size_of::<u32>()
+            + self.vals.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Row `i` as `(column indices, values)` slices.
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Element `(i, j)` (binary search within the row).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&(j as u32)) {
+            Ok(t) => vals[t],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Expand to a dense [`Mat`].
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let dst = out.row_mut(i);
+            for (c, v) in cols.iter().zip(vals) {
+                dst[*c as usize] = *v;
+            }
+        }
+        out
+    }
+
+    /// Contiguous row band `[lo, hi)` as a new CSR matrix.
+    pub fn row_band(&self, lo: usize, hi: usize) -> CsrMat {
+        assert!(lo <= hi && hi <= self.rows, "row_band: bad range {lo}..{hi}");
+        let (plo, phi) = (self.row_ptr[lo], self.row_ptr[hi]);
+        let row_ptr = self.row_ptr[lo..=hi].iter().map(|p| p - plo).collect();
+        CsrMat {
+            rows: hi - lo,
+            cols: self.cols,
+            row_ptr,
+            col_idx: self.col_idx[plo..phi].to_vec(),
+            vals: self.vals[plo..phi].to_vec(),
+        }
+    }
+
+    /// Zero-pad to `new_rows` rows (empty rows; exact no-op for
+    /// gradient/objective, mirroring [`Mat::pad_rows`]).
+    pub fn pad_rows(&self, new_rows: usize) -> CsrMat {
+        assert!(new_rows >= self.rows, "pad_rows: cannot shrink");
+        let mut out = self.clone();
+        out.row_ptr.resize(new_rows + 1, *self.row_ptr.last().unwrap());
+        out.rows = new_rows;
+        out
+    }
+
+    // ------------------------------------------------------------- products
+    //
+    // Every kernel below mirrors its dense counterpart's accumulation
+    // order (see the module docs for why skipping structural zeros is a
+    // bitwise no-op).
+
+    /// Matrix–vector product `self * x`.
+    pub fn gemv(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.gemv_into(x, &mut y);
+        y
+    }
+
+    /// `y = self * x`; per-row accumulation mirrors [`dot`](super::dot).
+    pub fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "gemv: dimension mismatch");
+        assert_eq!(y.len(), self.rows, "gemv: output mismatch");
+        for (i, yi) in y.iter_mut().enumerate() {
+            let (cols, vals) = self.row(i);
+            *yi = row_dot4(cols, vals, x, self.cols);
+        }
+    }
+
+    /// Transposed matrix–vector product `selfᵀ * x`.
+    pub fn gemv_t(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.gemv_t_into(x, &mut y);
+        y
+    }
+
+    /// `y = selfᵀ x`; mirrors the dense row-pair folded scatter.
+    pub fn gemv_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "gemv_t: dimension mismatch");
+        assert_eq!(y.len(), self.cols, "gemv_t: output mismatch");
+        y.fill(0.0);
+        let mut i = 0;
+        while i + 1 < self.rows {
+            scatter_pair(self.row(i), self.row(i + 1), x[i], x[i + 1], y);
+            i += 2;
+        }
+        if i < self.rows {
+            scatter1(x[i], self.row(i), y);
+        }
+    }
+
+    /// Fused worker gradient `(g, ‖self·w − y‖²)` — the CSR mirror of
+    /// [`Mat::fused_grad`]: identical pairing, identical bits.
+    pub fn fused_grad(&self, w: &[f64], y: &[f64], g: &mut [f64], resid_buf: &mut [f64]) -> f64 {
+        g.fill(0.0);
+        self.fused_grad_range(w, y, g, resid_buf, 0, self.rows)
+    }
+
+    /// Row-restricted accumulating fused gradient — the CSR mirror of
+    /// [`Mat::fused_grad_range`] (same contract: `g` not zeroed, callers
+    /// compose disjoint ranges).
+    pub fn fused_grad_range(
+        &self,
+        w: &[f64],
+        y: &[f64],
+        g: &mut [f64],
+        resid_buf: &mut [f64],
+        lo: usize,
+        hi: usize,
+    ) -> f64 {
+        assert_eq!(w.len(), self.cols, "fused_grad: w mismatch");
+        assert_eq!(y.len(), self.rows, "fused_grad: y mismatch");
+        assert_eq!(g.len(), self.cols, "fused_grad: g mismatch");
+        assert_eq!(resid_buf.len(), self.rows, "fused_grad: buffer mismatch");
+        assert!(lo <= hi && hi <= self.rows, "fused_grad_range: bad range {lo}..{hi}");
+        let mut f = 0.0;
+        let mut i = lo;
+        while i + 1 < hi {
+            let r0 = self.row(i);
+            let r1 = self.row(i + 1);
+            let mut res0 = row_dot2(r0.0, r0.1, w, self.cols);
+            let mut res1 = row_dot2(r1.0, r1.1, w, self.cols);
+            res0 -= y[i];
+            res1 -= y[i + 1];
+            resid_buf[i] = res0;
+            resid_buf[i + 1] = res1;
+            f += res0 * res0 + res1 * res1;
+            scatter_pair(r0, r1, res0, res1, g);
+            i += 2;
+        }
+        if i < hi {
+            let (cols, vals) = self.row(i);
+            let r = row_dot4(cols, vals, w, self.cols) - y[i];
+            resid_buf[i] = r;
+            f += r * r;
+            scatter1(r, (cols, vals), g);
+        }
+        f
+    }
+
+    /// Gram matrix `selfᵀ self` as a dense `cols × cols` matrix
+    /// (rank-1 row updates over the upper triangle, then mirrored).
+    pub fn gram(&self) -> Mat {
+        let p = self.cols;
+        let mut g = Mat::zeros(p, p);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for a in 0..cols.len() {
+                let ja = cols[a] as usize;
+                let va = vals[a];
+                let grow = g.row_mut(ja);
+                for b in a..cols.len() {
+                    grow[cols[b] as usize] += va * vals[b];
+                }
+            }
+        }
+        for i in 0..p {
+            for j in i + 1..p {
+                let v = g.get(i, j);
+                g.set(j, i, v);
+            }
+        }
+        g
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mirrored row kernels
+// ---------------------------------------------------------------------------
+
+/// Sparse row dot mirroring [`dot`](super::dot)'s mod-4 accumulators:
+/// entries with `col < 4·(n_cols/4)` fold into `acc[col % 4]` in column
+/// order, the (≤3) tail columns add serially after the accumulator sum.
+fn row_dot4(cols: &[u32], vals: &[f64], w: &[f64], n_cols: usize) -> f64 {
+    let lim = (n_cols / 4) * 4;
+    let mut acc = [0.0f64; 4];
+    let mut t = 0;
+    while t < cols.len() && (cols[t] as usize) < lim {
+        let c = cols[t] as usize;
+        acc[c % 4] += vals[t] * w[c];
+        t += 1;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    while t < cols.len() {
+        let c = cols[t] as usize;
+        s += vals[t] * w[c];
+        t += 1;
+    }
+    s
+}
+
+/// Sparse row dot mirroring the fused kernel's even/odd pair accumulators
+/// (`d_a` even columns, `d_b` odd columns below `2·(n_cols/2)`, single
+/// tail column added after the accumulator sum).
+fn row_dot2(cols: &[u32], vals: &[f64], w: &[f64], n_cols: usize) -> f64 {
+    let lim = (n_cols / 2) * 2;
+    let (mut da, mut db) = (0.0f64, 0.0f64);
+    let mut t = 0;
+    while t < cols.len() && (cols[t] as usize) < lim {
+        let c = cols[t] as usize;
+        if c % 2 == 0 {
+            da += vals[t] * w[c];
+        } else {
+            db += vals[t] * w[c];
+        }
+        t += 1;
+    }
+    let mut s = da + db;
+    while t < cols.len() {
+        let c = cols[t] as usize;
+        s += vals[t] * w[c];
+        t += 1;
+    }
+    s
+}
+
+/// `out[j] += coef * row[j]` over the stored entries (the dense kernel's
+/// axpy restricted to nonzeros — a bitwise no-op elsewhere).
+fn scatter1(coef: f64, row: (&[u32], &[f64]), out: &mut [f64]) {
+    let (cols, vals) = row;
+    for (c, v) in cols.iter().zip(vals) {
+        out[*c as usize] += coef * v;
+    }
+}
+
+/// `out[j] += c0·a_j + c1·b_j` merged over two sorted sparse rows,
+/// evaluating the *same two-term expression* as the dense pair update
+/// (with an explicit zero for the absent side) so the bits match.
+fn scatter_pair(r0: (&[u32], &[f64]), r1: (&[u32], &[f64]), c0: f64, c1: f64, out: &mut [f64]) {
+    let zero = 0.0f64;
+    let (cols0, vals0) = r0;
+    let (cols1, vals1) = r1;
+    let (mut p, mut q) = (0, 0);
+    while p < cols0.len() && q < cols1.len() {
+        let (ca, cb) = (cols0[p], cols1[q]);
+        if ca < cb {
+            out[ca as usize] += c0 * vals0[p] + c1 * zero;
+            p += 1;
+        } else if cb < ca {
+            out[cb as usize] += c0 * zero + c1 * vals1[q];
+            q += 1;
+        } else {
+            out[ca as usize] += c0 * vals0[p] + c1 * vals1[q];
+            p += 1;
+            q += 1;
+        }
+    }
+    while p < cols0.len() {
+        out[cols0[p] as usize] += c0 * vals0[p] + c1 * zero;
+        p += 1;
+    }
+    while q < cols1.len() {
+        out[cols1[q] as usize] += c0 * zero + c1 * vals1[q];
+        q += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DataMat
+// ---------------------------------------------------------------------------
+
+/// A data matrix behind one of the two storage backends. This is the type
+/// the encoded shards, the raw problem, and the compute engines hold —
+/// the whole stack above the kernels is storage-oblivious.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataMat {
+    /// Dense row-major storage.
+    Dense(Mat),
+    /// Compressed sparse rows.
+    Csr(CsrMat),
+}
+
+impl From<Mat> for DataMat {
+    fn from(m: Mat) -> Self {
+        DataMat::Dense(m)
+    }
+}
+
+impl From<CsrMat> for DataMat {
+    fn from(m: CsrMat) -> Self {
+        DataMat::Csr(m)
+    }
+}
+
+impl DataMat {
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        match self {
+            DataMat::Dense(m) => m.rows(),
+            DataMat::Csr(m) => m.rows(),
+        }
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        match self {
+            DataMat::Dense(m) => m.cols(),
+            DataMat::Csr(m) => m.cols(),
+        }
+    }
+
+    /// True for CSR storage.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, DataMat::Csr(_))
+    }
+
+    /// The backend actually in use (never [`StorageKind::Auto`]).
+    pub fn storage(&self) -> StorageKind {
+        match self {
+            DataMat::Dense(_) => StorageKind::Dense,
+            DataMat::Csr(_) => StorageKind::Sparse,
+        }
+    }
+
+    /// Multiply-adds one `gemv`-shaped pass over this matrix costs — the
+    /// virtual-clock flop model's unit. Dense kernels touch every entry
+    /// (`rows·cols`); CSR kernels touch only the stored nonzeros.
+    pub fn gemv_madds(&self) -> f64 {
+        match self {
+            DataMat::Dense(m) => (m.rows() * m.cols()) as f64,
+            DataMat::Csr(m) => m.nnz() as f64,
+        }
+    }
+
+    /// Resident bytes of the payload arrays.
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            DataMat::Dense(m) => m.rows() * m.cols() * std::mem::size_of::<f64>(),
+            DataMat::Csr(m) => m.mem_bytes(),
+        }
+    }
+
+    /// Element `(i, j)`.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        match self {
+            DataMat::Dense(m) => m.get(i, j),
+            DataMat::Csr(m) => m.get(i, j),
+        }
+    }
+
+    /// Borrow the dense matrix, if this is dense (the XLA staging path —
+    /// AOT artifacts are dense-shaped and must fail fast on CSR).
+    pub fn as_dense(&self) -> Option<&Mat> {
+        match self {
+            DataMat::Dense(m) => Some(m),
+            DataMat::Csr(_) => None,
+        }
+    }
+
+    /// Dense copy (expands CSR).
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            DataMat::Dense(m) => m.clone(),
+            DataMat::Csr(m) => m.to_dense(),
+        }
+    }
+
+    /// CSR copy (compresses dense).
+    pub fn to_csr(&self) -> CsrMat {
+        match self {
+            DataMat::Dense(m) => CsrMat::from_dense(m),
+            DataMat::Csr(m) => m.clone(),
+        }
+    }
+
+    /// Convert into the requested backend ([`StorageKind::Auto`] keeps
+    /// the current one). Conversion is value-exact in both directions.
+    pub fn into_storage(self, storage: StorageKind) -> DataMat {
+        match (storage, self) {
+            (StorageKind::Auto, x) => x,
+            (StorageKind::Dense, DataMat::Csr(c)) => DataMat::Dense(c.to_dense()),
+            (StorageKind::Dense, x) => x,
+            (StorageKind::Sparse, DataMat::Dense(d)) => DataMat::Csr(CsrMat::from_dense(&d)),
+            (StorageKind::Sparse, x) => x,
+        }
+    }
+
+    /// Contiguous row band `[lo, hi)` in the same backend.
+    pub fn row_band(&self, lo: usize, hi: usize) -> DataMat {
+        match self {
+            DataMat::Dense(m) => DataMat::Dense(m.row_band(lo, hi)),
+            DataMat::Csr(m) => DataMat::Csr(m.row_band(lo, hi)),
+        }
+    }
+
+    /// Zero-pad to `new_rows` rows in the same backend (exact no-op for
+    /// gradient/objective either way).
+    pub fn pad_rows(&self, new_rows: usize) -> DataMat {
+        match self {
+            DataMat::Dense(m) => DataMat::Dense(m.pad_rows(new_rows)),
+            DataMat::Csr(m) => DataMat::Csr(m.pad_rows(new_rows)),
+        }
+    }
+
+    /// Max `|a_ij − b_ij|` across backends.
+    pub fn max_abs_diff(&self, other: &DataMat) -> f64 {
+        assert_eq!((self.rows(), self.cols()), (other.rows(), other.cols()));
+        let mut d = 0.0f64;
+        for i in 0..self.rows() {
+            for j in 0..self.cols() {
+                d = d.max((self.get(i, j) - other.get(i, j)).abs());
+            }
+        }
+        d
+    }
+
+    /// Matrix–vector product `self * x`.
+    pub fn gemv(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            DataMat::Dense(m) => m.gemv(x),
+            DataMat::Csr(m) => m.gemv(x),
+        }
+    }
+
+    /// `y = self * x` into a caller buffer.
+    pub fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            DataMat::Dense(m) => m.gemv_into(x, y),
+            DataMat::Csr(m) => m.gemv_into(x, y),
+        }
+    }
+
+    /// Transposed matrix–vector product `selfᵀ * x`.
+    pub fn gemv_t(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            DataMat::Dense(m) => m.gemv_t(x),
+            DataMat::Csr(m) => m.gemv_t(x),
+        }
+    }
+
+    /// `y = selfᵀ x` into a caller buffer.
+    pub fn gemv_t_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            DataMat::Dense(m) => m.gemv_t_into(x, y),
+            DataMat::Csr(m) => m.gemv_t_into(x, y),
+        }
+    }
+
+    /// Fused worker gradient; see [`Mat::fused_grad`].
+    pub fn fused_grad(&self, w: &[f64], y: &[f64], g: &mut [f64], resid_buf: &mut [f64]) -> f64 {
+        match self {
+            DataMat::Dense(m) => m.fused_grad(w, y, g, resid_buf),
+            DataMat::Csr(m) => m.fused_grad(w, y, g, resid_buf),
+        }
+    }
+
+    /// Row-restricted accumulating fused gradient; see
+    /// [`Mat::fused_grad_range`].
+    pub fn fused_grad_range(
+        &self,
+        w: &[f64],
+        y: &[f64],
+        g: &mut [f64],
+        resid_buf: &mut [f64],
+        lo: usize,
+        hi: usize,
+    ) -> f64 {
+        match self {
+            DataMat::Dense(m) => m.fused_grad_range(w, y, g, resid_buf, lo, hi),
+            DataMat::Csr(m) => m.fused_grad_range(w, y, g, resid_buf, lo, hi),
+        }
+    }
+
+    /// Gram matrix `selfᵀ self` (always dense `cols × cols`).
+    pub fn gram(&self) -> Mat {
+        match self {
+            DataMat::Dense(m) => m.gram(),
+            DataMat::Csr(m) => m.gram(),
+        }
+    }
+
+    /// Largest eigenvalue of `selfᵀ self` by power iteration — the same
+    /// shared implementation as [`Mat::spectral_bound`] (and, via the
+    /// mirrored kernels, the same bits) on either backend.
+    pub fn spectral_bound(&self, iters: usize, seed: u64) -> f64 {
+        super::spectral_power_iteration(
+            self.rows(),
+            self.cols(),
+            iters,
+            seed,
+            |v, out| self.gemv_into(v, out),
+            |v, out| self.gemv_t_into(v, out),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_sparse(rng: &mut Pcg64, rows: usize, cols: usize, density: f64) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| {
+            if rng.next_f64() < density {
+                rng.next_gaussian()
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        let d = random_sparse(&mut rng, 13, 9, 0.3);
+        let s = CsrMat::from_dense(&d);
+        assert_eq!(s.rows(), 13);
+        assert_eq!(s.cols(), 9);
+        assert!(s.to_dense().max_abs_diff(&d) == 0.0);
+        for i in 0..13 {
+            for j in 0..9 {
+                assert_eq!(s.get(i, j), d.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn nnz_and_density_and_memory() {
+        let d = Mat::from_fn(4, 5, |i, j| if (i + j) % 2 == 0 { 1.0 } else { 0.0 });
+        let s = CsrMat::from_dense(&d);
+        assert_eq!(s.nnz(), 10);
+        assert!((s.density() - 0.5).abs() < 1e-15);
+        assert!(s.mem_bytes() > 0);
+        // MovieLens-shaped shard: 3 nnz per row, wide — CSR far smaller
+        let wide = Mat::from_fn(64, 400, |i, j| if j == i || j == 399 { 1.0 } else { 0.0 });
+        let sw = CsrMat::from_dense(&wide);
+        assert!(sw.mem_bytes() * 10 < 64 * 400 * 8);
+    }
+
+    #[test]
+    fn row_band_and_pad_rows() {
+        let mut rng = Pcg64::seeded(2);
+        let d = random_sparse(&mut rng, 10, 6, 0.4);
+        let s = CsrMat::from_dense(&d);
+        let band = s.row_band(3, 8);
+        assert!(band.to_dense().max_abs_diff(&d.row_band(3, 8)) == 0.0);
+        let padded = s.pad_rows(16);
+        assert_eq!(padded.rows(), 16);
+        assert_eq!(padded.nnz(), s.nnz());
+        for j in 0..6 {
+            assert_eq!(padded.get(12, j), 0.0);
+        }
+    }
+
+    #[test]
+    fn gemv_matches_dense_bitwise() {
+        let mut rng = Pcg64::seeded(3);
+        for &(r, c, den) in &[(1usize, 1usize, 1.0), (7, 5, 0.5), (20, 17, 0.2), (9, 33, 0.05)] {
+            let d = random_sparse(&mut rng, r, c, den);
+            let s = CsrMat::from_dense(&d);
+            let x: Vec<f64> = (0..c).map(|_| rng.next_gaussian()).collect();
+            let yd = d.gemv(&x);
+            let ys = s.gemv(&x);
+            for (a, b) in yd.iter().zip(&ys) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_t_matches_dense_bitwise() {
+        let mut rng = Pcg64::seeded(4);
+        for &(r, c, den) in &[(6usize, 4usize, 0.6), (11, 8, 0.3), (16, 3, 0.2)] {
+            let d = random_sparse(&mut rng, r, c, den);
+            let s = CsrMat::from_dense(&d);
+            let x: Vec<f64> = (0..r).map(|_| rng.next_gaussian()).collect();
+            let yd = d.gemv_t(&x);
+            let ys = s.gemv_t(&x);
+            for (a, b) in yd.iter().zip(&ys) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn fused_grad_matches_dense_bitwise() {
+        let mut rng = Pcg64::seeded(5);
+        for &(r, c, den) in &[(12usize, 7usize, 0.4), (25, 10, 0.15), (8, 2, 0.9)] {
+            let d = random_sparse(&mut rng, r, c, den);
+            let s = CsrMat::from_dense(&d);
+            let w: Vec<f64> = (0..c).map(|_| rng.next_gaussian()).collect();
+            let y: Vec<f64> = (0..r).map(|_| rng.next_gaussian()).collect();
+            let (mut gd, mut gs) = (vec![0.0; c], vec![0.0; c]);
+            let (mut bd, mut bs) = (vec![0.0; r], vec![0.0; r]);
+            let fd = d.fused_grad(&w, &y, &mut gd, &mut bd);
+            let fs = s.fused_grad(&w, &y, &mut gs, &mut bs);
+            assert_eq!(fd.to_bits(), fs.to_bits());
+            for (a, b) in gd.iter().zip(&gs) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in bd.iter().zip(&bs) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn gram_matches_dense() {
+        let mut rng = Pcg64::seeded(6);
+        let d = random_sparse(&mut rng, 20, 8, 0.35);
+        let s = CsrMat::from_dense(&d);
+        assert!(s.gram().max_abs_diff(&d.gram()) < 1e-12);
+    }
+
+    #[test]
+    fn empty_rows_and_columns_are_handled() {
+        // rows 2 and 5 fully empty; column 1 never touched
+        let d = Mat::from_fn(7, 4, |i, j| {
+            if i == 2 || i == 5 || j == 1 {
+                0.0
+            } else {
+                (i * 4 + j + 1) as f64
+            }
+        });
+        let s = CsrMat::from_dense(&d);
+        let w = vec![0.5, -1.0, 2.0, 0.25];
+        let y = vec![0.1; 7];
+        let (mut gd, mut gs) = (vec![0.0; 4], vec![0.0; 4]);
+        let (mut bd, mut bs) = (vec![0.0; 7], vec![0.0; 7]);
+        let fd = d.fused_grad(&w, &y, &mut gd, &mut bd);
+        let fs = s.fused_grad(&w, &y, &mut gs, &mut bs);
+        assert_eq!(fd.to_bits(), fs.to_bits());
+        for (a, b) in gd.iter().zip(&gs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn datamat_storage_conversions() {
+        let mut rng = Pcg64::seeded(7);
+        let d = random_sparse(&mut rng, 9, 5, 0.3);
+        let dm: DataMat = d.clone().into();
+        assert!(!dm.is_sparse());
+        assert_eq!(dm.storage(), StorageKind::Dense);
+        let sp = dm.clone().into_storage(StorageKind::Sparse);
+        assert!(sp.is_sparse());
+        assert_eq!(sp.to_dense().max_abs_diff(&d), 0.0);
+        let back = sp.clone().into_storage(StorageKind::Dense);
+        assert!(!back.is_sparse());
+        assert_eq!(sp.into_storage(StorageKind::Auto).storage(), StorageKind::Sparse);
+        assert_eq!(back.max_abs_diff(&dm), 0.0);
+    }
+
+    #[test]
+    fn datamat_flop_model_is_nnz_proportional() {
+        let d = Mat::from_fn(8, 10, |_, j| if j == 0 { 1.0 } else { 0.0 });
+        let dense: DataMat = d.clone().into();
+        let sparse: DataMat = CsrMat::from_dense(&d).into();
+        assert_eq!(dense.gemv_madds(), 80.0);
+        assert_eq!(sparse.gemv_madds(), 8.0);
+        assert!(sparse.mem_bytes() < dense.mem_bytes());
+    }
+
+    #[test]
+    fn spectral_bound_matches_across_backends() {
+        let mut rng = Pcg64::seeded(8);
+        let d = random_sparse(&mut rng, 24, 6, 0.4);
+        let dense: DataMat = d.clone().into();
+        let sparse: DataMat = CsrMat::from_dense(&d).into();
+        let a = dense.spectral_bound(40, 3);
+        let b = sparse.spectral_bound(40, 3);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn storage_kind_parse_roundtrip() {
+        for kind in [StorageKind::Dense, StorageKind::Sparse, StorageKind::Auto] {
+            assert_eq!(StorageKind::parse(kind.label()).unwrap(), kind);
+        }
+        assert_eq!(StorageKind::parse("csr").unwrap(), StorageKind::Sparse);
+        assert!(StorageKind::parse("ram").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "columns not sorted")]
+    fn from_raw_rejects_unsorted() {
+        CsrMat::from_raw(1, 4, vec![0, 2], vec![2, 1], vec![1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "explicit zero")]
+    fn from_raw_rejects_stored_zero() {
+        CsrMat::from_raw(1, 4, vec![0, 1], vec![0], vec![0.0]);
+    }
+}

@@ -14,12 +14,13 @@
 use super::bank::EncoderBank;
 use super::data::Ratings;
 use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
+use crate::config::Json;
 use crate::encoding::EncoderKind;
-use crate::linalg::{self, Mat};
+use crate::linalg::{self, Mat, StorageKind};
 use crate::optim::{CodedLbfgs, LbfgsConfig, Optimizer};
 use crate::problem::{EncodedProblem, QuadProblem};
-use crate::runtime::NativeEngine;
-use anyhow::{ensure, Result};
+use crate::runtime::{build_engine_with, EngineKind};
+use anyhow::{anyhow, ensure, Result};
 
 /// MF training configuration (defaults = the paper's §5 settings).
 #[derive(Clone, Debug)]
@@ -57,6 +58,14 @@ pub struct MfConfig {
     /// Row cap per subproblem (rare popular-item outliers are subsampled
     /// to keep ETF bank sizes bounded; recorded in `MfOutput::capped`).
     pub max_rows: usize,
+    /// Worker fan-out thread cap for the native engine's subsolver
+    /// clusters (0 = available parallelism, the default).
+    pub threads: usize,
+    /// Shard storage backend for the distributed subproblem encodes
+    /// ([`StorageKind::Auto`] keeps the ALS design matrices dense — their
+    /// rows are embedding vectors; `Sparse` is honored where the scheme
+    /// allows it).
+    pub storage: StorageKind,
     /// Master seed for data/cluster randomness.
     pub seed: u64,
 }
@@ -78,8 +87,130 @@ impl Default for MfConfig {
             ms_per_mflop: 0.5,
             clock: ClockMode::Virtual,
             max_rows: 2048,
+            threads: 0,
+            storage: StorageKind::Auto,
             seed: 0,
         }
+    }
+}
+
+impl MfConfig {
+    /// Serialize to the JSON config form; round-trips through
+    /// [`MfConfig::from_json`] (seeds above 2⁵³ are not representable in
+    /// JSON numbers). Encoder, delay model, clock, and storage use their
+    /// CLI string grammars.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"embed\": {}, \"lambda\": {}, \"mu\": {}, \"epochs\": {}, \
+             \"m\": {}, \"k\": {}, \"encoder\": \"{}\", \"beta\": {}, \
+             \"dist_threshold\": {}, \"lbfgs_iters\": {}, \"delay\": \"{}\", \
+             \"ms_per_mflop\": {}, \"clock\": \"{}\", \"max_rows\": {}, \
+             \"threads\": {}, \"storage\": \"{}\", \"seed\": {}}}",
+            self.embed,
+            self.lambda,
+            self.mu,
+            self.epochs,
+            self.m,
+            self.k,
+            self.encoder,
+            self.beta,
+            self.dist_threshold,
+            self.lbfgs_iters,
+            self.delay,
+            self.ms_per_mflop,
+            self.clock,
+            self.max_rows,
+            self.threads,
+            self.storage,
+            self.seed
+        )
+    }
+
+    /// Deserialize from a parsed JSON object. Missing keys keep their
+    /// defaults; present keys must have the right type, and the string
+    /// fields must satisfy their CLI parse grammars.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        ensure!(matches!(j, Json::Obj(_)), "mf config: expected a JSON object");
+        let mut cfg = MfConfig::default();
+        let num = |key: &str| -> Result<Option<f64>> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_f64()
+                    .map(Some)
+                    .ok_or_else(|| anyhow!("mf config: {key} must be a number")),
+            }
+        };
+        let count = |key: &str| -> Result<Option<usize>> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_usize()
+                    .map(Some)
+                    .ok_or_else(|| anyhow!("mf config: {key} must be a nonnegative integer")),
+            }
+        };
+        let text = |key: &str| -> Result<Option<&str>> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_str()
+                    .map(Some)
+                    .ok_or_else(|| anyhow!("mf config: {key} must be a string")),
+            }
+        };
+        if let Some(x) = count("embed")? {
+            cfg.embed = x;
+        }
+        if let Some(x) = num("lambda")? {
+            cfg.lambda = x;
+        }
+        if let Some(x) = num("mu")? {
+            cfg.mu = x;
+        }
+        if let Some(x) = count("epochs")? {
+            cfg.epochs = x;
+        }
+        if let Some(x) = count("m")? {
+            cfg.m = x;
+        }
+        if let Some(x) = count("k")? {
+            cfg.k = x;
+        }
+        if let Some(s) = text("encoder")? {
+            cfg.encoder = EncoderKind::parse(s)?;
+        }
+        if let Some(x) = num("beta")? {
+            cfg.beta = x;
+        }
+        if let Some(x) = count("dist_threshold")? {
+            cfg.dist_threshold = x;
+        }
+        if let Some(x) = count("lbfgs_iters")? {
+            cfg.lbfgs_iters = x;
+        }
+        if let Some(s) = text("delay")? {
+            cfg.delay = DelayModel::parse(s)?;
+        }
+        if let Some(x) = num("ms_per_mflop")? {
+            cfg.ms_per_mflop = x;
+        }
+        if let Some(s) = text("clock")? {
+            cfg.clock = ClockMode::parse(s)?;
+        }
+        if let Some(x) = count("max_rows")? {
+            cfg.max_rows = x;
+        }
+        if let Some(x) = count("threads")? {
+            cfg.threads = x;
+        }
+        if let Some(s) = text("storage")? {
+            cfg.storage = StorageKind::parse(s)?;
+        }
+        if let Some(x) = count("seed")? {
+            cfg.seed = x as u64;
+        }
+        Ok(cfg)
     }
 }
 
@@ -200,15 +331,15 @@ fn solve_subproblem(
 
     let enc = match cfg.encoder {
         EncoderKind::Replication => {
-            EncodedProblem::encode(&prob, cfg.encoder, cfg.beta, cfg.m, sub_seed)?
+            EncodedProblem::encode_stored(&prob, cfg.encoder, cfg.beta, cfg.m, sub_seed, cfg.storage)?
         }
         _ => {
             let bank_kind = bank.kind();
             let encoder = bank.get(rows)?;
-            EncodedProblem::encode_with(&prob, encoder, bank_kind, cfg.m)?
+            EncodedProblem::encode_with_stored(&prob, encoder, bank_kind, cfg.m, cfg.storage)?
         }
     };
-    let engine = Box::new(NativeEngine::new(&enc));
+    let engine = build_engine_with(EngineKind::Native, &enc, cfg.threads)?;
     let ccfg = ClusterConfig {
         workers: cfg.m,
         wait_for: cfg.k,
@@ -243,6 +374,17 @@ fn solve_subproblem(
 pub fn train(train_set: &Ratings, test_set: &Ratings, cfg: &MfConfig) -> Result<MfOutput> {
     ensure!(cfg.k >= 1 && cfg.k <= cfg.m, "need 1 <= k <= m");
     ensure!(cfg.epochs >= 1, "need at least one epoch");
+    // validate the storage/encoder combination up front: discovering it
+    // mid-epoch (at the first subproblem that crosses dist_threshold)
+    // would throw away all prior ALS work — and a run whose subproblems
+    // all stay local would silently never honor the flag at all
+    ensure!(
+        cfg.storage != StorageKind::Sparse
+            || matches!(cfg.encoder, EncoderKind::Identity | EncoderKind::Replication),
+        "--storage sparse requires a sparsity-preserving encoder \
+         (uncoded/replication); '{}' densifies encoded rows",
+        cfg.encoder
+    );
     let p = cfg.embed;
     let dim = p + 1; // [factors, bias]
     let mut rng = crate::rng::Pcg64::new(cfg.seed, 0x3f);
@@ -424,6 +566,82 @@ mod tests {
         let out = train(&tr, &te, &tiny_cfg(EncoderKind::Replication, 2)).unwrap();
         assert!(out.train_rmse.last().unwrap().is_finite());
         assert!(*out.train_rmse.last().unwrap() < 1.2);
+    }
+
+    #[test]
+    fn sparse_storage_with_densifying_encoder_fails_at_config_time() {
+        let all = synthetic_movielens(&SyntheticConfig::small(17));
+        let (tr, te) = all.split(0.2, 9);
+        let bad = MfConfig {
+            storage: StorageKind::Sparse,
+            ..tiny_cfg(EncoderKind::Hadamard, 3)
+        };
+        assert!(train(&tr, &te, &bad).is_err(), "should fail before any ALS work");
+        // the sparsity-preserving scheme is accepted
+        let ok = MfConfig {
+            storage: StorageKind::Sparse,
+            ..tiny_cfg(EncoderKind::Replication, 3)
+        };
+        assert!(train(&tr, &te, &ok).is_ok());
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let cfg = MfConfig {
+            embed: 9,
+            lambda: 3.5,
+            epochs: 2,
+            m: 6,
+            k: 3,
+            encoder: EncoderKind::PaleyEtf,
+            beta: 2.0,
+            delay: DelayModel::HeteroExp { mean_ms: 8.0, factors: vec![1.0, 2.5] },
+            clock: ClockMode::Measured,
+            threads: 4,
+            storage: StorageKind::Sparse,
+            seed: 71,
+            ..Default::default()
+        };
+        let back = MfConfig::from_json(&Json::parse(&cfg.to_json()).unwrap()).unwrap();
+        assert_eq!(back.embed, 9);
+        assert_eq!(back.lambda, 3.5);
+        assert_eq!(back.encoder, EncoderKind::PaleyEtf);
+        assert_eq!(back.delay, cfg.delay);
+        assert_eq!(back.clock, ClockMode::Measured);
+        assert_eq!(back.threads, 4);
+        assert_eq!(back.storage, StorageKind::Sparse);
+        assert_eq!(back.seed, 71);
+        // defaults survive for absent keys; bad fields are rejected
+        let partial = MfConfig::from_json(&Json::parse("{\"threads\": 2}").unwrap()).unwrap();
+        assert_eq!(partial.threads, 2);
+        assert_eq!(partial.embed, MfConfig::default().embed);
+        for bad in [
+            "{\"storage\": \"ram\"}",
+            "{\"encoder\": \"bogus\"}",
+            "{\"delay\": \"warp:1\"}",
+            "{\"threads\": -1}",
+            "[1, 2]",
+        ] {
+            assert!(
+                MfConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "should reject {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn thread_cap_is_deterministic() {
+        // same training result at any fan-out width (threading is pure
+        // parallelism, never a numerics knob)
+        let all = synthetic_movielens(&SyntheticConfig::small(16));
+        let (tr, te) = all.split(0.2, 8);
+        let base = tiny_cfg(EncoderKind::Hadamard, 3);
+        let one = train(&tr, &te, &MfConfig { threads: 1, ..base.clone() }).unwrap();
+        let many = train(&tr, &te, &MfConfig { threads: 4, ..base }).unwrap();
+        for (a, b) in one.train_rmse.iter().zip(&many.train_rmse) {
+            assert_eq!(a.to_bits(), b.to_bits(), "thread cap changed the trained model");
+        }
+        assert_eq!(one.dist_solves, many.dist_solves);
     }
 
     #[test]

@@ -7,18 +7,27 @@
 //! plus the aggregation rules the leader applies to first-k responses —
 //! including the replication scheme's fastest-copy-per-partition dedup
 //! (§5) and the uncoded baseline's subsample rescaling.
+//!
+//! Both the raw design matrix and every shard live behind
+//! [`DataMat`] — dense row-major or CSR — and a [`StorageKind`] threads
+//! through the `*_stored` encode constructors: row-selection schemes
+//! (identity, replication, gradient coding) preserve CSR storage, the
+//! transform/random families densify by construction, and requesting
+//! `--storage sparse` from a densifying family is a hard error. The
+//! optimizers, the cluster, and the aggregation rules never look at the
+//! backend: coding-obliviousness extends to storage.
 
 use crate::encoding::EncoderKind;
-use crate::linalg::{self, Mat};
+use crate::linalg::{self, DataMat, Mat, StorageKind};
 use crate::rng::Pcg64;
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 /// The original (uncoded) regularized least-squares problem, eq. (1):
 /// `f(w) = (1/2n)‖Xw − y‖² + (λ/2)‖w‖²`.
 #[derive(Clone)]
 pub struct QuadProblem {
-    /// Design matrix `X` (n x p).
-    pub x: Mat,
+    /// Design matrix `X` (n x p), dense or CSR.
+    pub x: DataMat,
     /// Targets `y` (length n).
     pub y: Vec<f64>,
     /// Ridge coefficient λ (0 for plain least squares).
@@ -26,8 +35,11 @@ pub struct QuadProblem {
 }
 
 impl QuadProblem {
-    /// Assemble from parts (panics on row/length mismatch).
-    pub fn new(x: Mat, y: Vec<f64>, lambda: f64) -> Self {
+    /// Assemble from parts — accepts a dense [`Mat`], a
+    /// [`CsrMat`](crate::linalg::CsrMat), or a [`DataMat`] (panics on
+    /// row/length mismatch).
+    pub fn new(x: impl Into<DataMat>, y: Vec<f64>, lambda: f64) -> Self {
+        let x = x.into();
         assert_eq!(x.rows(), y.len(), "QuadProblem: X rows != y length");
         QuadProblem { x, y, lambda }
     }
@@ -39,7 +51,7 @@ impl QuadProblem {
         let x = Mat::from_fn(n, p, |_, _| rng.next_gaussian());
         let sp = (p as f64).sqrt();
         let y = (0..n).map(|_| sp * rng.next_gaussian()).collect();
-        QuadProblem { x, y, lambda }
+        QuadProblem { x: x.into(), y, lambda }
     }
 
     /// A well-conditioned planted problem: `y = Xw* + noise` — useful in
@@ -52,7 +64,7 @@ impl QuadProblem {
         for yi in &mut y {
             *yi += noise * rng.next_gaussian();
         }
-        (QuadProblem { x, y, lambda }, w_star)
+        (QuadProblem { x: x.into(), y, lambda }, w_star)
     }
 
     /// Sample count n.
@@ -84,9 +96,17 @@ impl QuadProblem {
         g
     }
 
-    /// Closed-form optimum via Cholesky on the normal equations.
+    /// Closed-form optimum via Cholesky on the normal equations
+    /// `(XᵀX + λ n I) w = Xᵀy`, on either storage backend (the Gram
+    /// matrix is dense `p × p` regardless; the ridge convention lives in
+    /// [`ridge_solve_normal`](crate::linalg::ridge_solve_normal)).
     pub fn exact_solution(&self) -> Option<Vec<f64>> {
-        crate::linalg::ridge_exact(&self.x, &self.y, self.lambda)
+        linalg::ridge_solve_normal(
+            self.x.gram(),
+            &self.x.gemv_t(&self.y),
+            self.lambda,
+            self.x.rows() as f64,
+        )
     }
 
     /// `M = λ_max((1/n)XᵀX) + λ` — the smoothness constant in Theorem 1's
@@ -121,8 +141,8 @@ pub enum Scheme {
 /// One worker's stored shard (already encoded + zero-padded).
 #[derive(Clone)]
 pub struct WorkerShard {
-    /// Encoded rows (padded to `rows_padded`) × p.
-    pub x: Mat,
+    /// Encoded rows (padded to `rows_padded`) × p, dense or CSR.
+    pub x: DataMat,
     /// Encoded targets, length = `x.rows()`.
     pub y: Vec<f64>,
     /// Rows before zero-padding (diagnostics only — padding is exact).
@@ -144,6 +164,10 @@ pub struct EncodedProblem {
     pub beta: f64,
     /// `c` with `SᵀS = c·I` — the gradient normalization constant.
     pub gram_scale: f64,
+    /// Shard storage backend actually in use (never
+    /// [`StorageKind::Auto`] — `Auto` requests are resolved at encode
+    /// time from the input representation and the scheme).
+    pub storage: StorageKind,
     /// Raw problem (kept for true-objective evaluation in traces).
     pub raw: QuadProblem,
 }
@@ -152,6 +176,21 @@ pub struct EncodedProblem {
 /// artifact buckets; zero rows are exact no-ops for gradient + objective.
 pub fn pad_bucket(rows: usize) -> usize {
     rows.next_power_of_two().max(8)
+}
+
+/// Resolve the storage kind an encoded problem records: explicit requests
+/// pass through, `Auto` reports what the shards actually hold.
+fn resolved_storage(shards: &[WorkerShard], requested: StorageKind) -> StorageKind {
+    match requested {
+        StorageKind::Auto => {
+            if shards.iter().any(|s| s.x.is_sparse()) {
+                StorageKind::Sparse
+            } else {
+                StorageKind::Dense
+            }
+        }
+        explicit => explicit,
+    }
 }
 
 /// One round's mini-batch plan: which rows of each worker's shard that
@@ -191,7 +230,8 @@ impl BatchPlan {
 }
 
 impl EncodedProblem {
-    /// Encode `prob` with the given family and distribute over `m` workers.
+    /// Encode `prob` with the given family and distribute over `m` workers,
+    /// keeping the input storage representation ([`StorageKind::Auto`]).
     ///
     /// * Coded families split the `βn` encoded rows into `m` near-equal
     ///   contiguous blocks.
@@ -205,6 +245,21 @@ impl EncodedProblem {
         beta: f64,
         m: usize,
         seed: u64,
+    ) -> Result<Self> {
+        Self::encode_stored(prob, kind, beta, m, seed, StorageKind::Auto)
+    }
+
+    /// [`EncodedProblem::encode`] with an explicit shard [`StorageKind`]:
+    /// `Dense` forces dense shards, `Sparse` forces CSR (and errors for
+    /// families that densify — every scheme except identity/replication),
+    /// `Auto` keeps whatever the scheme produces from the input.
+    pub fn encode_stored(
+        prob: &QuadProblem,
+        kind: EncoderKind,
+        beta: f64,
+        m: usize,
+        seed: u64,
+        storage: StorageKind,
     ) -> Result<Self> {
         ensure!(m >= 1, "need at least one worker");
         let n = prob.n();
@@ -227,23 +282,25 @@ impl EncodedProblem {
                         let mut ys = prob.y[lo..hi].to_vec();
                         let rows_real = xs.rows();
                         let padded = pad_bucket(rows_real);
-                        let xs = xs.pad_rows(padded);
+                        let xs = xs.pad_rows(padded).into_storage(storage);
                         ys.resize(padded, 0.0);
                         shards.push(WorkerShard { x: xs, y: ys, rows_real, partition_id: j });
                     }
                 }
+                let storage = resolved_storage(&shards, storage);
                 Ok(EncodedProblem {
                     shards,
                     scheme: Scheme::Replicated { partitions },
                     kind,
                     beta: b as f64,
                     gram_scale: 1.0, // per-partition gradients are raw-scale
+                    storage,
                     raw: prob.clone(),
                 })
             }
             _ => {
                 let enc = kind.build(n, beta, seed)?;
-                Self::encode_with(prob, enc.as_ref(), kind, m)
+                Self::encode_with_stored(prob, enc.as_ref(), kind, m, storage)
             }
         }
     }
@@ -261,7 +318,20 @@ impl EncodedProblem {
         prob: &QuadProblem,
         s: usize,
         m: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        Self::encode_gradient_coding_stored(prob, s, m, seed, StorageKind::Auto)
+    }
+
+    /// [`EncodedProblem::encode_gradient_coding`] with an explicit shard
+    /// [`StorageKind`] (row selection preserves sparsity, so all three
+    /// kinds are valid here).
+    pub fn encode_gradient_coding_stored(
+        prob: &QuadProblem,
+        s: usize,
+        m: usize,
         _seed: u64,
+        storage: StorageKind,
     ) -> Result<Self> {
         ensure!(m >= 1, "need at least one worker");
         let rep = s + 1;
@@ -281,17 +351,19 @@ impl EncodedProblem {
                 let mut ys = prob.y[lo..hi].to_vec();
                 let rows_real = xs.rows();
                 let padded = pad_bucket(rows_real);
-                let xs = xs.pad_rows(padded);
+                let xs = xs.pad_rows(padded).into_storage(storage);
                 ys.resize(padded, 0.0);
                 shards.push(WorkerShard { x: xs, y: ys, rows_real, partition_id: g });
             }
         }
+        let storage = resolved_storage(&shards, storage);
         Ok(EncodedProblem {
             shards,
             scheme: Scheme::GradientCoded { groups },
             kind: EncoderKind::Replication, // closest CLI label; scheme disambiguates
             beta: rep as f64,
             gram_scale: 1.0,
+            storage,
             raw: prob.clone(),
         })
     }
@@ -306,6 +378,21 @@ impl EncodedProblem {
         kind: EncoderKind,
         m: usize,
     ) -> Result<Self> {
+        Self::encode_with_stored(prob, enc, kind, m, StorageKind::Auto)
+    }
+
+    /// [`EncodedProblem::encode_with`] with an explicit shard
+    /// [`StorageKind`]. `Sparse` is rejected unless the encoder preserves
+    /// sparsity — a transform/random family would silently densify and
+    /// the CSR wrapper would cost *more* than dense, so it is a hard
+    /// error instead.
+    pub fn encode_with_stored(
+        prob: &QuadProblem,
+        enc: &dyn crate::encoding::Encoder,
+        kind: EncoderKind,
+        m: usize,
+        storage: StorageKind,
+    ) -> Result<Self> {
         ensure!(m >= 1, "need at least one worker");
         ensure!(
             enc.rows_in() == prob.n(),
@@ -317,14 +404,21 @@ impl EncodedProblem {
             kind != EncoderKind::Replication,
             "replication does not go through encode_with"
         );
+        if storage == StorageKind::Sparse && !enc.preserves_sparsity() {
+            bail!(
+                "--storage sparse: encoder family '{}' densifies encoded rows; \
+                 use identity/replication, or --storage dense|auto",
+                enc.name()
+            );
+        }
         let y_mat = Mat::col_vec(&prob.y);
-        let sx = enc.encode(&prob.x);
+        let sx = enc.encode_data(&prob.x);
         let sy_mat = enc.encode(&y_mat);
         let sy: Vec<f64> = (0..sy_mat.rows()).map(|i| sy_mat.get(i, 0)).collect();
         let rows_out = enc.rows_out();
         ensure!(rows_out >= m, "fewer encoded rows than workers");
         let part = crate::encoding::spectrum::partition_rows(rows_out, m);
-        let shards = part
+        let shards: Vec<WorkerShard> = part
             .iter()
             .enumerate()
             .map(|(i, &(lo, hi))| {
@@ -332,7 +426,7 @@ impl EncodedProblem {
                 let mut ys = sy[lo..hi].to_vec();
                 let rows_real = xs.rows();
                 let padded = pad_bucket(rows_real);
-                let xs = xs.pad_rows(padded);
+                let xs = xs.pad_rows(padded).into_storage(storage);
                 ys.resize(padded, 0.0);
                 WorkerShard { x: xs, y: ys, rows_real, partition_id: i }
             })
@@ -342,12 +436,14 @@ impl EncodedProblem {
         } else {
             Scheme::Coded
         };
+        let storage = resolved_storage(&shards, storage);
         Ok(EncodedProblem {
             shards,
             scheme,
             kind,
             beta: enc.beta(),
             gram_scale: enc.gram_scale(),
+            storage,
             raw: prob.clone(),
         })
     }
@@ -365,6 +461,15 @@ impl EncodedProblem {
     /// Raw (pre-encoding) sample count n.
     pub fn n_raw(&self) -> usize {
         self.raw.n()
+    }
+
+    /// Total resident bytes across all shards (`X̃` payload arrays plus
+    /// the `ỹ` vectors) — the memory axis the storage backends trade on.
+    pub fn shard_mem_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.x.mem_bytes() + s.y.len() * std::mem::size_of::<f64>())
+            .sum()
     }
 
     /// Count of *distinct* data contributions in a responder set: distinct
@@ -934,6 +1039,105 @@ mod tests {
         let enc = EncodedProblem::encode(&prob, EncoderKind::Identity, 1.0, 4, 0).unwrap();
         let mut rng = Pcg64::seeded(0);
         enc.sample_batch(0.0, &mut rng);
+    }
+
+    /// A MovieLens-shaped sparse design: one-hot user/item indicators
+    /// plus an intercept — 3 nnz per row, hundreds of columns.
+    fn sparse_problem() -> QuadProblem {
+        let (users, items, n) = (24usize, 16usize, 64usize);
+        let p = users + items + 1;
+        let mut row_ptr = vec![0usize];
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        let mut y = Vec::new();
+        for r in 0..n {
+            cols.push((r % users) as u32);
+            cols.push((users + (r * 7) % items) as u32);
+            cols.push((p - 1) as u32);
+            vals.extend_from_slice(&[1.0, 1.0, 1.0]);
+            row_ptr.push(cols.len());
+            y.push(1.0 + (r % 5) as f64);
+        }
+        QuadProblem::new(crate::linalg::CsrMat::from_raw(n, p, row_ptr, cols, vals), y, 0.1)
+    }
+
+    #[test]
+    fn sparse_storage_preserved_by_row_selection_schemes() {
+        let prob = sparse_problem();
+        for kind in [EncoderKind::Identity, EncoderKind::Replication] {
+            let enc = EncodedProblem::encode(&prob, kind, 2.0, 8, 0).unwrap();
+            assert_eq!(enc.storage, StorageKind::Sparse, "{kind}: auto should keep CSR");
+            assert!(enc.shards.iter().all(|s| s.x.is_sparse()));
+            let dense = EncodedProblem::encode_stored(
+                &prob,
+                kind,
+                2.0,
+                8,
+                0,
+                StorageKind::Dense,
+            )
+            .unwrap();
+            assert_eq!(dense.storage, StorageKind::Dense);
+            assert!(
+                enc.shard_mem_bytes() < dense.shard_mem_bytes() / 4,
+                "{kind}: CSR shards should be far smaller ({} vs {})",
+                enc.shard_mem_bytes(),
+                dense.shard_mem_bytes()
+            );
+            // same values either way
+            for (a, b) in enc.shards.iter().zip(&dense.shards) {
+                assert_eq!(a.x.max_abs_diff(&b.x), 0.0);
+                assert_eq!(a.y, b.y);
+            }
+        }
+    }
+
+    #[test]
+    fn transform_schemes_densify_sparse_input_under_auto() {
+        let prob = sparse_problem();
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 1).unwrap();
+        assert_eq!(enc.storage, StorageKind::Dense);
+        assert!(enc.shards.iter().all(|s| !s.x.is_sparse()));
+    }
+
+    #[test]
+    fn sparse_storage_rejected_for_densifying_schemes() {
+        let prob = small_problem();
+        for kind in [EncoderKind::Hadamard, EncoderKind::Gaussian, EncoderKind::Dft] {
+            let r = EncodedProblem::encode_stored(&prob, kind, 2.0, 8, 0, StorageKind::Sparse);
+            assert!(r.is_err(), "{kind}: sparse storage should be rejected");
+        }
+        // row-selection schemes accept it even for dense data
+        assert!(EncodedProblem::encode_stored(
+            &prob,
+            EncoderKind::Identity,
+            1.0,
+            8,
+            0,
+            StorageKind::Sparse
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn sparse_raw_problem_solves_and_differentiates() {
+        // objective/gradient/exact solution all run on CSR raw storage
+        let prob = sparse_problem();
+        let w_hat = prob.exact_solution().unwrap();
+        assert!(linalg::norm2(&prob.grad(&w_hat)) < 1e-8);
+        let dense = QuadProblem::new(prob.x.to_dense(), prob.y.clone(), prob.lambda);
+        let w_dense = dense.exact_solution().unwrap();
+        for (a, b) in w_hat.iter().zip(&w_dense) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gradient_coding_preserves_sparse_storage() {
+        let prob = sparse_problem();
+        let enc = EncodedProblem::encode_gradient_coding(&prob, 1, 8, 0).unwrap();
+        assert_eq!(enc.storage, StorageKind::Sparse);
+        assert!(enc.shards.iter().all(|s| s.x.is_sparse()));
     }
 
     #[test]

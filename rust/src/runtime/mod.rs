@@ -31,6 +31,10 @@ pub use native::NativeEngine;
 pub use stream::{Collected, Collector, CurvCollector, GradCollector};
 pub use xla_engine::XlaEngine;
 
+// The engines are storage-oblivious through `linalg::DataMat`: the native
+// engine's fused kernels dispatch per shard, the XLA engine requires
+// dense shards and fails fast on CSR (see `xla_engine` docs).
+
 use crate::problem::{BatchPlan, EncodedProblem};
 use anyhow::Result;
 
@@ -178,10 +182,25 @@ pub trait ComputeEngine: Send {
     fn workers(&self) -> usize;
 }
 
-/// Build an engine over the problem's shards.
+/// Build an engine over the problem's shards (native engine at its
+/// default thread bound — available parallelism).
 pub fn build_engine(kind: EngineKind, prob: &EncodedProblem) -> Result<Box<dyn ComputeEngine>> {
+    build_engine_with(kind, prob, 0)
+}
+
+/// [`build_engine`] with an explicit worker fan-out thread cap for the
+/// native engine (`0` = available parallelism — the default). The XLA
+/// engine ignores `threads`: its parallelism lives inside PJRT.
+pub fn build_engine_with(
+    kind: EngineKind,
+    prob: &EncodedProblem,
+    threads: usize,
+) -> Result<Box<dyn ComputeEngine>> {
     Ok(match kind {
-        EngineKind::Native => Box::new(NativeEngine::new(prob)),
+        EngineKind::Native => {
+            let eng = NativeEngine::new(prob);
+            Box::new(if threads > 0 { eng.with_threads(threads) } else { eng })
+        }
         EngineKind::Xla => Box::new(XlaEngine::new(prob, artifacts::default_dir())?),
     })
 }

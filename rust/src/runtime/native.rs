@@ -13,13 +13,15 @@
 
 use super::stream::{CurvCollector, GradCollector};
 use super::ComputeEngine;
-use crate::linalg::{self, Mat};
+use crate::linalg::{self, DataMat};
 use crate::problem::{BatchPlan, EncodedProblem};
 use anyhow::Result;
 
 /// One worker's staged data + scratch (no allocation on the hot path).
+/// The shard keeps whatever storage backend the partitioner produced —
+/// the fused kernels are storage-dispatched inside [`DataMat`].
 struct Slot {
-    x: Mat,
+    x: DataMat,
     y: Vec<f64>,
     grad_buf: Vec<f64>,
     resid_buf: Vec<f64>,
@@ -386,6 +388,41 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "worker {i}");
             }
             assert!(ms >= 0.0);
+        }
+    }
+
+    #[test]
+    fn sparse_shards_match_dense_engine_bitwise() {
+        // storage obliviousness at the engine boundary: identical worker
+        // payloads, dense vs CSR shards, down to the last bit
+        use crate::linalg::StorageKind;
+        let prob = QuadProblem::synthetic_gaussian(64, 6, 0.0, 1);
+        let make = |storage| {
+            EncodedProblem::encode_stored(&prob, EncoderKind::Identity, 1.0, 8, 2, storage)
+                .unwrap()
+        };
+        let (dense_enc, sparse_enc) = (make(StorageKind::Dense), make(StorageKind::Sparse));
+        assert!(sparse_enc.shards.iter().all(|s| s.x.is_sparse()));
+        let mut ed = NativeEngine::new(&dense_enc);
+        let mut es = NativeEngine::new(&sparse_enc);
+        let w = vec![0.3; 6];
+        for i in 0..8 {
+            let (gd, fd) = ed.worker_grad(i, &w).unwrap();
+            let (gs, fs) = es.worker_grad(i, &w).unwrap();
+            assert_eq!(fd.to_bits(), fs.to_bits(), "worker {i} objective");
+            for (a, b) in gd.iter().zip(&gs) {
+                assert_eq!(a.to_bits(), b.to_bits(), "worker {i} gradient");
+            }
+            let qd = ed.linesearch(i, &w).unwrap();
+            let qs = es.linesearch(i, &w).unwrap();
+            assert_eq!(qd.to_bits(), qs.to_bits(), "worker {i} curvature");
+            let rows = dense_enc.shards[i].rows_real;
+            let (gbd, fbd) = ed.worker_grad_batch(i, &w, &[(2, rows.min(5))]).unwrap();
+            let (gbs, fbs) = es.worker_grad_batch(i, &w, &[(2, rows.min(5))]).unwrap();
+            assert_eq!(fbd.to_bits(), fbs.to_bits(), "worker {i} batch objective");
+            for (a, b) in gbd.iter().zip(&gbs) {
+                assert_eq!(a.to_bits(), b.to_bits(), "worker {i} batch gradient");
+            }
         }
     }
 

@@ -14,6 +14,11 @@
 //! both outputs. Missing shapes are a hard startup error (fail fast, not
 //! mid-run).
 //!
+//! **Storage:** the artifacts are dense-shaped, so the engine stages
+//! dense shards only and fails fast at construction when the encoded
+//! problem holds CSR shards (`--storage sparse` is a native-engine
+//! feature; batch-shaped sparse artifacts are a listed follow-up).
+//!
 //! **Mini-batch rounds:** the AOT artifacts are fixed full-shard shapes,
 //! so the engine inherits the trait's failing default for
 //! `worker_grad_batch`/`worker_grad_batch_streamed` — `CodedSgd` with
@@ -201,9 +206,18 @@ mod imp {
             let manifest = Manifest::load(&dir)?;
             let p = prob.p();
             // Round every shard up to its artifact bucket (zero-pad = exact).
+            // The AOT artifacts are dense-shaped: CSR shards fail fast here
+            // (re-encode with --storage dense, or use the native engine).
             let mut shards = Vec::with_capacity(prob.shards.len());
             for (i, s) in prob.shards.iter().enumerate() {
-                let rows = s.x.rows();
+                let dense = s.x.as_dense().ok_or_else(|| {
+                    anyhow!(
+                        "worker {i}: XLA engine requires dense shard storage \
+                         (shards are CSR; re-encode with --storage dense or \
+                         use --engine native)"
+                    )
+                })?;
+                let rows = dense.rows();
                 let bucket = manifest.grad_bucket(rows, p).with_context(|| {
                     format!(
                         "worker {i}: no worker_grad artifact bucket for rows={rows}, p={p} \
@@ -211,7 +225,7 @@ mod imp {
                         manifest.grad_shapes()
                     )
                 })?;
-                let padded = s.x.pad_rows(bucket);
+                let padded = dense.pad_rows(bucket);
                 let mut y32: Vec<f32> = s.y.iter().map(|&v| v as f32).collect();
                 y32.resize(bucket, 0.0);
                 shards.push((padded.to_f32(), y32, bucket));
