@@ -1,0 +1,187 @@
+//! fig_adversarial — convergence under *scripted* straggler regimes.
+//!
+//! The Fig. 4 benches draw i.i.d. delays; this sweep drives the same
+//! schemes through the deterministic scenario engine instead: the
+//! adversarial rotating-(m−k) straggler set from Theorem 1's
+//! "arbitrarily varying subset" claim (`admit:rotate:k`), a correlated
+//! rack-wide slowdown, and crash/recover churn. Expected shapes: the
+//! coded scheme's convergence is essentially indifferent to *which*
+//! subset responds — rotating worst-case vs i.i.d. changes little —
+//! while uncoded is yanked off the optimum whenever the rotation
+//! excludes dominant data, and replication degrades when both copies of
+//! a partition are scripted out.
+//!
+//! Run: `cargo bench --bench fig_adversarial`. Per-round CSV traces
+//! (event-annotated `events` column included) land under
+//! `target/fig_adversarial/`; `FIG_ADV_OUT=dir` overrides.
+
+use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, Scenario};
+use codedopt::encoding::EncoderKind;
+use codedopt::linalg::Mat;
+use codedopt::optim::{CodedGd, CodedSgd, GdConfig, Optimizer, RunOutput, SgdConfig};
+use codedopt::problem::{EncodedProblem, QuadProblem};
+use codedopt::rng::Pcg64;
+use codedopt::runtime::NativeEngine;
+
+struct SchemeSpec {
+    label: &'static str,
+    kind: EncoderKind,
+    beta: f64,
+}
+
+/// Heterogeneous ridge problem: a 10x-scaled "heavy" block on worker 0's
+/// shard whose targets contradict the light rows — the workload where
+/// losing specific subsets actually hurts.
+fn heterogeneous_problem(n: usize, p: usize) -> QuadProblem {
+    let heavy = n / 8;
+    let mut rng = Pcg64::new(77, 0xadba);
+    let w0: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+    let x = Mat::from_fn(n, p, |i, _| {
+        let g = rng.next_gaussian();
+        if i < heavy {
+            10.0 * g
+        } else {
+            g
+        }
+    });
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let t: f64 = x.row(i).iter().zip(&w0).map(|(a, b)| a * b).sum();
+            if i < heavy {
+                -t
+            } else {
+                t
+            }
+        })
+        .collect();
+    QuadProblem::new(x, y, 0.01)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_case(
+    prob: &QuadProblem,
+    scheme: &SchemeSpec,
+    optimizer: &str,
+    m: usize,
+    k: usize,
+    iters: usize,
+    scenario: Option<&str>,
+    seed: u64,
+) -> RunOutput {
+    let enc = EncodedProblem::encode(prob, scheme.kind, scheme.beta, m, seed).expect("encode");
+    let engine = Box::new(NativeEngine::new(&enc));
+    let cfg = ClusterConfig {
+        workers: m,
+        wait_for: k,
+        delay: DelayModel::Exp { mean_ms: 10.0 },
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed,
+    };
+    let mut cluster = Cluster::new(&enc, engine, cfg).expect("cluster");
+    if let Some(dsl) = scenario {
+        cluster.set_scenario(Scenario::parse(dsl).expect("scenario")).expect("attach");
+    }
+    match optimizer {
+        "gd" => CodedGd::new(GdConfig { seed, ..Default::default() })
+            .run(&enc, &mut cluster, iters)
+            .expect("run"),
+        "sgd" => CodedSgd::new(SgdConfig { batch_frac: 0.5, seed, ..Default::default() })
+            .run(&enc, &mut cluster, iters)
+            .expect("run"),
+        other => panic!("unknown optimizer {other}"),
+    }
+}
+
+fn main() {
+    let (n, p) = (512usize, 16usize);
+    let (m, k, iters) = (8usize, 6usize, 240usize);
+    let out_dir =
+        std::env::var("FIG_ADV_OUT").unwrap_or_else(|_| "target/fig_adversarial".to_string());
+    std::fs::create_dir_all(&out_dir).expect("creating output dir");
+
+    println!(
+        "=== fig_adversarial: scripted straggler regimes — heterogeneous ridge \
+         (n={n}, p={p}), m={m}, k={k}, {iters} rounds ==="
+    );
+    let prob = heterogeneous_problem(n, p);
+    let f0 = prob.objective(&vec![0.0; p]);
+    let f_star = prob.exact_solution().map(|w| prob.objective(&w)).unwrap_or(f64::NAN);
+    println!("f(0) = {f0:.4e}, f* = {f_star:.4e}");
+
+    let schemes = [
+        SchemeSpec { label: "hadamard", kind: EncoderKind::Hadamard, beta: 2.0 },
+        SchemeSpec { label: "uncoded", kind: EncoderKind::Identity, beta: 1.0 },
+        SchemeSpec { label: "replication", kind: EncoderKind::Replication, beta: 2.0 },
+    ];
+    let regimes: [(&str, Option<&str>); 4] = [
+        ("iid-exp10", None),
+        ("rotate-k", Some("admit:rotate:k")),
+        ("rack-slow", Some("rack:0-3:6@40")),
+        ("churn", Some("crash:1@30,recover:1@90,crash:5@120,recover:5@180")),
+    ];
+
+    let mut coded_rotate_gap = f64::NAN;
+    let mut coded_iid_gap = f64::NAN;
+    let mut uncoded_rotate_worst = f64::NAN;
+    let mut coded_rotate_worst = f64::NAN;
+
+    for optimizer in ["gd", "sgd"] {
+        println!("\n--- optimizer: {optimizer} ---");
+        println!(
+            "{:<12} {:<10} {:>12} {:>12} {:>12} {:>9}",
+            "scheme", "regime", "best_gap", "worst_cycle", "sim_ms", "diverged"
+        );
+        for scheme in &schemes {
+            for (rlabel, dsl) in &regimes {
+                let out = run_case(&prob, scheme, optimizer, m, k, iters, *dsl, 1);
+                let best_gap = out.trace.best_objective() - f_star;
+                let worst_cycle = out
+                    .trace
+                    .records
+                    .iter()
+                    .rev()
+                    .take(m)
+                    .map(|r| r.f_true - f_star)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                println!(
+                    "{:<12} {:<10} {:>12.4e} {:>12.4e} {:>12.1} {:>9}",
+                    scheme.label,
+                    rlabel,
+                    best_gap,
+                    worst_cycle,
+                    out.trace.total_sim_ms(),
+                    out.trace.diverged()
+                );
+                let path = format!("{out_dir}/{optimizer}_{}_{rlabel}.csv", scheme.label);
+                std::fs::write(&path, out.trace.to_csv()).expect("writing csv");
+                if optimizer == "gd" && scheme.label == "hadamard" {
+                    match *rlabel {
+                        "rotate-k" => {
+                            coded_rotate_gap = best_gap;
+                            coded_rotate_worst = worst_cycle;
+                        }
+                        "iid-exp10" => coded_iid_gap = best_gap,
+                        _ => {}
+                    }
+                }
+                if optimizer == "gd" && scheme.label == "uncoded" && *rlabel == "rotate-k" {
+                    uncoded_rotate_worst = worst_cycle;
+                }
+            }
+        }
+    }
+
+    println!();
+    println!(
+        "[check] coded is subset-indifferent: rotate-k best gap {coded_rotate_gap:.3e} \
+         within 10x of iid {coded_iid_gap:.3e}: {}",
+        if coded_rotate_gap < 10.0 * coded_iid_gap.abs().max(1e-12) { "OK" } else { "MISMATCH" }
+    );
+    println!(
+        "[check] adversarial rotation separates the schemes: uncoded worst-cycle \
+         {uncoded_rotate_worst:.3e} above coded {coded_rotate_worst:.3e}: {}",
+        if uncoded_rotate_worst > coded_rotate_worst { "OK" } else { "MISMATCH" }
+    );
+    println!("[done] per-round CSVs (event-annotated) in {out_dir}/");
+}

@@ -12,7 +12,8 @@ pub mod args;
 
 pub use args::Args;
 
-use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
+use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, Scenario};
+use crate::config::Json;
 use crate::encoding::EncoderKind;
 use crate::linalg::StorageKind;
 use crate::optim::{
@@ -42,7 +43,14 @@ SUBCOMMANDS
                                sparse forces CSR (errors for densifying
                                encoders; the xla engine needs dense)
     --threads 0     native-engine worker fan-out cap (0 = all cores)
-    --csv <path>    write the per-iteration trace as CSV
+    --scenario DSL  deterministic fault script layered over --delay, e.g.
+                    crash:3@10,recover:3@25;admit:rotate:k
+                    (events crash|recover|leave|join|slow|rack + an optional
+                    admit: policy forcing exact admitted subsets)
+    --scenario-json <path>  same scenario from a JSON file
+                    ({\"events\": [...], \"admit\": \"...\"})
+    --csv <path>    write the per-iteration trace as CSV (includes the
+                    event-annotated `events` column)
     SGD-only flags (--optimizer sgd):
     --batch-frac 0.1           per-round block-row mini-batch fraction (0,1];
                                1.0 reproduces gd's iterates bit for bit
@@ -119,6 +127,20 @@ fn cmd_ridge(args: &Args) -> Result<()> {
     let clock = ClockMode::parse(args.flag_str("clock", "virtual"))?;
     let storage = StorageKind::parse(args.flag_str("storage", "auto"))?;
     let threads = args.flag_usize("threads", 0)?;
+    let scenario = match (args.flag("scenario"), args.flag("scenario-json")) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("--scenario and --scenario-json are mutually exclusive")
+        }
+        (Some(dsl), None) => Some(Scenario::parse(dsl)?),
+        (None, Some(path)) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading scenario file {path}"))?;
+            Some(Scenario::from_json(
+                &Json::parse(&text).with_context(|| format!("parsing {path}"))?,
+            )?)
+        }
+        (None, None) => None,
+    };
     // --optimizer is canonical; --algo stays as the historical alias
     let algo = args.flag("optimizer").unwrap_or_else(|| args.flag_str("algo", "lbfgs"));
 
@@ -144,6 +166,10 @@ fn cmd_ridge(args: &Args) -> Result<()> {
         seed,
     };
     let mut cluster = Cluster::new(&enc, engine, ccfg)?;
+    if let Some(sc) = scenario {
+        println!("# scenario: {sc}");
+        cluster.set_scenario(sc)?;
+    }
     let out = match algo {
         "gd" => CodedGd::new(GdConfig { seed, ..Default::default() }).run(&enc, &mut cluster, iters)?,
         "lbfgs" => {
@@ -197,6 +223,13 @@ fn cmd_ridge(args: &Args) -> Result<()> {
 
 fn cmd_mf(args: &Args) -> Result<()> {
     use crate::mf::{synthetic_movielens, train, MfConfig, SyntheticConfig};
+    if args.flag("scenario").is_some() || args.flag("scenario-json").is_some() {
+        anyhow::bail!(
+            "--scenario is not supported by `mf`: the MF pipeline spins up many \
+             short-lived subsolver clusters, so one round-indexed script has no \
+             single cluster to attach to; use `ridge` for scenario runs"
+        );
+    }
     let seed = args.flag_u64("seed", 0)?;
     let scfg = SyntheticConfig {
         n_users: args.flag_usize("users", 240)?,
@@ -425,6 +458,59 @@ mod tests {
             "--algo", "sgd", "--batch-frac", "1.0",
         ])
         .unwrap();
+    }
+
+    #[test]
+    fn tiny_ridge_scenario_runs() {
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "6",
+            "--scenario", "crash:1@2,recover:1@4;admit:rotate:k",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn ridge_scenario_json_file_runs() {
+        let dir = std::env::temp_dir().join("codedopt_cli_scenario_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("scenario.json");
+        std::fs::write(&path, "{\"events\": [\"slow:0:4@1\"], \"admit\": \"fixed:1.2\"}")
+            .unwrap();
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "4",
+            "--scenario-json", path.to_str().unwrap(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn ridge_rejects_bad_scenario() {
+        assert!(run(&[
+            "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "3", "--iters", "1",
+            "--scenario", "explode:1@2",
+        ])
+        .is_err());
+        // out-of-range worker caught at attach time
+        assert!(run(&[
+            "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "3", "--iters", "1",
+            "--scenario", "crash:9@2",
+        ])
+        .is_err());
+        // mutually exclusive sources
+        assert!(run(&[
+            "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "3", "--iters", "1",
+            "--scenario", "crash:1@2", "--scenario-json", "nope.json",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn mf_rejects_scenario_flags() {
+        assert!(run(&[
+            "mf", "--users", "20", "--items", "10", "--ratings", "100", "--epochs", "1",
+            "--scenario", "crash:1@2",
+        ])
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,762 @@
+//! Deterministic fault-injection scenarios: scripted per-round,
+//! per-worker events layered over the [`Cluster`]'s delay models.
+//!
+//! Every [`DelayModel`](super::DelayModel) draws i.i.d. random delays, so
+//! i.i.d. stragglers are the *only* regime the simulator could exercise —
+//! yet the paper's central claim is convergence "using an arbitrarily
+//! varying subset of the nodes at each iteration", and the adversarial /
+//! correlated regimes (rotating worst-case stragglers, rack-wide slowdowns,
+//! crash-recover churn) are exactly what the authors' JMLR follow-up and
+//! the gradient-coding literature stress. A [`Scenario`] closes that gap:
+//! a deterministic script of [`FaultEvent`]s plus an optional
+//! [`AdmitPolicy`] that forces an exact admitted-subset sequence,
+//! attached to a cluster via
+//! [`Cluster::set_scenario`](super::Cluster::set_scenario).
+//!
+//! Scenarios come from a small text DSL (one `--scenario` flag) or from
+//! JSON via [`config::Json`](crate::config::Json), and both forms
+//! round-trip: `parse(x.to_string()) == x` and
+//! `from_json(parse(to_json())) == x`. Under
+//! [`ClockMode::Virtual`](super::ClockMode) a scenario run is bit-for-bit
+//! replayable from the scenario string alone (pinned by
+//! `rust/tests/fault_scenarios.rs`).
+//!
+//! # DSL grammar
+//!
+//! A scenario is `;`-separated sections; each section is either a
+//! `,`-separated event list or a single `admit:` clause (at most one):
+//!
+//! | atom | meaning |
+//! |------|---------|
+//! | `crash:W@R` | worker `W` fail-stops from round `R` (never responds) |
+//! | `recover:W@R` | worker `W` rejoins at round `R` (also clears its slow factor) |
+//! | `leave:W@R` / `join:W@R` | membership churn — same effect as crash/recover, distinct trace label |
+//! | `slow:W:F@R` | worker `W`'s delay is multiplied by `F` from round `R` (slow-onset: chain several) |
+//! | `rack:LO-HI:F@R` | correlated rack-wide straggling — workers `LO..=HI` all slowed by `F` from round `R` |
+//! | `admit:rotate:K` | round `t` admits exactly `{(t+j) mod m : j < K}` — the adversarial rotating-(m−K) worst case; `K` may be the literal `k` (the cluster's `wait_for`) |
+//! | `admit:fixed:W.W...` | every round admits exactly the listed workers (`.`-separated) |
+//! | `admit:cycle:SET/SET...` | round `t` admits exactly `SET[t mod len]`, each set `.`-separated |
+//!
+//! Example: `crash:3@10,recover:3@25;admit:rotate:k`.
+//!
+//! Rounds are **cluster rounds** (each gradient, mini-batch, or
+//! line-search round advances the script by one), 0-based from the moment
+//! the scenario is attached. Crash events override everything: a crashed
+//! worker never responds even when an `admit:` clause lists it (the
+//! admitted set shrinks — the defined empty-round behavior when everyone
+//! is gone). Slow factors scale the *virtual* arrival schedule (compute
+//! cost model); under the measured clock they are ignored like all
+//! injected delay magnitudes, while crash/admit scripting still applies
+//! through response eligibility and cancellation.
+
+use crate::config::Json;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::fmt;
+
+/// One scripted event: something that happens to one worker (or one rack
+/// of workers) at the start of a specific round.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// `crash:W@R` — fail-stop: the worker never responds from round `R`.
+    Crash {
+        /// Worker index.
+        worker: usize,
+        /// 0-based cluster round the event fires at.
+        round: u64,
+    },
+    /// `recover:W@R` — the worker responds again (slow factor reset).
+    Recover {
+        /// Worker index.
+        worker: usize,
+        /// 0-based cluster round the event fires at.
+        round: u64,
+    },
+    /// `leave:W@R` — membership churn; same effect as crash, distinct
+    /// label in the event-annotated trace.
+    Leave {
+        /// Worker index.
+        worker: usize,
+        /// 0-based cluster round the event fires at.
+        round: u64,
+    },
+    /// `join:W@R` — membership churn; same effect as recover.
+    Join {
+        /// Worker index.
+        worker: usize,
+        /// 0-based cluster round the event fires at.
+        round: u64,
+    },
+    /// `slow:W:F@R` — the worker's injected delay (and virtual arrival
+    /// cost) is multiplied by `F` from round `R` until recover/join or a
+    /// later `slow:` overwrites it. Chain several with increasing `F` for
+    /// slow-onset degradation.
+    Slow {
+        /// Worker index.
+        worker: usize,
+        /// Delay multiplier (finite, > 0; 1 restores nominal speed).
+        factor: f64,
+        /// 0-based cluster round the event fires at.
+        round: u64,
+    },
+    /// `rack:LO-HI:F@R` — correlated straggling: every worker in
+    /// `LO..=HI` is slowed by `F` from round `R`.
+    Rack {
+        /// First worker of the rack (inclusive).
+        lo: usize,
+        /// Last worker of the rack (inclusive).
+        hi: usize,
+        /// Delay multiplier applied to the whole rack.
+        factor: f64,
+        /// 0-based cluster round the event fires at.
+        round: u64,
+    },
+}
+
+impl FaultEvent {
+    /// The 0-based cluster round this event fires at.
+    pub fn round(&self) -> u64 {
+        match self {
+            FaultEvent::Crash { round, .. }
+            | FaultEvent::Recover { round, .. }
+            | FaultEvent::Leave { round, .. }
+            | FaultEvent::Join { round, .. }
+            | FaultEvent::Slow { round, .. }
+            | FaultEvent::Rack { round, .. } => *round,
+        }
+    }
+
+    /// Parse one event atom of the DSL (grammar table in the module docs).
+    pub fn parse(s: &str) -> Result<Self> {
+        let (kind, rest) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("fault event {s:?}: expected KIND:...@ROUND"))?;
+        let at = |body: &str| -> Result<(String, u64)> {
+            let (head, round) = body
+                .rsplit_once('@')
+                .ok_or_else(|| anyhow!("fault event {s:?}: missing @ROUND"))?;
+            let round = round
+                .parse::<u64>()
+                .map_err(|e| anyhow!("fault event {s:?}: round: {e}"))?;
+            Ok((head.to_string(), round))
+        };
+        let worker = |tok: &str| -> Result<usize> {
+            tok.parse::<usize>()
+                .map_err(|e| anyhow!("fault event {s:?}: worker: {e}"))
+        };
+        let factor = |tok: &str| -> Result<f64> {
+            let f = tok
+                .parse::<f64>()
+                .map_err(|e| anyhow!("fault event {s:?}: factor: {e}"))?;
+            ensure!(
+                f.is_finite() && f > 0.0,
+                "fault event {s:?}: factor must be positive and finite"
+            );
+            Ok(f)
+        };
+        match kind {
+            "crash" | "recover" | "leave" | "join" => {
+                let (w, round) = at(rest)?;
+                let worker = worker(&w)?;
+                Ok(match kind {
+                    "crash" => FaultEvent::Crash { worker, round },
+                    "recover" => FaultEvent::Recover { worker, round },
+                    "leave" => FaultEvent::Leave { worker, round },
+                    _ => FaultEvent::Join { worker, round },
+                })
+            }
+            "slow" => {
+                let (body, round) = at(rest)?;
+                let (w, f) = body
+                    .split_once(':')
+                    .ok_or_else(|| anyhow!("fault event {s:?}: expected slow:W:F@R"))?;
+                Ok(FaultEvent::Slow { worker: worker(w)?, factor: factor(f)?, round })
+            }
+            "rack" => {
+                let (body, round) = at(rest)?;
+                let (range, f) = body
+                    .split_once(':')
+                    .ok_or_else(|| anyhow!("fault event {s:?}: expected rack:LO-HI:F@R"))?;
+                let (lo, hi) = range
+                    .split_once('-')
+                    .ok_or_else(|| anyhow!("fault event {s:?}: expected worker range LO-HI"))?;
+                let (lo, hi) = (worker(lo)?, worker(hi)?);
+                ensure!(lo <= hi, "fault event {s:?}: range must have LO <= HI");
+                Ok(FaultEvent::Rack { lo, hi, factor: factor(f)?, round })
+            }
+            other => bail!(
+                "unknown fault event kind {other:?} \
+                 (crash|recover|leave|join|slow|rack)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for FaultEvent {
+    /// Emits the exact [`FaultEvent::parse`] grammar (round-trip contract).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultEvent::Crash { worker, round } => write!(f, "crash:{worker}@{round}"),
+            FaultEvent::Recover { worker, round } => write!(f, "recover:{worker}@{round}"),
+            FaultEvent::Leave { worker, round } => write!(f, "leave:{worker}@{round}"),
+            FaultEvent::Join { worker, round } => write!(f, "join:{worker}@{round}"),
+            FaultEvent::Slow { worker, factor, round } => {
+                write!(f, "slow:{worker}:{factor}@{round}")
+            }
+            FaultEvent::Rack { lo, hi, factor, round } => {
+                write!(f, "rack:{lo}-{hi}:{factor}@{round}")
+            }
+        }
+    }
+}
+
+/// How the leader's admitted set is decided each round.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum AdmitPolicy {
+    /// The cluster's normal first-k-by-arrival gather (no override).
+    #[default]
+    FirstK,
+    /// Round `t` admits exactly `{(t + j) mod m : j < K}` — the rotating
+    /// window whose complement is the adversarial rotating-(m−K)
+    /// straggler set from Theorem 1's "arbitrarily varying subset" claim.
+    Rotate {
+        /// Window size; `None` is the literal `k` (resolved to the
+        /// cluster's `wait_for` when the scenario is attached).
+        k: Option<usize>,
+    },
+    /// Every round admits exactly this worker set.
+    Fixed {
+        /// The scripted admitted set.
+        workers: Vec<usize>,
+    },
+    /// Round `t` admits exactly `sets[t mod sets.len()]`.
+    Cycle {
+        /// The scripted admitted-set sequence, cycled.
+        sets: Vec<Vec<usize>>,
+    },
+}
+
+fn parse_id_list(s: &str, ctx: &str) -> Result<Vec<usize>> {
+    ensure!(!s.is_empty(), "{ctx}: empty worker list");
+    s.split('.')
+        .map(|tok| tok.parse::<usize>().map_err(|e| anyhow!("{ctx}: worker {tok:?}: {e}")))
+        .collect()
+}
+
+impl AdmitPolicy {
+    /// Parse the clause body after `admit:` (grammar in the module docs).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.split_once(':') {
+            None if s == "first-k" => Ok(AdmitPolicy::FirstK),
+            Some(("rotate", "k")) => Ok(AdmitPolicy::Rotate { k: None }),
+            Some(("rotate", tok)) => {
+                let k = tok
+                    .parse::<usize>()
+                    .map_err(|e| anyhow!("admit:rotate:{tok}: {e}"))?;
+                ensure!(k >= 1, "admit:rotate: window must be >= 1");
+                Ok(AdmitPolicy::Rotate { k: Some(k) })
+            }
+            Some(("fixed", tok)) => {
+                Ok(AdmitPolicy::Fixed { workers: parse_id_list(tok, "admit:fixed")? })
+            }
+            Some(("cycle", tok)) => {
+                let sets = tok
+                    .split('/')
+                    .map(|set| parse_id_list(set, "admit:cycle"))
+                    .collect::<Result<Vec<_>>>()?;
+                ensure!(!sets.is_empty(), "admit:cycle: no sets");
+                Ok(AdmitPolicy::Cycle { sets })
+            }
+            _ => bail!(
+                "unknown admit policy {s:?} \
+                 (first-k | rotate:K|k | fixed:W.W... | cycle:SET/SET...)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for AdmitPolicy {
+    /// Emits the exact [`AdmitPolicy::parse`] grammar.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmitPolicy::FirstK => write!(f, "first-k"),
+            AdmitPolicy::Rotate { k: None } => write!(f, "rotate:k"),
+            AdmitPolicy::Rotate { k: Some(k) } => write!(f, "rotate:{k}"),
+            AdmitPolicy::Fixed { workers } => {
+                write!(f, "fixed:")?;
+                for (i, w) in workers.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ".")?;
+                    }
+                    write!(f, "{w}")?;
+                }
+                Ok(())
+            }
+            AdmitPolicy::Cycle { sets } => {
+                write!(f, "cycle:")?;
+                for (i, set) in sets.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, "/")?;
+                    }
+                    for (j, w) in set.iter().enumerate() {
+                        if j > 0 {
+                            write!(f, ".")?;
+                        }
+                        write!(f, "{w}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// A complete deterministic scenario: the event script plus the
+/// admitted-set policy. Attach with
+/// [`Cluster::set_scenario`](super::Cluster::set_scenario).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Scenario {
+    /// Scripted events, applied at the start of their round in list order
+    /// (later events win on conflicts within one round).
+    pub events: Vec<FaultEvent>,
+    /// Admitted-set policy ([`AdmitPolicy::FirstK`] = no override).
+    pub admit: AdmitPolicy,
+}
+
+impl Scenario {
+    /// Parse the full DSL (`;`-separated sections; see the module docs).
+    pub fn parse(s: &str) -> Result<Self> {
+        ensure!(!s.trim().is_empty(), "empty scenario");
+        let mut events = Vec::new();
+        let mut admit: Option<AdmitPolicy> = None;
+        for section in s.split(';') {
+            let section = section.trim();
+            ensure!(!section.is_empty(), "scenario {s:?}: empty section");
+            if let Some(body) = section.strip_prefix("admit:") {
+                ensure!(admit.is_none(), "scenario {s:?}: multiple admit clauses");
+                admit = Some(AdmitPolicy::parse(body)?);
+            } else {
+                for atom in section.split(',') {
+                    let atom = atom.trim();
+                    ensure!(!atom.is_empty(), "scenario {s:?}: empty event");
+                    events.push(FaultEvent::parse(atom)?);
+                }
+            }
+        }
+        Ok(Scenario { events, admit: admit.unwrap_or_default() })
+    }
+
+    /// Check every referenced worker index against a cluster of `m`
+    /// workers (also rejects duplicate ids inside one admitted set and
+    /// `rotate` windows wider than the cluster).
+    pub fn validate(&self, m: usize) -> Result<()> {
+        let check = |w: usize| -> Result<()> {
+            ensure!(w < m, "scenario references worker {w} but the cluster has {m}");
+            Ok(())
+        };
+        for e in &self.events {
+            match e {
+                FaultEvent::Crash { worker, .. }
+                | FaultEvent::Recover { worker, .. }
+                | FaultEvent::Leave { worker, .. }
+                | FaultEvent::Join { worker, .. }
+                | FaultEvent::Slow { worker, .. } => check(*worker)?,
+                FaultEvent::Rack { lo, hi, .. } => {
+                    check(*lo)?;
+                    check(*hi)?;
+                }
+            }
+        }
+        let check_set = |set: &[usize]| -> Result<()> {
+            ensure!(!set.is_empty(), "admit: empty worker set");
+            let mut seen = vec![false; m];
+            for &w in set {
+                check(w)?;
+                ensure!(!seen[w], "admit: duplicate worker {w} in one set");
+                seen[w] = true;
+            }
+            Ok(())
+        };
+        match &self.admit {
+            AdmitPolicy::FirstK => {}
+            AdmitPolicy::Rotate { k } => {
+                if let Some(k) = k {
+                    ensure!(
+                        *k >= 1 && *k <= m,
+                        "admit:rotate:{k} window must be in 1..={m}"
+                    );
+                }
+            }
+            AdmitPolicy::Fixed { workers } => check_set(workers)?,
+            AdmitPolicy::Cycle { sets } => {
+                for set in sets {
+                    check_set(set)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the JSON config form; round-trips through
+    /// [`Scenario::from_json`]. Event atoms and the admit clause reuse
+    /// the DSL grammar inside JSON strings, so the two surfaces cannot
+    /// drift apart.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\"events\": [");
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push('"');
+            s.push_str(&e.to_string());
+            s.push('"');
+        }
+        s.push_str(&format!("], \"admit\": \"{}\"}}", self.admit));
+        s
+    }
+
+    /// Deserialize from a parsed JSON object: `events` is an optional
+    /// array of event-atom strings, `admit` an optional admit-clause
+    /// string (both in the DSL grammar).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        ensure!(matches!(j, Json::Obj(_)), "scenario: expected a JSON object");
+        let mut out = Scenario::default();
+        if let Some(v) = j.get("events") {
+            let Json::Arr(items) = v else {
+                bail!("scenario: events must be an array of strings");
+            };
+            for item in items {
+                let atom = item
+                    .as_str()
+                    .ok_or_else(|| anyhow!("scenario: events entries must be strings"))?;
+                out.events.push(FaultEvent::parse(atom)?);
+            }
+        }
+        if let Some(v) = j.get("admit") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("scenario: admit must be a string"))?;
+            out.admit = AdmitPolicy::parse(s)?;
+        }
+        Ok(out)
+    }
+}
+
+impl fmt::Display for Scenario {
+    /// Emits the exact [`Scenario::parse`] DSL (the `admit:` clause is
+    /// omitted for the default first-k policy).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{e}")?;
+        }
+        if self.admit != AdmitPolicy::FirstK {
+            if !self.events.is_empty() {
+                write!(f, ";")?;
+            }
+            write!(f, "admit:{}", self.admit)?;
+        }
+        Ok(())
+    }
+}
+
+/// What the scenario dictates for one specific round, consumed by the
+/// cluster's round machinery.
+#[derive(Clone, Debug)]
+pub struct RoundScript {
+    /// Labels of the events that fired at the start of this round (the
+    /// event-annotated-trace payload; empty on quiet rounds).
+    pub labels: Vec<String>,
+    /// Per-worker crashed mask after applying this round's events.
+    pub crashed: Vec<bool>,
+    /// Per-worker delay multipliers after applying this round's events.
+    pub slow: Vec<f64>,
+    /// Exact admitted-set override (`None` = normal first-k gather).
+    /// Crashed / failed workers listed here are dropped by the cluster —
+    /// the admitted set shrinks rather than deadlocking.
+    pub admit: Option<Vec<usize>>,
+}
+
+/// The runtime state of an attached scenario: the script plus the
+/// current crashed/slow masks and the round counter.
+#[derive(Clone, Debug)]
+pub struct ScenarioState {
+    scenario: Scenario,
+    m: usize,
+    /// Resolved rotate window (0 when the policy is not `Rotate`).
+    rotate_k: usize,
+    crashed: Vec<bool>,
+    slow: Vec<f64>,
+    round: u64,
+}
+
+impl ScenarioState {
+    /// Validate `scenario` against a cluster of `m` workers waiting for
+    /// `wait_for` responses, and stage it at round 0.
+    pub fn new(scenario: Scenario, m: usize, wait_for: usize) -> Result<Self> {
+        scenario.validate(m)?;
+        let rotate_k = match scenario.admit {
+            AdmitPolicy::Rotate { k } => k.unwrap_or(wait_for).min(m),
+            _ => 0,
+        };
+        Ok(ScenarioState {
+            scenario,
+            m,
+            rotate_k,
+            crashed: vec![false; m],
+            slow: vec![1.0; m],
+            round: 0,
+        })
+    }
+
+    /// The scenario this state runs.
+    pub fn scenario(&self) -> &Scenario {
+        &self.scenario
+    }
+
+    /// Re-resolve the literal-`k` rotate window against a new `wait_for`
+    /// (called when the cluster's k changes between runs, e.g. η sweeps
+    /// reusing one staged cluster). Explicit `rotate:K` windows are
+    /// unaffected.
+    pub fn set_wait_for(&mut self, wait_for: usize) {
+        if let AdmitPolicy::Rotate { k } = self.scenario.admit {
+            self.rotate_k = k.unwrap_or(wait_for).min(self.m);
+        }
+    }
+
+    /// 0-based index of the next round to run.
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Apply this round's events and return the round's script; advances
+    /// the round counter. Called once per cluster round, in round order.
+    pub fn begin_round(&mut self) -> RoundScript {
+        let t = self.round;
+        let mut labels = Vec::new();
+        for e in &self.scenario.events {
+            if e.round() != t {
+                continue;
+            }
+            labels.push(e.to_string());
+            match *e {
+                FaultEvent::Crash { worker, .. } | FaultEvent::Leave { worker, .. } => {
+                    self.crashed[worker] = true;
+                }
+                FaultEvent::Recover { worker, .. } | FaultEvent::Join { worker, .. } => {
+                    self.crashed[worker] = false;
+                    self.slow[worker] = 1.0;
+                }
+                FaultEvent::Slow { worker, factor, .. } => self.slow[worker] = factor,
+                FaultEvent::Rack { lo, hi, factor, .. } => {
+                    for w in lo..=hi {
+                        self.slow[w] = factor;
+                    }
+                }
+            }
+        }
+        let admit = match &self.scenario.admit {
+            AdmitPolicy::FirstK => None,
+            AdmitPolicy::Rotate { .. } => {
+                Some((0..self.rotate_k).map(|j| (t as usize + j) % self.m).collect())
+            }
+            AdmitPolicy::Fixed { workers } => Some(workers.clone()),
+            AdmitPolicy::Cycle { sets } => Some(sets[(t as usize) % sets.len()].clone()),
+        };
+        self.round += 1;
+        RoundScript {
+            labels,
+            crashed: self.crashed.clone(),
+            slow: self.slow.clone(),
+            admit,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_parse_and_display_round_trip() {
+        for s in [
+            "crash:3@10",
+            "recover:3@25",
+            "leave:0@0",
+            "join:7@100",
+            "slow:2:4.5@12",
+            "rack:0-3:8@40",
+        ] {
+            let e = FaultEvent::parse(s).unwrap();
+            assert_eq!(e.to_string(), s);
+            assert_eq!(FaultEvent::parse(&e.to_string()).unwrap(), e);
+        }
+    }
+
+    #[test]
+    fn event_parse_rejects_malformed() {
+        for bad in [
+            "", "crash", "crash:3", "crash:x@1", "crash:3@", "crash:3@x", "slow:2@5",
+            "slow:2:0@5", "slow:2:-1@5", "slow:2:inf@5", "rack:3:2@5", "rack:5-2:2@5",
+            "rack:0-3@5", "explode:1@2", "crash:-1@2",
+        ] {
+            assert!(FaultEvent::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn admit_parse_and_display_round_trip() {
+        for s in ["first-k", "rotate:k", "rotate:4", "fixed:0.2.5", "cycle:0.1/2.3/4"] {
+            let a = AdmitPolicy::parse(s).unwrap();
+            assert_eq!(a.to_string(), s);
+            assert_eq!(AdmitPolicy::parse(&a.to_string()).unwrap(), a);
+        }
+    }
+
+    #[test]
+    fn admit_parse_rejects_malformed() {
+        for bad in [
+            "", "rotate", "rotate:0", "rotate:x", "fixed:", "fixed:a.b", "cycle:",
+            "cycle:/", "lottery:3", "first-k:2",
+        ] {
+            assert!(AdmitPolicy::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn scenario_parse_and_display_round_trip() {
+        for s in [
+            "crash:3@10,recover:3@25;admit:rotate:k",
+            "slow:1:2@0,slow:1:8@10,rack:4-7:3@20",
+            "admit:fixed:0.1.2",
+            "leave:2@5,join:2@9;admit:cycle:0.1/2.3",
+            "crash:0@1",
+        ] {
+            let sc = Scenario::parse(s).unwrap();
+            assert_eq!(sc.to_string(), s, "display drifted for {s:?}");
+            assert_eq!(Scenario::parse(&sc.to_string()).unwrap(), sc);
+        }
+    }
+
+    #[test]
+    fn scenario_parse_rejects_malformed() {
+        for bad in [
+            "", " ", ";", "crash:1@2,", "crash:1@2,,recover:1@3", ";admit:rotate:k",
+            "admit:rotate:k;admit:fixed:1", "crash:1@2;", "admit:warp:3",
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn scenario_json_round_trip() {
+        for s in [
+            "crash:3@10,recover:3@25;admit:rotate:k",
+            "rack:0-1:5@4",
+            "admit:cycle:0.1/2.3",
+        ] {
+            let sc = Scenario::parse(s).unwrap();
+            let back = Scenario::from_json(&Json::parse(&sc.to_json()).unwrap()).unwrap();
+            assert_eq!(back, sc, "json round trip for {s:?}");
+        }
+        // empty object = default scenario
+        let empty = Scenario::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(empty, Scenario::default());
+    }
+
+    #[test]
+    fn scenario_json_rejects_malformed() {
+        for bad in [
+            "[1]",
+            "{\"events\": \"crash:1@2\"}",
+            "{\"events\": [3]}",
+            "{\"events\": [\"bogus:1@2\"]}",
+            "{\"admit\": 7}",
+            "{\"admit\": \"warp\"}",
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Scenario::from_json(&j).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn validate_checks_worker_bounds() {
+        let sc = Scenario::parse("crash:8@1").unwrap();
+        assert!(sc.validate(8).is_err());
+        assert!(sc.validate(9).is_ok());
+        assert!(Scenario::parse("rack:2-9:2@1").unwrap().validate(8).is_err());
+        assert!(Scenario::parse("admit:fixed:0.0").unwrap().validate(8).is_err());
+        assert!(Scenario::parse("admit:rotate:9").unwrap().validate(8).is_err());
+        assert!(Scenario::parse("admit:cycle:1/8").unwrap().validate(8).is_err());
+    }
+
+    #[test]
+    fn state_machine_applies_crash_recover_and_slow() {
+        let sc = Scenario::parse("slow:1:4@0,crash:2@1,recover:2@3,slow:1:8@2").unwrap();
+        let mut st = ScenarioState::new(sc, 4, 4).unwrap();
+        let r0 = st.begin_round();
+        assert_eq!(r0.labels, vec!["slow:1:4@0"]);
+        assert_eq!(r0.slow, vec![1.0, 4.0, 1.0, 1.0]);
+        assert_eq!(r0.crashed, vec![false; 4]);
+        let r1 = st.begin_round();
+        assert_eq!(r1.labels, vec!["crash:2@1"]);
+        assert!(r1.crashed[2]);
+        assert_eq!(r1.slow[1], 4.0, "slow factor persists");
+        let r2 = st.begin_round();
+        assert_eq!(r2.slow[1], 8.0, "slow-onset: later event overwrites");
+        assert!(r2.crashed[2], "crash persists");
+        let r3 = st.begin_round();
+        assert!(!r3.crashed[2], "recover clears crash");
+        let r4 = st.begin_round();
+        assert!(r4.labels.is_empty(), "quiet round has no labels");
+        assert_eq!(st.round(), 5);
+    }
+
+    #[test]
+    fn recover_resets_slow_factor() {
+        let sc = Scenario::parse("rack:0-2:6@0,recover:1@2").unwrap();
+        let mut st = ScenarioState::new(sc, 4, 4).unwrap();
+        assert_eq!(st.begin_round().slow, vec![6.0, 6.0, 6.0, 1.0]);
+        st.begin_round();
+        assert_eq!(st.begin_round().slow, vec![6.0, 1.0, 6.0, 1.0]);
+    }
+
+    #[test]
+    fn rotate_window_rotates_and_wraps() {
+        let sc = Scenario::parse("admit:rotate:3").unwrap();
+        let mut st = ScenarioState::new(sc, 4, 4).unwrap();
+        assert_eq!(st.begin_round().admit.unwrap(), vec![0, 1, 2]);
+        assert_eq!(st.begin_round().admit.unwrap(), vec![1, 2, 3]);
+        assert_eq!(st.begin_round().admit.unwrap(), vec![2, 3, 0]);
+        assert_eq!(st.begin_round().admit.unwrap(), vec![3, 0, 1]);
+        assert_eq!(st.begin_round().admit.unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rotate_k_literal_resolves_to_wait_for() {
+        let sc = Scenario::parse("admit:rotate:k").unwrap();
+        let mut st = ScenarioState::new(sc, 8, 6).unwrap();
+        assert_eq!(st.begin_round().admit.unwrap().len(), 6);
+    }
+
+    #[test]
+    fn fixed_and_cycle_policies() {
+        let mut st =
+            ScenarioState::new(Scenario::parse("admit:fixed:1.3").unwrap(), 4, 4).unwrap();
+        assert_eq!(st.begin_round().admit.unwrap(), vec![1, 3]);
+        assert_eq!(st.begin_round().admit.unwrap(), vec![1, 3]);
+        let mut st =
+            ScenarioState::new(Scenario::parse("admit:cycle:0.1/2.3").unwrap(), 4, 4).unwrap();
+        assert_eq!(st.begin_round().admit.unwrap(), vec![0, 1]);
+        assert_eq!(st.begin_round().admit.unwrap(), vec![2, 3]);
+        assert_eq!(st.begin_round().admit.unwrap(), vec![0, 1]);
+    }
+
+    #[test]
+    fn first_k_policy_gives_no_override() {
+        let mut st =
+            ScenarioState::new(Scenario::parse("crash:0@0").unwrap(), 4, 3).unwrap();
+        assert!(st.begin_round().admit.is_none());
+    }
+}

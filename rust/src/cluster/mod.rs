@@ -31,6 +31,10 @@
 //! The cluster is engine-agnostic ([`ComputeEngine`]): the same rounds run
 //! on the native Rust kernels or the PJRT/XLA artifacts.
 
+pub mod fault;
+
+pub use fault::{AdmitPolicy, FaultEvent, RoundScript, Scenario, ScenarioState};
+
 use crate::problem::{BatchPlan, EncodedProblem};
 use crate::rng::Pcg64;
 use crate::runtime::{Collected, ComputeEngine, CurvCollector, GradCollector};
@@ -128,14 +132,43 @@ impl DelayModel {
                 .parse::<f64>()
                 .map_err(|e| anyhow::anyhow!("delay model {s:?}: {e}"))
         };
+        // exact arity per variant: extra fields are malformed, not ignored
+        let expect = |n: usize| -> Result<()> {
+            ensure!(
+                parts.len() == n,
+                "delay model {s:?}: wrong field count (got {}, want {})",
+                parts.len() - 1,
+                n - 1
+            );
+            Ok(())
+        };
         Ok(match parts[0] {
-            "none" => DelayModel::None,
-            "const" => DelayModel::Constant { ms: num(1)? },
-            "exp" => DelayModel::Exp { mean_ms: num(1)? },
-            "shifted" => DelayModel::ShiftedExp { shift_ms: num(1)?, mean_ms: num(2)? },
-            "pareto" => DelayModel::Pareto { scale_ms: num(1)?, shape: num(2)? },
-            "expfail" => DelayModel::ExpWithFailures { mean_ms: num(1)?, p_fail: num(2)? },
+            "none" => {
+                expect(1)?;
+                DelayModel::None
+            }
+            "const" => {
+                expect(2)?;
+                DelayModel::Constant { ms: num(1)? }
+            }
+            "exp" => {
+                expect(2)?;
+                DelayModel::Exp { mean_ms: num(1)? }
+            }
+            "shifted" => {
+                expect(3)?;
+                DelayModel::ShiftedExp { shift_ms: num(1)?, mean_ms: num(2)? }
+            }
+            "pareto" => {
+                expect(3)?;
+                DelayModel::Pareto { scale_ms: num(1)?, shape: num(2)? }
+            }
+            "expfail" => {
+                expect(3)?;
+                DelayModel::ExpWithFailures { mean_ms: num(1)?, p_fail: num(2)? }
+            }
             "hetero" => {
+                expect(3)?;
                 let mean_ms = num(1)?;
                 let factors = parts
                     .get(2)
@@ -298,6 +331,10 @@ pub struct Round {
     /// measurement under [`ClockMode::Measured`]. `NaN` for workers that
     /// were cancelled before computing.
     pub compute_ms: Vec<f64>,
+    /// Scenario events that fired at the start of this round (their
+    /// [`FaultEvent`] DSL labels) — the event-annotated-trace payload.
+    /// Empty when no scenario is attached or the round was quiet.
+    pub events: Vec<String>,
 }
 
 impl Round {
@@ -330,6 +367,8 @@ pub struct Cluster {
     /// Padded row count per shard (scales the virtual flop model down to
     /// the sampled rows in mini-batch rounds).
     shard_rows: Vec<usize>,
+    /// Attached deterministic fault scenario, advanced one step per round.
+    scenario: Option<ScenarioState>,
     /// Accumulated simulated time.
     pub sim_ms: f64,
     /// Rounds executed so far (gradient + line-search).
@@ -385,6 +424,7 @@ impl Cluster {
             grad_mflops,
             ls_mflops,
             shard_rows,
+            scenario: None,
             sim_ms: 0.0,
             rounds_run: 0,
         })
@@ -395,10 +435,40 @@ impl Cluster {
         &self.cfg
     }
 
-    /// Override k between runs (η sweeps reuse the staged cluster).
+    /// Attach a deterministic fault scenario (validated against this
+    /// cluster's worker count; `admit:rotate:k`'s literal `k` resolves to
+    /// the current `wait_for`). The script starts at round 0 and advances
+    /// one step per cluster round — gradient, mini-batch, and line-search
+    /// rounds all count (so L-BFGS consumes two scenario rounds per
+    /// iteration). Scenario scripting layers **on top of** the configured
+    /// [`DelayModel`]: the delay RNG is consumed identically with or
+    /// without a scenario, which is what makes scenario runs bit-for-bit
+    /// replayable under [`ClockMode::Virtual`] without perturbing
+    /// scenario-free runs.
+    pub fn set_scenario(&mut self, scenario: Scenario) -> Result<()> {
+        self.scenario =
+            Some(ScenarioState::new(scenario, self.cfg.workers, self.cfg.wait_for)?);
+        Ok(())
+    }
+
+    /// Detach the scenario (subsequent rounds run the plain delay model).
+    pub fn clear_scenario(&mut self) {
+        self.scenario = None;
+    }
+
+    /// The attached scenario state, if any.
+    pub fn scenario(&self) -> Option<&ScenarioState> {
+        self.scenario.as_ref()
+    }
+
+    /// Override k between runs (η sweeps reuse the staged cluster). An
+    /// attached scenario's `admit:rotate:k` window follows the new k.
     pub fn set_wait_for(&mut self, k: usize) {
         assert!(k >= 1 && k <= self.cfg.workers);
         self.cfg.wait_for = k;
+        if let Some(sc) = &mut self.scenario {
+            sc.set_wait_for(k);
+        }
     }
 
     /// Sample this round's injected delays, worker-index order (the RNG
@@ -409,10 +479,77 @@ impl Cluster {
             .collect()
     }
 
+    /// Start one round: sample the delay schedule (always, so the RNG
+    /// stream is scenario-independent), advance the scenario script, and
+    /// fold scripted crashes into the schedule as fail-stop (infinite)
+    /// delays — the one scenario effect shared by both clock modes.
+    fn stage_round(&mut self) -> (Vec<f64>, Option<RoundScript>) {
+        let mut delays = self.sample_delays();
+        let script = self.scenario.as_mut().map(|s| s.begin_round());
+        if let Some(sc) = &script {
+            for (i, d) in delays.iter_mut().enumerate() {
+                if sc.crashed[i] {
+                    *d = f64::INFINITY;
+                }
+            }
+        }
+        (delays, script)
+    }
+
+    /// Apply a script's slow factors to a virtual round's schedule: a
+    /// slowed worker's modeled compute *and* injected delay both stretch,
+    /// so degradation shows up in `compute_ms` and in the arrival order.
+    /// (Measured rounds ignore slow factors, like all injected delay
+    /// magnitudes — the hardware provides the timing there.)
+    fn apply_virtual_script(
+        compute: &mut [f64],
+        delays: &mut [f64],
+        script: Option<&RoundScript>,
+    ) {
+        if let Some(sc) = script {
+            for i in 0..compute.len() {
+                compute[i] *= sc.slow[i];
+                delays[i] *= sc.slow[i];
+            }
+        }
+    }
+
+    /// Measured-mode eligibility under a script: a worker can be admitted
+    /// iff it has not failed this round and — when an `admit:` override is
+    /// active — it is in the scripted set. Returns the mask plus the
+    /// admission count k (the scripted set size under an override, so the
+    /// collector's cancellation flag flips exactly when the scripted
+    /// responders have all delivered).
+    fn scripted_eligibility(
+        &self,
+        delays: &[f64],
+        script: Option<&RoundScript>,
+    ) -> (Vec<bool>, usize) {
+        let admit = script.and_then(|s| s.admit.as_deref());
+        let eligible: Vec<bool> = delays
+            .iter()
+            .enumerate()
+            .map(|(i, d)| d.is_finite() && admit.map_or(true, |set| set.contains(&i)))
+            .collect();
+        let k = match admit {
+            None => self.cfg.wait_for,
+            Some(_) => eligible.iter().filter(|&&e| e).count(),
+        };
+        (eligible, k)
+    }
+
     /// Virtual-clock round: deterministic post-hoc admission over the
-    /// sampled arrival schedule `arrival_i = compute_i + delay_i`. This is
-    /// the historical batch gather, byte for byte.
-    fn virtual_round(&self, compute_ms: Vec<f64>, delays: &[f64]) -> Round {
+    /// sampled arrival schedule `arrival_i = compute_i + delay_i`. With no
+    /// `admit_override` this is the historical first-k batch gather, byte
+    /// for byte; with one, the admitted set is exactly the scripted
+    /// workers that responded (arrival order preserved), and the round
+    /// lasts until the last of them arrives.
+    fn virtual_round(
+        &self,
+        compute_ms: Vec<f64>,
+        delays: &[f64],
+        admit_override: Option<&[usize]>,
+    ) -> Round {
         let m = self.cfg.workers;
         let mut arrivals: Vec<(usize, f64)> = Vec::with_capacity(m);
         let mut failed = Vec::new();
@@ -424,10 +561,27 @@ impl Cluster {
             }
         }
         arrivals.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        let k = self.cfg.wait_for.min(arrivals.len());
-        let admitted: Vec<usize> = arrivals[..k].iter().map(|&(w, _)| w).collect();
-        let elapsed_ms = arrivals.get(k.saturating_sub(1)).map(|&(_, t)| t).unwrap_or(0.0);
-        Round { admitted, arrivals, elapsed_ms, failed, compute_ms }
+        let (admitted, elapsed_ms) = match admit_override {
+            None => {
+                let k = self.cfg.wait_for.min(arrivals.len());
+                let admitted: Vec<usize> = arrivals[..k].iter().map(|&(w, _)| w).collect();
+                let elapsed =
+                    arrivals.get(k.saturating_sub(1)).map(|&(_, t)| t).unwrap_or(0.0);
+                (admitted, elapsed)
+            }
+            Some(set) => {
+                let mut admitted = Vec::with_capacity(set.len());
+                let mut elapsed = 0.0f64;
+                for &(w, t) in &arrivals {
+                    if set.contains(&w) {
+                        admitted.push(w);
+                        elapsed = elapsed.max(t);
+                    }
+                }
+                (admitted, elapsed)
+            }
+        };
+        Round { admitted, arrivals, elapsed_ms, failed, compute_ms, events: Vec::new() }
     }
 
     /// Measured-clock round record from a finished first-k collector:
@@ -453,7 +607,7 @@ impl Cluster {
         arrivals.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
         let admitted = collected.admitted.clone();
         let elapsed_ms = admitted.iter().map(|&w| compute_ms[w]).fold(0.0, f64::max);
-        Round { admitted, arrivals, elapsed_ms, failed, compute_ms }
+        Round { admitted, arrivals, elapsed_ms, failed, compute_ms, events: Vec::new() }
     }
 
     /// Extract the admitted workers' payloads in admitted order.
@@ -474,31 +628,37 @@ impl Cluster {
     }
 
     /// One gradient round: broadcast `w`, workers stream `(g_i, f_i)`
-    /// responses, leader admits the first k. Returns the admitted
-    /// responses (admitted order) and the round record; advances the
-    /// simulated clock.
+    /// responses, leader admits the first k (or exactly the scripted set
+    /// when a [`Scenario`] with an `admit:` policy is attached). Returns
+    /// the admitted responses (admitted order) and the round record;
+    /// advances the simulated clock.
     pub fn grad_round(&mut self, w: &[f64]) -> Result<(GradResponses, Round)> {
         let m = self.cfg.workers;
-        let delays = self.sample_delays();
-        let (responses, round) = match self.cfg.clock {
+        let (mut delays, script) = self.stage_round();
+        let (responses, mut round) = match self.cfg.clock {
             ClockMode::Virtual => {
                 let sink = GradCollector::collect_all(m);
                 self.engine.worker_grad_streamed(w, &sink)?;
                 let collected = sink.into_collected();
-                let compute: Vec<f64> =
+                let mut compute: Vec<f64> =
                     self.grad_mflops.iter().map(|f| f * self.cfg.ms_per_mflop).collect();
-                let round = self.virtual_round(compute, &delays);
+                Self::apply_virtual_script(&mut compute, &mut delays, script.as_ref());
+                let admit = script.as_ref().and_then(|s| s.admit.as_deref());
+                let round = self.virtual_round(compute, &delays, admit);
                 (Self::take_admitted(&round, collected)?, round)
             }
             ClockMode::Measured => {
-                let eligible: Vec<bool> = delays.iter().map(|d| d.is_finite()).collect();
-                let sink = GradCollector::first_k(m, self.cfg.wait_for, eligible);
+                let (eligible, k) = self.scripted_eligibility(&delays, script.as_ref());
+                let sink = GradCollector::first_k(m, k, eligible);
                 self.engine.worker_grad_streamed(w, &sink)?;
                 let collected = sink.into_collected();
                 let round = Self::measured_round(&collected, &delays);
                 (Self::take_admitted(&round, collected)?, round)
             }
         };
+        if let Some(sc) = script {
+            round.events = sc.labels;
+        }
         let responses: GradResponses =
             responses.into_iter().map(|(wid, (g, f))| (wid, g, f)).collect();
         self.sim_ms += round.elapsed_ms;
@@ -524,30 +684,35 @@ impl Cluster {
             "batch plan covers {} workers, cluster has {m}",
             plan.workers()
         );
-        let delays = self.sample_delays();
-        let (responses, round) = match self.cfg.clock {
+        let (mut delays, script) = self.stage_round();
+        let (responses, mut round) = match self.cfg.clock {
             ClockMode::Virtual => {
                 let sink = GradCollector::collect_all(m);
                 self.engine.worker_grad_batch_streamed(w, plan, &sink)?;
                 let collected = sink.into_collected();
-                let compute: Vec<f64> = (0..m)
+                let mut compute: Vec<f64> = (0..m)
                     .map(|i| {
                         let frac = plan.rows(i) as f64 / self.shard_rows[i] as f64;
                         self.grad_mflops[i] * frac * self.cfg.ms_per_mflop
                     })
                     .collect();
-                let round = self.virtual_round(compute, &delays);
+                Self::apply_virtual_script(&mut compute, &mut delays, script.as_ref());
+                let admit = script.as_ref().and_then(|s| s.admit.as_deref());
+                let round = self.virtual_round(compute, &delays, admit);
                 (Self::take_admitted(&round, collected)?, round)
             }
             ClockMode::Measured => {
-                let eligible: Vec<bool> = delays.iter().map(|d| d.is_finite()).collect();
-                let sink = GradCollector::first_k(m, self.cfg.wait_for, eligible);
+                let (eligible, k) = self.scripted_eligibility(&delays, script.as_ref());
+                let sink = GradCollector::first_k(m, k, eligible);
                 self.engine.worker_grad_batch_streamed(w, plan, &sink)?;
                 let collected = sink.into_collected();
                 let round = Self::measured_round(&collected, &delays);
                 (Self::take_admitted(&round, collected)?, round)
             }
         };
+        if let Some(sc) = script {
+            round.events = sc.labels;
+        }
         let responses: GradResponses =
             responses.into_iter().map(|(wid, (g, f))| (wid, g, f)).collect();
         self.sim_ms += round.elapsed_ms;
@@ -556,28 +721,34 @@ impl Cluster {
     }
 
     /// One line-search round over a fresh first-k set `D_t` (eq. (3)).
+    /// Advances the scenario script like every other round.
     pub fn linesearch_round(&mut self, d: &[f64]) -> Result<(CurvResponses, Round)> {
         let m = self.cfg.workers;
-        let delays = self.sample_delays();
-        let (responses, round) = match self.cfg.clock {
+        let (mut delays, script) = self.stage_round();
+        let (responses, mut round) = match self.cfg.clock {
             ClockMode::Virtual => {
                 let sink = CurvCollector::collect_all(m);
                 self.engine.linesearch_streamed(d, &sink)?;
                 let collected = sink.into_collected();
-                let compute: Vec<f64> =
+                let mut compute: Vec<f64> =
                     self.ls_mflops.iter().map(|f| f * self.cfg.ms_per_mflop).collect();
-                let round = self.virtual_round(compute, &delays);
+                Self::apply_virtual_script(&mut compute, &mut delays, script.as_ref());
+                let admit = script.as_ref().and_then(|s| s.admit.as_deref());
+                let round = self.virtual_round(compute, &delays, admit);
                 (Self::take_admitted(&round, collected)?, round)
             }
             ClockMode::Measured => {
-                let eligible: Vec<bool> = delays.iter().map(|d| d.is_finite()).collect();
-                let sink = CurvCollector::first_k(m, self.cfg.wait_for, eligible);
+                let (eligible, k) = self.scripted_eligibility(&delays, script.as_ref());
+                let sink = CurvCollector::first_k(m, k, eligible);
                 self.engine.linesearch_streamed(d, &sink)?;
                 let collected = sink.into_collected();
                 let round = Self::measured_round(&collected, &delays);
                 (Self::take_admitted(&round, collected)?, round)
             }
         };
+        if let Some(sc) = script {
+            round.events = sc.labels;
+        }
         self.sim_ms += round.elapsed_ms;
         self.rounds_run += 1;
         Ok((responses, round))
@@ -799,6 +970,13 @@ mod tests {
         assert!(DelayModel::parse("hetero:10").is_err());
         assert!(DelayModel::parse("bogus:1").is_err());
         assert!(DelayModel::parse("exp").is_err());
+        // exact arity: trailing fields are malformed, not silently ignored
+        assert!(DelayModel::parse("none:1").is_err());
+        assert!(DelayModel::parse("exp:10:99").is_err());
+        assert!(DelayModel::parse("const:3:4").is_err());
+        assert!(DelayModel::parse("shifted:5:10:1").is_err());
+        assert!(DelayModel::parse("expfail:10:0.05:0").is_err());
+        assert!(DelayModel::parse("hetero:10:1,2:3").is_err());
     }
 
     #[test]
@@ -992,6 +1170,175 @@ mod tests {
         }
         assert_eq!(round.arrivals.len(), 3);
         assert!(round.failed.is_empty());
+    }
+
+    /// Attaching a scenario must not perturb a run it does not touch:
+    /// same delay-RNG stream, same admitted sets, same round times.
+    #[test]
+    fn inert_scenario_is_bitwise_invisible() {
+        let w = vec![0.2; 6];
+        let (_, mut plain) = cluster(4, DelayModel::Exp { mean_ms: 10.0 }, 7);
+        let (_, mut scripted) = cluster(4, DelayModel::Exp { mean_ms: 10.0 }, 7);
+        // events all fire far beyond the horizon; default first-k policy
+        scripted.set_scenario(Scenario::parse("crash:0@1000").unwrap()).unwrap();
+        for _ in 0..8 {
+            let (r1, round1) = plain.grad_round(&w).unwrap();
+            let (r2, round2) = scripted.grad_round(&w).unwrap();
+            assert_eq!(round1.admitted, round2.admitted);
+            assert_eq!(round1.elapsed_ms.to_bits(), round2.elapsed_ms.to_bits());
+            assert!(round2.events.is_empty());
+            for (a, b) in r1.iter().zip(&r2) {
+                assert_eq!(a.0, b.0);
+                assert_eq!(a.2.to_bits(), b.2.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_crash_and_recover_script_the_responders() {
+        let (_, mut c) = cluster(8, DelayModel::None, 0);
+        c.set_scenario(Scenario::parse("crash:3@2,recover:3@4").unwrap()).unwrap();
+        let w = vec![0.1; 6];
+        for t in 0..6 {
+            let (_, round) = c.grad_round(&w).unwrap();
+            if (2..4).contains(&t) {
+                assert_eq!(round.failed, vec![3], "round {t}");
+                assert_eq!(round.admitted.len(), 7, "round {t}");
+                assert!(!round.admitted.contains(&3), "round {t}");
+            } else {
+                assert!(round.failed.is_empty(), "round {t}");
+                assert_eq!(round.admitted.len(), 8, "round {t}");
+            }
+            if t == 2 {
+                assert_eq!(round.events, vec!["crash:3@2"]);
+            } else if t == 4 {
+                assert_eq!(round.events, vec!["recover:3@4"]);
+            } else {
+                assert!(round.events.is_empty(), "round {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_slow_factor_pushes_worker_out_of_admitted() {
+        // equal shards + constant delay: ties resolve in worker order, so
+        // worker 7 is normally outside k = 7 only by index. Slowing worker
+        // 0 by 10x must push *it* out instead and stretch the round.
+        let (_, mut base) = cluster(7, DelayModel::Constant { ms: 2.0 }, 0);
+        let (_, mut slow) = cluster(7, DelayModel::Constant { ms: 2.0 }, 0);
+        slow.set_scenario(Scenario::parse("slow:0:10@0").unwrap()).unwrap();
+        let w = vec![0.1; 6];
+        let (_, r_base) = base.grad_round(&w).unwrap();
+        let (_, r_slow) = slow.grad_round(&w).unwrap();
+        assert!(r_base.admitted.contains(&0));
+        assert!(!r_slow.admitted.contains(&0), "slowed worker still admitted");
+        assert!(r_slow.compute_ms[0] > r_base.compute_ms[0] * 9.0);
+        assert!(r_slow.elapsed_ms >= r_base.elapsed_ms);
+    }
+
+    #[test]
+    fn scenario_rack_event_slows_the_whole_range() {
+        let (_, mut c) = cluster(4, DelayModel::Constant { ms: 1.0 }, 0);
+        c.set_scenario(Scenario::parse("rack:4-7:25@0").unwrap()).unwrap();
+        let (_, round) = c.grad_round(&[0.1; 6]).unwrap();
+        // the rack (4..=7) arrives strictly after the healthy half
+        assert_eq!(round.admitted, vec![0, 1, 2, 3]);
+        for w in 4..8 {
+            assert!(round.compute_ms[w] > round.compute_ms[0] * 20.0, "worker {w}");
+        }
+    }
+
+    #[test]
+    fn scenario_admit_rotate_forces_exact_rotating_subsets() {
+        let (_, mut c) = cluster(8, DelayModel::Exp { mean_ms: 10.0 }, 3);
+        c.set_scenario(Scenario::parse("admit:rotate:3").unwrap()).unwrap();
+        let w = vec![0.1; 6];
+        for t in 0..10usize {
+            let (responses, round) = c.grad_round(&w).unwrap();
+            let mut want: Vec<usize> = (0..3).map(|j| (t + j) % 8).collect();
+            want.sort_unstable();
+            let mut got = round.admitted.clone();
+            got.sort_unstable();
+            assert_eq!(got, want, "round {t}");
+            assert_eq!(responses.len(), 3);
+            // the round lasts until the last scripted responder arrives
+            let latest = round
+                .arrivals
+                .iter()
+                .filter(|a| round.admitted.contains(&a.0))
+                .map(|a| a.1)
+                .fold(0.0, f64::max);
+            assert_eq!(round.elapsed_ms.to_bits(), latest.to_bits());
+        }
+    }
+
+    #[test]
+    fn scenario_rotate_k_follows_set_wait_for() {
+        let (_, mut c) = cluster(6, DelayModel::None, 0);
+        c.set_scenario(Scenario::parse("admit:rotate:k").unwrap()).unwrap();
+        let (_, r) = c.grad_round(&[0.0; 6]).unwrap();
+        assert_eq!(r.admitted.len(), 6);
+        // an η sweep reusing the staged cluster re-resolves the window
+        c.set_wait_for(2);
+        let (_, r) = c.grad_round(&[0.0; 6]).unwrap();
+        assert_eq!(r.admitted.len(), 2);
+    }
+
+    #[test]
+    fn scenario_admit_fixed_drops_crashed_members() {
+        let (_, mut c) = cluster(8, DelayModel::None, 0);
+        c.set_scenario(Scenario::parse("crash:2@1;admit:fixed:1.2.5").unwrap()).unwrap();
+        let (_, r0) = c.grad_round(&[0.0; 6]).unwrap();
+        let mut got = r0.admitted.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2, 5]);
+        // after the crash the scripted set shrinks instead of deadlocking
+        let (_, r1) = c.grad_round(&[0.0; 6]).unwrap();
+        let mut got = r1.admitted.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 5]);
+        assert_eq!(r1.failed, vec![2]);
+    }
+
+    #[test]
+    fn scenario_measured_mode_admits_exactly_the_scripted_set() {
+        let (_, mut c) = cluster(8, DelayModel::None, 0);
+        c.cfg.clock = ClockMode::Measured;
+        c.set_scenario(Scenario::parse("admit:cycle:0.3/6.7").unwrap()).unwrap();
+        for want in [vec![0usize, 3], vec![6, 7], vec![0, 3]] {
+            let (responses, round) = c.grad_round(&[0.0; 6]).unwrap();
+            let mut got = round.admitted.clone();
+            got.sort_unstable();
+            assert_eq!(got, want);
+            assert_eq!(responses.len(), 2);
+        }
+    }
+
+    #[test]
+    fn scenario_replays_bit_for_bit_under_virtual_clock() {
+        let dsl = "slow:1:4@1,crash:5@3,recover:5@6;admit:rotate:k";
+        let run = || -> Vec<(Vec<usize>, u64, Vec<String>)> {
+            let (_, mut c) = cluster(5, DelayModel::Exp { mean_ms: 10.0 }, 9);
+            c.set_scenario(Scenario::parse(dsl).unwrap()).unwrap();
+            let w = vec![0.2; 6];
+            (0..10)
+                .map(|_| {
+                    let (_, r) = c.grad_round(&w).unwrap();
+                    (r.admitted, r.elapsed_ms.to_bits(), r.events)
+                })
+                .collect()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn scenario_rejects_out_of_range_workers() {
+        let (_, mut c) = cluster(4, DelayModel::None, 0);
+        assert!(c.set_scenario(Scenario::parse("crash:8@0").unwrap()).is_err());
+        assert!(c.set_scenario(Scenario::parse("admit:rotate:9").unwrap()).is_err());
+        assert!(c.set_scenario(Scenario::parse("crash:7@0").unwrap()).is_ok());
+        c.clear_scenario();
+        assert!(c.scenario().is_none());
     }
 
     /// Measured mode respects fail-stop workers: their responses are

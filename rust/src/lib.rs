@@ -37,7 +37,10 @@ pub mod testutil;
 
 /// Convenience re-exports for the common experiment-driving surface.
 pub mod prelude {
-    pub use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, GatherPolicy, Round};
+    pub use crate::cluster::{
+        AdmitPolicy, ClockMode, Cluster, ClusterConfig, DelayModel, FaultEvent, GatherPolicy,
+        Round, Scenario, ScenarioState,
+    };
     pub use crate::config::{Config, Json};
     pub use crate::encoding::{Encoder, EncoderKind};
     pub use crate::linalg::{CsrMat, DataMat, Mat, StorageKind};

@@ -27,6 +27,12 @@ pub struct IterRecord {
     ///
     /// [`Round::admitted_compute_ms`]: crate::cluster::Round::admitted_compute_ms
     pub compute_ms: f64,
+    /// Scenario events that fired on this iteration's gradient round
+    /// ([`Round::events`] labels joined with `|`; empty when no scenario
+    /// is attached or the round was quiet) — the event-annotated trace.
+    ///
+    /// [`Round::events`]: crate::cluster::Round::events
+    pub events: String,
 }
 
 /// Full run trace.
@@ -81,14 +87,17 @@ impl Trace {
         }
     }
 
-    /// CSV with header; columns match [`IterRecord`].
+    /// CSV with header; columns match [`IterRecord`]. The `events` column
+    /// holds the `|`-joined fault-event labels (never commas, so the CSV
+    /// stays unquoted).
     pub fn to_csv(&self) -> String {
-        let mut s =
-            String::from("iter,f_true,f_est,grad_norm,alpha,responders,sim_ms,compute_ms\n");
+        let mut s = String::from(
+            "iter,f_true,f_est,grad_norm,alpha,responders,sim_ms,compute_ms,events\n",
+        );
         for r in &self.records {
             let _ = writeln!(
                 s,
-                "{},{:.10e},{:.10e},{:.6e},{:.6e},{},{:.4},{:.4}",
+                "{},{:.10e},{:.10e},{:.6e},{:.6e},{},{:.4},{:.4},{}",
                 r.iter,
                 r.f_true,
                 r.f_est,
@@ -96,7 +105,8 @@ impl Trace {
                 r.alpha,
                 r.responders,
                 r.sim_ms,
-                r.compute_ms
+                r.compute_ms,
+                r.events
             );
         }
         s
@@ -188,6 +198,7 @@ mod tests {
             responders: 4,
             sim_ms: t,
             compute_ms: 1.5,
+            events: String::new(),
         }
     }
 
@@ -205,6 +216,25 @@ mod tests {
         let csv = t.to_csv();
         assert_eq!(csv.lines().count(), 4);
         assert!(csv.starts_with("iter,"));
+    }
+
+    #[test]
+    fn csv_carries_the_events_column() {
+        let mut t = Trace::default();
+        t.push(rec(0, 1.0, 1.0));
+        let mut annotated = rec(1, 0.9, 2.0);
+        annotated.events = "crash:3@1|slow:0:4@1".to_string();
+        t.push(annotated);
+        let csv = t.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[0].ends_with(",events"));
+        assert!(lines[1].ends_with(','), "quiet round has an empty events cell");
+        assert!(lines[2].ends_with(",crash:3@1|slow:0:4@1"));
+        // one comma-delimited cell per header column, every row
+        let cols = lines[0].split(',').count();
+        for line in &lines[1..] {
+            assert_eq!(line.split(',').count(), cols, "ragged row {line:?}");
+        }
     }
 
     #[test]

@@ -176,6 +176,7 @@ impl Optimizer for CodedFista {
                 responders: round.admitted.len(),
                 sim_ms: cluster.sim_ms,
                 compute_ms: round.admitted_compute_ms(),
+                events: round.events.join("|"),
             });
         }
         Ok(RunOutput { w, trace })

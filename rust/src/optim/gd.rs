@@ -96,6 +96,7 @@ impl Optimizer for CodedGd {
                 responders: round.admitted.len(),
                 sim_ms: cluster.sim_ms,
                 compute_ms: round.admitted_compute_ms(),
+                events: round.events.join("|"),
             });
         }
         Ok(RunOutput { w, trace })

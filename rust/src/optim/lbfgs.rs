@@ -171,7 +171,7 @@ impl Optimizer for CodedLbfgs {
             let d = two_loop(&g, &pairs);
 
             // exact line search over a fresh first-k set D_t (eq. (3))
-            let (ls_responses, _ls_round) = cluster.linesearch_round(&d)?;
+            let (ls_responses, ls_round) = cluster.linesearch_round(&d)?;
             let curv = prob.aggregate_curvature(&d, &ls_responses);
             let dg = linalg::dot(&d, &g);
             let alpha = if curv > 0.0 && dg < 0.0 {
@@ -201,6 +201,15 @@ impl Optimizer for CodedLbfgs {
                 responders: round.admitted.len(),
                 sim_ms: cluster.sim_ms,
                 compute_ms: round.admitted_compute_ms(),
+                // both of this iteration's cluster rounds can fire
+                // scenario events; the trace must carry each of them
+                events: round
+                    .events
+                    .iter()
+                    .chain(&ls_round.events)
+                    .cloned()
+                    .collect::<Vec<_>>()
+                    .join("|"),
             });
         }
         Ok(RunOutput { w, trace })

@@ -362,6 +362,7 @@ impl Optimizer for CodedSgd {
                 responders: round.admitted.len(),
                 sim_ms: cluster.sim_ms,
                 compute_ms: round.admitted_compute_ms(),
+                events: round.events.join("|"),
             });
             if self.cfg.patience > 0 {
                 acc += f_est;

@@ -1,0 +1,491 @@
+//! Fault-injection scenarios + the golden-trace regression harness.
+//!
+//! Three layers of pinning:
+//!
+//! 1. **Golden traces** — every optimizer (GD, SGD, L-BFGS, FISTA) ×
+//!    scheme (hadamard, replication, uncoded) × storage (dense, CSR) runs
+//!    a fixed deterministic workload on the `const:` delay model under
+//!    `ClockMode::Virtual`, and its full CSV trace must match the
+//!    checked-in golden under `rust/tests/golden/` **byte for byte**.
+//!    A missing golden is bootstrapped (written and reported) so the
+//!    first toolchain run pins the baseline; `UPDATE_GOLDEN=1` (or
+//!    `tools/regen_golden.sh`) rewrites intentionally.
+//! 2. **Scenario semantics** — crash/recover, slow-onset, rack-wide
+//!    correlated stragglers, churn, and the `admit:` subset grammar drive
+//!    the round machinery end to end, including the defined empty-round
+//!    behavior when every worker is gone.
+//! 3. **The adversarial acceptance case** — under `admit:rotate:k`
+//!    (worst-case rotating m−k stragglers) on a problem whose dominant
+//!    data block contradicts the rest, hadamard-coded GD and SGD stay in
+//!    the Theorem-1 neighborhood at *every* phase of the rotation while
+//!    the uncoded baseline is yanked away from the true solution each
+//!    cycle; the whole trace replays bit-for-bit from the scenario
+//!    file alone.
+
+use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, Scenario};
+use codedopt::config::Json;
+use codedopt::encoding::EncoderKind;
+use codedopt::linalg::{Mat, StorageKind};
+use codedopt::optim::{
+    CodedFista, CodedGd, CodedLbfgs, CodedSgd, FistaConfig, GdConfig, LbfgsConfig, LrSchedule,
+    Optimizer, Prox, RunOutput, SgdConfig,
+};
+use codedopt::problem::{EncodedProblem, QuadProblem};
+use codedopt::rng::Pcg64;
+use codedopt::runtime::NativeEngine;
+use std::path::PathBuf;
+
+// ---------------------------------------------------------------- helpers
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// Compare `csv` against the checked-in golden `name`, bootstrapping the
+/// file when absent and rewriting it under `UPDATE_GOLDEN=1`. On mismatch
+/// the panic message names the first differing line.
+fn check_golden(name: &str, csv: &str) {
+    let path = golden_dir().join(name);
+    let update = std::env::var_os("UPDATE_GOLDEN").is_some();
+    if update || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).expect("creating tests/golden");
+        std::fs::write(&path, csv).expect("writing golden");
+        if !update {
+            eprintln!(
+                "golden {name}: no checked-in baseline — bootstrapped; \
+                 commit rust/tests/golden/{name} to pin it"
+            );
+        }
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("reading golden");
+    if want == csv {
+        return;
+    }
+    for (i, (w, g)) in want.lines().zip(csv.lines()).enumerate() {
+        assert_eq!(
+            g, w,
+            "golden {name} drifted at line {} (run tools/regen_golden.sh if intended)",
+            i + 1
+        );
+    }
+    panic!(
+        "golden {name} drifted: line count {} vs {} (run tools/regen_golden.sh if intended)",
+        csv.lines().count(),
+        want.lines().count()
+    );
+}
+
+/// The fixed golden workload: small ridge problem, 8 workers, k = 6,
+/// deterministic `const:2` delays, virtual clock.
+fn golden_cluster(
+    kind: EncoderKind,
+    beta: f64,
+    storage: StorageKind,
+) -> (EncodedProblem, Cluster) {
+    let prob = QuadProblem::synthetic_gaussian(96, 8, 0.05, 7);
+    let enc = EncodedProblem::encode_stored(&prob, kind, beta, 8, 3, storage).expect("encode");
+    let eng = Box::new(NativeEngine::new(&enc));
+    let cfg = ClusterConfig {
+        workers: 8,
+        wait_for: 6,
+        delay: DelayModel::Constant { ms: 2.0 },
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed: 11,
+    };
+    let cluster = Cluster::new(&enc, eng, cfg).expect("cluster");
+    (enc, cluster)
+}
+
+/// scheme/storage combos the golden matrix covers (sparse storage only
+/// where the scheme preserves it; hadamard densifies by construction).
+const COMBOS: &[(&str, EncoderKind, f64, StorageKind)] = &[
+    ("hadamard_dense", EncoderKind::Hadamard, 2.0, StorageKind::Dense),
+    ("replication_dense", EncoderKind::Replication, 2.0, StorageKind::Dense),
+    ("replication_sparse", EncoderKind::Replication, 2.0, StorageKind::Sparse),
+    ("uncoded_dense", EncoderKind::Identity, 1.0, StorageKind::Dense),
+    ("uncoded_sparse", EncoderKind::Identity, 1.0, StorageKind::Sparse),
+];
+
+const GOLDEN_ITERS: usize = 20;
+
+fn run_optimizer(
+    opt: &str,
+    enc: &EncodedProblem,
+    cluster: &mut Cluster,
+    iters: usize,
+) -> RunOutput {
+    match opt {
+        "gd" => CodedGd::new(GdConfig { zeta: 0.5, epsilon: Some(0.3), ..Default::default() })
+            .run(enc, cluster, iters)
+            .expect("gd run"),
+        "sgd" => CodedSgd::new(SgdConfig {
+            lr: Some(0.02),
+            schedule: LrSchedule::InvT { t0: 10.0 },
+            momentum: 0.5,
+            batch_frac: 0.5,
+            seed: 5,
+            ..Default::default()
+        })
+        .run(enc, cluster, iters)
+        .expect("sgd run"),
+        "lbfgs" => CodedLbfgs::new(LbfgsConfig { epsilon: Some(0.3), ..Default::default() })
+            .run(enc, cluster, iters)
+            .expect("lbfgs run"),
+        "fista" => CodedFista::new(FistaConfig {
+            prox: Prox::L1 { l1: 0.001 },
+            epsilon: Some(0.3),
+            ..Default::default()
+        })
+        .run(enc, cluster, iters)
+        .expect("fista run"),
+        other => panic!("unknown optimizer {other}"),
+    }
+}
+
+fn golden_matrix_for(opt: &str) {
+    for &(combo, kind, beta, storage) in COMBOS {
+        let (enc, mut cluster) = golden_cluster(kind, beta, storage);
+        let out = run_optimizer(opt, &enc, &mut cluster, GOLDEN_ITERS);
+        assert_eq!(out.trace.len(), GOLDEN_ITERS, "{opt}/{combo}: short trace");
+        assert!(
+            out.trace.records.iter().all(|r| r.f_true.is_finite()),
+            "{opt}/{combo}: non-finite objective"
+        );
+        check_golden(&format!("{opt}_{combo}.csv"), &out.trace.to_csv());
+    }
+}
+
+// -------------------------------------------------- golden-trace harness
+
+#[test]
+fn golden_traces_gd() {
+    golden_matrix_for("gd");
+}
+
+#[test]
+fn golden_traces_sgd() {
+    golden_matrix_for("sgd");
+}
+
+#[test]
+fn golden_traces_lbfgs() {
+    golden_matrix_for("lbfgs");
+}
+
+#[test]
+fn golden_traces_fista() {
+    golden_matrix_for("fista");
+}
+
+/// Scenario-annotated golden: the event-annotated trace (events column
+/// included) is pinned byte for byte too.
+#[test]
+fn golden_trace_gd_with_scenario() {
+    let dsl = "slow:2:3@5,crash:3@8,recover:3@14;admit:rotate:k";
+    let (enc, mut cluster) =
+        golden_cluster(EncoderKind::Hadamard, 2.0, StorageKind::Dense);
+    cluster.set_scenario(Scenario::parse(dsl).unwrap()).unwrap();
+    let out = run_optimizer("gd", &enc, &mut cluster, GOLDEN_ITERS);
+    let csv = out.trace.to_csv();
+    assert!(csv.contains("crash:3@8"), "events column missing the crash annotation");
+    assert!(csv.contains("recover:3@14"), "events column missing the recover annotation");
+    check_golden("gd_hadamard_dense_scenario.csv", &csv);
+}
+
+/// L-BFGS runs two cluster rounds per iteration (gradient + line
+/// search); events firing on the line-search round must still reach the
+/// iteration's trace record.
+#[test]
+fn lbfgs_trace_carries_linesearch_round_events() {
+    let (enc, mut cluster) = golden_cluster(EncoderKind::Hadamard, 2.0, StorageKind::Dense);
+    // scenario round 1 is iteration 0's line-search round
+    cluster.set_scenario(Scenario::parse("crash:3@1,recover:3@4").unwrap()).unwrap();
+    let out = run_optimizer("lbfgs", &enc, &mut cluster, 4);
+    assert!(
+        out.trace.records[0].events.contains("crash:3@1"),
+        "line-search round event lost: {:?}",
+        out.trace.records.iter().map(|r| r.events.clone()).collect::<Vec<_>>()
+    );
+    assert!(
+        out.trace.records[2].events.contains("recover:3@4"),
+        "gradient-round event lost (round 4 = iteration 2's gradient round)"
+    );
+}
+
+/// The golden CSVs themselves are deterministic within a session: two
+/// fresh runs of one combo emit identical bytes (this is what the CI
+/// drift job re-checks across whole `cargo test` invocations).
+#[test]
+fn golden_workload_is_deterministic() {
+    let run = || {
+        let (enc, mut cluster) =
+            golden_cluster(EncoderKind::Hadamard, 2.0, StorageKind::Dense);
+        run_optimizer("lbfgs", &enc, &mut cluster, GOLDEN_ITERS).trace.to_csv()
+    };
+    assert_eq!(run(), run());
+}
+
+// ------------------------------------------- empty-round defined behavior
+
+/// `ExpWithFailures` with p_fail = 1: every worker fails every round. The
+/// round must complete with a defined empty result — no deadlock, no
+/// divide-by-zero — and the aggregation falls back to the ridge-only
+/// gradient.
+#[test]
+fn all_workers_failing_yields_defined_empty_rounds() {
+    let prob = QuadProblem::synthetic_gaussian(96, 8, 0.05, 7);
+    let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 3).unwrap();
+    let eng = Box::new(NativeEngine::new(&enc));
+    let cfg = ClusterConfig {
+        workers: 8,
+        wait_for: 6,
+        delay: DelayModel::ExpWithFailures { mean_ms: 1.0, p_fail: 1.0 },
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed: 0,
+    };
+    let mut cluster = Cluster::new(&enc, eng, cfg).unwrap();
+    let w = vec![0.3; 8];
+
+    let (responses, round) = cluster.grad_round(&w).unwrap();
+    assert!(responses.is_empty());
+    assert!(round.admitted.is_empty());
+    assert_eq!(round.failed, (0..8).collect::<Vec<_>>());
+    assert_eq!(round.elapsed_ms, 0.0);
+    assert_eq!(round.admitted_compute_ms(), 0.0);
+
+    // aggregation over zero responders: exactly the ridge term, finite
+    let (g, f_est) = enc.aggregate_grad(&w, &responses);
+    for (gi, wi) in g.iter().zip(&w) {
+        assert_eq!(*gi, prob.lambda * wi, "empty-round gradient must be ridge-only");
+    }
+    assert!(f_est.is_finite());
+
+    // the mini-batch path too (this is where a division by b could hide)
+    let mut rng = Pcg64::seeded(4);
+    let plan = enc.sample_batch(0.5, &mut rng);
+    let (responses, round) = cluster.grad_batch_round(&w, &plan).unwrap();
+    assert!(responses.is_empty() && round.admitted.is_empty());
+    let (g, f_est) = enc.aggregate_grad_batch(&w, &responses, &plan);
+    assert!(f_est.is_finite());
+    for (gi, wi) in g.iter().zip(&w) {
+        assert_eq!(*gi, prob.lambda * wi);
+    }
+}
+
+/// A full optimizer run across all-failed rounds stays finite and makes
+/// no progress (the iterate only feels the ridge shrinkage).
+#[test]
+fn optimizers_survive_rounds_with_no_responders() {
+    for opt in ["gd", "sgd"] {
+        let prob = QuadProblem::synthetic_gaussian(64, 6, 0.1, 1);
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 1).unwrap();
+        let eng = Box::new(NativeEngine::new(&enc));
+        let cfg = ClusterConfig {
+            workers: 8,
+            wait_for: 4,
+            delay: DelayModel::ExpWithFailures { mean_ms: 1.0, p_fail: 1.0 },
+            clock: ClockMode::Virtual,
+            ms_per_mflop: 0.5,
+            seed: 2,
+        };
+        let mut cluster = Cluster::new(&enc, eng, cfg).unwrap();
+        let out = run_optimizer(opt, &enc, &mut cluster, 5);
+        assert_eq!(out.trace.len(), 5, "{opt}");
+        for r in &out.trace.records {
+            assert!(r.f_true.is_finite(), "{opt}: objective went non-finite");
+            assert_eq!(r.responders, 0, "{opt}");
+            assert_eq!(r.sim_ms, 0.0, "{opt}: empty rounds advance no simulated time");
+        }
+    }
+}
+
+/// Scenario-scripted total loss: crash every worker mid-run, then recover
+/// one. Works under both clocks — the measured-mode collector must cancel
+/// immediately instead of waiting for admissions that can never come.
+#[test]
+fn crash_all_scenario_is_defined_under_both_clocks() {
+    let dsl = "crash:0@2,crash:1@2,crash:2@2,crash:3@2,recover:1@4";
+    for clock in [ClockMode::Virtual, ClockMode::Measured] {
+        let prob = QuadProblem::synthetic_gaussian(64, 6, 0.05, 3);
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 4, 1).unwrap();
+        let eng = Box::new(NativeEngine::new(&enc));
+        let cfg = ClusterConfig {
+            workers: 4,
+            wait_for: 3,
+            delay: DelayModel::None,
+            clock,
+            ms_per_mflop: 0.5,
+            seed: 0,
+        };
+        let mut cluster = Cluster::new(&enc, eng, cfg).unwrap();
+        cluster.set_scenario(Scenario::parse(dsl).unwrap()).unwrap();
+        let w = vec![0.1; 6];
+        let mut responders = Vec::new();
+        for _ in 0..5 {
+            let (responses, round) = cluster.grad_round(&w).unwrap();
+            assert_eq!(responses.len(), round.admitted.len(), "{clock:?}");
+            responders.push(round.admitted.len());
+        }
+        assert_eq!(responders[..2], [3, 3], "{clock:?}: healthy rounds admit k");
+        assert_eq!(responders[2..4], [0, 0], "{clock:?}: crash-all rounds are empty");
+        assert_eq!(responders[4], 1, "{clock:?}: the recovered worker responds alone");
+    }
+}
+
+// ------------------------------------- the adversarial acceptance case
+
+/// A problem whose dominant data block *contradicts* the rest: heavy rows
+/// (10x scale, workers' shard 0 under the uncoded 8-way split) want
+/// `-w0`, the light rows want `+w0`. The true solution tracks the heavy
+/// block; any scheme that ever optimizes from the light rows alone is
+/// pulled far away.
+fn adversarial_problem() -> QuadProblem {
+    let (n, p, heavy, scale) = (256usize, 12usize, 32usize, 10.0);
+    let mut rng = Pcg64::new(77, 0xadba);
+    let w0: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+    let x = Mat::from_fn(n, p, |i, _| {
+        let g = rng.next_gaussian();
+        if i < heavy {
+            scale * g
+        } else {
+            g
+        }
+    });
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let t: f64 = x.row(i).iter().zip(&w0).map(|(a, b)| a * b).sum();
+            if i < heavy {
+                -t
+            } else {
+                t
+            }
+        })
+        .collect();
+    QuadProblem::new(x, y, 0.01)
+}
+
+fn adversarial_cluster(prob: &QuadProblem, kind: EncoderKind, beta: f64) -> (EncodedProblem, Cluster) {
+    let enc = EncodedProblem::encode(prob, kind, beta, 8, 13).unwrap();
+    let eng = Box::new(NativeEngine::new(&enc));
+    let cfg = ClusterConfig {
+        workers: 8,
+        wait_for: 6,
+        delay: DelayModel::Exp { mean_ms: 10.0 },
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed: 13,
+    };
+    let mut cluster = Cluster::new(&enc, eng, cfg).unwrap();
+    cluster.set_scenario(Scenario::parse("admit:rotate:k").unwrap()).unwrap();
+    (enc, cluster)
+}
+
+/// Worst gap over the last full rotation cycle (all 8 window phases), so
+/// the statistic cannot be gamed by sampling a lucky phase.
+fn worst_last_cycle_gap(out: &RunOutput, f_star: f64) -> f64 {
+    let recs = &out.trace.records;
+    recs[recs.len() - 8..]
+        .iter()
+        .map(|r| r.f_true - f_star)
+        .fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Theorem 1's claim under the worst-case rotating straggler set: the
+/// hadamard-coded optimizers converge to (and stay in) a neighborhood of
+/// the optimum at every rotation phase, while the uncoded baseline is
+/// yanked off the true solution every time the rotation excludes the
+/// dominant shard.
+#[test]
+fn adversarial_rotation_coded_converges_uncoded_drifts() {
+    let iters = 400;
+    let prob = adversarial_problem();
+    let w_star = prob.exact_solution().unwrap();
+    let f_star = prob.objective(&w_star);
+    let f0 = prob.objective(&vec![0.0; prob.p()]);
+    let span = f0 - f_star;
+    assert!(span > 0.0);
+
+    // hadamard-coded GD: Theorem-1 default step (estimated epsilon)
+    let (enc_c, mut cl_c) = adversarial_cluster(&prob, EncoderKind::Hadamard, 2.0);
+    let gd = CodedGd::new(GdConfig::default());
+    let out_c = gd.run(&enc_c, &mut cl_c, iters).unwrap();
+    assert!(!out_c.trace.diverged(), "coded GD diverged under rotate:k");
+    let worst_c = worst_last_cycle_gap(&out_c, f_star);
+    assert!(
+        worst_c < 0.35 * span,
+        "coded GD left the Theorem-1 neighborhood: worst last-cycle gap {worst_c:.3e} \
+         vs span {span:.3e}"
+    );
+
+    // hadamard-coded SGD (mini-batch rounds under the same rotation)
+    let (enc_s, mut cl_s) = adversarial_cluster(&prob, EncoderKind::Hadamard, 2.0);
+    let sgd = CodedSgd::new(SgdConfig { batch_frac: 0.5, seed: 9, ..Default::default() });
+    let out_s = sgd.run(&enc_s, &mut cl_s, iters).unwrap();
+    assert!(!out_s.trace.diverged(), "coded SGD diverged under rotate:k");
+    let best_s = out_s.trace.best_objective() - f_star;
+    assert!(
+        best_s < 0.5 * span,
+        "coded SGD made no progress under rotate:k: best gap {best_s:.3e} vs span {span:.3e}"
+    );
+    let worst_s = worst_last_cycle_gap(&out_s, f_star);
+    assert!(
+        worst_s < 0.6 * span,
+        "coded SGD left its neighborhood: worst last-cycle gap {worst_s:.3e}"
+    );
+
+    // uncoded baseline, identical optimizer and rotation
+    let (enc_u, mut cl_u) = adversarial_cluster(&prob, EncoderKind::Identity, 1.0);
+    let out_u = gd.run(&enc_u, &mut cl_u, iters).unwrap();
+    let worst_u = worst_last_cycle_gap(&out_u, f_star);
+    assert!(
+        worst_u > 3.0 * worst_c.max(1e-12),
+        "uncoded should be yanked well off the optimum every cycle: \
+         uncoded worst {worst_u:.3e} vs coded worst {worst_c:.3e}"
+    );
+    assert!(
+        worst_u > 3e-3 * span,
+        "uncoded worst-phase gap {worst_u:.3e} unexpectedly small vs span {span:.3e}"
+    );
+}
+
+/// The full adversarial trace replays bit-for-bit from the scenario file
+/// alone under the virtual clock: DSL string, JSON round-trip, and a
+/// re-run all emit identical CSV bytes.
+#[test]
+fn adversarial_trace_replays_bit_for_bit() {
+    let dsl = "slow:4:3@20,crash:7@50,recover:7@120;admit:rotate:k";
+    let run_from = |scenario: Scenario| -> String {
+        let prob = adversarial_problem();
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 13).unwrap();
+        let eng = Box::new(NativeEngine::new(&enc));
+        let cfg = ClusterConfig {
+            workers: 8,
+            wait_for: 6,
+            delay: DelayModel::Exp { mean_ms: 10.0 },
+            clock: ClockMode::Virtual,
+            ms_per_mflop: 0.5,
+            seed: 13,
+        };
+        let mut cluster = Cluster::new(&enc, eng, cfg).unwrap();
+        cluster.set_scenario(scenario).unwrap();
+        let gd = CodedGd::new(GdConfig { epsilon: Some(0.3), ..Default::default() });
+        gd.run(&enc, &mut cluster, 160).unwrap().trace.to_csv()
+    };
+
+    let direct = run_from(Scenario::parse(dsl).unwrap());
+
+    // through the JSON config surface (what --scenario-json reads)
+    let json_text = Scenario::parse(dsl).unwrap().to_json();
+    let from_json = run_from(Scenario::from_json(&Json::parse(&json_text).unwrap()).unwrap());
+    assert_eq!(direct, from_json, "JSON-loaded scenario produced a different trace");
+
+    // and a plain re-run
+    assert_eq!(direct, run_from(Scenario::parse(dsl).unwrap()));
+
+    // the trace is event-annotated where the script fired
+    assert!(direct.contains("crash:7@50"));
+    assert!(direct.contains("slow:4:3@20"));
+}

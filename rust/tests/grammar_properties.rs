@@ -1,0 +1,207 @@
+//! Property tests for every CLI/config grammar: `DelayModel`,
+//! `LrSchedule`, and the fault-scenario DSL all promise
+//! `parse(x.to_string()) == x` (the config/JSON round-trip contract) and
+//! strict rejection of malformed input. Driven by the seeded
+//! `testutil::property` harness, so every failure reports a reproducible
+//! case seed.
+
+use codedopt::cluster::{AdmitPolicy, DelayModel, FaultEvent, Scenario};
+use codedopt::optim::LrSchedule;
+use codedopt::rng::Pcg64;
+use codedopt::testutil::{gen_range, property};
+
+fn any_positive(rng: &mut Pcg64) -> f64 {
+    // spans magnitudes and fractional digits; Display/parse of f64 is
+    // shortest-round-trip in Rust, so any finite positive value must
+    // survive the grammar round trip
+    rng.range_f64(1e-3, 1e3) * 10f64.powi(gen_range(rng, 0, 4) as i32 - 2)
+}
+
+fn any_delay_model(rng: &mut Pcg64) -> DelayModel {
+    match gen_range(rng, 0, 6) {
+        0 => DelayModel::None,
+        1 => DelayModel::Constant { ms: any_positive(rng) },
+        2 => DelayModel::Exp { mean_ms: any_positive(rng) },
+        3 => DelayModel::ShiftedExp { shift_ms: any_positive(rng), mean_ms: any_positive(rng) },
+        4 => DelayModel::Pareto { scale_ms: any_positive(rng), shape: any_positive(rng) },
+        5 => DelayModel::ExpWithFailures {
+            mean_ms: any_positive(rng),
+            p_fail: rng.range_f64(0.0, 1.0),
+        },
+        _ => DelayModel::HeteroExp {
+            mean_ms: any_positive(rng),
+            factors: (0..gen_range(rng, 1, 5)).map(|_| any_positive(rng)).collect(),
+        },
+    }
+}
+
+#[test]
+fn delay_model_grammar_round_trips_every_variant() {
+    property("delay model parse<->Display", 200, |rng| {
+        let model = any_delay_model(rng);
+        let text = model.to_string();
+        let back = DelayModel::parse(&text)
+            .unwrap_or_else(|e| panic!("reparse of {text:?} failed: {e}"));
+        assert_eq!(back, model, "round trip drifted for {text:?}");
+    });
+}
+
+#[test]
+fn delay_model_rejects_malformed_grammar() {
+    // wrong arity (both directions), bad numbers, unknown heads
+    for bad in [
+        "", ":", "exp", "exp:", "exp:abc", "exp:10:99", "none:1", "const", "const:3:4",
+        "shifted:5", "shifted:5:10:15", "pareto:2", "pareto:2:1.5:9", "expfail:10",
+        "expfail:10:0.05:1", "hetero", "hetero:10", "hetero:10:", "hetero:10:1,x",
+        "hetero:10:1,2:3", "uniform:1:2", "exp:10,5",
+    ] {
+        assert!(DelayModel::parse(bad).is_err(), "should reject {bad:?}");
+    }
+}
+
+fn any_lr_schedule(rng: &mut Pcg64) -> LrSchedule {
+    match gen_range(rng, 0, 2) {
+        0 => LrSchedule::Constant,
+        1 => LrSchedule::InvT { t0: any_positive(rng) },
+        _ => LrSchedule::Cosine { period: gen_range(rng, 1, 100_000) },
+    }
+}
+
+#[test]
+fn lr_schedule_grammar_round_trips_every_variant() {
+    property("lr schedule parse<->Display", 200, |rng| {
+        let sched = any_lr_schedule(rng);
+        let text = sched.to_string();
+        let back = LrSchedule::parse(&text)
+            .unwrap_or_else(|e| panic!("reparse of {text:?} failed: {e}"));
+        assert_eq!(back, sched, "round trip drifted for {text:?}");
+    });
+}
+
+#[test]
+fn lr_schedule_rejects_malformed_grammar() {
+    for bad in [
+        "", ":", "cosine", "cosine:0", "cosine:-1", "cosine:2.5", "cosine:abc",
+        "cosine:10:20", "invt:0", "invt:-3", "invt:abc", "invt:1:2", "constant:1",
+        "const:1", "warp", "warp:9", "1/t:0",
+    ] {
+        assert!(LrSchedule::parse(bad).is_err(), "should reject {bad:?}");
+    }
+}
+
+fn any_event(rng: &mut Pcg64) -> FaultEvent {
+    let worker = gen_range(rng, 0, 31);
+    let round = gen_range(rng, 0, 10_000) as u64;
+    match gen_range(rng, 0, 5) {
+        0 => FaultEvent::Crash { worker, round },
+        1 => FaultEvent::Recover { worker, round },
+        2 => FaultEvent::Leave { worker, round },
+        3 => FaultEvent::Join { worker, round },
+        4 => FaultEvent::Slow { worker, factor: any_positive(rng), round },
+        _ => {
+            let lo = gen_range(rng, 0, 15);
+            FaultEvent::Rack {
+                lo,
+                hi: gen_range(rng, lo, 31),
+                factor: any_positive(rng),
+                round,
+            }
+        }
+    }
+}
+
+fn any_admit(rng: &mut Pcg64) -> AdmitPolicy {
+    let set = |rng: &mut Pcg64| -> Vec<usize> {
+        // distinct ids (validation rejects duplicates; the grammar itself
+        // round-trips any list, distinct keeps the scenario attachable)
+        let mut ids: Vec<usize> = (0..32).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(gen_range(rng, 1, 6));
+        ids
+    };
+    match gen_range(rng, 0, 4) {
+        0 => AdmitPolicy::FirstK,
+        1 => AdmitPolicy::Rotate {
+            k: if gen_range(rng, 0, 1) == 0 { None } else { Some(gen_range(rng, 1, 32)) },
+        },
+        2 => AdmitPolicy::Fixed { workers: set(rng) },
+        _ => AdmitPolicy::Cycle { sets: (0..gen_range(rng, 1, 4)).map(|_| set(rng)).collect() },
+    }
+}
+
+#[test]
+fn scenario_dsl_round_trips_generated_scenarios() {
+    property("scenario parse<->Display", 300, |rng| {
+        let mut sc = Scenario {
+            events: (0..gen_range(rng, 0, 6)).map(|_| any_event(rng)).collect(),
+            admit: any_admit(rng),
+        };
+        if sc.events.is_empty() && sc.admit == AdmitPolicy::FirstK {
+            // the empty scenario has no DSL form (parse rejects "")
+            sc.admit = AdmitPolicy::Rotate { k: None };
+        }
+        let text = sc.to_string();
+        let back = Scenario::parse(&text)
+            .unwrap_or_else(|e| panic!("reparse of {text:?} failed: {e}"));
+        assert_eq!(back, sc, "round trip drifted for {text:?}");
+    });
+}
+
+#[test]
+fn scenario_json_round_trips_generated_scenarios() {
+    use codedopt::config::Json;
+    property("scenario to_json<->from_json", 200, |rng| {
+        let sc = Scenario {
+            events: (0..gen_range(rng, 0, 6)).map(|_| any_event(rng)).collect(),
+            admit: any_admit(rng),
+        };
+        let text = sc.to_json();
+        let parsed = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("to_json emitted invalid JSON {text:?}: {e}"));
+        let back = Scenario::from_json(&parsed)
+            .unwrap_or_else(|e| panic!("from_json of {text:?} failed: {e}"));
+        assert_eq!(back, sc, "json round trip drifted for {text:?}");
+    });
+}
+
+#[test]
+fn scenario_dsl_rejects_malformed_grammar() {
+    for bad in [
+        "", ";", ",", "crash:1@2,", ",crash:1@2", "crash:1@2;;admit:rotate:k",
+        "admit:rotate:k;admit:rotate:k", "admit:", "admit:rotate", "admit:fixed:",
+        "admit:fixed:1..2", "admit:cycle:1//2", "crash:1", "crash:1@", "slow:1@4",
+        "rack:1:2@3", "melt:1@2", "crash:1@2 recover:1@3",
+    ] {
+        assert!(Scenario::parse(bad).is_err(), "should reject {bad:?}");
+    }
+}
+
+/// Generated scenarios that validation accepts attach to a matching
+/// cluster-sized worker count; oversized references are refused.
+#[test]
+fn scenario_validation_tracks_worker_bounds() {
+    property("scenario validate bounds", 100, |rng| {
+        let sc = Scenario {
+            events: (0..gen_range(rng, 1, 4)).map(|_| any_event(rng)).collect(),
+            admit: AdmitPolicy::FirstK,
+        };
+        // every generated id is < 32, so m = 32 always validates...
+        sc.validate(32).unwrap();
+        // ...and the tightest failing bound is exactly the max referenced id
+        let max_ref = sc
+            .events
+            .iter()
+            .map(|e| match *e {
+                FaultEvent::Crash { worker, .. }
+                | FaultEvent::Recover { worker, .. }
+                | FaultEvent::Leave { worker, .. }
+                | FaultEvent::Join { worker, .. }
+                | FaultEvent::Slow { worker, .. } => worker,
+                FaultEvent::Rack { hi, .. } => hi,
+            })
+            .max()
+            .unwrap();
+        assert!(sc.validate(max_ref).is_err());
+        sc.validate(max_ref + 1).unwrap();
+    });
+}

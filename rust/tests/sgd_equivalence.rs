@@ -146,7 +146,7 @@ fn sgd_trace_csv_has_populated_compute_ms_column() {
     let out = sgd.run(&enc, &mut cluster, 12).unwrap();
     let csv = out.trace.to_csv();
     let header = csv.lines().next().unwrap();
-    assert!(header.ends_with("sim_ms,compute_ms"), "header: {header}");
+    assert!(header.ends_with("sim_ms,compute_ms,events"), "header: {header}");
     assert_eq!(csv.lines().count(), 13);
     for r in &out.trace.records {
         assert!(r.compute_ms > 0.0 && r.compute_ms.is_finite());

@@ -15,7 +15,7 @@ DOCS=(README.md DESIGN.md EXPERIMENTS.md ROADMAP.md)
 ALLOWLIST=(
   # cargo / rustc / rustup
   --release --bench --features --no-deps --open --check --example --profile
-  --component --all-targets --workspace
+  --component --all-targets --workspace --test
   # python-side tooling (L2/L1 AOT emitter, pytest)
   --outdir
 )

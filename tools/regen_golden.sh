@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Regenerate the golden-trace regression baselines (rust/tests/golden/).
+#
+# The fault_scenarios harness compares each optimizer x scheme x storage
+# trace CSV byte-for-byte against its checked-in golden. When a change is
+# *supposed* to alter the traces (new CSV column, intentional numeric
+# change), run this script and commit the rewritten files; CI's drift job
+# fails if the checked-in goldens differ from freshly regenerated output.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+rm -f rust/tests/golden/*.csv
+UPDATE_GOLDEN=1 cargo test -q --test fault_scenarios
+
+echo "golden traces regenerated:"
+ls rust/tests/golden/*.csv
