@@ -1,0 +1,255 @@
+//! fig_dispatch — per-round dispatch overhead: persistent worker pool vs
+//! the legacy per-round scoped-spawn fan-out.
+//!
+//! The pool refactor's claim is *execution-layer* (not kernel) speed:
+//! zero thread spawns per round and no per-round shard restaging. This
+//! bench isolates exactly that by running gradient rounds over
+//! deliberately tiny shards (compute ≈ microseconds, so dispatch
+//! dominates), swept over m ∈ {4, 16, 64} workers:
+//!
+//! * **pool** — the shipping `NativeEngine` (resident lanes, command
+//!   channels);
+//! * **scoped** — the pre-refactor engine reproduced here as the
+//!   baseline: one `std::thread::scope` + chunked spawns per round.
+//!
+//! A counting global allocator reports allocations per round for both
+//! (the payload clones and the collect-all sink are common to both; the
+//! scoped baseline additionally pays per-spawn stack/handle
+//! allocations), and thread spawns per round are reported structurally:
+//! the pool's count comes from its session and must stay exactly zero.
+//!
+//! Output: a table on stdout plus `target/fig_dispatch/BENCH_dispatch.json`
+//! (`FIG_DISPATCH_OUT=dir` overrides the directory) to seed the perf
+//! trajectory.
+//!
+//! Run: `cargo bench --bench fig_dispatch`.
+
+use codedopt::encoding::EncoderKind;
+use codedopt::linalg::DataMat;
+use codedopt::problem::{EncodedProblem, QuadProblem};
+use codedopt::runtime::{ComputeEngine, GradCollector, NativeEngine};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// --------------------------------------------------- counting allocator
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: defers every operation to `System`; the counter is a relaxed
+// atomic with no other side effects.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+// ------------------------------------------------- legacy scoped engine
+
+/// The pre-pool native engine's streamed fan-out, kept here as the bench
+/// baseline: a fresh `std::thread::scope` with chunked spawns on every
+/// round (this intentionally mirrors the replaced implementation).
+struct ScopedSlot {
+    x: DataMat,
+    y: Vec<f64>,
+    grad_buf: Vec<f64>,
+    resid_buf: Vec<f64>,
+}
+
+struct ScopedEngine {
+    slots: Vec<ScopedSlot>,
+    threads: usize,
+    spawns: u64,
+}
+
+impl ScopedEngine {
+    fn new(prob: &EncodedProblem, threads: usize) -> Self {
+        let p = prob.p();
+        ScopedEngine {
+            slots: prob
+                .shards
+                .iter()
+                .map(|s| ScopedSlot {
+                    x: s.x.clone(),
+                    y: s.y.clone(),
+                    grad_buf: vec![0.0; p],
+                    resid_buf: vec![0.0; s.x.rows()],
+                })
+                .collect(),
+            threads: threads.max(1),
+            spawns: 0,
+        }
+    }
+
+    fn worker_grad_streamed(&mut self, w: &[f64], sink: &GradCollector) {
+        let threads = self.threads.min(self.slots.len()).max(1);
+        let chunk = self.slots.len().div_ceil(threads);
+        let spawns = &mut self.spawns;
+        std::thread::scope(|scope| {
+            for (ci, slots) in self.slots.chunks_mut(chunk).enumerate() {
+                *spawns += 1;
+                scope.spawn(move || {
+                    for (j, slot) in slots.iter_mut().enumerate() {
+                        if sink.is_cancelled() {
+                            return;
+                        }
+                        let t0 = std::time::Instant::now();
+                        let f = slot.x.fused_grad(
+                            w,
+                            &slot.y,
+                            &mut slot.grad_buf,
+                            &mut slot.resid_buf,
+                        );
+                        let ms = t0.elapsed().as_secs_f64() * 1e3;
+                        sink.deliver(ci * chunk + j, (slot.grad_buf.clone(), f), ms);
+                    }
+                });
+            }
+        });
+    }
+}
+
+// --------------------------------------------------------------- harness
+
+const ROUNDS: usize = 300;
+const WARMUP: usize = 20;
+
+struct Row {
+    m: usize,
+    pool_us: f64,
+    scoped_us: f64,
+    pool_allocs: f64,
+    scoped_allocs: f64,
+    pool_spawns: f64,
+    scoped_spawns: f64,
+}
+
+fn pool_round(eng: &mut NativeEngine, w: &[f64], m: usize) {
+    let sink = GradCollector::collect_all(m);
+    eng.worker_grad_streamed(w, &sink).unwrap();
+    std::hint::black_box(sink.into_collected());
+}
+
+fn scoped_round(eng: &mut ScopedEngine, w: &[f64], m: usize) {
+    let sink = GradCollector::collect_all(m);
+    eng.worker_grad_streamed(w, &sink);
+    std::hint::black_box(sink.into_collected());
+}
+
+fn sweep_point(m: usize, threads: usize) -> Row {
+    // 8 rows × 16 cols per worker: the kernel is ~1 µs, so the measured
+    // delta is dispatch machinery, not math
+    let prob = QuadProblem::synthetic_gaussian(8 * m, 16, 0.05, 3);
+    let enc = EncodedProblem::encode(&prob, EncoderKind::Identity, 1.0, m, 3).unwrap();
+    let w = vec![0.1; 16];
+
+    let mut pool = NativeEngine::new(&enc).with_threads(threads);
+    for _ in 0..WARMUP {
+        pool_round(&mut pool, &w, m); // also spins the pool up
+    }
+    let spawns0 = pool.session().expect("pool session").spawn_count();
+    let allocs0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = std::time::Instant::now();
+    for _ in 0..ROUNDS {
+        pool_round(&mut pool, &w, m);
+    }
+    let pool_us = t0.elapsed().as_secs_f64() * 1e6 / ROUNDS as f64;
+    let pool_allocs = (ALLOCS.load(Ordering::Relaxed) - allocs0) as f64 / ROUNDS as f64;
+    let pool_spawns =
+        (pool.session().expect("pool session").spawn_count() - spawns0) as f64 / ROUNDS as f64;
+
+    let mut scoped = ScopedEngine::new(&enc, threads);
+    for _ in 0..WARMUP {
+        scoped_round(&mut scoped, &w, m);
+    }
+    let spawns0 = scoped.spawns;
+    let allocs0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = std::time::Instant::now();
+    for _ in 0..ROUNDS {
+        scoped_round(&mut scoped, &w, m);
+    }
+    let scoped_us = t0.elapsed().as_secs_f64() * 1e6 / ROUNDS as f64;
+    let scoped_allocs = (ALLOCS.load(Ordering::Relaxed) - allocs0) as f64 / ROUNDS as f64;
+    let scoped_spawns = (scoped.spawns - spawns0) as f64 / ROUNDS as f64;
+
+    Row { m, pool_us, scoped_us, pool_allocs, scoped_allocs, pool_spawns, scoped_spawns }
+}
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("=== fig_dispatch: per-round dispatch overhead, pool vs scoped spawn ===");
+    println!("(tiny shards — dispatch-dominated; up to {threads} lanes, {ROUNDS} rounds)\n");
+    println!(
+        "{:>4} {:>13} {:>13} {:>8} {:>12} {:>12} {:>12} {:>13}",
+        "m",
+        "pool µs/rnd",
+        "scope µs/rnd",
+        "speedup",
+        "pool allocs",
+        "scope allocs",
+        "pool spawns",
+        "scope spawns"
+    );
+
+    let rows: Vec<Row> = [4usize, 16, 64].iter().map(|&m| sweep_point(m, threads)).collect();
+    let mut json = String::from("{\n  \"bench\": \"fig_dispatch\",\n");
+    let _ = writeln!(json, "  \"threads\": {threads},");
+    let _ = writeln!(json, "  \"rounds\": {ROUNDS},");
+    json.push_str("  \"sweep\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        assert_eq!(r.pool_spawns, 0.0, "pool dispatched a round that spawned a thread");
+        println!(
+            "{:>4} {:>13.2} {:>13.2} {:>7.2}x {:>12.1} {:>12.1} {:>12.3} {:>13.3}",
+            r.m,
+            r.pool_us,
+            r.scoped_us,
+            r.scoped_us / r.pool_us,
+            r.pool_allocs,
+            r.scoped_allocs,
+            r.pool_spawns,
+            r.scoped_spawns
+        );
+        let _ = write!(
+            json,
+            "    {{\"m\": {}, \"pool_us_per_round\": {:.3}, \"scoped_us_per_round\": {:.3}, \
+             \"pool_allocs_per_round\": {:.1}, \"scoped_allocs_per_round\": {:.1}, \
+             \"pool_spawns_per_round\": {}, \"scoped_spawns_per_round\": {}}}",
+            r.m,
+            r.pool_us,
+            r.scoped_us,
+            r.pool_allocs,
+            r.scoped_allocs,
+            r.pool_spawns,
+            r.scoped_spawns
+        );
+        json.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+
+    let out_dir =
+        std::env::var("FIG_DISPATCH_OUT").unwrap_or_else(|_| "target/fig_dispatch".to_string());
+    std::fs::create_dir_all(&out_dir).expect("creating output dir");
+    let path = format!("{out_dir}/BENCH_dispatch.json");
+    std::fs::write(&path, &json).expect("writing BENCH_dispatch.json");
+    println!("\nwrote {path}");
+}

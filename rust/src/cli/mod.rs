@@ -42,7 +42,9 @@ SUBCOMMANDS
                                sparse data CSR where the scheme preserves it;
                                sparse forces CSR (errors for densifying
                                encoders; the xla engine needs dense)
-    --threads 0     native-engine worker fan-out cap (0 = all cores)
+    --threads 0     native-engine resident worker-pool size: the pool is
+                    spawned once per run and every round is dispatched to
+                    its shard-owning lanes (0 = all cores)
     --scenario DSL  deterministic fault script layered over --delay, e.g.
                     crash:3@10,recover:3@25;admit:rotate:k
                     (events crash|recover|leave|join|slow|rack + an optional

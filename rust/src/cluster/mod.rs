@@ -12,8 +12,10 @@
 //!
 //! Rounds are **event-driven**: the engine streams each worker's response
 //! into the round's [`Collector`](crate::runtime::Collector) the moment
-//! that worker finishes (one OS thread per shard on the native engine),
-//! and the two clocks differ in how the leader consumes that stream:
+//! that worker finishes (resident shard-owning pool lanes on the native
+//! engine — spawned once per run, never per round; see
+//! [`runtime::pool`](crate::runtime::pool)), and the two clocks differ in
+//! how the leader consumes that stream:
 //!
 //! * [`ClockMode::Virtual`] — compute time comes from a deterministic
 //!   flop-cost model and admission is decided post hoc from the sampled
@@ -37,7 +39,7 @@ pub use fault::{AdmitPolicy, FaultEvent, RoundScript, Scenario, ScenarioState};
 
 use crate::problem::{BatchPlan, EncodedProblem};
 use crate::rng::Pcg64;
-use crate::runtime::{Collected, ComputeEngine, CurvCollector, GradCollector};
+use crate::runtime::{Collected, ComputeEngine, CurvCollector, EngineSession, GradCollector};
 use anyhow::{ensure, Result};
 
 /// Straggler delay model (per worker, per round), milliseconds.
@@ -369,6 +371,13 @@ pub struct Cluster {
     shard_rows: Vec<usize>,
     /// Attached deterministic fault scenario, advanced one step per round.
     scenario: Option<ScenarioState>,
+    /// Leader-side mirror of the engine-session park flags (scenario
+    /// crash masks pushed to the resident worker pool; all-false when the
+    /// engine has no session).
+    parked: Vec<bool>,
+    /// Rounds whose delay schedule has been sampled — must track
+    /// `rounds_run` exactly (see [`Cluster::sample_delays`]).
+    delay_rounds: u64,
     /// Accumulated simulated time.
     pub sim_ms: f64,
     /// Rounds executed so far (gradient + line-search).
@@ -417,6 +426,7 @@ impl Cluster {
             .collect();
         let shard_rows = prob.shards.iter().map(|s| s.x.rows()).collect();
         let rng = Pcg64::new(cfg.seed, 0xc105);
+        let parked = vec![false; cfg.workers];
         Ok(Cluster {
             cfg,
             engine,
@@ -425,6 +435,8 @@ impl Cluster {
             ls_mflops,
             shard_rows,
             scenario: None,
+            parked,
+            delay_rounds: 0,
             sim_ms: 0.0,
             rounds_run: 0,
         })
@@ -451,9 +463,11 @@ impl Cluster {
         Ok(())
     }
 
-    /// Detach the scenario (subsequent rounds run the plain delay model).
+    /// Detach the scenario (subsequent rounds run the plain delay model;
+    /// any scenario-parked engine workers are unparked).
     pub fn clear_scenario(&mut self) {
         self.scenario = None;
+        self.sync_parked(None);
     }
 
     /// The attached scenario state, if any.
@@ -471,18 +485,33 @@ impl Cluster {
         }
     }
 
-    /// Sample this round's injected delays, worker-index order (the RNG
-    /// consumption order is part of the reproducibility contract).
+    /// Sample this round's injected delays. **This is the single place
+    /// the delay RNG is consumed**, and its order is the reproducibility
+    /// contract: exactly once per cluster round, at round start (before
+    /// any scenario scripting or engine dispatch), workers drawn in index
+    /// order `0..m`. The resident worker pool never touches this RNG —
+    /// compute threads have no delay state at all — and the
+    /// `debug_assert!` makes any future caller that resamples out of
+    /// round order (a second draw within one round, or a draw after the
+    /// round ran) fail loudly in debug/test builds.
     fn sample_delays(&mut self) -> Vec<f64> {
+        debug_assert_eq!(
+            self.delay_rounds, self.rounds_run,
+            "delay RNG sampled out of round order: the schedule must be drawn exactly once \
+             per round, at round start, in worker-index order"
+        );
+        self.delay_rounds += 1;
         (0..self.cfg.workers)
             .map(|i| self.cfg.delay.sample(&mut self.rng, i))
             .collect()
     }
 
     /// Start one round: sample the delay schedule (always, so the RNG
-    /// stream is scenario-independent), advance the scenario script, and
-    /// fold scripted crashes into the schedule as fail-stop (infinite)
-    /// delays — the one scenario effect shared by both clock modes.
+    /// stream is scenario-independent), advance the scenario script, fold
+    /// scripted crashes into the schedule as fail-stop (infinite) delays
+    /// — the one scenario effect shared by both clock modes — and push
+    /// the crash mask to the engine session so resident pool workers park
+    /// instead of computing responses the leader would discard.
     fn stage_round(&mut self) -> (Vec<f64>, Option<RoundScript>) {
         let mut delays = self.sample_delays();
         let script = self.scenario.as_mut().map(|s| s.begin_round());
@@ -493,7 +522,61 @@ impl Cluster {
                 }
             }
         }
+        self.sync_parked(script.as_ref().map(|s| s.crashed.as_slice()));
         (delays, script)
+    }
+
+    /// Track the scenario's crash mask in the engine session's park
+    /// flags: a scripted crash/leave parks the resident worker (its lane
+    /// thread and staged shard survive), recover/join unparks it. Parking
+    /// is compute-skipping only — admission already excludes crashed
+    /// workers through the delay/eligibility masks, so traces are
+    /// identical whether or not the engine has a session (engines without
+    /// one keep the historical compute-and-discard behavior).
+    fn sync_parked(&mut self, crashed: Option<&[bool]>) {
+        let Cluster { engine, parked, .. } = self;
+        let Some(session) = engine.session() else {
+            return;
+        };
+        for (i, was) in parked.iter_mut().enumerate() {
+            let want = crashed.is_some_and(|c| c[i]);
+            if *was != want {
+                session.set_parked(i, want);
+                *was = want;
+            }
+        }
+    }
+
+    /// Read-only view of the engine's stateful session, if it has one
+    /// (resident-pool diagnostics: park flags, spawn counts).
+    /// Deliberately immutable: the cluster's scenario machinery owns the
+    /// park flags while a run is live (a caller parking workers behind
+    /// its back would desync the crash mask from admission), and
+    /// reconfiguration belongs between runs — take the engine back with
+    /// [`Cluster::into_engine`] to mutate its session.
+    pub fn engine_session(&mut self) -> Option<&dyn EngineSession> {
+        // demote the engine's mutable session handle to a shared view
+        self.engine.session().map(|session| &*session)
+    }
+
+    /// Tear down the cluster and hand back its engine for reuse (any
+    /// scenario-parked workers are unparked first). With a pool-backed
+    /// engine this is what lets one set of resident threads serve many
+    /// consecutive runs — reconfigure via
+    /// [`EngineSession::reconfigure`], then build a fresh `Cluster`
+    /// around the same box.
+    pub fn into_engine(self) -> Box<dyn ComputeEngine> {
+        let Cluster { mut engine, parked, .. } = self;
+        if parked.iter().any(|&p| p) {
+            if let Some(session) = engine.session() {
+                for (i, p) in parked.iter().enumerate() {
+                    if *p {
+                        session.set_parked(i, false);
+                    }
+                }
+            }
+        }
+        engine
     }
 
     /// Apply a script's slow factors to a virtual round's schedule: a
@@ -627,12 +710,45 @@ impl Cluster {
             .collect()
     }
 
+    /// Snapshot of the round-advancing state taken before a round runs,
+    /// restored if the round errors out. An erroring round is thereby
+    /// **transactional**: the delay RNG, the scenario script position,
+    /// and the out-of-order guard all rewind, so a retry replays the
+    /// exact same scripted round instead of silently skipping it — and
+    /// the guard in [`Cluster::sample_delays`] cannot mask the original
+    /// engine error with a spurious debug panic. (The engine park flags
+    /// are deliberately *not* rewound: the `parked` mirror stays in sync
+    /// with the engine, and the retried round re-derives the same masks.)
+    fn round_snapshot(&self) -> (Pcg64, Option<ScenarioState>, u64) {
+        (self.rng.clone(), self.scenario.clone(), self.delay_rounds)
+    }
+
+    fn unwind_failed_round<T>(
+        &mut self,
+        snapshot: (Pcg64, Option<ScenarioState>, u64),
+        res: Result<T>,
+    ) -> Result<T> {
+        if res.is_err() {
+            let (rng, scenario, delay_rounds) = snapshot;
+            self.rng = rng;
+            self.scenario = scenario;
+            self.delay_rounds = delay_rounds;
+        }
+        res
+    }
+
     /// One gradient round: broadcast `w`, workers stream `(g_i, f_i)`
     /// responses, leader admits the first k (or exactly the scripted set
     /// when a [`Scenario`] with an `admit:` policy is attached). Returns
     /// the admitted responses (admitted order) and the round record;
     /// advances the simulated clock.
     pub fn grad_round(&mut self, w: &[f64]) -> Result<(GradResponses, Round)> {
+        let snapshot = self.round_snapshot();
+        let res = self.grad_round_impl(w);
+        self.unwind_failed_round(snapshot, res)
+    }
+
+    fn grad_round_impl(&mut self, w: &[f64]) -> Result<(GradResponses, Round)> {
         let m = self.cfg.workers;
         let (mut delays, script) = self.stage_round();
         let (responses, mut round) = match self.cfg.clock {
@@ -674,6 +790,16 @@ impl Cluster {
     /// sampled rows (`b_i / rows_i` of the full-shard cost), so smaller
     /// batches finish proportionally faster on the simulated clock too.
     pub fn grad_batch_round(
+        &mut self,
+        w: &[f64],
+        plan: &BatchPlan,
+    ) -> Result<(GradResponses, Round)> {
+        let snapshot = self.round_snapshot();
+        let res = self.grad_batch_round_impl(w, plan);
+        self.unwind_failed_round(snapshot, res)
+    }
+
+    fn grad_batch_round_impl(
         &mut self,
         w: &[f64],
         plan: &BatchPlan,
@@ -723,6 +849,12 @@ impl Cluster {
     /// One line-search round over a fresh first-k set `D_t` (eq. (3)).
     /// Advances the scenario script like every other round.
     pub fn linesearch_round(&mut self, d: &[f64]) -> Result<(CurvResponses, Round)> {
+        let snapshot = self.round_snapshot();
+        let res = self.linesearch_round_impl(d);
+        self.unwind_failed_round(snapshot, res)
+    }
+
+    fn linesearch_round_impl(&mut self, d: &[f64]) -> Result<(CurvResponses, Round)> {
         let m = self.cfg.workers;
         let (mut delays, script) = self.stage_round();
         let (responses, mut round) = match self.cfg.clock {
@@ -1339,6 +1471,92 @@ mod tests {
         assert!(c.set_scenario(Scenario::parse("crash:7@0").unwrap()).is_ok());
         c.clear_scenario();
         assert!(c.scenario().is_none());
+    }
+
+    /// Scenario crashes must park the resident pool worker (thread and
+    /// shard stay; fan-out skips it) and recover must unpark it — the
+    /// crash-park invariant, observed through the engine session.
+    #[test]
+    fn scenario_crash_parks_engine_worker_and_recover_rejoins() {
+        let (_, mut c) = cluster(4, DelayModel::None, 0);
+        c.set_scenario(Scenario::parse("crash:3@1,leave:1@1,recover:3@3,join:1@4").unwrap())
+            .unwrap();
+        let w = vec![0.1; 6];
+        let expect_parked = [0usize, 2, 2, 1, 0, 0];
+        for (t, want) in expect_parked.iter().enumerate() {
+            let (_, round) = c.grad_round(&w).unwrap();
+            let got = c.engine_session().expect("native engine session").parked_count();
+            assert_eq!(got, *want, "round {t}: parked count");
+            assert_eq!(round.failed.len(), *want, "round {t}: failed count");
+        }
+        // detaching the scenario unparks everyone
+        c.set_scenario(Scenario::parse("crash:0@0").unwrap()).unwrap();
+        c.grad_round(&w).unwrap();
+        assert_eq!(c.engine_session().unwrap().parked_count(), 1);
+        c.clear_scenario();
+        assert_eq!(c.engine_session().unwrap().parked_count(), 0);
+    }
+
+    /// Round dispatch must never spawn threads: the pool spawns once, on
+    /// the first round, and the count stays put over every round shape.
+    #[test]
+    fn round_dispatch_never_spawns_after_pool_startup() {
+        let (enc, mut c) = cluster(5, DelayModel::Exp { mean_ms: 10.0 }, 3);
+        let w = vec![0.1; 6];
+        c.grad_round(&w).unwrap();
+        let spawned = c.engine_session().unwrap().spawn_count();
+        assert!(spawned > 0);
+        let mut rng = crate::rng::Pcg64::seeded(2);
+        let plan = enc.sample_batch(0.5, &mut rng);
+        for _ in 0..5 {
+            c.grad_round(&w).unwrap();
+            c.grad_batch_round(&w, &plan).unwrap();
+            c.linesearch_round(&w).unwrap();
+        }
+        assert_eq!(c.engine_session().unwrap().spawn_count(), spawned);
+    }
+
+    /// `into_engine` hands the resident pool back for the next run:
+    /// rounds through the recycled engine match a fresh engine's bitwise.
+    #[test]
+    fn into_engine_recycles_the_pool_across_runs() {
+        let (enc, mut c1) = cluster(4, DelayModel::Exp { mean_ms: 10.0 }, 7);
+        let w = vec![0.2; 6];
+        for _ in 0..3 {
+            c1.grad_round(&w).unwrap();
+        }
+        let engine = c1.into_engine();
+        let cfg = ClusterConfig {
+            workers: 8,
+            wait_for: 4,
+            delay: DelayModel::Exp { mean_ms: 10.0 },
+            clock: ClockMode::Virtual,
+            ms_per_mflop: 0.5,
+            seed: 7,
+        };
+        let mut recycled = Cluster::new(&enc, engine, cfg).unwrap();
+        let (_, mut fresh) = cluster(4, DelayModel::Exp { mean_ms: 10.0 }, 7);
+        for _ in 0..4 {
+            let (ra, round_a) = recycled.grad_round(&w).unwrap();
+            let (rb, round_b) = fresh.grad_round(&w).unwrap();
+            assert_eq!(round_a.admitted, round_b.admitted);
+            assert_eq!(round_a.elapsed_ms.to_bits(), round_b.elapsed_ms.to_bits());
+            for (a, b) in ra.iter().zip(&rb) {
+                assert_eq!(a.0, b.0);
+                assert_eq!(a.2.to_bits(), b.2.to_bits());
+            }
+        }
+    }
+
+    /// The debug-build guard on the delay RNG: drawing a second schedule
+    /// within one round (out of round order) must fail loudly.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "delay RNG sampled out of round order")]
+    fn delay_rng_out_of_round_order_sampling_is_caught() {
+        let (_, mut c) = cluster(4, DelayModel::Exp { mean_ms: 10.0 }, 0);
+        let _ = c.sample_delays();
+        let _ = c.sample_delays();
     }
 
     /// Measured mode respects fail-stop workers: their responses are

@@ -50,7 +50,7 @@ pub mod prelude {
     };
     pub use crate::problem::{BatchPlan, EncodedProblem, QuadProblem, Scheme};
     pub use crate::runtime::{
-        build_engine, build_engine_with, ComputeEngine, CurvCollector, EngineKind, GradCollector,
-        NativeEngine, XlaEngine,
+        build_engine, build_engine_with, ComputeEngine, CurvCollector, EngineKind, EngineSession,
+        GradCollector, NativeEngine, WorkerPool, XlaEngine,
     };
 }

@@ -19,7 +19,7 @@ use crate::encoding::EncoderKind;
 use crate::linalg::{self, Mat, StorageKind};
 use crate::optim::{CodedLbfgs, LbfgsConfig, Optimizer};
 use crate::problem::{EncodedProblem, QuadProblem};
-use crate::runtime::{build_engine_with, EngineKind};
+use crate::runtime::{build_engine_with, ComputeEngine, EngineKind};
 use anyhow::{anyhow, ensure, Result};
 
 /// MF training configuration (defaults = the paper's §5 settings).
@@ -284,6 +284,14 @@ impl MfOutput {
 }
 
 /// Solve one ridge subproblem; returns (w, sim_ms, was_distributed).
+///
+/// `engine_pool` is the run's resident distributed engine: the first
+/// distributed solve builds it (spawning the native engine's persistent
+/// worker pool once), every later solve *reconfigures* it in place onto
+/// the new encoded subproblem through its
+/// [`EngineSession`](crate::runtime::EngineSession) — thousands of ALS
+/// subsolves share one set of resident threads instead of respawning a
+/// fan-out per solve. Engines without a session fall back to a rebuild.
 #[allow(clippy::too_many_arguments)]
 fn solve_subproblem(
     a: Mat,
@@ -292,6 +300,7 @@ fn solve_subproblem(
     warm: Vec<f64>,
     cfg: &MfConfig,
     bank: &mut EncoderBank,
+    engine_pool: &mut Option<Box<dyn ComputeEngine>>,
     sub_seed: u64,
     capped: &mut usize,
 ) -> Result<(Vec<f64>, f64, bool)> {
@@ -339,7 +348,17 @@ fn solve_subproblem(
             EncodedProblem::encode_with_stored(&prob, encoder, bank_kind, cfg.m, cfg.storage)?
         }
     };
-    let engine = build_engine_with(EngineKind::Native, &enc, cfg.threads)?;
+    let mut staged = engine_pool.take();
+    let reused = staged
+        .as_mut()
+        .and_then(|e| e.session())
+        .map(|s| s.reconfigure(&enc).is_ok())
+        .unwrap_or(false);
+    let engine = if reused {
+        staged.expect("reused engine present")
+    } else {
+        build_engine_with(EngineKind::Native, &enc, cfg.threads)?
+    };
     let ccfg = ClusterConfig {
         workers: cfg.m,
         wait_for: cfg.k,
@@ -367,7 +386,10 @@ fn solve_subproblem(
     } else {
         warm
     };
-    Ok((w, cluster.sim_ms, true))
+    let sim_ms = cluster.sim_ms;
+    // hand the engine (and its resident pool) back for the next solve
+    *engine_pool = Some(cluster.into_engine());
+    Ok((w, sim_ms, true))
 }
 
 /// Train the MF model with coded distributed alternating minimization.
@@ -399,6 +421,9 @@ pub fn train(train_set: &Ratings, test_set: &Ratings, cfg: &MfConfig) -> Result<
     };
 
     let mut bank = EncoderBank::new(cfg.encoder, cfg.beta, cfg.seed);
+    // one resident distributed engine for the whole run: built at the
+    // first distributed solve, reconfigured in place for every later one
+    let mut engine_pool: Option<Box<dyn ComputeEngine>> = None;
     let mut out = MfOutput {
         model: model.clone(),
         train_rmse: Vec::new(),
@@ -430,8 +455,17 @@ pub fn train(train_set: &Ratings, test_set: &Ratings, cfg: &MfConfig) -> Result<
             let mut warm = model.x.row(user).to_vec();
             warm.push(model.u[user]);
             let sub_seed = cfg.seed ^ (epoch as u64) << 40 ^ (user as u64) << 1;
-            let (w, ms, dist) =
-                solve_subproblem(a, t, cfg.lambda, warm, cfg, &mut bank, sub_seed, &mut out.capped)?;
+            let (w, ms, dist) = solve_subproblem(
+                a,
+                t,
+                cfg.lambda,
+                warm,
+                cfg,
+                &mut bank,
+                &mut engine_pool,
+                sub_seed,
+                &mut out.capped,
+            )?;
             model.x.row_mut(user).copy_from_slice(&w[..p]);
             model.u[user] = w[p];
             if dist {
@@ -462,8 +496,17 @@ pub fn train(train_set: &Ratings, test_set: &Ratings, cfg: &MfConfig) -> Result<
             let mut warm = model.y.row(item).to_vec();
             warm.push(model.v[item]);
             let sub_seed = cfg.seed ^ (epoch as u64) << 40 ^ 0x8000_0000 ^ (item as u64) << 1;
-            let (w, ms, dist) =
-                solve_subproblem(a, t, cfg.lambda, warm, cfg, &mut bank, sub_seed, &mut out.capped)?;
+            let (w, ms, dist) = solve_subproblem(
+                a,
+                t,
+                cfg.lambda,
+                warm,
+                cfg,
+                &mut bank,
+                &mut engine_pool,
+                sub_seed,
+                &mut out.capped,
+            )?;
             model.y.row_mut(item).copy_from_slice(&w[..p]);
             model.v[item] = w[p];
             if dist {
@@ -642,6 +685,24 @@ mod tests {
             assert_eq!(a.to_bits(), b.to_bits(), "thread cap changed the trained model");
         }
         assert_eq!(one.dist_solves, many.dist_solves);
+    }
+
+    #[test]
+    fn resident_engine_reuse_is_deterministic() {
+        // one pool serves every distributed solve (built once,
+        // reconfigured in place); two identical runs must produce
+        // bitwise-identical models and simulated times
+        let all = synthetic_movielens(&SyntheticConfig::small(18));
+        let (tr, te) = all.split(0.2, 10);
+        let cfg = tiny_cfg(EncoderKind::Hadamard, 3);
+        let a = train(&tr, &te, &cfg).unwrap();
+        let b = train(&tr, &te, &cfg).unwrap();
+        assert!(a.dist_solves > 1, "fixture must exercise engine reuse");
+        for (x, y) in a.train_rmse.iter().zip(&b.train_rmse) {
+            assert_eq!(x.to_bits(), y.to_bits(), "reused pool changed the model");
+        }
+        assert_eq!(a.sim_ms.to_bits(), b.sim_ms.to_bits());
+        assert_eq!(a.dist_solves, b.dist_solves);
     }
 
     #[test]

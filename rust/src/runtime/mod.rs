@@ -3,9 +3,10 @@
 //! The coordinator is engine-agnostic. Two engines implement the same
 //! [`ComputeEngine`] contract:
 //!
-//! * [`NativeEngine`] — pure-Rust fused kernels (`Mat::fused_grad`),
-//!   multithreaded across workers. Default for simulation-scale runs and
-//!   the deterministic test suite.
+//! * [`NativeEngine`] — pure-Rust fused kernels (`Mat::fused_grad`) over
+//!   the persistent shard-owning [`WorkerPool`] (see [`pool`]): resident
+//!   threads spawned once per run, zero per-round spawns. Default for
+//!   simulation-scale runs and the deterministic test suite.
 //! * [`XlaEngine`] — the production path: loads the HLO-text artifacts the
 //!   Python L2/L1 layers AOT-compiled (`make artifacts`), compiles them on
 //!   the PJRT CPU client once, stages each worker's shard as persistent
@@ -20,14 +21,22 @@
 //! through a [`stream::Collector`] as each worker finishes, which is what
 //! the cluster's event-driven first-k gather and straggler cancellation
 //! run on (see [`stream`]).
+//!
+//! Engines with resident per-run state additionally expose an
+//! [`EngineSession`] through [`ComputeEngine::session`]: parking (the
+//! crash-park invariant) and in-place problem reconfiguration. The
+//! default is `None` — stateless engines, and the fail-fast [`XlaEngine`]
+//! stub, opt out and callers fall back to the historical rebuild paths.
 
 pub mod artifacts;
 pub mod native;
+pub mod pool;
 pub mod stream;
 pub mod xla_engine;
 
 pub use artifacts::Manifest;
 pub use native::NativeEngine;
+pub use pool::WorkerPool;
 pub use stream::{Collected, Collector, CurvCollector, GradCollector};
 pub use xla_engine::XlaEngine;
 
@@ -99,8 +108,8 @@ pub trait ComputeEngine: Send {
     ///
     /// Default: serial loop with per-worker timing and a cancellation
     /// check between workers (correct for any engine; no cross-worker
-    /// parallelism). [`NativeEngine`] overrides this with one OS thread
-    /// per worker shard.
+    /// parallelism). [`NativeEngine`] overrides this with one command per
+    /// resident pool lane (zero per-round spawns; see [`pool`]).
     fn worker_grad_streamed(&mut self, w: &[f64], sink: &GradCollector) -> Result<()> {
         for i in 0..self.workers() {
             if sink.is_cancelled() {
@@ -144,7 +153,7 @@ pub trait ComputeEngine: Send {
     ///
     /// Default: serial loop (correct for any engine that implements
     /// `worker_grad_batch`); [`NativeEngine`] overrides this with one
-    /// scoped thread per worker shard, mirroring its full-gradient
+    /// command per resident pool lane, mirroring its full-gradient
     /// streaming fan-out.
     fn worker_grad_batch_streamed(
         &mut self,
@@ -180,17 +189,53 @@ pub trait ComputeEngine: Send {
 
     /// Worker count.
     fn workers(&self) -> usize;
+
+    /// The engine's stateful per-run session, if it keeps resident
+    /// worker state ([`NativeEngine`]'s persistent pool does; the
+    /// default — inherited by the XLA engine and any stateless mock —
+    /// is `None`, and callers fall back to the historical behavior:
+    /// crashed workers compute discarded responses, and problem swaps
+    /// rebuild the engine).
+    fn session(&mut self) -> Option<&mut dyn EngineSession> {
+        None
+    }
+}
+
+/// Stateful session surface for engines with resident per-run workers
+/// (the persistent [`WorkerPool`]). Obtained via
+/// [`ComputeEngine::session`]; every method is a command to the resident
+/// state, never a respawn.
+pub trait EngineSession {
+    /// Park (`true`) or unpark (`false`) one worker: a parked worker's
+    /// shard and scratch stay resident but round fan-out skips it — the
+    /// crash-park invariant the cluster maps scenario `crash:`/`leave:`
+    /// events onto (and `recover:`/`join:` reverses). Infallible: a dead
+    /// lane surfaces on the next round dispatch instead.
+    fn set_parked(&mut self, worker: usize, parked: bool);
+
+    /// Number of currently parked workers.
+    fn parked_count(&self) -> usize;
+
+    /// Swap the staged problem in place, keeping the resident threads
+    /// (park flags reset, worker count may change). Engines whose staged
+    /// state cannot be swapped return an error and the caller rebuilds.
+    fn reconfigure(&mut self, prob: &EncodedProblem) -> Result<()>;
+
+    /// Total OS threads this engine ever spawned (monotonic; constant
+    /// across rounds once the pool is up — the zero-per-round-spawn
+    /// invariant, asserted by `rust/tests/pool_equivalence.rs`).
+    fn spawn_count(&self) -> u64;
 }
 
 /// Build an engine over the problem's shards (native engine at its
-/// default thread bound — available parallelism).
+/// default pool size — available parallelism).
 pub fn build_engine(kind: EngineKind, prob: &EncodedProblem) -> Result<Box<dyn ComputeEngine>> {
     build_engine_with(kind, prob, 0)
 }
 
-/// [`build_engine`] with an explicit worker fan-out thread cap for the
-/// native engine (`0` = available parallelism — the default). The XLA
-/// engine ignores `threads`: its parallelism lives inside PJRT.
+/// [`build_engine`] with an explicit pool size for the native engine's
+/// resident worker pool (`0` = available parallelism — the default). The
+/// XLA engine ignores `threads`: its parallelism lives inside PJRT.
 pub fn build_engine_with(
     kind: EngineKind,
     prob: &EncodedProblem,

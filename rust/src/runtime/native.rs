@@ -1,61 +1,90 @@
-//! Pure-Rust compute engine: the fused worker kernels on std threads.
+//! Pure-Rust compute engine: a thin client of the persistent
+//! [`WorkerPool`](super::pool::WorkerPool).
 //!
-//! Two fan-out shapes:
-//! * `worker_grad_all` / `linesearch_all` — batch: shards are chunked over
-//!   a bounded thread pool, all results returned together.
-//! * `worker_grad_streamed` / `linesearch_streamed` — streaming: one
-//!   scoped thread per worker shard (capped at the engine's thread
-//!   bound), each delivering into the round's
-//!   [`Collector`](super::stream::Collector) the moment a shard finishes,
-//!   with that worker's own wall-clock compute time; threads observe the
-//!   collector's cancellation flag and skip remaining shards once the
-//!   leader has admitted k responses.
+//! Historically this engine re-entered `std::thread::scope` for every
+//! round (five spawn sites); it is now stateless glue: construction
+//! stages the shards, the first dispatch moves them into a resident
+//! worker pool (one spawn, ever), and every [`ComputeEngine`] method is a
+//! command dispatch to the pool's shard-owning lanes. Round semantics —
+//! per-worker timing, delivery order within a lane, cancellation checks
+//! before each shard — are identical to the scoped-spawn engine, which is
+//! pinned bit-for-bit by `rust/tests/pool_equivalence.rs`.
+//!
+//! The engine also implements the stateful [`EngineSession`] surface:
+//! scenario crashes park resident workers instead of wasting their
+//! compute, and [`EngineSession::reconfigure`] swaps the staged problem
+//! without respawning threads (the MF trainer reuses one pool across
+//! thousands of subproblem solves).
 
+use super::pool::{Slot, WorkerPool};
 use super::stream::{CurvCollector, GradCollector};
-use super::ComputeEngine;
-use crate::linalg::{self, DataMat};
+use super::{ComputeEngine, EngineSession};
 use crate::problem::{BatchPlan, EncodedProblem};
 use anyhow::Result;
 
-/// One worker's staged data + scratch (no allocation on the hot path).
-/// The shard keeps whatever storage backend the partitioner produced —
-/// the fused kernels are storage-dispatched inside [`DataMat`].
-struct Slot {
-    x: DataMat,
-    y: Vec<f64>,
-    grad_buf: Vec<f64>,
-    resid_buf: Vec<f64>,
+/// Staged-or-running pool state. Staging is lazy so `with_threads` can
+/// size the pool before any thread exists, and so the many short-lived
+/// engines constructed by tests/benches spawn nothing until first use.
+enum State {
+    /// Shards staged, pool not yet spawned.
+    Staged { slots: Vec<Slot>, threads: usize },
+    /// Resident pool running.
+    Running(WorkerPool),
 }
 
-/// Fused-kernel engine; `worker_grad_all` fans out over std threads.
+/// Fused-kernel engine over the persistent worker pool.
 pub struct NativeEngine {
-    slots: Vec<Slot>,
+    state: State,
     p: usize,
-    threads: usize,
+    workers: usize,
 }
 
 impl NativeEngine {
     /// Stage every shard of `prob` (data + preallocated scratch buffers).
+    /// The pool itself spawns on first dispatch.
     pub fn new(prob: &EncodedProblem) -> Self {
-        let p = prob.p();
-        let slots = prob
-            .shards
-            .iter()
-            .map(|s| Slot {
-                x: s.x.clone(),
-                y: s.y.clone(),
-                grad_buf: vec![0.0; p],
-                resid_buf: vec![0.0; s.x.rows()],
-            })
-            .collect();
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        NativeEngine { slots, p, threads }
+        NativeEngine {
+            state: State::Staged { slots: Slot::stage(prob), threads: 0 },
+            p: prob.p(),
+            workers: prob.m(),
+        }
     }
 
-    /// Cap the fan-out thread count (bench/tuning hook).
+    /// Cap the pool size (at most `min(threads, m)` lanes; `0` =
+    /// available parallelism, the same sentinel [`WorkerPool::new`] and
+    /// the `--threads` flag use). Must be called before the first dispatch —
+    /// the pool spawns once and its lane count is fixed for the engine's
+    /// lifetime.
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
+        match &mut self.state {
+            State::Staged { threads: t, .. } => *t = threads,
+            State::Running(_) => {
+                panic!("with_threads must be called before the engine's first dispatch")
+            }
+        }
         self
+    }
+
+    /// The resident pool, spawning it from the staged shards on first use.
+    fn pool(&mut self) -> &mut WorkerPool {
+        if let State::Staged { slots, threads } = &mut self.state {
+            let pool = WorkerPool::from_slots(std::mem::take(slots), *threads);
+            self.state = State::Running(pool);
+        }
+        match &mut self.state {
+            State::Running(pool) => pool,
+            State::Staged { .. } => unreachable!("pool just spawned"),
+        }
+    }
+
+    /// Problem dimension p.
+    pub fn dim(&self) -> usize {
+        self.p
+    }
+
+    /// Resident lane count (spawns the pool if still staged).
+    pub fn pool_size(&mut self) -> usize {
+        self.pool().size()
     }
 }
 
@@ -65,109 +94,28 @@ impl ComputeEngine for NativeEngine {
     }
 
     fn worker_grad(&mut self, worker: usize, w: &[f64]) -> Result<(Vec<f64>, f64)> {
-        let slot = &mut self.slots[worker];
-        let f = slot.x.fused_grad(w, &slot.y, &mut slot.grad_buf, &mut slot.resid_buf);
-        Ok((slot.grad_buf.clone(), f))
+        self.pool().grad_one(worker, w)
     }
 
     fn linesearch(&mut self, worker: usize, d: &[f64]) -> Result<f64> {
-        let slot = &mut self.slots[worker];
-        slot.x.gemv_into(d, &mut slot.resid_buf);
-        Ok(linalg::dot(&slot.resid_buf, &slot.resid_buf))
+        self.pool().curv_one(worker, d)
     }
 
     fn worker_grad_all(&mut self, w: &[f64]) -> Result<Vec<(Vec<f64>, f64)>> {
-        let threads = self.threads.min(self.slots.len()).max(1);
-        if threads == 1 {
-            return (0..self.slots.len()).map(|i| self.worker_grad(i, w)).collect();
-        }
-        let mut out: Vec<(Vec<f64>, f64)> = Vec::with_capacity(self.slots.len());
-        let chunk = self.slots.len().div_ceil(threads);
-        let results: Vec<Vec<(Vec<f64>, f64)>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .slots
-                .chunks_mut(chunk)
-                .map(|slots| {
-                    scope.spawn(move || {
-                        slots
-                            .iter_mut()
-                            .map(|slot| {
-                                let f = slot.x.fused_grad(
-                                    w,
-                                    &slot.y,
-                                    &mut slot.grad_buf,
-                                    &mut slot.resid_buf,
-                                );
-                                (slot.grad_buf.clone(), f)
-                            })
-                            .collect()
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-        });
-        for r in results {
-            out.extend(r);
-        }
-        Ok(out)
+        self.pool().grad_all(w)
     }
 
     fn linesearch_all(&mut self, d: &[f64]) -> Result<Vec<f64>> {
-        let threads = self.threads.min(self.slots.len()).max(1);
-        if threads == 1 {
-            return (0..self.slots.len()).map(|i| self.linesearch(i, d)).collect();
-        }
-        let chunk = self.slots.len().div_ceil(threads);
-        let results: Vec<Vec<f64>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .slots
-                .chunks_mut(chunk)
-                .map(|slots| {
-                    scope.spawn(move || {
-                        slots
-                            .iter_mut()
-                            .map(|slot| {
-                                slot.x.gemv_into(d, &mut slot.resid_buf);
-                                linalg::dot(&slot.resid_buf, &slot.resid_buf)
-                            })
-                            .collect()
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-        });
-        Ok(results.into_iter().flatten().collect())
+        self.pool().curv_all(d)
     }
 
-    /// One scoped thread per worker shard, capped at the engine's thread
-    /// bound ([`NativeEngine::with_threads`]): with fewer threads than
-    /// shards, each thread walks a contiguous shard range, still timing
-    /// and delivering every worker individually and checking the
-    /// cancellation flag before each shard.
+    /// One pool command per resident lane; each lane walks its owned
+    /// shard range, timing and delivering every worker individually and
+    /// checking the cancellation flag before each shard (the exact
+    /// semantics of the historical one-scoped-thread-per-chunk fan-out,
+    /// minus the per-round spawns).
     fn worker_grad_streamed(&mut self, w: &[f64], sink: &GradCollector) -> Result<()> {
-        let threads = self.threads.min(self.slots.len()).max(1);
-        let chunk = self.slots.len().div_ceil(threads);
-        std::thread::scope(|scope| {
-            for (ci, slots) in self.slots.chunks_mut(chunk).enumerate() {
-                scope.spawn(move || {
-                    for (j, slot) in slots.iter_mut().enumerate() {
-                        if sink.is_cancelled() {
-                            return;
-                        }
-                        let t0 = std::time::Instant::now();
-                        let f = slot.x.fused_grad(
-                            w,
-                            &slot.y,
-                            &mut slot.grad_buf,
-                            &mut slot.resid_buf,
-                        );
-                        let ms = t0.elapsed().as_secs_f64() * 1e3;
-                        sink.deliver(ci * chunk + j, (slot.grad_buf.clone(), f), ms);
-                    }
-                });
-            }
-        });
-        Ok(())
+        self.pool().grad_streamed(w, sink)
     }
 
     fn worker_grad_batch(
@@ -176,19 +124,11 @@ impl ComputeEngine for NativeEngine {
         w: &[f64],
         segs: &[(usize, usize)],
     ) -> Result<(Vec<f64>, f64)> {
-        let slot = &mut self.slots[worker];
-        slot.grad_buf.fill(0.0);
-        let mut f = 0.0;
-        for &(lo, hi) in segs {
-            f += slot
-                .x
-                .fused_grad_range(w, &slot.y, &mut slot.grad_buf, &mut slot.resid_buf, lo, hi);
-        }
-        Ok((slot.grad_buf.clone(), f))
+        self.pool().grad_batch_one(worker, w, segs)
     }
 
-    /// Streamed mini-batch gradient rounds; same fan-out shape as
-    /// [`ComputeEngine::worker_grad_streamed`], with each worker running
+    /// Streamed mini-batch gradient rounds; same dispatch shape as
+    /// [`ComputeEngine::worker_grad_streamed`], with each lane running
     /// the range-restricted fused kernel over its [`BatchPlan`] segments.
     fn worker_grad_batch_streamed(
         &mut self,
@@ -196,72 +136,53 @@ impl ComputeEngine for NativeEngine {
         plan: &BatchPlan,
         sink: &GradCollector,
     ) -> Result<()> {
-        assert_eq!(plan.workers(), self.slots.len(), "batch plan worker count mismatch");
-        let threads = self.threads.min(self.slots.len()).max(1);
-        let chunk = self.slots.len().div_ceil(threads);
-        std::thread::scope(|scope| {
-            for (ci, slots) in self.slots.chunks_mut(chunk).enumerate() {
-                scope.spawn(move || {
-                    for (j, slot) in slots.iter_mut().enumerate() {
-                        if sink.is_cancelled() {
-                            return;
-                        }
-                        let wid = ci * chunk + j;
-                        let t0 = std::time::Instant::now();
-                        slot.grad_buf.fill(0.0);
-                        let mut f = 0.0;
-                        for &(lo, hi) in &plan.segments[wid] {
-                            f += slot.x.fused_grad_range(
-                                w,
-                                &slot.y,
-                                &mut slot.grad_buf,
-                                &mut slot.resid_buf,
-                                lo,
-                                hi,
-                            );
-                        }
-                        let ms = t0.elapsed().as_secs_f64() * 1e3;
-                        sink.deliver(wid, (slot.grad_buf.clone(), f), ms);
-                    }
-                });
-            }
-        });
-        Ok(())
+        self.pool().grad_batch_streamed(w, plan, sink)
     }
 
-    /// Streamed line-search rounds; same fan-out shape as
+    /// Streamed line-search rounds; same dispatch shape as
     /// [`ComputeEngine::worker_grad_streamed`].
     fn linesearch_streamed(&mut self, d: &[f64], sink: &CurvCollector) -> Result<()> {
-        let threads = self.threads.min(self.slots.len()).max(1);
-        let chunk = self.slots.len().div_ceil(threads);
-        std::thread::scope(|scope| {
-            for (ci, slots) in self.slots.chunks_mut(chunk).enumerate() {
-                scope.spawn(move || {
-                    for (j, slot) in slots.iter_mut().enumerate() {
-                        if sink.is_cancelled() {
-                            return;
-                        }
-                        let t0 = std::time::Instant::now();
-                        slot.x.gemv_into(d, &mut slot.resid_buf);
-                        let q = linalg::dot(&slot.resid_buf, &slot.resid_buf);
-                        let ms = t0.elapsed().as_secs_f64() * 1e3;
-                        sink.deliver(ci * chunk + j, q, ms);
-                    }
-                });
-            }
-        });
-        Ok(())
+        self.pool().curv_streamed(d, sink)
     }
 
     fn workers(&self) -> usize {
-        self.slots.len()
+        self.workers
+    }
+
+    fn session(&mut self) -> Option<&mut dyn EngineSession> {
+        Some(self)
     }
 }
 
-impl NativeEngine {
-    /// Problem dimension p.
-    pub fn dim(&self) -> usize {
-        self.p
+impl EngineSession for NativeEngine {
+    fn set_parked(&mut self, worker: usize, parked: bool) {
+        self.pool().set_parked(worker, parked);
+    }
+
+    fn parked_count(&self) -> usize {
+        match &self.state {
+            State::Staged { .. } => 0,
+            State::Running(pool) => pool.parked().iter().filter(|&&x| x).count(),
+        }
+    }
+
+    fn reconfigure(&mut self, prob: &EncodedProblem) -> Result<()> {
+        // swap the staged state first: a failed swap (dead lane) must not
+        // leave the engine advertising the new problem's dimensions
+        match &mut self.state {
+            State::Staged { slots, .. } => *slots = Slot::stage(prob),
+            State::Running(pool) => pool.reconfigure(prob)?,
+        }
+        self.p = prob.p();
+        self.workers = prob.m();
+        Ok(())
+    }
+
+    fn spawn_count(&self) -> u64 {
+        match &self.state {
+            State::Staged { .. } => 0,
+            State::Running(pool) => pool.spawn_count(),
+        }
     }
 }
 
@@ -269,6 +190,7 @@ impl NativeEngine {
 mod tests {
     use super::*;
     use crate::encoding::EncoderKind;
+    use crate::linalg;
     use crate::problem::QuadProblem;
 
     fn engine() -> (EncodedProblem, NativeEngine) {
@@ -328,6 +250,7 @@ mod tests {
         let w = vec![0.4; 6];
         let out = eng.worker_grad_all(&w).unwrap();
         assert_eq!(out.len(), 8);
+        assert_eq!(eng.pool_size(), 1);
     }
 
     #[test]
@@ -438,5 +361,47 @@ mod tests {
             let (qs, _) = got.responses[i].unwrap();
             assert_eq!(qs.to_bits(), qb.to_bits(), "worker {i} curvature differs");
         }
+    }
+
+    #[test]
+    fn session_parks_and_reconfigures_in_place() {
+        let (_, mut eng) = engine();
+        let w = vec![0.1; 6];
+        eng.worker_grad_all(&w).unwrap();
+        let spawned = {
+            let sess = eng.session().expect("native engine has a session");
+            sess.set_parked(5, true);
+            assert_eq!(sess.parked_count(), 1);
+            sess.spawn_count()
+        };
+        assert!(spawned > 0);
+        let sink = GradCollector::collect_all(8);
+        eng.worker_grad_streamed(&w, &sink).unwrap();
+        assert!(sink.into_collected().responses[5].is_none());
+        // reconfigure onto a different problem, keeping the threads
+        let prob2 = QuadProblem::synthetic_gaussian(48, 5, 0.1, 4);
+        let enc2 = EncodedProblem::encode(&prob2, EncoderKind::Identity, 1.0, 4, 0).unwrap();
+        eng.session().unwrap().reconfigure(&enc2).unwrap();
+        assert_eq!(eng.workers(), 4);
+        assert_eq!(eng.dim(), 5);
+        assert_eq!(eng.session().unwrap().spawn_count(), spawned);
+        let mut fresh = NativeEngine::new(&enc2);
+        let w2 = vec![0.2; 5];
+        let a = eng.worker_grad_all(&w2).unwrap();
+        let b = fresh.worker_grad_all(&w2).unwrap();
+        for ((ga, fa), (gb, fb)) in a.iter().zip(&b) {
+            assert_eq!(fa.to_bits(), fb.to_bits());
+            for (x, y) in ga.iter().zip(gb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn staged_engine_spawns_nothing_until_first_dispatch() {
+        let (_, mut eng) = engine();
+        assert_eq!(eng.session().unwrap().spawn_count(), 0, "staging must not spawn");
+        eng.worker_grad(0, &[0.0; 6]).unwrap();
+        assert!(eng.session().unwrap().spawn_count() > 0);
     }
 }

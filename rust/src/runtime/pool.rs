@@ -1,0 +1,753 @@
+//! Persistent worker pool: shard-owning resident threads with zero
+//! per-round spawn.
+//!
+//! The historical native engine re-entered `std::thread::scope` for every
+//! round, so each GD/SGD/L-BFGS/FISTA iteration paid thread creation,
+//! shard re-borrow, and stack setup — overhead a real m-node deployment
+//! amortizes exactly once, at cluster start. [`WorkerPool`] is that
+//! amortization: a fixed set of **lanes** (OS threads) spawned once, each
+//! *owning* a contiguous range of worker slots (shard data moved in at
+//! construction — no per-round borrow dance) plus a resident scratch
+//! buffer per worker, receiving round commands over a per-lane channel
+//! and streaming results into the round's
+//! [`Collector`](super::stream::Collector) exactly like the scoped-spawn
+//! engine did.
+//!
+//! # Command/response protocol
+//!
+//! Each lane runs a small state machine over its command channel:
+//!
+//! | command | effect | acknowledged |
+//! |---------|--------|--------------|
+//! | `Grad` | fused gradient over the lane's slots, streamed into the sink | yes |
+//! | `GradBatch` | range-restricted mini-batch gradient over a [`BatchPlan`] | yes |
+//! | `Curv` | line-search `‖X̃_i d‖²` per slot | yes |
+//! | `SetParked` | mark one owned worker parked/unparked | no (ordered channel) |
+//! | `Reconfigure` | replace the lane's slot range with a new problem's shards | yes |
+//! | `Shutdown` | exit the lane thread (sent by `Drop`) | no (joined) |
+//!
+//! Round dispatch sends one command per lane, then blocks on each lane's
+//! acknowledgement. A lane drops its [`Collector`](super::stream::Collector)
+//! handle *before* acknowledging, so when dispatch returns, the caller's handle is the
+//! only one left and `into_collected` succeeds. Broadcast vectors cross
+//! the channel as `Arc<[f64]>` — one copy into the Arc per round, one
+//! refcount bump per lane. Worker-side compute allocates nothing: the
+//! gradient/residual scratch is resident in each slot, and the only
+//! per-round allocations left are the round's *messages* (broadcast
+//! copy, mini-batch plan, collector, delivered payload clones) — exactly
+//! what a network backend would serialize anyway, and what
+//! `fig_dispatch` counts.
+//!
+//! # Crash-park invariant
+//!
+//! A scenario `crash:`/`leave:` event **parks** the worker instead of
+//! tearing down its lane: the slot (shard + scratch) stays resident and
+//! the lane simply skips it during round fan-out, so a later
+//! `recover:`/`join:` unparks it with zero restaging cost. Parking is an
+//! engine-side *compute-skipping* optimization only — admission already
+//! excludes crashed workers via delay/eligibility masks, which is why
+//! virtual-clock traces are bit-for-bit identical whether or not the
+//! engine supports parking (pinned by `rust/tests/pool_equivalence.rs`).
+//! Direct per-worker calls (`only = Some(w)`) ignore the parked flag:
+//! they are a staging/debug surface, not round fan-out.
+
+use super::stream::{CurvCollector, GradCollector};
+use crate::linalg::DataMat;
+use crate::problem::{BatchPlan, EncodedProblem};
+use anyhow::{anyhow, ensure, Result};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// One worker's resident data + scratch (the kernels allocate nothing;
+/// the delivered payload clone is the only per-worker allocation). The
+/// shard keeps whatever storage backend the partitioner produced — the
+/// fused kernels are storage-dispatched inside [`DataMat`].
+pub(crate) struct Slot {
+    x: DataMat,
+    y: Vec<f64>,
+    grad_buf: Vec<f64>,
+    resid_buf: Vec<f64>,
+}
+
+impl Slot {
+    /// Stage every shard of `prob` (data + preallocated scratch buffers).
+    pub(crate) fn stage(prob: &EncodedProblem) -> Vec<Slot> {
+        let p = prob.p();
+        prob.shards
+            .iter()
+            .map(|s| Slot {
+                x: s.x.clone(),
+                y: s.y.clone(),
+                grad_buf: vec![0.0; p],
+                resid_buf: vec![0.0; s.x.rows()],
+            })
+            .collect()
+    }
+}
+
+/// One round command shipped to a lane (module docs have the table).
+enum Command {
+    /// Full-shard gradient round.
+    Grad {
+        w: Arc<[f64]>,
+        sink: GradCollector,
+        only: Option<usize>,
+        skip_parked: bool,
+    },
+    /// Mini-batch gradient round over a [`BatchPlan`].
+    GradBatch {
+        w: Arc<[f64]>,
+        plan: Arc<BatchPlan>,
+        sink: GradCollector,
+        only: Option<usize>,
+    },
+    /// Line-search round.
+    Curv {
+        d: Arc<[f64]>,
+        sink: CurvCollector,
+        only: Option<usize>,
+        skip_parked: bool,
+    },
+    /// Park or unpark one owned worker (crash-park invariant).
+    SetParked { worker: usize, parked: bool },
+    /// Replace the lane's owned slots (problem swap between runs).
+    Reconfigure { base: usize, slots: Vec<Slot> },
+    /// Exit the lane thread.
+    Shutdown,
+}
+
+/// Lane-thread state: the owned worker range and its park mask.
+struct LaneState {
+    base: usize,
+    slots: Vec<Slot>,
+    parked: Vec<bool>,
+}
+
+impl LaneState {
+    fn run_grad(
+        &mut self,
+        w: &[f64],
+        sink: &GradCollector,
+        only: Option<usize>,
+        skip_parked: bool,
+    ) {
+        let LaneState { base, slots, parked } = self;
+        for (j, slot) in slots.iter_mut().enumerate() {
+            let wid = *base + j;
+            if let Some(o) = only {
+                if o != wid {
+                    continue;
+                }
+            } else if skip_parked && parked[j] {
+                continue;
+            }
+            if sink.is_cancelled() {
+                break;
+            }
+            let t0 = std::time::Instant::now();
+            let f = slot.x.fused_grad(w, &slot.y, &mut slot.grad_buf, &mut slot.resid_buf);
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            sink.deliver(wid, (slot.grad_buf.clone(), f), ms);
+        }
+    }
+
+    fn run_grad_batch(
+        &mut self,
+        w: &[f64],
+        plan: &BatchPlan,
+        sink: &GradCollector,
+        only: Option<usize>,
+    ) {
+        let LaneState { base, slots, parked } = self;
+        for (j, slot) in slots.iter_mut().enumerate() {
+            let wid = *base + j;
+            if let Some(o) = only {
+                if o != wid {
+                    continue;
+                }
+            } else if parked[j] {
+                continue;
+            }
+            if sink.is_cancelled() {
+                break;
+            }
+            let t0 = std::time::Instant::now();
+            slot.grad_buf.fill(0.0);
+            let mut f = 0.0;
+            for &(lo, hi) in &plan.segments[wid] {
+                f += slot.x.fused_grad_range(
+                    w,
+                    &slot.y,
+                    &mut slot.grad_buf,
+                    &mut slot.resid_buf,
+                    lo,
+                    hi,
+                );
+            }
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            sink.deliver(wid, (slot.grad_buf.clone(), f), ms);
+        }
+    }
+
+    fn run_curv(
+        &mut self,
+        d: &[f64],
+        sink: &CurvCollector,
+        only: Option<usize>,
+        skip_parked: bool,
+    ) {
+        let LaneState { base, slots, parked } = self;
+        for (j, slot) in slots.iter_mut().enumerate() {
+            let wid = *base + j;
+            if let Some(o) = only {
+                if o != wid {
+                    continue;
+                }
+            } else if skip_parked && parked[j] {
+                continue;
+            }
+            if sink.is_cancelled() {
+                break;
+            }
+            let t0 = std::time::Instant::now();
+            slot.x.gemv_into(d, &mut slot.resid_buf);
+            let q = crate::linalg::dot(&slot.resid_buf, &slot.resid_buf);
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            sink.deliver(wid, q, ms);
+        }
+    }
+}
+
+/// Lane main loop. Collector handles are dropped **before** the
+/// acknowledgement is sent — the dispatch side relies on this to unwrap
+/// the round's collector right after the last ack (see the module docs).
+/// Acks carry no payload: the round commands are infallible on the lane
+/// side, so the only failure mode is a dead lane, which dispatch
+/// observes as a channel disconnect.
+fn lane_main(mut st: LaneState, rx: Receiver<Command>, ack: Sender<()>) {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Command::Grad { w, sink, only, skip_parked } => {
+                st.run_grad(&w, &sink, only, skip_parked);
+                drop(sink);
+                drop(w);
+                let _ = ack.send(());
+            }
+            Command::GradBatch { w, plan, sink, only } => {
+                st.run_grad_batch(&w, &plan, &sink, only);
+                drop(sink);
+                drop(plan);
+                drop(w);
+                let _ = ack.send(());
+            }
+            Command::Curv { d, sink, only, skip_parked } => {
+                st.run_curv(&d, &sink, only, skip_parked);
+                drop(sink);
+                drop(d);
+                let _ = ack.send(());
+            }
+            Command::SetParked { worker, parked } => {
+                if let Some(j) = worker.checked_sub(st.base) {
+                    if j < st.parked.len() {
+                        st.parked[j] = parked;
+                    }
+                }
+            }
+            Command::Reconfigure { base, slots } => {
+                st.parked = vec![false; slots.len()];
+                st.base = base;
+                st.slots = slots;
+                let _ = ack.send(());
+            }
+            Command::Shutdown => break,
+        }
+    }
+}
+
+/// A lane: one resident OS thread plus its command/ack channels.
+struct Lane {
+    tx: Sender<Command>,
+    ack: Receiver<()>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The persistent worker pool (module docs have the full contract).
+///
+/// Workers are chunked contiguously with `chunk = ceil(m / min(threads, m))`
+/// (`threads = 0` resolves to available parallelism), one lane per
+/// chunk — `⌈m/chunk⌉` lanes, at most `min(threads, m)`; worker `w`
+/// lives on lane `w / chunk`. This is the same chunking the
+/// scoped-spawn engine used, so delivery semantics are unchanged.
+pub struct WorkerPool {
+    lanes: Vec<Lane>,
+    chunk: usize,
+    workers: usize,
+    spawned: u64,
+    /// Leader-side mirror of the per-worker park flags (diagnostics).
+    parked: Vec<bool>,
+    /// Set when a reconfigure failed partway (some lanes swapped, the
+    /// routing state did not): every later dispatch refuses cleanly
+    /// instead of routing worker ids over a half-swapped pool.
+    poisoned: bool,
+}
+
+impl WorkerPool {
+    /// Spawn a pool owning `prob`'s shards, with at most `threads` lanes
+    /// (`0` = available parallelism).
+    pub fn new(prob: &EncodedProblem, threads: usize) -> Self {
+        WorkerPool::from_slots(Slot::stage(prob), threads)
+    }
+
+    pub(crate) fn from_slots(slots: Vec<Slot>, threads: usize) -> Self {
+        let workers = slots.len();
+        let resolved = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        let lane_count = resolved.min(workers).max(1);
+        let chunk = workers.div_ceil(lane_count).max(1);
+        let mut lanes = Vec::with_capacity(lane_count);
+        let mut spawned = 0u64;
+        let mut slots = slots.into_iter();
+        let mut base = 0;
+        while base < workers {
+            let take = chunk.min(workers - base);
+            let lane_slots: Vec<Slot> = slots.by_ref().take(take).collect();
+            let (tx, rx) = mpsc::channel();
+            let (ack_tx, ack_rx) = mpsc::channel();
+            let st = LaneState { base, slots: lane_slots, parked: vec![false; take] };
+            let handle = std::thread::Builder::new()
+                .name(format!("codedopt-pool-{base}"))
+                .spawn(move || lane_main(st, rx, ack_tx))
+                .expect("spawning pool lane thread");
+            lanes.push(Lane { tx, ack: ack_rx, handle: Some(handle) });
+            spawned += 1;
+            base += take;
+        }
+        WorkerPool { lanes, chunk, workers, spawned, parked: vec![false; workers], poisoned: false }
+    }
+
+    /// Worker count the pool currently stages.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Number of resident lanes (OS threads).
+    pub fn size(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Total OS threads ever spawned by this pool. Constant after
+    /// construction — the zero-per-round-spawn invariant the dispatch
+    /// bench and equivalence tests assert structurally.
+    pub fn spawn_count(&self) -> u64 {
+        self.spawned
+    }
+
+    /// Leader-side view of the per-worker park flags.
+    pub fn parked(&self) -> &[bool] {
+        &self.parked
+    }
+
+    fn lane_of(&self, worker: usize) -> usize {
+        worker / self.chunk
+    }
+
+    /// Send one command per lane, then wait for every lane's ack. The ack
+    /// pass always drains every lane that was successfully sent to, so a
+    /// mid-broadcast failure cannot desynchronize later rounds.
+    fn broadcast(&mut self, mut make: impl FnMut(usize) -> Command) -> Result<()> {
+        ensure!(
+            !self.poisoned,
+            "worker pool poisoned by a failed reconfigure; rebuild the engine"
+        );
+        let mut sent = vec![false; self.lanes.len()];
+        let mut err: Option<anyhow::Error> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            match lane.tx.send(make(i)) {
+                Ok(()) => sent[i] = true,
+                Err(_) => {
+                    err.get_or_insert_with(|| anyhow!("pool lane {i} is gone (thread exited)"));
+                }
+            }
+        }
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if !sent[i] {
+                continue;
+            }
+            if lane.ack.recv().is_err() {
+                err.get_or_insert_with(|| anyhow!("pool lane {i} died mid-round"));
+            }
+        }
+        match err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Send one command to a single lane and wait for its ack.
+    fn dispatch_one(&mut self, lane_idx: usize, cmd: Command) -> Result<()> {
+        ensure!(
+            !self.poisoned,
+            "worker pool poisoned by a failed reconfigure; rebuild the engine"
+        );
+        let lane = &self.lanes[lane_idx];
+        lane.tx
+            .send(cmd)
+            .map_err(|_| anyhow!("pool lane {lane_idx} is gone (thread exited)"))?;
+        lane.ack
+            .recv()
+            .map_err(|_| anyhow!("pool lane {lane_idx} died mid-round"))
+    }
+
+    /// Stream one full-gradient round into `sink` (skips parked workers).
+    pub fn grad_streamed(&mut self, w: &[f64], sink: &GradCollector) -> Result<()> {
+        ensure!(sink.workers() == self.workers, "sink worker count mismatch");
+        let w: Arc<[f64]> = Arc::from(w);
+        self.broadcast(|_| Command::Grad {
+            w: w.clone(),
+            sink: sink.clone(),
+            only: None,
+            skip_parked: true,
+        })
+    }
+
+    /// Stream one mini-batch gradient round into `sink` (skips parked
+    /// workers). `plan` must cover exactly [`WorkerPool::workers`]; it is
+    /// cloned once (not per lane) to cross the channel — a few segment
+    /// tuples per worker, and the sampler mints a fresh plan each round
+    /// anyway.
+    pub fn grad_batch_streamed(
+        &mut self,
+        w: &[f64],
+        plan: &BatchPlan,
+        sink: &GradCollector,
+    ) -> Result<()> {
+        assert_eq!(plan.workers(), self.workers, "batch plan worker count mismatch");
+        ensure!(sink.workers() == self.workers, "sink worker count mismatch");
+        let w: Arc<[f64]> = Arc::from(w);
+        let plan = Arc::new(plan.clone());
+        self.broadcast(|_| Command::GradBatch {
+            w: w.clone(),
+            plan: plan.clone(),
+            sink: sink.clone(),
+            only: None,
+        })
+    }
+
+    /// Stream one line-search round into `sink` (skips parked workers).
+    pub fn curv_streamed(&mut self, d: &[f64], sink: &CurvCollector) -> Result<()> {
+        ensure!(sink.workers() == self.workers, "sink worker count mismatch");
+        let d: Arc<[f64]> = Arc::from(d);
+        self.broadcast(|_| Command::Curv {
+            d: d.clone(),
+            sink: sink.clone(),
+            only: None,
+            skip_parked: true,
+        })
+    }
+
+    /// One worker's `(g_i, f_i)` (ignores the parked flag — direct calls
+    /// are a staging/debug surface, not round fan-out).
+    pub fn grad_one(&mut self, worker: usize, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        ensure!(worker < self.workers, "worker id {worker} out of range");
+        let sink = GradCollector::collect_all(self.workers);
+        let lane = self.lane_of(worker);
+        self.dispatch_one(
+            lane,
+            Command::Grad {
+                w: Arc::from(w),
+                sink: sink.clone(),
+                only: Some(worker),
+                skip_parked: false,
+            },
+        )?;
+        let mut c = sink.into_collected();
+        c.responses[worker]
+            .take()
+            .map(|(payload, _)| payload)
+            .ok_or_else(|| anyhow!("pool delivered no response for worker {worker}"))
+    }
+
+    /// One worker's mini-batch gradient over explicit row segments.
+    pub fn grad_batch_one(
+        &mut self,
+        worker: usize,
+        w: &[f64],
+        segs: &[(usize, usize)],
+    ) -> Result<(Vec<f64>, f64)> {
+        ensure!(worker < self.workers, "worker id {worker} out of range");
+        let mut segments = vec![Vec::new(); self.workers];
+        segments[worker] = segs.to_vec();
+        let plan = Arc::new(BatchPlan { segments });
+        let sink = GradCollector::collect_all(self.workers);
+        let lane = self.lane_of(worker);
+        self.dispatch_one(
+            lane,
+            Command::GradBatch {
+                w: Arc::from(w),
+                plan,
+                sink: sink.clone(),
+                only: Some(worker),
+            },
+        )?;
+        let mut c = sink.into_collected();
+        c.responses[worker]
+            .take()
+            .map(|(payload, _)| payload)
+            .ok_or_else(|| anyhow!("pool delivered no response for worker {worker}"))
+    }
+
+    /// One worker's `‖X̃_i d‖²` (ignores the parked flag).
+    pub fn curv_one(&mut self, worker: usize, d: &[f64]) -> Result<f64> {
+        ensure!(worker < self.workers, "worker id {worker} out of range");
+        let sink = CurvCollector::collect_all(self.workers);
+        let lane = self.lane_of(worker);
+        self.dispatch_one(
+            lane,
+            Command::Curv {
+                d: Arc::from(d),
+                sink: sink.clone(),
+                only: Some(worker),
+                skip_parked: false,
+            },
+        )?;
+        let mut c = sink.into_collected();
+        c.responses[worker]
+            .take()
+            .map(|(q, _)| q)
+            .ok_or_else(|| anyhow!("pool delivered no response for worker {worker}"))
+    }
+
+    /// All workers' `(g_i, f_i)` in worker order (computes parked workers
+    /// too — the batch-synchronous reference surface).
+    pub fn grad_all(&mut self, w: &[f64]) -> Result<Vec<(Vec<f64>, f64)>> {
+        let sink = GradCollector::collect_all(self.workers);
+        let w: Arc<[f64]> = Arc::from(w);
+        self.broadcast(|_| Command::Grad {
+            w: w.clone(),
+            sink: sink.clone(),
+            only: None,
+            skip_parked: false,
+        })?;
+        let c = sink.into_collected();
+        c.responses
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                r.map(|(payload, _)| payload)
+                    .ok_or_else(|| anyhow!("pool delivered no response for worker {i}"))
+            })
+            .collect()
+    }
+
+    /// All workers' line-search terms in worker order.
+    pub fn curv_all(&mut self, d: &[f64]) -> Result<Vec<f64>> {
+        let sink = CurvCollector::collect_all(self.workers);
+        let d: Arc<[f64]> = Arc::from(d);
+        self.broadcast(|_| Command::Curv {
+            d: d.clone(),
+            sink: sink.clone(),
+            only: None,
+            skip_parked: false,
+        })?;
+        let c = sink.into_collected();
+        c.responses
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                r.map(|(q, _)| q)
+                    .ok_or_else(|| anyhow!("pool delivered no response for worker {i}"))
+            })
+            .collect()
+    }
+
+    /// Park or unpark one worker (see the crash-park invariant in the
+    /// module docs). Infallible: a dead lane surfaces as an error on the
+    /// next round dispatch, not here.
+    pub fn set_parked(&mut self, worker: usize, parked: bool) {
+        if worker >= self.workers {
+            return;
+        }
+        self.parked[worker] = parked;
+        let lane = self.lane_of(worker);
+        let _ = self.lanes[lane].tx.send(Command::SetParked { worker, parked });
+    }
+
+    /// Replace the staged problem in place: every lane receives its new
+    /// slot range (park flags reset), keeping the resident threads. The
+    /// worker count may change; the lane count never does.
+    pub fn reconfigure(&mut self, prob: &EncodedProblem) -> Result<()> {
+        self.reconfigure_slots(Slot::stage(prob))
+    }
+
+    pub(crate) fn reconfigure_slots(&mut self, slots: Vec<Slot>) -> Result<()> {
+        let workers = slots.len();
+        let lane_count = self.lanes.len().max(1);
+        let chunk = workers.div_ceil(lane_count).max(1);
+        let mut pending: Vec<Vec<Slot>> = Vec::with_capacity(lane_count);
+        let mut slots = slots.into_iter();
+        for i in 0..self.lanes.len() {
+            let base = (i * chunk).min(workers);
+            let take = chunk.min(workers - base);
+            pending.push(slots.by_ref().take(take).collect());
+        }
+        let mut pending = pending.into_iter();
+        let res = self.broadcast(|i| Command::Reconfigure {
+            base: (i * chunk).min(workers),
+            slots: pending.next().expect("one slot batch per lane"),
+        });
+        if res.is_err() {
+            // some lanes may hold the new slots while the routing state
+            // below was never updated: refuse all further dispatch
+            self.poisoned = true;
+            return res;
+        }
+        self.chunk = chunk;
+        self.workers = workers;
+        self.parked = vec![false; workers];
+        Ok(())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for lane in &self.lanes {
+            let _ = lane.tx.send(Command::Shutdown);
+        }
+        for lane in &mut self.lanes {
+            if let Some(h) = lane.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::EncoderKind;
+    use crate::problem::QuadProblem;
+
+    fn pool(threads: usize) -> (EncodedProblem, WorkerPool) {
+        let prob = QuadProblem::synthetic_gaussian(64, 6, 0.0, 1);
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 2).unwrap();
+        let p = WorkerPool::new(&enc, threads);
+        (enc, p)
+    }
+
+    #[test]
+    fn streamed_matches_per_worker_bitwise() {
+        let (_, mut p) = pool(3);
+        let w = vec![0.4; 6];
+        let sink = GradCollector::collect_all(8);
+        p.grad_streamed(&w, &sink).unwrap();
+        let got = sink.into_collected();
+        for i in 0..8 {
+            let (g1, f1) = p.grad_one(i, &w).unwrap();
+            let ((g2, f2), _) = got.responses[i].clone().unwrap();
+            assert_eq!(f1.to_bits(), f2.to_bits(), "worker {i}");
+            for (a, b) in g1.iter().zip(&g2) {
+                assert_eq!(a.to_bits(), b.to_bits(), "worker {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn spawn_count_is_constant_across_rounds() {
+        let (_, mut p) = pool(4);
+        let before = p.spawn_count();
+        assert_eq!(before as usize, p.size());
+        let w = vec![0.1; 6];
+        for _ in 0..20 {
+            let sink = GradCollector::collect_all(8);
+            p.grad_streamed(&w, &sink).unwrap();
+            sink.into_collected();
+        }
+        assert_eq!(p.spawn_count(), before, "round dispatch must never spawn");
+    }
+
+    #[test]
+    fn parked_workers_skip_round_fanout_but_answer_direct_calls() {
+        let (_, mut p) = pool(2);
+        p.set_parked(3, true);
+        assert_eq!(p.parked().iter().filter(|&&x| x).count(), 1);
+        let w = vec![0.2; 6];
+        let sink = GradCollector::collect_all(8);
+        p.grad_streamed(&w, &sink).unwrap();
+        let got = sink.into_collected();
+        assert!(got.responses[3].is_none(), "parked worker delivered in a round");
+        assert_eq!(got.delivery_order.len(), 7);
+        // direct call still computes (staging/debug surface)
+        assert!(p.grad_one(3, &w).is_ok());
+        // unpark: the worker rejoins with its resident shard
+        p.set_parked(3, false);
+        let sink = GradCollector::collect_all(8);
+        p.grad_streamed(&w, &sink).unwrap();
+        assert!(sink.into_collected().responses[3].is_some());
+    }
+
+    #[test]
+    fn curv_and_batch_rounds_flow_through_the_pool() {
+        let (enc, mut p) = pool(0);
+        let d = vec![-0.3; 6];
+        let sink = CurvCollector::collect_all(8);
+        p.curv_streamed(&d, &sink).unwrap();
+        let got = sink.into_collected();
+        assert!(got.responses.iter().all(|r| r.is_some()));
+        let mut rng = crate::rng::Pcg64::seeded(11);
+        let plan = enc.sample_batch(0.4, &mut rng);
+        let w = vec![0.1; 6];
+        let sink = GradCollector::collect_all(8);
+        p.grad_batch_streamed(&w, &plan, &sink).unwrap();
+        let got = sink.into_collected();
+        for i in 0..8 {
+            let ((gs, fs), _) = got.responses[i].clone().unwrap();
+            let (gb, fb) = p.grad_batch_one(i, &w, &plan.segments[i]).unwrap();
+            assert_eq!(fs.to_bits(), fb.to_bits(), "worker {i}");
+            for (a, b) in gs.iter().zip(&gb) {
+                assert_eq!(a.to_bits(), b.to_bits(), "worker {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn reconfigure_swaps_the_staged_problem_in_place() {
+        let (_, mut p) = pool(3);
+        let spawned = p.spawn_count();
+        let prob2 = QuadProblem::synthetic_gaussian(48, 5, 0.1, 9);
+        let enc2 = EncodedProblem::encode(&prob2, EncoderKind::Identity, 1.0, 6, 0).unwrap();
+        p.set_parked(2, true);
+        p.reconfigure(&enc2).unwrap();
+        assert_eq!(p.workers(), 6);
+        assert_eq!(p.spawn_count(), spawned, "reconfigure must reuse resident lanes");
+        assert!(p.parked().iter().all(|&x| !x), "reconfigure resets park flags");
+        let w = vec![0.3; 5];
+        let mut fresh = WorkerPool::new(&enc2, 3);
+        let a = p.grad_all(&w).unwrap();
+        let b = fresh.grad_all(&w).unwrap();
+        for ((ga, fa), (gb, fb)) in a.iter().zip(&b) {
+            assert_eq!(fa.to_bits(), fb.to_bits());
+            for (x, y) in ga.iter().zip(gb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn first_k_sink_cancels_round_fanout() {
+        // single lane => deterministic serial walk: first 3 admitted, the
+        // rest skipped entirely (no response recorded)
+        let (_, mut p) = pool(1);
+        let w = vec![0.1; 6];
+        let sink = GradCollector::first_k(8, 3, vec![true; 8]);
+        p.grad_streamed(&w, &sink).unwrap();
+        let got = sink.into_collected();
+        assert_eq!(got.admitted, vec![0, 1, 2]);
+        for i in 3..8 {
+            assert!(got.responses[i].is_none(), "worker {i} should have been cancelled");
+        }
+    }
+}

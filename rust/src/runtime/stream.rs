@@ -5,9 +5,9 @@
 //! response before the leader sees any of them, so per-worker completion
 //! times are invisible and stragglers cannot be cancelled. The streaming
 //! path inverts that: the leader hands the engine a [`Collector`], the
-//! engine delivers each worker's response **as it completes** (one OS
-//! thread per worker shard on the native engine), and the collector
-//! applies the admission policy *at delivery time*:
+//! engine delivers each worker's response **as it completes** (resident
+//! pool lanes on the native engine — see [`pool`](super::pool)), and the
+//! collector applies the admission policy *at delivery time*:
 //!
 //! * [`Collector::collect_all`] — admit everything; used by
 //!   [`ClockMode::Virtual`](crate::cluster::ClockMode) rounds, which need
@@ -22,9 +22,18 @@
 //! Engines observe cancellation through [`Collector::is_cancelled`]; a
 //! worker that checks the flag after the k-th admission returns without
 //! computing, and its slot reports no measured compute time.
+//!
+//! A `Collector` is a cheap **shared handle**: cloning it produces
+//! another handle onto the same round's state, which is how the
+//! persistent worker pool ships one sink to many resident threads without
+//! borrowing the leader's stack. [`Collector::into_collected`] requires
+//! the handle being consumed to be the last one alive — engines must drop
+//! every clone before returning from a streamed call (the pool waits for
+//! per-lane acknowledgements that are sent only after the lane's handle
+//! is dropped).
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Admission policy a [`Collector`] applies as responses land.
 enum Admission {
@@ -52,16 +61,32 @@ struct Inner<T> {
     admission: Admission,
 }
 
+/// The round state every [`Collector`] handle points at.
+struct Shared<T> {
+    inner: Mutex<Inner<T>>,
+    cancel: AtomicBool,
+    workers: usize,
+    first_k: bool,
+}
+
 /// Thread-safe streamed-response sink handed to
 /// [`ComputeEngine::worker_grad_streamed`](crate::runtime::ComputeEngine::worker_grad_streamed).
 ///
 /// `T` is the per-worker payload: `(Vec<f64>, f64)` for gradient rounds
 /// (gradient, local objective), `f64` for line-search rounds.
+///
+/// Cloning produces another handle onto the same round (see the module
+/// docs); the round's results are extracted once with
+/// [`Collector::into_collected`], which panics if any clone is still
+/// alive.
 pub struct Collector<T> {
-    inner: Mutex<Inner<T>>,
-    cancel: AtomicBool,
-    workers: usize,
-    first_k: bool,
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Clone for Collector<T> {
+    fn clone(&self) -> Self {
+        Collector { shared: Arc::clone(&self.shared) }
+    }
 }
 
 /// Everything a finished round's collector observed, by worker.
@@ -76,19 +101,25 @@ pub struct Collected<T> {
 }
 
 impl<T> Collector<T> {
+    fn from_parts(admission: Admission, workers: usize, first_k: bool, k_cap: usize) -> Self {
+        Collector {
+            shared: Arc::new(Shared {
+                inner: Mutex::new(Inner {
+                    responses: (0..workers).map(|_| None).collect(),
+                    delivery_order: Vec::with_capacity(workers),
+                    admitted: Vec::with_capacity(k_cap),
+                    admission,
+                }),
+                cancel: AtomicBool::new(false),
+                workers,
+                first_k,
+            }),
+        }
+    }
+
     /// Collector that admits every response and never cancels.
     pub fn collect_all(workers: usize) -> Self {
-        Collector {
-            inner: Mutex::new(Inner {
-                responses: (0..workers).map(|_| None).collect(),
-                delivery_order: Vec::with_capacity(workers),
-                admitted: Vec::new(),
-                admission: Admission::All,
-            }),
-            cancel: AtomicBool::new(false),
-            workers,
-            first_k: false,
-        }
+        Collector::from_parts(Admission::All, workers, false, 0)
     }
 
     /// Collector that admits the first `k` eligible responses in delivery
@@ -98,27 +129,22 @@ impl<T> Collector<T> {
     pub fn first_k(workers: usize, k: usize, eligible: Vec<bool>) -> Self {
         assert_eq!(eligible.len(), workers, "eligibility mask length mismatch");
         let k_eff = k.min(eligible.iter().filter(|&&e| e).count());
-        let c = Collector {
-            inner: Mutex::new(Inner {
-                responses: (0..workers).map(|_| None).collect(),
-                delivery_order: Vec::with_capacity(workers),
-                admitted: Vec::with_capacity(k_eff),
-                admission: Admission::FirstK { k: k_eff, eligible },
-            }),
-            cancel: AtomicBool::new(false),
+        let c = Collector::from_parts(
+            Admission::FirstK { k: k_eff, eligible },
             workers,
-            first_k: true,
-        };
+            true,
+            k_eff,
+        );
         if k_eff == 0 {
             // nothing can ever be admitted (all workers failed)
-            c.cancel.store(true, Ordering::Release);
+            c.shared.cancel.store(true, Ordering::Release);
         }
         c
     }
 
     /// Worker count this collector expects.
     pub fn workers(&self) -> usize {
-        self.workers
+        self.shared.workers
     }
 
     /// True when admission happens at delivery time (first-k sinks), so
@@ -127,14 +153,14 @@ impl<T> Collector<T> {
     /// its fastest batch path (e.g. the XLA engine's single-broadcast
     /// `GradAll`) and deliver everything at the end.
     pub fn streaming_admission(&self) -> bool {
-        self.first_k
+        self.shared.first_k
     }
 
     /// True once the admission policy no longer needs more responses.
     /// Workers should check this before starting (or between phases of)
     /// their shard computation and bail out if set.
     pub fn is_cancelled(&self) -> bool {
-        self.cancel.load(Ordering::Acquire)
+        self.shared.cancel.load(Ordering::Acquire)
     }
 
     /// Deliver worker `worker`'s response with its measured compute time.
@@ -142,9 +168,9 @@ impl<T> Collector<T> {
     /// after cancellation are still recorded (the leader "drops their
     /// updates upon arrival") but never admitted.
     pub fn deliver(&self, worker: usize, payload: T, compute_ms: f64) {
-        let mut guard = self.inner.lock().expect("collector poisoned");
+        let mut guard = self.shared.inner.lock().expect("collector poisoned");
         let inner = &mut *guard;
-        assert!(worker < self.workers, "worker id {worker} out of range");
+        assert!(worker < self.shared.workers, "worker id {worker} out of range");
         assert!(inner.responses[worker].is_none(), "duplicate delivery for worker {worker}");
         inner.responses[worker] = Some((payload, compute_ms));
         inner.delivery_order.push(worker);
@@ -152,15 +178,24 @@ impl<T> Collector<T> {
             if eligible[worker] && inner.admitted.len() < k {
                 inner.admitted.push(worker);
                 if inner.admitted.len() == k {
-                    self.cancel.store(true, Ordering::Release);
+                    self.shared.cancel.store(true, Ordering::Release);
                 }
             }
         }
     }
 
-    /// Consume the collector after the engine call returns.
+    /// Consume the collector after the engine call returns. Panics if any
+    /// clone of this handle is still alive — a streamed engine call must
+    /// drop every handle it shipped to its workers before returning.
     pub fn into_collected(self) -> Collected<T> {
-        let inner = self.inner.into_inner().expect("collector poisoned");
+        let shared = match Arc::try_unwrap(self.shared) {
+            Ok(s) => s,
+            Err(_) => panic!(
+                "collector consumed while other handles are alive \
+                 (the engine leaked a sink clone past its streamed call)"
+            ),
+        };
+        let inner = shared.inner.into_inner().expect("collector poisoned");
         Collected {
             responses: inner.responses,
             delivery_order: inner.delivery_order,
@@ -237,5 +272,31 @@ mod tests {
         let c: Collector<u32> = Collector::collect_all(2);
         c.deliver(0, 1, 0.1);
         c.deliver(0, 2, 0.1);
+    }
+
+    #[test]
+    fn clones_share_round_state() {
+        // the pool's dispatch shape: deliveries through clones land in the
+        // original handle's state, and into_collected works once the
+        // clones are dropped
+        let c: Collector<u32> = Collector::first_k(3, 2, vec![true; 3]);
+        let h1 = c.clone();
+        let h2 = c.clone();
+        h1.deliver(2, 20, 0.1);
+        h2.deliver(0, 10, 0.2);
+        assert!(c.is_cancelled(), "k-th delivery through a clone must cancel");
+        drop(h1);
+        drop(h2);
+        let got = c.into_collected();
+        assert_eq!(got.admitted, vec![2, 0]);
+        assert_eq!(got.responses[0].as_ref().unwrap().0, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "other handles are alive")]
+    fn into_collected_panics_while_clones_live() {
+        let c: Collector<u32> = Collector::collect_all(1);
+        let _leaked = c.clone();
+        let _ = c.into_collected();
     }
 }

@@ -27,6 +27,13 @@
 //! and runs on either engine.
 
 //!
+//! **Sessions:** the engine inherits the `None` default of
+//! [`ComputeEngine::session`](super::ComputeEngine::session) — it has no parkable resident workers (PJRT owns its device
+//! state) and no in-place reconfiguration, so scenario crashes keep the
+//! historical compute-and-discard behavior and problem swaps rebuild the
+//! engine. The feature-gated stub below keeps failing fast at
+//! construction either way.
+//!
 //! **Feature gating:** the PJRT bindings (the `xla` crate) are not
 //! available in the offline build environment, so the real engine is
 //! compiled only with `--features xla` — which additionally requires

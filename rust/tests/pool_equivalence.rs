@@ -1,0 +1,399 @@
+//! Pooled-dispatch equivalence: the persistent worker pool must be a
+//! pure execution-plumbing change.
+//!
+//! Layers of pinning:
+//!
+//! 1. **Serial-reference equivalence** — every optimizer (GD, SGD,
+//!    L-BFGS, FISTA) × scheme (hadamard, replication, uncoded) runs the
+//!    PR-4 golden workload twice: once on the pool-backed
+//!    [`NativeEngine`], once on a serial reference engine that executes
+//!    the identical fused kernels through the trait's default (serial)
+//!    streamed implementations. The virtual-clock CSV traces must match
+//!    **byte for byte** — pooled dispatch can reorder deliveries, but it
+//!    must never change a payload bit or an admitted set. (The same
+//!    workload is also pinned against the checked-in goldens by
+//!    `fault_scenarios.rs`; this test keeps its teeth even on a fresh
+//!    checkout with no baselines.)
+//! 2. **Crash-park equivalence** — a scenario that crashes and recovers
+//!    a worker parks/unparks its resident pool thread; the trace must
+//!    equal the reference engine's (which computes and discards), and
+//!    the parked thread must rejoin on `recover:` with zero respawns.
+//! 3. **Lane-layout invisibility** — pool sizes 1/3/8 produce identical
+//!    bytes; two identical pooled runs produce identical bytes under the
+//!    virtual clock, and identical non-wall-time columns under the
+//!    measured clock with a single lane (where admission order is
+//!    deterministic).
+//! 4. **Structural zero-spawn** — no `thread::scope` left anywhere in
+//!    the round call path, and the engine's spawn count is frozen after
+//!    pool startup.
+
+use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, Scenario};
+use codedopt::encoding::EncoderKind;
+use codedopt::linalg::{self, DataMat, StorageKind};
+use codedopt::optim::{
+    CodedFista, CodedGd, CodedLbfgs, CodedSgd, FistaConfig, GdConfig, LbfgsConfig, LrSchedule,
+    Optimizer, Prox, RunOutput, SgdConfig,
+};
+use codedopt::problem::{EncodedProblem, QuadProblem};
+use codedopt::runtime::{ComputeEngine, NativeEngine};
+use anyhow::Result;
+
+// ------------------------------------------------------------ reference
+
+/// Serial reference engine: the exact per-worker fused kernels and
+/// scratch discipline of the pool lanes, driven through the trait's
+/// default (serial, spawn-free) streamed implementations. No `session`
+/// — the cluster's park path is a no-op here, which is precisely what
+/// makes trace equality against the pooled engine meaningful.
+struct RefSlot {
+    x: DataMat,
+    y: Vec<f64>,
+    grad_buf: Vec<f64>,
+    resid_buf: Vec<f64>,
+}
+
+struct RefEngine {
+    slots: Vec<RefSlot>,
+}
+
+impl RefEngine {
+    fn new(prob: &EncodedProblem) -> Self {
+        let p = prob.p();
+        RefEngine {
+            slots: prob
+                .shards
+                .iter()
+                .map(|s| RefSlot {
+                    x: s.x.clone(),
+                    y: s.y.clone(),
+                    grad_buf: vec![0.0; p],
+                    resid_buf: vec![0.0; s.x.rows()],
+                })
+                .collect(),
+        }
+    }
+}
+
+impl ComputeEngine for RefEngine {
+    fn name(&self) -> &'static str {
+        "serial-reference"
+    }
+
+    fn worker_grad(&mut self, worker: usize, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let s = &mut self.slots[worker];
+        let f = s.x.fused_grad(w, &s.y, &mut s.grad_buf, &mut s.resid_buf);
+        Ok((s.grad_buf.clone(), f))
+    }
+
+    fn linesearch(&mut self, worker: usize, d: &[f64]) -> Result<f64> {
+        let s = &mut self.slots[worker];
+        s.x.gemv_into(d, &mut s.resid_buf);
+        Ok(linalg::dot(&s.resid_buf, &s.resid_buf))
+    }
+
+    fn worker_grad_batch(
+        &mut self,
+        worker: usize,
+        w: &[f64],
+        segs: &[(usize, usize)],
+    ) -> Result<(Vec<f64>, f64)> {
+        let s = &mut self.slots[worker];
+        s.grad_buf.fill(0.0);
+        let mut f = 0.0;
+        for &(lo, hi) in segs {
+            f += s.x.fused_grad_range(w, &s.y, &mut s.grad_buf, &mut s.resid_buf, lo, hi);
+        }
+        Ok((s.grad_buf.clone(), f))
+    }
+
+    fn workers(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+// ------------------------------------------------------------- fixtures
+
+/// The PR-4 golden workload: small ridge problem, 8 workers, k = 6,
+/// deterministic `const:2` delays.
+fn fixture(kind: EncoderKind, beta: f64) -> EncodedProblem {
+    let prob = QuadProblem::synthetic_gaussian(96, 8, 0.05, 7);
+    EncodedProblem::encode_stored(&prob, kind, beta, 8, 3, StorageKind::Dense).expect("encode")
+}
+
+fn cluster_over(
+    enc: &EncodedProblem,
+    engine: Box<dyn ComputeEngine>,
+    clock: ClockMode,
+) -> Cluster {
+    let cfg = ClusterConfig {
+        workers: 8,
+        wait_for: 6,
+        delay: DelayModel::Constant { ms: 2.0 },
+        clock,
+        ms_per_mflop: 0.5,
+        seed: 11,
+    };
+    Cluster::new(enc, engine, cfg).expect("cluster")
+}
+
+const SCHEMES: &[(EncoderKind, f64)] = &[
+    (EncoderKind::Hadamard, 2.0),
+    (EncoderKind::Replication, 2.0),
+    (EncoderKind::Identity, 1.0),
+];
+
+const ITERS: usize = 20;
+
+fn run_optimizer(opt: &str, enc: &EncodedProblem, cluster: &mut Cluster) -> RunOutput {
+    match opt {
+        "gd" => CodedGd::new(GdConfig { zeta: 0.5, epsilon: Some(0.3), ..Default::default() })
+            .run(enc, cluster, ITERS)
+            .expect("gd run"),
+        "sgd" => CodedSgd::new(SgdConfig {
+            lr: Some(0.02),
+            schedule: LrSchedule::InvT { t0: 10.0 },
+            momentum: 0.5,
+            batch_frac: 0.5,
+            seed: 5,
+            ..Default::default()
+        })
+        .run(enc, cluster, ITERS)
+        .expect("sgd run"),
+        "lbfgs" => CodedLbfgs::new(LbfgsConfig { epsilon: Some(0.3), ..Default::default() })
+            .run(enc, cluster, ITERS)
+            .expect("lbfgs run"),
+        "fista" => CodedFista::new(FistaConfig {
+            prox: Prox::L1 { l1: 0.001 },
+            epsilon: Some(0.3),
+            ..Default::default()
+        })
+        .run(enc, cluster, ITERS)
+        .expect("fista run"),
+        other => panic!("unknown optimizer {other}"),
+    }
+}
+
+/// One virtual-clock CSV trace with the given engine factory.
+fn trace_with(
+    opt: &str,
+    kind: EncoderKind,
+    beta: f64,
+    scenario: Option<&str>,
+    make_engine: impl FnOnce(&EncodedProblem) -> Box<dyn ComputeEngine>,
+) -> String {
+    let enc = fixture(kind, beta);
+    let engine = make_engine(&enc);
+    let mut cluster = cluster_over(&enc, engine, ClockMode::Virtual);
+    if let Some(dsl) = scenario {
+        cluster.set_scenario(Scenario::parse(dsl).unwrap()).unwrap();
+    }
+    run_optimizer(opt, &enc, &mut cluster).trace.to_csv()
+}
+
+// ----------------------------------------------- serial-reference pinning
+
+fn pooled_matches_reference_for(opt: &str) {
+    for &(kind, beta) in SCHEMES {
+        let pooled = trace_with(opt, kind, beta, None, |e| Box::new(NativeEngine::new(e)));
+        let serial = trace_with(opt, kind, beta, None, |e| Box::new(RefEngine::new(e)));
+        assert_eq!(
+            pooled, serial,
+            "{opt}/{kind:?}: pooled dispatch changed the virtual-clock trace"
+        );
+    }
+}
+
+#[test]
+fn pooled_gd_matches_serial_reference_bitwise() {
+    pooled_matches_reference_for("gd");
+}
+
+#[test]
+fn pooled_sgd_matches_serial_reference_bitwise() {
+    pooled_matches_reference_for("sgd");
+}
+
+#[test]
+fn pooled_lbfgs_matches_serial_reference_bitwise() {
+    pooled_matches_reference_for("lbfgs");
+}
+
+#[test]
+fn pooled_fista_matches_serial_reference_bitwise() {
+    pooled_matches_reference_for("fista");
+}
+
+// ------------------------------------------------- crash-park invariant
+
+/// Crash → park, recover → rejoin, all bit-for-bit against the reference
+/// engine (which computes crashed workers' responses and discards them):
+/// parking must be pure compute skipping, never a semantic change.
+#[test]
+fn crash_park_rejoin_reproduces_reference_traces() {
+    let dsl = "crash:2@3,leave:5@6,recover:2@9,join:5@12;admit:rotate:k";
+    for opt in ["gd", "sgd"] {
+        let pooled = trace_with(opt, EncoderKind::Hadamard, 2.0, Some(dsl), |e| {
+            Box::new(NativeEngine::new(e))
+        });
+        let serial = trace_with(opt, EncoderKind::Hadamard, 2.0, Some(dsl), |e| {
+            Box::new(RefEngine::new(e))
+        });
+        assert_eq!(pooled, serial, "{opt}: crash-park changed the scenario trace");
+        assert!(pooled.contains("crash:2@3") && pooled.contains("recover:2@9"));
+    }
+}
+
+/// The parked worker's lane thread survives the crash and rejoins on
+/// recover — zero respawns across the whole churn.
+#[test]
+fn parked_thread_rejoins_without_respawn() {
+    let enc = fixture(EncoderKind::Hadamard, 2.0);
+    let mut cluster = cluster_over(&enc, Box::new(NativeEngine::new(&enc)), ClockMode::Virtual);
+    cluster.set_scenario(Scenario::parse("crash:2@1,recover:2@3").unwrap()).unwrap();
+    let w = vec![0.1; 8];
+    cluster.grad_round(&w).unwrap();
+    let spawned = cluster.engine_session().expect("pooled engine session").spawn_count();
+    assert!(spawned > 0);
+    let parked_per_round: Vec<usize> = (1..5)
+        .map(|_| {
+            cluster.grad_round(&w).unwrap();
+            cluster.engine_session().unwrap().parked_count()
+        })
+        .collect();
+    assert_eq!(parked_per_round, vec![1, 1, 0, 0], "park/rejoin sequence");
+    assert_eq!(
+        cluster.engine_session().unwrap().spawn_count(),
+        spawned,
+        "crash/recover churn must never respawn threads"
+    );
+}
+
+// --------------------------------------------- lane-layout invisibility
+
+#[test]
+fn pool_size_is_bitwise_invisible() {
+    for opt in ["gd", "sgd"] {
+        let traces: Vec<String> = [1usize, 3, 8]
+            .iter()
+            .map(|&threads| {
+                trace_with(opt, EncoderKind::Hadamard, 2.0, None, |e| {
+                    Box::new(NativeEngine::new(e).with_threads(threads))
+                })
+            })
+            .collect();
+        assert_eq!(traces[0], traces[1], "{opt}: 1 vs 3 lanes");
+        assert_eq!(traces[0], traces[2], "{opt}: 1 vs 8 lanes");
+    }
+}
+
+fn pooled_lbfgs_trace() -> String {
+    trace_with("lbfgs", EncoderKind::Hadamard, 2.0, None, |e| Box::new(NativeEngine::new(e)))
+}
+
+#[test]
+fn double_run_is_byte_identical_under_virtual_clock() {
+    assert_eq!(pooled_lbfgs_trace(), pooled_lbfgs_trace());
+}
+
+/// Measured-clock CSVs carry wall-clock columns (`sim_ms`,
+/// `compute_ms`) that legitimately differ between runs; everything else
+/// — iterates, objectives, step sizes, admitted counts, events — must be
+/// byte-identical when the pool has one lane (deterministic delivery
+/// order). The CI job re-checks this across whole processes.
+#[test]
+fn double_run_measured_clock_matches_on_non_walltime_columns() {
+    let run = || -> String {
+        let enc = fixture(EncoderKind::Hadamard, 2.0);
+        let engine = Box::new(NativeEngine::new(&enc).with_threads(1));
+        let mut cluster = cluster_over(&enc, engine, ClockMode::Measured);
+        run_optimizer("gd", &enc, &mut cluster).trace.to_csv()
+    };
+    let (a, b) = (run(), run());
+    let strip = |csv: &str| -> Vec<String> {
+        csv.lines()
+            .map(|line| {
+                let cols: Vec<&str> = line.split(',').collect();
+                assert_eq!(cols.len(), 9, "unexpected CSV shape: {line}");
+                // drop sim_ms (6) and compute_ms (7)
+                [&cols[..6], &cols[8..]].concat().join(",")
+            })
+            .collect()
+    };
+    assert_eq!(strip(&a), strip(&b), "measured-clock iterates must be deterministic");
+}
+
+// ------------------------------------------------- structural zero-spawn
+
+/// No per-round spawn primitives survive anywhere in the round call
+/// path: the native engine and the cluster are spawn-free source-wise
+/// (the only spawns live in pool construction and the XLA service
+/// startup), and a long pooled run's spawn count is frozen after
+/// startup.
+#[test]
+fn round_call_path_is_structurally_spawn_free() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    for file in ["src/runtime/native.rs", "src/cluster/mod.rs", "src/runtime/stream.rs"] {
+        let text = std::fs::read_to_string(root.join(file)).expect("reading source");
+        // executable lines only: doc comments legitimately mention the
+        // removed scoped-spawn fan-out as history
+        let code: String = text
+            .lines()
+            .filter(|line| !line.trim_start().starts_with("//"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert!(
+            !code.contains("thread::scope"),
+            "{file}: thread::scope found in the round call path"
+        );
+        assert!(
+            !code.contains(".spawn("),
+            "{file}: thread spawn found in the round call path"
+        );
+    }
+
+    let enc = fixture(EncoderKind::Hadamard, 2.0);
+    let mut cluster = cluster_over(&enc, Box::new(NativeEngine::new(&enc)), ClockMode::Virtual);
+    let w = vec![0.1; 8];
+    cluster.grad_round(&w).unwrap();
+    let spawned = cluster.engine_session().unwrap().spawn_count();
+    for _ in 0..40 {
+        cluster.grad_round(&w).unwrap();
+        cluster.linesearch_round(&w).unwrap();
+    }
+    assert_eq!(
+        cluster.engine_session().unwrap().spawn_count(),
+        spawned,
+        "steady-state rounds must spawn zero threads"
+    );
+}
+
+// ------------------------------------------------------- reconfiguration
+
+/// In-place reconfiguration through the session equals a fresh engine,
+/// bit for bit, across a problem swap (different n, p, m, scheme).
+#[test]
+fn reconfigured_pool_matches_fresh_engine_bitwise() {
+    let enc_a = fixture(EncoderKind::Hadamard, 2.0);
+    let prob_b = QuadProblem::synthetic_gaussian(64, 6, 0.1, 21);
+    let enc_b = EncodedProblem::encode(&prob_b, EncoderKind::Identity, 1.0, 4, 1).unwrap();
+
+    let mut engine: Box<dyn ComputeEngine> = Box::new(NativeEngine::new(&enc_a));
+    let w_a = vec![0.2; 8];
+    engine.worker_grad_all(&w_a).unwrap();
+    let spawned = engine.session().unwrap().spawn_count();
+    engine.session().unwrap().reconfigure(&enc_b).unwrap();
+    assert_eq!(engine.workers(), 4);
+    assert_eq!(engine.session().unwrap().spawn_count(), spawned, "reconfigure respawned");
+
+    let mut fresh: Box<dyn ComputeEngine> = Box::new(NativeEngine::new(&enc_b));
+    let w = vec![0.3; 6];
+    let a = engine.worker_grad_all(&w).unwrap();
+    let b = fresh.worker_grad_all(&w).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (i, ((ga, fa), (gb, fb))) in a.iter().zip(&b).enumerate() {
+        assert_eq!(fa.to_bits(), fb.to_bits(), "worker {i} objective");
+        for (x, y) in ga.iter().zip(gb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "worker {i} gradient");
+        }
+    }
+}
