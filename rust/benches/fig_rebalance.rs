@@ -1,0 +1,197 @@
+//! fig_rebalance — elastic load-aware shard rebalancing vs static
+//! placement under deterministic straggler scenarios.
+//!
+//! The rebalancer's claim: when a scenario makes some workers
+//! persistently slow (`slow:` / `rack:` scripts), migrating encoded
+//! block-rows off the slow lanes strictly lowers the virtual wall-clock
+//! of the run while the coded aggregation keeps the optimization on the
+//! same trajectory (count-normalized schemes are placement-independent).
+//! Everything here runs under [`ClockMode::Virtual`], so both arms are
+//! bit-for-bit reproducible and the comparison is a pure statement about
+//! the flop/delay model — no hardware noise.
+//!
+//! Two scenario points, both over the same ridge workload
+//! (m = 8 workers, 24 encoded rows each → padded bucket 32):
+//!
+//! * `slow:2:3@5`, k = m — one worker turns 3× slow at round 5; the
+//!   planner sheds one 8-row band off it (bucket 32 → 16) and the
+//!   steady-state round drops from 3C to 1.5C.
+//! * `rack:0-2:4@10;const delay`, k = 6 — a whole rack of three turns
+//!   4× slow; the first-k slack (m − k = 2) cannot hide three
+//!   stragglers, so only rebalancing recovers the round time.
+//!
+//! Output: a table on stdout plus
+//! `target/fig_rebalance/BENCH_rebalance.json`
+//! (`FIG_REBALANCE_OUT=dir` overrides the directory).
+//!
+//! Run: `cargo bench --bench fig_rebalance`.
+
+use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, Scenario};
+use codedopt::encoding::EncoderKind;
+use codedopt::metrics::Trace;
+use codedopt::optim::{CodedGd, GdConfig, Optimizer};
+use codedopt::problem::{EncodedProblem, QuadProblem};
+use codedopt::runtime::{NativeEngine, RebalanceConfig};
+use std::fmt::Write as _;
+
+const N: usize = 96;
+const P: usize = 12;
+const LAMBDA: f64 = 0.05;
+const M: usize = 8;
+const BETA: f64 = 2.0;
+const ITERS: usize = 60;
+const SEED: u64 = 7;
+
+struct ScenarioPoint {
+    label: &'static str,
+    dsl: &'static str,
+    k: usize,
+    delay: DelayModel,
+}
+
+struct Arm {
+    total_sim_ms: f64,
+    final_f: f64,
+    migrations: Vec<String>,
+}
+
+fn run_arm(point: &ScenarioPoint, rebalance: RebalanceConfig) -> (Arm, Trace) {
+    let prob = QuadProblem::synthetic_gaussian(N, P, LAMBDA, SEED);
+    let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, BETA, M, SEED).unwrap();
+    let engine = Box::new(NativeEngine::new(&enc));
+    let cfg = ClusterConfig {
+        workers: M,
+        wait_for: point.k,
+        delay: point.delay.clone(),
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed: SEED,
+    };
+    let mut cluster = Cluster::new(&enc, engine, cfg).unwrap();
+    cluster.set_scenario(Scenario::parse(point.dsl).unwrap()).unwrap();
+    cluster.set_rebalancer(&enc, rebalance).unwrap();
+    let out = CodedGd::new(GdConfig { seed: SEED, ..Default::default() })
+        .run(&enc, &mut cluster, ITERS)
+        .unwrap();
+    let migrations: Vec<String> = out
+        .trace
+        .records
+        .iter()
+        .filter(|r| !r.migrations.is_empty())
+        .map(|r| r.migrations.clone())
+        .collect();
+    (
+        Arm {
+            total_sim_ms: out.trace.total_sim_ms(),
+            final_f: out.trace.last_objective(),
+            migrations,
+        },
+        out.trace,
+    )
+}
+
+fn main() {
+    let points = [
+        ScenarioPoint {
+            label: "slow-worker",
+            dsl: "slow:2:3@5",
+            k: M,
+            delay: DelayModel::None,
+        },
+        ScenarioPoint {
+            label: "slow-rack",
+            dsl: "rack:0-2:4@10",
+            k: 6,
+            delay: DelayModel::Constant { ms: 2.0 },
+        },
+    ];
+    let prob = QuadProblem::synthetic_gaussian(N, P, LAMBDA, SEED);
+    let f_star = prob.exact_solution().map(|w| prob.objective(&w)).unwrap_or(f64::NAN);
+
+    println!("=== fig_rebalance: elastic rebalancing vs static placement ===");
+    println!(
+        "(ridge n={N} p={P} m={M} β={BETA}, {ITERS} gd iters, virtual clock; f*={f_star:.6e})\n"
+    );
+    println!(
+        "{:<12} {:>2} {:>14} {:>14} {:>8} {:>6} {:>12} {:>12}",
+        "scenario", "k", "static ms", "rebal ms", "speedup", "moves", "static gap", "rebal gap"
+    );
+
+    let mut json = String::from("{\n  \"bench\": \"fig_rebalance\",\n");
+    let _ = writeln!(json, "  \"workload\": {{\"n\": {N}, \"p\": {P}, \"m\": {M}, \"beta\": {BETA}, \"iters\": {ITERS}, \"seed\": {SEED}}},");
+    let _ = writeln!(json, "  \"f_star\": {f_star:.10e},");
+    json.push_str("  \"sweep\": [\n");
+
+    for (i, point) in points.iter().enumerate() {
+        let (stat, _) = run_arm(point, RebalanceConfig::Off);
+        let policy = RebalanceConfig::Ewma { alpha: 1.0, threshold: 1.5 };
+        let (reb, _) = run_arm(point, policy);
+        // [check] a replay of the rebalanced arm reproduces the exact
+        // same migration schedule and virtual clock
+        let (reb2, _) = run_arm(point, policy);
+        assert_eq!(reb.migrations, reb2.migrations, "{}: migration schedule not replayable", point.label);
+        assert_eq!(
+            reb.total_sim_ms.to_bits(),
+            reb2.total_sim_ms.to_bits(),
+            "{}: virtual clock not replayable",
+            point.label
+        );
+        // [check] the static arm never migrates; the rebalanced arm does
+        assert!(stat.migrations.is_empty(), "{}: static arm migrated", point.label);
+        assert!(!reb.migrations.is_empty(), "{}: rebalancer never triggered", point.label);
+        // [check] strictly lower virtual wall-clock at equal final
+        // suboptimality (the acceptance criterion)
+        assert!(
+            reb.total_sim_ms < stat.total_sim_ms,
+            "{}: rebalanced {} ms !< static {} ms",
+            point.label,
+            reb.total_sim_ms,
+            stat.total_sim_ms
+        );
+        let gap_stat = stat.final_f - f_star;
+        let gap_reb = reb.final_f - f_star;
+        assert!(
+            gap_reb <= gap_stat.abs() * 1.25 + 1e-9,
+            "{}: rebalanced gap {gap_reb:e} worse than static gap {gap_stat:e}",
+            point.label
+        );
+
+        println!(
+            "{:<12} {:>2} {:>14.1} {:>14.1} {:>7.2}x {:>6} {:>12.3e} {:>12.3e}",
+            point.label,
+            point.k,
+            stat.total_sim_ms,
+            reb.total_sim_ms,
+            stat.total_sim_ms / reb.total_sim_ms,
+            reb.migrations.len(),
+            gap_stat,
+            gap_reb
+        );
+
+        let moves: Vec<String> = reb.migrations.iter().map(|m| format!("\"{m}\"")).collect();
+        let _ = write!(
+            json,
+            "    {{\"scenario\": \"{}\", \"dsl\": \"{}\", \"k\": {}, \
+             \"static_sim_ms\": {:.4}, \"rebalanced_sim_ms\": {:.4}, \
+             \"static_gap\": {:.10e}, \"rebalanced_gap\": {:.10e}, \
+             \"migrations\": [{}]}}",
+            point.label,
+            point.dsl,
+            point.k,
+            stat.total_sim_ms,
+            reb.total_sim_ms,
+            gap_stat,
+            gap_reb,
+            moves.join(", ")
+        );
+        json.push_str(if i + 1 < points.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+
+    let out_dir =
+        std::env::var("FIG_REBALANCE_OUT").unwrap_or_else(|_| "target/fig_rebalance".to_string());
+    std::fs::create_dir_all(&out_dir).expect("creating output dir");
+    let path = format!("{out_dir}/BENCH_rebalance.json");
+    std::fs::write(&path, &json).expect("writing BENCH_rebalance.json");
+    println!("\nwrote {path}");
+}

@@ -20,7 +20,7 @@ use crate::optim::{
     CodedGd, CodedLbfgs, CodedSgd, GdConfig, LbfgsConfig, LrSchedule, Optimizer, SgdConfig,
 };
 use crate::problem::{EncodedProblem, QuadProblem};
-use crate::runtime::{build_engine_with, EngineKind};
+use crate::runtime::{build_engine_with, EngineKind, RebalanceConfig};
 use anyhow::{Context, Result};
 
 const HELP: &str = "\
@@ -51,6 +51,13 @@ SUBCOMMANDS
                     admit: policy forcing exact admitted subsets)
     --scenario-json <path>  same scenario from a JSON file
                     ({\"events\": [...], \"admit\": \"...\"})
+    --rebalance off|ewma:ALPHA:THRESHOLD  elastic load-aware shard
+                    rebalancing (default off): an EWMA speed model over
+                    observed per-round rates plans at most one lazy
+                    block-row migration per gradient round once the
+                    slowest predicted finish exceeds THRESHOLD x the
+                    fastest (needs --engine native; coded/uncoded
+                    schemes; gd/lbfgs only)
     --csv <path>    write the per-iteration trace as CSV (includes the
                     event-annotated `events` column)
     SGD-only flags (--optimizer sgd):
@@ -143,8 +150,16 @@ fn cmd_ridge(args: &Args) -> Result<()> {
         }
         (None, None) => None,
     };
+    let rebalance = RebalanceConfig::parse(args.flag_str("rebalance", "off"))?;
     // --optimizer is canonical; --algo stays as the historical alias
     let algo = args.flag("optimizer").unwrap_or_else(|| args.flag_str("algo", "lbfgs"));
+    if algo == "sgd" && rebalance != RebalanceConfig::Off {
+        anyhow::bail!(
+            "--rebalance is not supported with --optimizer sgd: mini-batch \
+             aggregation reads the static per-worker row counts that migration \
+             changes (use gd or lbfgs)"
+        );
+    }
 
     println!(
         "# ridge: n={n} p={p} λ={lambda} m={m} k={k} β={beta} encoder={kind} engine={engine_kind:?} clock={clock:?} algo={algo}"
@@ -171,6 +186,10 @@ fn cmd_ridge(args: &Args) -> Result<()> {
     if let Some(sc) = scenario {
         println!("# scenario: {sc}");
         cluster.set_scenario(sc)?;
+    }
+    if rebalance != RebalanceConfig::Off {
+        println!("# rebalance: {rebalance}");
+        cluster.set_rebalancer(&enc, rebalance)?;
     }
     let out = match algo {
         "gd" => CodedGd::new(GdConfig { seed, ..Default::default() }).run(&enc, &mut cluster, iters)?,
@@ -507,10 +526,62 @@ mod tests {
     }
 
     #[test]
-    fn mf_rejects_scenario_flags() {
+    fn mf_rejects_scenario_flags_and_names_the_supported_path() {
+        for flags in [
+            &["--scenario", "crash:1@2"][..],
+            &["--scenario-json", "scenario.json"][..],
+        ] {
+            let mut toks = vec![
+                "mf", "--users", "20", "--items", "10", "--ratings", "100", "--epochs", "1",
+            ];
+            toks.extend_from_slice(flags);
+            let err = run(&toks).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("use `ridge` for scenario runs"),
+                "mf scenario rejection must point at the supported path, got: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_ridge_rebalance_runs() {
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "4", "--iters", "6",
+            "--rebalance", "ewma:0.5:2", "--delay", "none", "--scenario", "slow:1:3@0",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn ridge_rejects_bad_rebalance_grammar() {
+        for bad in ["on", "ewma:0.5", "ewma:0:2", "ewma:0.5:0.5"] {
+            assert!(
+                run(&[
+                    "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "4", "--iters",
+                    "1", "--rebalance", bad,
+                ])
+                .is_err(),
+                "should reject --rebalance {bad:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn ridge_rejects_rebalance_with_sgd() {
+        let err = run(&[
+            "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "4", "--iters", "1",
+            "--optimizer", "sgd", "--rebalance", "ewma:0.5:2",
+        ])
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("sgd"), "error should name the conflict: {err:#}");
+    }
+
+    #[test]
+    fn ridge_rejects_rebalance_with_partition_dedup_scheme() {
         assert!(run(&[
-            "mf", "--users", "20", "--items", "10", "--ratings", "100", "--epochs", "1",
-            "--scenario", "crash:1@2",
+            "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "4", "--iters", "1",
+            "--encoder", "replication", "--rebalance", "ewma:0.5:2",
         ])
         .is_err());
     }

@@ -478,6 +478,24 @@ pub struct RoundScript {
     pub admit: Option<Vec<usize>>,
 }
 
+impl RoundScript {
+    /// Whether (and at what scripted delay multiplier) worker `w` is
+    /// observable by the speed model this round: `None` while crashed
+    /// (parked workers produce no observation — their estimate freezes),
+    /// `Some(slow[w])` otherwise. This is the single deterministic
+    /// gate through which the rebalancer consumes the `slow:`/`rack:`
+    /// scenario masks: under the virtual clock the factor is already
+    /// folded into `Round.compute_ms`, so callers use only the
+    /// `Some`/`None` shape and read the rate from the round itself.
+    pub fn speed_observation(&self, w: usize) -> Option<f64> {
+        if w >= self.crashed.len() || self.crashed[w] {
+            None
+        } else {
+            Some(self.slow[w])
+        }
+    }
+}
+
 /// The runtime state of an attached scenario: the script plus the
 /// current crashed/slow masks and the round counter.
 #[derive(Clone, Debug)]

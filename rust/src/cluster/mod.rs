@@ -39,7 +39,10 @@ pub use fault::{AdmitPolicy, FaultEvent, RoundScript, Scenario, ScenarioState};
 
 use crate::problem::{BatchPlan, EncodedProblem};
 use crate::rng::Pcg64;
-use crate::runtime::{Collected, ComputeEngine, CurvCollector, EngineSession, GradCollector};
+use crate::runtime::{
+    Collected, ComputeEngine, CurvCollector, EngineSession, GradCollector, RebalanceConfig,
+    Rebalancer,
+};
 use anyhow::{ensure, Result};
 
 /// Straggler delay model (per worker, per round), milliseconds.
@@ -337,6 +340,11 @@ pub struct Round {
     /// [`FaultEvent`] DSL labels) — the event-annotated-trace payload.
     /// Empty when no scenario is attached or the round was quiet.
     pub events: Vec<String>,
+    /// Shard migrations the rebalancer executed at the **end** of this
+    /// round (`migrate:FROM>TO:ROWS` labels). Empty unless a rebalancer
+    /// is attached and its trigger fired — so `--rebalance off` rounds
+    /// carry a byte-identical trace.
+    pub migrations: Vec<String>,
 }
 
 impl Round {
@@ -371,6 +379,9 @@ pub struct Cluster {
     shard_rows: Vec<usize>,
     /// Attached deterministic fault scenario, advanced one step per round.
     scenario: Option<ScenarioState>,
+    /// Attached elastic rebalancer (speed model + resharder), fed one
+    /// observation batch per successful round; `None` = static placement.
+    rebalancer: Option<Rebalancer>,
     /// Leader-side mirror of the engine-session park flags (scenario
     /// crash masks pushed to the resident worker pool; all-false when the
     /// engine has no session).
@@ -382,6 +393,20 @@ pub struct Cluster {
     pub sim_ms: f64,
     /// Rounds executed so far (gradient + line-search).
     pub rounds_run: u64,
+}
+
+/// Virtual-clock flop model for one shard, per storage backend:
+/// `(grad_mflops, ls_mflops)`. A gradient round is two gemv-shaped
+/// passes (2 flops per touched multiply-add), a line-search round is
+/// one. `DataMat::gemv_madds` is `rows·cols` for dense shards —
+/// identical to the historical model, bit for bit — and `nnz` for CSR
+/// shards, so sparse storage is not just a memory win: the straggler
+/// simulation charges each worker the flops its kernel actually
+/// executes. Shared by [`Cluster::new`] and the rebalancer's
+/// post-migration refresh, so a migrated worker's simulated compute
+/// cost tracks its new shard exactly.
+fn shard_flops(s: &crate::problem::WorkerShard) -> (f64, f64) {
+    (2.0 * s.x.gemv_madds() * 2.0 / 1e6, 2.0 * s.x.gemv_madds() / 1e6)
 }
 
 impl Cluster {
@@ -407,23 +432,8 @@ impl Cluster {
             engine.workers(),
             prob.m()
         );
-        // Virtual-clock flop model, per storage backend: a gradient round
-        // is two gemv-shaped passes (2 flops per touched multiply-add), a
-        // line-search round is one. `DataMat::gemv_madds` is `rows·cols`
-        // for dense shards — identical to the historical model, bit for
-        // bit — and `nnz` for CSR shards, so sparse storage is not just a
-        // memory win: the straggler simulation charges each worker the
-        // flops its kernel actually executes.
-        let grad_mflops = prob
-            .shards
-            .iter()
-            .map(|s| 2.0 * s.x.gemv_madds() * 2.0 / 1e6)
-            .collect();
-        let ls_mflops = prob
-            .shards
-            .iter()
-            .map(|s| 2.0 * s.x.gemv_madds() / 1e6)
-            .collect();
+        let grad_mflops = prob.shards.iter().map(|s| shard_flops(s).0).collect();
+        let ls_mflops = prob.shards.iter().map(|s| shard_flops(s).1).collect();
         let shard_rows = prob.shards.iter().map(|s| s.x.rows()).collect();
         let rng = Pcg64::new(cfg.seed, 0xc105);
         let parked = vec![false; cfg.workers];
@@ -435,6 +445,7 @@ impl Cluster {
             ls_mflops,
             shard_rows,
             scenario: None,
+            rebalancer: None,
             parked,
             delay_rounds: 0,
             sim_ms: 0.0,
@@ -473,6 +484,51 @@ impl Cluster {
     /// The attached scenario state, if any.
     pub fn scenario(&self) -> Option<&ScenarioState> {
         self.scenario.as_ref()
+    }
+
+    /// Attach (or detach, with [`RebalanceConfig::Off`]) the elastic
+    /// rebalancer over this cluster's encoded problem. The rebalancer
+    /// observes every successful round's per-worker `compute_ms /
+    /// mflops` rate, and at the end of each **gradient** round may
+    /// migrate one block-row band from the predicted-slowest worker to
+    /// the fastest via the engine session's in-place shard handoff —
+    /// lazily, because the code already covers the straggler while the
+    /// move happens.
+    ///
+    /// Requires an engine with a resident [`EngineSession`] (the native
+    /// pool): migration is a per-lane shard swap, not a rebuild. The
+    /// scheme must be count-normalized ([`Rebalancer::new`] rejects
+    /// replication / gradient coding), and mini-batch rounds refuse to
+    /// run with a rebalancer attached (their aggregation reads static
+    /// per-worker row counts).
+    pub fn set_rebalancer(&mut self, prob: &EncodedProblem, cfg: RebalanceConfig) -> Result<()> {
+        match cfg {
+            RebalanceConfig::Off => {
+                self.rebalancer = None;
+                Ok(())
+            }
+            RebalanceConfig::Ewma { alpha, threshold } => {
+                ensure!(
+                    prob.shards.len() == self.cfg.workers,
+                    "rebalancer problem has {} shards, cluster has {} workers",
+                    prob.shards.len(),
+                    self.cfg.workers
+                );
+                ensure!(
+                    self.engine.session().is_some(),
+                    "--rebalance requires an engine with a resident worker session \
+                     (use --engine native)"
+                );
+                self.rebalancer =
+                    Some(Rebalancer::new(prob.scheme, prob.shards.clone(), alpha, threshold)?);
+                Ok(())
+            }
+        }
+    }
+
+    /// The attached rebalancer, if any (tests inspect its placement).
+    pub fn rebalancer(&self) -> Option<&Rebalancer> {
+        self.rebalancer.as_ref()
     }
 
     /// Override k between runs (η sweeps reuse the staged cluster). An
@@ -664,7 +720,15 @@ impl Cluster {
                 (admitted, elapsed)
             }
         };
-        Round { admitted, arrivals, elapsed_ms, failed, compute_ms, events: Vec::new() }
+        Round {
+            admitted,
+            arrivals,
+            elapsed_ms,
+            failed,
+            compute_ms,
+            events: Vec::new(),
+            migrations: Vec::new(),
+        }
     }
 
     /// Measured-clock round record from a finished first-k collector:
@@ -690,7 +754,15 @@ impl Cluster {
         arrivals.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
         let admitted = collected.admitted.clone();
         let elapsed_ms = admitted.iter().map(|&w| compute_ms[w]).fold(0.0, f64::max);
-        Round { admitted, arrivals, elapsed_ms, failed, compute_ms, events: Vec::new() }
+        Round {
+            admitted,
+            arrivals,
+            elapsed_ms,
+            failed,
+            compute_ms,
+            events: Vec::new(),
+            migrations: Vec::new(),
+        }
     }
 
     /// Extract the admitted workers' payloads in admitted order.
@@ -737,6 +809,81 @@ impl Cluster {
         res
     }
 
+    /// Feed one finished round's per-worker rate observations into the
+    /// attached rebalancer (no-op without one). The gate is fully
+    /// deterministic: worker `w` is observed iff the scenario script let
+    /// it respond this round ([`RoundScript::speed_observation`]; every
+    /// worker when no scenario is attached) and its `compute_ms` is a
+    /// finite measurement over positive flops. Under the virtual clock
+    /// the script's slow factor is already folded into `compute_ms`, so
+    /// the speed model sees exactly the scripted degradation — bit for
+    /// bit on every replay. Crashed/cancelled workers (`NaN` or no
+    /// observation) leave their estimates frozen.
+    fn observe_speeds(&mut self, round: &Round, script: Option<&RoundScript>, ls_round: bool) {
+        let Some(rb) = self.rebalancer.as_mut() else {
+            return;
+        };
+        let mflops = if ls_round { &self.ls_mflops } else { &self.grad_mflops };
+        for w in 0..round.compute_ms.len() {
+            let allowed = match script {
+                Some(sc) => sc.speed_observation(w).is_some(),
+                None => true,
+            };
+            if allowed {
+                rb.observe(w, round.compute_ms[w], mflops[w]);
+            }
+        }
+    }
+
+    /// End-of-round elastic rebalance hook (gradient rounds only):
+    /// refresh the speed model, plan at most one lazy block-row move,
+    /// execute it through the engine session's in-place shard handoff
+    /// ([`EngineSession::migrate_shards`] — no respawn, park flags
+    /// kept), refresh the two touched workers' flop model, and record
+    /// the move in the round's `migrations` trace.
+    ///
+    /// Runs strictly **after** the round succeeded and consumes no
+    /// randomness, so the delay-RNG stream and scenario script position
+    /// are placement-independent: `--rebalance off` runs stay
+    /// byte-identical, and rebalanced scenario runs replay the exact
+    /// same migration schedule. A failed handoff errors the round (the
+    /// pool poisons itself), which the transactional round wrapper
+    /// surfaces before `rounds_run` advances.
+    fn rebalance_after_round(
+        &mut self,
+        round: &mut Round,
+        script: Option<&RoundScript>,
+    ) -> Result<()> {
+        self.observe_speeds(round, script, false);
+        let Some(rb) = self.rebalancer.as_ref() else {
+            return Ok(());
+        };
+        let eligible: Vec<bool> = (0..self.cfg.workers)
+            .map(|w| script.map_or(true, |sc| sc.speed_observation(w).is_some()))
+            .collect();
+        let Some(plan) = rb.plan(&eligible) else {
+            return Ok(());
+        };
+        let changed = self
+            .rebalancer
+            .as_mut()
+            .expect("rebalancer checked above")
+            .apply(plan);
+        let session = self
+            .engine
+            .session()
+            .expect("set_rebalancer requires an engine session");
+        session.migrate_shards(&changed)?;
+        for (w, s) in &changed {
+            let (grad, ls) = shard_flops(s);
+            self.grad_mflops[*w] = grad;
+            self.ls_mflops[*w] = ls;
+            self.shard_rows[*w] = s.x.rows();
+        }
+        round.migrations.push(plan.to_string());
+        Ok(())
+    }
+
     /// One gradient round: broadcast `w`, workers stream `(g_i, f_i)`
     /// responses, leader admits the first k (or exactly the scripted set
     /// when a [`Scenario`] with an `admit:` policy is attached). Returns
@@ -772,6 +919,7 @@ impl Cluster {
                 (Self::take_admitted(&round, collected)?, round)
             }
         };
+        self.rebalance_after_round(&mut round, script.as_ref())?;
         if let Some(sc) = script {
             round.events = sc.labels;
         }
@@ -809,6 +957,11 @@ impl Cluster {
             plan.workers() == m,
             "batch plan covers {} workers, cluster has {m}",
             plan.workers()
+        );
+        ensure!(
+            self.rebalancer.is_none(),
+            "mini-batch rounds do not support elastic rebalancing: batch aggregation \
+             reads the static per-worker row counts (run --rebalance off with --optimizer sgd)"
         );
         let (mut delays, script) = self.stage_round();
         let (responses, mut round) = match self.cfg.clock {
@@ -878,6 +1031,10 @@ impl Cluster {
                 (Self::take_admitted(&round, collected)?, round)
             }
         };
+        // Line-search rounds feed the speed model (the straggler pattern
+        // is visible here too) but never migrate: one lazy move per
+        // gradient round is the rebalancer's whole cadence.
+        self.observe_speeds(&round, script.as_ref(), true);
         if let Some(sc) = script {
             round.events = sc.labels;
         }
@@ -1575,5 +1732,79 @@ mod tests {
             saw_failure |= !round.failed.is_empty();
         }
         assert!(saw_failure);
+    }
+
+    /// A scripted slow worker must trigger a migration off it, annotate
+    /// the round trace, shrink its virtual compute, conserve total real
+    /// rows, and never respawn a pool thread.
+    #[test]
+    fn rebalancer_migrates_off_scripted_slow_worker() {
+        let (enc, mut c) = cluster(8, DelayModel::None, 0);
+        let total_rows: usize = enc.shards.iter().map(|s| s.rows_real).sum();
+        c.set_rebalancer(&enc, RebalanceConfig::parse("ewma:1:1.5").unwrap()).unwrap();
+        c.set_scenario(Scenario::parse("slow:2:3@0").unwrap()).unwrap();
+        let w = vec![0.1; 6];
+        let (_, r0) = c.grad_round(&w).unwrap();
+        // round 0 observes the 3x rate and migrates at round end
+        assert!(!r0.migrations.is_empty(), "slow worker should trigger a move");
+        assert!(r0.migrations[0].starts_with("migrate:2>"), "donor must be the slow worker");
+        let spawned = c.engine_session().unwrap().spawn_count();
+        let mut migrated_rounds = 1;
+        let mut last_donor_ms = r0.compute_ms[2];
+        for _ in 1..6 {
+            let (responses, r) = c.grad_round(&w).unwrap();
+            assert_eq!(responses.len(), 8);
+            migrated_rounds += usize::from(!r.migrations.is_empty());
+            // the donor's shard only ever shrinks, so its virtual
+            // compute (slow factor included) never grows back
+            assert!(r.compute_ms[2] <= last_donor_ms + 1e-12);
+            last_donor_ms = r.compute_ms[2];
+        }
+        assert!(migrated_rounds >= 1);
+        // migration is a lane-local shard swap: zero new threads
+        assert_eq!(c.engine_session().unwrap().spawn_count(), spawned);
+        // placement conserved: every real row still lives somewhere
+        let placed: usize = c.rebalancer().unwrap().shards().iter().map(|s| s.rows_real).sum();
+        assert_eq!(placed, total_rows);
+        assert!(c.rebalancer().unwrap().shards()[2].rows_real < total_rows / 8);
+    }
+
+    /// An attached-but-quiet rebalancer (trigger never fires) must leave
+    /// the trace bitwise identical to the static-placement cluster.
+    #[test]
+    fn quiet_rebalancer_is_bitwise_invisible() {
+        let w = vec![0.2; 6];
+        let (_, mut plain) = cluster(4, DelayModel::Exp { mean_ms: 10.0 }, 7);
+        let (enc, mut balanced) = cluster(4, DelayModel::Exp { mean_ms: 10.0 }, 7);
+        balanced
+            .set_rebalancer(&enc, RebalanceConfig::Ewma { alpha: 0.5, threshold: 1e9 })
+            .unwrap();
+        for _ in 0..6 {
+            let (r1, round1) = plain.grad_round(&w).unwrap();
+            let (r2, round2) = balanced.grad_round(&w).unwrap();
+            assert!(round2.migrations.is_empty());
+            assert_eq!(round1.admitted, round2.admitted);
+            assert_eq!(round1.elapsed_ms.to_bits(), round2.elapsed_ms.to_bits());
+            for (a, b) in r1.iter().zip(&r2) {
+                assert_eq!(a.0, b.0);
+                assert_eq!(a.2.to_bits(), b.2.to_bits());
+            }
+        }
+    }
+
+    /// Mini-batch aggregation reads static per-worker row counts, so a
+    /// batch round with a rebalancer attached must refuse to run.
+    #[test]
+    fn batch_round_rejects_attached_rebalancer() {
+        let (enc, mut c) = cluster(8, DelayModel::None, 0);
+        c.set_rebalancer(&enc, RebalanceConfig::Ewma { alpha: 0.5, threshold: 2.0 }).unwrap();
+        let mut rng = crate::rng::Pcg64::seeded(3);
+        let plan = enc.sample_batch(0.5, &mut rng);
+        let err = c.grad_batch_round(&[0.0; 6], &plan).unwrap_err();
+        assert!(err.to_string().contains("rebalanc"), "unexpected error: {err}");
+        // detaching restores batch rounds
+        c.set_rebalancer(&enc, RebalanceConfig::Off).unwrap();
+        assert!(c.rebalancer().is_none());
+        c.grad_batch_round(&[0.0; 6], &plan).unwrap();
     }
 }

@@ -229,6 +229,27 @@ impl CsrMat {
         out
     }
 
+    /// Stack matrices vertically (mirroring [`Mat::vstack`]): row order is
+    /// block order, nnz structure is concatenated unchanged.
+    pub fn vstack(blocks: &[&CsrMat]) -> CsrMat {
+        assert!(!blocks.is_empty(), "vstack: empty input");
+        let cols = blocks[0].cols;
+        assert!(blocks.iter().all(|b| b.cols == cols), "vstack: column mismatch");
+        let rows = blocks.iter().map(|b| b.rows).sum();
+        let nnz = blocks.iter().map(|b| b.vals.len()).sum();
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        row_ptr.push(0usize);
+        for b in blocks {
+            let base = *row_ptr.last().unwrap();
+            row_ptr.extend(b.row_ptr[1..].iter().map(|p| p + base));
+            col_idx.extend_from_slice(&b.col_idx);
+            vals.extend_from_slice(&b.vals);
+        }
+        CsrMat { rows, cols, row_ptr, col_idx, vals }
+    }
+
     // ------------------------------------------------------------- products
     //
     // Every kernel below mirrors its dense counterpart's accumulation
@@ -574,6 +595,34 @@ impl DataMat {
         match self {
             DataMat::Dense(m) => DataMat::Dense(m.pad_rows(new_rows)),
             DataMat::Csr(m) => DataMat::Csr(m.pad_rows(new_rows)),
+        }
+    }
+
+    /// Stack matrices vertically, preserving the common backend. All
+    /// blocks must share one backend: shards of an encoded problem always
+    /// do (mixed input is a hard error, not a silent densification).
+    pub fn vstack(blocks: &[&DataMat]) -> DataMat {
+        assert!(!blocks.is_empty(), "vstack: empty input");
+        if blocks.iter().all(|b| b.is_sparse()) {
+            let csr: Vec<&CsrMat> = blocks
+                .iter()
+                .map(|b| match b {
+                    DataMat::Csr(m) => m,
+                    DataMat::Dense(_) => unreachable!(),
+                })
+                .collect();
+            DataMat::Csr(CsrMat::vstack(&csr))
+        } else if blocks.iter().all(|b| !b.is_sparse()) {
+            let dense: Vec<&Mat> = blocks
+                .iter()
+                .map(|b| match b {
+                    DataMat::Dense(m) => m,
+                    DataMat::Csr(_) => unreachable!(),
+                })
+                .collect();
+            DataMat::Dense(Mat::vstack(&dense))
+        } else {
+            panic!("vstack: mixed dense/CSR blocks");
         }
     }
 

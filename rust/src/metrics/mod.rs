@@ -33,6 +33,13 @@ pub struct IterRecord {
     ///
     /// [`Round::events`]: crate::cluster::Round::events
     pub events: String,
+    /// Shard migrations the rebalancer executed on this iteration's
+    /// rounds ([`Round::migrations`] labels joined with `|`; empty with
+    /// `--rebalance off` or when the trigger stayed quiet). Shares the
+    /// CSV `events` cell so the 9-column header is unchanged.
+    ///
+    /// [`Round::migrations`]: crate::cluster::Round::migrations
+    pub migrations: String,
 }
 
 /// Full run trace.
@@ -89,12 +96,19 @@ impl Trace {
 
     /// CSV with header; columns match [`IterRecord`]. The `events` column
     /// holds the `|`-joined fault-event labels (never commas, so the CSV
-    /// stays unquoted).
+    /// stays unquoted); migration labels are merged into the same cell
+    /// after the events, so a migration-free trace is byte-identical to
+    /// the pre-rebalancer format.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "iter,f_true,f_est,grad_norm,alpha,responders,sim_ms,compute_ms,events\n",
         );
         for r in &self.records {
+            let cell = match (r.events.is_empty(), r.migrations.is_empty()) {
+                (_, true) => r.events.clone(),
+                (true, false) => r.migrations.clone(),
+                (false, false) => format!("{}|{}", r.events, r.migrations),
+            };
             let _ = writeln!(
                 s,
                 "{},{:.10e},{:.10e},{:.6e},{:.6e},{},{:.4},{:.4},{}",
@@ -106,7 +120,7 @@ impl Trace {
                 r.responders,
                 r.sim_ms,
                 r.compute_ms,
-                r.events
+                cell
             );
         }
         s
@@ -199,6 +213,7 @@ mod tests {
             sim_ms: t,
             compute_ms: 1.5,
             events: String::new(),
+            migrations: String::new(),
         }
     }
 
@@ -225,11 +240,21 @@ mod tests {
         let mut annotated = rec(1, 0.9, 2.0);
         annotated.events = "crash:3@1|slow:0:4@1".to_string();
         t.push(annotated);
+        let mut migrated = rec(2, 0.8, 3.0);
+        migrated.migrations = "migrate:2>0:8".to_string();
+        t.push(migrated);
+        let mut both = rec(3, 0.7, 4.0);
+        both.events = "rack:0-2:4@3".to_string();
+        both.migrations = "migrate:1>3:4".to_string();
+        t.push(both);
         let csv = t.to_csv();
         let lines: Vec<&str> = csv.lines().collect();
         assert!(lines[0].ends_with(",events"));
         assert!(lines[1].ends_with(','), "quiet round has an empty events cell");
         assert!(lines[2].ends_with(",crash:3@1|slow:0:4@1"));
+        // migrations share the events cell: alone, and after the events
+        assert!(lines[3].ends_with(",migrate:2>0:8"));
+        assert!(lines[4].ends_with(",rack:0-2:4@3|migrate:1>3:4"));
         // one comma-delimited cell per header column, every row
         let cols = lines[0].split(',').count();
         for line in &lines[1..] {

@@ -97,6 +97,7 @@ impl Optimizer for CodedGd {
                 sim_ms: cluster.sim_ms,
                 compute_ms: round.admitted_compute_ms(),
                 events: round.events.join("|"),
+                migrations: round.migrations.join("|"),
             });
         }
         Ok(RunOutput { w, trace })

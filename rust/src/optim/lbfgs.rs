@@ -210,6 +210,13 @@ impl Optimizer for CodedLbfgs {
                     .cloned()
                     .collect::<Vec<_>>()
                     .join("|"),
+                migrations: round
+                    .migrations
+                    .iter()
+                    .chain(&ls_round.migrations)
+                    .cloned()
+                    .collect::<Vec<_>>()
+                    .join("|"),
             });
         }
         Ok(RunOutput { w, trace })

@@ -363,6 +363,7 @@ impl Optimizer for CodedSgd {
                 sim_ms: cluster.sim_ms,
                 compute_ms: round.admitted_compute_ms(),
                 events: round.events.join("|"),
+                migrations: round.migrations.join("|"),
             });
             if self.cfg.patience > 0 {
                 acc += f_est;

@@ -31,12 +31,14 @@
 pub mod artifacts;
 pub mod native;
 pub mod pool;
+pub mod rebalance;
 pub mod stream;
 pub mod xla_engine;
 
 pub use artifacts::Manifest;
 pub use native::NativeEngine;
 pub use pool::WorkerPool;
+pub use rebalance::{EwmaSpeedModel, MovePlan, RebalanceConfig, Rebalancer};
 pub use stream::{Collected, Collector, CurvCollector, GradCollector};
 pub use xla_engine::XlaEngine;
 
@@ -220,6 +222,16 @@ pub trait EngineSession {
     /// (park flags reset, worker count may change). Engines whose staged
     /// state cannot be swapped return an error and the caller rebuilds.
     fn reconfigure(&mut self, prob: &EncodedProblem) -> Result<()>;
+
+    /// Swap individual workers' shards in place — the rebalancer's
+    /// migration handoff. Unlike [`EngineSession::reconfigure`] this
+    /// keeps park flags, worker count, and every untouched lane exactly
+    /// as they are (no respawn: `spawn_count` stays constant). Engines
+    /// without per-shard swap support return an error (the default).
+    fn migrate_shards(&mut self, changed: &[(usize, crate::problem::WorkerShard)]) -> Result<()> {
+        let _ = changed;
+        anyhow::bail!("this engine does not support in-place shard migration")
+    }
 
     /// Total OS threads this engine ever spawned (monotonic; constant
     /// across rounds once the pool is up — the zero-per-round-spawn

@@ -184,6 +184,20 @@ impl EngineSession for NativeEngine {
             State::Running(pool) => pool.spawn_count(),
         }
     }
+
+    fn migrate_shards(&mut self, changed: &[(usize, crate::problem::WorkerShard)]) -> Result<()> {
+        let p = self.p;
+        match &mut self.state {
+            State::Staged { slots, .. } => {
+                for (w, shard) in changed {
+                    anyhow::ensure!(*w < slots.len(), "migrate: worker id {w} out of range");
+                    slots[*w] = Slot::stage_shard(shard, p);
+                }
+                Ok(())
+            }
+            State::Running(pool) => pool.migrate(p, changed),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -394,6 +408,31 @@ mod tests {
             for (x, y) in ga.iter().zip(gb) {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn session_migrates_shards_in_both_states_without_respawn() {
+        let (enc, mut eng) = engine();
+        let w = vec![0.2; 6];
+        // staged state: migrate before the pool exists
+        eng.session().unwrap().migrate_shards(&[(0, enc.shards[7].clone())]).unwrap();
+        let (g0, f0) = eng.worker_grad(0, &w).unwrap();
+        let (g7, f7) = eng.worker_grad(7, &w).unwrap();
+        assert_eq!(f0.to_bits(), f7.to_bits());
+        for (a, b) in g0.iter().zip(&g7) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // running state: migrate through the resident pool, no respawn
+        let spawned = eng.session().unwrap().spawn_count();
+        assert!(spawned > 0);
+        eng.session().unwrap().migrate_shards(&[(2, enc.shards[1].clone())]).unwrap();
+        assert_eq!(eng.session().unwrap().spawn_count(), spawned);
+        let (g2, f2) = eng.worker_grad(2, &w).unwrap();
+        let (g1, f1) = eng.worker_grad(1, &w).unwrap();
+        assert_eq!(f2.to_bits(), f1.to_bits());
+        for (a, b) in g2.iter().zip(&g1) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

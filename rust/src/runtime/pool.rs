@@ -24,6 +24,7 @@
 //! | `Curv` | line-search `‖X̃_i d‖²` per slot | yes |
 //! | `SetParked` | mark one owned worker parked/unparked | no (ordered channel) |
 //! | `Reconfigure` | replace the lane's slot range with a new problem's shards | yes |
+//! | `Migrate` | swap individual owned workers' slots (rebalancer shard handoff; park flags and worker count preserved, only affected lanes addressed) | yes |
 //! | `Shutdown` | exit the lane thread (sent by `Drop`) | no (joined) |
 //!
 //! Round dispatch sends one command per lane, then blocks on each lane's
@@ -53,7 +54,7 @@
 
 use super::stream::{CurvCollector, GradCollector};
 use crate::linalg::DataMat;
-use crate::problem::{BatchPlan, EncodedProblem};
+use crate::problem::{BatchPlan, EncodedProblem, WorkerShard};
 use anyhow::{anyhow, ensure, Result};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
@@ -73,16 +74,17 @@ pub(crate) struct Slot {
 impl Slot {
     /// Stage every shard of `prob` (data + preallocated scratch buffers).
     pub(crate) fn stage(prob: &EncodedProblem) -> Vec<Slot> {
-        let p = prob.p();
-        prob.shards
-            .iter()
-            .map(|s| Slot {
-                x: s.x.clone(),
-                y: s.y.clone(),
-                grad_buf: vec![0.0; p],
-                resid_buf: vec![0.0; s.x.rows()],
-            })
-            .collect()
+        prob.shards.iter().map(|s| Slot::stage_shard(s, prob.p())).collect()
+    }
+
+    /// Stage a single shard (the rebalancer's migration handoff unit).
+    pub(crate) fn stage_shard(shard: &WorkerShard, p: usize) -> Slot {
+        Slot {
+            x: shard.x.clone(),
+            y: shard.y.clone(),
+            grad_buf: vec![0.0; p],
+            resid_buf: vec![0.0; shard.x.rows()],
+        }
     }
 }
 
@@ -113,6 +115,9 @@ enum Command {
     SetParked { worker: usize, parked: bool },
     /// Replace the lane's owned slots (problem swap between runs).
     Reconfigure { base: usize, slots: Vec<Slot> },
+    /// Swap individual owned workers' slots in place (shard migration):
+    /// unlike `Reconfigure` this preserves park flags and worker count.
+    Migrate { slots: Vec<(usize, Slot)> },
     /// Exit the lane thread.
     Shutdown,
 }
@@ -258,6 +263,16 @@ fn lane_main(mut st: LaneState, rx: Receiver<Command>, ack: Sender<()>) {
                 st.parked = vec![false; slots.len()];
                 st.base = base;
                 st.slots = slots;
+                let _ = ack.send(());
+            }
+            Command::Migrate { slots } => {
+                for (worker, slot) in slots {
+                    if let Some(j) = worker.checked_sub(st.base) {
+                        if j < st.slots.len() {
+                            st.slots[j] = slot;
+                        }
+                    }
+                }
                 let _ = ack.send(());
             }
             Command::Shutdown => break,
@@ -610,6 +625,52 @@ impl WorkerPool {
         self.parked = vec![false; workers];
         Ok(())
     }
+
+    /// Swap individual workers' resident shards in place — the
+    /// rebalancer's migration handoff. Unlike [`WorkerPool::reconfigure`]
+    /// this preserves park flags, worker count, lane routing, and every
+    /// untouched slot; **only the affected lanes** receive a (waited-on)
+    /// command, and no thread is spawned (`spawn_count` is unchanged).
+    /// `p` is the gradient dimension for the fresh scratch buffers. A
+    /// handoff that fails partway poisons the pool exactly like a failed
+    /// reconfigure: some lanes may hold the new shard while others never
+    /// got theirs, so all further dispatch refuses cleanly.
+    pub fn migrate(&mut self, p: usize, changed: &[(usize, WorkerShard)]) -> Result<()> {
+        ensure!(
+            !self.poisoned,
+            "worker pool poisoned by a failed reconfigure; rebuild the engine"
+        );
+        let mut per_lane: Vec<Vec<(usize, Slot)>> = vec![Vec::new(); self.lanes.len()];
+        for (w, shard) in changed {
+            ensure!(*w < self.workers, "migrate: worker id {w} out of range");
+            per_lane[self.lane_of(*w)].push((*w, Slot::stage_shard(shard, p)));
+        }
+        let targets: Vec<usize> =
+            (0..self.lanes.len()).filter(|&i| !per_lane[i].is_empty()).collect();
+        let mut sent = vec![false; self.lanes.len()];
+        let mut err: Option<anyhow::Error> = None;
+        for &i in &targets {
+            let slots = std::mem::take(&mut per_lane[i]);
+            match self.lanes[i].tx.send(Command::Migrate { slots }) {
+                Ok(()) => sent[i] = true,
+                Err(_) => {
+                    err.get_or_insert_with(|| anyhow!("pool lane {i} is gone (thread exited)"));
+                }
+            }
+        }
+        for &i in &targets {
+            if sent[i] && self.lanes[i].ack.recv().is_err() {
+                err.get_or_insert_with(|| anyhow!("pool lane {i} died mid-migration"));
+            }
+        }
+        match err {
+            None => Ok(()),
+            Some(e) => {
+                self.poisoned = true;
+                Err(e)
+            }
+        }
+    }
 }
 
 impl Drop for WorkerPool {
@@ -734,6 +795,39 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn migrate_swaps_shards_without_respawn_and_keeps_park_flags() {
+        let (enc, mut p) = pool(3);
+        let spawned = p.spawn_count();
+        p.set_parked(5, true);
+        // hand-build a "migration": give worker 1 worker 6's shard
+        let changed = vec![(1usize, enc.shards[6].clone())];
+        p.migrate(enc.p(), &changed).unwrap();
+        assert_eq!(p.spawn_count(), spawned, "migration must never spawn");
+        assert_eq!(p.workers(), 8, "migration must not change the worker count");
+        assert!(p.parked()[5], "migration must preserve park flags");
+        let w = vec![0.25; 6];
+        let (g1, f1) = p.grad_one(1, &w).unwrap();
+        let (g6, f6) = p.grad_one(6, &w).unwrap();
+        assert_eq!(f1.to_bits(), f6.to_bits(), "worker 1 should now hold worker 6's shard");
+        for (a, b) in g1.iter().zip(&g6) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // untouched workers still answer with their original shards, and
+        // the parked worker still skips round fan-out
+        let sink = GradCollector::collect_all(8);
+        p.grad_streamed(&w, &sink).unwrap();
+        let got = sink.into_collected();
+        assert!(got.responses[5].is_none());
+        assert!(got.responses[0].is_some());
+    }
+
+    #[test]
+    fn migrate_rejects_out_of_range_worker() {
+        let (enc, mut p) = pool(2);
+        assert!(p.migrate(enc.p(), &[(99, enc.shards[0].clone())]).is_err());
     }
 
     #[test]

@@ -32,7 +32,7 @@ use codedopt::optim::{
 };
 use codedopt::problem::{EncodedProblem, QuadProblem};
 use codedopt::rng::Pcg64;
-use codedopt::runtime::NativeEngine;
+use codedopt::runtime::{NativeEngine, RebalanceConfig};
 use std::path::PathBuf;
 
 // ---------------------------------------------------------------- helpers
@@ -192,6 +192,35 @@ fn golden_trace_gd_with_scenario() {
     assert!(csv.contains("crash:3@8"), "events column missing the crash annotation");
     assert!(csv.contains("recover:3@14"), "events column missing the recover annotation");
     check_golden("gd_hadamard_dense_scenario.csv", &csv);
+}
+
+/// Rebalancing goldens: the elastic resharder on the golden cluster
+/// (`const:2`, k = 6) is pinned byte for byte — migration schedule and
+/// all — for a single scripted slow worker and for a rack-wide slowdown.
+/// Bootstrap-on-missing applies exactly as for the static goldens.
+fn golden_rebalanced(name: &str, dsl: &str, first_move: &str) {
+    let (enc, mut cluster) = golden_cluster(EncoderKind::Hadamard, 2.0, StorageKind::Dense);
+    cluster.set_scenario(Scenario::parse(dsl).unwrap()).unwrap();
+    cluster
+        .set_rebalancer(&enc, RebalanceConfig::Ewma { alpha: 1.0, threshold: 1.5 })
+        .unwrap();
+    let out = run_optimizer("gd", &enc, &mut cluster, GOLDEN_ITERS);
+    let csv = out.trace.to_csv();
+    assert!(
+        csv.contains(first_move),
+        "{name}: rebalanced golden carries no {first_move:?} migration label"
+    );
+    check_golden(name, &csv);
+}
+
+#[test]
+fn golden_trace_gd_rebalanced_slow_worker() {
+    golden_rebalanced("gd_hadamard_dense_rebalance_slow.csv", "slow:2:3@5", "migrate:2>");
+}
+
+#[test]
+fn golden_trace_gd_rebalanced_rack() {
+    golden_rebalanced("gd_hadamard_dense_rebalance_rack.csv", "rack:0-2:4@10", "migrate:");
 }
 
 /// L-BFGS runs two cluster rounds per iteration (gradient + line

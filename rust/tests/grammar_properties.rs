@@ -1,13 +1,14 @@
 //! Property tests for every CLI/config grammar: `DelayModel`,
-//! `LrSchedule`, and the fault-scenario DSL all promise
-//! `parse(x.to_string()) == x` (the config/JSON round-trip contract) and
-//! strict rejection of malformed input. Driven by the seeded
-//! `testutil::property` harness, so every failure reports a reproducible
-//! case seed.
+//! `LrSchedule`, `RebalanceConfig`, and the fault-scenario DSL all
+//! promise `parse(x.to_string()) == x` (the config/JSON round-trip
+//! contract) and strict rejection of malformed input. Driven by the
+//! seeded `testutil::property` harness, so every failure reports a
+//! reproducible case seed.
 
 use codedopt::cluster::{AdmitPolicy, DelayModel, FaultEvent, Scenario};
 use codedopt::optim::LrSchedule;
 use codedopt::rng::Pcg64;
+use codedopt::runtime::RebalanceConfig;
 use codedopt::testutil::{gen_range, property};
 
 fn any_positive(rng: &mut Pcg64) -> f64 {
@@ -86,6 +87,42 @@ fn lr_schedule_rejects_malformed_grammar() {
         "const:1", "warp", "warp:9", "1/t:0",
     ] {
         assert!(LrSchedule::parse(bad).is_err(), "should reject {bad:?}");
+    }
+}
+
+fn any_rebalance(rng: &mut Pcg64) -> RebalanceConfig {
+    match gen_range(rng, 0, 1) {
+        0 => RebalanceConfig::Off,
+        _ => RebalanceConfig::Ewma {
+            // the validated domain: α ∈ (0, 1], threshold ≥ 1
+            alpha: rng.range_f64(1e-6, 1.0),
+            threshold: 1.0 + any_positive(rng),
+        },
+    }
+}
+
+#[test]
+fn rebalance_grammar_round_trips_every_variant() {
+    property("rebalance parse<->Display", 200, |rng| {
+        let cfg = any_rebalance(rng);
+        let text = cfg.to_string();
+        let back = RebalanceConfig::parse(&text)
+            .unwrap_or_else(|e| panic!("reparse of {text:?} failed: {e}"));
+        assert_eq!(back, cfg, "round trip drifted for {text:?}");
+    });
+}
+
+#[test]
+fn rebalance_grammar_rejects_malformed() {
+    // wrong arity (both directions, exactly like `DelayModel::parse`),
+    // out-of-domain numerics, unknown heads
+    for bad in [
+        "", ":", "on", "off:1", "ewma", "ewma:", "ewma:0.5", "ewma:0.5:",
+        "ewma:0.5:2:9", "ewma:abc:2", "ewma:0.5:abc", "ewma:0:2", "ewma:1.5:2",
+        "ewma:0.5:0.5", "ewma:-0.1:2", "ewma:0.5:-3", "ewma:nan:2", "ewma:0.5:inf",
+        "ewma:0.5,2", "greedy:0.5:2",
+    ] {
+        assert!(RebalanceConfig::parse(bad).is_err(), "should reject {bad:?}");
     }
 }
 

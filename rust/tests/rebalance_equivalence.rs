@@ -1,0 +1,389 @@
+//! Rebalancing equivalence & replay: elastic shard rebalancing must be
+//! invisible when off (or quiet) and deterministic when it fires.
+//!
+//! Layers of pinning:
+//!
+//! 1. **Off-path invisibility** — with `--rebalance off` the pooled
+//!    engine's virtual-clock CSV traces are byte-identical to a serial
+//!    static-placement reference engine (the pre-rebalancer contract),
+//!    with and without a `slow:` scenario attached.
+//! 2. **Quiet-trigger invisibility** — a rebalancer that is attached but
+//!    whose threshold never fires produces bytes identical to no
+//!    rebalancer at all: observation plumbing alone must not perturb a
+//!    run.
+//! 3. **Replay determinism** — under `slow:`/`rack:` scenarios the
+//!    migration schedule and the full trace are reproduced exactly by a
+//!    second run, and by a run whose scenario went through the JSON
+//!    surface (`Scenario::to_json` → `Json::parse` →
+//!    `Scenario::from_json`) instead of the DSL.
+//! 4. **Acceptance** — on the `slow:2@5`-style and `rack:` scenarios the
+//!    rebalanced coded run finishes at strictly lower virtual wall-clock
+//!    than static placement at (near-)equal final suboptimality, and the
+//!    `migrate:FROM>TO:ROWS` labels land in the CSV events cell.
+//! 5. **Zero-respawn handoff** — shard migration reuses the resident
+//!    lane threads; the pool's spawn count is frozen across moves.
+
+use anyhow::Result;
+use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, Scenario};
+use codedopt::config::Json;
+use codedopt::encoding::EncoderKind;
+use codedopt::linalg::{self, DataMat, StorageKind};
+use codedopt::optim::{
+    CodedFista, CodedGd, CodedLbfgs, FistaConfig, GdConfig, LbfgsConfig, Optimizer, Prox,
+    RunOutput,
+};
+use codedopt::problem::{EncodedProblem, QuadProblem};
+use codedopt::runtime::{ComputeEngine, NativeEngine, RebalanceConfig};
+
+// ------------------------------------------------------------ reference
+
+/// Serial static-placement reference engine (same shape as the one in
+/// `pool_equivalence.rs`): the exact per-worker fused kernels, no
+/// `session` — so it *cannot* host a rebalancer, which is precisely what
+/// makes it the anchor for the `--rebalance off` pre-PR trace.
+struct RefSlot {
+    x: DataMat,
+    y: Vec<f64>,
+    grad_buf: Vec<f64>,
+    resid_buf: Vec<f64>,
+}
+
+struct StaticRefEngine {
+    slots: Vec<RefSlot>,
+}
+
+impl StaticRefEngine {
+    fn new(prob: &EncodedProblem) -> Self {
+        let p = prob.p();
+        StaticRefEngine {
+            slots: prob
+                .shards
+                .iter()
+                .map(|s| RefSlot {
+                    x: s.x.clone(),
+                    y: s.y.clone(),
+                    grad_buf: vec![0.0; p],
+                    resid_buf: vec![0.0; s.x.rows()],
+                })
+                .collect(),
+        }
+    }
+}
+
+impl ComputeEngine for StaticRefEngine {
+    fn name(&self) -> &'static str {
+        "static-reference"
+    }
+
+    fn worker_grad(&mut self, worker: usize, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let s = &mut self.slots[worker];
+        let f = s.x.fused_grad(w, &s.y, &mut s.grad_buf, &mut s.resid_buf);
+        Ok((s.grad_buf.clone(), f))
+    }
+
+    fn linesearch(&mut self, worker: usize, d: &[f64]) -> Result<f64> {
+        let s = &mut self.slots[worker];
+        s.x.gemv_into(d, &mut s.resid_buf);
+        Ok(linalg::dot(&s.resid_buf, &s.resid_buf))
+    }
+
+    fn worker_grad_batch(
+        &mut self,
+        worker: usize,
+        w: &[f64],
+        segs: &[(usize, usize)],
+    ) -> Result<(Vec<f64>, f64)> {
+        let s = &mut self.slots[worker];
+        s.grad_buf.fill(0.0);
+        let mut f = 0.0;
+        for &(lo, hi) in segs {
+            f += s.x.fused_grad_range(w, &s.y, &mut s.grad_buf, &mut s.resid_buf, lo, hi);
+        }
+        Ok((s.grad_buf.clone(), f))
+    }
+
+    fn workers(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+// ------------------------------------------------------------- fixtures
+
+/// The golden workload: ridge n=96 p=8, Hadamard β=2 over m=8 workers →
+/// 24 encoded rows per shard (dense pad bucket 32).
+fn fixture() -> EncodedProblem {
+    let prob = QuadProblem::synthetic_gaussian(96, 8, 0.05, 7);
+    EncodedProblem::encode_stored(&prob, EncoderKind::Hadamard, 2.0, 8, 3, StorageKind::Dense)
+        .expect("encode")
+}
+
+fn cluster_over(
+    enc: &EncodedProblem,
+    engine: Box<dyn ComputeEngine>,
+    wait_for: usize,
+    delay: DelayModel,
+) -> Cluster {
+    let cfg = ClusterConfig {
+        workers: 8,
+        wait_for,
+        delay,
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed: 11,
+    };
+    Cluster::new(enc, engine, cfg).expect("cluster")
+}
+
+const ITERS: usize = 20;
+
+fn run_optimizer(opt: &str, enc: &EncodedProblem, cluster: &mut Cluster, iters: usize) -> RunOutput {
+    match opt {
+        "gd" => CodedGd::new(GdConfig { zeta: 0.5, epsilon: Some(0.3), ..Default::default() })
+            .run(enc, cluster, iters)
+            .expect("gd run"),
+        "lbfgs" => CodedLbfgs::new(LbfgsConfig { epsilon: Some(0.3), ..Default::default() })
+            .run(enc, cluster, iters)
+            .expect("lbfgs run"),
+        "fista" => CodedFista::new(FistaConfig {
+            prox: Prox::L1 { l1: 0.001 },
+            epsilon: Some(0.3),
+            ..Default::default()
+        })
+        .run(enc, cluster, iters)
+        .expect("fista run"),
+        other => panic!("unknown optimizer {other}"),
+    }
+}
+
+/// One virtual-clock run on the pooled engine, optional scenario, with
+/// the given rebalance policy (`None` = never call `set_rebalancer`,
+/// i.e. the literal pre-PR code path).
+fn pooled_run(
+    opt: &str,
+    scenario: Option<Scenario>,
+    rebalance: Option<RebalanceConfig>,
+    wait_for: usize,
+    delay: DelayModel,
+    iters: usize,
+) -> RunOutput {
+    let enc = fixture();
+    let engine = Box::new(NativeEngine::new(&enc));
+    let mut cluster = cluster_over(&enc, engine, wait_for, delay);
+    if let Some(sc) = scenario {
+        cluster.set_scenario(sc).unwrap();
+    }
+    if let Some(cfg) = rebalance {
+        cluster.set_rebalancer(&enc, cfg).unwrap();
+    }
+    run_optimizer(opt, &enc, &mut cluster, iters)
+}
+
+fn migration_schedule(out: &RunOutput) -> Vec<(usize, String)> {
+    out.trace
+        .records
+        .iter()
+        .filter(|r| !r.migrations.is_empty())
+        .map(|r| (r.iter, r.migrations.clone()))
+        .collect()
+}
+
+// -------------------------------------------------- off-path invisibility
+
+/// `--rebalance off` (no rebalancer attached) must equal the serial
+/// static-placement engine byte for byte — quiet run and `slow:` run.
+#[test]
+fn rebalance_off_matches_static_reference_bitwise() {
+    for scenario in [None, Some("slow:2:3@5")] {
+        for opt in ["gd", "lbfgs", "fista"] {
+            let serial = {
+                let enc = fixture();
+                let engine = Box::new(StaticRefEngine::new(&enc));
+                let mut cluster =
+                    cluster_over(&enc, engine, 6, DelayModel::Constant { ms: 2.0 });
+                if let Some(dsl) = scenario {
+                    cluster.set_scenario(Scenario::parse(dsl).unwrap()).unwrap();
+                }
+                run_optimizer(opt, &enc, &mut cluster, ITERS).trace.to_csv()
+            };
+            let pooled = pooled_run(
+                opt,
+                scenario.map(|d| Scenario::parse(d).unwrap()),
+                None,
+                6,
+                DelayModel::Constant { ms: 2.0 },
+                ITERS,
+            )
+            .trace
+            .to_csv();
+            let off = pooled_run(
+                opt,
+                scenario.map(|d| Scenario::parse(d).unwrap()),
+                Some(RebalanceConfig::Off),
+                6,
+                DelayModel::Constant { ms: 2.0 },
+                ITERS,
+            )
+            .trace
+            .to_csv();
+            assert_eq!(
+                pooled, serial,
+                "{opt}/{scenario:?}: pooled static trace drifted from the serial reference"
+            );
+            assert_eq!(
+                off, serial,
+                "{opt}/{scenario:?}: --rebalance off is not bitwise identical to static placement"
+            );
+            assert!(!off.contains("migrate:"), "{opt}: off-path trace carries migration labels");
+        }
+    }
+}
+
+/// A rebalancer that is attached but never fires (astronomical
+/// threshold) must also be bitwise invisible: the observation plumbing
+/// alone cannot perturb the RNG stream, the admitted sets, or a single
+/// payload bit.
+#[test]
+fn quiet_trigger_matches_static_placement_bitwise() {
+    let quiet = RebalanceConfig::Ewma { alpha: 0.5, threshold: 1e9 };
+    for scenario in [None, Some("slow:2:3@5")] {
+        for opt in ["gd", "lbfgs"] {
+            let stat = pooled_run(
+                opt,
+                scenario.map(|d| Scenario::parse(d).unwrap()),
+                None,
+                6,
+                DelayModel::Constant { ms: 2.0 },
+                ITERS,
+            );
+            let reb = pooled_run(
+                opt,
+                scenario.map(|d| Scenario::parse(d).unwrap()),
+                Some(quiet),
+                6,
+                DelayModel::Constant { ms: 2.0 },
+                ITERS,
+            );
+            assert!(migration_schedule(&reb).is_empty(), "{opt}: quiet trigger migrated");
+            assert_eq!(
+                reb.trace.to_csv(),
+                stat.trace.to_csv(),
+                "{opt}/{scenario:?}: a quiet rebalancer perturbed the trace"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------- replay determinism
+
+/// With a `slow:` scenario, replaying the run from the DSL *and* from
+/// the JSON surface reproduces the exact same migration schedule and the
+/// exact same trace bytes — twice.
+#[test]
+fn dsl_and_json_replays_reproduce_the_migration_schedule() {
+    let dsl = "slow:2:3@5";
+    let policy = RebalanceConfig::Ewma { alpha: 1.0, threshold: 1.5 };
+    let from_dsl = || Scenario::parse(dsl).unwrap();
+    let from_json = || {
+        let j = Json::parse(&Scenario::parse(dsl).unwrap().to_json()).unwrap();
+        Scenario::from_json(&j).unwrap()
+    };
+    let run = |sc: Scenario| pooled_run("gd", Some(sc), Some(policy), 8, DelayModel::None, 40);
+
+    let a = run(from_dsl());
+    let b = run(from_dsl());
+    let c = run(from_json());
+    let d = run(from_json());
+
+    let sched = migration_schedule(&a);
+    assert!(!sched.is_empty(), "scenario never triggered a migration");
+    assert!(
+        sched[0].1.starts_with("migrate:2>"),
+        "first move should shed rows off the scripted slow worker, got {:?}",
+        sched[0]
+    );
+    for (label, out) in [("dsl replay", &b), ("json", &c), ("json replay", &d)] {
+        assert_eq!(sched, migration_schedule(out), "{label}: migration schedule diverged");
+        assert_eq!(a.trace.to_csv(), out.trace.to_csv(), "{label}: trace bytes diverged");
+    }
+}
+
+// ------------------------------------------------------------ acceptance
+
+fn beats_static(dsl: &str, wait_for: usize, delay: DelayModel) {
+    let iters = 60;
+    let policy = RebalanceConfig::Ewma { alpha: 1.0, threshold: 1.5 };
+    let stat = pooled_run("gd", Some(Scenario::parse(dsl).unwrap()), None, wait_for, delay.clone(), iters);
+    let reb =
+        pooled_run("gd", Some(Scenario::parse(dsl).unwrap()), Some(policy), wait_for, delay, iters);
+
+    assert!(migration_schedule(&stat).is_empty(), "{dsl}: static arm migrated");
+    let sched = migration_schedule(&reb);
+    assert!(!sched.is_empty(), "{dsl}: rebalancer never triggered");
+
+    // the migration labels land in the CSV events cell
+    let csv = reb.trace.to_csv();
+    assert!(csv.contains("migrate:"), "{dsl}: CSV lost the migration labels");
+
+    // strictly lower virtual wall-clock ...
+    let (t_stat, t_reb) = (stat.trace.total_sim_ms(), reb.trace.total_sim_ms());
+    assert!(
+        t_reb < t_stat,
+        "{dsl}: rebalanced {t_reb} ms !< static {t_stat} ms"
+    );
+
+    // ... at (near-)equal final suboptimality
+    let prob = QuadProblem::synthetic_gaussian(96, 8, 0.05, 7);
+    let f_star = prob.exact_solution().map(|w| prob.objective(&w)).expect("ridge is solvable");
+    let gap_stat = stat.trace.last_objective() - f_star;
+    let gap_reb = reb.trace.last_objective() - f_star;
+    assert!(
+        gap_reb <= gap_stat.abs() * 1.25 + 1e-9,
+        "{dsl}: rebalanced gap {gap_reb:e} worse than static gap {gap_stat:e}"
+    );
+}
+
+/// One worker turns 3× slow at round 5 with k = m (no first-k slack):
+/// the planner sheds a band off it and the run finishes strictly sooner.
+#[test]
+fn rebalanced_beats_static_on_slow_worker() {
+    beats_static("slow:2:3@5", 8, DelayModel::None);
+}
+
+/// A whole rack (workers 0–2) turns 4× slow at round 10 with k = 6: the
+/// m − k = 2 admission slack cannot hide three stragglers, so only
+/// migration recovers the round time.
+#[test]
+fn rebalanced_beats_static_on_slow_rack() {
+    beats_static("rack:0-2:4@10", 6, DelayModel::Constant { ms: 2.0 });
+}
+
+// ------------------------------------------------------ zero-respawn
+
+/// Shard handoff rides the resident lanes: across observed migrations
+/// the pool's spawn count is frozen and nothing is parked.
+#[test]
+fn migrations_never_respawn_pool_threads() {
+    let enc = fixture();
+    let mut cluster =
+        cluster_over(&enc, Box::new(NativeEngine::new(&enc)), 8, DelayModel::None);
+    cluster.set_scenario(Scenario::parse("slow:2:3@0").unwrap()).unwrap();
+    cluster
+        .set_rebalancer(&enc, RebalanceConfig::Ewma { alpha: 1.0, threshold: 1.5 })
+        .unwrap();
+    let w = vec![0.1; 8];
+    cluster.grad_round(&w).unwrap();
+    let spawned = cluster.engine_session().expect("pooled session").spawn_count();
+    assert!(spawned > 0);
+    let mut moves = 0usize;
+    for _ in 0..8 {
+        let (_, round) = cluster.grad_round(&w).unwrap();
+        moves += round.migrations.len();
+    }
+    assert!(moves > 0, "scripted slow worker never provoked a migration");
+    assert_eq!(
+        cluster.engine_session().unwrap().spawn_count(),
+        spawned,
+        "shard migration must never respawn lane threads"
+    );
+    assert_eq!(cluster.engine_session().unwrap().parked_count(), 0);
+}

@@ -2,7 +2,9 @@
 # Regenerate the golden-trace regression baselines (rust/tests/golden/).
 #
 # The fault_scenarios harness compares each optimizer x scheme x storage
-# trace CSV byte-for-byte against its checked-in golden. When a change is
+# trace CSV byte-for-byte against its checked-in golden, including the
+# two elastic-rebalancing scenarios (slow-worker and rack-wide on the
+# const:2 cluster, migration schedule and all). When a change is
 # *supposed* to alter the traces (new CSV column, intentional numeric
 # change), run this script and commit the rewritten files; CI's drift job
 # fails if the checked-in goldens differ from freshly regenerated output.
