@@ -1,0 +1,141 @@
+//! fig_serve — multi-tenant serve throughput: many concurrent ridge jobs
+//! fair-sharing one resident `WorkerPool`.
+//!
+//! The serve mode's claim is *capacity*: one pool hosts N jobs with no
+//! per-job thread spawns and one encode per distinct `(data, scheme, m,
+//! seed, storage)` key. This bench measures exactly that at 10 / 100 /
+//! 1000 concurrent jobs, each a small hadamard-coded gradient-descent
+//! ridge solve on the virtual clock (so simulated straggler delays cost
+//! zero wall time and the measured number is pure serving machinery):
+//!
+//! * **jobs/sec** — completed jobs over the whole `submit`+`run` wall
+//!   time of the batch;
+//! * **p50 / p99 job latency** — per-job wall-clock latency from `run`
+//!   start to that job's completion (`ServeOutcome::wall_ms`), which
+//!   under fair scheduling grows with the number of interleaved
+//!   siblings — the fairness/latency trade the policy makes explicit;
+//! * **encodes / hits** — the `EncodedShardCache` counters; every batch
+//!   must encode exactly once no matter how many jobs it admits.
+//!
+//! Output: a table on stdout plus `target/fig_serve/BENCH_serve.json`
+//! (`FIG_SERVE_OUT=dir` overrides the directory).
+//!
+//! Run: `cargo bench --bench fig_serve`.
+
+use codedopt::cluster::{ClockMode, ClusterConfig, DelayModel};
+use codedopt::encoding::EncoderKind;
+use codedopt::linalg::StorageKind;
+use codedopt::optim::GdConfig;
+use codedopt::problem::QuadProblem;
+use codedopt::runtime::{EncodedShardCache, JobServer, JobSpec, ServeOptimizer, ServePolicy};
+use std::fmt::Write as _;
+
+const ITERS: usize = 5;
+const WORKERS: usize = 8;
+const WAIT_FOR: usize = 6;
+
+struct Row {
+    jobs: usize,
+    total_ms: f64,
+    jobs_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    encodes: u64,
+    hits: u64,
+}
+
+/// Nearest-rank percentile over an unsorted latency sample.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    let rank = ((p / 100.0 * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+fn sweep_point(jobs: usize, threads: usize) -> Row {
+    let prob = QuadProblem::synthetic_gaussian(96, 8, 0.05, 7);
+    let mut cache = EncodedShardCache::new();
+    let mut server = JobServer::with_lanes(threads, ServePolicy::Fair);
+
+    let t0 = std::time::Instant::now();
+    for j in 0..jobs {
+        let enc = cache
+            .get_or_encode(&prob, EncoderKind::Hadamard, 2.0, WORKERS, 3, StorageKind::Dense)
+            .expect("encode");
+        server
+            .submit(JobSpec {
+                enc,
+                cluster: ClusterConfig {
+                    workers: WORKERS,
+                    wait_for: WAIT_FOR,
+                    delay: DelayModel::Constant { ms: 2.0 },
+                    clock: ClockMode::Virtual,
+                    ms_per_mflop: 0.5,
+                    seed: 11 + j as u64,
+                },
+                optimizer: ServeOptimizer::Gd(GdConfig {
+                    zeta: 0.5,
+                    epsilon: Some(0.3),
+                    ..Default::default()
+                }),
+                iters: ITERS,
+                w0: None,
+                scenario: None,
+                priority: 0,
+            })
+            .expect("submit");
+    }
+    let outcomes = server.run().expect("serve");
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    assert_eq!(outcomes.len(), jobs, "every submitted job must complete");
+    assert_eq!(cache.encodes(), 1, "a uniform batch must encode exactly once");
+    let mut lat: Vec<f64> = outcomes.iter().map(|o| o.wall_ms).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+
+    Row {
+        jobs,
+        total_ms,
+        jobs_per_sec: jobs as f64 / (total_ms / 1e3),
+        p50_ms: percentile(&lat, 50.0),
+        p99_ms: percentile(&lat, 99.0),
+        encodes: cache.encodes(),
+        hits: cache.hits(),
+    }
+}
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("=== fig_serve: multi-tenant serve throughput on one resident pool ===");
+    println!("(fair policy, {ITERS}-round gd jobs, virtual clock, {threads} lanes)\n");
+    println!(
+        "{:>6} {:>11} {:>10} {:>10} {:>10} {:>8} {:>8}",
+        "jobs", "total ms", "jobs/sec", "p50 ms", "p99 ms", "encodes", "hits"
+    );
+
+    let rows: Vec<Row> = [10usize, 100, 1000].iter().map(|&n| sweep_point(n, threads)).collect();
+    let mut json = String::from("{\n  \"bench\": \"fig_serve\",\n");
+    let _ = writeln!(json, "  \"threads\": {threads},");
+    let _ = writeln!(json, "  \"iters_per_job\": {ITERS},");
+    let _ = writeln!(json, "  \"policy\": \"fair\",");
+    json.push_str("  \"sweep\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        println!(
+            "{:>6} {:>11.1} {:>10.1} {:>10.2} {:>10.2} {:>8} {:>8}",
+            r.jobs, r.total_ms, r.jobs_per_sec, r.p50_ms, r.p99_ms, r.encodes, r.hits
+        );
+        let _ = write!(
+            json,
+            "    {{\"jobs\": {}, \"total_ms\": {:.3}, \"jobs_per_sec\": {:.1}, \
+             \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"encodes\": {}, \"hits\": {}}}",
+            r.jobs, r.total_ms, r.jobs_per_sec, r.p50_ms, r.p99_ms, r.encodes, r.hits
+        );
+        json.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+
+    let out_dir = std::env::var("FIG_SERVE_OUT").unwrap_or_else(|_| "target/fig_serve".to_string());
+    std::fs::create_dir_all(&out_dir).expect("creating output dir");
+    let path = format!("{out_dir}/BENCH_serve.json");
+    std::fs::write(&path, &json).expect("writing BENCH_serve.json");
+    println!("\nwrote {path}");
+}

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //! * `ridge`     — one encoded ridge-regression run (the Fig. 4 workload)
+//! * `serve`     — many concurrent ridge jobs on one shared worker pool
 //! * `mf`        — synthetic-MovieLens matrix factorization (Fig. 5/6)
 //! * `spectrum`  — `S_AᵀS_A` spectra per encoder (Fig. 2/3)
 //! * `check-artifacts` — validate + compile every AOT artifact
@@ -20,7 +21,10 @@ use crate::optim::{
     CodedGd, CodedLbfgs, CodedSgd, GdConfig, LbfgsConfig, LrSchedule, Optimizer, SgdConfig,
 };
 use crate::problem::{EncodedProblem, QuadProblem};
-use crate::runtime::{build_engine_with, EngineKind, RebalanceConfig};
+use crate::runtime::{
+    build_engine_with, EncodedShardCache, EngineKind, JobServer, JobSpec, RebalanceConfig,
+    ServeOptimizer, ServePolicy,
+};
 use anyhow::{Context, Result};
 
 const HELP: &str = "\
@@ -70,6 +74,24 @@ SUBCOMMANDS
     --plateau-patience 0       non-improving epochs before early stop (0 = off)
     --plateau-tol 0.001        relative encoded-objective improvement threshold
 
+  serve             many concurrent ridge jobs multiplexed on ONE resident worker
+                    pool (multi-tenant mode; per-job virtual traces are
+                    bitwise-identical to solo runs)
+    --jobs 4        number of concurrent jobs (each gets its own cluster seed
+                    seed+j, so delay streams differ while data is shared)
+    --serve-policy fair|fifo|priority:N   round scheduler: fair round-robins
+                    active jobs, fifo drains them in submission order,
+                    priority:N serves the lowest of N classes first
+                    (job j gets class j)
+    --csv-dir PATH  write each job's trace to PATH/job<ID>.csv
+    --scenario DSL --scenario-job ID   fault script scoped to ONE job (1-based
+                    job id, default 1); sibling jobs never observe it
+    plus the ridge problem/cluster flags: --n --p --lambda --workers --k
+    --beta --encoder --optimizer (gd|lbfgs|sgd, default gd; alias --algo)
+    --iters --delay --clock --storage --threads --seed and the SGD-only
+    flags (--batch-frac --lr --lr-schedule --momentum --epoch-len
+    --plateau-patience --plateau-tol)
+
   mf                coded matrix factorization on synthetic MovieLens (Fig. 5/6)
     --users 240 --items 160 --ratings 8000 --embed 15 --lambda 10
     --epochs 5 --workers 8 --k 4 --encoder hadamard --beta 2.0
@@ -110,6 +132,7 @@ pub fn main_entry() {
 pub fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("ridge") => cmd_ridge(args),
+        Some("serve") => cmd_serve(args),
         Some("mf") => cmd_mf(args),
         Some("spectrum") => cmd_spectrum(args),
         Some("check-artifacts") => cmd_check_artifacts(args),
@@ -238,6 +261,112 @@ fn cmd_ridge(args: &Args) -> Result<()> {
     if let Some(path) = args.flag("csv") {
         std::fs::write(path, out.trace.to_csv()).with_context(|| format!("writing {path}"))?;
         println!("# trace written to {path}");
+    }
+    Ok(())
+}
+
+/// Parse the shared `--optimizer`/`--algo` + SGD flag surface into a
+/// [`ServeOptimizer`] (the serve path needs a config value, not a run call).
+fn parse_serve_optimizer(args: &Args, seed: u64) -> Result<ServeOptimizer> {
+    let algo = args.flag("optimizer").unwrap_or_else(|| args.flag_str("algo", "gd"));
+    Ok(match algo {
+        "gd" => ServeOptimizer::Gd(GdConfig { seed, ..Default::default() }),
+        "lbfgs" => ServeOptimizer::Lbfgs(LbfgsConfig { seed, ..Default::default() }),
+        "sgd" => {
+            let lr = args
+                .flag("lr")
+                .map(|v| v.parse::<f64>().with_context(|| format!("--lr {v}: not a number")))
+                .transpose()?;
+            let cfg = SgdConfig {
+                lr,
+                schedule: LrSchedule::parse(args.flag_str("lr-schedule", "constant"))?,
+                momentum: args.flag_f64("momentum", 0.0)?,
+                batch_frac: args.flag_f64("batch-frac", 0.1)?,
+                epoch_len: args.flag_usize("epoch-len", 0)?,
+                patience: args.flag_usize("plateau-patience", 0)?,
+                plateau_tol: args.flag_f64("plateau-tol", 1e-3)?,
+                seed,
+            };
+            cfg.validate()?;
+            ServeOptimizer::Sgd(cfg)
+        }
+        other => anyhow::bail!("unknown --optimizer {other:?} (gd|lbfgs|sgd)"),
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let jobs = args.flag_usize("jobs", 4)?;
+    anyhow::ensure!(jobs >= 1, "--jobs must be >= 1");
+    let n = args.flag_usize("n", 256)?;
+    let p = args.flag_usize("p", 32)?;
+    let lambda = args.flag_f64("lambda", 0.05)?;
+    let m = args.flag_usize("workers", 8)?;
+    let k = args.flag_usize("k", m)?;
+    let beta = args.flag_f64("beta", 2.0)?;
+    let iters = args.flag_usize("iters", 20)?;
+    let seed = args.flag_u64("seed", 0)?;
+    let kind = EncoderKind::parse(args.flag_str("encoder", "hadamard"))?;
+    let delay = DelayModel::parse(args.flag_str("delay", "exp:10"))?;
+    let clock = ClockMode::parse(args.flag_str("clock", "virtual"))?;
+    let storage = StorageKind::parse(args.flag_str("storage", "auto"))?;
+    let threads = args.flag_usize("threads", 0)?;
+    let policy = ServePolicy::parse(args.flag_str("serve-policy", "fair"))?;
+    let optimizer = parse_serve_optimizer(args, seed)?;
+    let scenario = args.flag("scenario").map(Scenario::parse).transpose()?;
+    let scenario_job = args.flag_usize("scenario-job", 1)?;
+    if scenario.is_some() {
+        anyhow::ensure!(
+            (1..=jobs).contains(&scenario_job),
+            "--scenario-job {scenario_job} out of range (job ids are 1..={jobs})"
+        );
+    }
+
+    println!(
+        "# serve: jobs={jobs} policy={policy} n={n} p={p} λ={lambda} m={m} k={k} \
+         encoder={kind} algo={}",
+        optimizer.label()
+    );
+    let prob = QuadProblem::synthetic_gaussian(n, p, lambda, seed);
+    let mut cache = EncodedShardCache::new();
+    let mut server = JobServer::with_lanes(threads, policy);
+    for j in 0..jobs {
+        let enc = cache.get_or_encode(&prob, kind, beta, m, seed, storage)?;
+        let cluster = ClusterConfig {
+            workers: m,
+            wait_for: k,
+            delay: delay.clone(),
+            clock,
+            ms_per_mflop: 0.5,
+            seed: seed + j as u64,
+        };
+        let job_scenario = if scenario_job == j + 1 { scenario.clone() } else { None };
+        if let Some(sc) = &job_scenario {
+            println!("# scenario (job {}): {sc}", j + 1);
+        }
+        server.submit(JobSpec {
+            enc,
+            cluster,
+            optimizer: optimizer.clone(),
+            iters,
+            w0: None,
+            scenario: job_scenario,
+            priority: j,
+        })?;
+    }
+    println!("# cache: encodes={} hits={}", cache.encodes(), cache.hits());
+    let outcomes = server.run()?;
+    println!("job   rounds  final_f");
+    for o in &outcomes {
+        println!("{:>3}  {:>6}  {:.6e}", o.job, o.rounds, o.output.trace.last_objective());
+    }
+    if let Some(dir) = args.flag("csv-dir") {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir}"))?;
+        for o in &outcomes {
+            let path = format!("{dir}/job{}.csv", o.job);
+            std::fs::write(&path, o.output.trace.to_csv())
+                .with_context(|| format!("writing {path}"))?;
+        }
+        println!("# {} traces written to {dir}", outcomes.len());
     }
     Ok(())
 }
@@ -479,6 +608,55 @@ mod tests {
             "--algo", "sgd", "--batch-frac", "1.0",
         ])
         .unwrap();
+    }
+
+    #[test]
+    fn tiny_serve_runs() {
+        run(&[
+            "serve", "--jobs", "3", "--n", "64", "--p", "8", "--workers", "4", "--k", "3",
+            "--iters", "4", "--threads", "2",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_priority_policy_runs() {
+        run(&[
+            "serve", "--jobs", "3", "--n", "64", "--p", "8", "--workers", "4", "--k", "3",
+            "--iters", "2", "--serve-policy", "priority:2", "--threads", "2",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_rejects_bad_policy() {
+        assert!(run(&[
+            "serve", "--jobs", "2", "--n", "32", "--p", "4", "--workers", "4", "--k", "4",
+            "--iters", "1", "--serve-policy", "rr",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn serve_scoped_scenario_runs_and_writes_csvs() {
+        let dir = std::env::temp_dir().join("codedopt_cli_serve_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        run(&[
+            "serve", "--jobs", "2", "--n", "64", "--p", "8", "--workers", "4", "--k", "3",
+            "--iters", "4", "--threads", "2", "--scenario", "slow:1:3@1", "--scenario-job",
+            "2", "--csv-dir", dir.to_str().unwrap(),
+        ])
+        .unwrap();
+        assert!(dir.join("job1.csv").exists() && dir.join("job2.csv").exists());
+    }
+
+    #[test]
+    fn serve_rejects_out_of_range_scenario_job() {
+        assert!(run(&[
+            "serve", "--jobs", "2", "--n", "32", "--p", "4", "--workers", "4", "--k", "4",
+            "--iters", "1", "--scenario", "crash:1@2", "--scenario-job", "3",
+        ])
+        .is_err());
     }
 
     #[test]

@@ -45,12 +45,13 @@ pub mod prelude {
     pub use crate::encoding::{Encoder, EncoderKind};
     pub use crate::linalg::{CsrMat, DataMat, Mat, StorageKind};
     pub use crate::optim::{
-        CodedFista, CodedGd, CodedLbfgs, CodedSgd, FistaConfig, GdConfig, LbfgsConfig, LrSchedule,
-        Optimizer, Prox, RunOutput, SgdConfig, Trace,
+        CodedFista, CodedGd, CodedLbfgs, CodedSgd, FistaConfig, GdConfig, JobStep, LbfgsConfig,
+        LrSchedule, Optimizer, Prox, RunOutput, SgdConfig, SteppedOptimizer, Trace,
     };
     pub use crate::problem::{BatchPlan, EncodedProblem, QuadProblem, Scheme};
     pub use crate::runtime::{
-        build_engine, build_engine_with, ComputeEngine, CurvCollector, EngineKind, EngineSession,
-        GradCollector, NativeEngine, WorkerPool, XlaEngine,
+        build_engine, build_engine_with, ComputeEngine, CurvCollector, EncodedShardCache,
+        EngineKind, EngineSession, GradCollector, JobServer, JobSpec, NativeEngine, ServeOptimizer,
+        ServePolicy, WorkerPool, XlaEngine,
     };
 }

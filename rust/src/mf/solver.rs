@@ -10,17 +10,29 @@
 //! simulation); smaller ones are solved locally by Cholesky. Simulated
 //! cluster time accumulates into [`MfOutput::sim_ms`], which is what the
 //! Fig. 6 runtime bench reports.
+//!
+//! The distributed solves are **multi-tenant**: each half-step queues its
+//! distributed instances as jobs on one resident
+//! [`JobServer`](crate::runtime::JobServer) (fair round interleaving over
+//! a single shared worker pool) and applies the results at the half-step
+//! boundary. Within a half-step the subproblems are independent — user
+//! solves read only the item factors and vice versa — so the deferred
+//! application is exactly the sequential semantics, and under the virtual
+//! clock each job's iterates are bitwise-identical to a
+//! one-cluster-per-solve run (each job keeps its own `sub_seed` delay
+//! stream).
 
 use super::bank::EncoderBank;
 use super::data::Ratings;
-use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
+use crate::cluster::{ClockMode, ClusterConfig, DelayModel};
 use crate::config::Json;
 use crate::encoding::EncoderKind;
 use crate::linalg::{self, Mat, StorageKind};
-use crate::optim::{CodedLbfgs, LbfgsConfig, Optimizer};
+use crate::optim::LbfgsConfig;
 use crate::problem::{EncodedProblem, QuadProblem};
-use crate::runtime::{build_engine_with, ComputeEngine, EngineKind};
+use crate::runtime::{JobServer, JobSpec, ServeOptimizer, ServePolicy};
 use anyhow::{anyhow, ensure, Result};
+use std::sync::Arc;
 
 /// MF training configuration (defaults = the paper's §5 settings).
 #[derive(Clone, Debug)]
@@ -58,8 +70,8 @@ pub struct MfConfig {
     /// Row cap per subproblem (rare popular-item outliers are subsampled
     /// to keep ETF bank sizes bounded; recorded in `MfOutput::capped`).
     pub max_rows: usize,
-    /// Worker fan-out thread cap for the native engine's subsolver
-    /// clusters (0 = available parallelism, the default).
+    /// Lane count for the shared worker pool every distributed subsolve
+    /// job runs on (0 = available parallelism, the default).
     pub threads: usize,
     /// Shard storage backend for the distributed subproblem encodes
     /// ([`StorageKind::Auto`] keeps the ALS design matrices dense — their
@@ -283,113 +295,143 @@ impl MfOutput {
     }
 }
 
-/// Solve one ridge subproblem; returns (w, sim_ms, was_distributed).
-///
-/// `engine_pool` is the run's resident distributed engine: the first
-/// distributed solve builds it (spawning the native engine's persistent
-/// worker pool once), every later solve *reconfigures* it in place onto
-/// the new encoded subproblem through its
-/// [`EngineSession`](crate::runtime::EngineSession) — thousands of ALS
-/// subsolves share one set of resident threads instead of respawning a
-/// fan-out per solve. Engines without a session fall back to a rebuild.
-#[allow(clippy::too_many_arguments)]
-fn solve_subproblem(
-    a: Mat,
-    t: Vec<f64>,
-    lambda_abs: f64,
-    warm: Vec<f64>,
-    cfg: &MfConfig,
-    bank: &mut EncoderBank,
-    engine_pool: &mut Option<Box<dyn ComputeEngine>>,
-    sub_seed: u64,
-    capped: &mut usize,
-) -> Result<(Vec<f64>, f64, bool)> {
+/// Solve one small ridge subproblem locally by Cholesky; returns
+/// `(w, modeled_ms)` (the paper's numpy.linalg.solve path).
+fn solve_local(a: Mat, t: Vec<f64>, lambda_abs: f64, cfg: &MfConfig) -> Result<(Vec<f64>, f64)> {
     let rows = a.rows();
     let dim = a.cols();
     // QuadProblem convention: f = (1/2n)||Aw-t||^2 + (l/2)||w||^2 matches
     // eq. (8)'s ||Aw-t||^2 + lambda ||w||^2 when l = lambda_abs / n.
     let lam = lambda_abs / rows as f64;
+    let prob = QuadProblem::new(a, t, lam);
+    let w = prob
+        .exact_solution()
+        .ok_or_else(|| anyhow::anyhow!("local ridge solve failed (not SPD?)"))?;
+    // virtual cost: forming A^T A (r*d^2) + Cholesky (d^3/3) madds
+    let mflops = (rows as f64 * (dim * dim) as f64 + (dim * dim * dim) as f64 / 3.0) / 1e6;
+    Ok((w, mflops * cfg.ms_per_mflop))
+}
 
-    if rows < cfg.dist_threshold {
-        // local Cholesky path (the paper's numpy.linalg.solve)
-        let prob = QuadProblem::new(a, t, lam);
-        let w = prob
-            .exact_solution()
-            .ok_or_else(|| anyhow::anyhow!("local ridge solve failed (not SPD?)"))?;
-        // virtual cost: forming A^T A (r*d^2) + Cholesky (d^3/3) madds
-        let mflops = (rows as f64 * (dim * dim) as f64 + (dim * dim * dim) as f64 / 3.0) / 1e6;
-        return Ok((w, mflops * cfg.ms_per_mflop, false));
+/// One deferred distributed subsolve: the entity slot it updates, the
+/// padded subproblem (for the ALS block-descent guard), and its warm
+/// start.
+struct Pending {
+    slot: usize,
+    prob: QuadProblem,
+    warm: Vec<f64>,
+}
+
+/// The run's resident multi-tenant subsolver: every distributed ALS
+/// instance in a half-step is submitted as a job on one shared
+/// [`JobServer`] (fair round interleaving over a single resident worker
+/// pool — one set of OS threads for the entire training run), then the
+/// batch runs and results are applied at the half-step boundary.
+struct DistBatch {
+    server: JobServer,
+    pending: Vec<Pending>,
+}
+
+impl DistBatch {
+    fn new(cfg: &MfConfig) -> Self {
+        DistBatch {
+            server: JobServer::with_lanes(cfg.threads, ServePolicy::Fair),
+            pending: Vec::new(),
+        }
     }
 
-    // distributed coded path
-    let (a, t) = if rows > cfg.max_rows {
-        *capped += 1;
-        let keep: Vec<usize> = (0..cfg.max_rows).collect(); // deterministic prefix
-        (a.select_rows(&keep), t[..cfg.max_rows].to_vec())
-    } else {
-        (a, t)
-    };
-    let rows = a.rows();
-    let bucket = bank.bucket_for(rows);
-    let a_pad = a.pad_rows(bucket);
-    let mut t_pad = t;
-    t_pad.resize(bucket, 0.0);
-    // lambda on the padded problem: same absolute regularizer
-    let lam_pad = lambda_abs / bucket as f64;
-    let prob = QuadProblem::new(a_pad, t_pad, lam_pad);
+    /// Queue one distributed solve (`rows >= dist_threshold`). Capping,
+    /// padding, and encoding happen here, at queue time, so the
+    /// [`EncoderBank`] sees the same request order as a sequential run.
+    #[allow(clippy::too_many_arguments)]
+    fn queue(
+        &mut self,
+        a: Mat,
+        t: Vec<f64>,
+        lambda_abs: f64,
+        warm: Vec<f64>,
+        slot: usize,
+        cfg: &MfConfig,
+        bank: &mut EncoderBank,
+        sub_seed: u64,
+        capped: &mut usize,
+    ) -> Result<()> {
+        let (a, t) = if a.rows() > cfg.max_rows {
+            *capped += 1;
+            let keep: Vec<usize> = (0..cfg.max_rows).collect(); // deterministic prefix
+            (a.select_rows(&keep), t[..cfg.max_rows].to_vec())
+        } else {
+            (a, t)
+        };
+        let rows = a.rows();
+        let bucket = bank.bucket_for(rows);
+        let a_pad = a.pad_rows(bucket);
+        let mut t_pad = t;
+        t_pad.resize(bucket, 0.0);
+        // lambda on the padded problem: same absolute regularizer
+        let lam_pad = lambda_abs / bucket as f64;
+        let prob = QuadProblem::new(a_pad, t_pad, lam_pad);
 
-    let enc = match cfg.encoder {
-        EncoderKind::Replication => {
-            EncodedProblem::encode_stored(&prob, cfg.encoder, cfg.beta, cfg.m, sub_seed, cfg.storage)?
+        let enc = match cfg.encoder {
+            EncoderKind::Replication => EncodedProblem::encode_stored(
+                &prob, cfg.encoder, cfg.beta, cfg.m, sub_seed, cfg.storage,
+            )?,
+            _ => {
+                let bank_kind = bank.kind();
+                let encoder = bank.get(rows)?;
+                EncodedProblem::encode_with_stored(&prob, encoder, bank_kind, cfg.m, cfg.storage)?
+            }
+        };
+        self.server.submit(JobSpec {
+            enc: Arc::new(enc),
+            cluster: ClusterConfig {
+                workers: cfg.m,
+                wait_for: cfg.k,
+                delay: cfg.delay.clone(),
+                clock: cfg.clock,
+                ms_per_mflop: cfg.ms_per_mflop,
+                seed: sub_seed,
+            },
+            optimizer: ServeOptimizer::Lbfgs(LbfgsConfig {
+                // MF runs pick ν from a fixed mild ε (re-estimating
+                // spectra per subproblem would dominate runtime; the
+                // paper banks S for the same reason)
+                epsilon: Some(0.25),
+                ..Default::default()
+            }),
+            iters: cfg.lbfgs_iters,
+            w0: Some(warm.clone()),
+            scenario: None,
+            priority: 0,
+        })?;
+        self.pending.push(Pending { slot, prob, warm });
+        Ok(())
+    }
+
+    /// Run the queued batch and hand each accepted iterate to
+    /// `apply(slot, w)`; accumulates simulated time and solve counts.
+    fn drain(&mut self, out: &mut MfOutput, mut apply: impl FnMut(usize, &[f64])) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
         }
-        _ => {
-            let bank_kind = bank.kind();
-            let encoder = bank.get(rows)?;
-            EncodedProblem::encode_with_stored(&prob, encoder, bank_kind, cfg.m, cfg.storage)?
+        let outcomes = self.server.run()?;
+        for (p, o) in self.pending.drain(..).zip(outcomes) {
+            // ALS block-descent guard: accept the distributed solve only
+            // if it improved this block's true subproblem objective;
+            // otherwise keep the warm start. Coded solves pass this
+            // essentially always; it stops the uncoded k≪m scheme's
+            // occasional diverging solve from destroying the whole model
+            // (it still converges far more slowly — the Fig. 5 story).
+            let w = if p.prob.objective(&o.output.w) <= p.prob.objective(&p.warm) {
+                o.output.w
+            } else {
+                p.warm
+            };
+            apply(p.slot, &w);
+            out.sim_ms += o.output.trace.total_sim_ms();
+            out.dist_solves += 1;
         }
-    };
-    let mut staged = engine_pool.take();
-    let reused = staged
-        .as_mut()
-        .and_then(|e| e.session())
-        .map(|s| s.reconfigure(&enc).is_ok())
-        .unwrap_or(false);
-    let engine = if reused {
-        staged.expect("reused engine present")
-    } else {
-        build_engine_with(EngineKind::Native, &enc, cfg.threads)?
-    };
-    let ccfg = ClusterConfig {
-        workers: cfg.m,
-        wait_for: cfg.k,
-        delay: cfg.delay.clone(),
-        clock: cfg.clock,
-        ms_per_mflop: cfg.ms_per_mflop,
-        seed: sub_seed,
-    };
-    let mut cluster = Cluster::new(&enc, engine, ccfg)?;
-    let lbfgs = CodedLbfgs::new(LbfgsConfig {
-        // MF runs pick ν from a fixed mild ε (re-estimating spectra per
-        // subproblem would dominate runtime; the paper banks S for the
-        // same reason)
-        epsilon: Some(0.25),
-        ..Default::default()
-    });
-    let out = lbfgs.run_from(&enc, &mut cluster, cfg.lbfgs_iters, Some(warm.clone()))?;
-    // ALS block-descent guard: accept the distributed solve only if it
-    // improved this block's true subproblem objective; otherwise keep the
-    // warm start. Coded solves pass this essentially always; it stops the
-    // uncoded k≪m scheme's occasional diverging solve from destroying the
-    // whole model (it still converges far more slowly — the Fig. 5 story).
-    let w = if prob.objective(&out.w) <= prob.objective(&warm) {
-        out.w
-    } else {
-        warm
-    };
-    let sim_ms = cluster.sim_ms;
-    // hand the engine (and its resident pool) back for the next solve
-    *engine_pool = Some(cluster.into_engine());
-    Ok((w, sim_ms, true))
+        Ok(())
+    }
 }
 
 /// Train the MF model with coded distributed alternating minimization.
@@ -421,9 +463,9 @@ pub fn train(train_set: &Ratings, test_set: &Ratings, cfg: &MfConfig) -> Result<
     };
 
     let mut bank = EncoderBank::new(cfg.encoder, cfg.beta, cfg.seed);
-    // one resident distributed engine for the whole run: built at the
-    // first distributed solve, reconfigured in place for every later one
-    let mut engine_pool: Option<Box<dyn ComputeEngine>> = None;
+    // one resident multi-tenant job server for the whole run: every
+    // half-step's distributed solves run as concurrent jobs on its pool
+    let mut batch = DistBatch::new(cfg);
     let mut out = MfOutput {
         model: model.clone(),
         train_rmse: Vec::new(),
@@ -452,30 +494,28 @@ pub fn train(train_set: &Ratings, test_set: &Ratings, cfg: &MfConfig) -> Result<
                 a.row_mut(r)[p] = 1.0;
                 t[r] = e.value as f64 - model.v[item] - cfg.mu;
             }
-            let mut warm = model.x.row(user).to_vec();
-            warm.push(model.u[user]);
             let sub_seed = cfg.seed ^ (epoch as u64) << 40 ^ (user as u64) << 1;
-            let (w, ms, dist) = solve_subproblem(
-                a,
-                t,
-                cfg.lambda,
-                warm,
-                cfg,
-                &mut bank,
-                &mut engine_pool,
-                sub_seed,
-                &mut out.capped,
-            )?;
-            model.x.row_mut(user).copy_from_slice(&w[..p]);
-            model.u[user] = w[p];
-            if dist {
-                out.sim_ms += ms;
-                out.dist_solves += 1;
-            } else {
+            if rows < cfg.dist_threshold {
+                let (w, ms) = solve_local(a, t, cfg.lambda, cfg)?;
+                model.x.row_mut(user).copy_from_slice(&w[..p]);
+                model.u[user] = w[p];
                 out.local_ms += ms;
                 out.local_solves += 1;
+            } else {
+                let mut warm = model.x.row(user).to_vec();
+                warm.push(model.u[user]);
+                batch.queue(
+                    a, t, cfg.lambda, warm, user, cfg, &mut bank, sub_seed, &mut out.capped,
+                )?;
             }
         }
+        // apply the half-step's distributed solves (user solves are
+        // mutually independent: they read only item factors/biases)
+        let (x, u) = (&mut model.x, &mut model.u);
+        batch.drain(&mut out, |user, w| {
+            x.row_mut(user).copy_from_slice(&w[..p]);
+            u[user] = w[p];
+        })?;
 
         // ---- item half-step: solve w_j = [y_j; v_j] for every item ----
         for item in 0..train_set.n_items {
@@ -493,30 +533,27 @@ pub fn train(train_set: &Ratings, test_set: &Ratings, cfg: &MfConfig) -> Result<
                 a.row_mut(r)[p] = 1.0;
                 t[r] = e.value as f64 - model.u[user] - cfg.mu;
             }
-            let mut warm = model.y.row(item).to_vec();
-            warm.push(model.v[item]);
             let sub_seed = cfg.seed ^ (epoch as u64) << 40 ^ 0x8000_0000 ^ (item as u64) << 1;
-            let (w, ms, dist) = solve_subproblem(
-                a,
-                t,
-                cfg.lambda,
-                warm,
-                cfg,
-                &mut bank,
-                &mut engine_pool,
-                sub_seed,
-                &mut out.capped,
-            )?;
-            model.y.row_mut(item).copy_from_slice(&w[..p]);
-            model.v[item] = w[p];
-            if dist {
-                out.sim_ms += ms;
-                out.dist_solves += 1;
-            } else {
+            if rows < cfg.dist_threshold {
+                let (w, ms) = solve_local(a, t, cfg.lambda, cfg)?;
+                model.y.row_mut(item).copy_from_slice(&w[..p]);
+                model.v[item] = w[p];
                 out.local_ms += ms;
                 out.local_solves += 1;
+            } else {
+                let mut warm = model.y.row(item).to_vec();
+                warm.push(model.v[item]);
+                batch.queue(
+                    a, t, cfg.lambda, warm, item, cfg, &mut bank, sub_seed, &mut out.capped,
+                )?;
             }
         }
+        // apply the item half-step's distributed solves
+        let (y, v) = (&mut model.y, &mut model.v);
+        batch.drain(&mut out, |item, w| {
+            y.row_mut(item).copy_from_slice(&w[..p]);
+            v[item] = w[p];
+        })?;
 
         out.train_rmse.push(model.rmse(train_set));
         out.test_rmse.push(model.rmse(test_set));
@@ -689,8 +726,8 @@ mod tests {
 
     #[test]
     fn resident_engine_reuse_is_deterministic() {
-        // one pool serves every distributed solve (built once,
-        // reconfigured in place); two identical runs must produce
+        // one shared job-server pool hosts every distributed solve
+        // (batched per half-step); two identical runs must produce
         // bitwise-identical models and simulated times
         let all = synthetic_movielens(&SyntheticConfig::small(18));
         let (tr, te) = all.split(0.2, 10);

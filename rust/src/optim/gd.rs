@@ -5,7 +5,7 @@
 //! raw problem (power iteration), `ε` the property-(4) constant (estimated
 //! from sampled spectra, or supplied), `0 < ζ ≤ 1` a safety factor.
 
-use super::{Optimizer, RunOutput};
+use super::{JobStep, Optimizer, RunOutput, SteppedOptimizer};
 use crate::cluster::Cluster;
 use crate::linalg;
 use crate::metrics::{IterRecord, Trace};
@@ -70,6 +70,62 @@ fn ensure_valid(cfg: &GdConfig) {
     assert!(cfg.zeta > 0.0 && cfg.zeta <= 1.0, "zeta must be in (0, 1]");
 }
 
+/// Resumable GD run state: the iterate, the precomputed Theorem-1 step,
+/// and the trace so far. One [`JobStep::step`] = one gradient round.
+struct GdStep {
+    w: Vec<f64>,
+    alpha: f64,
+    iters: usize,
+    t: usize,
+    trace: Trace,
+}
+
+impl JobStep for GdStep {
+    fn step(&mut self, prob: &EncodedProblem, cluster: &mut Cluster) -> Result<bool> {
+        if self.t >= self.iters {
+            return Ok(false);
+        }
+        let t = self.t;
+        let (responses, round) = cluster.grad_round(&self.w)?;
+        let (g, f_est) = prob.aggregate_grad(&self.w, &responses);
+        linalg::axpy(-self.alpha, &g, &mut self.w);
+        self.trace.push(IterRecord {
+            iter: t,
+            f_true: prob.raw.objective(&self.w),
+            f_est,
+            grad_norm: linalg::norm2(&g),
+            alpha: self.alpha,
+            responders: round.admitted.len(),
+            sim_ms: cluster.sim_ms,
+            compute_ms: round.admitted_compute_ms(),
+            events: round.events.join("|"),
+            migrations: round.migrations.join("|"),
+        });
+        self.t += 1;
+        Ok(self.t < self.iters)
+    }
+
+    fn output(self: Box<Self>) -> RunOutput {
+        RunOutput { w: self.w, trace: self.trace }
+    }
+}
+
+impl SteppedOptimizer for CodedGd {
+    fn stepper(
+        &self,
+        prob: &EncodedProblem,
+        wait_for: usize,
+        iters: usize,
+        w0: Option<Vec<f64>>,
+    ) -> Result<Box<dyn JobStep>> {
+        let p = prob.p();
+        let w = w0.unwrap_or_else(|| vec![0.0; p]);
+        ensure!(w.len() == p, "w0 dimension mismatch");
+        let alpha = self.step_size(prob, wait_for)?;
+        Ok(Box::new(GdStep { w, alpha, iters, t: 0, trace: Trace::default() }))
+    }
+}
+
 impl Optimizer for CodedGd {
     fn run_from(
         &self,
@@ -78,29 +134,9 @@ impl Optimizer for CodedGd {
         iters: usize,
         w0: Option<Vec<f64>>,
     ) -> Result<RunOutput> {
-        let p = prob.p();
-        let mut w = w0.unwrap_or_else(|| vec![0.0; p]);
-        ensure!(w.len() == p, "w0 dimension mismatch");
-        let alpha = self.step_size(prob, cluster.config().wait_for)?;
-        let mut trace = Trace::default();
-        for t in 0..iters {
-            let (responses, round) = cluster.grad_round(&w)?;
-            let (g, f_est) = prob.aggregate_grad(&w, &responses);
-            linalg::axpy(-alpha, &g, &mut w);
-            trace.push(IterRecord {
-                iter: t,
-                f_true: prob.raw.objective(&w),
-                f_est,
-                grad_norm: linalg::norm2(&g),
-                alpha,
-                responders: round.admitted.len(),
-                sim_ms: cluster.sim_ms,
-                compute_ms: round.admitted_compute_ms(),
-                events: round.events.join("|"),
-                migrations: round.migrations.join("|"),
-            });
-        }
-        Ok(RunOutput { w, trace })
+        let mut step = self.stepper(prob, cluster.config().wait_for, iters, w0)?;
+        while step.step(prob, cluster)? {}
+        Ok(step.output())
     }
 }
 

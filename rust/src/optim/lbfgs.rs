@@ -16,7 +16,7 @@
 //! Step size: exact line search (eq. (3)) over a *fresh* first-k set
 //! `D_t`, with back-off `ν = (1−ε)/(1+ε)`.
 
-use super::{Optimizer, RunOutput};
+use super::{JobStep, Optimizer, RunOutput, SteppedOptimizer};
 use crate::cluster::Cluster;
 use crate::linalg;
 use crate::metrics::{IterRecord, Trace};
@@ -120,6 +120,141 @@ fn two_loop(g: &[f64], pairs: &[(Vec<f64>, Vec<f64>)]) -> Vec<f64> {
     q
 }
 
+/// Resumable L-BFGS run state: the iterate, the curvature-pair memory,
+/// the previous round's response cache, and the trace so far. One
+/// [`JobStep::step`] = one gradient round + one line-search round.
+struct LbfgsStep {
+    cfg: LbfgsConfig,
+    nu: f64,
+    w: Vec<f64>,
+    // (u_j, r_j) pairs, oldest → newest
+    pairs: Vec<(Vec<f64>, Vec<f64>)>,
+    // leader's response cache from the previous round
+    prev_grads: HashMap<usize, Vec<f64>>,
+    w_prev: Option<Vec<f64>>,
+    trace: Trace,
+    t: usize,
+    iters: usize,
+}
+
+impl JobStep for LbfgsStep {
+    fn step(&mut self, prob: &EncodedProblem, cluster: &mut Cluster) -> Result<bool> {
+        if self.t >= self.iters {
+            return Ok(false);
+        }
+        let t = self.t;
+        let (responses, round) = cluster.grad_round(&self.w)?;
+        let (g, f_est) = prob.aggregate_grad(&self.w, &responses);
+
+        // overlap curvature pair from A_t ∩ A_{t−1}
+        if let Some(wp) = &self.w_prev {
+            let u = linalg::sub(&self.w, wp);
+            let diffs: Vec<(usize, Vec<f64>)> = responses
+                .iter()
+                .filter_map(|(wid, gi, _)| {
+                    self.prev_grads
+                        .get(wid)
+                        .map(|gprev| (*wid, linalg::sub(gi, gprev)))
+                })
+                .collect();
+            if !diffs.is_empty() {
+                let r = prob.aggregate_grad_diff(&u, &diffs);
+                let ru = linalg::dot(&r, &u);
+                if ru > self.cfg.curvature_tol * linalg::dot(&u, &u) {
+                    self.pairs.push((u, r));
+                    if self.pairs.len() > self.cfg.memory {
+                        self.pairs.remove(0);
+                    }
+                }
+            }
+        }
+
+        // descent direction via two-loop recursion
+        let d = two_loop(&g, &self.pairs);
+
+        // exact line search over a fresh first-k set D_t (eq. (3))
+        let (ls_responses, ls_round) = cluster.linesearch_round(&d)?;
+        let curv = prob.aggregate_curvature(&d, &ls_responses);
+        let dg = linalg::dot(&d, &g);
+        let alpha = if curv > 0.0 && dg < 0.0 {
+            (-self.nu * dg / curv).min(self.cfg.alpha_max)
+        } else {
+            // non-descent direction (can happen uncoded): reset memory,
+            // fall back to a tiny gradient step
+            self.pairs.clear();
+            1e-4
+        };
+
+        // cache this round's responses for the next overlap
+        self.prev_grads = responses
+            .iter()
+            .map(|(wid, gi, _)| (*wid, gi.clone()))
+            .collect();
+        self.w_prev = Some(self.w.clone());
+
+        linalg::axpy(alpha, &d, &mut self.w);
+
+        self.trace.push(IterRecord {
+            iter: t,
+            f_true: prob.raw.objective(&self.w),
+            f_est,
+            grad_norm: linalg::norm2(&g),
+            alpha,
+            responders: round.admitted.len(),
+            sim_ms: cluster.sim_ms,
+            compute_ms: round.admitted_compute_ms(),
+            // both of this iteration's cluster rounds can fire
+            // scenario events; the trace must carry each of them
+            events: round
+                .events
+                .iter()
+                .chain(&ls_round.events)
+                .cloned()
+                .collect::<Vec<_>>()
+                .join("|"),
+            migrations: round
+                .migrations
+                .iter()
+                .chain(&ls_round.migrations)
+                .cloned()
+                .collect::<Vec<_>>()
+                .join("|"),
+        });
+        self.t += 1;
+        Ok(self.t < self.iters)
+    }
+
+    fn output(self: Box<Self>) -> RunOutput {
+        RunOutput { w: self.w, trace: self.trace }
+    }
+}
+
+impl SteppedOptimizer for CodedLbfgs {
+    fn stepper(
+        &self,
+        prob: &EncodedProblem,
+        wait_for: usize,
+        iters: usize,
+        w0: Option<Vec<f64>>,
+    ) -> Result<Box<dyn JobStep>> {
+        let p = prob.p();
+        let w = w0.unwrap_or_else(|| vec![0.0; p]);
+        ensure!(w.len() == p, "w0 dimension mismatch");
+        let nu = self.backoff(prob, wait_for);
+        Ok(Box::new(LbfgsStep {
+            cfg: self.cfg.clone(),
+            nu,
+            w,
+            pairs: Vec::new(),
+            prev_grads: HashMap::new(),
+            w_prev: None,
+            trace: Trace::default(),
+            t: 0,
+            iters,
+        }))
+    }
+}
+
 impl Optimizer for CodedLbfgs {
     fn run_from(
         &self,
@@ -128,98 +263,9 @@ impl Optimizer for CodedLbfgs {
         iters: usize,
         w0: Option<Vec<f64>>,
     ) -> Result<RunOutput> {
-        let p = prob.p();
-        let mut w = w0.unwrap_or_else(|| vec![0.0; p]);
-        ensure!(w.len() == p, "w0 dimension mismatch");
-        let nu = self.backoff(prob, cluster.config().wait_for);
-
-        let mut trace = Trace::default();
-        // (u_j, r_j) pairs, oldest → newest
-        let mut pairs: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
-        // leader's response cache from the previous round
-        let mut prev_grads: HashMap<usize, Vec<f64>> = HashMap::new();
-        let mut w_prev: Option<Vec<f64>> = None;
-
-        for t in 0..iters {
-            let (responses, round) = cluster.grad_round(&w)?;
-            let (g, f_est) = prob.aggregate_grad(&w, &responses);
-
-            // overlap curvature pair from A_t ∩ A_{t−1}
-            if let Some(wp) = &w_prev {
-                let u = linalg::sub(&w, wp);
-                let diffs: Vec<(usize, Vec<f64>)> = responses
-                    .iter()
-                    .filter_map(|(wid, gi, _)| {
-                        prev_grads
-                            .get(wid)
-                            .map(|gprev| (*wid, linalg::sub(gi, gprev)))
-                    })
-                    .collect();
-                if !diffs.is_empty() {
-                    let r = prob.aggregate_grad_diff(&u, &diffs);
-                    let ru = linalg::dot(&r, &u);
-                    if ru > self.cfg.curvature_tol * linalg::dot(&u, &u) {
-                        pairs.push((u, r));
-                        if pairs.len() > self.cfg.memory {
-                            pairs.remove(0);
-                        }
-                    }
-                }
-            }
-
-            // descent direction via two-loop recursion
-            let d = two_loop(&g, &pairs);
-
-            // exact line search over a fresh first-k set D_t (eq. (3))
-            let (ls_responses, ls_round) = cluster.linesearch_round(&d)?;
-            let curv = prob.aggregate_curvature(&d, &ls_responses);
-            let dg = linalg::dot(&d, &g);
-            let alpha = if curv > 0.0 && dg < 0.0 {
-                (-nu * dg / curv).min(self.cfg.alpha_max)
-            } else {
-                // non-descent direction (can happen uncoded): reset memory,
-                // fall back to a tiny gradient step
-                pairs.clear();
-                1e-4
-            };
-
-            // cache this round's responses for the next overlap
-            prev_grads = responses
-                .iter()
-                .map(|(wid, gi, _)| (*wid, gi.clone()))
-                .collect();
-            w_prev = Some(w.clone());
-
-            linalg::axpy(alpha, &d, &mut w);
-
-            trace.push(IterRecord {
-                iter: t,
-                f_true: prob.raw.objective(&w),
-                f_est,
-                grad_norm: linalg::norm2(&g),
-                alpha,
-                responders: round.admitted.len(),
-                sim_ms: cluster.sim_ms,
-                compute_ms: round.admitted_compute_ms(),
-                // both of this iteration's cluster rounds can fire
-                // scenario events; the trace must carry each of them
-                events: round
-                    .events
-                    .iter()
-                    .chain(&ls_round.events)
-                    .cloned()
-                    .collect::<Vec<_>>()
-                    .join("|"),
-                migrations: round
-                    .migrations
-                    .iter()
-                    .chain(&ls_round.migrations)
-                    .cloned()
-                    .collect::<Vec<_>>()
-                    .join("|"),
-            });
-        }
-        Ok(RunOutput { w, trace })
+        let mut step = self.stepper(prob, cluster.config().wait_for, iters, w0)?;
+        while step.step(prob, cluster)? {}
+        Ok(step.output())
     }
 }
 

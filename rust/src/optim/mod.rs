@@ -52,3 +52,42 @@ pub trait Optimizer {
         self.run_from(prob, cluster, iters, None)
     }
 }
+
+/// One resumable optimizer run, advanced a round at a time.
+///
+/// A stepper owns all loop state (`w`, trace, RNG, curvature pairs, …) so
+/// a scheduler can interleave many jobs on one cluster fleet: each
+/// [`JobStep::step`] call performs exactly the cluster rounds of one
+/// iteration of the owning algorithm, bitwise-identical to the same
+/// iteration inside [`Optimizer::run_from`]. The serve runtime
+/// ([`crate::runtime::serve`]) drives one stepper per admitted job.
+pub trait JobStep: Send {
+    /// Advance by one iteration (if any remain).
+    ///
+    /// Returns `Ok(true)` while more iterations remain after this one,
+    /// `Ok(false)` once the run is finished (iteration budget exhausted or
+    /// the algorithm terminated early, e.g. SGD's plateau stop).
+    fn step(&mut self, prob: &EncodedProblem, cluster: &mut Cluster) -> Result<bool>;
+
+    /// Consume the stepper and yield the final iterate + trace.
+    fn output(self: Box<Self>) -> RunOutput;
+}
+
+/// Optimizers that can hand out their round loop as a [`JobStep`].
+///
+/// `run_from` for these algorithms is literally `stepper(..)` followed by
+/// `while step.step(..)? {}`, so served (interleaved) and solo execution
+/// share one code path — the equivalence the serve tests pin is structural,
+/// not coincidental.
+pub trait SteppedOptimizer: Optimizer {
+    /// Build the per-job state for a run of `iters` iterations from `w0`
+    /// (zeros if `None`). `wait_for` is the cluster's first-k parameter,
+    /// needed up front for step-size / back-off precomputation.
+    fn stepper(
+        &self,
+        prob: &EncodedProblem,
+        wait_for: usize,
+        iters: usize,
+        w0: Option<Vec<f64>>,
+    ) -> Result<Box<dyn JobStep>>;
+}

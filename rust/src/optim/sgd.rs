@@ -24,7 +24,7 @@
 //! [`ClockMode::Virtual`]: crate::cluster::ClockMode::Virtual
 
 use super::gd::{CodedGd, GdConfig};
-use super::{Optimizer, RunOutput};
+use super::{JobStep, Optimizer, RunOutput, SteppedOptimizer};
 use crate::cluster::Cluster;
 use crate::config::Json;
 use crate::linalg;
@@ -309,6 +309,127 @@ impl CodedSgd {
     }
 }
 
+/// Resumable SGD run state: the iterate, momentum velocity, sampling RNG,
+/// and plateau bookkeeping. One [`JobStep::step`] = one (mini-batch)
+/// gradient round; `done` latches when the plateau stop fires so served
+/// runs terminate on exactly the round solo runs do.
+struct SgdStep {
+    cfg: SgdConfig,
+    full_batch: bool,
+    alpha0: f64,
+    epoch_len: usize,
+    rng: Pcg64,
+    w: Vec<f64>,
+    velocity: Vec<f64>,
+    trace: Trace,
+    t: usize,
+    iters: usize,
+    // plateau state: best per-epoch mean of the encoded objective
+    best_epoch: f64,
+    stall: usize,
+    acc: f64,
+    acc_n: usize,
+    done: bool,
+}
+
+impl JobStep for SgdStep {
+    fn step(&mut self, prob: &EncodedProblem, cluster: &mut Cluster) -> Result<bool> {
+        if self.done || self.t >= self.iters {
+            return Ok(false);
+        }
+        let t = self.t;
+        let alpha = self.alpha0 * self.cfg.schedule.factor(t);
+        let (g, f_est, round) = if self.full_batch {
+            let (responses, round) = cluster.grad_round(&self.w)?;
+            let (g, f_est) = prob.aggregate_grad(&self.w, &responses);
+            (g, f_est, round)
+        } else {
+            let plan = prob.sample_batch(self.cfg.batch_frac, &mut self.rng);
+            let (responses, round) = cluster.grad_batch_round(&self.w, &plan)?;
+            let (g, f_est) = prob.aggregate_grad_batch(&self.w, &responses, &plan);
+            (g, f_est, round)
+        };
+        if self.cfg.momentum == 0.0 {
+            linalg::axpy(-alpha, &g, &mut self.w);
+        } else {
+            for (v, gi) in self.velocity.iter_mut().zip(&g) {
+                *v = self.cfg.momentum * *v + gi;
+            }
+            linalg::axpy(-alpha, &self.velocity, &mut self.w);
+        }
+        self.trace.push(IterRecord {
+            iter: t,
+            f_true: prob.raw.objective(&self.w),
+            f_est,
+            grad_norm: linalg::norm2(&g),
+            alpha,
+            responders: round.admitted.len(),
+            sim_ms: cluster.sim_ms,
+            compute_ms: round.admitted_compute_ms(),
+            events: round.events.join("|"),
+            migrations: round.migrations.join("|"),
+        });
+        if self.cfg.patience > 0 {
+            self.acc += f_est;
+            self.acc_n += 1;
+            if self.acc_n == self.epoch_len {
+                let mean = self.acc / self.acc_n as f64;
+                (self.acc, self.acc_n) = (0.0, 0);
+                // the first epoch always counts as an improvement
+                // (inf - mean > tol·inf would be false)
+                let improved = self.best_epoch.is_infinite()
+                    || self.best_epoch - mean
+                        > self.cfg.plateau_tol * self.best_epoch.abs().max(1e-12);
+                self.stall = if improved { 0 } else { self.stall + 1 };
+                self.best_epoch = self.best_epoch.min(mean);
+                if self.stall >= self.cfg.patience {
+                    self.done = true;
+                }
+            }
+        }
+        self.t += 1;
+        Ok(!self.done && self.t < self.iters)
+    }
+
+    fn output(self: Box<Self>) -> RunOutput {
+        RunOutput { w: self.w, trace: self.trace }
+    }
+}
+
+impl SteppedOptimizer for CodedSgd {
+    fn stepper(
+        &self,
+        prob: &EncodedProblem,
+        wait_for: usize,
+        iters: usize,
+        w0: Option<Vec<f64>>,
+    ) -> Result<Box<dyn JobStep>> {
+        let p = prob.p();
+        let w = w0.unwrap_or_else(|| vec![0.0; p]);
+        ensure!(w.len() == p, "w0 dimension mismatch");
+        let alpha0 = self.base_step(prob, wait_for)?;
+        // full-batch rounds take the exact CodedGd path (same engine call,
+        // same aggregation, no sampling RNG) — the bit-for-bit contract
+        Ok(Box::new(SgdStep {
+            full_batch: self.cfg.batch_frac >= 1.0,
+            rng: Pcg64::new(self.cfg.seed, 0xba7c),
+            epoch_len: self.epoch_len(),
+            cfg: self.cfg.clone(),
+            alpha0,
+            velocity: vec![0.0; p],
+            w,
+            trace: Trace::default(),
+            t: 0,
+            iters,
+            best_epoch: f64::INFINITY,
+            stall: 0,
+            acc: 0.0,
+            acc_n: 0,
+            done: false,
+        }))
+    }
+}
+
 impl Optimizer for CodedSgd {
     fn run_from(
         &self,
@@ -317,73 +438,9 @@ impl Optimizer for CodedSgd {
         iters: usize,
         w0: Option<Vec<f64>>,
     ) -> Result<RunOutput> {
-        let p = prob.p();
-        let mut w = w0.unwrap_or_else(|| vec![0.0; p]);
-        ensure!(w.len() == p, "w0 dimension mismatch");
-        let alpha0 = self.base_step(prob, cluster.config().wait_for)?;
-        // full-batch rounds take the exact CodedGd path (same engine call,
-        // same aggregation, no sampling RNG) — the bit-for-bit contract
-        let full_batch = self.cfg.batch_frac >= 1.0;
-        let mut rng = Pcg64::new(self.cfg.seed, 0xba7c);
-        let epoch_len = self.epoch_len();
-        let mut trace = Trace::default();
-        let mut velocity = vec![0.0; p];
-        // plateau state: best per-epoch mean of the encoded objective
-        let mut best_epoch = f64::INFINITY;
-        let mut stall = 0usize;
-        let (mut acc, mut acc_n) = (0.0f64, 0usize);
-
-        for t in 0..iters {
-            let alpha = alpha0 * self.cfg.schedule.factor(t);
-            let (g, f_est, round) = if full_batch {
-                let (responses, round) = cluster.grad_round(&w)?;
-                let (g, f_est) = prob.aggregate_grad(&w, &responses);
-                (g, f_est, round)
-            } else {
-                let plan = prob.sample_batch(self.cfg.batch_frac, &mut rng);
-                let (responses, round) = cluster.grad_batch_round(&w, &plan)?;
-                let (g, f_est) = prob.aggregate_grad_batch(&w, &responses, &plan);
-                (g, f_est, round)
-            };
-            if self.cfg.momentum == 0.0 {
-                linalg::axpy(-alpha, &g, &mut w);
-            } else {
-                for (v, gi) in velocity.iter_mut().zip(&g) {
-                    *v = self.cfg.momentum * *v + gi;
-                }
-                linalg::axpy(-alpha, &velocity, &mut w);
-            }
-            trace.push(IterRecord {
-                iter: t,
-                f_true: prob.raw.objective(&w),
-                f_est,
-                grad_norm: linalg::norm2(&g),
-                alpha,
-                responders: round.admitted.len(),
-                sim_ms: cluster.sim_ms,
-                compute_ms: round.admitted_compute_ms(),
-                events: round.events.join("|"),
-                migrations: round.migrations.join("|"),
-            });
-            if self.cfg.patience > 0 {
-                acc += f_est;
-                acc_n += 1;
-                if acc_n == epoch_len {
-                    let mean = acc / acc_n as f64;
-                    (acc, acc_n) = (0.0, 0);
-                    // the first epoch always counts as an improvement
-                    // (inf - mean > tol·inf would be false)
-                    let improved = best_epoch.is_infinite()
-                        || best_epoch - mean > self.cfg.plateau_tol * best_epoch.abs().max(1e-12);
-                    stall = if improved { 0 } else { stall + 1 };
-                    best_epoch = best_epoch.min(mean);
-                    if stall >= self.cfg.patience {
-                        break;
-                    }
-                }
-            }
-        }
-        Ok(RunOutput { w, trace })
+        let mut step = self.stepper(prob, cluster.config().wait_for, iters, w0)?;
+        while step.step(prob, cluster)? {}
+        Ok(step.output())
     }
 }
 

@@ -27,11 +27,16 @@
 //! crash-park invariant) and in-place problem reconfiguration. The
 //! default is `None` — stateless engines, and the fail-fast [`XlaEngine`]
 //! stub, opt out and callers fall back to the historical rebuild paths.
+//!
+//! Multi-tenant serving lives in [`serve`]: a [`JobServer`] interleaves
+//! many jobs' rounds over one shared [`WorkerPool`], each job dispatching
+//! through its own [`serve::JobEngine`] view of the pool.
 
 pub mod artifacts;
 pub mod native;
 pub mod pool;
 pub mod rebalance;
+pub mod serve;
 pub mod stream;
 pub mod xla_engine;
 
@@ -39,6 +44,10 @@ pub use artifacts::Manifest;
 pub use native::NativeEngine;
 pub use pool::WorkerPool;
 pub use rebalance::{EwmaSpeedModel, MovePlan, RebalanceConfig, Rebalancer};
+pub use serve::{
+    EncodedShardCache, JobEngine, JobServer, JobSpec, SchedJob, Scheduler, ServeOptimizer,
+    ServeOutcome, ServePolicy,
+};
 pub use stream::{Collected, Collector, CurvCollector, GradCollector};
 pub use xla_engine::XlaEngine;
 

@@ -1,17 +1,31 @@
 //! Persistent worker pool: shard-owning resident threads with zero
-//! per-round spawn.
+//! per-round spawn, shared by any number of concurrently-served jobs.
 //!
 //! The historical native engine re-entered `std::thread::scope` for every
 //! round, so each GD/SGD/L-BFGS/FISTA iteration paid thread creation,
 //! shard re-borrow, and stack setup — overhead a real m-node deployment
 //! amortizes exactly once, at cluster start. [`WorkerPool`] is that
 //! amortization: a fixed set of **lanes** (OS threads) spawned once, each
-//! *owning* a contiguous range of worker slots (shard data moved in at
-//! construction — no per-round borrow dance) plus a resident scratch
-//! buffer per worker, receiving round commands over a per-lane channel
-//! and streaming results into the round's
+//! *owning* a contiguous range of worker slots per staged job (shard data
+//! moved in at staging — no per-round borrow dance) plus a resident
+//! scratch buffer per worker, receiving round commands over a per-lane
+//! channel and streaming results into the round's
 //! [`Collector`](super::stream::Collector) exactly like the scoped-spawn
 //! engine did.
+//!
+//! # Multi-tenant job protocol
+//!
+//! Every command carries a **job id**. A job is one staged encoded
+//! problem: its shards are chunked over the shared lanes with a per-job
+//! chunk size (`chunk_j = ceil(m_j / lanes)`), its park mask is layered
+//! per job over the lanes (a `crash:` scenario parking job A's worker 3
+//! never touches job B's worker 3), and its rounds address only its own
+//! slots. The single-tenant surface ([`WorkerPool::new`],
+//! [`WorkerPool::grad_streamed`], …) is job 0 of the same machinery, so
+//! the resident engine and every historical trace are byte-identical to
+//! the pre-serve pool. [`WorkerPool::with_lanes`] spawns a job-less pool
+//! for the serve path; [`WorkerPool::stage_job`] and
+//! [`WorkerPool::retire`] add and drop tenants without respawning.
 //!
 //! # Command/response protocol
 //!
@@ -19,25 +33,28 @@
 //!
 //! | command | effect | acknowledged |
 //! |---------|--------|--------------|
-//! | `Grad` | fused gradient over the lane's slots, streamed into the sink | yes |
+//! | `Grad` | fused gradient over the job's slots on this lane, streamed into the sink | yes |
 //! | `GradBatch` | range-restricted mini-batch gradient over a [`BatchPlan`] | yes |
 //! | `Curv` | line-search `‖X̃_i d‖²` per slot | yes |
-//! | `SetParked` | mark one owned worker parked/unparked | no (ordered channel) |
-//! | `Reconfigure` | replace the lane's slot range with a new problem's shards | yes |
+//! | `SetParked` | mark one owned worker of one job parked/unparked | no (ordered channel) |
+//! | `Reconfigure` | replace one job's slot range with a new problem's shards | yes |
 //! | `Migrate` | swap individual owned workers' slots (rebalancer shard handoff; park flags and worker count preserved, only affected lanes addressed) | yes |
+//! | `Retire` | drop one job's slots (serve-job completion) | yes |
 //! | `Shutdown` | exit the lane thread (sent by `Drop`) | no (joined) |
 //!
 //! Round dispatch sends one command per lane, then blocks on each lane's
 //! acknowledgement. A lane drops its [`Collector`](super::stream::Collector)
 //! handle *before* acknowledging, so when dispatch returns, the caller's handle is the
-//! only one left and `into_collected` succeeds. Broadcast vectors cross
-//! the channel as `Arc<[f64]>` — one copy into the Arc per round, one
-//! refcount bump per lane. Worker-side compute allocates nothing: the
-//! gradient/residual scratch is resident in each slot, and the only
-//! per-round allocations left are the round's *messages* (broadcast
-//! copy, mini-batch plan, collector, delivered payload clones) — exactly
-//! what a network backend would serialize anyway, and what
-//! `fig_dispatch` counts.
+//! only one left and `into_collected` succeeds; dispatch hands each lane
+//! a lane-registered clone and tags the sink with the job id, so a leaked
+//! handle is attributed to its job and lane by the sole-owner panic.
+//! Broadcast vectors cross the channel as `Arc<[f64]>` — one copy into
+//! the Arc per round, one refcount bump per lane. Worker-side compute
+//! allocates nothing: the gradient/residual scratch is resident in each
+//! slot, and the only per-round allocations left are the round's
+//! *messages* (broadcast copy, mini-batch plan, collector, delivered
+//! payload clones) — exactly what a network backend would serialize
+//! anyway, and what `fig_dispatch` counts.
 //!
 //! # Crash-park invariant
 //!
@@ -56,6 +73,7 @@ use super::stream::{CurvCollector, GradCollector};
 use crate::linalg::DataMat;
 use crate::problem::{BatchPlan, EncodedProblem, WorkerShard};
 use anyhow::{anyhow, ensure, Result};
+use std::collections::BTreeMap;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -90,46 +108,51 @@ impl Slot {
 
 /// One round command shipped to a lane (module docs have the table).
 enum Command {
-    /// Full-shard gradient round.
+    /// Full-shard gradient round for one job.
     Grad {
+        job: usize,
         w: Arc<[f64]>,
         sink: GradCollector,
         only: Option<usize>,
         skip_parked: bool,
     },
-    /// Mini-batch gradient round over a [`BatchPlan`].
+    /// Mini-batch gradient round over a [`BatchPlan`] for one job.
     GradBatch {
+        job: usize,
         w: Arc<[f64]>,
         plan: Arc<BatchPlan>,
         sink: GradCollector,
         only: Option<usize>,
     },
-    /// Line-search round.
+    /// Line-search round for one job.
     Curv {
+        job: usize,
         d: Arc<[f64]>,
         sink: CurvCollector,
         only: Option<usize>,
         skip_parked: bool,
     },
-    /// Park or unpark one owned worker (crash-park invariant).
-    SetParked { worker: usize, parked: bool },
-    /// Replace the lane's owned slots (problem swap between runs).
-    Reconfigure { base: usize, slots: Vec<Slot> },
+    /// Park or unpark one owned worker of one job (crash-park invariant).
+    SetParked { job: usize, worker: usize, parked: bool },
+    /// Replace one job's owned slots (problem swap / job staging).
+    Reconfigure { job: usize, base: usize, slots: Vec<Slot> },
     /// Swap individual owned workers' slots in place (shard migration):
     /// unlike `Reconfigure` this preserves park flags and worker count.
-    Migrate { slots: Vec<(usize, Slot)> },
+    Migrate { job: usize, slots: Vec<(usize, Slot)> },
+    /// Drop one job's slots (a served job finished).
+    Retire { job: usize },
     /// Exit the lane thread.
     Shutdown,
 }
 
-/// Lane-thread state: the owned worker range and its park mask.
-struct LaneState {
+/// One job's owned worker range on a lane, with its per-job park mask.
+struct JobSlots {
     base: usize,
     slots: Vec<Slot>,
     parked: Vec<bool>,
 }
 
-impl LaneState {
+impl JobSlots {
     fn run_grad(
         &mut self,
         w: &[f64],
@@ -137,7 +160,7 @@ impl LaneState {
         only: Option<usize>,
         skip_parked: bool,
     ) {
-        let LaneState { base, slots, parked } = self;
+        let JobSlots { base, slots, parked } = self;
         for (j, slot) in slots.iter_mut().enumerate() {
             let wid = *base + j;
             if let Some(o) = only {
@@ -164,7 +187,7 @@ impl LaneState {
         sink: &GradCollector,
         only: Option<usize>,
     ) {
-        let LaneState { base, slots, parked } = self;
+        let JobSlots { base, slots, parked } = self;
         for (j, slot) in slots.iter_mut().enumerate() {
             let wid = *base + j;
             if let Some(o) = only {
@@ -202,7 +225,7 @@ impl LaneState {
         only: Option<usize>,
         skip_parked: bool,
     ) {
-        let LaneState { base, slots, parked } = self;
+        let JobSlots { base, slots, parked } = self;
         for (j, slot) in slots.iter_mut().enumerate() {
             let wid = *base + j;
             if let Some(o) = only {
@@ -224,55 +247,74 @@ impl LaneState {
     }
 }
 
+/// Lane-thread state: every staged job's owned slots, by job id.
+struct LaneState {
+    jobs: BTreeMap<usize, JobSlots>,
+}
+
 /// Lane main loop. Collector handles are dropped **before** the
 /// acknowledgement is sent — the dispatch side relies on this to unwrap
 /// the round's collector right after the last ack (see the module docs).
 /// Acks carry no payload: the round commands are infallible on the lane
-/// side, so the only failure mode is a dead lane, which dispatch
+/// side (a round for a job with no slots on this lane is an ack-only
+/// no-op), so the only failure mode is a dead lane, which dispatch
 /// observes as a channel disconnect.
 fn lane_main(mut st: LaneState, rx: Receiver<Command>, ack: Sender<()>) {
     while let Ok(cmd) = rx.recv() {
         match cmd {
-            Command::Grad { w, sink, only, skip_parked } => {
-                st.run_grad(&w, &sink, only, skip_parked);
+            Command::Grad { job, w, sink, only, skip_parked } => {
+                if let Some(js) = st.jobs.get_mut(&job) {
+                    js.run_grad(&w, &sink, only, skip_parked);
+                }
                 drop(sink);
                 drop(w);
                 let _ = ack.send(());
             }
-            Command::GradBatch { w, plan, sink, only } => {
-                st.run_grad_batch(&w, &plan, &sink, only);
+            Command::GradBatch { job, w, plan, sink, only } => {
+                if let Some(js) = st.jobs.get_mut(&job) {
+                    js.run_grad_batch(&w, &plan, &sink, only);
+                }
                 drop(sink);
                 drop(plan);
                 drop(w);
                 let _ = ack.send(());
             }
-            Command::Curv { d, sink, only, skip_parked } => {
-                st.run_curv(&d, &sink, only, skip_parked);
+            Command::Curv { job, d, sink, only, skip_parked } => {
+                if let Some(js) = st.jobs.get_mut(&job) {
+                    js.run_curv(&d, &sink, only, skip_parked);
+                }
                 drop(sink);
                 drop(d);
                 let _ = ack.send(());
             }
-            Command::SetParked { worker, parked } => {
-                if let Some(j) = worker.checked_sub(st.base) {
-                    if j < st.parked.len() {
-                        st.parked[j] = parked;
-                    }
-                }
-            }
-            Command::Reconfigure { base, slots } => {
-                st.parked = vec![false; slots.len()];
-                st.base = base;
-                st.slots = slots;
-                let _ = ack.send(());
-            }
-            Command::Migrate { slots } => {
-                for (worker, slot) in slots {
-                    if let Some(j) = worker.checked_sub(st.base) {
-                        if j < st.slots.len() {
-                            st.slots[j] = slot;
+            Command::SetParked { job, worker, parked } => {
+                if let Some(js) = st.jobs.get_mut(&job) {
+                    if let Some(j) = worker.checked_sub(js.base) {
+                        if j < js.parked.len() {
+                            js.parked[j] = parked;
                         }
                     }
                 }
+            }
+            Command::Reconfigure { job, base, slots } => {
+                let parked = vec![false; slots.len()];
+                st.jobs.insert(job, JobSlots { base, slots, parked });
+                let _ = ack.send(());
+            }
+            Command::Migrate { job, slots } => {
+                if let Some(js) = st.jobs.get_mut(&job) {
+                    for (worker, slot) in slots {
+                        if let Some(j) = worker.checked_sub(js.base) {
+                            if j < js.slots.len() {
+                                js.slots[j] = slot;
+                            }
+                        }
+                    }
+                }
+                let _ = ack.send(());
+            }
+            Command::Retire { job } => {
+                st.jobs.remove(&job);
                 let _ = ack.send(());
             }
             Command::Shutdown => break,
@@ -287,41 +329,56 @@ struct Lane {
     handle: Option<JoinHandle<()>>,
 }
 
+/// Leader-side routing state for one staged job.
+struct JobMeta {
+    /// Worker (= shard) count of this job.
+    workers: usize,
+    /// Contiguous chunk size: worker `w` of this job lives on lane
+    /// `w / chunk`.
+    chunk: usize,
+    /// Leader-side mirror of the job's per-worker park flags.
+    parked: Vec<bool>,
+}
+
 /// The persistent worker pool (module docs have the full contract).
 ///
-/// Workers are chunked contiguously with `chunk = ceil(m / min(threads, m))`
-/// (`threads = 0` resolves to available parallelism), one lane per
-/// chunk — `⌈m/chunk⌉` lanes, at most `min(threads, m)`; worker `w`
-/// lives on lane `w / chunk`. This is the same chunking the
-/// scoped-spawn engine used, so delivery semantics are unchanged.
+/// Each staged job's workers are chunked contiguously with
+/// `chunk = ceil(m / lanes)`, so worker `w` of job `j` lives on lane
+/// `w / chunk_j`; lanes past the job's last chunk hold no slots for it
+/// and acknowledge its rounds as no-ops. For the single-tenant
+/// constructor ([`WorkerPool::new`]) the lane count is
+/// `min(threads, m).max(1)` (`threads = 0` resolves to available
+/// parallelism) — the same chunking the scoped-spawn engine used, so
+/// delivery semantics are unchanged.
 pub struct WorkerPool {
     lanes: Vec<Lane>,
-    chunk: usize,
-    workers: usize,
+    /// Routing state per staged job id.
+    jobs: BTreeMap<usize, JobMeta>,
     spawned: u64,
-    /// Leader-side mirror of the per-worker park flags (diagnostics).
-    parked: Vec<bool>,
     /// Set when a reconfigure failed partway (some lanes swapped, the
     /// routing state did not): every later dispatch refuses cleanly
     /// instead of routing worker ids over a half-swapped pool.
     poisoned: bool,
 }
 
+fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
 impl WorkerPool {
-    /// Spawn a pool owning `prob`'s shards, with at most `threads` lanes
-    /// (`0` = available parallelism).
+    /// Spawn a pool owning `prob`'s shards as job 0, with at most
+    /// `threads` lanes (`0` = available parallelism).
     pub fn new(prob: &EncodedProblem, threads: usize) -> Self {
         WorkerPool::from_slots(Slot::stage(prob), threads)
     }
 
     pub(crate) fn from_slots(slots: Vec<Slot>, threads: usize) -> Self {
         let workers = slots.len();
-        let resolved = if threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            threads
-        };
-        let lane_count = resolved.min(workers).max(1);
+        let lane_count = resolve_threads(threads).min(workers).max(1);
         let chunk = workers.div_ceil(lane_count).max(1);
         let mut lanes = Vec::with_capacity(lane_count);
         let mut spawned = 0u64;
@@ -330,23 +387,35 @@ impl WorkerPool {
         while base < workers {
             let take = chunk.min(workers - base);
             let lane_slots: Vec<Slot> = slots.by_ref().take(take).collect();
-            let (tx, rx) = mpsc::channel();
-            let (ack_tx, ack_rx) = mpsc::channel();
-            let st = LaneState { base, slots: lane_slots, parked: vec![false; take] };
-            let handle = std::thread::Builder::new()
-                .name(format!("codedopt-pool-{base}"))
-                .spawn(move || lane_main(st, rx, ack_tx))
-                .expect("spawning pool lane thread");
-            lanes.push(Lane { tx, ack: ack_rx, handle: Some(handle) });
+            let mut jobs = BTreeMap::new();
+            jobs.insert(0, JobSlots { base, slots: lane_slots, parked: vec![false; take] });
+            lanes.push(spawn_lane(lanes.len(), LaneState { jobs }));
             spawned += 1;
             base += take;
         }
-        WorkerPool { lanes, chunk, workers, spawned, parked: vec![false; workers], poisoned: false }
+        let mut jobs = BTreeMap::new();
+        jobs.insert(0, JobMeta { workers, chunk, parked: vec![false; workers] });
+        WorkerPool { lanes, jobs, spawned, poisoned: false }
     }
 
-    /// Worker count the pool currently stages.
+    /// Spawn a job-less pool with `threads` resident lanes (`0` =
+    /// available parallelism) — the serve-mode constructor. Jobs are
+    /// staged onto the shared lanes with [`WorkerPool::stage_job`] and
+    /// dropped with [`WorkerPool::retire`]; no thread is ever spawned
+    /// after this call.
+    pub fn with_lanes(threads: usize) -> Self {
+        let lane_count = resolve_threads(threads).max(1);
+        let mut lanes = Vec::with_capacity(lane_count);
+        for i in 0..lane_count {
+            lanes.push(spawn_lane(i, LaneState { jobs: BTreeMap::new() }));
+        }
+        WorkerPool { lanes, jobs: BTreeMap::new(), spawned: lane_count as u64, poisoned: false }
+    }
+
+    /// Worker count of job 0 (the single-tenant surface); 0 when job 0 is
+    /// not staged.
     pub fn workers(&self) -> usize {
-        self.workers
+        self.jobs.get(&0).map_or(0, |m| m.workers)
     }
 
     /// Number of resident lanes (OS threads).
@@ -361,13 +430,28 @@ impl WorkerPool {
         self.spawned
     }
 
-    /// Leader-side view of the per-worker park flags.
+    /// Leader-side view of job 0's per-worker park flags.
     pub fn parked(&self) -> &[bool] {
-        &self.parked
+        self.jobs.get(&0).map_or(&[], |m| &m.parked)
     }
 
-    fn lane_of(&self, worker: usize) -> usize {
-        worker / self.chunk
+    /// Ids of the currently staged jobs.
+    pub fn staged_jobs(&self) -> Vec<usize> {
+        self.jobs.keys().copied().collect()
+    }
+
+    /// Worker count of one staged job (`None` if the job is not staged).
+    pub fn workers_for(&self, job: usize) -> Option<usize> {
+        self.jobs.get(&job).map(|m| m.workers)
+    }
+
+    /// Parked workers of one staged job (0 if the job is not staged).
+    pub fn parked_count_for(&self, job: usize) -> usize {
+        self.jobs.get(&job).map_or(0, |m| m.parked.iter().filter(|&&x| x).count())
+    }
+
+    fn meta(&self, job: usize) -> Result<&JobMeta> {
+        self.jobs.get(&job).ok_or_else(|| anyhow!("job {job} is not staged on this pool"))
     }
 
     /// Send one command per lane, then wait for every lane's ack. The ack
@@ -417,64 +501,135 @@ impl WorkerPool {
             .map_err(|_| anyhow!("pool lane {lane_idx} died mid-round"))
     }
 
-    /// Stream one full-gradient round into `sink` (skips parked workers).
-    pub fn grad_streamed(&mut self, w: &[f64], sink: &GradCollector) -> Result<()> {
-        ensure!(sink.workers() == self.workers, "sink worker count mismatch");
+    // ------------------------------------------------ job-aware surface
+
+    /// Stage (or restage) `prob` as job `job` on the shared lanes: every
+    /// lane receives the job's new slot range (park flags reset), keeping
+    /// the resident threads. The job's worker count may change; the lane
+    /// count never does.
+    pub fn stage_job(&mut self, job: usize, prob: &EncodedProblem) -> Result<()> {
+        self.stage_job_slots(job, Slot::stage(prob))
+    }
+
+    pub(crate) fn stage_job_slots(&mut self, job: usize, slots: Vec<Slot>) -> Result<()> {
+        let workers = slots.len();
+        let lane_count = self.lanes.len().max(1);
+        let chunk = workers.div_ceil(lane_count).max(1);
+        let mut pending: Vec<Vec<Slot>> = Vec::with_capacity(lane_count);
+        let mut slots = slots.into_iter();
+        for i in 0..self.lanes.len() {
+            let base = (i * chunk).min(workers);
+            let take = chunk.min(workers - base);
+            pending.push(slots.by_ref().take(take).collect());
+        }
+        let mut pending = pending.into_iter();
+        let res = self.broadcast(|i| Command::Reconfigure {
+            job,
+            base: (i * chunk).min(workers),
+            slots: pending.next().expect("one slot batch per lane"),
+        });
+        if res.is_err() {
+            // some lanes may hold the new slots while the routing state
+            // below was never updated: refuse all further dispatch
+            self.poisoned = true;
+            return res;
+        }
+        self.jobs.insert(job, JobMeta { workers, chunk, parked: vec![false; workers] });
+        Ok(())
+    }
+
+    /// Drop job `job` from every lane (a served job finished): its slots
+    /// are freed, the lanes stay resident for the remaining tenants.
+    pub fn retire(&mut self, job: usize) -> Result<()> {
+        ensure!(self.jobs.contains_key(&job), "job {job} is not staged on this pool");
+        self.broadcast(|_| Command::Retire { job })?;
+        self.jobs.remove(&job);
+        Ok(())
+    }
+
+    /// Stream one full-gradient round for `job` into `sink` (skips the
+    /// job's parked workers).
+    pub fn grad_streamed_for(
+        &mut self,
+        job: usize,
+        w: &[f64],
+        sink: &GradCollector,
+    ) -> Result<()> {
+        let workers = self.meta(job)?.workers;
+        ensure!(sink.workers() == workers, "sink worker count mismatch for job {job}");
+        sink.tag_job(job);
         let w: Arc<[f64]> = Arc::from(w);
-        self.broadcast(|_| Command::Grad {
+        self.broadcast(|i| Command::Grad {
+            job,
             w: w.clone(),
-            sink: sink.clone(),
+            sink: sink.clone_for_lane(i),
             only: None,
             skip_parked: true,
         })
     }
 
-    /// Stream one mini-batch gradient round into `sink` (skips parked
-    /// workers). `plan` must cover exactly [`WorkerPool::workers`]; it is
-    /// cloned once (not per lane) to cross the channel — a few segment
-    /// tuples per worker, and the sampler mints a fresh plan each round
-    /// anyway.
-    pub fn grad_batch_streamed(
+    /// Stream one mini-batch gradient round for `job` into `sink` (skips
+    /// the job's parked workers). `plan` must cover exactly the job's
+    /// worker count; it is cloned once (not per lane) to cross the
+    /// channel — a few segment tuples per worker, and the sampler mints a
+    /// fresh plan each round anyway.
+    pub fn grad_batch_streamed_for(
         &mut self,
+        job: usize,
         w: &[f64],
         plan: &BatchPlan,
         sink: &GradCollector,
     ) -> Result<()> {
-        assert_eq!(plan.workers(), self.workers, "batch plan worker count mismatch");
-        ensure!(sink.workers() == self.workers, "sink worker count mismatch");
+        let workers = self.meta(job)?.workers;
+        assert_eq!(plan.workers(), workers, "batch plan worker count mismatch");
+        ensure!(sink.workers() == workers, "sink worker count mismatch for job {job}");
+        sink.tag_job(job);
         let w: Arc<[f64]> = Arc::from(w);
         let plan = Arc::new(plan.clone());
-        self.broadcast(|_| Command::GradBatch {
+        self.broadcast(|i| Command::GradBatch {
+            job,
             w: w.clone(),
             plan: plan.clone(),
-            sink: sink.clone(),
+            sink: sink.clone_for_lane(i),
             only: None,
         })
     }
 
-    /// Stream one line-search round into `sink` (skips parked workers).
-    pub fn curv_streamed(&mut self, d: &[f64], sink: &CurvCollector) -> Result<()> {
-        ensure!(sink.workers() == self.workers, "sink worker count mismatch");
+    /// Stream one line-search round for `job` into `sink` (skips the
+    /// job's parked workers).
+    pub fn curv_streamed_for(
+        &mut self,
+        job: usize,
+        d: &[f64],
+        sink: &CurvCollector,
+    ) -> Result<()> {
+        let workers = self.meta(job)?.workers;
+        ensure!(sink.workers() == workers, "sink worker count mismatch for job {job}");
+        sink.tag_job(job);
         let d: Arc<[f64]> = Arc::from(d);
-        self.broadcast(|_| Command::Curv {
+        self.broadcast(|i| Command::Curv {
+            job,
             d: d.clone(),
-            sink: sink.clone(),
+            sink: sink.clone_for_lane(i),
             only: None,
             skip_parked: true,
         })
     }
 
-    /// One worker's `(g_i, f_i)` (ignores the parked flag — direct calls
-    /// are a staging/debug surface, not round fan-out).
-    pub fn grad_one(&mut self, worker: usize, w: &[f64]) -> Result<(Vec<f64>, f64)> {
-        ensure!(worker < self.workers, "worker id {worker} out of range");
-        let sink = GradCollector::collect_all(self.workers);
-        let lane = self.lane_of(worker);
+    /// One worker's `(g_i, f_i)` for `job` (ignores the parked flag —
+    /// direct calls are a staging/debug surface, not round fan-out).
+    pub fn grad_one_for(&mut self, job: usize, worker: usize, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let meta = self.meta(job)?;
+        ensure!(worker < meta.workers, "worker id {worker} out of range");
+        let (workers, lane) = (meta.workers, worker / meta.chunk);
+        let sink = GradCollector::collect_all(workers);
+        sink.tag_job(job);
         self.dispatch_one(
             lane,
             Command::Grad {
+                job,
                 w: Arc::from(w),
-                sink: sink.clone(),
+                sink: sink.clone_for_lane(lane),
                 only: Some(worker),
                 skip_parked: false,
             },
@@ -486,25 +641,30 @@ impl WorkerPool {
             .ok_or_else(|| anyhow!("pool delivered no response for worker {worker}"))
     }
 
-    /// One worker's mini-batch gradient over explicit row segments.
-    pub fn grad_batch_one(
+    /// One worker's mini-batch gradient for `job` over explicit row
+    /// segments.
+    pub fn grad_batch_one_for(
         &mut self,
+        job: usize,
         worker: usize,
         w: &[f64],
         segs: &[(usize, usize)],
     ) -> Result<(Vec<f64>, f64)> {
-        ensure!(worker < self.workers, "worker id {worker} out of range");
-        let mut segments = vec![Vec::new(); self.workers];
+        let meta = self.meta(job)?;
+        ensure!(worker < meta.workers, "worker id {worker} out of range");
+        let (workers, lane) = (meta.workers, worker / meta.chunk);
+        let mut segments = vec![Vec::new(); workers];
         segments[worker] = segs.to_vec();
         let plan = Arc::new(BatchPlan { segments });
-        let sink = GradCollector::collect_all(self.workers);
-        let lane = self.lane_of(worker);
+        let sink = GradCollector::collect_all(workers);
+        sink.tag_job(job);
         self.dispatch_one(
             lane,
             Command::GradBatch {
+                job,
                 w: Arc::from(w),
                 plan,
-                sink: sink.clone(),
+                sink: sink.clone_for_lane(lane),
                 only: Some(worker),
             },
         )?;
@@ -515,16 +675,19 @@ impl WorkerPool {
             .ok_or_else(|| anyhow!("pool delivered no response for worker {worker}"))
     }
 
-    /// One worker's `‖X̃_i d‖²` (ignores the parked flag).
-    pub fn curv_one(&mut self, worker: usize, d: &[f64]) -> Result<f64> {
-        ensure!(worker < self.workers, "worker id {worker} out of range");
-        let sink = CurvCollector::collect_all(self.workers);
-        let lane = self.lane_of(worker);
+    /// One worker's `‖X̃_i d‖²` for `job` (ignores the parked flag).
+    pub fn curv_one_for(&mut self, job: usize, worker: usize, d: &[f64]) -> Result<f64> {
+        let meta = self.meta(job)?;
+        ensure!(worker < meta.workers, "worker id {worker} out of range");
+        let (workers, lane) = (meta.workers, worker / meta.chunk);
+        let sink = CurvCollector::collect_all(workers);
+        sink.tag_job(job);
         self.dispatch_one(
             lane,
             Command::Curv {
+                job,
                 d: Arc::from(d),
-                sink: sink.clone(),
+                sink: sink.clone_for_lane(lane),
                 only: Some(worker),
                 skip_parked: false,
             },
@@ -536,14 +699,17 @@ impl WorkerPool {
             .ok_or_else(|| anyhow!("pool delivered no response for worker {worker}"))
     }
 
-    /// All workers' `(g_i, f_i)` in worker order (computes parked workers
-    /// too — the batch-synchronous reference surface).
-    pub fn grad_all(&mut self, w: &[f64]) -> Result<Vec<(Vec<f64>, f64)>> {
-        let sink = GradCollector::collect_all(self.workers);
+    /// All of `job`'s workers' `(g_i, f_i)` in worker order (computes
+    /// parked workers too — the batch-synchronous reference surface).
+    pub fn grad_all_for(&mut self, job: usize, w: &[f64]) -> Result<Vec<(Vec<f64>, f64)>> {
+        let workers = self.meta(job)?.workers;
+        let sink = GradCollector::collect_all(workers);
+        sink.tag_job(job);
         let w: Arc<[f64]> = Arc::from(w);
-        self.broadcast(|_| Command::Grad {
+        self.broadcast(|i| Command::Grad {
+            job,
             w: w.clone(),
-            sink: sink.clone(),
+            sink: sink.clone_for_lane(i),
             only: None,
             skip_parked: false,
         })?;
@@ -558,13 +724,16 @@ impl WorkerPool {
             .collect()
     }
 
-    /// All workers' line-search terms in worker order.
-    pub fn curv_all(&mut self, d: &[f64]) -> Result<Vec<f64>> {
-        let sink = CurvCollector::collect_all(self.workers);
+    /// All of `job`'s workers' line-search terms in worker order.
+    pub fn curv_all_for(&mut self, job: usize, d: &[f64]) -> Result<Vec<f64>> {
+        let workers = self.meta(job)?.workers;
+        let sink = CurvCollector::collect_all(workers);
+        sink.tag_job(job);
         let d: Arc<[f64]> = Arc::from(d);
-        self.broadcast(|_| Command::Curv {
+        self.broadcast(|i| Command::Curv {
+            job,
             d: d.clone(),
-            sink: sink.clone(),
+            sink: sink.clone_for_lane(i),
             only: None,
             skip_parked: false,
         })?;
@@ -579,55 +748,22 @@ impl WorkerPool {
             .collect()
     }
 
-    /// Park or unpark one worker (see the crash-park invariant in the
-    /// module docs). Infallible: a dead lane surfaces as an error on the
-    /// next round dispatch, not here.
-    pub fn set_parked(&mut self, worker: usize, parked: bool) {
-        if worker >= self.workers {
+    /// Park or unpark one worker of `job` (see the crash-park invariant
+    /// in the module docs). Infallible: a dead lane surfaces as an error
+    /// on the next round dispatch, not here, and an unstaged job is a
+    /// no-op.
+    pub fn set_parked_for(&mut self, job: usize, worker: usize, parked: bool) {
+        let Some(meta) = self.jobs.get_mut(&job) else { return };
+        if worker >= meta.workers {
             return;
         }
-        self.parked[worker] = parked;
-        let lane = self.lane_of(worker);
-        let _ = self.lanes[lane].tx.send(Command::SetParked { worker, parked });
+        meta.parked[worker] = parked;
+        let lane = worker / meta.chunk;
+        let _ = self.lanes[lane].tx.send(Command::SetParked { job, worker, parked });
     }
 
-    /// Replace the staged problem in place: every lane receives its new
-    /// slot range (park flags reset), keeping the resident threads. The
-    /// worker count may change; the lane count never does.
-    pub fn reconfigure(&mut self, prob: &EncodedProblem) -> Result<()> {
-        self.reconfigure_slots(Slot::stage(prob))
-    }
-
-    pub(crate) fn reconfigure_slots(&mut self, slots: Vec<Slot>) -> Result<()> {
-        let workers = slots.len();
-        let lane_count = self.lanes.len().max(1);
-        let chunk = workers.div_ceil(lane_count).max(1);
-        let mut pending: Vec<Vec<Slot>> = Vec::with_capacity(lane_count);
-        let mut slots = slots.into_iter();
-        for i in 0..self.lanes.len() {
-            let base = (i * chunk).min(workers);
-            let take = chunk.min(workers - base);
-            pending.push(slots.by_ref().take(take).collect());
-        }
-        let mut pending = pending.into_iter();
-        let res = self.broadcast(|i| Command::Reconfigure {
-            base: (i * chunk).min(workers),
-            slots: pending.next().expect("one slot batch per lane"),
-        });
-        if res.is_err() {
-            // some lanes may hold the new slots while the routing state
-            // below was never updated: refuse all further dispatch
-            self.poisoned = true;
-            return res;
-        }
-        self.chunk = chunk;
-        self.workers = workers;
-        self.parked = vec![false; workers];
-        Ok(())
-    }
-
-    /// Swap individual workers' resident shards in place — the
-    /// rebalancer's migration handoff. Unlike [`WorkerPool::reconfigure`]
+    /// Swap individual workers' resident shards of `job` in place — the
+    /// rebalancer's migration handoff. Unlike [`WorkerPool::stage_job`]
     /// this preserves park flags, worker count, lane routing, and every
     /// untouched slot; **only the affected lanes** receive a (waited-on)
     /// command, and no thread is spawned (`spawn_count` is unchanged).
@@ -635,15 +771,22 @@ impl WorkerPool {
     /// handoff that fails partway poisons the pool exactly like a failed
     /// reconfigure: some lanes may hold the new shard while others never
     /// got theirs, so all further dispatch refuses cleanly.
-    pub fn migrate(&mut self, p: usize, changed: &[(usize, WorkerShard)]) -> Result<()> {
+    pub fn migrate_for(
+        &mut self,
+        job: usize,
+        p: usize,
+        changed: &[(usize, WorkerShard)],
+    ) -> Result<()> {
         ensure!(
             !self.poisoned,
             "worker pool poisoned by a failed reconfigure; rebuild the engine"
         );
+        let meta = self.meta(job)?;
+        let (workers, chunk) = (meta.workers, meta.chunk);
         let mut per_lane: Vec<Vec<(usize, Slot)>> = vec![Vec::new(); self.lanes.len()];
         for (w, shard) in changed {
-            ensure!(*w < self.workers, "migrate: worker id {w} out of range");
-            per_lane[self.lane_of(*w)].push((*w, Slot::stage_shard(shard, p)));
+            ensure!(*w < workers, "migrate: worker id {w} out of range");
+            per_lane[*w / chunk].push((*w, Slot::stage_shard(shard, p)));
         }
         let targets: Vec<usize> =
             (0..self.lanes.len()).filter(|&i| !per_lane[i].is_empty()).collect();
@@ -651,7 +794,7 @@ impl WorkerPool {
         let mut err: Option<anyhow::Error> = None;
         for &i in &targets {
             let slots = std::mem::take(&mut per_lane[i]);
-            match self.lanes[i].tx.send(Command::Migrate { slots }) {
+            match self.lanes[i].tx.send(Command::Migrate { job, slots }) {
                 Ok(()) => sent[i] = true,
                 Err(_) => {
                     err.get_or_insert_with(|| anyhow!("pool lane {i} is gone (thread exited)"));
@@ -671,6 +814,86 @@ impl WorkerPool {
             }
         }
     }
+
+    // ---------------------------------------- job-0 compatibility surface
+
+    /// Stream one full-gradient round into `sink` (job 0).
+    pub fn grad_streamed(&mut self, w: &[f64], sink: &GradCollector) -> Result<()> {
+        self.grad_streamed_for(0, w, sink)
+    }
+
+    /// Stream one mini-batch gradient round into `sink` (job 0).
+    pub fn grad_batch_streamed(
+        &mut self,
+        w: &[f64],
+        plan: &BatchPlan,
+        sink: &GradCollector,
+    ) -> Result<()> {
+        self.grad_batch_streamed_for(0, w, plan, sink)
+    }
+
+    /// Stream one line-search round into `sink` (job 0).
+    pub fn curv_streamed(&mut self, d: &[f64], sink: &CurvCollector) -> Result<()> {
+        self.curv_streamed_for(0, d, sink)
+    }
+
+    /// One worker's `(g_i, f_i)` (job 0; ignores the parked flag).
+    pub fn grad_one(&mut self, worker: usize, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        self.grad_one_for(0, worker, w)
+    }
+
+    /// One worker's mini-batch gradient over explicit row segments (job 0).
+    pub fn grad_batch_one(
+        &mut self,
+        worker: usize,
+        w: &[f64],
+        segs: &[(usize, usize)],
+    ) -> Result<(Vec<f64>, f64)> {
+        self.grad_batch_one_for(0, worker, w, segs)
+    }
+
+    /// One worker's `‖X̃_i d‖²` (job 0; ignores the parked flag).
+    pub fn curv_one(&mut self, worker: usize, d: &[f64]) -> Result<f64> {
+        self.curv_one_for(0, worker, d)
+    }
+
+    /// All workers' `(g_i, f_i)` in worker order (job 0).
+    pub fn grad_all(&mut self, w: &[f64]) -> Result<Vec<(Vec<f64>, f64)>> {
+        self.grad_all_for(0, w)
+    }
+
+    /// All workers' line-search terms in worker order (job 0).
+    pub fn curv_all(&mut self, d: &[f64]) -> Result<Vec<f64>> {
+        self.curv_all_for(0, d)
+    }
+
+    /// Park or unpark one worker (job 0; see the crash-park invariant).
+    pub fn set_parked(&mut self, worker: usize, parked: bool) {
+        self.set_parked_for(0, worker, parked);
+    }
+
+    /// Replace the staged problem in place (job 0): every lane receives
+    /// its new slot range (park flags reset), keeping the resident
+    /// threads. The worker count may change; the lane count never does.
+    pub fn reconfigure(&mut self, prob: &EncodedProblem) -> Result<()> {
+        self.stage_job(0, prob)
+    }
+
+    /// Swap individual workers' resident shards in place (job 0) — the
+    /// rebalancer's migration handoff (see [`WorkerPool::migrate_for`]).
+    pub fn migrate(&mut self, p: usize, changed: &[(usize, WorkerShard)]) -> Result<()> {
+        self.migrate_for(0, p, changed)
+    }
+}
+
+fn spawn_lane(index: usize, st: LaneState) -> Lane {
+    let (tx, rx) = mpsc::channel();
+    let (ack_tx, ack_rx) = mpsc::channel();
+    let handle = std::thread::Builder::new()
+        .name(format!("codedopt-pool-{index}"))
+        .spawn(move || lane_main(st, rx, ack_tx))
+        .expect("spawning pool lane thread");
+    Lane { tx, ack: ack_rx, handle: Some(handle) }
 }
 
 impl Drop for WorkerPool {
@@ -843,5 +1066,82 @@ mod tests {
         for i in 3..8 {
             assert!(got.responses[i].is_none(), "worker {i} should have been cancelled");
         }
+    }
+
+    // ------------------------------------------------ multi-tenant tests
+
+    fn two_probs() -> (EncodedProblem, EncodedProblem) {
+        let p1 = QuadProblem::synthetic_gaussian(64, 6, 0.0, 1);
+        let p2 = QuadProblem::synthetic_gaussian(48, 5, 0.1, 9);
+        (
+            EncodedProblem::encode(&p1, EncoderKind::Hadamard, 2.0, 8, 2).unwrap(),
+            EncodedProblem::encode(&p2, EncoderKind::Identity, 1.0, 6, 0).unwrap(),
+        )
+    }
+
+    #[test]
+    fn two_jobs_share_lanes_and_route_independently() {
+        let (enc1, enc2) = two_probs();
+        let mut p = WorkerPool::with_lanes(3);
+        let spawned = p.spawn_count();
+        p.stage_job(1, &enc1).unwrap();
+        p.stage_job(2, &enc2).unwrap();
+        assert_eq!(p.spawn_count(), spawned, "staging a job must never spawn");
+        assert_eq!(p.staged_jobs(), vec![1, 2]);
+        assert_eq!(p.workers_for(1), Some(8));
+        assert_eq!(p.workers_for(2), Some(6));
+        // each job's per-worker answers match a fresh single-tenant pool
+        let (w1, w2) = (vec![0.4; 6], vec![0.3; 5]);
+        let mut solo1 = WorkerPool::new(&enc1, 3);
+        let mut solo2 = WorkerPool::new(&enc2, 3);
+        for i in 0..8 {
+            let (ga, fa) = p.grad_one_for(1, i, &w1).unwrap();
+            let (gb, fb) = solo1.grad_one(i, &w1).unwrap();
+            assert_eq!(fa.to_bits(), fb.to_bits(), "job 1 worker {i}");
+            for (x, y) in ga.iter().zip(&gb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "job 1 worker {i}");
+            }
+        }
+        for i in 0..6 {
+            let (ga, fa) = p.grad_one_for(2, i, &w2).unwrap();
+            let (gb, fb) = solo2.grad_one(i, &w2).unwrap();
+            assert_eq!(fa.to_bits(), fb.to_bits(), "job 2 worker {i}");
+            for (x, y) in ga.iter().zip(&gb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "job 2 worker {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_job_park_masks_are_independent() {
+        let (enc1, enc2) = two_probs();
+        let mut p = WorkerPool::with_lanes(2);
+        p.stage_job(1, &enc1).unwrap();
+        p.stage_job(2, &enc2).unwrap();
+        p.set_parked_for(1, 3, true);
+        assert_eq!(p.parked_count_for(1), 1);
+        assert_eq!(p.parked_count_for(2), 0, "job 2's mask must be untouched");
+        let sink = GradCollector::collect_all(8);
+        p.grad_streamed_for(1, &vec![0.2; 6], &sink).unwrap();
+        assert!(sink.into_collected().responses[3].is_none());
+        let sink = GradCollector::collect_all(6);
+        p.grad_streamed_for(2, &vec![0.2; 5], &sink).unwrap();
+        assert!(
+            sink.into_collected().responses[3].is_some(),
+            "job 2's worker 3 must still answer its rounds"
+        );
+    }
+
+    #[test]
+    fn retire_frees_the_job_and_keeps_siblings() {
+        let (enc1, enc2) = two_probs();
+        let mut p = WorkerPool::with_lanes(2);
+        p.stage_job(1, &enc1).unwrap();
+        p.stage_job(2, &enc2).unwrap();
+        p.retire(1).unwrap();
+        assert_eq!(p.staged_jobs(), vec![2]);
+        assert!(p.grad_one_for(1, 0, &vec![0.1; 6]).is_err(), "retired job must not dispatch");
+        assert!(p.grad_one_for(2, 0, &vec![0.1; 5]).is_ok(), "sibling job must survive");
+        assert!(p.retire(1).is_err(), "double retire is an error");
     }
 }

@@ -1,0 +1,770 @@
+//! Multi-tenant serving: many optimization jobs over one resident
+//! [`WorkerPool`].
+//!
+//! The paper's obliviousness contract means a coded cluster never needs
+//! to know *which* problem a round belongs to — so one resident fleet can
+//! host many ridge/MF jobs at once, the way a deployed parameter server
+//! would (ROADMAP item 3). The pieces here:
+//!
+//! * [`JobServer`] — admits [`JobSpec`]s, stages each job's shards onto a
+//!   shared pool ([`WorkerPool::stage_job`]), and interleaves the jobs'
+//!   rounds one at a time under an admission [`Scheduler`]. Each job owns
+//!   a private [`Cluster`] (its own delay RNG, scenario, park mirror) and
+//!   a [`JobStep`] (its own iterate/trace), so under
+//!   [`ClockMode::Virtual`](crate::cluster::ClockMode::Virtual) **any**
+//!   serial interleaving produces per-job traces bitwise-identical to
+//!   running each job alone — the determinism contract pinned by
+//!   `rust/tests/serve_equivalence.rs`.
+//! * [`ServePolicy`] — the `--serve-policy` grammar
+//!   (`fifo | fair | priority:N`, strict parse ↔ Display round-trip like
+//!   every other grammar in the repo).
+//! * [`EncodedShardCache`] — encode-once cache for hyperparameter sweeps
+//!   and repeated queries, keyed by the raw data's fingerprint plus every
+//!   parameter the encoding depends on. `k` (the wait-for count) is
+//!   deliberately **not** part of the key: encoding fixes `S` and the
+//!   shard layout, while `k` only affects round admission — so a sweep
+//!   over `k` is all cache hits.
+//! * [`JobEngine`] — a per-job [`ComputeEngine`] view of the shared pool:
+//!   every dispatch carries the job id, so rounds, park masks, and
+//!   migrations route to the job's own slots.
+//!
+//! Fairness: under [`ServePolicy::Fair`] the scheduler round-robins over
+//! unfinished jobs, so no job's dispatched-round count ever trails the
+//! leader by more than one full sweep (a seeded property test in
+//! `rust/tests/grammar_properties.rs` pins this).
+
+use super::pool::WorkerPool;
+use super::stream::{CurvCollector, GradCollector};
+use super::{ComputeEngine, EngineSession};
+use crate::cluster::{Cluster, ClusterConfig, Scenario};
+use crate::encoding::EncoderKind;
+use crate::linalg::{DataMat, StorageKind};
+use crate::optim::{
+    CodedGd, CodedLbfgs, CodedSgd, GdConfig, JobStep, LbfgsConfig, RunOutput, SgdConfig,
+    SteppedOptimizer,
+};
+use crate::problem::{BatchPlan, EncodedProblem, QuadProblem};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// ServePolicy
+// ---------------------------------------------------------------------------
+
+/// Admission-scheduling policy for a [`JobServer`] (`--serve-policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServePolicy {
+    /// Run jobs to completion in submission order.
+    Fifo,
+    /// Round-robin one round per unfinished job (fair share).
+    Fair,
+    /// Strict priority with `classes` classes: class 0 is served first;
+    /// a job's class is its [`JobSpec::priority`] clamped to
+    /// `classes - 1`. Ties run in submission order to completion.
+    Priority {
+        /// Number of priority classes (≥ 1).
+        classes: usize,
+    },
+}
+
+impl ServePolicy {
+    /// Parse the CLI/config grammar. This table is the single source of
+    /// truth for `--serve-policy`:
+    ///
+    /// | variant | form | example |
+    /// |---------|------|---------|
+    /// | [`ServePolicy::Fifo`] | `fifo` | `fifo` |
+    /// | [`ServePolicy::Fair`] | `fair` | `fair` |
+    /// | [`ServePolicy::Priority`] | `priority:N` | `priority:3` |
+    ///
+    /// Anything else — unknown names, missing/extra fields, non-numeric
+    /// or zero class counts — is rejected with a descriptive error.
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let head = parts[0].to_ascii_lowercase();
+        match (head.as_str(), parts.len()) {
+            ("fifo", 1) => Ok(ServePolicy::Fifo),
+            ("fair", 1) => Ok(ServePolicy::Fair),
+            ("priority", 2) => {
+                let classes: usize = parts[1]
+                    .parse()
+                    .map_err(|e| anyhow!("serve policy {s:?}: class count: {e}"))?;
+                ensure!(classes >= 1, "serve policy {s:?}: class count must be >= 1");
+                Ok(ServePolicy::Priority { classes })
+            }
+            ("priority", 1) => {
+                bail!("serve policy {s:?}: priority needs a class count (priority:N)")
+            }
+            _ => bail!("unknown serve policy {s:?} (fifo | fair | priority:N)"),
+        }
+    }
+}
+
+impl fmt::Display for ServePolicy {
+    /// Canonical form; round-trips through [`ServePolicy::parse`].
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServePolicy::Fifo => write!(f, "fifo"),
+            ServePolicy::Fair => write!(f, "fair"),
+            ServePolicy::Priority { classes } => write!(f, "priority:{classes}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler
+// ---------------------------------------------------------------------------
+
+/// One job's scheduling view (see [`Scheduler::next`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SchedJob {
+    /// The job has no rounds left (never picked again).
+    pub done: bool,
+    /// Priority class (only [`ServePolicy::Priority`] reads it).
+    pub class: usize,
+}
+
+/// Pure admission scheduler: picks which unfinished job runs its next
+/// round. Extracted from [`JobServer`] so the fairness property test can
+/// drive it directly with synthetic job sets, no compute attached.
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: ServePolicy,
+    /// Index the last round went to (fair round-robin cursor).
+    last: Option<usize>,
+}
+
+impl Scheduler {
+    /// A scheduler for `policy`, cursor at the start.
+    pub fn new(policy: ServePolicy) -> Self {
+        Scheduler { policy, last: None }
+    }
+
+    /// The policy this scheduler applies.
+    pub fn policy(&self) -> ServePolicy {
+        self.policy
+    }
+
+    /// Pick the next job index to run one round, or `None` when every job
+    /// is done. Deterministic: a fixed `jobs` sequence always yields the
+    /// same schedule (part of the serial-interleaving determinism
+    /// contract).
+    pub fn next(&mut self, jobs: &[SchedJob]) -> Option<usize> {
+        let pick = match self.policy {
+            ServePolicy::Fifo => jobs.iter().position(|j| !j.done),
+            ServePolicy::Fair => {
+                let n = jobs.len();
+                if n == 0 {
+                    None
+                } else {
+                    let start = self.last.map_or(0, |l| (l + 1) % n);
+                    (0..n).map(|i| (start + i) % n).find(|&i| !jobs[i].done)
+                }
+            }
+            ServePolicy::Priority { classes } => jobs
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| !j.done)
+                .min_by_key(|(i, j)| (j.class.min(classes - 1), *i))
+                .map(|(i, _)| i),
+        };
+        if pick.is_some() {
+            self.last = pick;
+        }
+        pick
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EncodedShardCache
+// ---------------------------------------------------------------------------
+
+/// Cache key: everything [`EncodedProblem::encode_stored`] depends on.
+/// The fingerprint digests the raw data (`n`, `p`, `λ`, every matrix and
+/// label entry, bit-exact); the rest are the encoding parameters. `k` is
+/// deliberately excluded — see the module docs.
+type CacheKey = (u64, &'static str, u64, usize, u64, String);
+
+/// Encode-once cache for served jobs: hyperparameter sweeps and repeated
+/// queries over the same data reuse one [`EncodedProblem`] (shared via
+/// `Arc`, so cached hits also skip the shard clone).
+#[derive(Default)]
+pub struct EncodedShardCache {
+    map: HashMap<CacheKey, Arc<EncodedProblem>>,
+    encodes: u64,
+    hits: u64,
+}
+
+/// FNV-1a over a byte slice (seeded with the running hash).
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+/// Bit-exact digest of a raw problem: two problems share a fingerprint
+/// iff every data bit (and `λ`) matches, so a cache hit can never serve
+/// the wrong shards.
+pub fn fingerprint(prob: &QuadProblem) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv1a(&mut h, &(prob.x.rows() as u64).to_le_bytes());
+    fnv1a(&mut h, &(prob.x.cols() as u64).to_le_bytes());
+    fnv1a(&mut h, &prob.lambda.to_bits().to_le_bytes());
+    match &prob.x {
+        DataMat::Dense(m) => {
+            for v in m.data() {
+                fnv1a(&mut h, &v.to_bits().to_le_bytes());
+            }
+        }
+        DataMat::Csr(c) => {
+            for i in 0..prob.x.rows() {
+                let (cols, vals) = c.row(i);
+                for &j in cols {
+                    fnv1a(&mut h, &j.to_le_bytes());
+                }
+                for v in vals {
+                    fnv1a(&mut h, &v.to_bits().to_le_bytes());
+                }
+            }
+        }
+    }
+    for v in &prob.y {
+        fnv1a(&mut h, &v.to_bits().to_le_bytes());
+    }
+    h
+}
+
+impl EncodedShardCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        EncodedShardCache::default()
+    }
+
+    /// The encoded problem for `(prob, kind, beta, m, seed, storage)`,
+    /// encoding at most once per distinct key.
+    pub fn get_or_encode(
+        &mut self,
+        prob: &QuadProblem,
+        kind: EncoderKind,
+        beta: f64,
+        m: usize,
+        seed: u64,
+        storage: StorageKind,
+    ) -> Result<Arc<EncodedProblem>> {
+        let key: CacheKey =
+            (fingerprint(prob), kind.label(), beta.to_bits(), m, seed, storage.to_string());
+        if let Some(enc) = self.map.get(&key) {
+            self.hits += 1;
+            return Ok(Arc::clone(enc));
+        }
+        let enc = Arc::new(EncodedProblem::encode_stored(prob, kind, beta, m, seed, storage)?);
+        self.encodes += 1;
+        self.map.insert(key, Arc::clone(&enc));
+        Ok(enc)
+    }
+
+    /// Number of actual encodes performed (cache misses).
+    pub fn encodes(&self) -> u64 {
+        self.encodes
+    }
+
+    /// Number of cache hits served.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JobEngine
+// ---------------------------------------------------------------------------
+
+/// A per-job [`ComputeEngine`] view of a shared [`WorkerPool`]: every
+/// dispatch carries the job id, so rounds, park masks, and shard
+/// migrations touch only this job's slots. Cheap to mint — the pool and
+/// its resident lanes are shared behind the mutex.
+pub struct JobEngine {
+    pool: Arc<Mutex<WorkerPool>>,
+    job: usize,
+    p: usize,
+    workers: usize,
+}
+
+impl JobEngine {
+    /// Stage `prob` as job `job` on `pool` and return its engine view.
+    pub fn stage(
+        pool: Arc<Mutex<WorkerPool>>,
+        job: usize,
+        prob: &EncodedProblem,
+    ) -> Result<JobEngine> {
+        pool.lock().expect("serve pool lock poisoned").stage_job(job, prob)?;
+        Ok(JobEngine { pool, job, p: prob.p(), workers: prob.m() })
+    }
+
+    /// The job id this engine routes to.
+    pub fn job(&self) -> usize {
+        self.job
+    }
+
+    fn pool(&self) -> std::sync::MutexGuard<'_, WorkerPool> {
+        self.pool.lock().expect("serve pool lock poisoned")
+    }
+}
+
+impl ComputeEngine for JobEngine {
+    fn name(&self) -> &'static str {
+        "serve-pool"
+    }
+
+    fn worker_grad(&mut self, worker: usize, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let job = self.job;
+        self.pool().grad_one_for(job, worker, w)
+    }
+
+    fn linesearch(&mut self, worker: usize, d: &[f64]) -> Result<f64> {
+        let job = self.job;
+        self.pool().curv_one_for(job, worker, d)
+    }
+
+    fn worker_grad_all(&mut self, w: &[f64]) -> Result<Vec<(Vec<f64>, f64)>> {
+        let job = self.job;
+        self.pool().grad_all_for(job, w)
+    }
+
+    fn linesearch_all(&mut self, d: &[f64]) -> Result<Vec<f64>> {
+        let job = self.job;
+        self.pool().curv_all_for(job, d)
+    }
+
+    fn worker_grad_streamed(&mut self, w: &[f64], sink: &GradCollector) -> Result<()> {
+        let job = self.job;
+        self.pool().grad_streamed_for(job, w, sink)
+    }
+
+    fn worker_grad_batch(
+        &mut self,
+        worker: usize,
+        w: &[f64],
+        segs: &[(usize, usize)],
+    ) -> Result<(Vec<f64>, f64)> {
+        let job = self.job;
+        self.pool().grad_batch_one_for(job, worker, w, segs)
+    }
+
+    fn worker_grad_batch_streamed(
+        &mut self,
+        w: &[f64],
+        plan: &BatchPlan,
+        sink: &GradCollector,
+    ) -> Result<()> {
+        let job = self.job;
+        self.pool().grad_batch_streamed_for(job, w, plan, sink)
+    }
+
+    fn linesearch_streamed(&mut self, d: &[f64], sink: &CurvCollector) -> Result<()> {
+        let job = self.job;
+        self.pool().curv_streamed_for(job, d, sink)
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn session(&mut self) -> Option<&mut dyn EngineSession> {
+        Some(self)
+    }
+}
+
+impl EngineSession for JobEngine {
+    fn set_parked(&mut self, worker: usize, parked: bool) {
+        let job = self.job;
+        self.pool().set_parked_for(job, worker, parked);
+    }
+
+    fn parked_count(&self) -> usize {
+        self.pool().parked_count_for(self.job)
+    }
+
+    fn reconfigure(&mut self, prob: &EncodedProblem) -> Result<()> {
+        let job = self.job;
+        self.pool().stage_job(job, prob)?;
+        self.p = prob.p();
+        self.workers = prob.m();
+        Ok(())
+    }
+
+    fn migrate_shards(&mut self, changed: &[(usize, crate::problem::WorkerShard)]) -> Result<()> {
+        let (job, p) = (self.job, self.p);
+        self.pool().migrate_for(job, p, changed)
+    }
+
+    fn spawn_count(&self) -> u64 {
+        self.pool().spawn_count()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JobServer
+// ---------------------------------------------------------------------------
+
+/// Which optimizer a served job runs (the stepping-capable subset; FISTA
+/// keeps a monolithic loop and is not served).
+#[derive(Clone)]
+pub enum ServeOptimizer {
+    /// [`CodedGd`] with this config.
+    Gd(GdConfig),
+    /// [`CodedLbfgs`] with this config.
+    Lbfgs(LbfgsConfig),
+    /// [`CodedSgd`] with this config.
+    Sgd(SgdConfig),
+}
+
+impl ServeOptimizer {
+    /// Short label for tables/CSV names.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ServeOptimizer::Gd(_) => "gd",
+            ServeOptimizer::Lbfgs(_) => "lbfgs",
+            ServeOptimizer::Sgd(_) => "sgd",
+        }
+    }
+
+    /// Build the job's round stepper (see [`SteppedOptimizer::stepper`]).
+    pub fn stepper(
+        &self,
+        prob: &EncodedProblem,
+        wait_for: usize,
+        iters: usize,
+        w0: Option<Vec<f64>>,
+    ) -> Result<Box<dyn JobStep>> {
+        match self {
+            ServeOptimizer::Gd(cfg) => {
+                CodedGd::new(cfg.clone()).stepper(prob, wait_for, iters, w0)
+            }
+            ServeOptimizer::Lbfgs(cfg) => {
+                CodedLbfgs::new(cfg.clone()).stepper(prob, wait_for, iters, w0)
+            }
+            ServeOptimizer::Sgd(cfg) => {
+                CodedSgd::new(cfg.clone()).stepper(prob, wait_for, iters, w0)
+            }
+        }
+    }
+}
+
+/// Everything one served job needs: the (possibly cache-shared) encoded
+/// problem, its private cluster config, the optimizer, and an optional
+/// fault scenario scoped to this job alone.
+pub struct JobSpec {
+    /// Encoded problem (share via [`EncodedShardCache`] when sweeping).
+    pub enc: Arc<EncodedProblem>,
+    /// Per-job cluster config (its own delay RNG stream via `seed`).
+    pub cluster: ClusterConfig,
+    /// Optimizer + config.
+    pub optimizer: ServeOptimizer,
+    /// Iteration budget.
+    pub iters: usize,
+    /// Warm start (zeros if `None`).
+    pub w0: Option<Vec<f64>>,
+    /// Fault scenario scoped to this job (siblings never see it).
+    pub scenario: Option<Scenario>,
+    /// Priority class hint ([`ServePolicy::Priority`] only; 0 = highest).
+    pub priority: usize,
+}
+
+/// One finished job's result.
+pub struct ServeOutcome {
+    /// Job id (as returned by [`JobServer::submit`]).
+    pub job: usize,
+    /// Final iterate + per-iteration trace (bitwise-identical to a solo
+    /// run of the same spec under the virtual clock).
+    pub output: RunOutput,
+    /// Rounds this job was dispatched.
+    pub rounds: usize,
+    /// Wall-clock latency from [`JobServer::run`] start to this job's
+    /// completion (the bench's p50/p99 source; 0 for empty jobs).
+    pub wall_ms: f64,
+}
+
+/// One admitted job's runtime state.
+struct ActiveJob {
+    id: usize,
+    priority: usize,
+    enc: Arc<EncodedProblem>,
+    cluster: Cluster,
+    step: Option<Box<dyn JobStep>>,
+    done: bool,
+    rounds: usize,
+    output: Option<RunOutput>,
+    wall_ms: f64,
+}
+
+/// Hosts many concurrent optimization jobs on one resident [`WorkerPool`]
+/// (module docs have the full contract).
+pub struct JobServer {
+    pool: Arc<Mutex<WorkerPool>>,
+    scheduler: Scheduler,
+    jobs: Vec<ActiveJob>,
+    /// Job id of every dispatched round, in dispatch order.
+    schedule: Vec<usize>,
+    next_id: usize,
+}
+
+impl JobServer {
+    /// A server over an existing shared pool.
+    pub fn new(pool: Arc<Mutex<WorkerPool>>, policy: ServePolicy) -> Self {
+        JobServer {
+            pool,
+            scheduler: Scheduler::new(policy),
+            jobs: Vec::new(),
+            schedule: Vec::new(),
+            next_id: 1,
+        }
+    }
+
+    /// A server over a fresh job-less pool with `threads` resident lanes
+    /// (`0` = available parallelism).
+    pub fn with_lanes(threads: usize, policy: ServePolicy) -> Self {
+        JobServer::new(Arc::new(Mutex::new(WorkerPool::with_lanes(threads))), policy)
+    }
+
+    /// The shared pool (for staging siblings or inspecting spawn counts).
+    pub fn pool(&self) -> Arc<Mutex<WorkerPool>> {
+        Arc::clone(&self.pool)
+    }
+
+    /// Admit a job: stage its shards on the shared pool, build its
+    /// private cluster and stepper, and queue it for scheduling. Returns
+    /// the job id. A zero-iteration job completes (and its shards retire)
+    /// immediately.
+    pub fn submit(&mut self, spec: JobSpec) -> Result<usize> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let engine = JobEngine::stage(Arc::clone(&self.pool), id, &spec.enc)?;
+        let mut cluster = Cluster::new(&spec.enc, Box::new(engine), spec.cluster.clone())?;
+        if let Some(scenario) = spec.scenario {
+            cluster.set_scenario(scenario)?;
+        }
+        let step = spec.optimizer.stepper(&spec.enc, spec.cluster.wait_for, spec.iters, spec.w0)?;
+        let mut job = ActiveJob {
+            id,
+            priority: spec.priority,
+            enc: spec.enc,
+            cluster,
+            step: Some(step),
+            done: false,
+            rounds: 0,
+            output: None,
+            wall_ms: 0.0,
+        };
+        if spec.iters == 0 {
+            job.done = true;
+            job.output = Some(job.step.take().expect("fresh stepper").output());
+            self.pool.lock().expect("serve pool lock poisoned").retire(id)?;
+        }
+        self.jobs.push(job);
+        Ok(id)
+    }
+
+    /// Run every admitted job to completion, one round at a time under
+    /// the scheduler, retiring each job's shards as it finishes. Returns
+    /// the outcomes in submission order and clears the job queue (the
+    /// server and its pool stay usable for the next batch).
+    pub fn run(&mut self) -> Result<Vec<ServeOutcome>> {
+        let t0 = Instant::now();
+        loop {
+            let view: Vec<SchedJob> =
+                self.jobs.iter().map(|j| SchedJob { done: j.done, class: j.priority }).collect();
+            let Some(idx) = self.scheduler.next(&view) else { break };
+            let job = &mut self.jobs[idx];
+            let step = job.step.as_mut().expect("scheduled job has a stepper");
+            let more = step.step(&job.enc, &mut job.cluster)?;
+            self.schedule.push(job.id);
+            job.rounds += 1;
+            if !more {
+                job.done = true;
+                job.output = Some(job.step.take().expect("stepper present").output());
+                job.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                self.pool.lock().expect("serve pool lock poisoned").retire(job.id)?;
+            }
+        }
+        Ok(self
+            .jobs
+            .drain(..)
+            .map(|j| ServeOutcome {
+                job: j.id,
+                output: j.output.expect("every drained job finished"),
+                rounds: j.rounds,
+                wall_ms: j.wall_ms,
+            })
+            .collect())
+    }
+
+    /// Job id of every dispatched round so far, in dispatch order (the
+    /// serial interleaving the determinism contract quantifies over).
+    pub fn schedule(&self) -> &[usize] {
+        &self.schedule
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClockMode, DelayModel};
+
+    #[test]
+    fn policy_parse_display_round_trip() {
+        for s in ["fifo", "fair", "priority:1", "priority:4"] {
+            let p = ServePolicy::parse(s).unwrap();
+            assert_eq!(ServePolicy::parse(&p.to_string()).unwrap(), p);
+            assert_eq!(p.to_string(), s);
+        }
+        assert_eq!(ServePolicy::parse("FIFO").unwrap(), ServePolicy::Fifo);
+    }
+
+    #[test]
+    fn policy_rejects_malformed() {
+        for bad in
+            ["", ":", "fifo:1", "fair:2", "priority", "priority:", "priority:0", "priority:x"]
+        {
+            assert!(ServePolicy::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn fifo_runs_jobs_to_completion_in_order() {
+        let mut s = Scheduler::new(ServePolicy::Fifo);
+        let mut jobs = vec![SchedJob { done: false, class: 0 }; 2];
+        assert_eq!(s.next(&jobs), Some(0));
+        assert_eq!(s.next(&jobs), Some(0));
+        jobs[0].done = true;
+        assert_eq!(s.next(&jobs), Some(1));
+        jobs[1].done = true;
+        assert_eq!(s.next(&jobs), None);
+    }
+
+    #[test]
+    fn fair_round_robins_and_skips_done() {
+        let mut s = Scheduler::new(ServePolicy::Fair);
+        let mut jobs = vec![SchedJob { done: false, class: 0 }; 3];
+        assert_eq!(s.next(&jobs), Some(0));
+        assert_eq!(s.next(&jobs), Some(1));
+        assert_eq!(s.next(&jobs), Some(2));
+        assert_eq!(s.next(&jobs), Some(0));
+        jobs[1].done = true;
+        assert_eq!(s.next(&jobs), Some(2));
+        assert_eq!(s.next(&jobs), Some(0));
+    }
+
+    #[test]
+    fn priority_serves_lower_class_first() {
+        let mut s = Scheduler::new(ServePolicy::Priority { classes: 2 });
+        let mut jobs = vec![
+            SchedJob { done: false, class: 1 },
+            SchedJob { done: false, class: 0 },
+            // class clamps to classes - 1, tying with job 0
+            SchedJob { done: false, class: 7 },
+        ];
+        assert_eq!(s.next(&jobs), Some(1));
+        jobs[1].done = true;
+        assert_eq!(s.next(&jobs), Some(0), "ties run in submission order");
+    }
+
+    #[test]
+    fn cache_encodes_once_per_key() {
+        let prob = QuadProblem::synthetic_gaussian(64, 6, 0.05, 3);
+        let mut cache = EncodedShardCache::new();
+        let a = cache
+            .get_or_encode(&prob, EncoderKind::Hadamard, 2.0, 8, 2, StorageKind::Dense)
+            .unwrap();
+        let b = cache
+            .get_or_encode(&prob, EncoderKind::Hadamard, 2.0, 8, 2, StorageKind::Dense)
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second identical request must share the Arc");
+        assert_eq!((cache.encodes(), cache.hits()), (1, 1));
+        // a different encoding parameter is a different key
+        cache
+            .get_or_encode(&prob, EncoderKind::Hadamard, 2.0, 8, 3, StorageKind::Dense)
+            .unwrap();
+        assert_eq!((cache.encodes(), cache.hits()), (2, 1));
+        // a different problem (one bit of data) is a different key
+        let mut prob2 = prob.clone();
+        prob2.y[0] += 1e-9;
+        assert_ne!(fingerprint(&prob), fingerprint(&prob2));
+    }
+
+    #[test]
+    fn served_gd_job_matches_solo_run() {
+        use crate::optim::Optimizer;
+        use crate::runtime::NativeEngine;
+        let prob = QuadProblem::synthetic_gaussian(64, 6, 0.05, 3);
+        let enc =
+            Arc::new(EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 2).unwrap());
+        let cfg = ClusterConfig {
+            workers: 8,
+            wait_for: 6,
+            delay: DelayModel::Exp { mean_ms: 10.0 },
+            clock: ClockMode::Virtual,
+            ms_per_mflop: 0.5,
+            seed: 11,
+        };
+        let mut server = JobServer::with_lanes(2, ServePolicy::Fifo);
+        let id = server
+            .submit(JobSpec {
+                enc: Arc::clone(&enc),
+                cluster: cfg.clone(),
+                optimizer: ServeOptimizer::Gd(GdConfig { epsilon: Some(0.3), ..Default::default() }),
+                iters: 10,
+                w0: None,
+                scenario: None,
+                priority: 0,
+            })
+            .unwrap();
+        let outcomes = server.run().unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].job, id);
+        assert_eq!(outcomes[0].rounds, 10);
+        assert_eq!(server.schedule(), vec![id; 10]);
+        let gd = CodedGd::new(GdConfig { epsilon: Some(0.3), ..Default::default() });
+        let eng = Box::new(NativeEngine::new(&enc));
+        let mut solo = Cluster::new(&enc, eng, cfg).unwrap();
+        let solo_out = gd.run(&enc, &mut solo, 10).unwrap();
+        assert_eq!(outcomes[0].output.trace.to_csv(), solo_out.trace.to_csv());
+        for (a, b) in outcomes[0].output.w.iter().zip(&solo_out.w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_job_completes_at_submit() {
+        let prob = QuadProblem::synthetic_gaussian(32, 4, 0.0, 1);
+        let enc =
+            Arc::new(EncodedProblem::encode(&prob, EncoderKind::Identity, 1.0, 4, 0).unwrap());
+        let mut server = JobServer::with_lanes(1, ServePolicy::Fair);
+        server
+            .submit(JobSpec {
+                enc,
+                cluster: ClusterConfig {
+                    workers: 4,
+                    wait_for: 4,
+                    delay: DelayModel::None,
+                    clock: ClockMode::Virtual,
+                    ms_per_mflop: 0.5,
+                    seed: 0,
+                },
+                optimizer: ServeOptimizer::Gd(GdConfig { epsilon: Some(0.0), ..Default::default() }),
+                iters: 0,
+                w0: None,
+                scenario: None,
+                priority: 0,
+            })
+            .unwrap();
+        let outcomes = server.run().unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].rounds, 0);
+        assert!(outcomes[0].output.trace.records.is_empty());
+        assert!(server.schedule().is_empty());
+    }
+}

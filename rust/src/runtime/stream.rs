@@ -31,8 +31,15 @@
 //! every clone before returning from a streamed call (the pool waits for
 //! per-lane acknowledgements that are sent only after the lane's handle
 //! is dropped).
+//!
+//! In multi-tenant serving (see [`serve`](super::serve)) many jobs share
+//! one pool, so a leaked clone must be attributable: the pool tags each
+//! sink with the round's **job id** ([`Collector::tag_job`]) and hands
+//! lanes lane-registered clones ([`Collector::clone_for_lane`]). A
+//! sole-owner violation then panics naming the job and the lanes whose
+//! handles are still alive instead of a generic message.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Admission policy a [`Collector`] applies as responses land.
@@ -67,6 +74,11 @@ struct Shared<T> {
     cancel: AtomicBool,
     workers: usize,
     first_k: bool,
+    /// Job this round belongs to (0 for single-tenant engines; retagged
+    /// by the pool's per-job dispatch so leak diagnostics name the job).
+    job: AtomicUsize,
+    /// Pool lanes currently holding a registered clone of this sink.
+    live_lanes: Mutex<Vec<usize>>,
 }
 
 /// Thread-safe streamed-response sink handed to
@@ -81,11 +93,25 @@ struct Shared<T> {
 /// alive.
 pub struct Collector<T> {
     shared: Arc<Shared<T>>,
+    /// Lane this handle is registered to, if it was minted with
+    /// [`Collector::clone_for_lane`]; anonymous handles carry `None`.
+    lane: Option<usize>,
 }
 
 impl<T> Clone for Collector<T> {
     fn clone(&self) -> Self {
-        Collector { shared: Arc::clone(&self.shared) }
+        Collector { shared: Arc::clone(&self.shared), lane: None }
+    }
+}
+
+impl<T> Drop for Collector<T> {
+    fn drop(&mut self) {
+        if let Some(lane) = self.lane {
+            let mut lanes = self.shared.live_lanes.lock().expect("collector poisoned");
+            if let Some(pos) = lanes.iter().position(|&l| l == lane) {
+                lanes.swap_remove(pos);
+            }
+        }
     }
 }
 
@@ -113,7 +139,10 @@ impl<T> Collector<T> {
                 cancel: AtomicBool::new(false),
                 workers,
                 first_k,
+                job: AtomicUsize::new(0),
+                live_lanes: Mutex::new(Vec::new()),
             }),
+            lane: None,
         }
     }
 
@@ -140,6 +169,28 @@ impl<T> Collector<T> {
             c.shared.cancel.store(true, Ordering::Release);
         }
         c
+    }
+
+    /// Tag this round's shared state with the job it serves. The pool's
+    /// per-job dispatch calls this before fanning the sink out to its
+    /// lanes, so a leak caught by [`Collector::into_collected`] is
+    /// attributed to the right tenant.
+    pub fn tag_job(&self, job: usize) {
+        self.shared.job.store(job, Ordering::Relaxed);
+    }
+
+    /// Job id this round is tagged with (0 until [`Collector::tag_job`]).
+    pub fn job(&self) -> usize {
+        self.shared.job.load(Ordering::Relaxed)
+    }
+
+    /// Clone this handle for pool lane `lane`, registering the lane in
+    /// the round's live-handle set. The registration is released by the
+    /// clone's `Drop`, so any lane whose handle outlives the streamed
+    /// call is named by the sole-owner panic.
+    pub fn clone_for_lane(&self, lane: usize) -> Self {
+        self.shared.live_lanes.lock().expect("collector poisoned").push(lane);
+        Collector { shared: Arc::clone(&self.shared), lane: Some(lane) }
     }
 
     /// Worker count this collector expects.
@@ -186,14 +237,30 @@ impl<T> Collector<T> {
 
     /// Consume the collector after the engine call returns. Panics if any
     /// clone of this handle is still alive — a streamed engine call must
-    /// drop every handle it shipped to its workers before returning.
+    /// drop every handle it shipped to its workers before returning. The
+    /// panic names the round's job id and any lanes still registered, so
+    /// a clone leaked across a job boundary in the multi-tenant pool is
+    /// attributable from the message alone.
     pub fn into_collected(self) -> Collected<T> {
-        let shared = match Arc::try_unwrap(self.shared) {
+        // Net out this handle's own refcount (running its Drop, which
+        // releases its lane registration if it has one) before testing
+        // sole ownership.
+        let shared = Arc::clone(&self.shared);
+        drop(self);
+        let shared = match Arc::try_unwrap(shared) {
             Ok(s) => s,
-            Err(_) => panic!(
-                "collector consumed while other handles are alive \
-                 (the engine leaked a sink clone past its streamed call)"
-            ),
+            Err(shared) => {
+                let job = shared.job.load(Ordering::Relaxed);
+                let mut lanes =
+                    shared.live_lanes.lock().expect("collector poisoned").clone();
+                lanes.sort_unstable();
+                panic!(
+                    "collector for job {job} consumed while other handles are alive \
+                     (lanes {lanes:?} still hold clones; an anonymous handle if the \
+                     list is empty — the engine leaked a sink clone past its \
+                     streamed call)"
+                );
+            }
         };
         let inner = shared.inner.into_inner().expect("collector poisoned");
         Collected {
@@ -297,6 +364,39 @@ mod tests {
     fn into_collected_panics_while_clones_live() {
         let c: Collector<u32> = Collector::collect_all(1);
         let _leaked = c.clone();
+        let _ = c.into_collected();
+    }
+
+    #[test]
+    fn lane_clone_drop_releases_registration() {
+        let c: Collector<u32> = Collector::collect_all(2);
+        c.tag_job(4);
+        let h = c.clone_for_lane(1);
+        h.deliver(0, 9, 0.1);
+        drop(h);
+        // the lane registration is gone, so consumption succeeds
+        let got = c.into_collected();
+        assert_eq!(got.responses[0].as_ref().unwrap().0, 9);
+    }
+
+    /// The multi-job clone-leak regression (satellite of ISSUE 7): a lane
+    /// handle leaked past the streamed call must be attributed to its job…
+    #[test]
+    #[should_panic(expected = "collector for job 7")]
+    fn leaked_lane_clone_names_the_job() {
+        let c: Collector<u32> = Collector::collect_all(2);
+        c.tag_job(7);
+        let _leaked = c.clone_for_lane(3);
+        let _ = c.into_collected();
+    }
+
+    /// …and to the lane that held it.
+    #[test]
+    #[should_panic(expected = "lanes [3]")]
+    fn leaked_lane_clone_names_the_lane() {
+        let c: Collector<u32> = Collector::collect_all(2);
+        c.tag_job(7);
+        let _leaked = c.clone_for_lane(3);
         let _ = c.into_collected();
     }
 }

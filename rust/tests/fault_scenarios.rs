@@ -9,7 +9,9 @@
 //!    checked-in golden under `rust/tests/golden/` **byte for byte**.
 //!    A missing golden is bootstrapped (written and reported) so the
 //!    first toolchain run pins the baseline; `UPDATE_GOLDEN=1` (or
-//!    `tools/regen_golden.sh`) rewrites intentionally.
+//!    `tools/regen_golden.sh`) rewrites intentionally. The multi-tenant
+//!    serve mode is pinned the same way: two fair-share jobs on one
+//!    pool, with and without a job-scoped `slow:` script.
 //! 2. **Scenario semantics** — crash/recover, slow-onset, rack-wide
 //!    correlated stragglers, churn, and the `admit:` subset grammar drive
 //!    the round machinery end to end, including the defined empty-round
@@ -221,6 +223,80 @@ fn golden_trace_gd_rebalanced_slow_worker() {
 #[test]
 fn golden_trace_gd_rebalanced_rack() {
     golden_rebalanced("gd_hadamard_dense_rebalance_rack.csv", "rack:0-2:4@10", "migrate:");
+}
+
+/// Multi-tenant serve goldens: two gd jobs fair-share one resident pool
+/// on the golden workload; the pinned artifact concatenates each job's
+/// CSV under a `# job N` header line. `scoped` optionally attaches a
+/// scenario to one job id. Bootstrap-on-missing applies exactly as for
+/// the static goldens. Returns the per-job CSVs for extra assertions.
+fn golden_served(name: &str, scoped: Option<(usize, &str)>) -> Vec<String> {
+    use codedopt::runtime::{JobServer, JobSpec, ServeOptimizer, ServePolicy};
+    use std::sync::Arc;
+
+    let prob = QuadProblem::synthetic_gaussian(96, 8, 0.05, 7);
+    let enc = Arc::new(
+        EncodedProblem::encode_stored(&prob, EncoderKind::Hadamard, 2.0, 8, 3, StorageKind::Dense)
+            .expect("encode"),
+    );
+    let ccfg = ClusterConfig {
+        workers: 8,
+        wait_for: 6,
+        delay: DelayModel::Constant { ms: 2.0 },
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed: 11,
+    };
+    let mut server = JobServer::with_lanes(2, ServePolicy::Fair);
+    for j in 1..=2usize {
+        let scenario = scoped
+            .filter(|&(id, _)| id == j)
+            .map(|(_, dsl)| Scenario::parse(dsl).unwrap());
+        server
+            .submit(JobSpec {
+                enc: Arc::clone(&enc),
+                cluster: ccfg.clone(),
+                optimizer: ServeOptimizer::Gd(GdConfig {
+                    zeta: 0.5,
+                    epsilon: Some(0.3),
+                    ..Default::default()
+                }),
+                iters: GOLDEN_ITERS,
+                w0: None,
+                scenario,
+                priority: 0,
+            })
+            .expect("submit");
+    }
+    let outcomes = server.run().expect("serve");
+    let csvs: Vec<String> = outcomes.iter().map(|o| o.output.trace.to_csv()).collect();
+    let mut combined = String::new();
+    for (o, csv) in outcomes.iter().zip(&csvs) {
+        combined.push_str(&format!("# job {}\n", o.job));
+        combined.push_str(csv);
+    }
+    check_golden(name, &combined);
+    csvs
+}
+
+#[test]
+fn golden_trace_serve_fair_two_jobs() {
+    let csvs = golden_served("serve_fair_2job.csv", None);
+    // same spec, same cluster seed: the two jobs must be bitwise twins
+    assert_eq!(csvs[0], csvs[1], "identical specs must produce identical served traces");
+}
+
+/// A `slow:` script scoped to job 1 annotates only job 1's block; the
+/// sibling stays byte-identical to a clean solo run of the same spec.
+#[test]
+fn golden_trace_serve_scoped_slow() {
+    let dsl = "slow:2:3@5";
+    let csvs = golden_served("serve_scoped_slow.csv", Some((1, dsl)));
+    assert!(csvs[0].contains("slow:2:3@5"), "scoped job lost its event annotation");
+    assert!(!csvs[1].contains("slow:"), "sibling observed the scoped scenario");
+    let (enc, mut cluster) = golden_cluster(EncoderKind::Hadamard, 2.0, StorageKind::Dense);
+    let solo = run_optimizer("gd", &enc, &mut cluster, GOLDEN_ITERS);
+    assert_eq!(csvs[1], solo.trace.to_csv(), "sibling trace drifted from its solo run");
 }
 
 /// L-BFGS runs two cluster rounds per iteration (gradient + line

@@ -1,14 +1,15 @@
 //! Property tests for every CLI/config grammar: `DelayModel`,
-//! `LrSchedule`, `RebalanceConfig`, and the fault-scenario DSL all
-//! promise `parse(x.to_string()) == x` (the config/JSON round-trip
-//! contract) and strict rejection of malformed input. Driven by the
-//! seeded `testutil::property` harness, so every failure reports a
-//! reproducible case seed.
+//! `LrSchedule`, `RebalanceConfig`, `ServePolicy`, and the
+//! fault-scenario DSL all promise `parse(x.to_string()) == x` (the
+//! config/JSON round-trip contract) and strict rejection of malformed
+//! input — plus a scheduler-fairness property for the serve scheduler.
+//! Driven by the seeded `testutil::property` harness, so every failure
+//! reports a reproducible case seed.
 
 use codedopt::cluster::{AdmitPolicy, DelayModel, FaultEvent, Scenario};
 use codedopt::optim::LrSchedule;
 use codedopt::rng::Pcg64;
-use codedopt::runtime::RebalanceConfig;
+use codedopt::runtime::{RebalanceConfig, SchedJob, Scheduler, ServePolicy};
 use codedopt::testutil::{gen_range, property};
 
 fn any_positive(rng: &mut Pcg64) -> f64 {
@@ -124,6 +125,69 @@ fn rebalance_grammar_rejects_malformed() {
     ] {
         assert!(RebalanceConfig::parse(bad).is_err(), "should reject {bad:?}");
     }
+}
+
+fn any_serve_policy(rng: &mut Pcg64) -> ServePolicy {
+    match gen_range(rng, 0, 2) {
+        0 => ServePolicy::Fifo,
+        1 => ServePolicy::Fair,
+        _ => ServePolicy::Priority { classes: gen_range(rng, 1, 64) },
+    }
+}
+
+#[test]
+fn serve_policy_grammar_round_trips_every_variant() {
+    property("serve policy parse<->Display", 200, |rng| {
+        let policy = any_serve_policy(rng);
+        let text = policy.to_string();
+        let back = ServePolicy::parse(&text)
+            .unwrap_or_else(|e| panic!("reparse of {text:?} failed: {e}"));
+        assert_eq!(back, policy, "round trip drifted for {text:?}");
+    });
+}
+
+#[test]
+fn serve_policy_rejects_malformed_grammar() {
+    // wrong arity (both directions), bad/zero class counts, unknown heads
+    for bad in [
+        "", ":", "fifo:", "fifo:1", "fair:", "fair:2", "priority", "priority:",
+        "priority:0", "priority:-1", "priority:abc", "priority:1.5", "priority:2:3",
+        "priority:2,3", "rr", "prio:2", "first-come", "fifo fair",
+    ] {
+        assert!(ServePolicy::parse(bad).is_err(), "should reject {bad:?}");
+    }
+}
+
+/// Fair-share fairness: whenever the scheduler picks a job, that job is
+/// at most one dispatched round ahead of every other still-active job —
+/// no active job ever trails the leader by more than one full sweep.
+#[test]
+fn fair_scheduler_never_starves_an_active_job() {
+    property("fair scheduler sweep bound", 200, |rng| {
+        let n = gen_range(rng, 1, 8);
+        let lens: Vec<usize> = (0..n).map(|_| gen_range(rng, 0, 12)).collect();
+        let mut remaining = lens.clone();
+        let mut counts = vec![0usize; n];
+        let mut sched = Scheduler::new(ServePolicy::Fair);
+        loop {
+            let view: Vec<SchedJob> =
+                remaining.iter().map(|&r| SchedJob { done: r == 0, class: 0 }).collect();
+            let Some(i) = sched.next(&view) else { break };
+            counts[i] += 1;
+            remaining[i] -= 1;
+            for (j, &r) in remaining.iter().enumerate() {
+                if r > 0 {
+                    assert!(
+                        counts[i] <= counts[j] + 1,
+                        "job {i} ran {} rounds while active job {j} has {} (lens {lens:?})",
+                        counts[i],
+                        counts[j]
+                    );
+                }
+            }
+        }
+        assert_eq!(counts, lens, "every job must run exactly its round budget");
+    });
 }
 
 fn any_event(rng: &mut Pcg64) -> FaultEvent {

@@ -1,0 +1,272 @@
+//! Multi-tenant serve equivalence: hosting many jobs on one shared
+//! [`WorkerPool`](codedopt::runtime::WorkerPool) must be invisible to
+//! every job.
+//!
+//! Layers of pinning:
+//!
+//! 1. **Solo equivalence** — N concurrent jobs (3 optimizers × 3
+//!    schemes) run interleaved on one `JobServer`; each job's
+//!    virtual-clock CSV trace and final iterate must match a solo run of
+//!    the same spec on a fresh `NativeEngine`, **byte for byte**. Round
+//!    interleaving can reorder pool commands, but it must never change a
+//!    payload bit, an admitted set, or a delay draw.
+//! 2. **Scheduling invisibility** — fifo / fair / priority produce
+//!    identical per-job traces: any serial interleaving of a job set is
+//!    equivalent to any other (the determinism contract of
+//!    `runtime::serve`).
+//! 3. **Encode-once cache** — a second identical job hits the
+//!    [`EncodedShardCache`] (one encode, one hit) and still reproduces
+//!    the solo trace.
+//! 4. **Fault isolation** — a `crash:`/`slow:` scenario scoped to one
+//!    job leaves every sibling's trace byte-identical to a clean solo
+//!    run, while the scoped job reproduces the solo *faulted* run.
+
+use anyhow::Result;
+use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, Scenario};
+use codedopt::encoding::EncoderKind;
+use codedopt::linalg::StorageKind;
+use codedopt::optim::{
+    CodedGd, CodedLbfgs, CodedSgd, GdConfig, LbfgsConfig, LrSchedule, Optimizer, RunOutput,
+    SgdConfig,
+};
+use codedopt::problem::{EncodedProblem, QuadProblem};
+use codedopt::runtime::{
+    EncodedShardCache, JobServer, JobSpec, NativeEngine, ServeOptimizer, ServePolicy,
+};
+use std::sync::Arc;
+
+// ------------------------------------------------------------- fixtures
+
+/// The PR-4 golden workload (shared with `pool_equivalence.rs`): small
+/// ridge problem, 8 workers, k = 6, deterministic `const:2` delays.
+fn fixture(kind: EncoderKind, beta: f64) -> EncodedProblem {
+    let prob = QuadProblem::synthetic_gaussian(96, 8, 0.05, 7);
+    EncodedProblem::encode_stored(&prob, kind, beta, 8, 3, StorageKind::Dense).expect("encode")
+}
+
+fn ccfg() -> ClusterConfig {
+    ClusterConfig {
+        workers: 8,
+        wait_for: 6,
+        delay: DelayModel::Constant { ms: 2.0 },
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed: 11,
+    }
+}
+
+const SCHEMES: &[(EncoderKind, f64)] = &[
+    (EncoderKind::Hadamard, 2.0),
+    (EncoderKind::Replication, 2.0),
+    (EncoderKind::Identity, 1.0),
+];
+
+const OPTS: &[&str] = &["gd", "sgd", "lbfgs"];
+
+const ITERS: usize = 20;
+
+/// The served form of each optimizer config (identical to the solo
+/// configs in [`solo_run`]).
+fn serve_opt(opt: &str) -> ServeOptimizer {
+    match opt {
+        "gd" => ServeOptimizer::Gd(GdConfig { zeta: 0.5, epsilon: Some(0.3), ..Default::default() }),
+        "sgd" => ServeOptimizer::Sgd(SgdConfig {
+            lr: Some(0.02),
+            schedule: LrSchedule::InvT { t0: 10.0 },
+            momentum: 0.5,
+            batch_frac: 0.5,
+            seed: 5,
+            ..Default::default()
+        }),
+        "lbfgs" => ServeOptimizer::Lbfgs(LbfgsConfig { epsilon: Some(0.3), ..Default::default() }),
+        other => panic!("unknown optimizer {other}"),
+    }
+}
+
+/// Solo baseline: the same spec on its own fresh engine + cluster,
+/// through the classic [`Optimizer::run`] path.
+fn solo_run(opt: &str, enc: &EncodedProblem, scenario: Option<&str>) -> RunOutput {
+    let mut cluster =
+        Cluster::new(enc, Box::new(NativeEngine::new(enc)), ccfg()).expect("cluster");
+    if let Some(dsl) = scenario {
+        cluster.set_scenario(Scenario::parse(dsl).unwrap()).unwrap();
+    }
+    let out: Result<RunOutput> = match opt {
+        "gd" => CodedGd::new(GdConfig { zeta: 0.5, epsilon: Some(0.3), ..Default::default() })
+            .run(enc, &mut cluster, ITERS),
+        "sgd" => CodedSgd::new(SgdConfig {
+            lr: Some(0.02),
+            schedule: LrSchedule::InvT { t0: 10.0 },
+            momentum: 0.5,
+            batch_frac: 0.5,
+            seed: 5,
+            ..Default::default()
+        })
+        .run(enc, &mut cluster, ITERS),
+        "lbfgs" => CodedLbfgs::new(LbfgsConfig { epsilon: Some(0.3), ..Default::default() })
+            .run(enc, &mut cluster, ITERS),
+        other => panic!("unknown optimizer {other}"),
+    };
+    out.expect("solo run")
+}
+
+fn submit_job(
+    server: &mut JobServer,
+    enc: &Arc<EncodedProblem>,
+    opt: &str,
+    scenario: Option<Scenario>,
+) -> usize {
+    server
+        .submit(JobSpec {
+            enc: Arc::clone(enc),
+            cluster: ccfg(),
+            optimizer: serve_opt(opt),
+            iters: ITERS,
+            w0: None,
+            scenario,
+            priority: 0,
+        })
+        .expect("submit")
+}
+
+// -------------------------------------------------- solo equivalence
+
+/// 9 concurrent jobs (every optimizer × scheme) interleaved on one
+/// pool: each job's trace and final iterate must equal its solo run.
+#[test]
+fn served_jobs_match_solo_runs_bitwise() {
+    let mut server = JobServer::with_lanes(3, ServePolicy::Fair);
+    let mut specs = Vec::new();
+    for &(kind, beta) in SCHEMES {
+        for &opt in OPTS {
+            let enc = Arc::new(fixture(kind, beta));
+            let id = submit_job(&mut server, &enc, opt, None);
+            specs.push((id, opt, kind, enc));
+        }
+    }
+    let outcomes = server.run().expect("serve");
+    assert_eq!(outcomes.len(), specs.len());
+    for ((id, opt, kind, enc), o) in specs.iter().zip(&outcomes) {
+        assert_eq!(o.job, *id);
+        assert_eq!(o.rounds, ITERS, "{opt}/{kind:?}: round count");
+        let solo = solo_run(opt, enc, None);
+        assert_eq!(
+            o.output.trace.to_csv(),
+            solo.trace.to_csv(),
+            "{opt}/{kind:?}: served trace differs from the solo run"
+        );
+        assert_eq!(o.output.w.len(), solo.w.len());
+        for (a, b) in o.output.w.iter().zip(&solo.w) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{opt}/{kind:?}: final iterate differs");
+        }
+    }
+    // the jobs genuinely interleaved: under fair scheduling every job is
+    // dispatched exactly ITERS rounds, round-robin
+    for (id, opt, kind, _) in &specs {
+        let n = server.schedule().iter().filter(|&&j| j == *id).count();
+        assert_eq!(n, ITERS, "{opt}/{kind:?}: dispatched rounds");
+    }
+    let first_sweep: Vec<usize> = server.schedule()[..specs.len()].to_vec();
+    let ids: Vec<usize> = specs.iter().map(|(id, ..)| *id).collect();
+    assert_eq!(first_sweep, ids, "fair scheduling must round-robin the first sweep");
+}
+
+// --------------------------------------------- scheduling invisibility
+
+/// The scheduling policy decides only *when* a job's rounds run, never
+/// what they compute: per-job traces are policy-invariant.
+#[test]
+fn scheduling_policy_is_invisible_to_job_results() {
+    let run_with = |policy: ServePolicy| -> Vec<String> {
+        let enc = Arc::new(fixture(EncoderKind::Hadamard, 2.0));
+        let mut server = JobServer::with_lanes(2, policy);
+        for (j, &opt) in OPTS.iter().enumerate() {
+            server
+                .submit(JobSpec {
+                    enc: Arc::clone(&enc),
+                    cluster: ccfg(),
+                    optimizer: serve_opt(opt),
+                    iters: ITERS,
+                    w0: None,
+                    scenario: None,
+                    priority: j,
+                })
+                .expect("submit");
+        }
+        server.run().expect("serve").iter().map(|o| o.output.trace.to_csv()).collect()
+    };
+    let fair = run_with(ServePolicy::Fair);
+    assert_eq!(fair, run_with(ServePolicy::Fifo), "fifo vs fair");
+    assert_eq!(fair, run_with(ServePolicy::Priority { classes: 2 }), "priority vs fair");
+}
+
+/// Pool lane count is equally invisible (1-lane serial pool vs wide
+/// pool).
+#[test]
+fn pool_width_is_invisible_to_served_jobs() {
+    let run_width = |threads: usize| -> Vec<String> {
+        let enc = Arc::new(fixture(EncoderKind::Hadamard, 2.0));
+        let mut server = JobServer::with_lanes(threads, ServePolicy::Fair);
+        for &opt in OPTS {
+            submit_job(&mut server, &enc, opt, None);
+        }
+        server.run().expect("serve").iter().map(|o| o.output.trace.to_csv()).collect()
+    };
+    assert_eq!(run_width(1), run_width(4), "lane layout leaked into served traces");
+}
+
+// ------------------------------------------------------- encode cache
+
+/// A sweep of identical jobs encodes once: the second submission is a
+/// cache hit sharing the same `Arc`, and both jobs still reproduce the
+/// solo trace.
+#[test]
+fn identical_jobs_share_one_encode() {
+    let prob = QuadProblem::synthetic_gaussian(96, 8, 0.05, 7);
+    let mut cache = EncodedShardCache::new();
+    let mut server = JobServer::with_lanes(2, ServePolicy::Fifo);
+    for _ in 0..2 {
+        let enc = cache
+            .get_or_encode(&prob, EncoderKind::Hadamard, 2.0, 8, 3, StorageKind::Dense)
+            .expect("cache encode");
+        submit_job(&mut server, &enc, "gd", None);
+    }
+    assert_eq!(
+        (cache.encodes(), cache.hits()),
+        (1, 1),
+        "second identical job must hit the shard cache, not re-encode"
+    );
+    let outcomes = server.run().expect("serve");
+    assert_eq!(outcomes[0].output.trace.to_csv(), outcomes[1].output.trace.to_csv());
+    let solo = solo_run("gd", &fixture(EncoderKind::Hadamard, 2.0), None);
+    assert_eq!(
+        outcomes[0].output.trace.to_csv(),
+        solo.trace.to_csv(),
+        "cache-shared encode changed the trace"
+    );
+}
+
+// ------------------------------------------------------ fault isolation
+
+/// A crash/slow scenario scoped to one job: the scoped job reproduces
+/// the solo faulted run; siblings submitted before *and* after it stay
+/// byte-identical to the clean solo run.
+#[test]
+fn job_scoped_faults_leave_siblings_untouched() {
+    let dsl = "crash:2@3,slow:1:3@5,recover:2@9;admit:rotate:k";
+    let enc = Arc::new(fixture(EncoderKind::Hadamard, 2.0));
+    let mut server = JobServer::with_lanes(2, ServePolicy::Fair);
+    for j in 0..3 {
+        let scenario = (j == 1).then(|| Scenario::parse(dsl).unwrap());
+        submit_job(&mut server, &enc, "gd", scenario);
+    }
+    let outcomes = server.run().expect("serve");
+    let clean = solo_run("gd", &enc, None).trace.to_csv();
+    let faulted = solo_run("gd", &enc, Some(dsl)).trace.to_csv();
+    assert_ne!(clean, faulted, "fixture scenario must actually perturb the trace");
+    assert_eq!(outcomes[0].output.trace.to_csv(), clean, "sibling before the faulted job");
+    assert_eq!(outcomes[1].output.trace.to_csv(), faulted, "scoped job must see its scenario");
+    assert_eq!(outcomes[2].output.trace.to_csv(), clean, "sibling after the faulted job");
+    assert!(faulted.contains("crash:2@3") && faulted.contains("slow:1"), "events logged");
+    assert!(!clean.contains("crash:") && !clean.contains("slow:"), "siblings saw no events");
+}

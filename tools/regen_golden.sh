@@ -4,7 +4,9 @@
 # The fault_scenarios harness compares each optimizer x scheme x storage
 # trace CSV byte-for-byte against its checked-in golden, including the
 # two elastic-rebalancing scenarios (slow-worker and rack-wide on the
-# const:2 cluster, migration schedule and all). When a change is
+# const:2 cluster, migration schedule and all) and the two multi-tenant
+# serve traces (2-job fair-share on one pool, clean and with a
+# job-scoped slow: script). When a change is
 # *supposed* to alter the traces (new CSV column, intentional numeric
 # change), run this script and commit the rewritten files; CI's drift job
 # fails if the checked-in goldens differ from freshly regenerated output.
