@@ -9,8 +9,16 @@
 //!  * blocked+threaded GEMM throughput
 //!  * full cluster gradient round (native engine) — leader overhead
 //!  * XLA engine round latency (artifacts required; skipped otherwise)
+//!  * kernel matrix: scalar-f64 / SIMD-f64 / f32 across dense + CSR
+//!    fused_grad and gemv, plus the blocked FWHT — written to
+//!    `target/microbench/BENCH_kernels.json` (`FIG_KERNELS_OUT=dir`
+//!    overrides the directory). Both the scalar and SIMD f64 kernel
+//!    bodies are always compiled (`linalg::kernels`), so one run
+//!    measures both regardless of the `simd` feature.
 //!
-//! Run: `cargo bench --bench microbench`.
+//! Run: `cargo bench --bench microbench` (add `--features simd` to make
+//! the *dispatched* public path the SIMD one; the kernel matrix itself
+//! is feature-independent).
 
 use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
 use codedopt::encoding::EncoderKind;
@@ -282,6 +290,198 @@ fn bench_xla_round() {
     println!("xla all-workers grad: {xla_ms:.3} ms   native: {native_ms:.3} ms   (xla/native {:.1}x)", xla_ms / native_ms);
 }
 
+/// One measured kernel configuration for `BENCH_kernels.json`.
+struct KernelRow {
+    kernel: &'static str,
+    storage: &'static str,
+    precision: &'static str,
+    simd: bool,
+    mb_per_s: f64,
+    ns_per_row: f64,
+}
+
+fn kernel_row(
+    kernel: &'static str,
+    storage: &'static str,
+    precision: &'static str,
+    simd: bool,
+    bytes: usize,
+    rows: usize,
+    ms: f64,
+) -> KernelRow {
+    KernelRow {
+        kernel,
+        storage,
+        precision,
+        simd,
+        mb_per_s: bytes as f64 / 1e6 / (ms / 1e3),
+        ns_per_row: ms * 1e6 / rows as f64,
+    }
+}
+
+/// The kernel matrix: every (kernel × storage × precision × impl) cell the
+/// raw-speed pass trades on, measured on shard-sized operands that spill
+/// L2 so the f32 bandwidth halving is visible.
+fn bench_kernel_matrix() {
+    use codedopt::linalg::{kernels, CsrMat, Precision};
+    println!("\n--- kernel matrix: scalar f64 / simd f64 / f32, dense + CSR ---");
+    println!(
+        "(dispatched public path this build: {})",
+        if kernels::simd_active() { "simd" } else { "scalar" }
+    );
+    let (rows, p) = (2048usize, 512usize);
+    let mut rng = Pcg64::seeded(11);
+    let x = Mat::from_fn(rows, p, |_, _| rng.next_gaussian());
+    let w: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+    let y: Vec<f64> = (0..rows).map(|_| rng.next_gaussian()).collect();
+    let mut g = vec![0.0; p];
+    let mut buf = vec![0.0; rows];
+    let mut out = vec![0.0; rows];
+    let dense_bytes = rows * p * 8;
+    let reps = 20;
+    let mut table: Vec<KernelRow> = Vec::new();
+
+    // dense fused_grad: scalar f64 / simd f64 / f32
+    let ms = time_ms(reps, || {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        std::hint::black_box(kernels::mat_fused_grad_range_scalar(
+            &x, &w, &y, &mut g, &mut buf, 0, rows,
+        ));
+    });
+    table.push(kernel_row("fused_grad", "dense", "f64", false, dense_bytes, rows, ms));
+    let ms = time_ms(reps, || {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        std::hint::black_box(kernels::mat_fused_grad_range_simd(
+            &x, &w, &y, &mut g, &mut buf, 0, rows,
+        ));
+    });
+    table.push(kernel_row("fused_grad", "dense", "f64", true, dense_bytes, rows, ms));
+    let x32 = DataMat::Dense(x.clone()).to_precision(Precision::F32);
+    let ms = time_ms(reps, || {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        std::hint::black_box(x32.fused_grad(&w, &y, &mut g, &mut buf));
+    });
+    table.push(kernel_row("fused_grad", "dense", "f32", true, dense_bytes / 2, rows, ms));
+
+    // dense gemv: scalar f64 / simd f64 / f32
+    let ms = time_ms(reps, || {
+        std::hint::black_box(kernels::mat_gemv_into_scalar(&x, &w, &mut out));
+    });
+    table.push(kernel_row("gemv", "dense", "f64", false, dense_bytes, rows, ms));
+    let ms = time_ms(reps, || {
+        std::hint::black_box(kernels::mat_gemv_into_simd(&x, &w, &mut out));
+    });
+    table.push(kernel_row("gemv", "dense", "f64", true, dense_bytes, rows, ms));
+    let ms = time_ms(reps, || {
+        std::hint::black_box(x32.gemv_into(&w, &mut out));
+    });
+    table.push(kernel_row("gemv", "dense", "f32", true, dense_bytes / 2, rows, ms));
+
+    // CSR fused_grad: 32 nnz/row on the same shape
+    let nnz_per_row = 32usize;
+    let csr = {
+        let mut row_ptr = vec![0usize];
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..rows {
+            for t in 0..nnz_per_row {
+                cols.push(((i * 37 + t * 17) % p) as u32);
+                vals.push(rng.next_gaussian());
+            }
+            let lo = row_ptr[i];
+            let band = &mut cols[lo..];
+            band.sort_unstable();
+            row_ptr.push(cols.len());
+        }
+        CsrMat::from_raw(rows, p, row_ptr, cols, vals)
+    };
+    let csr_bytes = csr.nnz() * 12; // 8B value + 4B column index
+    let ms = time_ms(reps, || {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        std::hint::black_box(kernels::csr_fused_grad_range_scalar(
+            &csr, &w, &y, &mut g, &mut buf, 0, rows,
+        ));
+    });
+    table.push(kernel_row("fused_grad", "csr", "f64", false, csr_bytes, rows, ms));
+    let ms = time_ms(reps, || {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        std::hint::black_box(kernels::csr_fused_grad_range_simd(
+            &csr, &w, &y, &mut g, &mut buf, 0, rows,
+        ));
+    });
+    table.push(kernel_row("fused_grad", "csr", "f64", true, csr_bytes, rows, ms));
+    let csr32 = DataMat::Csr(csr.clone()).to_precision(Precision::F32);
+    let csr32_bytes = csr.nnz() * 8; // 4B value + 4B column index
+    let ms = time_ms(reps, || {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        std::hint::black_box(csr32.fused_grad(&w, &y, &mut g, &mut buf));
+    });
+    table.push(kernel_row("fused_grad", "csr", "f32", true, csr32_bytes, rows, ms));
+
+    // blocked + threaded FWHT (the encode-side hot loop)
+    let (n, c) = (4096usize, 64usize);
+    let mut fbuf: Vec<f64> = (0..n * c).map(|_| rng.next_gaussian()).collect();
+    let ms = time_ms(10, || {
+        codedopt::linalg::fwht::fwht_columns(&mut fbuf, n, c);
+        std::hint::black_box(&fbuf);
+    });
+    // bytes moved per transform: log2(n) passes over the n×c buffer
+    let fwht_bytes = n * c * 8 * n.trailing_zeros() as usize;
+    table.push(kernel_row("fwht_columns", "dense", "f64", false, fwht_bytes, n, ms));
+
+    println!(
+        "{:<14} {:<7} {:<5} {:<6} {:>10} {:>10}",
+        "kernel", "storage", "prec", "simd", "MB/s", "ns/row"
+    );
+    for r in &table {
+        println!(
+            "{:<14} {:<7} {:<5} {:<6} {:>10.0} {:>10.1}",
+            r.kernel, r.storage, r.precision, r.simd, r.mb_per_s, r.ns_per_row
+        );
+    }
+    let base = table
+        .iter()
+        .find(|r| r.kernel == "fused_grad" && r.storage == "dense" && !r.simd)
+        .map(|r| r.ns_per_row);
+    let fast = table
+        .iter()
+        .find(|r| r.kernel == "fused_grad" && r.storage == "dense" && r.precision == "f32")
+        .map(|r| r.ns_per_row);
+    if let (Some(b), Some(f)) = (base, fast) {
+        println!("dense fused_grad speedup simd+f32 vs scalar f64: {:.2}x", b / f);
+    }
+
+    // JSON artifact (fig_serve convention: FIG_*_OUT overrides the dir)
+    use std::fmt::Write as _;
+    let mut json = String::from("{\n  \"bench\": \"kernels\",\n");
+    let _ = writeln!(json, "  \"dispatched_simd\": {},", kernels::simd_active());
+    let _ = writeln!(json, "  \"dense_shape\": [{rows}, {p}],");
+    let _ = writeln!(json, "  \"csr_nnz_per_row\": {nnz_per_row},");
+    let _ = writeln!(json, "  \"fwht_shape\": [{n}, {c}],");
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in table.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"kernel\": \"{}\", \"storage\": \"{}\", \"precision\": \"{}\", \
+             \"simd\": {}, \"mb_per_s\": {:.1}, \"ns_per_row\": {:.2}}}{}",
+            r.kernel,
+            r.storage,
+            r.precision,
+            r.simd,
+            r.mb_per_s,
+            r.ns_per_row,
+            if i + 1 < table.len() { "," } else { "" }
+        );
+    }
+    json.push_str("  ]\n}\n");
+    let out_dir =
+        std::env::var("FIG_KERNELS_OUT").unwrap_or_else(|_| "target/microbench".to_string());
+    std::fs::create_dir_all(&out_dir).expect("creating output dir");
+    let path = format!("{out_dir}/BENCH_kernels.json");
+    std::fs::write(&path, &json).expect("writing BENCH_kernels.json");
+    println!("# wrote {path}");
+}
+
 fn main() {
     println!("=== codedopt microbench (hot paths) ===");
     bench_fused_grad();
@@ -292,4 +492,5 @@ fn main() {
     bench_cluster_round();
     bench_streaming_gather();
     bench_xla_round();
+    bench_kernel_matrix();
 }

@@ -16,7 +16,7 @@ pub use args::Args;
 use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, Scenario};
 use crate::config::Json;
 use crate::encoding::EncoderKind;
-use crate::linalg::StorageKind;
+use crate::linalg::{Precision, StorageKind};
 use crate::optim::{
     CodedGd, CodedLbfgs, CodedSgd, GdConfig, LbfgsConfig, LrSchedule, Optimizer, SgdConfig,
 };
@@ -46,6 +46,10 @@ SUBCOMMANDS
                                sparse data CSR where the scheme preserves it;
                                sparse forces CSR (errors for densifying
                                encoders; the xla engine needs dense)
+    --precision f64|f32  worker-shard arithmetic precision (default f64):
+                               f32 halves shard memory and runs the f32
+                               kernels on workers while encoding and the
+                               leader stay f64 (needs --engine native)
     --threads 0     native-engine resident worker-pool size: the pool is
                     spawned once per run and every round is dispatched to
                     its shard-owning lanes (0 = all cores)
@@ -88,15 +92,15 @@ SUBCOMMANDS
                     job id, default 1); sibling jobs never observe it
     plus the ridge problem/cluster flags: --n --p --lambda --workers --k
     --beta --encoder --optimizer (gd|lbfgs|sgd, default gd; alias --algo)
-    --iters --delay --clock --storage --threads --seed and the SGD-only
-    flags (--batch-frac --lr --lr-schedule --momentum --epoch-len
+    --iters --delay --clock --storage --precision --threads --seed and the
+    SGD-only flags (--batch-frac --lr --lr-schedule --momentum --epoch-len
     --plateau-patience --plateau-tol)
 
   mf                coded matrix factorization on synthetic MovieLens (Fig. 5/6)
     --users 240 --items 160 --ratings 8000 --embed 15 --lambda 10
     --epochs 5 --workers 8 --k 4 --encoder hadamard --beta 2.0
     --dist-threshold 64 --iters 8 --delay exp:10 --clock virtual|measured
-    --storage dense|sparse|auto --threads 0 --seed 0
+    --storage dense|sparse|auto --precision f64|f32 --threads 0 --seed 0
 
   spectrum          eigenvalue spectra of S_A^T S_A (Fig. 2/3)
     --n 64 --beta 2.0 --workers 32 --k 16 --trials 10 --seed 0
@@ -158,6 +162,13 @@ fn cmd_ridge(args: &Args) -> Result<()> {
     let delay = DelayModel::parse(args.flag_str("delay", "exp:10"))?;
     let clock = ClockMode::parse(args.flag_str("clock", "virtual"))?;
     let storage = StorageKind::parse(args.flag_str("storage", "auto"))?;
+    let precision = Precision::parse(args.flag_str("precision", "f64"))?;
+    if precision == Precision::F32 && engine_kind == EngineKind::Xla {
+        anyhow::bail!(
+            "--precision f32 needs --engine native: the AOT HLO artifacts \
+             are compiled for f64 dense shards"
+        );
+    }
     let threads = args.flag_usize("threads", 0)?;
     let scenario = match (args.flag("scenario"), args.flag("scenario-json")) {
         (Some(_), Some(_)) => {
@@ -188,10 +199,11 @@ fn cmd_ridge(args: &Args) -> Result<()> {
         "# ridge: n={n} p={p} λ={lambda} m={m} k={k} β={beta} encoder={kind} engine={engine_kind:?} clock={clock:?} algo={algo}"
     );
     let prob = QuadProblem::synthetic_gaussian(n, p, lambda, seed);
-    let enc = EncodedProblem::encode_stored(&prob, kind, beta, m, seed, storage)?;
+    let enc = EncodedProblem::encode_stored_prec(&prob, kind, beta, m, seed, storage, precision)?;
     println!(
-        "# storage={} ({} shard bytes across {} workers){}",
+        "# storage={} precision={} ({} shard bytes across {} workers){}",
         enc.storage,
+        enc.precision,
         enc.shard_mem_bytes(),
         enc.m(),
         if threads > 0 { format!("  threads={threads}") } else { String::new() }
@@ -309,6 +321,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let delay = DelayModel::parse(args.flag_str("delay", "exp:10"))?;
     let clock = ClockMode::parse(args.flag_str("clock", "virtual"))?;
     let storage = StorageKind::parse(args.flag_str("storage", "auto"))?;
+    let precision = Precision::parse(args.flag_str("precision", "f64"))?;
     let threads = args.flag_usize("threads", 0)?;
     let policy = ServePolicy::parse(args.flag_str("serve-policy", "fair"))?;
     let optimizer = parse_serve_optimizer(args, seed)?;
@@ -330,7 +343,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut cache = EncodedShardCache::new();
     let mut server = JobServer::with_lanes(threads, policy);
     for j in 0..jobs {
-        let enc = cache.get_or_encode(&prob, kind, beta, m, seed, storage)?;
+        let enc = cache.get_or_encode_prec(&prob, kind, beta, m, seed, storage, precision)?;
         let cluster = ClusterConfig {
             workers: m,
             wait_for: k,
@@ -401,14 +414,15 @@ fn cmd_mf(args: &Args) -> Result<()> {
         delay: DelayModel::parse(args.flag_str("delay", "exp:10"))?,
         clock: ClockMode::parse(args.flag_str("clock", "virtual"))?,
         storage: StorageKind::parse(args.flag_str("storage", "auto"))?,
+        precision: Precision::parse(args.flag_str("precision", "f64"))?,
         threads: args.flag_usize("threads", 0)?,
         seed,
         ..Default::default()
     };
     println!(
-        "# mf: users={} items={} ratings~{} embed={} m={} k={} encoder={} storage={}",
+        "# mf: users={} items={} ratings~{} embed={} m={} k={} encoder={} storage={} precision={}",
         scfg.n_users, scfg.n_items, scfg.n_ratings, cfg.embed, cfg.m, cfg.k, cfg.encoder,
-        cfg.storage
+        cfg.storage, cfg.precision
     );
     let all = synthetic_movielens(&scfg);
     let (tr, te) = all.split(0.2, seed ^ 0x5117);
@@ -577,6 +591,42 @@ mod tests {
     }
 
     #[test]
+    fn tiny_ridge_f32_precision_runs() {
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "5",
+            "--precision", "f32",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn tiny_ridge_f32_sparse_runs() {
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "3",
+            "--encoder", "uncoded", "--storage", "sparse", "--precision", "f32",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn ridge_rejects_bad_precision() {
+        assert!(run(&[
+            "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "4", "--iters", "1",
+            "--precision", "f16",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn ridge_rejects_f32_with_xla_engine() {
+        assert!(run(&[
+            "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "4", "--iters", "1",
+            "--engine", "xla", "--precision", "f32",
+        ])
+        .is_err());
+    }
+
+    #[test]
     fn tiny_ridge_thread_cap_runs() {
         run(&[
             "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "3",
@@ -624,6 +674,15 @@ mod tests {
         run(&[
             "serve", "--jobs", "3", "--n", "64", "--p", "8", "--workers", "4", "--k", "3",
             "--iters", "2", "--serve-policy", "priority:2", "--threads", "2",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn tiny_serve_f32_runs() {
+        run(&[
+            "serve", "--jobs", "2", "--n", "64", "--p", "8", "--workers", "4", "--k", "3",
+            "--iters", "3", "--threads", "2", "--precision", "f32",
         ])
         .unwrap();
     }
@@ -720,6 +779,16 @@ mod tests {
                 "mf scenario rejection must point at the supported path, got: {msg}"
             );
         }
+    }
+
+    #[test]
+    fn tiny_mf_f32_runs() {
+        run(&[
+            "mf", "--users", "20", "--items", "10", "--ratings", "100", "--epochs", "1",
+            "--workers", "4", "--k", "2", "--dist-threshold", "8", "--iters", "2",
+            "--precision", "f32",
+        ])
+        .unwrap();
     }
 
     #[test]

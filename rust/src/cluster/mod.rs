@@ -1385,6 +1385,7 @@ mod tests {
             beta: 1.0,
             gram_scale: 1.0,
             storage: crate::linalg::StorageKind::Dense,
+            precision: crate::linalg::Precision::F64,
             raw: prob,
         };
         let eng = Box::new(NativeEngine::new(&enc));

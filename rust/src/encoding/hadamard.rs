@@ -104,6 +104,10 @@ impl Encoder for HadamardEncoder {
                 }
                 DataMat::Dense(Mat::from_vec(self.n_out, ncols, buf))
             }
+            // f32 shard variants never reach an encoder: encoding always
+            // runs in f64 and shards are narrowed afterwards
+            // (`EncodedProblem::encode_stored_prec`). Widen defensively.
+            other => DataMat::Dense(self.encode(&other.to_dense())),
         }
     }
 

@@ -4,11 +4,45 @@
 //! Unnormalized Sylvester ordering, matching the L1 Pallas kernel
 //! (`python/compile/kernels/fwht.py`); callers apply `1/sqrt(N)` for the
 //! orthonormal/tight-frame scaling.
+//!
+//! **Blocking & threading.** [`fwht_columns`] is the serve-mode cold-path
+//! cost every `EncodedShardCache` miss pays, so it is cache-blocked and
+//! multithreaded:
+//!
+//! * *Column panels (L2 blocking):* all `log2(n)` butterfly stages run
+//!   over one panel of columns before moving to the next, so a panel's
+//!   working set (`n · panel` doubles) stays resident across stages
+//!   instead of streaming the whole `n × c` buffer `log2(n)` times.
+//! * *Recursive halving (threads):* every stage `h < n/2` operates inside
+//!   aligned blocks of `2h ≤ n/2` rows that never cross the buffer
+//!   midpoint, so those stages are exactly "transform the top half" and
+//!   "transform the bottom half" — two independent jobs for
+//!   `std::thread::scope`. The final `h = n/2` stage is one elementwise
+//!   butterfly between the two aligned halves, parallelized over
+//!   disjoint row chunks.
+//!
+//! Neither transformation changes any element's operation sequence (each
+//! element is read and written exactly once per stage; there are no
+//! cross-thread accumulators), so the blocked/threaded transform is
+//! **bitwise-identical** to the historical stage-major loop — pinned by
+//! the tests below and relied on by the Hadamard-encode golden traces.
 
-/// In-place N-point WHT of a vector. `v.len()` must be a power of two.
+use super::mat::n_threads;
+
+/// Below this many butterfly element-ops (`n · c · log2 n`), threading
+/// overhead dominates — stay serial.
+const PAR_BUTTERFLY_THRESHOLD: usize = 1 << 20;
+
+/// Column-panel size target: keep `n · panel` doubles around L2-sized.
+const L2_BYTES: usize = 256 * 1024;
+
+/// In-place N-point WHT of a vector. `v.len()` must be a positive power
+/// of two (a 0-point transform is undefined in the Sylvester family —
+/// rejected explicitly rather than by the confusing historical
+/// `0.is_power_of_two()` failure).
 pub fn fwht_inplace(v: &mut [f64]) {
     let n = v.len();
-    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    assert!(n > 0 && n.is_power_of_two(), "FWHT length must be a positive power of two, got {n}");
     let mut h = 1;
     while h < n {
         for block in (0..n).step_by(2 * h) {
@@ -26,12 +60,45 @@ pub fn fwht_inplace(v: &mut [f64]) {
 ///
 /// Works column-block-wise directly on the row-major layout: for each
 /// butterfly stage the partner rows are `i` and `i + h`, and the add/sub
-/// runs vectorized across the full row — this is the CPU analog of the
+/// runs vectorized across the panel — this is the CPU analog of the
 /// Pallas kernel's stride-permuted VPU stages and is much faster than
-/// transposing or gathering per-column.
+/// transposing or gathering per-column. See the module docs for the
+/// panel/threading scheme and the bitwise-identity argument.
+///
+/// `n` must be a positive power of two; `c = 0` is an explicit no-op
+/// (zero columns to transform — the shape is still validated).
 pub fn fwht_columns(data: &mut [f64], n: usize, c: usize) {
+    assert!(n > 0 && n.is_power_of_two(), "FWHT length must be a positive power of two, got {n}");
     assert_eq!(data.len(), n * c, "fwht_columns: buffer mismatch");
-    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    if c == 0 {
+        return;
+    }
+    let stages = n.trailing_zeros() as usize;
+    let work = n * c * stages.max(1);
+    let threads = if work >= PAR_BUTTERFLY_THRESHOLD { n_threads().min(n / 2).max(1) } else { 1 };
+    if threads <= 1 {
+        fwht_columns_serial(data, n, c);
+    } else {
+        fwht_columns_rec(data, n, c, threads);
+    }
+}
+
+/// Serial transform with L2-sized column panels: all stages run per
+/// panel. Panels partition the columns and each column's butterflies are
+/// independent of every other column, so the element-op sequence — and
+/// therefore the bits — match the unblocked stage-major loop.
+fn fwht_columns_serial(data: &mut [f64], n: usize, c: usize) {
+    let panel = (L2_BYTES / (std::mem::size_of::<f64>() * n)).clamp(1, c);
+    let mut j0 = 0;
+    while j0 < c {
+        let j1 = (j0 + panel).min(c);
+        fwht_columns_panel(data, n, c, j0, j1);
+        j0 = j1;
+    }
+}
+
+/// All `log2(n)` butterfly stages over columns `[j0, j1)` only.
+fn fwht_columns_panel(data: &mut [f64], n: usize, c: usize, j0: usize, j1: usize) {
     let mut h = 1;
     while h < n {
         for block in (0..n).step_by(2 * h) {
@@ -39,7 +106,7 @@ pub fn fwht_columns(data: &mut [f64], n: usize, c: usize) {
                 let (top, bot) = data.split_at_mut((i + h) * c);
                 let a_row = &mut top[i * c..(i + 1) * c];
                 let b_row = &mut bot[..c];
-                for j in 0..c {
+                for j in j0..j1 {
                     let (a, b) = (a_row[j], b_row[j]);
                     a_row[j] = a + b;
                     b_row[j] = a - b;
@@ -48,6 +115,56 @@ pub fn fwht_columns(data: &mut [f64], n: usize, c: usize) {
         }
         h *= 2;
     }
+}
+
+/// Recursive halving: transform the two halves (in parallel when the
+/// thread budget allows), then run the final `h = n/2` combine stage.
+/// Stages `h < n/2` never cross the midpoint (blocks of `2h` rows start
+/// at multiples of `2h`, and `n/2` is such a multiple), so this computes
+/// the exact same operation sequence as the serial stage-major loop.
+fn fwht_columns_rec(data: &mut [f64], n: usize, c: usize, threads: usize) {
+    if threads <= 1 || n < 2 {
+        fwht_columns_serial(data, n, c);
+        return;
+    }
+    let half = n / 2;
+    {
+        let (top, bot) = data.split_at_mut(half * c);
+        let t_top = threads / 2;
+        let t_bot = threads - t_top;
+        std::thread::scope(|s| {
+            s.spawn(move || fwht_columns_rec(top, half, c, t_top));
+            fwht_columns_rec(bot, half, c, t_bot);
+        });
+    }
+    combine_halves(data, n, c, threads);
+}
+
+/// The final `h = n/2` butterfly: elementwise over the two aligned
+/// halves, parallelized over disjoint row chunks (each element is
+/// touched by exactly one thread — no accumulation, no reordering).
+fn combine_halves(data: &mut [f64], n: usize, c: usize, threads: usize) {
+    let half = n / 2;
+    let (top, bot) = data.split_at_mut(half * c);
+    let rows_per = half.div_ceil(threads.max(1)).max(1);
+    std::thread::scope(|s| {
+        let mut top_rest: &mut [f64] = top;
+        let mut bot_rest: &mut [f64] = bot;
+        while !top_rest.is_empty() {
+            let take = (rows_per * c).min(top_rest.len());
+            let (t_chunk, t_tail) = top_rest.split_at_mut(take);
+            let (b_chunk, b_tail) = bot_rest.split_at_mut(take);
+            top_rest = t_tail;
+            bot_rest = b_tail;
+            s.spawn(move || {
+                for (a, b) in t_chunk.iter_mut().zip(b_chunk.iter_mut()) {
+                    let (x, y) = (*a, *b);
+                    *a = x + y;
+                    *b = x - y;
+                }
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -131,9 +248,101 @@ mod tests {
         }
     }
 
+    /// The historical stage-major loop, kept as the bitwise oracle for
+    /// the blocked/threaded rewrite.
+    fn fwht_columns_reference(data: &mut [f64], n: usize, c: usize) {
+        let mut h = 1;
+        while h < n {
+            for block in (0..n).step_by(2 * h) {
+                for i in block..block + h {
+                    let (top, bot) = data.split_at_mut((i + h) * c);
+                    let a_row = &mut top[i * c..(i + 1) * c];
+                    let b_row = &mut bot[..c];
+                    for j in 0..c {
+                        let (a, b) = (a_row[j], b_row[j]);
+                        a_row[j] = a + b;
+                        b_row[j] = a - b;
+                    }
+                }
+            }
+            h *= 2;
+        }
+    }
+
+    #[test]
+    fn panelled_serial_matches_reference_bitwise() {
+        let mut rng = Pcg64::seeded(5);
+        // shapes straddling one panel, several panels, and odd columns
+        for &(n, c) in &[(1usize, 3usize), (64, 1), (256, 7), (1024, 40)] {
+            let orig: Vec<f64> = (0..n * c).map(|_| rng.next_gaussian()).collect();
+            let mut blocked = orig.clone();
+            let mut reference = orig.clone();
+            fwht_columns_serial(&mut blocked, n, c);
+            fwht_columns_reference(&mut reference, n, c);
+            for (a, b) in blocked.iter().zip(&reference) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{n}x{c}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_recursion_matches_serial_bitwise() {
+        let mut rng = Pcg64::seeded(6);
+        for &(n, c, threads) in &[(256usize, 9usize, 2usize), (512, 16, 4), (1024, 5, 8)] {
+            let orig: Vec<f64> = (0..n * c).map(|_| rng.next_gaussian()).collect();
+            let mut par = orig.clone();
+            let mut ser = orig.clone();
+            fwht_columns_rec(&mut par, n, c, threads);
+            fwht_columns_serial(&mut ser, n, c);
+            for (a, b) in par.iter().zip(&ser) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{n}x{c}x{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn public_path_above_threshold_matches_reference_bitwise() {
+        // 2048·64·11 ≈ 1.4M element-ops > PAR_BUTTERFLY_THRESHOLD: the
+        // public entry point takes the threaded path on multi-core hosts
+        let mut rng = Pcg64::seeded(7);
+        let (n, c) = (2048, 64);
+        let orig: Vec<f64> = (0..n * c).map(|_| rng.next_gaussian()).collect();
+        let mut fast = orig.clone();
+        let mut reference = orig.clone();
+        fwht_columns(&mut fast, n, c);
+        fwht_columns_reference(&mut reference, n, c);
+        for (a, b) in fast.iter().zip(&reference) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_columns_is_a_validated_noop() {
+        let mut empty: Vec<f64> = Vec::new();
+        fwht_columns(&mut empty, 8, 0); // must not panic
+    }
+
     #[test]
     #[should_panic(expected = "power of two")]
     fn rejects_non_power_of_two() {
         fwht_inplace(&mut [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive power of two, got 0")]
+    fn rejects_zero_length_inplace() {
+        fwht_inplace(&mut []);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive power of two, got 0")]
+    fn rejects_zero_length_columns() {
+        fwht_columns(&mut [], 0, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer mismatch")]
+    fn rejects_buffer_mismatch() {
+        fwht_columns(&mut [1.0, 2.0, 3.0], 4, 1);
     }
 }

@@ -31,7 +31,7 @@ impl fmt::Debug for Mat {
 /// Below this many multiply-adds, threading overhead dominates — stay serial.
 const PAR_FLOP_THRESHOLD: usize = 1 << 20;
 
-fn n_threads() -> usize {
+pub(crate) fn n_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
@@ -268,41 +268,14 @@ impl Mat {
     /// the exact mod-4 accumulation order of [`super::dot`] — per-row
     /// results are bit-identical to the historical per-row kernel (which
     /// is also what the CSR mirror, `storage::CsrMat::gemv_into`,
-    /// reproduces).
+    /// reproduces). Dispatches to [`gemv_into_simd`] under
+    /// `--features simd` (bitwise-identical lanes, pinned by
+    /// `tests/kernel_equivalence.rs`).
     pub fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
-        assert_eq!(x.len(), self.cols, "gemv: dimension mismatch");
-        assert_eq!(y.len(), self.rows, "gemv: output mismatch");
-        let n = self.cols;
-        let chunks = n / 4;
-        let mut i = 0;
-        while i + 1 < self.rows {
-            let r0 = &self.data[i * n..(i + 1) * n];
-            let r1 = &self.data[(i + 1) * n..(i + 2) * n];
-            let mut a0 = [0.0f64; 4];
-            let mut a1 = [0.0f64; 4];
-            for c in 0..chunks {
-                let j = c * 4;
-                a0[0] += r0[j] * x[j];
-                a0[1] += r0[j + 1] * x[j + 1];
-                a0[2] += r0[j + 2] * x[j + 2];
-                a0[3] += r0[j + 3] * x[j + 3];
-                a1[0] += r1[j] * x[j];
-                a1[1] += r1[j + 1] * x[j + 1];
-                a1[2] += r1[j + 2] * x[j + 2];
-                a1[3] += r1[j + 3] * x[j + 3];
-            }
-            let mut s0 = a0[0] + a0[1] + a0[2] + a0[3];
-            let mut s1 = a1[0] + a1[1] + a1[2] + a1[3];
-            for j in chunks * 4..n {
-                s0 += r0[j] * x[j];
-                s1 += r1[j] * x[j];
-            }
-            y[i] = s0;
-            y[i + 1] = s1;
-            i += 2;
-        }
-        if i < self.rows {
-            y[i] = super::dot(self.row(i), x);
+        if cfg!(feature = "simd") {
+            gemv_into_simd(self, x, y)
+        } else {
+            gemv_into_scalar(self, x, y)
         }
     }
 
@@ -318,23 +291,12 @@ impl Mat {
     /// folded two rows per pass over `y` (§Perf iteration 5 — halves
     /// `y`-traffic, same shape as the fused kernel's paired rank-1
     /// update, which is also what the CSR mirror reproduces).
+    /// Dispatches to [`gemv_t_into_simd`] under `--features simd`.
     pub fn gemv_t_into(&self, x: &[f64], y: &mut [f64]) {
-        assert_eq!(x.len(), self.rows, "gemv_t: dimension mismatch");
-        assert_eq!(y.len(), self.cols, "gemv_t: output mismatch");
-        y.fill(0.0);
-        let n = self.cols;
-        let mut i = 0;
-        while i + 1 < self.rows {
-            let (x0, x1) = (x[i], x[i + 1]);
-            let r0 = &self.data[i * n..(i + 1) * n];
-            let r1 = &self.data[(i + 1) * n..(i + 2) * n];
-            for ((yj, &a), &b) in y.iter_mut().zip(r0).zip(r1) {
-                *yj += x0 * a + x1 * b;
-            }
-            i += 2;
-        }
-        if i < self.rows {
-            super::axpy(x[i], self.row(i), y);
+        if cfg!(feature = "simd") {
+            gemv_t_into_simd(self, x, y)
+        } else {
+            gemv_t_into_scalar(self, x, y)
         }
     }
 
@@ -371,52 +333,11 @@ impl Mat {
         lo: usize,
         hi: usize,
     ) -> f64 {
-        assert_eq!(w.len(), self.cols, "fused_grad: w mismatch");
-        assert_eq!(y.len(), self.rows, "fused_grad: y mismatch");
-        assert_eq!(g.len(), self.cols, "fused_grad: g mismatch");
-        assert_eq!(resid_buf.len(), self.rows, "fused_grad: buffer mismatch");
-        assert!(lo <= hi && hi <= self.rows, "fused_grad_range: bad range {lo}..{hi}");
-        let mut f = 0.0;
-        let mut i = lo;
-        while i + 1 < hi {
-            let row0 = self.row(i);
-            let row1 = &self.data[(i + 1) * self.cols..(i + 2) * self.cols];
-            // paired dot: one pass over w
-            let (mut d0a, mut d0b, mut d1a, mut d1b) = (0.0, 0.0, 0.0, 0.0);
-            let chunks = self.cols / 2;
-            for c in 0..chunks {
-                let j = 2 * c;
-                d0a += row0[j] * w[j];
-                d0b += row0[j + 1] * w[j + 1];
-                d1a += row1[j] * w[j];
-                d1b += row1[j + 1] * w[j + 1];
-            }
-            let mut r0 = d0a + d0b;
-            let mut r1 = d1a + d1b;
-            if self.cols % 2 == 1 {
-                let j = self.cols - 1;
-                r0 += row0[j] * w[j];
-                r1 += row1[j] * w[j];
-            }
-            r0 -= y[i];
-            r1 -= y[i + 1];
-            resid_buf[i] = r0;
-            resid_buf[i + 1] = r1;
-            f += r0 * r0 + r1 * r1;
-            // paired rank-1 update: one pass over g
-            for ((gj, &a), &b) in g.iter_mut().zip(row0).zip(row1) {
-                *gj += r0 * a + r1 * b;
-            }
-            i += 2;
+        if cfg!(feature = "simd") {
+            fused_grad_range_simd(self, w, y, g, resid_buf, lo, hi)
+        } else {
+            fused_grad_range_scalar(self, w, y, g, resid_buf, lo, hi)
         }
-        if i < hi {
-            let row = self.row(i);
-            let r = super::dot(row, w) - y[i];
-            resid_buf[i] = r;
-            f += r * r;
-            super::axpy(r, row, g);
-        }
-        f
     }
 
     /// Matrix product `self * other`, blocked and threaded.
@@ -464,53 +385,11 @@ impl Mat {
     /// column bands, then mirrored into the lower triangle — so the
     /// result is exactly symmetric by construction.
     pub fn gram(&self) -> Mat {
-        let (n, p) = (self.rows, self.cols);
-        let mut g = Mat::zeros(p, p);
-        if p == 0 || n == 0 {
-            return g;
+        if cfg!(feature = "simd") {
+            gram_simd(self)
+        } else {
+            gram_scalar(self)
         }
-        let flops = n * p * (p + 1) / 2;
-        let threads = if flops >= PAR_FLOP_THRESHOLD { n_threads().min(p) } else { 1 };
-        // band cut points with roughly equal upper-triangle area
-        let mut cuts = vec![0usize];
-        if threads > 1 {
-            let per = (p * (p + 1) / 2).div_ceil(threads);
-            let mut acc = 0usize;
-            for j in 0..p {
-                acc += p - j;
-                if acc >= per && j + 1 < p {
-                    cuts.push(j + 1);
-                    acc = 0;
-                }
-            }
-        }
-        cuts.push(p);
-        let a = &self.data;
-        // split g into disjoint row bands [cuts[b], cuts[b+1]), one thread each
-        let bands: Vec<(usize, usize, &mut [f64])> = {
-            let mut v = Vec::with_capacity(cuts.len() - 1);
-            let mut rest: &mut [f64] = &mut g.data;
-            for b in 0..cuts.len() - 1 {
-                let (jlo, jhi) = (cuts[b], cuts[b + 1]);
-                let (head, tail) = rest.split_at_mut((jhi - jlo) * p);
-                v.push((jlo, jhi, head));
-                rest = tail;
-            }
-            v
-        };
-        std::thread::scope(|s| {
-            for (jlo, jhi, band) in bands {
-                s.spawn(move || syrk_band(a, n, p, jlo, jhi, band));
-            }
-        });
-        // mirror the computed upper triangle into the lower one
-        for i in 0..p {
-            for j in i + 1..p {
-                let v = g.data[i * p + j];
-                g.data[j * p + i] = v;
-            }
-        }
-        g
     }
 
     /// Largest eigenvalue of `selfᵀ self` by power iteration (this is
@@ -574,11 +453,351 @@ fn gemm_block(a: &[f64], b: &[f64], c: &mut [f64], row_lo: usize, rows: usize, k
     gemm_band(a, b, c, row_lo, rows, k, n);
 }
 
+// ---------------------------------------------------------------------------
+// Hot-kernel implementations: scalar reference + SIMD lane bundles
+// ---------------------------------------------------------------------------
+//
+// Both variants of every kernel are compiled in every build; the public
+// `Mat` methods dispatch on `cfg!(feature = "simd")` and
+// `linalg::kernels` re-exports both so one test binary can pin them
+// bitwise against each other. The SIMD bodies hold the scalar kernels'
+// unrolled accumulators in `F64x4`/`F64x2` lane bundles: every
+// accumulator lane sees the same j-increasing add sequence and every
+// horizontal sum reduces left-to-right in the scalar order, so the f64
+// results are bitwise-identical by construction (elementwise update
+// loops are chunked by 4, which never changes any single element's
+// operation sequence).
+
+use super::{F64x2, F64x4};
+
+/// Scalar reference row-paired GEMV (the historical [`Mat::gemv_into`] body).
+pub fn gemv_into_scalar(m: &Mat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), m.cols, "gemv: dimension mismatch");
+    assert_eq!(y.len(), m.rows, "gemv: output mismatch");
+    let n = m.cols;
+    let chunks = n / 4;
+    let mut i = 0;
+    while i + 1 < m.rows {
+        let r0 = &m.data[i * n..(i + 1) * n];
+        let r1 = &m.data[(i + 1) * n..(i + 2) * n];
+        let mut a0 = [0.0f64; 4];
+        let mut a1 = [0.0f64; 4];
+        for c in 0..chunks {
+            let j = c * 4;
+            a0[0] += r0[j] * x[j];
+            a0[1] += r0[j + 1] * x[j + 1];
+            a0[2] += r0[j + 2] * x[j + 2];
+            a0[3] += r0[j + 3] * x[j + 3];
+            a1[0] += r1[j] * x[j];
+            a1[1] += r1[j + 1] * x[j + 1];
+            a1[2] += r1[j + 2] * x[j + 2];
+            a1[3] += r1[j + 3] * x[j + 3];
+        }
+        let mut s0 = a0[0] + a0[1] + a0[2] + a0[3];
+        let mut s1 = a1[0] + a1[1] + a1[2] + a1[3];
+        for j in chunks * 4..n {
+            s0 += r0[j] * x[j];
+            s1 += r1[j] * x[j];
+        }
+        y[i] = s0;
+        y[i + 1] = s1;
+        i += 2;
+    }
+    if i < m.rows {
+        y[i] = super::dot_scalar(m.row(i), x);
+    }
+}
+
+/// Lane-bundle row-paired GEMV: the scalar kernel's `a0`/`a1` accumulator
+/// arrays held in [`F64x4`] — bitwise-identical per row.
+pub fn gemv_into_simd(m: &Mat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), m.cols, "gemv: dimension mismatch");
+    assert_eq!(y.len(), m.rows, "gemv: output mismatch");
+    let n = m.cols;
+    let chunks = n / 4;
+    let mut i = 0;
+    while i + 1 < m.rows {
+        let r0 = &m.data[i * n..(i + 1) * n];
+        let r1 = &m.data[(i + 1) * n..(i + 2) * n];
+        let mut a0 = F64x4::zero();
+        let mut a1 = F64x4::zero();
+        for c in 0..chunks {
+            let j = c * 4;
+            let xv = F64x4::load(&x[j..j + 4]);
+            a0.mul_acc(F64x4::load(&r0[j..j + 4]), xv);
+            a1.mul_acc(F64x4::load(&r1[j..j + 4]), xv);
+        }
+        let mut s0 = a0.hsum();
+        let mut s1 = a1.hsum();
+        for j in chunks * 4..n {
+            s0 += r0[j] * x[j];
+            s1 += r1[j] * x[j];
+        }
+        y[i] = s0;
+        y[i + 1] = s1;
+        i += 2;
+    }
+    if i < m.rows {
+        y[i] = super::dot_simd(m.row(i), x);
+    }
+}
+
+/// Scalar reference transposed GEMV (the historical [`Mat::gemv_t_into`] body).
+pub fn gemv_t_into_scalar(m: &Mat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), m.rows, "gemv_t: dimension mismatch");
+    assert_eq!(y.len(), m.cols, "gemv_t: output mismatch");
+    y.fill(0.0);
+    let n = m.cols;
+    let mut i = 0;
+    while i + 1 < m.rows {
+        let (x0, x1) = (x[i], x[i + 1]);
+        let r0 = &m.data[i * n..(i + 1) * n];
+        let r1 = &m.data[(i + 1) * n..(i + 2) * n];
+        for ((yj, &a), &b) in y.iter_mut().zip(r0).zip(r1) {
+            *yj += x0 * a + x1 * b;
+        }
+        i += 2;
+    }
+    if i < m.rows {
+        super::axpy(x[i], m.row(i), y);
+    }
+}
+
+/// Lane-chunked transposed GEMV. The scatter update is elementwise per
+/// output element (`y[j] += x0·r0[j] + x1·r1[j]`), so chunking `y` by 4
+/// lanes never reorders any element's adds — bitwise-identical.
+pub fn gemv_t_into_simd(m: &Mat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), m.rows, "gemv_t: dimension mismatch");
+    assert_eq!(y.len(), m.cols, "gemv_t: output mismatch");
+    y.fill(0.0);
+    let n = m.cols;
+    let chunks = n / 4;
+    let mut i = 0;
+    while i + 1 < m.rows {
+        let (x0, x1) = (x[i], x[i + 1]);
+        let r0 = &m.data[i * n..(i + 1) * n];
+        let r1 = &m.data[(i + 1) * n..(i + 2) * n];
+        for c in 0..chunks {
+            let j = c * 4;
+            let ys = &mut y[j..j + 4];
+            let a = &r0[j..j + 4];
+            let b = &r1[j..j + 4];
+            ys[0] += x0 * a[0] + x1 * b[0];
+            ys[1] += x0 * a[1] + x1 * b[1];
+            ys[2] += x0 * a[2] + x1 * b[2];
+            ys[3] += x0 * a[3] + x1 * b[3];
+        }
+        for j in chunks * 4..n {
+            y[j] += x0 * r0[j] + x1 * r1[j];
+        }
+        i += 2;
+    }
+    if i < m.rows {
+        super::axpy(x[i], m.row(i), y);
+    }
+}
+
+/// Scalar reference fused gradient over rows `[lo, hi)` (the historical
+/// [`Mat::fused_grad_range`] body).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_grad_range_scalar(
+    m: &Mat,
+    w: &[f64],
+    y: &[f64],
+    g: &mut [f64],
+    resid_buf: &mut [f64],
+    lo: usize,
+    hi: usize,
+) -> f64 {
+    assert_eq!(w.len(), m.cols, "fused_grad: w mismatch");
+    assert_eq!(y.len(), m.rows, "fused_grad: y mismatch");
+    assert_eq!(g.len(), m.cols, "fused_grad: g mismatch");
+    assert_eq!(resid_buf.len(), m.rows, "fused_grad: buffer mismatch");
+    assert!(lo <= hi && hi <= m.rows, "fused_grad_range: bad range {lo}..{hi}");
+    let mut f = 0.0;
+    let mut i = lo;
+    while i + 1 < hi {
+        let row0 = m.row(i);
+        let row1 = &m.data[(i + 1) * m.cols..(i + 2) * m.cols];
+        // paired dot: one pass over w
+        let (mut d0a, mut d0b, mut d1a, mut d1b) = (0.0, 0.0, 0.0, 0.0);
+        let chunks = m.cols / 2;
+        for c in 0..chunks {
+            let j = 2 * c;
+            d0a += row0[j] * w[j];
+            d0b += row0[j + 1] * w[j + 1];
+            d1a += row1[j] * w[j];
+            d1b += row1[j + 1] * w[j + 1];
+        }
+        let mut r0 = d0a + d0b;
+        let mut r1 = d1a + d1b;
+        if m.cols % 2 == 1 {
+            let j = m.cols - 1;
+            r0 += row0[j] * w[j];
+            r1 += row1[j] * w[j];
+        }
+        r0 -= y[i];
+        r1 -= y[i + 1];
+        resid_buf[i] = r0;
+        resid_buf[i + 1] = r1;
+        f += r0 * r0 + r1 * r1;
+        // paired rank-1 update: one pass over g
+        for ((gj, &a), &b) in g.iter_mut().zip(row0).zip(row1) {
+            *gj += r0 * a + r1 * b;
+        }
+        i += 2;
+    }
+    if i < hi {
+        let row = m.row(i);
+        let r = super::dot_scalar(row, w) - y[i];
+        resid_buf[i] = r;
+        f += r * r;
+        super::axpy(r, row, g);
+    }
+    f
+}
+
+/// Lane-bundle fused gradient: the even/odd pair accumulators
+/// (`d0a`/`d0b`, `d1a`/`d1b`) held in [`F64x2`] (hsum = even + odd, the
+/// scalar order), rank-1 update lane-chunked by 4 (elementwise per `g[j]`)
+/// — bitwise-identical to [`fused_grad_range_scalar`].
+#[allow(clippy::too_many_arguments)]
+pub fn fused_grad_range_simd(
+    m: &Mat,
+    w: &[f64],
+    y: &[f64],
+    g: &mut [f64],
+    resid_buf: &mut [f64],
+    lo: usize,
+    hi: usize,
+) -> f64 {
+    assert_eq!(w.len(), m.cols, "fused_grad: w mismatch");
+    assert_eq!(y.len(), m.rows, "fused_grad: y mismatch");
+    assert_eq!(g.len(), m.cols, "fused_grad: g mismatch");
+    assert_eq!(resid_buf.len(), m.rows, "fused_grad: buffer mismatch");
+    assert!(lo <= hi && hi <= m.rows, "fused_grad_range: bad range {lo}..{hi}");
+    let mut f = 0.0;
+    let mut i = lo;
+    while i + 1 < hi {
+        let row0 = m.row(i);
+        let row1 = &m.data[(i + 1) * m.cols..(i + 2) * m.cols];
+        let mut d0 = F64x2::zero();
+        let mut d1 = F64x2::zero();
+        let chunks = m.cols / 2;
+        for c in 0..chunks {
+            let j = 2 * c;
+            let wv = F64x2::load(&w[j..j + 2]);
+            d0.mul_acc(F64x2::load(&row0[j..j + 2]), wv);
+            d1.mul_acc(F64x2::load(&row1[j..j + 2]), wv);
+        }
+        let mut r0 = d0.hsum();
+        let mut r1 = d1.hsum();
+        if m.cols % 2 == 1 {
+            let j = m.cols - 1;
+            r0 += row0[j] * w[j];
+            r1 += row1[j] * w[j];
+        }
+        r0 -= y[i];
+        r1 -= y[i + 1];
+        resid_buf[i] = r0;
+        resid_buf[i + 1] = r1;
+        f += r0 * r0 + r1 * r1;
+        let chunks4 = m.cols / 4;
+        for c in 0..chunks4 {
+            let j = c * 4;
+            let gs = &mut g[j..j + 4];
+            let a = &row0[j..j + 4];
+            let b = &row1[j..j + 4];
+            gs[0] += r0 * a[0] + r1 * b[0];
+            gs[1] += r0 * a[1] + r1 * b[1];
+            gs[2] += r0 * a[2] + r1 * b[2];
+            gs[3] += r0 * a[3] + r1 * b[3];
+        }
+        for j in chunks4 * 4..m.cols {
+            g[j] += r0 * row0[j] + r1 * row1[j];
+        }
+        i += 2;
+    }
+    if i < hi {
+        let row = m.row(i);
+        let r = super::dot_simd(row, w) - y[i];
+        resid_buf[i] = r;
+        f += r * r;
+        super::axpy(r, row, g);
+    }
+    f
+}
+
+/// Shared Gram scaffolding (triangle-balanced thread bands + mirror);
+/// the per-band rank-k update is the pluggable kernel.
+fn gram_with(m: &Mat, syrk: fn(&[f64], usize, usize, usize, usize, &mut [f64])) -> Mat {
+    let (n, p) = (m.rows, m.cols);
+    let mut g = Mat::zeros(p, p);
+    if p == 0 || n == 0 {
+        return g;
+    }
+    let flops = n * p * (p + 1) / 2;
+    let threads = if flops >= PAR_FLOP_THRESHOLD { n_threads().min(p) } else { 1 };
+    // band cut points with roughly equal upper-triangle area
+    let mut cuts = vec![0usize];
+    if threads > 1 {
+        let per = (p * (p + 1) / 2).div_ceil(threads);
+        let mut acc = 0usize;
+        for j in 0..p {
+            acc += p - j;
+            if acc >= per && j + 1 < p {
+                cuts.push(j + 1);
+                acc = 0;
+            }
+        }
+    }
+    cuts.push(p);
+    let a = &m.data;
+    // split g into disjoint row bands [cuts[b], cuts[b+1]), one thread each
+    let bands: Vec<(usize, usize, &mut [f64])> = {
+        let mut v = Vec::with_capacity(cuts.len() - 1);
+        let mut rest: &mut [f64] = &mut g.data;
+        for b in 0..cuts.len() - 1 {
+            let (jlo, jhi) = (cuts[b], cuts[b + 1]);
+            let (head, tail) = rest.split_at_mut((jhi - jlo) * p);
+            v.push((jlo, jhi, head));
+            rest = tail;
+        }
+        v
+    };
+    std::thread::scope(|s| {
+        for (jlo, jhi, band) in bands {
+            s.spawn(move || syrk(a, n, p, jlo, jhi, band));
+        }
+    });
+    // mirror the computed upper triangle into the lower one
+    for i in 0..p {
+        for j in i + 1..p {
+            let v = g.data[i * p + j];
+            g.data[j * p + i] = v;
+        }
+    }
+    g
+}
+
+/// Scalar reference Gram matrix (the historical [`Mat::gram`] body).
+pub fn gram_scalar(m: &Mat) -> Mat {
+    gram_with(m, syrk_band_scalar)
+}
+
+/// Gram matrix with the lane-chunked rank-k update. Each output element
+/// `G[j][l]` still accumulates over rows `i` in the same order (the
+/// chunking is across output columns), so the result is
+/// bitwise-identical to [`gram_scalar`].
+pub fn gram_simd(m: &Mat) -> Mat {
+    gram_with(m, syrk_band_simd)
+}
+
 /// Upper-triangle rank-k update for [`Mat::gram`]: accumulates
 /// `G[j][l] += A[i][j]·A[i][l]` for `l ≥ j`, `j ∈ [jlo, jhi)`, over all
 /// rows `i` — unit stride over both the data row and the output row, with
 /// the zero-skip that makes sparse-ish encode matrices cheap.
-fn syrk_band(a: &[f64], n_rows: usize, p: usize, jlo: usize, jhi: usize, out: &mut [f64]) {
+fn syrk_band_scalar(a: &[f64], n_rows: usize, p: usize, jlo: usize, jhi: usize, out: &mut [f64]) {
     for i in 0..n_rows {
         let row = &a[i * p..(i + 1) * p];
         for j in jlo..jhi {
@@ -590,6 +809,37 @@ fn syrk_band(a: &[f64], n_rows: usize, p: usize, jlo: usize, jhi: usize, out: &m
             let dst = &mut out[base + j..base + p];
             for (d, &s) in dst.iter_mut().zip(&row[j..]) {
                 *d += aij * s;
+            }
+        }
+    }
+}
+
+/// [`syrk_band_scalar`] with the inner axpy chunked into 4-wide lanes
+/// (elementwise per output element → bitwise-identical).
+fn syrk_band_simd(a: &[f64], n_rows: usize, p: usize, jlo: usize, jhi: usize, out: &mut [f64]) {
+    for i in 0..n_rows {
+        let row = &a[i * p..(i + 1) * p];
+        for j in jlo..jhi {
+            let aij = row[j];
+            if aij == 0.0 {
+                continue;
+            }
+            let base = (j - jlo) * p;
+            let dst = &mut out[base + j..base + p];
+            let src = &row[j..];
+            let len = dst.len();
+            let chunks = len / 4;
+            for c in 0..chunks {
+                let t = c * 4;
+                let d = &mut dst[t..t + 4];
+                let s = &src[t..t + 4];
+                d[0] += aij * s[0];
+                d[1] += aij * s[1];
+                d[2] += aij * s[2];
+                d[3] += aij * s[3];
+            }
+            for t in chunks * 4..len {
+                dst[t] += aij * src[t];
             }
         }
     }

@@ -25,7 +25,107 @@ pub use chol::{
 pub use eig::{sym_eigenvalues, sym_eigen};
 pub use fwht::{fwht_inplace, fwht_columns};
 pub use mat::Mat;
-pub use storage::{CsrMat, DataMat, StorageKind};
+pub use storage::{CsrMat, CsrMatF32, DataMat, MatF32, Precision, StorageKind};
+
+/// The kernel-equivalence testing surface: both compiled implementations
+/// of every hot kernel, regardless of whether the `simd` cargo feature is
+/// on. The public `Mat`/`CsrMat` methods dispatch to exactly one of these
+/// per build; `rust/tests/kernel_equivalence.rs` pins the two bitwise
+/// against each other in *both* builds, which is what lets the `simd`
+/// feature ship without touching a single golden trace.
+pub mod kernels {
+    pub use super::mat::{
+        fused_grad_range_scalar as mat_fused_grad_range_scalar,
+        fused_grad_range_simd as mat_fused_grad_range_simd,
+        gemv_into_scalar as mat_gemv_into_scalar, gemv_into_simd as mat_gemv_into_simd,
+        gemv_t_into_scalar as mat_gemv_t_into_scalar, gemv_t_into_simd as mat_gemv_t_into_simd,
+        gram_scalar as mat_gram_scalar, gram_simd as mat_gram_simd,
+    };
+    pub use super::storage::{
+        csr_fused_grad_range_scalar, csr_fused_grad_range_simd, csr_gemv_into_scalar,
+        csr_gemv_into_simd, csr_gemv_t_into_scalar, csr_gemv_t_into_simd,
+    };
+    pub use super::{dot_scalar, dot_simd};
+
+    /// Whether this build's public kernel surface dispatches to the SIMD
+    /// lane implementations (`--features simd`) or the scalar reference.
+    pub fn simd_active() -> bool {
+        cfg!(feature = "simd")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD lane bundles
+// ---------------------------------------------------------------------------
+//
+// Stable-Rust "portable SIMD": fixed-width lane arrays with `#[inline(always)]`
+// elementwise ops, shaped so LLVM's autovectorizer maps each bundle onto one
+// vector register (4×f64 = AVX2 ymm / 2×NEON q, 2×f64 = SSE2 xmm / NEON q).
+// The horizontal sums reduce lanes in the *same left-to-right order* as the
+// scalar kernels' unrolled accumulators, which is the whole bitwise contract:
+// a lane bundle is just the scalar kernel's accumulator array made explicit.
+
+/// 4-wide f64 lane bundle (mirrors the mod-4 accumulators of [`dot`]).
+#[derive(Clone, Copy)]
+pub(crate) struct F64x4(pub(crate) [f64; 4]);
+
+impl F64x4 {
+    #[inline(always)]
+    pub(crate) fn zero() -> Self {
+        F64x4([0.0; 4])
+    }
+
+    #[inline(always)]
+    pub(crate) fn load(s: &[f64]) -> Self {
+        F64x4([s[0], s[1], s[2], s[3]])
+    }
+
+    /// `self[l] += a[l] * b[l]` per lane.
+    #[inline(always)]
+    pub(crate) fn mul_acc(&mut self, a: F64x4, b: F64x4) {
+        self.0[0] += a.0[0] * b.0[0];
+        self.0[1] += a.0[1] * b.0[1];
+        self.0[2] += a.0[2] * b.0[2];
+        self.0[3] += a.0[3] * b.0[3];
+    }
+
+    /// Left-associated lane sum — the exact reduction order of the scalar
+    /// kernels' `acc[0] + acc[1] + acc[2] + acc[3]`.
+    #[inline(always)]
+    pub(crate) fn hsum(self) -> f64 {
+        self.0[0] + self.0[1] + self.0[2] + self.0[3]
+    }
+}
+
+/// 2-wide f64 lane bundle (mirrors the even/odd pair accumulators of the
+/// fused gradient kernel).
+#[derive(Clone, Copy)]
+pub(crate) struct F64x2(pub(crate) [f64; 2]);
+
+impl F64x2 {
+    #[inline(always)]
+    pub(crate) fn zero() -> Self {
+        F64x2([0.0; 2])
+    }
+
+    #[inline(always)]
+    pub(crate) fn load(s: &[f64]) -> Self {
+        F64x2([s[0], s[1]])
+    }
+
+    /// `self[l] += a[l] * b[l]` per lane.
+    #[inline(always)]
+    pub(crate) fn mul_acc(&mut self, a: F64x2, b: F64x2) {
+        self.0[0] += a.0[0] * b.0[0];
+        self.0[1] += a.0[1] * b.0[1];
+    }
+
+    /// Left-associated lane sum (`d_even + d_odd`).
+    #[inline(always)]
+    pub(crate) fn hsum(self) -> f64 {
+        self.0[0] + self.0[1]
+    }
+}
 
 /// Euclidean norm of a vector.
 pub fn norm2(v: &[f64]) -> f64 {
@@ -66,11 +166,23 @@ pub(crate) fn spectral_power_iteration(
     lambda
 }
 
-/// Dot product.
+/// Dot product. Dispatches to the lane-bundle kernel under
+/// `--features simd`, the scalar reference otherwise; both produce
+/// bitwise-identical results (same mod-4 accumulation classes, same
+/// left-associated lane reduction).
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    if cfg!(feature = "simd") {
+        dot_simd(a, b)
+    } else {
+        dot_scalar(a, b)
+    }
+}
+
+/// Scalar reference dot product: 4-way unrolled accumulation —
+/// measurably faster than naive fold and more accurate than a single
+/// serial accumulator.
+pub fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len(), "dot: length mismatch");
-    // 4-way unrolled accumulation: measurably faster than naive fold and
-    // more accurate than a single serial accumulator.
     let mut acc = [0.0f64; 4];
     let chunks = a.len() / 4;
     for i in 0..chunks {
@@ -81,6 +193,26 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
         acc[3] += a[j + 3] * b[j + 3];
     }
     let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Lane-bundle dot product: the 4 unrolled accumulators of
+/// [`dot_scalar`] held in one [`F64x4`], so each accumulator lane sees
+/// the same `j`-increasing sequence of adds and the horizontal sum
+/// reduces in the same left-to-right order — bitwise-identical by
+/// construction.
+pub fn dot_simd(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    let mut acc = F64x4::zero();
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc.mul_acc(F64x4::load(&a[j..j + 4]), F64x4::load(&b[j..j + 4]));
+    }
+    let mut s = acc.hsum();
     for j in chunks * 4..a.len() {
         s += a[j] * b[j];
     }
@@ -139,5 +271,14 @@ mod tests {
     #[should_panic(expected = "length mismatch")]
     fn dot_length_mismatch_panics() {
         dot(&[1.0], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn dot_simd_bitwise_matches_scalar() {
+        for len in [0usize, 1, 3, 4, 7, 16, 37, 128] {
+            let a: Vec<f64> = (0..len).map(|i| (i as f64 * 0.37).sin() * 1e3).collect();
+            let b: Vec<f64> = (0..len).map(|i| (i as f64 * 0.61).cos()).collect();
+            assert_eq!(dot_scalar(&a, &b).to_bits(), dot_simd(&a, &b).to_bits());
+        }
     }
 }

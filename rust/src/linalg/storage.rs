@@ -71,6 +71,55 @@ impl fmt::Display for StorageKind {
 }
 
 // ---------------------------------------------------------------------------
+// Precision
+// ---------------------------------------------------------------------------
+
+/// Shard numeric precision selector (CLI/config surface: `--precision`).
+///
+/// Under [`Precision::F32`] workers hold encoded shards in f32 and compute
+/// shard gradients in f32, while the leader keeps accumulating gradients
+/// and taking optimizer steps in f64 — mixed precision in the sense that
+/// Theorem 1's approximation-neighborhood guarantee tolerates: the worker
+/// rounding error lands inside the same controllable neighborhood the
+/// encoding already converges to (pinned by the convergence-quality test
+/// in `rust/tests/kernel_equivalence.rs`). Shard memory and bandwidth
+/// halve; the virtual flop model is adjusted accordingly
+/// ([`DataMat::gemv_madds`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full f64 everywhere (the historical mode; bit-for-bit traces).
+    #[default]
+    F64,
+    /// f32 shard storage + worker compute, f64 leader accumulation.
+    F32,
+}
+
+impl Precision {
+    /// Parse the CLI forms `f64`, `f32`.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "f64" => Precision::F64,
+            "f32" => Precision::F32,
+            other => bail!("unknown precision {other:?} (f64|f32)"),
+        })
+    }
+
+    /// Canonical CLI/table label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+// ---------------------------------------------------------------------------
 // CsrMat
 // ---------------------------------------------------------------------------
 
@@ -264,12 +313,14 @@ impl CsrMat {
     }
 
     /// `y = self * x`; per-row accumulation mirrors [`dot`](super::dot).
+    /// Dispatches to the 4-way-unrolled entry loop under
+    /// `--features simd` (same sequential accumulation-class order →
+    /// bitwise-identical; gather kernels vectorize through ILP, not lanes).
     pub fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
-        assert_eq!(x.len(), self.cols, "gemv: dimension mismatch");
-        assert_eq!(y.len(), self.rows, "gemv: output mismatch");
-        for (i, yi) in y.iter_mut().enumerate() {
-            let (cols, vals) = self.row(i);
-            *yi = row_dot4(cols, vals, x, self.cols);
+        if cfg!(feature = "simd") {
+            csr_gemv_into_simd(self, x, y)
+        } else {
+            csr_gemv_into_scalar(self, x, y)
         }
     }
 
@@ -282,16 +333,10 @@ impl CsrMat {
 
     /// `y = selfᵀ x`; mirrors the dense row-pair folded scatter.
     pub fn gemv_t_into(&self, x: &[f64], y: &mut [f64]) {
-        assert_eq!(x.len(), self.rows, "gemv_t: dimension mismatch");
-        assert_eq!(y.len(), self.cols, "gemv_t: output mismatch");
-        y.fill(0.0);
-        let mut i = 0;
-        while i + 1 < self.rows {
-            scatter_pair(self.row(i), self.row(i + 1), x[i], x[i + 1], y);
-            i += 2;
-        }
-        if i < self.rows {
-            scatter1(x[i], self.row(i), y);
+        if cfg!(feature = "simd") {
+            csr_gemv_t_into_simd(self, x, y)
+        } else {
+            csr_gemv_t_into_scalar(self, x, y)
         }
     }
 
@@ -314,34 +359,11 @@ impl CsrMat {
         lo: usize,
         hi: usize,
     ) -> f64 {
-        assert_eq!(w.len(), self.cols, "fused_grad: w mismatch");
-        assert_eq!(y.len(), self.rows, "fused_grad: y mismatch");
-        assert_eq!(g.len(), self.cols, "fused_grad: g mismatch");
-        assert_eq!(resid_buf.len(), self.rows, "fused_grad: buffer mismatch");
-        assert!(lo <= hi && hi <= self.rows, "fused_grad_range: bad range {lo}..{hi}");
-        let mut f = 0.0;
-        let mut i = lo;
-        while i + 1 < hi {
-            let r0 = self.row(i);
-            let r1 = self.row(i + 1);
-            let mut res0 = row_dot2(r0.0, r0.1, w, self.cols);
-            let mut res1 = row_dot2(r1.0, r1.1, w, self.cols);
-            res0 -= y[i];
-            res1 -= y[i + 1];
-            resid_buf[i] = res0;
-            resid_buf[i + 1] = res1;
-            f += res0 * res0 + res1 * res1;
-            scatter_pair(r0, r1, res0, res1, g);
-            i += 2;
+        if cfg!(feature = "simd") {
+            csr_fused_grad_range_simd(self, w, y, g, resid_buf, lo, hi)
+        } else {
+            csr_fused_grad_range_scalar(self, w, y, g, resid_buf, lo, hi)
         }
-        if i < hi {
-            let (cols, vals) = self.row(i);
-            let r = row_dot4(cols, vals, w, self.cols) - y[i];
-            resid_buf[i] = r;
-            f += r * r;
-            scatter1(r, (cols, vals), g);
-        }
-        f
     }
 
     /// Gram matrix `selfᵀ self` as a dense `cols × cols` matrix
@@ -371,8 +393,154 @@ impl CsrMat {
 }
 
 // ---------------------------------------------------------------------------
-// Mirrored row kernels
+// Mirrored row kernels — scalar reference + unrolled ("simd") variants
 // ---------------------------------------------------------------------------
+//
+// CSR products are gather kernels: each stored entry folds into an
+// accumulation class chosen by its *column* (`col % 4` / `col % 2`), so a
+// lane-bundle rewrite would reorder the per-class add sequence and break
+// the bitwise dense≡sparse contract. The `simd`-feature variants instead
+// 4-way unroll the entry loop — the operation sequence is untouched
+// (bitwise-identical by construction), but the index/load work of four
+// entries overlaps, which is where gather throughput actually comes from.
+// Both variants of every kernel are compiled in every build and exposed
+// through `linalg::kernels` for the equivalence suite.
+
+/// Scalar reference CSR GEMV (per-row [`row_dot4`]).
+pub fn csr_gemv_into_scalar(m: &CsrMat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), m.cols, "gemv: dimension mismatch");
+    assert_eq!(y.len(), m.rows, "gemv: output mismatch");
+    for (i, yi) in y.iter_mut().enumerate() {
+        let (cols, vals) = m.row(i);
+        *yi = row_dot4(cols, vals, x, m.cols);
+    }
+}
+
+/// Unrolled CSR GEMV (per-row [`row_dot4_x4`]) — bitwise-identical.
+pub fn csr_gemv_into_simd(m: &CsrMat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), m.cols, "gemv: dimension mismatch");
+    assert_eq!(y.len(), m.rows, "gemv: output mismatch");
+    for (i, yi) in y.iter_mut().enumerate() {
+        let (cols, vals) = m.row(i);
+        *yi = row_dot4_x4(cols, vals, x, m.cols);
+    }
+}
+
+/// Scalar reference CSR transposed GEMV (row-pair folded scatter).
+pub fn csr_gemv_t_into_scalar(m: &CsrMat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), m.rows, "gemv_t: dimension mismatch");
+    assert_eq!(y.len(), m.cols, "gemv_t: output mismatch");
+    y.fill(0.0);
+    let mut i = 0;
+    while i + 1 < m.rows {
+        scatter_pair(m.row(i), m.row(i + 1), x[i], x[i + 1], y);
+        i += 2;
+    }
+    if i < m.rows {
+        scatter1(x[i], m.row(i), y);
+    }
+}
+
+/// Unrolled CSR transposed GEMV: same merged pair scatter (its order is
+/// data-dependent and must not change), odd-row tail via the unrolled
+/// single-row scatter — bitwise-identical.
+pub fn csr_gemv_t_into_simd(m: &CsrMat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), m.rows, "gemv_t: dimension mismatch");
+    assert_eq!(y.len(), m.cols, "gemv_t: output mismatch");
+    y.fill(0.0);
+    let mut i = 0;
+    while i + 1 < m.rows {
+        scatter_pair(m.row(i), m.row(i + 1), x[i], x[i + 1], y);
+        i += 2;
+    }
+    if i < m.rows {
+        scatter1_x4(x[i], m.row(i), y);
+    }
+}
+
+/// Scalar reference CSR fused gradient over rows `[lo, hi)` (the
+/// historical [`CsrMat::fused_grad_range`] body).
+#[allow(clippy::too_many_arguments)]
+pub fn csr_fused_grad_range_scalar(
+    m: &CsrMat,
+    w: &[f64],
+    y: &[f64],
+    g: &mut [f64],
+    resid_buf: &mut [f64],
+    lo: usize,
+    hi: usize,
+) -> f64 {
+    assert_eq!(w.len(), m.cols, "fused_grad: w mismatch");
+    assert_eq!(y.len(), m.rows, "fused_grad: y mismatch");
+    assert_eq!(g.len(), m.cols, "fused_grad: g mismatch");
+    assert_eq!(resid_buf.len(), m.rows, "fused_grad: buffer mismatch");
+    assert!(lo <= hi && hi <= m.rows, "fused_grad_range: bad range {lo}..{hi}");
+    let mut f = 0.0;
+    let mut i = lo;
+    while i + 1 < hi {
+        let r0 = m.row(i);
+        let r1 = m.row(i + 1);
+        let mut res0 = row_dot2(r0.0, r0.1, w, m.cols);
+        let mut res1 = row_dot2(r1.0, r1.1, w, m.cols);
+        res0 -= y[i];
+        res1 -= y[i + 1];
+        resid_buf[i] = res0;
+        resid_buf[i + 1] = res1;
+        f += res0 * res0 + res1 * res1;
+        scatter_pair(r0, r1, res0, res1, g);
+        i += 2;
+    }
+    if i < hi {
+        let (cols, vals) = m.row(i);
+        let r = row_dot4(cols, vals, w, m.cols) - y[i];
+        resid_buf[i] = r;
+        f += r * r;
+        scatter1(r, (cols, vals), g);
+    }
+    f
+}
+
+/// Unrolled CSR fused gradient ([`row_dot2_x4`]/[`row_dot4_x4`] dots,
+/// shared pair scatter) — bitwise-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn csr_fused_grad_range_simd(
+    m: &CsrMat,
+    w: &[f64],
+    y: &[f64],
+    g: &mut [f64],
+    resid_buf: &mut [f64],
+    lo: usize,
+    hi: usize,
+) -> f64 {
+    assert_eq!(w.len(), m.cols, "fused_grad: w mismatch");
+    assert_eq!(y.len(), m.rows, "fused_grad: y mismatch");
+    assert_eq!(g.len(), m.cols, "fused_grad: g mismatch");
+    assert_eq!(resid_buf.len(), m.rows, "fused_grad: buffer mismatch");
+    assert!(lo <= hi && hi <= m.rows, "fused_grad_range: bad range {lo}..{hi}");
+    let mut f = 0.0;
+    let mut i = lo;
+    while i + 1 < hi {
+        let r0 = m.row(i);
+        let r1 = m.row(i + 1);
+        let mut res0 = row_dot2_x4(r0.0, r0.1, w, m.cols);
+        let mut res1 = row_dot2_x4(r1.0, r1.1, w, m.cols);
+        res0 -= y[i];
+        res1 -= y[i + 1];
+        resid_buf[i] = res0;
+        resid_buf[i + 1] = res1;
+        f += res0 * res0 + res1 * res1;
+        scatter_pair(r0, r1, res0, res1, g);
+        i += 2;
+    }
+    if i < hi {
+        let (cols, vals) = m.row(i);
+        let r = row_dot4_x4(cols, vals, w, m.cols) - y[i];
+        resid_buf[i] = r;
+        f += r * r;
+        scatter1_x4(r, (cols, vals), g);
+    }
+    f
+}
 
 /// Sparse row dot mirroring [`dot`](super::dot)'s mod-4 accumulators:
 /// entries with `col < 4·(n_cols/4)` fold into `acc[col % 4]` in column
@@ -461,6 +629,549 @@ fn scatter_pair(r0: (&[u32], &[f64]), r1: (&[u32], &[f64]), c0: f64, c1: f64, ou
     }
 }
 
+/// [`row_dot4`] with the entry loop unrolled by 4. Entries still fold
+/// into `acc[col % 4]` strictly in storage order — the unrolled body is
+/// the same four sequential statements, so the bits cannot differ; the
+/// win is overlapped index decode + gather loads. `partition_point` (the
+/// columns are strictly increasing) finds the accumulator/tail boundary
+/// the scalar loop discovers incrementally.
+fn row_dot4_x4(cols: &[u32], vals: &[f64], w: &[f64], n_cols: usize) -> f64 {
+    let lim = (n_cols / 4) * 4;
+    let split = cols.partition_point(|&c| (c as usize) < lim);
+    let mut acc = [0.0f64; 4];
+    let mut t = 0;
+    while t + 4 <= split {
+        let c0 = cols[t] as usize;
+        let c1 = cols[t + 1] as usize;
+        let c2 = cols[t + 2] as usize;
+        let c3 = cols[t + 3] as usize;
+        acc[c0 % 4] += vals[t] * w[c0];
+        acc[c1 % 4] += vals[t + 1] * w[c1];
+        acc[c2 % 4] += vals[t + 2] * w[c2];
+        acc[c3 % 4] += vals[t + 3] * w[c3];
+        t += 4;
+    }
+    while t < split {
+        let c = cols[t] as usize;
+        acc[c % 4] += vals[t] * w[c];
+        t += 1;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    while t < cols.len() {
+        let c = cols[t] as usize;
+        s += vals[t] * w[c];
+        t += 1;
+    }
+    s
+}
+
+/// [`row_dot2`] with the entry loop unrolled by 4 (same even/odd
+/// accumulation classes in storage order — bitwise-identical).
+fn row_dot2_x4(cols: &[u32], vals: &[f64], w: &[f64], n_cols: usize) -> f64 {
+    let lim = (n_cols / 2) * 2;
+    let split = cols.partition_point(|&c| (c as usize) < lim);
+    let (mut da, mut db) = (0.0f64, 0.0f64);
+    let mut t = 0;
+    while t + 4 <= split {
+        for u in t..t + 4 {
+            let c = cols[u] as usize;
+            if c % 2 == 0 {
+                da += vals[u] * w[c];
+            } else {
+                db += vals[u] * w[c];
+            }
+        }
+        t += 4;
+    }
+    while t < split {
+        let c = cols[t] as usize;
+        if c % 2 == 0 {
+            da += vals[t] * w[c];
+        } else {
+            db += vals[t] * w[c];
+        }
+        t += 1;
+    }
+    let mut s = da + db;
+    while t < cols.len() {
+        let c = cols[t] as usize;
+        s += vals[t] * w[c];
+        t += 1;
+    }
+    s
+}
+
+/// [`scatter1`] with the entry loop unrolled by 4 (each output element
+/// gets exactly one identical add — bitwise-identical).
+fn scatter1_x4(coef: f64, row: (&[u32], &[f64]), out: &mut [f64]) {
+    let (cols, vals) = row;
+    let chunks = cols.len() / 4;
+    for ch in 0..chunks {
+        let t = ch * 4;
+        out[cols[t] as usize] += coef * vals[t];
+        out[cols[t + 1] as usize] += coef * vals[t + 1];
+        out[cols[t + 2] as usize] += coef * vals[t + 2];
+        out[cols[t + 3] as usize] += coef * vals[t + 3];
+    }
+    for t in chunks * 4..cols.len() {
+        out[cols[t] as usize] += coef * vals[t];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 mixed-precision containers
+// ---------------------------------------------------------------------------
+//
+// Shard-only storage for `--precision f32`: the matrices live in f32 and
+// the worker kernels accumulate in f32 (8-wide accumulator classes — twice
+// the lanes of the f64 kernels in the same vector width), but every kernel
+// keeps the f64 slice signatures of its `Mat`/`CsrMat` counterpart. The
+// iterate `w` is narrowed once per call, the local gradient is accumulated
+// in an f32 scratch and widened *once* at the end, and residuals/objective
+// are widened immediately — so the pool, engines, and optimizers need no
+// protocol changes, and the leader-side f64 accumulation the mixed-
+// precision contract promises happens exactly where it always did.
+
+/// `a·b` with 8-wide f32 accumulator classes (pairwise lane reduction —
+/// there is no bitwise contract to preserve on the f32 path, so the
+/// reduction tree favors accuracy and vector width).
+fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for i in 0..chunks {
+        let j = i * 8;
+        for l in 0..8 {
+            acc[l] += a[j + l] * b[j + l];
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for j in chunks * 8..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+fn narrow(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+/// Dense row-major `rows × cols` matrix of `f32` — the `--precision f32`
+/// shard payload ([`DataMat::DenseF32`]). Half the bytes and memory
+/// traffic of [`Mat`] on the same shape.
+#[derive(Clone, PartialEq)]
+pub struct MatF32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for MatF32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "MatF32({}x{})", self.rows, self.cols)
+    }
+}
+
+impl MatF32 {
+    /// Narrow a dense f64 matrix (round-to-nearest per entry).
+    pub fn from_f64(m: &Mat) -> Self {
+        MatF32 { rows: m.rows(), cols: m.cols(), data: m.data().iter().map(|&v| v as f32).collect() }
+    }
+
+    /// Widen back to f64 (exact — every f32 is representable).
+    pub fn to_f64(&self) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.iter().map(|&v| v as f64).collect())
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Element `(i, j)`, widened.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] as f64
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Resident payload bytes.
+    pub fn mem_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Contiguous row band `[lo, hi)` as a new matrix.
+    pub fn row_band(&self, lo: usize, hi: usize) -> MatF32 {
+        assert!(lo <= hi && hi <= self.rows, "row_band: bad range {lo}..{hi}");
+        MatF32 {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// Zero-pad to `new_rows` rows (exact no-op for gradient/objective).
+    pub fn pad_rows(&self, new_rows: usize) -> MatF32 {
+        assert!(new_rows >= self.rows, "pad_rows: cannot shrink");
+        let mut data = self.data.clone();
+        data.resize(new_rows * self.cols, 0.0);
+        MatF32 { rows: new_rows, cols: self.cols, data }
+    }
+
+    /// Stack matrices vertically.
+    pub fn vstack(blocks: &[&MatF32]) -> MatF32 {
+        assert!(!blocks.is_empty(), "vstack: empty input");
+        let cols = blocks[0].cols;
+        assert!(blocks.iter().all(|b| b.cols == cols), "vstack: column mismatch");
+        let rows = blocks.iter().map(|b| b.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for b in blocks {
+            data.extend_from_slice(&b.data);
+        }
+        MatF32 { rows, cols, data }
+    }
+
+    /// `y = self * x` (f32 row dots, widened per element).
+    pub fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "gemv: dimension mismatch");
+        assert_eq!(y.len(), self.rows, "gemv: output mismatch");
+        let xf = narrow(x);
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = dot_f32(self.row(i), &xf) as f64;
+        }
+    }
+
+    /// `y = selfᵀ x` (f32 scatter into an f32 scratch, widened once).
+    pub fn gemv_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "gemv_t: dimension mismatch");
+        assert_eq!(y.len(), self.cols, "gemv_t: output mismatch");
+        let mut yf = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i] as f32;
+            if xi == 0.0 {
+                continue;
+            }
+            for (yj, &a) in yf.iter_mut().zip(self.row(i)) {
+                *yj += xi * a;
+            }
+        }
+        for (yo, &v) in y.iter_mut().zip(&yf) {
+            *yo = v as f64;
+        }
+    }
+
+    /// Fused worker gradient in f32; see [`Mat::fused_grad`].
+    pub fn fused_grad(&self, w: &[f64], y: &[f64], g: &mut [f64], resid_buf: &mut [f64]) -> f64 {
+        g.fill(0.0);
+        self.fused_grad_range(w, y, g, resid_buf, 0, self.rows)
+    }
+
+    /// Row-restricted accumulating fused gradient; same composition
+    /// contract as [`Mat::fused_grad_range`] (the f32 scratch is local to
+    /// one call, its widened contribution is *added* into `g`).
+    pub fn fused_grad_range(
+        &self,
+        w: &[f64],
+        y: &[f64],
+        g: &mut [f64],
+        resid_buf: &mut [f64],
+        lo: usize,
+        hi: usize,
+    ) -> f64 {
+        assert_eq!(w.len(), self.cols, "fused_grad: w mismatch");
+        assert_eq!(y.len(), self.rows, "fused_grad: y mismatch");
+        assert_eq!(g.len(), self.cols, "fused_grad: g mismatch");
+        assert_eq!(resid_buf.len(), self.rows, "fused_grad: buffer mismatch");
+        assert!(lo <= hi && hi <= self.rows, "fused_grad_range: bad range {lo}..{hi}");
+        let wf = narrow(w);
+        let mut gf = vec![0.0f32; self.cols];
+        let mut f = 0.0f64;
+        for i in lo..hi {
+            let row = self.row(i);
+            let r = dot_f32(row, &wf) - y[i] as f32;
+            let rd = r as f64;
+            resid_buf[i] = rd;
+            f += rd * rd;
+            for (gj, &a) in gf.iter_mut().zip(row) {
+                *gj += r * a;
+            }
+        }
+        for (go, &v) in g.iter_mut().zip(&gf) {
+            *go += v as f64;
+        }
+        f
+    }
+
+    /// Gram matrix `selfᵀ self`, widened to f64 (cold path — spectrum
+    /// figures and step-size bounds, not the per-round worker loop).
+    pub fn gram(&self) -> Mat {
+        self.to_f64().gram()
+    }
+}
+
+/// Compressed-sparse-rows `rows × cols` matrix of `f32` — the
+/// `--precision f32` sparse shard payload ([`DataMat::CsrF32`]).
+///
+/// Unlike [`CsrMat`], stored values *may* be zero: narrowing can round a
+/// tiny f64 to `0.0f32`, and silently dropping those entries would change
+/// the nnz structure (and the nnz-proportional flop model) between the
+/// two precisions of the same shard. This container is kernel-only, so no
+/// invariant depends on nonzero values; [`CsrMatF32::to_f64`] drops them
+/// when widening back into the invariant-carrying [`CsrMat`].
+#[derive(Clone, PartialEq)]
+pub struct CsrMatF32 {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl fmt::Debug for CsrMatF32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "CsrMatF32({}x{}, nnz={})", self.rows, self.cols, self.nnz())
+    }
+}
+
+impl CsrMatF32 {
+    /// Narrow an f64 CSR matrix (structure preserved entry-for-entry).
+    pub fn from_f64(m: &CsrMat) -> Self {
+        CsrMatF32 {
+            rows: m.rows(),
+            cols: m.cols(),
+            row_ptr: m.row_ptr.clone(),
+            col_idx: m.col_idx.clone(),
+            vals: m.vals.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Compress a dense f32 matrix (drops exact zeros).
+    pub fn from_dense_f32(m: &MatF32) -> Self {
+        let (rows, cols) = (m.rows(), m.cols());
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        row_ptr.push(0);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..rows {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        CsrMatF32 { rows, cols, row_ptr, col_idx, vals }
+    }
+
+    /// Widen back to an f64 [`CsrMat`], dropping any entries narrowing
+    /// rounded to zero (restores the no-stored-zeros invariant).
+    pub fn to_f64(&self) -> CsrMat {
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::with_capacity(self.col_idx.len());
+        let mut vals = Vec::with_capacity(self.vals.len());
+        for i in 0..self.rows {
+            let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            for t in lo..hi {
+                if self.vals[t] != 0.0 {
+                    col_idx.push(self.col_idx[t]);
+                    vals.push(self.vals[t] as f64);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        CsrMat::from_raw(self.rows, self.cols, row_ptr, col_idx, vals)
+    }
+
+    /// Expand to a dense [`MatF32`].
+    pub fn to_dense_f32(&self) -> MatF32 {
+        let mut data = vec![0.0f32; self.rows * self.cols];
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                data[i * self.cols + *c as usize] = *v;
+            }
+        }
+        MatF32 { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored-entry count.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Resident bytes of the three CSR arrays.
+    pub fn mem_bytes(&self) -> usize {
+        self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.col_idx.len() * std::mem::size_of::<u32>()
+            + self.vals.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Row `i` as `(column indices, values)` slices.
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Element `(i, j)`, widened (binary search within the row).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&(j as u32)) {
+            Ok(t) => vals[t] as f64,
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Contiguous row band `[lo, hi)` as a new CSR matrix.
+    pub fn row_band(&self, lo: usize, hi: usize) -> CsrMatF32 {
+        assert!(lo <= hi && hi <= self.rows, "row_band: bad range {lo}..{hi}");
+        let (plo, phi) = (self.row_ptr[lo], self.row_ptr[hi]);
+        let row_ptr = self.row_ptr[lo..=hi].iter().map(|p| p - plo).collect();
+        CsrMatF32 {
+            rows: hi - lo,
+            cols: self.cols,
+            row_ptr,
+            col_idx: self.col_idx[plo..phi].to_vec(),
+            vals: self.vals[plo..phi].to_vec(),
+        }
+    }
+
+    /// Zero-pad to `new_rows` rows (empty rows).
+    pub fn pad_rows(&self, new_rows: usize) -> CsrMatF32 {
+        assert!(new_rows >= self.rows, "pad_rows: cannot shrink");
+        let mut out = self.clone();
+        out.row_ptr.resize(new_rows + 1, *self.row_ptr.last().unwrap());
+        out.rows = new_rows;
+        out
+    }
+
+    /// Stack matrices vertically.
+    pub fn vstack(blocks: &[&CsrMatF32]) -> CsrMatF32 {
+        assert!(!blocks.is_empty(), "vstack: empty input");
+        let cols = blocks[0].cols;
+        assert!(blocks.iter().all(|b| b.cols == cols), "vstack: column mismatch");
+        let rows = blocks.iter().map(|b| b.rows).sum();
+        let nnz = blocks.iter().map(|b| b.vals.len()).sum();
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        row_ptr.push(0usize);
+        for b in blocks {
+            let base = *row_ptr.last().unwrap();
+            row_ptr.extend(b.row_ptr[1..].iter().map(|p| p + base));
+            col_idx.extend_from_slice(&b.col_idx);
+            vals.extend_from_slice(&b.vals);
+        }
+        CsrMatF32 { rows, cols, row_ptr, col_idx, vals }
+    }
+
+    /// `y = self * x` (sequential f32 row dots, widened per element).
+    pub fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "gemv: dimension mismatch");
+        assert_eq!(y.len(), self.rows, "gemv: output mismatch");
+        let xf = narrow(x);
+        for (i, yi) in y.iter_mut().enumerate() {
+            let (cols, vals) = self.row(i);
+            let mut s = 0.0f32;
+            for (c, v) in cols.iter().zip(vals) {
+                s += v * xf[*c as usize];
+            }
+            *yi = s as f64;
+        }
+    }
+
+    /// `y = selfᵀ x` (f32 scatter into an f32 scratch, widened once).
+    pub fn gemv_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "gemv_t: dimension mismatch");
+        assert_eq!(y.len(), self.cols, "gemv_t: output mismatch");
+        let mut yf = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i] as f32;
+            if xi == 0.0 {
+                continue;
+            }
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                yf[*c as usize] += xi * v;
+            }
+        }
+        for (yo, &v) in y.iter_mut().zip(&yf) {
+            *yo = v as f64;
+        }
+    }
+
+    /// Fused worker gradient in f32; see [`Mat::fused_grad`].
+    pub fn fused_grad(&self, w: &[f64], y: &[f64], g: &mut [f64], resid_buf: &mut [f64]) -> f64 {
+        g.fill(0.0);
+        self.fused_grad_range(w, y, g, resid_buf, 0, self.rows)
+    }
+
+    /// Row-restricted accumulating fused gradient in f32; same
+    /// composition contract as [`Mat::fused_grad_range`].
+    pub fn fused_grad_range(
+        &self,
+        w: &[f64],
+        y: &[f64],
+        g: &mut [f64],
+        resid_buf: &mut [f64],
+        lo: usize,
+        hi: usize,
+    ) -> f64 {
+        assert_eq!(w.len(), self.cols, "fused_grad: w mismatch");
+        assert_eq!(y.len(), self.rows, "fused_grad: y mismatch");
+        assert_eq!(g.len(), self.cols, "fused_grad: g mismatch");
+        assert_eq!(resid_buf.len(), self.rows, "fused_grad: buffer mismatch");
+        assert!(lo <= hi && hi <= self.rows, "fused_grad_range: bad range {lo}..{hi}");
+        let wf = narrow(w);
+        let mut gf = vec![0.0f32; self.cols];
+        let mut f = 0.0f64;
+        for i in lo..hi {
+            let (cols, vals) = self.row(i);
+            let mut s = 0.0f32;
+            for (c, v) in cols.iter().zip(vals) {
+                s += v * wf[*c as usize];
+            }
+            let r = s - y[i] as f32;
+            let rd = r as f64;
+            resid_buf[i] = rd;
+            f += rd * rd;
+            for (c, v) in cols.iter().zip(vals) {
+                gf[*c as usize] += r * v;
+            }
+        }
+        for (go, &v) in g.iter_mut().zip(&gf) {
+            *go += v as f64;
+        }
+        f
+    }
+
+    /// Gram matrix `selfᵀ self`, widened to f64 (cold path).
+    pub fn gram(&self) -> Mat {
+        self.to_dense_f32().gram()
+    }
+}
+
 // ---------------------------------------------------------------------------
 // DataMat
 // ---------------------------------------------------------------------------
@@ -474,6 +1185,10 @@ pub enum DataMat {
     Dense(Mat),
     /// Compressed sparse rows.
     Csr(CsrMat),
+    /// Dense f32 shard storage (`--precision f32`).
+    DenseF32(MatF32),
+    /// CSR f32 shard storage (`--precision f32`).
+    CsrF32(CsrMatF32),
 }
 
 impl From<Mat> for DataMat {
@@ -494,6 +1209,8 @@ impl DataMat {
         match self {
             DataMat::Dense(m) => m.rows(),
             DataMat::Csr(m) => m.rows(),
+            DataMat::DenseF32(m) => m.rows(),
+            DataMat::CsrF32(m) => m.rows(),
         }
     }
 
@@ -502,29 +1219,44 @@ impl DataMat {
         match self {
             DataMat::Dense(m) => m.cols(),
             DataMat::Csr(m) => m.cols(),
+            DataMat::DenseF32(m) => m.cols(),
+            DataMat::CsrF32(m) => m.cols(),
         }
     }
 
-    /// True for CSR storage.
+    /// True for CSR storage (either precision).
     pub fn is_sparse(&self) -> bool {
-        matches!(self, DataMat::Csr(_))
+        matches!(self, DataMat::Csr(_) | DataMat::CsrF32(_))
     }
 
     /// The backend actually in use (never [`StorageKind::Auto`]).
     pub fn storage(&self) -> StorageKind {
         match self {
-            DataMat::Dense(_) => StorageKind::Dense,
-            DataMat::Csr(_) => StorageKind::Sparse,
+            DataMat::Dense(_) | DataMat::DenseF32(_) => StorageKind::Dense,
+            DataMat::Csr(_) | DataMat::CsrF32(_) => StorageKind::Sparse,
+        }
+    }
+
+    /// The numeric precision of the payload.
+    pub fn precision(&self) -> Precision {
+        match self {
+            DataMat::Dense(_) | DataMat::Csr(_) => Precision::F64,
+            DataMat::DenseF32(_) | DataMat::CsrF32(_) => Precision::F32,
         }
     }
 
     /// Multiply-adds one `gemv`-shaped pass over this matrix costs — the
     /// virtual-clock flop model's unit. Dense kernels touch every entry
-    /// (`rows·cols`); CSR kernels touch only the stored nonzeros.
+    /// (`rows·cols`); CSR kernels touch only the stored nonzeros. The
+    /// kernels are memory-bound, so f32 passes are discounted by byte
+    /// traffic: a dense f32 row moves half the bytes (`× 1/2`), a CSR f32
+    /// entry moves 8 bytes (4 value + 4 index) against f64's 12 (`× 2/3`).
     pub fn gemv_madds(&self) -> f64 {
         match self {
             DataMat::Dense(m) => (m.rows() * m.cols()) as f64,
             DataMat::Csr(m) => m.nnz() as f64,
+            DataMat::DenseF32(m) => (m.rows() * m.cols()) as f64 * 0.5,
+            DataMat::CsrF32(m) => m.nnz() as f64 * (2.0 / 3.0),
         }
     }
 
@@ -533,51 +1265,78 @@ impl DataMat {
         match self {
             DataMat::Dense(m) => m.rows() * m.cols() * std::mem::size_of::<f64>(),
             DataMat::Csr(m) => m.mem_bytes(),
+            DataMat::DenseF32(m) => m.mem_bytes(),
+            DataMat::CsrF32(m) => m.mem_bytes(),
         }
     }
 
-    /// Element `(i, j)`.
+    /// Element `(i, j)` (widened for f32 backends).
     pub fn get(&self, i: usize, j: usize) -> f64 {
         match self {
             DataMat::Dense(m) => m.get(i, j),
             DataMat::Csr(m) => m.get(i, j),
+            DataMat::DenseF32(m) => m.get(i, j),
+            DataMat::CsrF32(m) => m.get(i, j),
         }
     }
 
-    /// Borrow the dense matrix, if this is dense (the XLA staging path —
-    /// AOT artifacts are dense-shaped and must fail fast on CSR).
+    /// Borrow the dense f64 matrix, if that is what this is (the XLA
+    /// staging path — AOT artifacts are dense f64-shaped and must fail
+    /// fast on CSR and on f32 shards alike).
     pub fn as_dense(&self) -> Option<&Mat> {
         match self {
             DataMat::Dense(m) => Some(m),
-            DataMat::Csr(_) => None,
+            _ => None,
         }
     }
 
-    /// Dense copy (expands CSR).
+    /// Dense f64 copy (expands CSR, widens f32).
     pub fn to_dense(&self) -> Mat {
         match self {
             DataMat::Dense(m) => m.clone(),
             DataMat::Csr(m) => m.to_dense(),
+            DataMat::DenseF32(m) => m.to_f64(),
+            DataMat::CsrF32(m) => m.to_dense_f32().to_f64(),
         }
     }
 
-    /// CSR copy (compresses dense).
+    /// CSR f64 copy (compresses dense, widens f32).
     pub fn to_csr(&self) -> CsrMat {
         match self {
             DataMat::Dense(m) => CsrMat::from_dense(m),
             DataMat::Csr(m) => m.clone(),
+            DataMat::DenseF32(m) => CsrMat::from_dense(&m.to_f64()),
+            DataMat::CsrF32(m) => m.to_f64(),
         }
     }
 
     /// Convert into the requested backend ([`StorageKind::Auto`] keeps
-    /// the current one). Conversion is value-exact in both directions.
+    /// the current one), preserving the precision. Conversion is
+    /// value-exact in both directions within a precision.
     pub fn into_storage(self, storage: StorageKind) -> DataMat {
         match (storage, self) {
             (StorageKind::Auto, x) => x,
             (StorageKind::Dense, DataMat::Csr(c)) => DataMat::Dense(c.to_dense()),
+            (StorageKind::Dense, DataMat::CsrF32(c)) => DataMat::DenseF32(c.to_dense_f32()),
             (StorageKind::Dense, x) => x,
             (StorageKind::Sparse, DataMat::Dense(d)) => DataMat::Csr(CsrMat::from_dense(&d)),
+            (StorageKind::Sparse, DataMat::DenseF32(d)) => {
+                DataMat::CsrF32(CsrMatF32::from_dense_f32(&d))
+            }
             (StorageKind::Sparse, x) => x,
+        }
+    }
+
+    /// Convert into the requested precision, preserving the backend.
+    /// Narrowing rounds each entry to nearest f32; widening is exact
+    /// (modulo dropping CSR entries that had rounded to zero).
+    pub fn to_precision(self, precision: Precision) -> DataMat {
+        match (precision, self) {
+            (Precision::F32, DataMat::Dense(m)) => DataMat::DenseF32(MatF32::from_f64(&m)),
+            (Precision::F32, DataMat::Csr(m)) => DataMat::CsrF32(CsrMatF32::from_f64(&m)),
+            (Precision::F64, DataMat::DenseF32(m)) => DataMat::Dense(m.to_f64()),
+            (Precision::F64, DataMat::CsrF32(m)) => DataMat::Csr(m.to_f64()),
+            (_, x) => x,
         }
     }
 
@@ -586,6 +1345,8 @@ impl DataMat {
         match self {
             DataMat::Dense(m) => DataMat::Dense(m.row_band(lo, hi)),
             DataMat::Csr(m) => DataMat::Csr(m.row_band(lo, hi)),
+            DataMat::DenseF32(m) => DataMat::DenseF32(m.row_band(lo, hi)),
+            DataMat::CsrF32(m) => DataMat::CsrF32(m.row_band(lo, hi)),
         }
     }
 
@@ -595,34 +1356,58 @@ impl DataMat {
         match self {
             DataMat::Dense(m) => DataMat::Dense(m.pad_rows(new_rows)),
             DataMat::Csr(m) => DataMat::Csr(m.pad_rows(new_rows)),
+            DataMat::DenseF32(m) => DataMat::DenseF32(m.pad_rows(new_rows)),
+            DataMat::CsrF32(m) => DataMat::CsrF32(m.pad_rows(new_rows)),
         }
     }
 
-    /// Stack matrices vertically, preserving the common backend. All
-    /// blocks must share one backend: shards of an encoded problem always
-    /// do (mixed input is a hard error, not a silent densification).
+    /// Stack matrices vertically, preserving the common backend and
+    /// precision. All blocks must share one variant: shards of an encoded
+    /// problem always do (mixed input is a hard error, not a silent
+    /// densification or widening).
     pub fn vstack(blocks: &[&DataMat]) -> DataMat {
         assert!(!blocks.is_empty(), "vstack: empty input");
-        if blocks.iter().all(|b| b.is_sparse()) {
-            let csr: Vec<&CsrMat> = blocks
-                .iter()
-                .map(|b| match b {
-                    DataMat::Csr(m) => m,
-                    DataMat::Dense(_) => unreachable!(),
-                })
-                .collect();
-            DataMat::Csr(CsrMat::vstack(&csr))
-        } else if blocks.iter().all(|b| !b.is_sparse()) {
-            let dense: Vec<&Mat> = blocks
-                .iter()
-                .map(|b| match b {
-                    DataMat::Dense(m) => m,
-                    DataMat::Csr(_) => unreachable!(),
-                })
-                .collect();
-            DataMat::Dense(Mat::vstack(&dense))
-        } else {
-            panic!("vstack: mixed dense/CSR blocks");
+        match blocks[0] {
+            DataMat::Dense(_) => {
+                let parts: Vec<&Mat> = blocks
+                    .iter()
+                    .map(|b| match b {
+                        DataMat::Dense(m) => m,
+                        _ => panic!("vstack: mixed dense/CSR blocks"),
+                    })
+                    .collect();
+                DataMat::Dense(Mat::vstack(&parts))
+            }
+            DataMat::Csr(_) => {
+                let parts: Vec<&CsrMat> = blocks
+                    .iter()
+                    .map(|b| match b {
+                        DataMat::Csr(m) => m,
+                        _ => panic!("vstack: mixed dense/CSR blocks"),
+                    })
+                    .collect();
+                DataMat::Csr(CsrMat::vstack(&parts))
+            }
+            DataMat::DenseF32(_) => {
+                let parts: Vec<&MatF32> = blocks
+                    .iter()
+                    .map(|b| match b {
+                        DataMat::DenseF32(m) => m,
+                        _ => panic!("vstack: mixed dense/CSR blocks"),
+                    })
+                    .collect();
+                DataMat::DenseF32(MatF32::vstack(&parts))
+            }
+            DataMat::CsrF32(_) => {
+                let parts: Vec<&CsrMatF32> = blocks
+                    .iter()
+                    .map(|b| match b {
+                        DataMat::CsrF32(m) => m,
+                        _ => panic!("vstack: mixed dense/CSR blocks"),
+                    })
+                    .collect();
+                DataMat::CsrF32(CsrMatF32::vstack(&parts))
+            }
         }
     }
 
@@ -640,10 +1425,9 @@ impl DataMat {
 
     /// Matrix–vector product `self * x`.
     pub fn gemv(&self, x: &[f64]) -> Vec<f64> {
-        match self {
-            DataMat::Dense(m) => m.gemv(x),
-            DataMat::Csr(m) => m.gemv(x),
-        }
+        let mut y = vec![0.0; self.rows()];
+        self.gemv_into(x, &mut y);
+        y
     }
 
     /// `y = self * x` into a caller buffer.
@@ -651,15 +1435,16 @@ impl DataMat {
         match self {
             DataMat::Dense(m) => m.gemv_into(x, y),
             DataMat::Csr(m) => m.gemv_into(x, y),
+            DataMat::DenseF32(m) => m.gemv_into(x, y),
+            DataMat::CsrF32(m) => m.gemv_into(x, y),
         }
     }
 
     /// Transposed matrix–vector product `selfᵀ * x`.
     pub fn gemv_t(&self, x: &[f64]) -> Vec<f64> {
-        match self {
-            DataMat::Dense(m) => m.gemv_t(x),
-            DataMat::Csr(m) => m.gemv_t(x),
-        }
+        let mut y = vec![0.0; self.cols()];
+        self.gemv_t_into(x, &mut y);
+        y
     }
 
     /// `y = selfᵀ x` into a caller buffer.
@@ -667,6 +1452,8 @@ impl DataMat {
         match self {
             DataMat::Dense(m) => m.gemv_t_into(x, y),
             DataMat::Csr(m) => m.gemv_t_into(x, y),
+            DataMat::DenseF32(m) => m.gemv_t_into(x, y),
+            DataMat::CsrF32(m) => m.gemv_t_into(x, y),
         }
     }
 
@@ -675,6 +1462,8 @@ impl DataMat {
         match self {
             DataMat::Dense(m) => m.fused_grad(w, y, g, resid_buf),
             DataMat::Csr(m) => m.fused_grad(w, y, g, resid_buf),
+            DataMat::DenseF32(m) => m.fused_grad(w, y, g, resid_buf),
+            DataMat::CsrF32(m) => m.fused_grad(w, y, g, resid_buf),
         }
     }
 
@@ -692,14 +1481,18 @@ impl DataMat {
         match self {
             DataMat::Dense(m) => m.fused_grad_range(w, y, g, resid_buf, lo, hi),
             DataMat::Csr(m) => m.fused_grad_range(w, y, g, resid_buf, lo, hi),
+            DataMat::DenseF32(m) => m.fused_grad_range(w, y, g, resid_buf, lo, hi),
+            DataMat::CsrF32(m) => m.fused_grad_range(w, y, g, resid_buf, lo, hi),
         }
     }
 
-    /// Gram matrix `selfᵀ self` (always dense `cols × cols`).
+    /// Gram matrix `selfᵀ self` (always dense f64 `cols × cols`).
     pub fn gram(&self) -> Mat {
         match self {
             DataMat::Dense(m) => m.gram(),
             DataMat::Csr(m) => m.gram(),
+            DataMat::DenseF32(m) => m.gram(),
+            DataMat::CsrF32(m) => m.gram(),
         }
     }
 
@@ -915,5 +1708,141 @@ mod tests {
     #[should_panic(expected = "explicit zero")]
     fn from_raw_rejects_stored_zero() {
         CsrMat::from_raw(1, 4, vec![0, 1], vec![0], vec![0.0]);
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        for p in [Precision::F64, Precision::F32] {
+            assert_eq!(Precision::parse(p.label()).unwrap(), p);
+            assert_eq!(format!("{p}"), p.label());
+        }
+        assert_eq!(Precision::parse("F32").unwrap(), Precision::F32);
+        assert!(Precision::parse("f16").is_err());
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    #[test]
+    fn to_precision_roundtrip_preserves_backend() {
+        let mut rng = Pcg64::seeded(21);
+        let d = random_sparse(&mut rng, 12, 7, 0.4);
+        for dm in [DataMat::Dense(d.clone()), DataMat::Csr(CsrMat::from_dense(&d))] {
+            let narrow = dm.clone().to_precision(Precision::F32);
+            assert_eq!(narrow.precision(), Precision::F32);
+            assert_eq!(narrow.storage(), dm.storage());
+            assert_eq!(narrow.rows(), dm.rows());
+            // every f64 here is a small Gaussian — f32 round-trip error
+            // is bounded by the relative epsilon
+            let back = narrow.clone().to_precision(Precision::F64);
+            assert_eq!(back.precision(), Precision::F64);
+            assert!(back.max_abs_diff(&dm) < 1e-6);
+            // already-narrow conversion is a no-op
+            assert_eq!(narrow.clone().to_precision(Precision::F32), narrow);
+        }
+    }
+
+    #[test]
+    fn f32_shards_halve_dense_memory() {
+        let d = Mat::from_fn(32, 16, |i, j| (i + j + 1) as f64);
+        let dense = DataMat::Dense(d.clone());
+        let dense32 = dense.clone().to_precision(Precision::F32);
+        assert_eq!(dense32.mem_bytes() * 2, dense.mem_bytes());
+        let sparse = DataMat::Csr(CsrMat::from_dense(&d));
+        let sparse32 = sparse.clone().to_precision(Precision::F32);
+        assert!(sparse32.mem_bytes() < sparse.mem_bytes());
+    }
+
+    #[test]
+    fn f32_flop_model_discounts() {
+        let d = Mat::from_fn(8, 10, |_, j| if j == 0 { 1.0 } else { 0.0 });
+        let dense32 = DataMat::Dense(d.clone()).to_precision(Precision::F32);
+        assert_eq!(dense32.gemv_madds(), 40.0); // rows·cols / 2
+        let sparse32 = DataMat::Csr(CsrMat::from_dense(&d)).to_precision(Precision::F32);
+        assert!((sparse32.gemv_madds() - 8.0 * 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_kernels_approximate_f64() {
+        let mut rng = Pcg64::seeded(22);
+        for &(r, c, den) in &[(16usize, 9usize, 1.0), (21, 6, 0.3)] {
+            let d = random_sparse(&mut rng, r, c, den);
+            let w: Vec<f64> = (0..c).map(|_| rng.next_gaussian()).collect();
+            let y: Vec<f64> = (0..r).map(|_| rng.next_gaussian()).collect();
+            let f64_ref = DataMat::Dense(d.clone());
+            let mut g_ref = vec![0.0; c];
+            let mut b_ref = vec![0.0; r];
+            let f_ref = f64_ref.fused_grad(&w, &y, &mut g_ref, &mut b_ref);
+            for narrow in [
+                DataMat::Dense(d.clone()).to_precision(Precision::F32),
+                DataMat::Csr(CsrMat::from_dense(&d)).to_precision(Precision::F32),
+            ] {
+                let mut g = vec![0.0; c];
+                let mut b = vec![0.0; r];
+                let f = narrow.fused_grad(&w, &y, &mut g, &mut b);
+                assert!((f - f_ref).abs() < 1e-3 * (1.0 + f_ref.abs()), "{narrow:?}");
+                for (a, bb) in g.iter().zip(&g_ref) {
+                    assert!((a - bb).abs() < 1e-3 * (1.0 + bb.abs()), "{narrow:?}");
+                }
+                // gemv / gemv_t agree to f32 tolerance too
+                let yv = narrow.gemv(&w);
+                let yv_ref = f64_ref.gemv(&w);
+                for (a, bb) in yv.iter().zip(&yv_ref) {
+                    assert!((a - bb).abs() < 1e-3 * (1.0 + bb.abs()));
+                }
+                let xt: Vec<f64> = (0..r).map(|i| y[i]).collect();
+                let tv = narrow.gemv_t(&xt);
+                let tv_ref = f64_ref.gemv_t(&xt);
+                for (a, bb) in tv.iter().zip(&tv_ref) {
+                    assert!((a - bb).abs() < 1e-3 * (1.0 + bb.abs()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_fused_grad_range_composes() {
+        let mut rng = Pcg64::seeded(23);
+        let d = random_sparse(&mut rng, 14, 5, 0.6);
+        let w: Vec<f64> = (0..5).map(|_| rng.next_gaussian()).collect();
+        let y: Vec<f64> = (0..14).map(|_| rng.next_gaussian()).collect();
+        let narrow = DataMat::Dense(d).to_precision(Precision::F32);
+        let mut g_full = vec![0.0; 5];
+        let mut b_full = vec![0.0; 14];
+        let f_full = narrow.fused_grad(&w, &y, &mut g_full, &mut b_full);
+        let mut g = vec![0.0; 5];
+        let mut b = vec![0.0; 14];
+        let f = narrow.fused_grad_range(&w, &y, &mut g, &mut b, 0, 9)
+            + narrow.fused_grad_range(&w, &y, &mut g, &mut b, 9, 14);
+        // split point lands mid-f32-accumulation, so allow f32 noise
+        assert!((f - f_full).abs() < 1e-5 * (1.0 + f_full.abs()));
+        for (a, bb) in g.iter().zip(&g_full) {
+            assert!((a - bb).abs() < 1e-4 * (1.0 + bb.abs()));
+        }
+    }
+
+    #[test]
+    fn csr_f32_keeps_rounded_zero_entries_and_drops_on_widen() {
+        // 1e-200 rounds to 0.0f32: the narrow container keeps the entry
+        // (structure — and the flop model — must match the f64 shard),
+        // widening back drops it to restore CsrMat's invariant
+        let d = Mat::from_fn(2, 3, |i, j| if i == 0 && j == 1 { 1e-200 } else { (j + 1) as f64 });
+        let s = CsrMat::from_dense(&d);
+        let narrow = CsrMatF32::from_f64(&s);
+        assert_eq!(narrow.nnz(), s.nnz());
+        let back = narrow.to_f64();
+        assert_eq!(back.nnz(), s.nnz() - 1);
+        // kernels on the zero-carrying container still work
+        let mut g = vec![0.0; 3];
+        let mut b = vec![0.0; 2];
+        let f = narrow.fused_grad(&[1.0, 1.0, 1.0], &[0.0, 0.0], &mut g, &mut b);
+        assert!(f.is_finite());
+    }
+
+    #[test]
+    fn vstack_rejects_mixed_precision() {
+        let d = Mat::from_fn(2, 2, |_, _| 1.0);
+        let a = DataMat::Dense(d.clone());
+        let b = DataMat::Dense(d).to_precision(Precision::F32);
+        let r = std::panic::catch_unwind(|| DataMat::vstack(&[&a, &b]));
+        assert!(r.is_err());
     }
 }

@@ -27,7 +27,7 @@ use super::data::Ratings;
 use crate::cluster::{ClockMode, ClusterConfig, DelayModel};
 use crate::config::Json;
 use crate::encoding::EncoderKind;
-use crate::linalg::{self, Mat, StorageKind};
+use crate::linalg::{self, Mat, Precision, StorageKind};
 use crate::optim::LbfgsConfig;
 use crate::problem::{EncodedProblem, QuadProblem};
 use crate::runtime::{JobServer, JobSpec, ServeOptimizer, ServePolicy};
@@ -78,6 +78,10 @@ pub struct MfConfig {
     /// rows are embedding vectors; `Sparse` is honored where the scheme
     /// allows it).
     pub storage: StorageKind,
+    /// Worker-shard arithmetic precision for the distributed subsolves
+    /// ([`Precision::F32`] narrows the encoded shards; the leader-side
+    /// ALS updates, aggregation, and RMSE stay f64).
+    pub precision: Precision,
     /// Master seed for data/cluster randomness.
     pub seed: u64,
 }
@@ -101,6 +105,7 @@ impl Default for MfConfig {
             max_rows: 2048,
             threads: 0,
             storage: StorageKind::Auto,
+            precision: Precision::F64,
             seed: 0,
         }
     }
@@ -117,7 +122,7 @@ impl MfConfig {
              \"m\": {}, \"k\": {}, \"encoder\": \"{}\", \"beta\": {}, \
              \"dist_threshold\": {}, \"lbfgs_iters\": {}, \"delay\": \"{}\", \
              \"ms_per_mflop\": {}, \"clock\": \"{}\", \"max_rows\": {}, \
-             \"threads\": {}, \"storage\": \"{}\", \"seed\": {}}}",
+             \"threads\": {}, \"storage\": \"{}\", \"precision\": \"{}\", \"seed\": {}}}",
             self.embed,
             self.lambda,
             self.mu,
@@ -134,6 +139,7 @@ impl MfConfig {
             self.max_rows,
             self.threads,
             self.storage,
+            self.precision,
             self.seed
         )
     }
@@ -218,6 +224,9 @@ impl MfConfig {
         }
         if let Some(s) = text("storage")? {
             cfg.storage = StorageKind::parse(s)?;
+        }
+        if let Some(s) = text("precision")? {
+            cfg.precision = Precision::parse(s)?;
         }
         if let Some(x) = count("seed")? {
             cfg.seed = x as u64;
@@ -372,13 +381,26 @@ impl DistBatch {
         let prob = QuadProblem::new(a_pad, t_pad, lam_pad);
 
         let enc = match cfg.encoder {
-            EncoderKind::Replication => EncodedProblem::encode_stored(
-                &prob, cfg.encoder, cfg.beta, cfg.m, sub_seed, cfg.storage,
+            EncoderKind::Replication => EncodedProblem::encode_stored_prec(
+                &prob,
+                cfg.encoder,
+                cfg.beta,
+                cfg.m,
+                sub_seed,
+                cfg.storage,
+                cfg.precision,
             )?,
             _ => {
                 let bank_kind = bank.kind();
                 let encoder = bank.get(rows)?;
-                EncodedProblem::encode_with_stored(&prob, encoder, bank_kind, cfg.m, cfg.storage)?
+                EncodedProblem::encode_with_stored_prec(
+                    &prob,
+                    encoder,
+                    bank_kind,
+                    cfg.m,
+                    cfg.storage,
+                    cfg.precision,
+                )?
             }
         };
         self.server.submit(JobSpec {
@@ -679,6 +701,7 @@ mod tests {
             clock: ClockMode::Measured,
             threads: 4,
             storage: StorageKind::Sparse,
+            precision: Precision::F32,
             seed: 71,
             ..Default::default()
         };
@@ -690,6 +713,7 @@ mod tests {
         assert_eq!(back.clock, ClockMode::Measured);
         assert_eq!(back.threads, 4);
         assert_eq!(back.storage, StorageKind::Sparse);
+        assert_eq!(back.precision, Precision::F32);
         assert_eq!(back.seed, 71);
         // defaults survive for absent keys; bad fields are rejected
         let partial = MfConfig::from_json(&Json::parse("{\"threads\": 2}").unwrap()).unwrap();
@@ -697,6 +721,7 @@ mod tests {
         assert_eq!(partial.embed, MfConfig::default().embed);
         for bad in [
             "{\"storage\": \"ram\"}",
+            "{\"precision\": \"f16\"}",
             "{\"encoder\": \"bogus\"}",
             "{\"delay\": \"warp:1\"}",
             "{\"threads\": -1}",

@@ -18,7 +18,7 @@
 //! backend: coding-obliviousness extends to storage.
 
 use crate::encoding::EncoderKind;
-use crate::linalg::{self, DataMat, Mat, StorageKind};
+use crate::linalg::{self, DataMat, Mat, Precision, StorageKind};
 use crate::rng::Pcg64;
 use anyhow::{bail, ensure, Result};
 
@@ -168,6 +168,11 @@ pub struct EncodedProblem {
     /// [`StorageKind::Auto`] — `Auto` requests are resolved at encode
     /// time from the input representation and the scheme).
     pub storage: StorageKind,
+    /// Worker-shard arithmetic precision. Encoding itself always runs in
+    /// f64; [`Precision::F32`] narrows the *stored* shards afterwards, so
+    /// workers compute in f32 while the leader (aggregation, step, true
+    /// objective on `raw`) stays f64 throughout.
+    pub precision: Precision,
     /// Raw problem (kept for true-objective evaluation in traces).
     pub raw: QuadProblem,
 }
@@ -191,6 +196,22 @@ fn resolved_storage(shards: &[WorkerShard], requested: StorageKind) -> StorageKi
         }
         explicit => explicit,
     }
+}
+
+/// Narrow fully-built (encoded, padded, storage-resolved) shards to the
+/// requested precision. `ỹ` stays f64 — it is leader-visible state (the
+/// residual subtraction widens per-entry), and its footprint is one
+/// column against the `p`-wide `X̃` payload.
+fn shards_to_precision(shards: Vec<WorkerShard>, precision: Precision) -> Vec<WorkerShard> {
+    shards
+        .into_iter()
+        .map(|WorkerShard { x, y, rows_real, partition_id }| WorkerShard {
+            x: x.to_precision(precision),
+            y,
+            rows_real,
+            partition_id,
+        })
+        .collect()
 }
 
 /// One round's mini-batch plan: which rows of each worker's shard that
@@ -261,6 +282,23 @@ impl EncodedProblem {
         seed: u64,
         storage: StorageKind,
     ) -> Result<Self> {
+        Self::encode_stored_prec(prob, kind, beta, m, seed, storage, Precision::F64)
+    }
+
+    /// [`EncodedProblem::encode_stored`] with an explicit shard
+    /// [`Precision`]. The encode itself (transform, padding, storage
+    /// resolution) always runs in f64; `Precision::F32` narrows the
+    /// finished shards, halving `X̃` memory and letting workers run the
+    /// f32 kernels while the leader stays f64.
+    pub fn encode_stored_prec(
+        prob: &QuadProblem,
+        kind: EncoderKind,
+        beta: f64,
+        m: usize,
+        seed: u64,
+        storage: StorageKind,
+        precision: Precision,
+    ) -> Result<Self> {
         ensure!(m >= 1, "need at least one worker");
         let n = prob.n();
 
@@ -288,6 +326,7 @@ impl EncodedProblem {
                     }
                 }
                 let storage = resolved_storage(&shards, storage);
+                let shards = shards_to_precision(shards, precision);
                 Ok(EncodedProblem {
                     shards,
                     scheme: Scheme::Replicated { partitions },
@@ -295,12 +334,13 @@ impl EncodedProblem {
                     beta: b as f64,
                     gram_scale: 1.0, // per-partition gradients are raw-scale
                     storage,
+                    precision,
                     raw: prob.clone(),
                 })
             }
             _ => {
                 let enc = kind.build(n, beta, seed)?;
-                Self::encode_with_stored(prob, enc.as_ref(), kind, m, storage)
+                Self::encode_with_stored_prec(prob, enc.as_ref(), kind, m, storage, precision)
             }
         }
     }
@@ -330,8 +370,22 @@ impl EncodedProblem {
         prob: &QuadProblem,
         s: usize,
         m: usize,
+        seed: u64,
+        storage: StorageKind,
+    ) -> Result<Self> {
+        Self::encode_gradient_coding_stored_prec(prob, s, m, seed, storage, Precision::F64)
+    }
+
+    /// [`EncodedProblem::encode_gradient_coding_stored`] with an explicit
+    /// shard [`Precision`] (shards are narrowed after padding, exactly as
+    /// in [`EncodedProblem::encode_stored_prec`]).
+    pub fn encode_gradient_coding_stored_prec(
+        prob: &QuadProblem,
+        s: usize,
+        m: usize,
         _seed: u64,
         storage: StorageKind,
+        precision: Precision,
     ) -> Result<Self> {
         ensure!(m >= 1, "need at least one worker");
         let rep = s + 1;
@@ -357,6 +411,7 @@ impl EncodedProblem {
             }
         }
         let storage = resolved_storage(&shards, storage);
+        let shards = shards_to_precision(shards, precision);
         Ok(EncodedProblem {
             shards,
             scheme: Scheme::GradientCoded { groups },
@@ -364,6 +419,7 @@ impl EncodedProblem {
             beta: rep as f64,
             gram_scale: 1.0,
             storage,
+            precision,
             raw: prob.clone(),
         })
     }
@@ -392,6 +448,21 @@ impl EncodedProblem {
         kind: EncoderKind,
         m: usize,
         storage: StorageKind,
+    ) -> Result<Self> {
+        Self::encode_with_stored_prec(prob, enc, kind, m, storage, Precision::F64)
+    }
+
+    /// [`EncodedProblem::encode_with_stored`] with an explicit shard
+    /// [`Precision`]: the encoder runs in f64 and the finished shards are
+    /// narrowed, so `S` and the partitioning are bit-identical across
+    /// precisions and only the stored payload differs.
+    pub fn encode_with_stored_prec(
+        prob: &QuadProblem,
+        enc: &dyn crate::encoding::Encoder,
+        kind: EncoderKind,
+        m: usize,
+        storage: StorageKind,
+        precision: Precision,
     ) -> Result<Self> {
         ensure!(m >= 1, "need at least one worker");
         ensure!(
@@ -437,6 +508,7 @@ impl EncodedProblem {
             Scheme::Coded
         };
         let storage = resolved_storage(&shards, storage);
+        let shards = shards_to_precision(shards, precision);
         Ok(EncodedProblem {
             shards,
             scheme,
@@ -444,6 +516,7 @@ impl EncodedProblem {
             beta: enc.beta(),
             gram_scale: enc.gram_scale(),
             storage,
+            precision,
             raw: prob.clone(),
         })
     }
@@ -1090,6 +1163,58 @@ mod tests {
                 assert_eq!(a.y, b.y);
             }
         }
+    }
+
+    #[test]
+    fn f32_encode_narrows_shards_and_matches_f64_structure() {
+        let prob = small_problem();
+        for kind in [EncoderKind::Hadamard, EncoderKind::Identity, EncoderKind::Replication] {
+            let f64e = EncodedProblem::encode(&prob, kind, 2.0, 8, 3).unwrap();
+            let f32e = EncodedProblem::encode_stored_prec(
+                &prob,
+                kind,
+                2.0,
+                8,
+                3,
+                StorageKind::Auto,
+                Precision::F32,
+            )
+            .unwrap();
+            assert_eq!(f64e.precision, Precision::F64);
+            assert_eq!(f32e.precision, Precision::F32);
+            assert_eq!(f64e.storage, f32e.storage, "{kind}: storage resolution must agree");
+            // same partitioning + padding; X̃ payload halves, ỹ stays f64
+            for (a, b) in f64e.shards.iter().zip(&f32e.shards) {
+                assert_eq!(a.rows_real, b.rows_real);
+                assert_eq!(a.partition_id, b.partition_id);
+                assert_eq!(a.x.rows(), b.x.rows());
+                assert_eq!(a.y, b.y);
+                assert_eq!(b.x.precision(), Precision::F32);
+                assert!(a.x.max_abs_diff(&b.x) < 1e-4, "{kind}: narrowing drifted too far");
+            }
+            assert!(
+                f32e.shard_mem_bytes() < f64e.shard_mem_bytes(),
+                "{kind}: f32 shards must be smaller"
+            );
+        }
+    }
+
+    #[test]
+    fn f32_sparse_shards_keep_csr_backend() {
+        let prob = sparse_problem();
+        let enc = EncodedProblem::encode_stored_prec(
+            &prob,
+            EncoderKind::Identity,
+            1.0,
+            8,
+            0,
+            StorageKind::Auto,
+            Precision::F32,
+        )
+        .unwrap();
+        assert_eq!(enc.storage, StorageKind::Sparse);
+        assert!(enc.shards.iter().all(|s| s.x.is_sparse()));
+        assert!(enc.shards.iter().all(|s| s.x.precision() == Precision::F32));
     }
 
     #[test]

@@ -206,6 +206,18 @@ fn real_madds_prefix(shard: &WorkerShard) -> Vec<f64> {
                 prefix.push(acc);
             }
         }
+        DataMat::DenseF32(m) => {
+            for j in 1..=shard.rows_real {
+                prefix.push((j * m.cols()) as f64);
+            }
+        }
+        DataMat::CsrF32(c) => {
+            let mut acc = 0.0;
+            for i in 0..shard.rows_real {
+                acc += c.row(i).0.len() as f64;
+                prefix.push(acc);
+            }
+        }
     }
     prefix
 }

@@ -38,7 +38,7 @@ use super::stream::{CurvCollector, GradCollector};
 use super::{ComputeEngine, EngineSession};
 use crate::cluster::{Cluster, ClusterConfig, Scenario};
 use crate::encoding::EncoderKind;
-use crate::linalg::{DataMat, StorageKind};
+use crate::linalg::{DataMat, Precision, StorageKind};
 use crate::optim::{
     CodedGd, CodedLbfgs, CodedSgd, GdConfig, JobStep, LbfgsConfig, RunOutput, SgdConfig,
     SteppedOptimizer,
@@ -182,11 +182,12 @@ impl Scheduler {
 // EncodedShardCache
 // ---------------------------------------------------------------------------
 
-/// Cache key: everything [`EncodedProblem::encode_stored`] depends on.
-/// The fingerprint digests the raw data (`n`, `p`, `λ`, every matrix and
-/// label entry, bit-exact); the rest are the encoding parameters. `k` is
-/// deliberately excluded — see the module docs.
-type CacheKey = (u64, &'static str, u64, usize, u64, String);
+/// Cache key: everything [`EncodedProblem::encode_stored_prec`] depends
+/// on. The fingerprint digests the raw data (`n`, `p`, `λ`, every matrix
+/// and label entry, bit-exact); the rest are the encoding parameters plus
+/// the shard precision. `k` is deliberately excluded — see the module
+/// docs.
+type CacheKey = (u64, &'static str, u64, usize, u64, String, &'static str);
 
 /// Encode-once cache for served jobs: hyperparameter sweeps and repeated
 /// queries over the same data reuse one [`EncodedProblem`] (shared via
@@ -231,6 +232,24 @@ pub fn fingerprint(prob: &QuadProblem) -> u64 {
                 }
             }
         }
+        DataMat::DenseF32(m) => {
+            for i in 0..m.rows() {
+                for v in m.row(i) {
+                    fnv1a(&mut h, &v.to_bits().to_le_bytes());
+                }
+            }
+        }
+        DataMat::CsrF32(c) => {
+            for i in 0..prob.x.rows() {
+                let (cols, vals) = c.row(i);
+                for &j in cols {
+                    fnv1a(&mut h, &j.to_le_bytes());
+                }
+                for v in vals {
+                    fnv1a(&mut h, &v.to_bits().to_le_bytes());
+                }
+            }
+        }
     }
     for v in &prob.y {
         fnv1a(&mut h, &v.to_bits().to_le_bytes());
@@ -244,8 +263,9 @@ impl EncodedShardCache {
         EncodedShardCache::default()
     }
 
-    /// The encoded problem for `(prob, kind, beta, m, seed, storage)`,
-    /// encoding at most once per distinct key.
+    /// The encoded problem for `(prob, kind, beta, m, seed, storage)`
+    /// at the default f64 shard precision, encoding at most once per
+    /// distinct key.
     pub fn get_or_encode(
         &mut self,
         prob: &QuadProblem,
@@ -255,13 +275,39 @@ impl EncodedShardCache {
         seed: u64,
         storage: StorageKind,
     ) -> Result<Arc<EncodedProblem>> {
-        let key: CacheKey =
-            (fingerprint(prob), kind.label(), beta.to_bits(), m, seed, storage.to_string());
+        self.get_or_encode_prec(prob, kind, beta, m, seed, storage, Precision::F64)
+    }
+
+    /// As [`get_or_encode`](Self::get_or_encode), with an explicit shard
+    /// precision. f64 and f32 encodes of the same problem are distinct
+    /// cache entries (the f32 shards are narrowed copies, not views).
+    #[allow(clippy::too_many_arguments)]
+    pub fn get_or_encode_prec(
+        &mut self,
+        prob: &QuadProblem,
+        kind: EncoderKind,
+        beta: f64,
+        m: usize,
+        seed: u64,
+        storage: StorageKind,
+        precision: Precision,
+    ) -> Result<Arc<EncodedProblem>> {
+        let key: CacheKey = (
+            fingerprint(prob),
+            kind.label(),
+            beta.to_bits(),
+            m,
+            seed,
+            storage.to_string(),
+            precision.label(),
+        );
         if let Some(enc) = self.map.get(&key) {
             self.hits += 1;
             return Ok(Arc::clone(enc));
         }
-        let enc = Arc::new(EncodedProblem::encode_stored(prob, kind, beta, m, seed, storage)?);
+        let enc = Arc::new(EncodedProblem::encode_stored_prec(
+            prob, kind, beta, m, seed, storage, precision,
+        )?);
         self.encodes += 1;
         self.map.insert(key, Arc::clone(&enc));
         Ok(enc)

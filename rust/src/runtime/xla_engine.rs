@@ -219,9 +219,9 @@ mod imp {
             for (i, s) in prob.shards.iter().enumerate() {
                 let dense = s.x.as_dense().ok_or_else(|| {
                     anyhow!(
-                        "worker {i}: XLA engine requires dense shard storage \
-                         (shards are CSR; re-encode with --storage dense or \
-                         use --engine native)"
+                        "worker {i}: XLA engine requires dense f64 shard storage \
+                         (shards are CSR or f32; re-encode with --storage dense \
+                         --precision f64, or use --engine native)"
                     )
                 })?;
                 let rows = dense.rows();

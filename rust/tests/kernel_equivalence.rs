@@ -1,0 +1,363 @@
+//! Kernel-equivalence suite: the contracts the raw-speed pass rests on.
+//!
+//! 1. **f64 SIMD ≡ scalar, bitwise.** The SIMD lane bundles are the scalar
+//!    kernels' unrolled accumulator arrays made explicit, with horizontal
+//!    sums reduced in the same left-to-right order — so every dense and
+//!    CSR kernel must produce bit-identical f64 output with and without
+//!    `--features simd`. CI runs this file under both builds; golden
+//!    traces and the replay/equivalence suites therefore never fork on
+//!    the feature.
+//! 2. **The dispatched public path is one of the two.** `Mat`/`CsrMat`
+//!    methods must route to exactly the implementation
+//!    `kernels::simd_active()` claims.
+//! 3. **f32 mode converges.** Coded GD on f32-narrowed shards reaches the
+//!    Theorem-1 neighborhood of the f64 run within a documented tolerance
+//!    (workers compute in f32; leader aggregation and steps stay f64, so
+//!    the per-round perturbation is a bounded gradient error).
+
+use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel};
+use codedopt::encoding::EncoderKind;
+use codedopt::linalg::kernels;
+use codedopt::linalg::{CsrMat, DataMat, Mat, Precision, StorageKind};
+use codedopt::optim::{CodedGd, GdConfig, Optimizer, RunOutput};
+use codedopt::problem::{EncodedProblem, QuadProblem};
+use codedopt::rng::Pcg64;
+use codedopt::runtime::NativeEngine;
+
+/// Shapes that cover every tail path: row pairing (odd/even rows), the
+/// 4-lane main loop + 2-lane + scalar column tails, and single-row mats.
+const SHAPES: &[(usize, usize)] = &[
+    (1, 1),
+    (1, 7),
+    (2, 4),
+    (3, 5),
+    (7, 3),
+    (8, 8),
+    (9, 12),
+    (16, 17),
+    (33, 19),
+    (64, 31),
+];
+
+fn dense(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seeded(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.next_gaussian())
+}
+
+fn vecn(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::seeded(seed ^ 0x5eed);
+    (0..n).map(|_| rng.next_gaussian()).collect()
+}
+
+/// A CSR matrix with ragged rows, including empty rows.
+fn sparse(rows: usize, cols: usize, seed: u64) -> CsrMat {
+    let mut rng = Pcg64::seeded(seed ^ 0xc52);
+    let mut row_ptr = vec![0usize];
+    let mut col_idx: Vec<u32> = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
+    for i in 0..rows {
+        // row i holds (i % (cols+1)) entries when i % 5 != 0, else empty —
+        // exercises 0-, short-, and accumulator-length entry loops
+        let nnz = if i % 5 == 0 { 0 } else { (i % (cols + 1)).min(cols) };
+        let mut cs: Vec<u32> = (0..cols as u32).collect();
+        // partial Fisher–Yates: first nnz entries are a random subset
+        for t in 0..nnz {
+            let j = t + (rng.next_u64() as usize) % (cols - t);
+            cs.swap(t, j);
+        }
+        let mut picked: Vec<u32> = cs[..nnz].to_vec();
+        picked.sort_unstable();
+        for c in picked {
+            col_idx.push(c);
+            vals.push(rng.next_gaussian());
+        }
+        row_ptr.push(col_idx.len());
+    }
+    CsrMat::from_raw(rows, cols, row_ptr, col_idx, vals)
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// 1. f64 SIMD ≡ scalar, bitwise
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dot_bitwise() {
+    for &(r, c) in SHAPES {
+        let n = r * c;
+        let a = vecn(n, 1);
+        let b = vecn(n, 2);
+        assert_eq!(
+            kernels::dot_scalar(&a, &b).to_bits(),
+            kernels::dot_simd(&a, &b).to_bits(),
+            "dot len={n}"
+        );
+    }
+}
+
+#[test]
+fn dense_gemv_bitwise() {
+    for &(r, c) in SHAPES {
+        let m = dense(r, c, 3);
+        let x = vecn(c, 4);
+        let mut ys = vec![0.0; r];
+        let mut yv = vec![0.0; r];
+        kernels::mat_gemv_into_scalar(&m, &x, &mut ys);
+        kernels::mat_gemv_into_simd(&m, &x, &mut yv);
+        assert_eq!(bits(&ys), bits(&yv), "gemv {r}x{c}");
+    }
+}
+
+#[test]
+fn dense_gemv_t_bitwise() {
+    for &(r, c) in SHAPES {
+        let m = dense(r, c, 5);
+        let x = vecn(r, 6);
+        let mut ys = vec![0.0; c];
+        let mut yv = vec![0.0; c];
+        kernels::mat_gemv_t_into_scalar(&m, &x, &mut ys);
+        kernels::mat_gemv_t_into_simd(&m, &x, &mut yv);
+        assert_eq!(bits(&ys), bits(&yv), "gemv_t {r}x{c}");
+    }
+}
+
+#[test]
+fn dense_fused_grad_range_bitwise_full_and_partial_windows() {
+    for &(r, c) in SHAPES {
+        let m = dense(r, c, 7);
+        let w = vecn(c, 8);
+        let y = vecn(r, 9);
+        // full window plus every partial window start/end combination the
+        // circular mini-batch sampler can produce (two-segment wraps are
+        // two independent calls, so covering arbitrary [lo, hi) covers
+        // wrapped blocks too)
+        let mut windows = vec![(0, r)];
+        for lo in [0, r / 3, r / 2] {
+            for hi in [r / 2, (2 * r) / 3, r] {
+                if lo < hi {
+                    windows.push((lo, hi));
+                }
+            }
+        }
+        for (lo, hi) in windows {
+            let mut gs = vecn(c, 10); // nonzero: the kernel accumulates
+            let mut gv = gs.clone();
+            let mut bs = vec![0.0; r];
+            let mut bv = vec![0.0; r];
+            let fs = kernels::mat_fused_grad_range_scalar(&m, &w, &y, &mut gs, &mut bs, lo, hi);
+            let fv = kernels::mat_fused_grad_range_simd(&m, &w, &y, &mut gv, &mut bv, lo, hi);
+            assert_eq!(fs.to_bits(), fv.to_bits(), "fused f {r}x{c} [{lo},{hi})");
+            assert_eq!(bits(&gs), bits(&gv), "fused g {r}x{c} [{lo},{hi})");
+            assert_eq!(bits(&bs), bits(&bv), "fused resid {r}x{c} [{lo},{hi})");
+        }
+    }
+}
+
+#[test]
+fn dense_wrapped_window_composition_bitwise() {
+    // a wrapped circular block = tail segment then head segment, both
+    // accumulating into the same g — exactly how the SGD sampler calls it
+    let (r, c) = (33, 19);
+    let m = dense(r, c, 11);
+    let w = vecn(c, 12);
+    let y = vecn(r, 13);
+    let (start, len) = (r - 5, 12); // wraps: [28, 33) then [0, 7)
+    let mut gs = vec![0.0; c];
+    let mut gv = vec![0.0; c];
+    let mut bs = vec![0.0; r];
+    let mut bv = vec![0.0; r];
+    let fs = kernels::mat_fused_grad_range_scalar(&m, &w, &y, &mut gs, &mut bs, start, r)
+        + kernels::mat_fused_grad_range_scalar(&m, &w, &y, &mut gs, &mut bs, 0, len - (r - start));
+    let fv = kernels::mat_fused_grad_range_simd(&m, &w, &y, &mut gv, &mut bv, start, r)
+        + kernels::mat_fused_grad_range_simd(&m, &w, &y, &mut gv, &mut bv, 0, len - (r - start));
+    assert_eq!(fs.to_bits(), fv.to_bits());
+    assert_eq!(bits(&gs), bits(&gv));
+    assert_eq!(bits(&bs), bits(&bv));
+}
+
+#[test]
+fn dense_gram_bitwise() {
+    for &(r, c) in SHAPES {
+        let m = dense(r, c, 14);
+        let gs = kernels::mat_gram_scalar(&m);
+        let gv = kernels::mat_gram_simd(&m);
+        for j in 0..c {
+            for l in 0..c {
+                assert_eq!(
+                    gs.get(j, l).to_bits(),
+                    gv.get(j, l).to_bits(),
+                    "gram {r}x{c} at ({j},{l})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn csr_gemv_bitwise() {
+    for &(r, c) in SHAPES {
+        let m = sparse(r, c, 15);
+        let x = vecn(c, 16);
+        let mut ys = vec![0.0; r];
+        let mut yv = vec![0.0; r];
+        kernels::csr_gemv_into_scalar(&m, &x, &mut ys);
+        kernels::csr_gemv_into_simd(&m, &x, &mut yv);
+        assert_eq!(bits(&ys), bits(&yv), "csr gemv {r}x{c}");
+    }
+}
+
+#[test]
+fn csr_gemv_t_bitwise() {
+    for &(r, c) in SHAPES {
+        let m = sparse(r, c, 17);
+        let x = vecn(r, 18);
+        let mut ys = vec![0.0; c];
+        let mut yv = vec![0.0; c];
+        kernels::csr_gemv_t_into_scalar(&m, &x, &mut ys);
+        kernels::csr_gemv_t_into_simd(&m, &x, &mut yv);
+        assert_eq!(bits(&ys), bits(&yv), "csr gemv_t {r}x{c}");
+    }
+}
+
+#[test]
+fn csr_fused_grad_range_bitwise_with_empty_rows() {
+    for &(r, c) in SHAPES {
+        let m = sparse(r, c, 19);
+        let w = vecn(c, 20);
+        let y = vecn(r, 21);
+        for (lo, hi) in [(0, r), (r / 3, r), (0, (2 * r) / 3 + 1), (r / 2, r / 2 + 1)] {
+            if lo >= hi {
+                continue;
+            }
+            let mut gs = vecn(c, 22);
+            let mut gv = gs.clone();
+            let mut bs = vec![0.0; r];
+            let mut bv = vec![0.0; r];
+            let fs = kernels::csr_fused_grad_range_scalar(&m, &w, &y, &mut gs, &mut bs, lo, hi);
+            let fv = kernels::csr_fused_grad_range_simd(&m, &w, &y, &mut gv, &mut bv, lo, hi);
+            assert_eq!(fs.to_bits(), fv.to_bits(), "csr fused f {r}x{c} [{lo},{hi})");
+            assert_eq!(bits(&gs), bits(&gv), "csr fused g {r}x{c} [{lo},{hi})");
+            assert_eq!(bits(&bs), bits(&bv), "csr fused resid {r}x{c} [{lo},{hi})");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. The dispatched public path routes per simd_active()
+// ---------------------------------------------------------------------------
+
+#[test]
+fn public_methods_route_to_the_active_implementation() {
+    let (r, c) = (33, 19);
+    let m = dense(r, c, 23);
+    let x = vecn(c, 24);
+    let mut expected = vec![0.0; r];
+    if kernels::simd_active() {
+        kernels::mat_gemv_into_simd(&m, &x, &mut expected);
+    } else {
+        kernels::mat_gemv_into_scalar(&m, &x, &mut expected);
+    }
+    assert_eq!(bits(&m.gemv(&x)), bits(&expected));
+
+    let s = sparse(r, c, 25);
+    let mut got = vec![0.0; r];
+    let mut want = vec![0.0; r];
+    s.gemv_into(&x, &mut got);
+    if kernels::simd_active() {
+        kernels::csr_gemv_into_simd(&s, &x, &mut want);
+    } else {
+        kernels::csr_gemv_into_scalar(&s, &x, &mut want);
+    }
+    assert_eq!(bits(&got), bits(&want));
+}
+
+// ---------------------------------------------------------------------------
+// 3. f32 mode reaches the Theorem-1 neighborhood
+// ---------------------------------------------------------------------------
+
+fn coded_gd_run(prob: &QuadProblem, precision: Precision, seed: u64) -> RunOutput {
+    let enc = EncodedProblem::encode_stored_prec(
+        prob,
+        EncoderKind::Hadamard,
+        2.0,
+        8,
+        seed,
+        StorageKind::Auto,
+        precision,
+    )
+    .unwrap();
+    let engine = Box::new(NativeEngine::new(&enc));
+    let cfg = ClusterConfig {
+        workers: 8,
+        wait_for: 6,
+        delay: DelayModel::Exp { mean_ms: 10.0 },
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed,
+    };
+    let mut cluster = Cluster::new(&enc, engine, cfg).unwrap();
+    CodedGd::new(GdConfig { epsilon: Some(0.2), seed, ..Default::default() })
+        .run(&enc, &mut cluster, 120)
+        .unwrap()
+}
+
+/// Coded GD with f32 worker shards lands in the same Theorem-1
+/// neighborhood as f64. Tolerance: the f32 run's gap may exceed the f64
+/// run's by at most 5% of the initial suboptimality — narrowing perturbs
+/// each round's gradient by O(ε_f32 ‖X̃‖‖w‖), which GD's contraction
+/// absorbs; it cannot change where the iterates settle at this scale.
+#[test]
+fn f32_coded_gd_matches_f64_neighborhood() {
+    let (prob, _) = QuadProblem::planted(256, 24, 0.0, 0.01, 11);
+    let f_star = prob.objective(&prob.exact_solution().unwrap());
+    let f0 = prob.objective(&[0.0; 24]);
+    let out64 = coded_gd_run(&prob, Precision::F64, 11);
+    let out32 = coded_gd_run(&prob, Precision::F32, 11);
+    let gap64 = out64.trace.best_objective() - f_star;
+    let gap32 = out32.trace.best_objective() - f_star;
+    assert!(!out32.trace.diverged(), "f32 run diverged");
+    assert!(
+        gap64 < 0.02 * (f0 - f_star),
+        "f64 baseline did not converge: gap {gap64:.3e}"
+    );
+    assert!(
+        gap32 < gap64 + 0.05 * (f0 - f_star),
+        "f32 gap {gap32:.3e} strayed beyond f64 gap {gap64:.3e} + 5% of f0−f*"
+    );
+}
+
+/// The narrowed problem the f32 run solves really is narrowed: shard
+/// payloads halve and the recorded precision label round-trips.
+#[test]
+fn f32_shards_are_half_size_end_to_end() {
+    let (prob, _) = QuadProblem::planted(128, 16, 0.0, 0.01, 3);
+    let enc64 = EncodedProblem::encode_stored_prec(
+        &prob,
+        EncoderKind::Hadamard,
+        2.0,
+        4,
+        3,
+        StorageKind::Dense,
+        Precision::F64,
+    )
+    .unwrap();
+    let enc32 = EncodedProblem::encode_stored_prec(
+        &prob,
+        EncoderKind::Hadamard,
+        2.0,
+        4,
+        3,
+        StorageKind::Dense,
+        Precision::F32,
+    )
+    .unwrap();
+    assert_eq!(enc32.precision, Precision::F32);
+    assert_eq!(Precision::parse(&enc32.precision.to_string()).unwrap(), Precision::F32);
+    let x64: usize = enc64.shards.iter().map(|s| s.x.mem_bytes()).sum();
+    let x32: usize = enc32.shards.iter().map(|s| s.x.mem_bytes()).sum();
+    assert_eq!(x32 * 2, x64, "f32 X̃ payload must be exactly half");
+    assert!(enc32.shards.iter().all(|s| matches!(s.x, DataMat::DenseF32(_))));
+}
