@@ -15,15 +15,17 @@ pub use args::Args;
 
 use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, Scenario};
 use crate::config::Json;
+use crate::encoding::temporal::TemporalScheme;
 use crate::encoding::EncoderKind;
 use crate::linalg::{Precision, StorageKind};
 use crate::optim::{
     CodedGd, CodedLbfgs, CodedSgd, GdConfig, LbfgsConfig, LrSchedule, Optimizer, SgdConfig,
+    SteppedOptimizer,
 };
 use crate::problem::{EncodedProblem, QuadProblem};
 use crate::runtime::{
-    build_engine_with, EncodedShardCache, EngineKind, JobServer, JobSpec, RebalanceConfig,
-    ServeOptimizer, ServePolicy,
+    build_engine_with, run_pipelined, EncodedShardCache, EngineKind, JobServer, JobSpec,
+    RebalanceConfig, ServeOptimizer, ServePolicy,
 };
 use anyhow::{Context, Result};
 
@@ -53,6 +55,19 @@ SUBCOMMANDS
     --threads 0     native-engine resident worker-pool size: the pool is
                     spawned once per run and every round is dispatched to
                     its shard-owning lanes (0 = all cores)
+    --scheme none|seq:W:B|stoch:Q  temporal gradient-coding scheme (default
+                    none): seq:W:B splits each worker's home block into W
+                    per-round window slots and mirrors the first B on a
+                    buddy at weight 1/sqrt(2) (S^T S = I, beta ~ 1+B/W,
+                    exact at full participation); stoch:Q backs every raw
+                    row on a random buddy with probability Q (unbiased in
+                    expectation). Replaces --encoder; not combinable with
+                    --rebalance or --storage sparse
+    --pipeline-depth 1  measured-clock round pipelining: keep up to D
+                    rounds' straggler tails in flight, retiring each round
+                    at its k-th admission and deferring ack drains (1 =
+                    serial blocking rounds; virtual-clock traces are
+                    depth-invariant by construction)
     --scenario DSL  deterministic fault script layered over --delay, e.g.
                     crash:3@10,recover:3@25;admit:rotate:k
                     (events crash|recover|leave|join|slow|rack + an optional
@@ -170,6 +185,15 @@ fn cmd_ridge(args: &Args) -> Result<()> {
         );
     }
     let threads = args.flag_usize("threads", 0)?;
+    let scheme = TemporalScheme::parse(args.flag_str("scheme", "none"))?;
+    if scheme != TemporalScheme::None && args.flag("encoder").is_some() {
+        anyhow::bail!(
+            "--scheme {scheme} is a temporal gradient code that replaces the \
+             within-round encoder; drop --encoder (or use --scheme none)"
+        );
+    }
+    let pipeline_depth = args.flag_usize("pipeline-depth", 1)?;
+    anyhow::ensure!(pipeline_depth >= 1, "--pipeline-depth must be >= 1");
     let scenario = match (args.flag("scenario"), args.flag("scenario-json")) {
         (Some(_), Some(_)) => {
             anyhow::bail!("--scenario and --scenario-json are mutually exclusive")
@@ -195,11 +219,22 @@ fn cmd_ridge(args: &Args) -> Result<()> {
         );
     }
 
+    let code_label = if scheme == TemporalScheme::None {
+        format!("encoder={kind}")
+    } else {
+        format!("scheme={scheme}")
+    };
     println!(
-        "# ridge: n={n} p={p} λ={lambda} m={m} k={k} β={beta} encoder={kind} engine={engine_kind:?} clock={clock:?} algo={algo}"
+        "# ridge: n={n} p={p} λ={lambda} m={m} k={k} β={beta} {code_label} \
+         engine={engine_kind:?} clock={clock:?} algo={algo}{}",
+        if pipeline_depth > 1 { format!(" pipeline-depth={pipeline_depth}") } else { String::new() }
     );
     let prob = QuadProblem::synthetic_gaussian(n, p, lambda, seed);
-    let enc = EncodedProblem::encode_stored_prec(&prob, kind, beta, m, seed, storage, precision)?;
+    let enc = if scheme == TemporalScheme::None {
+        EncodedProblem::encode_stored_prec(&prob, kind, beta, m, seed, storage, precision)?
+    } else {
+        EncodedProblem::encode_temporal_stored_prec(&prob, scheme, m, seed, storage, precision)?
+    };
     println!(
         "# storage={} precision={} ({} shard bytes across {} workers){}",
         enc.storage,
@@ -226,10 +261,20 @@ fn cmd_ridge(args: &Args) -> Result<()> {
         println!("# rebalance: {rebalance}");
         cluster.set_rebalancer(&enc, rebalance)?;
     }
+    // depth 1 takes the historical blocking path; deeper runs retire each
+    // round at its k-th admission (a no-op for virtual-clock timing)
+    let run_at_depth = |opt: &dyn SteppedOptimizer, cluster: &mut Cluster| {
+        if pipeline_depth > 1 {
+            run_pipelined(opt, &enc, cluster, iters, None, pipeline_depth)
+        } else {
+            opt.run(&enc, cluster, iters)
+        }
+    };
     let out = match algo {
-        "gd" => CodedGd::new(GdConfig { seed, ..Default::default() }).run(&enc, &mut cluster, iters)?,
+        "gd" => run_at_depth(&CodedGd::new(GdConfig { seed, ..Default::default() }), &mut cluster)?,
         "lbfgs" => {
-            CodedLbfgs::new(LbfgsConfig { seed, ..Default::default() }).run(&enc, &mut cluster, iters)?
+            let cfg = LbfgsConfig { seed, ..Default::default() };
+            run_at_depth(&CodedLbfgs::new(cfg), &mut cluster)?
         }
         "sgd" => {
             let lr = args
@@ -247,7 +292,7 @@ fn cmd_ridge(args: &Args) -> Result<()> {
                 seed,
             };
             cfg.validate()?;
-            CodedSgd::new(cfg).run(&enc, &mut cluster, iters)?
+            run_at_depth(&CodedSgd::new(cfg), &mut cluster)?
         }
         other => anyhow::bail!("unknown --optimizer {other:?} (gd|lbfgs|sgd)"),
     };
@@ -829,6 +874,76 @@ mod tests {
         assert!(run(&[
             "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "4", "--iters", "1",
             "--encoder", "replication", "--rebalance", "ewma:0.5:2",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn tiny_ridge_seq_scheme_runs() {
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "3",
+            "--scheme", "seq:4:1",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn tiny_ridge_stoch_scheme_runs() {
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "3",
+            "--scheme", "stoch:0.5", "--optimizer", "lbfgs",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn tiny_ridge_pipelined_runs_on_both_clocks() {
+        for clock in ["virtual", "measured"] {
+            run(&[
+                "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "3",
+                "--clock", clock, "--pipeline-depth", "2", "--threads", "2",
+            ])
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn ridge_rejects_scheme_combined_with_encoder() {
+        let err = run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "1",
+            "--scheme", "seq:4:1", "--encoder", "hadamard",
+        ])
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("--encoder"),
+            "error should name the conflict: {err:#}"
+        );
+    }
+
+    #[test]
+    fn ridge_rejects_malformed_scheme_and_zero_pipeline_depth() {
+        assert!(run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "1",
+            "--scheme", "seq:4",
+        ])
+        .is_err());
+        assert!(run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "1",
+            "--pipeline-depth", "0",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn ridge_rejects_temporal_scheme_with_sparse_storage_or_rebalance() {
+        assert!(run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "1",
+            "--scheme", "seq:4:1", "--storage", "sparse",
+        ])
+        .is_err());
+        assert!(run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "1",
+            "--scheme", "seq:4:1", "--rebalance", "ewma:0.5:2",
         ])
         .is_err());
     }

@@ -33,7 +33,7 @@
 //! | `leave:W@R` / `join:W@R` | membership churn — same effect as crash/recover, distinct trace label |
 //! | `slow:W:F@R` | worker `W`'s delay is multiplied by `F` from round `R` (slow-onset: chain several) |
 //! | `rack:LO-HI:F@R` | correlated rack-wide straggling — workers `LO..=HI` all slowed by `F` from round `R` |
-//! | `admit:rotate:K` | round `t` admits exactly `{(t+j) mod m : j < K}` — the adversarial rotating-(m−K) worst case; `K` may be the literal `k` (the cluster's `wait_for`) |
+//! | `admit:rotate:K` | iteration `t` admits exactly `{(t+j) mod m : j < K}` — the adversarial rotating-(m−K) worst case; `K` may be the literal `k` (the cluster's `wait_for`). The window slides once per optimizer iteration (see [`RoundKind`]), so an L-BFGS line-search round reuses its gradient round's window |
 //! | `admit:fixed:W.W...` | every round admits exactly the listed workers (`.`-separated) |
 //! | `admit:cycle:SET/SET...` | round `t` admits exactly `SET[t mod len]`, each set `.`-separated |
 //!
@@ -215,9 +215,13 @@ pub enum AdmitPolicy {
     /// The cluster's normal first-k-by-arrival gather (no override).
     #[default]
     FirstK,
-    /// Round `t` admits exactly `{(t + j) mod m : j < K}` — the rotating
-    /// window whose complement is the adversarial rotating-(m−K)
+    /// Iteration `t` admits exactly `{(t + j) mod m : j < K}` — the
+    /// rotating window whose complement is the adversarial rotating-(m−K)
     /// straggler set from Theorem 1's "arbitrarily varying subset" claim.
+    /// The window slides once per *optimizer iteration*
+    /// ([`RoundKind::Iteration`]), not per dispatch: an L-BFGS iteration's
+    /// line-search round reuses its gradient round's window, so Theorem 1's
+    /// worst case rotates at the rate the theorem states it in.
     Rotate {
         /// Window size; `None` is the literal `k` (resolved to the
         /// cluster's `wait_for` when the scenario is attached).
@@ -496,6 +500,25 @@ impl RoundScript {
     }
 }
 
+/// What kind of cluster round is being staged, from the scenario's point
+/// of view. Events always fire on the *cluster round* counter (every
+/// dispatch — gradient, mini-batch, or line-search — advances it by one,
+/// as the module docs state), but [`AdmitPolicy::Rotate`]'s window slides
+/// on the *iteration phase*: only [`RoundKind::Iteration`] rounds advance
+/// it. Without this split, L-BFGS's line-search round would slide the
+/// Theorem-1 rotating worst case twice per optimizer iteration — the
+/// adversary the theorem bounds rotates per iteration, not per dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundKind {
+    /// The round that opens an optimizer iteration (gradient or
+    /// mini-batch gradient dispatch). Advances the rotation phase.
+    Iteration,
+    /// An auxiliary dispatch inside the same iteration (line search).
+    /// Consumes a cluster round (events still fire) but leaves the
+    /// rotation phase where the iteration's gradient round put it.
+    Auxiliary,
+}
+
 /// The runtime state of an attached scenario: the script plus the
 /// current crashed/slow masks and the round counter.
 #[derive(Clone, Debug)]
@@ -507,6 +530,9 @@ pub struct ScenarioState {
     crashed: Vec<bool>,
     slow: Vec<f64>,
     round: u64,
+    /// Iteration phase: how many [`RoundKind::Iteration`] rounds have
+    /// begun. Drives the `Rotate` window; `round` drives everything else.
+    phase: u64,
 }
 
 impl ScenarioState {
@@ -525,6 +551,7 @@ impl ScenarioState {
             crashed: vec![false; m],
             slow: vec![1.0; m],
             round: 0,
+            phase: 0,
         })
     }
 
@@ -549,9 +576,11 @@ impl ScenarioState {
     }
 
     /// Apply this round's events and return the round's script; advances
-    /// the round counter. Called once per cluster round, in round order.
-    pub fn begin_round(&mut self) -> RoundScript {
+    /// the round counter (and, for [`RoundKind::Iteration`] rounds, the
+    /// rotation phase). Called once per cluster round, in round order.
+    pub fn begin_round(&mut self, kind: RoundKind) -> RoundScript {
         let t = self.round;
+        let phase = self.phase;
         let mut labels = Vec::new();
         for e in &self.scenario.events {
             if e.round() != t {
@@ -576,13 +605,16 @@ impl ScenarioState {
         }
         let admit = match &self.scenario.admit {
             AdmitPolicy::FirstK => None,
-            AdmitPolicy::Rotate { .. } => {
-                Some((0..self.rotate_k).map(|j| (t as usize + j) % self.m).collect())
-            }
+            AdmitPolicy::Rotate { .. } => Some(
+                (0..self.rotate_k).map(|j| (phase as usize + j) % self.m).collect(),
+            ),
             AdmitPolicy::Fixed { workers } => Some(workers.clone()),
             AdmitPolicy::Cycle { sets } => Some(sets[(t as usize) % sets.len()].clone()),
         };
         self.round += 1;
+        if kind == RoundKind::Iteration {
+            self.phase += 1;
+        }
         RoundScript {
             labels,
             crashed: self.crashed.clone(),
@@ -713,20 +745,20 @@ mod tests {
     fn state_machine_applies_crash_recover_and_slow() {
         let sc = Scenario::parse("slow:1:4@0,crash:2@1,recover:2@3,slow:1:8@2").unwrap();
         let mut st = ScenarioState::new(sc, 4, 4).unwrap();
-        let r0 = st.begin_round();
+        let r0 = st.begin_round(RoundKind::Iteration);
         assert_eq!(r0.labels, vec!["slow:1:4@0"]);
         assert_eq!(r0.slow, vec![1.0, 4.0, 1.0, 1.0]);
         assert_eq!(r0.crashed, vec![false; 4]);
-        let r1 = st.begin_round();
+        let r1 = st.begin_round(RoundKind::Iteration);
         assert_eq!(r1.labels, vec!["crash:2@1"]);
         assert!(r1.crashed[2]);
         assert_eq!(r1.slow[1], 4.0, "slow factor persists");
-        let r2 = st.begin_round();
+        let r2 = st.begin_round(RoundKind::Iteration);
         assert_eq!(r2.slow[1], 8.0, "slow-onset: later event overwrites");
         assert!(r2.crashed[2], "crash persists");
-        let r3 = st.begin_round();
+        let r3 = st.begin_round(RoundKind::Iteration);
         assert!(!r3.crashed[2], "recover clears crash");
-        let r4 = st.begin_round();
+        let r4 = st.begin_round(RoundKind::Iteration);
         assert!(r4.labels.is_empty(), "quiet round has no labels");
         assert_eq!(st.round(), 5);
     }
@@ -735,46 +767,76 @@ mod tests {
     fn recover_resets_slow_factor() {
         let sc = Scenario::parse("rack:0-2:6@0,recover:1@2").unwrap();
         let mut st = ScenarioState::new(sc, 4, 4).unwrap();
-        assert_eq!(st.begin_round().slow, vec![6.0, 6.0, 6.0, 1.0]);
-        st.begin_round();
-        assert_eq!(st.begin_round().slow, vec![6.0, 1.0, 6.0, 1.0]);
+        assert_eq!(st.begin_round(RoundKind::Iteration).slow, vec![6.0, 6.0, 6.0, 1.0]);
+        st.begin_round(RoundKind::Iteration);
+        assert_eq!(st.begin_round(RoundKind::Iteration).slow, vec![6.0, 1.0, 6.0, 1.0]);
     }
 
     #[test]
     fn rotate_window_rotates_and_wraps() {
         let sc = Scenario::parse("admit:rotate:3").unwrap();
         let mut st = ScenarioState::new(sc, 4, 4).unwrap();
-        assert_eq!(st.begin_round().admit.unwrap(), vec![0, 1, 2]);
-        assert_eq!(st.begin_round().admit.unwrap(), vec![1, 2, 3]);
-        assert_eq!(st.begin_round().admit.unwrap(), vec![2, 3, 0]);
-        assert_eq!(st.begin_round().admit.unwrap(), vec![3, 0, 1]);
-        assert_eq!(st.begin_round().admit.unwrap(), vec![0, 1, 2]);
+        assert_eq!(st.begin_round(RoundKind::Iteration).admit.unwrap(), vec![0, 1, 2]);
+        assert_eq!(st.begin_round(RoundKind::Iteration).admit.unwrap(), vec![1, 2, 3]);
+        assert_eq!(st.begin_round(RoundKind::Iteration).admit.unwrap(), vec![2, 3, 0]);
+        assert_eq!(st.begin_round(RoundKind::Iteration).admit.unwrap(), vec![3, 0, 1]);
+        assert_eq!(st.begin_round(RoundKind::Iteration).admit.unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rotate_window_holds_across_auxiliary_rounds() {
+        // An L-BFGS iteration is gradient (Iteration) + line search
+        // (Auxiliary): the rotation window must slide once per
+        // iteration, while events and the Cycle policy still advance on
+        // every cluster round.
+        let sc = Scenario::parse("crash:3@1;admit:rotate:3").unwrap();
+        let mut st = ScenarioState::new(sc, 4, 4).unwrap();
+        let g0 = st.begin_round(RoundKind::Iteration);
+        assert_eq!(g0.admit.unwrap(), vec![0, 1, 2]);
+        let ls0 = st.begin_round(RoundKind::Auxiliary);
+        assert_eq!(ls0.admit.unwrap(), vec![0, 1, 2], "line search reuses the window");
+        assert_eq!(ls0.labels, vec!["crash:3@1"], "events still fire per cluster round");
+        let g1 = st.begin_round(RoundKind::Iteration);
+        assert_eq!(g1.admit.unwrap(), vec![1, 2, 3], "next iteration slides once");
+        assert_eq!(st.begin_round(RoundKind::Auxiliary).admit.unwrap(), vec![1, 2, 3]);
+        assert_eq!(st.round(), 4, "every dispatch consumed a cluster round");
+    }
+
+    #[test]
+    fn cycle_policy_advances_per_cluster_round() {
+        // Cycle is an exact per-round script: auxiliary rounds consume
+        // sets too (unchanged, unlike Rotate's per-iteration phase).
+        let mut st =
+            ScenarioState::new(Scenario::parse("admit:cycle:0.1/2.3").unwrap(), 4, 4).unwrap();
+        assert_eq!(st.begin_round(RoundKind::Iteration).admit.unwrap(), vec![0, 1]);
+        assert_eq!(st.begin_round(RoundKind::Auxiliary).admit.unwrap(), vec![2, 3]);
+        assert_eq!(st.begin_round(RoundKind::Iteration).admit.unwrap(), vec![0, 1]);
     }
 
     #[test]
     fn rotate_k_literal_resolves_to_wait_for() {
         let sc = Scenario::parse("admit:rotate:k").unwrap();
         let mut st = ScenarioState::new(sc, 8, 6).unwrap();
-        assert_eq!(st.begin_round().admit.unwrap().len(), 6);
+        assert_eq!(st.begin_round(RoundKind::Iteration).admit.unwrap().len(), 6);
     }
 
     #[test]
     fn fixed_and_cycle_policies() {
         let mut st =
             ScenarioState::new(Scenario::parse("admit:fixed:1.3").unwrap(), 4, 4).unwrap();
-        assert_eq!(st.begin_round().admit.unwrap(), vec![1, 3]);
-        assert_eq!(st.begin_round().admit.unwrap(), vec![1, 3]);
+        assert_eq!(st.begin_round(RoundKind::Iteration).admit.unwrap(), vec![1, 3]);
+        assert_eq!(st.begin_round(RoundKind::Iteration).admit.unwrap(), vec![1, 3]);
         let mut st =
             ScenarioState::new(Scenario::parse("admit:cycle:0.1/2.3").unwrap(), 4, 4).unwrap();
-        assert_eq!(st.begin_round().admit.unwrap(), vec![0, 1]);
-        assert_eq!(st.begin_round().admit.unwrap(), vec![2, 3]);
-        assert_eq!(st.begin_round().admit.unwrap(), vec![0, 1]);
+        assert_eq!(st.begin_round(RoundKind::Iteration).admit.unwrap(), vec![0, 1]);
+        assert_eq!(st.begin_round(RoundKind::Iteration).admit.unwrap(), vec![2, 3]);
+        assert_eq!(st.begin_round(RoundKind::Iteration).admit.unwrap(), vec![0, 1]);
     }
 
     #[test]
     fn first_k_policy_gives_no_override() {
         let mut st =
             ScenarioState::new(Scenario::parse("crash:0@0").unwrap(), 4, 3).unwrap();
-        assert!(st.begin_round().admit.is_none());
+        assert!(st.begin_round(RoundKind::Iteration).admit.is_none());
     }
 }

@@ -35,7 +35,7 @@
 
 pub mod fault;
 
-pub use fault::{AdmitPolicy, FaultEvent, RoundScript, Scenario, ScenarioState};
+pub use fault::{AdmitPolicy, FaultEvent, RoundKind, RoundScript, Scenario, ScenarioState};
 
 use crate::problem::{BatchPlan, EncodedProblem};
 use crate::rng::Pcg64;
@@ -386,6 +386,14 @@ pub struct Cluster {
     /// crash masks pushed to the resident worker pool; all-false when the
     /// engine has no session).
     parked: Vec<bool>,
+    /// Pipelined-dispatch depth for measured-clock gradient rounds: the
+    /// leader retires a round at its k-th admission and leaves up to
+    /// `pipeline_depth - 1` rounds' straggler tails settling in the
+    /// engine. `1` (the default) is the fully blocking historical path.
+    /// Virtual-clock rounds ignore this entirely — their admission is
+    /// post hoc over a collect-all gather, so there is no tail to
+    /// overlap and traces stay byte-identical at every depth.
+    pipeline_depth: usize,
     /// Rounds whose delay schedule has been sampled — must track
     /// `rounds_run` exactly (see [`Cluster::sample_delays`]).
     delay_rounds: u64,
@@ -447,6 +455,7 @@ impl Cluster {
             scenario: None,
             rebalancer: None,
             parked,
+            pipeline_depth: 1,
             delay_rounds: 0,
             sim_ms: 0.0,
             rounds_run: 0,
@@ -541,6 +550,26 @@ impl Cluster {
         }
     }
 
+    /// Set the pipelined-dispatch depth (see the `pipeline_depth` field
+    /// docs). Depth 1 restores the fully blocking round loop; any depth
+    /// is admission-equivalent to depth 1 — the pipeline only overlaps
+    /// straggler tails *after* a round's admission has closed.
+    pub fn set_pipeline_depth(&mut self, depth: usize) {
+        assert!(depth >= 1, "pipeline depth must be at least 1");
+        self.pipeline_depth = depth;
+    }
+
+    /// The active pipelined-dispatch depth.
+    pub fn pipeline_depth(&self) -> usize {
+        self.pipeline_depth
+    }
+
+    /// Flush every in-flight pipelined dispatch (the end-of-run
+    /// barrier). No-op at depth 1 or when nothing is outstanding.
+    pub fn drain_pipeline(&mut self) -> Result<()> {
+        self.engine.drain_dispatch()
+    }
+
     /// Sample this round's injected delays. **This is the single place
     /// the delay RNG is consumed**, and its order is the reproducibility
     /// contract: exactly once per cluster round, at round start (before
@@ -567,10 +596,14 @@ impl Cluster {
     /// scripted crashes into the schedule as fail-stop (infinite) delays
     /// — the one scenario effect shared by both clock modes — and push
     /// the crash mask to the engine session so resident pool workers park
-    /// instead of computing responses the leader would discard.
-    fn stage_round(&mut self) -> (Vec<f64>, Option<RoundScript>) {
+    /// instead of computing responses the leader would discard. `kind`
+    /// tells the scenario whether this dispatch opens an optimizer
+    /// iteration (gradient / mini-batch) or rides inside one (line
+    /// search): events fire on every cluster round regardless, but the
+    /// `admit:rotate` window slides only on iteration rounds.
+    fn stage_round(&mut self, kind: RoundKind) -> (Vec<f64>, Option<RoundScript>) {
         let mut delays = self.sample_delays();
-        let script = self.scenario.as_mut().map(|s| s.begin_round());
+        let script = self.scenario.as_mut().map(|s| s.begin_round(kind));
         if let Some(sc) = &script {
             for (i, d) in delays.iter_mut().enumerate() {
                 if sc.crashed[i] {
@@ -897,7 +930,7 @@ impl Cluster {
 
     fn grad_round_impl(&mut self, w: &[f64]) -> Result<(GradResponses, Round)> {
         let m = self.cfg.workers;
-        let (mut delays, script) = self.stage_round();
+        let (mut delays, script) = self.stage_round(RoundKind::Iteration);
         let (responses, mut round) = match self.cfg.clock {
             ClockMode::Virtual => {
                 let sink = GradCollector::collect_all(m);
@@ -908,6 +941,23 @@ impl Cluster {
                 Self::apply_virtual_script(&mut compute, &mut delays, script.as_ref());
                 let admit = script.as_ref().and_then(|s| s.admit.as_deref());
                 let round = self.virtual_round(compute, &delays, admit);
+                (Self::take_admitted(&round, collected)?, round)
+            }
+            ClockMode::Measured if self.pipeline_depth > 1 => {
+                // Pipelined round: dispatch without awaiting the engine's
+                // fan-out, retire at the k-th admission (the Condvar
+                // snapshot), and leave up to depth-1 rounds' straggler
+                // tails settling behind us. The admitted set and every
+                // admitted payload are final at cancellation time, so
+                // this arm is admission-identical to the blocking arm
+                // below — only *when* straggler acks are reaped differs.
+                let (eligible, k) = self.scripted_eligibility(&delays, script.as_ref());
+                let sink = GradCollector::first_k(m, k, eligible);
+                self.engine.worker_grad_dispatch(w, &sink)?;
+                let collected = sink.wait_cancelled_snapshot();
+                drop(sink); // our handle; lane clones die as lanes finish
+                self.engine.drain_dispatch_to(self.pipeline_depth - 1)?;
+                let round = Self::measured_round(&collected, &delays);
                 (Self::take_admitted(&round, collected)?, round)
             }
             ClockMode::Measured => {
@@ -963,7 +1013,7 @@ impl Cluster {
             "mini-batch rounds do not support elastic rebalancing: batch aggregation \
              reads the static per-worker row counts (run --rebalance off with --optimizer sgd)"
         );
-        let (mut delays, script) = self.stage_round();
+        let (mut delays, script) = self.stage_round(RoundKind::Iteration);
         let (responses, mut round) = match self.cfg.clock {
             ClockMode::Virtual => {
                 let sink = GradCollector::collect_all(m);
@@ -1009,7 +1059,7 @@ impl Cluster {
 
     fn linesearch_round_impl(&mut self, d: &[f64]) -> Result<(CurvResponses, Round)> {
         let m = self.cfg.workers;
-        let (mut delays, script) = self.stage_round();
+        let (mut delays, script) = self.stage_round(RoundKind::Auxiliary);
         let (responses, mut round) = match self.cfg.clock {
             ClockMode::Virtual => {
                 let sink = CurvCollector::collect_all(m);

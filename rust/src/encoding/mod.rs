@@ -31,6 +31,7 @@ pub mod hadamard;
 pub mod identity;
 pub mod replication;
 pub mod spectrum;
+pub mod temporal;
 
 use crate::linalg::{DataMat, Mat};
 use anyhow::{bail, Result};

@@ -1,0 +1,465 @@
+//! Temporal gradient-coding encoders — coding *across* rounds.
+//!
+//! The paper's families in the sibling modules amortize redundancy
+//! *within* one round: every worker's shard mixes many raw rows, and any
+//! k of m responses recover the full gradient. The temporal schemes here
+//! take the complementary view of Tandon et al.'s gradient coding: keep
+//! raw rows intact (so per-round worker cost is a plain partial
+//! gradient) and place the redundancy across a *window* of rounds, so
+//! that stragglers who miss a bounded burst of consecutive rounds are
+//! covered by a buddy's backup copy.
+//!
+//! Our round loop is synchronous first-k, so the window structure is
+//! realized spatially — each worker's home block is split into `W`
+//! per-round slots and the first `B` slots are mirrored on a buddy —
+//! and the across-round story lives in [`runtime::temporal`]'s
+//! pipelined stepper, which keeps up to `depth` rounds' straggler tails
+//! in flight over these layouts.
+//!
+//! Two schemes, both row-selection codes (every output row is a scaled
+//! copy of exactly one raw row):
+//!
+//! * [`SequentialGradientCoding`] (`--scheme seq:W:B`): deterministic.
+//!   Worker `i`'s home block is split into `W` slots; slots `0..B` are
+//!   backed on buddy `(i + 1 + j) mod m` with weight `1/√2` on both
+//!   copies, the rest carry weight 1. Squared weights per raw row sum
+//!   to 1, so `SᵀS = I` exactly — a unit-tight frame with redundancy
+//!   `β ≈ 1 + B/W` — and full participation is exact.
+//! * [`StochasticGradientCoding`] (`--scheme stoch:Q`): probabilistic.
+//!   Every raw row sits on its home worker with weight 1 and, with
+//!   probability `q`, on a uniformly random buddy with weight 1.
+//!   `SᵀS = diag(1 + dup)` — identity only in expectation after the
+//!   scheme-aware `1/(gram_scale·η·n)` normalization — so recovery is
+//!   approximate even at full participation (mirroring the paper's
+//!   Gaussian caveat).
+//!
+//! [`runtime::temporal`]: crate::runtime::temporal
+
+use super::spectrum::partition_rows;
+use super::Encoder;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use anyhow::{bail, ensure, Result};
+use std::f64::consts::FRAC_1_SQRT_2;
+
+/// Temporal-coding scheme selector (CLI grammar `none | seq:W:B | stoch:Q`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TemporalScheme {
+    /// No temporal coding — within-round encoding only (the default).
+    None,
+    /// Sequential gradient coding: `W`-round windows, `B`-burst tolerance.
+    Seq { window: usize, burst: usize },
+    /// Stochastic gradient coding: pair-wise backup with probability `q`.
+    Stoch { q: f64 },
+}
+
+impl TemporalScheme {
+    /// Parse the CLI grammar `none | seq:W:B | stoch:Q`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let lower = s.to_ascii_lowercase();
+        if lower == "none" {
+            return Ok(TemporalScheme::None);
+        }
+        let mut parts = lower.split(':');
+        match parts.next() {
+            Some("seq") => {
+                let window: usize = parts
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("seq scheme needs a window: seq:W:B"))?
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad seq window in {s:?}"))?;
+                let burst: usize = parts
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("seq scheme needs a burst: seq:W:B"))?
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad seq burst in {s:?}"))?;
+                ensure!(parts.next().is_none(), "trailing fields in scheme {s:?}");
+                ensure!(window >= 1, "seq window must be >= 1, got {window}");
+                ensure!(
+                    (1..=window).contains(&burst),
+                    "seq burst must be in 1..=window, got {burst} (window {window})"
+                );
+                Ok(TemporalScheme::Seq { window, burst })
+            }
+            Some("stoch") => {
+                let q: f64 = parts
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("stoch scheme needs a probability: stoch:Q"))?
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad stoch probability in {s:?}"))?;
+                ensure!(parts.next().is_none(), "trailing fields in scheme {s:?}");
+                ensure!(
+                    q > 0.0 && q <= 1.0 && q.is_finite(),
+                    "stoch probability must be in (0, 1], got {q}"
+                );
+                Ok(TemporalScheme::Stoch { q })
+            }
+            _ => bail!("unknown temporal scheme {s:?} (expected none | seq:W:B | stoch:Q)"),
+        }
+    }
+}
+
+impl std::fmt::Display for TemporalScheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TemporalScheme::None => f.write_str("none"),
+            TemporalScheme::Seq { window, burst } => write!(f, "seq:{window}:{burst}"),
+            TemporalScheme::Stoch { q } => write!(f, "stoch:{q}"),
+        }
+    }
+}
+
+/// Shared body of the two temporal codes: a worker-grouped row-selection
+/// operator. Output row `r` is `taps[r].1 ×` raw row `taps[r].0`;
+/// `boundaries[i]` is worker `i`'s half-open output-row range.
+struct TapCode {
+    n: usize,
+    taps: Vec<(usize, f64)>,
+    boundaries: Vec<(usize, usize)>,
+}
+
+/// One worker's output rows during construction: home copies first (raw
+/// row order), then backup copies it hosts for others (raw row order).
+#[derive(Default)]
+struct WorkerRows {
+    home: Vec<(usize, f64)>,
+    backup: Vec<(usize, f64)>,
+}
+
+impl TapCode {
+    fn assemble(n: usize, per_worker: Vec<WorkerRows>) -> TapCode {
+        let mut taps = Vec::new();
+        let mut boundaries = Vec::with_capacity(per_worker.len());
+        for mut w in per_worker {
+            let lo = taps.len();
+            taps.append(&mut w.home);
+            taps.append(&mut w.backup);
+            boundaries.push((lo, taps.len()));
+        }
+        TapCode { n, taps, boundaries }
+    }
+
+    fn encode(&self, x: &Mat) -> Mat {
+        Mat::from_fn(self.taps.len(), x.cols(), |r, c| {
+            let (src, wgt) = self.taps[r];
+            wgt * x.get(src, c)
+        })
+    }
+
+    fn materialize(&self) -> Mat {
+        let mut s = Mat::zeros(self.taps.len(), self.n);
+        for (r, &(src, wgt)) in self.taps.iter().enumerate() {
+            s.set(r, src, wgt);
+        }
+        s
+    }
+}
+
+/// Sequential gradient coding (`seq:W:B`) — see the module docs.
+///
+/// Constraints: `1 ≤ B ≤ W`, `m ≥ B + 1` (every backed slot needs a
+/// buddy distinct from its home), and `n ≥ m·W` (every per-round slot
+/// non-empty).
+pub struct SequentialGradientCoding {
+    code: TapCode,
+    window: usize,
+    burst: usize,
+}
+
+impl SequentialGradientCoding {
+    /// Build for `n` raw rows across `m` workers.
+    pub fn new(n: usize, m: usize, window: usize, burst: usize) -> Result<Self> {
+        ensure!(window >= 1, "seq window must be >= 1, got {window}");
+        ensure!(
+            (1..=window).contains(&burst),
+            "seq burst must be in 1..=window, got {burst} (window {window})"
+        );
+        ensure!(
+            m >= burst + 1,
+            "seq:{window}:{burst} needs at least {} workers, got {m}",
+            burst + 1
+        );
+        ensure!(
+            n >= m * window,
+            "seq:{window}:{burst} needs n >= m*W = {} rows, got {n}",
+            m * window
+        );
+        let home = partition_rows(n, m);
+        let mut per_worker: Vec<WorkerRows> = (0..m).map(|_| WorkerRows::default()).collect();
+        for (i, &(lo, hi)) in home.iter().enumerate() {
+            let slots = partition_rows(hi - lo, window);
+            for (j, &(slo, shi)) in slots.iter().enumerate() {
+                let backed = j < burst;
+                let wgt = if backed { FRAC_1_SQRT_2 } else { 1.0 };
+                for r in lo + slo..lo + shi {
+                    per_worker[i].home.push((r, wgt));
+                    if backed {
+                        let buddy = (i + 1 + j) % m;
+                        per_worker[buddy].backup.push((r, FRAC_1_SQRT_2));
+                    }
+                }
+            }
+        }
+        for w in &mut per_worker {
+            w.backup.sort_unstable_by_key(|&(src, _)| src);
+        }
+        let code = TapCode::assemble(n, per_worker);
+        Ok(SequentialGradientCoding { code, window, burst })
+    }
+
+    /// Half-open output-row ranges, one per worker, in worker order.
+    /// The problem constructor shards exactly at these boundaries.
+    pub fn worker_boundaries(&self) -> &[(usize, usize)] {
+        &self.code.boundaries
+    }
+
+    /// Window length `W` (rounds per coding window).
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Burst tolerance `B` (consecutive missed rounds covered).
+    pub fn burst(&self) -> usize {
+        self.burst
+    }
+}
+
+impl Encoder for SequentialGradientCoding {
+    fn name(&self) -> &'static str {
+        "seq-gc"
+    }
+
+    fn rows_in(&self) -> usize {
+        self.code.n
+    }
+
+    fn rows_out(&self) -> usize {
+        self.code.taps.len()
+    }
+
+    fn encode(&self, x: &Mat) -> Mat {
+        self.code.encode(x)
+    }
+
+    fn materialize(&self) -> Mat {
+        self.code.materialize()
+    }
+
+    /// Unit-tight by construction: each raw row's squared weights sum to
+    /// `(1/√2)² + (1/√2)² = 1` (backed) or `1²` (unbacked), so `SᵀS = I`.
+    fn gram_scale(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Stochastic gradient coding (`stoch:Q`) — see the module docs.
+///
+/// Constraints: `m ≥ 2` (a buddy must differ from the home worker),
+/// `n ≥ m`, `q ∈ (0, 1]`.
+pub struct StochasticGradientCoding {
+    code: TapCode,
+    q: f64,
+}
+
+impl StochasticGradientCoding {
+    /// Build for `n` raw rows across `m` workers; `seed` fixes the
+    /// backup draws (rows are visited in raw order, one `u64` for the
+    /// coin and one for the buddy — reproducible across runs).
+    pub fn new(n: usize, m: usize, q: f64, seed: u64) -> Result<Self> {
+        ensure!(m >= 2, "stoch coding needs at least 2 workers, got {m}");
+        ensure!(n >= m, "stoch coding needs n >= m, got n={n} m={m}");
+        ensure!(
+            q > 0.0 && q <= 1.0 && q.is_finite(),
+            "stoch probability must be in (0, 1], got {q}"
+        );
+        let home = partition_rows(n, m);
+        let mut rng = Pcg64::new(seed, 0x7e4d_0a11);
+        let mut per_worker: Vec<WorkerRows> = (0..m).map(|_| WorkerRows::default()).collect();
+        for (i, &(lo, hi)) in home.iter().enumerate() {
+            for r in lo..hi {
+                per_worker[i].home.push((r, 1.0));
+                if rng.next_f64() < q {
+                    // uniform over the m-1 workers that are not the home
+                    let draw = rng.next_below(m as u64 - 1) as usize;
+                    let buddy = if draw >= i { draw + 1 } else { draw };
+                    per_worker[buddy].backup.push((r, 1.0));
+                }
+            }
+        }
+        for w in &mut per_worker {
+            w.backup.sort_unstable_by_key(|&(src, _)| src);
+        }
+        let code = TapCode::assemble(n, per_worker);
+        Ok(StochasticGradientCoding { code, q })
+    }
+
+    /// Half-open output-row ranges, one per worker, in worker order.
+    pub fn worker_boundaries(&self) -> &[(usize, usize)] {
+        &self.code.boundaries
+    }
+
+    /// Backup probability `q`.
+    pub fn q(&self) -> f64 {
+        self.q
+    }
+}
+
+impl Encoder for StochasticGradientCoding {
+    fn name(&self) -> &'static str {
+        "stoch-gc"
+    }
+
+    fn rows_in(&self) -> usize {
+        self.code.n
+    }
+
+    fn rows_out(&self) -> usize {
+        self.code.taps.len()
+    }
+
+    fn encode(&self, x: &Mat) -> Mat {
+        self.code.encode(x)
+    }
+
+    fn materialize(&self) -> Mat {
+        self.code.materialize()
+    }
+
+    // gram_scale: default (= realized β = rows_out/n). SᵀS is diagonal
+    // with entries in {1, 2}; dividing by the realized average makes the
+    // first-k estimate unbiased in expectation over the backup draws.
+
+    /// `SᵀS ≠ c·I` row-wise, so even k = m recovery is approximate.
+    fn exact_at_full_participation(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_grammar_round_trips() {
+        for s in ["none", "seq:4:1", "seq:6:3", "stoch:0.25", "stoch:1"] {
+            let parsed = TemporalScheme::parse(s).unwrap();
+            assert_eq!(TemporalScheme::parse(&parsed.to_string()).unwrap(), parsed, "{s}");
+        }
+        assert_eq!(TemporalScheme::parse("NONE").unwrap(), TemporalScheme::None);
+        assert_eq!(
+            TemporalScheme::parse("seq:4:2").unwrap(),
+            TemporalScheme::Seq { window: 4, burst: 2 }
+        );
+        assert_eq!(TemporalScheme::parse("stoch:0.5").unwrap(), TemporalScheme::Stoch { q: 0.5 });
+    }
+
+    #[test]
+    fn scheme_grammar_rejects_malformed() {
+        for s in [
+            "", "seq", "seq:4", "seq:4:0", "seq:2:3", "seq:0:0", "seq:4:1:9", "seq:x:1",
+            "stoch", "stoch:0", "stoch:1.5", "stoch:-0.1", "stoch:nan", "stoch:0.5:2", "burst:3",
+        ] {
+            assert!(TemporalScheme::parse(s).is_err(), "accepted malformed scheme {s:?}");
+        }
+    }
+
+    #[test]
+    fn seq_is_a_unit_tight_frame() {
+        let enc = SequentialGradientCoding::new(48, 6, 4, 2).unwrap();
+        let s = enc.materialize();
+        assert_eq!(s.rows(), enc.rows_out());
+        assert_eq!(s.cols(), 48);
+        let gram = s.gram();
+        let err = gram.max_abs_diff(&Mat::eye(48));
+        assert!(err < 1e-12, "seq gram deviates from I by {err}");
+        assert_eq!(enc.gram_scale(), 1.0);
+        assert!(enc.exact_at_full_participation());
+        // β = 1 + B/W when W divides every home block evenly (48/6 = 8 rows, W=4)
+        assert!((enc.beta() - 1.5).abs() < 1e-12, "beta {}", enc.beta());
+    }
+
+    #[test]
+    fn seq_encode_matches_materialized_multiply() {
+        let enc = SequentialGradientCoding::new(40, 5, 4, 1).unwrap();
+        let mut rng = Pcg64::seeded(3);
+        let x = Mat::from_fn(40, 3, |_, _| rng.next_gaussian());
+        let err = enc.encode(&x).max_abs_diff(&enc.materialize().matmul(&x));
+        assert!(err < 1e-14, "encode disagrees with S@X by {err}");
+    }
+
+    #[test]
+    fn seq_boundaries_cover_all_output_rows_and_buddies_differ() {
+        let (n, m, window, burst) = (50, 7, 3, 2);
+        let enc = SequentialGradientCoding::new(n, m, window, burst).unwrap();
+        let b = enc.worker_boundaries();
+        assert_eq!(b.len(), m);
+        assert_eq!(b[0].0, 0);
+        assert_eq!(b[m - 1].1, enc.rows_out());
+        for w in b.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "worker ranges must tile the output");
+        }
+        // every backed raw row appears on exactly two distinct workers
+        let home = partition_rows(n, m);
+        let s = enc.materialize();
+        for src in 0..n {
+            let holders: Vec<usize> = (0..m)
+                .filter(|&i| (b[i].0..b[i].1).any(|r| s.get(r, src) != 0.0))
+                .collect();
+            let home_w = home.iter().position(|&(lo, hi)| (lo..hi).contains(&src)).unwrap();
+            assert!(holders.contains(&home_w), "row {src} missing from home worker");
+            assert!(holders.len() <= 2, "row {src} on {} workers", holders.len());
+        }
+    }
+
+    #[test]
+    fn seq_rejects_bad_geometry() {
+        assert!(SequentialGradientCoding::new(48, 6, 4, 0).is_err());
+        assert!(SequentialGradientCoding::new(48, 6, 2, 3).is_err());
+        assert!(SequentialGradientCoding::new(48, 2, 4, 2).is_err()); // m < B+1
+        assert!(SequentialGradientCoding::new(10, 6, 4, 1).is_err()); // n < m*W
+    }
+
+    #[test]
+    fn stoch_gram_is_diagonal_with_unit_or_double_entries() {
+        let enc = StochasticGradientCoding::new(40, 5, 0.5, 11).unwrap();
+        let s = enc.materialize();
+        let gram = s.gram();
+        for i in 0..40 {
+            for j in 0..40 {
+                let g = gram.get(i, j);
+                if i == j {
+                    assert!(g == 1.0 || g == 2.0, "diag {i} = {g}");
+                } else {
+                    assert_eq!(g, 0.0, "off-diag ({i},{j}) = {g}");
+                }
+            }
+        }
+        // gram_scale is the realized average duplication
+        let trace: f64 = (0..40).map(|i| gram.get(i, i)).sum();
+        assert!((enc.gram_scale() - trace / 40.0).abs() < 1e-12);
+        assert!(!enc.exact_at_full_participation());
+    }
+
+    #[test]
+    fn stoch_is_seeded_and_q_one_backs_every_row() {
+        let a = StochasticGradientCoding::new(30, 4, 0.3, 9).unwrap();
+        let b = StochasticGradientCoding::new(30, 4, 0.3, 9).unwrap();
+        assert_eq!(a.rows_out(), b.rows_out());
+        assert!(a.materialize().max_abs_diff(&b.materialize()) == 0.0, "same seed, same code");
+        let c = StochasticGradientCoding::new(30, 4, 0.3, 10).unwrap();
+        let differs =
+            a.rows_out() != c.rows_out() || a.materialize().max_abs_diff(&c.materialize()) > 0.0;
+        assert!(differs, "different seeds must draw different codes");
+        let full = StochasticGradientCoding::new(30, 4, 1.0, 1).unwrap();
+        assert_eq!(full.rows_out(), 60, "q = 1 duplicates every row");
+        assert!((full.beta() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stoch_rejects_bad_args() {
+        assert!(StochasticGradientCoding::new(30, 1, 0.5, 0).is_err());
+        assert!(StochasticGradientCoding::new(2, 4, 0.5, 0).is_err());
+        assert!(StochasticGradientCoding::new(30, 4, 0.0, 0).is_err());
+        assert!(StochasticGradientCoding::new(30, 4, 1.5, 0).is_err());
+    }
+}

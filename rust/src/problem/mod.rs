@@ -136,6 +136,18 @@ pub enum Scheme {
     /// redundancy `β = s+1`). The comparator the paper's intro argues
     /// against: exactness costs redundancy linear in the straggler count.
     GradientCoded { groups: usize },
+    /// Sequential (temporal) gradient coding, `--scheme seq:W:B`: worker
+    /// home blocks split into `W` window slots, the first `B` mirrored on
+    /// a buddy at weight `1/√2` — a unit-tight frame (`SᵀS = I`), so the
+    /// leader aggregates exactly like [`Scheme::Coded`] with
+    /// `gram_scale = 1` (see [`encoding::temporal`](crate::encoding::temporal)).
+    SeqCoded { window: usize, burst: usize },
+    /// Stochastic (temporal) gradient coding, `--scheme stoch:Q`: every
+    /// raw row backed on a random buddy with probability `q`. Aggregated
+    /// like [`Scheme::Coded`] with the *realized* duplication as
+    /// `gram_scale` — unbiased over the backup draws, approximate per
+    /// realization.
+    StochCoded,
 }
 
 /// One worker's stored shard (already encoded + zero-padded).
@@ -418,6 +430,93 @@ impl EncodedProblem {
             kind: EncoderKind::Replication, // closest CLI label; scheme disambiguates
             beta: rep as f64,
             gram_scale: 1.0,
+            storage,
+            precision,
+            raw: prob.clone(),
+        })
+    }
+
+    /// Temporal gradient coding (`--scheme seq:W:B | stoch:Q`): encode
+    /// with one of the [`encoding::temporal`](crate::encoding::temporal)
+    /// row-selection codes and shard at the code's **worker boundaries**
+    /// (each worker gets its home copies plus the backups it hosts for
+    /// its buddies — not a blind `partition_rows` split, which would put
+    /// a row's two copies on the same worker and void the redundancy).
+    ///
+    /// `scheme` must be `Seq` or `Stoch`; `TemporalScheme::None` is the
+    /// caller's signal to use the ordinary within-round constructors.
+    pub fn encode_temporal(
+        prob: &QuadProblem,
+        scheme: crate::encoding::temporal::TemporalScheme,
+        m: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        Self::encode_temporal_stored_prec(prob, scheme, m, seed, StorageKind::Auto, Precision::F64)
+    }
+
+    /// [`EncodedProblem::encode_temporal`] with explicit shard
+    /// [`StorageKind`] and [`Precision`] (same conventions as
+    /// [`EncodedProblem::encode_stored_prec`]: encoding runs in f64, the
+    /// finished shards are narrowed; `Sparse` is rejected because the
+    /// temporal codes' scaled-row gather densifies).
+    pub fn encode_temporal_stored_prec(
+        prob: &QuadProblem,
+        scheme: crate::encoding::temporal::TemporalScheme,
+        m: usize,
+        seed: u64,
+        storage: StorageKind,
+        precision: Precision,
+    ) -> Result<Self> {
+        use crate::encoding::temporal::{
+            SequentialGradientCoding, StochasticGradientCoding, TemporalScheme,
+        };
+        ensure!(m >= 1, "need at least one worker");
+        if storage == StorageKind::Sparse {
+            bail!("--storage sparse: temporal codes densify encoded rows; use dense|auto");
+        }
+        let n = prob.n();
+        type TemporalParts = (Box<dyn crate::encoding::Encoder>, Vec<(usize, usize)>, Scheme);
+        let (enc, boundaries, out_scheme): TemporalParts =
+            match scheme {
+                TemporalScheme::None => {
+                    bail!("encode_temporal called with scheme none; use EncodedProblem::encode")
+                }
+                TemporalScheme::Seq { window, burst } => {
+                    let e = SequentialGradientCoding::new(n, m, window, burst)?;
+                    let b = e.worker_boundaries().to_vec();
+                    (Box::new(e), b, Scheme::SeqCoded { window, burst })
+                }
+                TemporalScheme::Stoch { q } => {
+                    let e = StochasticGradientCoding::new(n, m, q, seed)?;
+                    let b = e.worker_boundaries().to_vec();
+                    (Box::new(e), b, Scheme::StochCoded)
+                }
+            };
+        let y_mat = Mat::col_vec(&prob.y);
+        let sx = enc.encode_data(&prob.x);
+        let sy_mat = enc.encode(&y_mat);
+        let sy: Vec<f64> = (0..sy_mat.rows()).map(|i| sy_mat.get(i, 0)).collect();
+        let shards: Vec<WorkerShard> = boundaries
+            .iter()
+            .enumerate()
+            .map(|(i, &(lo, hi))| {
+                let xs = sx.row_band(lo, hi);
+                let mut ys = sy[lo..hi].to_vec();
+                let rows_real = xs.rows();
+                let padded = pad_bucket(rows_real);
+                let xs = xs.pad_rows(padded).into_storage(storage);
+                ys.resize(padded, 0.0);
+                WorkerShard { x: xs, y: ys, rows_real, partition_id: i }
+            })
+            .collect();
+        let storage = resolved_storage(&shards, storage);
+        let shards = shards_to_precision(shards, precision);
+        Ok(EncodedProblem {
+            shards,
+            scheme: out_scheme,
+            kind: EncoderKind::Replication, // closest CLI label; scheme disambiguates
+            beta: enc.beta(),
+            gram_scale: enc.gram_scale(),
             storage,
             precision,
             raw: prob.clone(),
@@ -747,7 +846,10 @@ impl EncodedProblem {
     pub fn estimate_epsilon(&self, k: usize, trials: usize, seed: u64) -> Result<f64> {
         ensure!(k >= 1 && k <= self.m(), "bad k");
         ensure!(
-            !matches!(self.scheme, Scheme::Replicated { .. }),
+            !matches!(
+                self.scheme,
+                Scheme::Replicated { .. } | Scheme::SeqCoded { .. } | Scheme::StochCoded
+            ),
             "epsilon estimation applies to coded/uncoded schemes"
         );
         // rebuild the encoder to materialize S (shards don't keep it)
@@ -989,6 +1091,91 @@ mod tests {
         let prob = small_problem();
         assert!(EncodedProblem::encode_gradient_coding(&prob, 2, 8, 0).is_err());
         assert!(EncodedProblem::encode_gradient_coding(&prob, 1, 8, 0).is_ok());
+    }
+
+    #[test]
+    fn seq_coded_full_participation_matches_true_gradient() {
+        use crate::encoding::temporal::TemporalScheme;
+        let prob = small_problem();
+        let scheme = TemporalScheme::Seq { window: 4, burst: 2 };
+        let enc = EncodedProblem::encode_temporal(&prob, scheme, 8, 0).unwrap();
+        assert_eq!(enc.scheme, Scheme::SeqCoded { window: 4, burst: 2 });
+        assert_eq!(enc.gram_scale, 1.0);
+        assert!((enc.beta - 1.5).abs() < 1e-12, "beta {}", enc.beta);
+        let w = vec![0.15; 8];
+        let responses: Vec<(usize, Vec<f64>, f64)> = enc
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let mut g = vec![0.0; 8];
+                let mut buf = vec![0.0; s.x.rows()];
+                let f = s.x.fused_grad(&w, &s.y, &mut g, &mut buf);
+                (i, g, f)
+            })
+            .collect();
+        // SᵀS = I: all m responders recover the exact raw gradient
+        let (g_est, _) = enc.aggregate_grad(&w, &responses);
+        let g_true = prob.grad(&w);
+        for (a, b) in g_est.iter().zip(&g_true) {
+            assert!((a - b).abs() < 1e-9, "seq full-k: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn stoch_coded_is_seeded_and_scales_by_realized_duplication() {
+        use crate::encoding::temporal::TemporalScheme;
+        let prob = small_problem();
+        let scheme = TemporalScheme::Stoch { q: 0.5 };
+        let a = EncodedProblem::encode_temporal(&prob, scheme, 8, 3).unwrap();
+        let b = EncodedProblem::encode_temporal(&prob, scheme, 8, 3).unwrap();
+        assert_eq!(a.scheme, Scheme::StochCoded);
+        assert_eq!(a.gram_scale, b.gram_scale, "same seed, same realized code");
+        assert_eq!(a.beta, a.gram_scale, "stoch gram_scale is the realized beta");
+        assert!(a.beta > 1.0 && a.beta < 2.0);
+        // q = 1 duplicates every row on a distinct buddy: the realized
+        // code is a (permuted, worker-disjoint) 2x replication, exact at
+        // full participation under the 1/(c·η·n) normalization
+        let full =
+            EncodedProblem::encode_temporal(&prob, TemporalScheme::Stoch { q: 1.0 }, 8, 3).unwrap();
+        assert!((full.beta - 2.0).abs() < 1e-12);
+        let w = vec![0.15; 8];
+        let responses: Vec<(usize, Vec<f64>, f64)> = full
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let mut g = vec![0.0; 8];
+                let mut buf = vec![0.0; s.x.rows()];
+                let f = s.x.fused_grad(&w, &s.y, &mut g, &mut buf);
+                (i, g, f)
+            })
+            .collect();
+        let (g_est, _) = full.aggregate_grad(&w, &responses);
+        let g_true = prob.grad(&w);
+        for (x, y) in g_est.iter().zip(&g_true) {
+            assert!((x - y).abs() < 1e-9, "stoch q=1 full-k: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn temporal_encode_rejects_none_scheme_and_sparse_storage() {
+        use crate::encoding::temporal::TemporalScheme;
+        let prob = small_problem();
+        assert!(EncodedProblem::encode_temporal(&prob, TemporalScheme::None, 8, 0).is_err());
+        assert!(EncodedProblem::encode_temporal_stored_prec(
+            &prob,
+            TemporalScheme::Seq { window: 4, burst: 1 },
+            8,
+            0,
+            StorageKind::Sparse,
+            Precision::F64,
+        )
+        .is_err());
+        // epsilon estimation has no meaning for the stand-in kind label
+        let scheme = TemporalScheme::Seq { window: 4, burst: 1 };
+        let enc = EncodedProblem::encode_temporal(&prob, scheme, 8, 0).unwrap();
+        assert!(enc.estimate_epsilon(6, 2, 0).is_err());
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub mod pool;
 pub mod rebalance;
 pub mod serve;
 pub mod stream;
+pub mod temporal;
 pub mod xla_engine;
 
 pub use artifacts::Manifest;
@@ -49,6 +50,7 @@ pub use serve::{
     ServeOutcome, ServePolicy,
 };
 pub use stream::{Collected, Collector, CurvCollector, GradCollector};
+pub use temporal::{run_pipelined, PipelinedStepper};
 pub use xla_engine::XlaEngine;
 
 // The engines are storage-oblivious through `linalg::DataMat`: the native
@@ -196,6 +198,40 @@ pub trait ComputeEngine: Send {
             sink.deliver(i, q, t0.elapsed().as_secs_f64() * 1e3);
         }
         Ok(())
+    }
+
+    /// Dispatch one gradient round into `sink` **without waiting for the
+    /// engine's internal fan-out to settle** — the pipelined round
+    /// loop's dispatch half. The caller observes the round through the
+    /// sink's shared state
+    /// ([`Collector::wait_cancelled_snapshot`](stream::Collector::wait_cancelled_snapshot))
+    /// and later retires the dispatch with
+    /// [`ComputeEngine::drain_dispatch_to`].
+    ///
+    /// Default: the blocking streamed call (every engine is trivially
+    /// correct at pipeline depth 1 semantics — the dispatch is fully
+    /// settled on return and the drain is a no-op). [`NativeEngine`]
+    /// overrides this with the pool's deferred fan-out so the leader can
+    /// retire a round at its k-th admission while straggler lanes are
+    /// still delivering.
+    fn worker_grad_dispatch(&mut self, w: &[f64], sink: &GradCollector) -> Result<()> {
+        self.worker_grad_streamed(w, sink)
+    }
+
+    /// Block until at most `max_in_flight` dispatches issued through
+    /// [`ComputeEngine::worker_grad_dispatch`] remain unsettled — the
+    /// pipelined loop's bounded reorder window. Default: no-op (the
+    /// default dispatch is already settled on return).
+    fn drain_dispatch_to(&mut self, max_in_flight: usize) -> Result<()> {
+        let _ = max_in_flight;
+        Ok(())
+    }
+
+    /// Block until every outstanding dispatch is settled (pipeline
+    /// flush). After this, every sink handed to
+    /// [`ComputeEngine::worker_grad_dispatch`] is sole-owned again.
+    fn drain_dispatch(&mut self) -> Result<()> {
+        self.drain_dispatch_to(0)
     }
 
     /// Worker count.

@@ -118,6 +118,19 @@ impl ComputeEngine for NativeEngine {
         self.pool().grad_streamed(w, sink)
     }
 
+    /// Deferred pool fan-out: the lanes receive the round's commands but
+    /// their acknowledgements are queued instead of awaited, so the
+    /// leader can retire the round at its k-th admission
+    /// (`wait_cancelled_snapshot`) while straggler lanes finish in the
+    /// background. Retired by [`ComputeEngine::drain_dispatch_to`].
+    fn worker_grad_dispatch(&mut self, w: &[f64], sink: &GradCollector) -> Result<()> {
+        self.pool().grad_deferred(w, sink)
+    }
+
+    fn drain_dispatch_to(&mut self, max_in_flight: usize) -> Result<()> {
+        self.pool().drain_deferred_to(max_in_flight)
+    }
+
     fn worker_grad_batch(
         &mut self,
         worker: usize,

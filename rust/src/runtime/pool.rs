@@ -73,7 +73,7 @@ use super::stream::{CurvCollector, GradCollector};
 use crate::linalg::DataMat;
 use crate::problem::{BatchPlan, EncodedProblem, WorkerShard};
 use anyhow::{anyhow, ensure, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -359,6 +359,13 @@ pub struct WorkerPool {
     /// routing state did not): every later dispatch refuses cleanly
     /// instead of routing worker ids over a half-swapped pool.
     poisoned: bool,
+    /// Sent-masks of deferred broadcasts whose per-lane acks have not
+    /// been drained yet (oldest first). The ack channels are strict
+    /// FIFO — one ack per successfully-sent command — so **every**
+    /// blocking dispatch must drain this queue first or it would consume
+    /// a deferred round's acks as its own (see
+    /// [`WorkerPool::grad_deferred_for`]).
+    deferred: VecDeque<Vec<bool>>,
 }
 
 fn resolve_threads(threads: usize) -> usize {
@@ -395,7 +402,7 @@ impl WorkerPool {
         }
         let mut jobs = BTreeMap::new();
         jobs.insert(0, JobMeta { workers, chunk, parked: vec![false; workers] });
-        WorkerPool { lanes, jobs, spawned, poisoned: false }
+        WorkerPool { lanes, jobs, spawned, poisoned: false, deferred: VecDeque::new() }
     }
 
     /// Spawn a job-less pool with `threads` resident lanes (`0` =
@@ -409,7 +416,13 @@ impl WorkerPool {
         for i in 0..lane_count {
             lanes.push(spawn_lane(i, LaneState { jobs: BTreeMap::new() }));
         }
-        WorkerPool { lanes, jobs: BTreeMap::new(), spawned: lane_count as u64, poisoned: false }
+        WorkerPool {
+            lanes,
+            jobs: BTreeMap::new(),
+            spawned: lane_count as u64,
+            poisoned: false,
+            deferred: VecDeque::new(),
+        }
     }
 
     /// Worker count of job 0 (the single-tenant surface); 0 when job 0 is
@@ -462,6 +475,10 @@ impl WorkerPool {
             !self.poisoned,
             "worker pool poisoned by a failed reconfigure; rebuild the engine"
         );
+        // A blocking round must not race the deferred rounds' acks (the
+        // ack channels are FIFO): retire every outstanding deferred
+        // dispatch before taking our own acks.
+        self.drain_deferred()?;
         let mut sent = vec![false; self.lanes.len()];
         let mut err: Option<anyhow::Error> = None;
         for (i, lane) in self.lanes.iter().enumerate() {
@@ -492,6 +509,7 @@ impl WorkerPool {
             !self.poisoned,
             "worker pool poisoned by a failed reconfigure; rebuild the engine"
         );
+        self.drain_deferred()?;
         let lane = &self.lanes[lane_idx];
         lane.tx
             .send(cmd)
@@ -781,6 +799,9 @@ impl WorkerPool {
             !self.poisoned,
             "worker pool poisoned by a failed reconfigure; rebuild the engine"
         );
+        // migrate_for runs its own send/ack loop outside `broadcast`, so
+        // it must honor the same drain-first discipline.
+        self.drain_deferred()?;
         let meta = self.meta(job)?;
         let (workers, chunk) = (meta.workers, meta.chunk);
         let mut per_lane: Vec<Vec<(usize, Slot)>> = vec![Vec::new(); self.lanes.len()];
@@ -815,11 +836,100 @@ impl WorkerPool {
         }
     }
 
+    // ------------------------------------------- deferred (pipelined) dispatch
+
+    /// Fan one full-gradient round for `job` out to the lanes **without
+    /// waiting for their acknowledgements** — the pipelined round loop's
+    /// dispatch half. The sent-mask is queued on `deferred`; the acks
+    /// are consumed later by [`WorkerPool::drain_deferred_to`] (or by
+    /// the drain-first guard of the next blocking dispatch). Until then
+    /// the lanes own live clones of `sink`, so the caller must observe
+    /// the round through the sink's shared state
+    /// ([`Collector::wait_cancelled_snapshot`](super::stream::Collector::wait_cancelled_snapshot))
+    /// rather than `into_collected`.
+    pub fn grad_deferred_for(
+        &mut self,
+        job: usize,
+        w: &[f64],
+        sink: &GradCollector,
+    ) -> Result<()> {
+        ensure!(
+            !self.poisoned,
+            "worker pool poisoned by a failed reconfigure; rebuild the engine"
+        );
+        let workers = self.meta(job)?.workers;
+        ensure!(sink.workers() == workers, "sink worker count mismatch for job {job}");
+        sink.tag_job(job);
+        let w: Arc<[f64]> = Arc::from(w);
+        let mut sent = vec![false; self.lanes.len()];
+        let mut err: Option<anyhow::Error> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let cmd = Command::Grad {
+                job,
+                w: w.clone(),
+                sink: sink.clone_for_lane(i),
+                only: None,
+                skip_parked: true,
+            };
+            match lane.tx.send(cmd) {
+                Ok(()) => sent[i] = true,
+                Err(_) => {
+                    err.get_or_insert_with(|| anyhow!("pool lane {i} is gone (thread exited)"));
+                }
+            }
+        }
+        // queue the mask even on partial failure: the lanes that *were*
+        // sent to will ack, and those acks must still be drained in order
+        self.deferred.push_back(sent);
+        match err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Rounds dispatched with [`WorkerPool::grad_deferred_for`] whose
+    /// acks have not been drained yet.
+    pub fn deferred_depth(&self) -> usize {
+        self.deferred.len()
+    }
+
+    /// Drain deferred rounds (oldest first) until at most `max` remain
+    /// in flight — the pipelined loop's bounded reorder window. Blocks
+    /// on each drained round's remaining lane acks; by the time a round
+    /// is drained, every lane has dropped its sink clones, so the
+    /// caller's handle is sole owner again.
+    pub fn drain_deferred_to(&mut self, max: usize) -> Result<()> {
+        let mut err: Option<anyhow::Error> = None;
+        while self.deferred.len() > max {
+            let sent = self.deferred.pop_front().expect("len checked");
+            for (i, was_sent) in sent.iter().enumerate() {
+                if *was_sent && self.lanes[i].ack.recv().is_err() {
+                    err.get_or_insert_with(|| anyhow!("pool lane {i} died mid-round"));
+                }
+            }
+        }
+        match err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Drain every deferred round (the pipeline flush).
+    pub fn drain_deferred(&mut self) -> Result<()> {
+        self.drain_deferred_to(0)
+    }
+
     // ---------------------------------------- job-0 compatibility surface
 
     /// Stream one full-gradient round into `sink` (job 0).
     pub fn grad_streamed(&mut self, w: &[f64], sink: &GradCollector) -> Result<()> {
         self.grad_streamed_for(0, w, sink)
+    }
+
+    /// Deferred full-gradient round (job 0; see
+    /// [`WorkerPool::grad_deferred_for`]).
+    pub fn grad_deferred(&mut self, w: &[f64], sink: &GradCollector) -> Result<()> {
+        self.grad_deferred_for(0, w, sink)
     }
 
     /// Stream one mini-batch gradient round into `sink` (job 0).
@@ -1065,6 +1175,72 @@ mod tests {
         assert_eq!(got.admitted, vec![0, 1, 2]);
         for i in 3..8 {
             assert!(got.responses[i].is_none(), "worker {i} should have been cancelled");
+        }
+    }
+
+    #[test]
+    fn deferred_round_snapshot_matches_streamed_bitwise() {
+        let (_, mut p) = pool(1);
+        let w = vec![0.4; 6];
+        // blocking reference round
+        let sink = GradCollector::first_k(8, 3, vec![true; 8]);
+        p.grad_streamed(&w, &sink).unwrap();
+        let reference = sink.into_collected();
+        // deferred round observed through the snapshot instead
+        let sink = GradCollector::first_k(8, 3, vec![true; 8]);
+        p.grad_deferred(&w, &sink).unwrap();
+        assert_eq!(p.deferred_depth(), 1);
+        let snap = sink.wait_cancelled_snapshot();
+        assert_eq!(snap.admitted, reference.admitted);
+        for i in &snap.admitted {
+            let ((gs, fs), _) = snap.responses[*i].clone().unwrap();
+            let ((gr, fr), _) = reference.responses[*i].clone().unwrap();
+            assert_eq!(fs.to_bits(), fr.to_bits(), "worker {i}");
+            for (a, b) in gs.iter().zip(&gr) {
+                assert_eq!(a.to_bits(), b.to_bits(), "worker {i}");
+            }
+        }
+        p.drain_deferred().unwrap();
+        assert_eq!(p.deferred_depth(), 0);
+    }
+
+    #[test]
+    fn blocking_dispatch_drains_deferred_acks_first() {
+        // a deferred round left in flight must not desynchronize the ack
+        // FIFO: the next blocking round drains it and both stay correct
+        let (_, mut p) = pool(2);
+        let w = vec![0.2; 6];
+        let deferred_sink = GradCollector::first_k(8, 2, vec![true; 8]);
+        p.grad_deferred(&w, &deferred_sink).unwrap();
+        let _ = deferred_sink.wait_cancelled_snapshot();
+        let sink = GradCollector::collect_all(8);
+        p.grad_streamed(&w, &sink).unwrap();
+        assert_eq!(p.deferred_depth(), 0, "blocking dispatch must drain deferred rounds");
+        let got = sink.into_collected();
+        assert_eq!(got.delivery_order.len(), 8);
+        // the deferred sink is sole-owned again after the drain
+        let d = deferred_sink.into_collected();
+        assert_eq!(d.admitted.len(), 2);
+    }
+
+    #[test]
+    fn drain_deferred_to_keeps_a_bounded_window() {
+        let (_, mut p) = pool(1);
+        let w = vec![0.1; 6];
+        let mut sinks = Vec::new();
+        for _ in 0..3 {
+            let sink = GradCollector::first_k(8, 1, vec![true; 8]);
+            p.grad_deferred(&w, &sink).unwrap();
+            let _ = sink.wait_cancelled_snapshot();
+            sinks.push(sink);
+        }
+        assert_eq!(p.deferred_depth(), 3);
+        p.drain_deferred_to(1).unwrap();
+        assert_eq!(p.deferred_depth(), 1);
+        p.drain_deferred().unwrap();
+        assert_eq!(p.deferred_depth(), 0);
+        for sink in sinks {
+            assert_eq!(sink.into_collected().admitted.len(), 1);
         }
     }
 

@@ -258,6 +258,11 @@ impl Rebalancer {
                  shard migration is only legal for the count-normalized \
                  coded/uncoded schemes"
             ),
+            Scheme::SeqCoded { .. } | Scheme::StochCoded => bail!(
+                "--rebalance: temporal scheme {scheme:?} places a row's home and \
+                 backup copies on distinct buddies; migrating rows could co-locate \
+                 them and void the burst tolerance"
+            ),
         }
         ensure!(!shards.is_empty(), "rebalancer needs at least one shard");
         ensure!(
@@ -318,6 +323,13 @@ impl Rebalancer {
             })
             .collect();
         let t: Vec<f64> = parts.iter().zip(&cur_madds).map(|(&w, &c)| finish(w, c)).collect();
+        // the observe() guard drops zero-work and non-finite samples, so
+        // every estimate — and hence every predicted finish — is finite;
+        // a NaN here would silently disable sorted_desc's comparator and
+        // corrupt the lexicographic objective
+        for (&w, ti) in parts.iter().zip(&t) {
+            assert!(ti.is_finite(), "non-finite predicted finish for worker {w}: {ti}");
+        }
         let (mut hi, mut lo) = (0usize, 0usize);
         for i in 1..t.len() {
             if t[i] > t[hi] {
@@ -488,7 +500,38 @@ mod tests {
         assert!(
             Rebalancer::new(Scheme::GradientCoded { groups: 2 }, shards.clone(), 0.5, 2.0).is_err()
         );
+        assert!(Rebalancer::new(
+            Scheme::SeqCoded { window: 4, burst: 1 },
+            shards.clone(),
+            0.5,
+            2.0
+        )
+        .is_err());
+        assert!(Rebalancer::new(Scheme::StochCoded, shards.clone(), 0.5, 2.0).is_err());
         assert!(Rebalancer::new(Scheme::Uncoded, shards, 0.5, 2.0).is_ok());
+    }
+
+    #[test]
+    fn zero_work_and_nonfinite_observations_never_poison_the_ewma() {
+        // regression: a parked-then-resumed worker can report a round with
+        // mflops == 0; compute_ms / 0 is inf (or NaN at 0/0) and a single
+        // such sample would poison the EWMA forever
+        let shards = vec![dense_shard(24, 4, 1.0), dense_shard(24, 4, 2.0)];
+        let mut rb = rebalancer(shards, 1.5);
+        rb.observe(0, 10.0, 0.0); // zero-work round: dropped
+        assert_eq!(rb.estimate(0), None);
+        rb.observe(0, f64::INFINITY, 10.0); // non-finite sample: dropped
+        rb.observe(0, f64::NAN, 10.0);
+        rb.observe(0, -1.0, 10.0); // negative clock: dropped
+        assert_eq!(rb.estimate(0), None);
+        rb.observe(0, 10.0, 10.0); // first valid sample seeds cleanly
+        assert_eq!(rb.estimate(0), Some(1.0));
+        rb.observe(0, 0.0, 0.0); // 0/0 after seeding: still dropped
+        assert_eq!(rb.estimate(0), Some(1.0));
+        // and the planner's finish vector stays finite end to end
+        rb.observe(1, 30.0, 10.0);
+        let plan = rb.plan(&[true, true]).expect("imbalance should still trigger");
+        assert_eq!((plan.from, plan.to), (1, 0));
     }
 
     #[test]

@@ -735,6 +735,39 @@ mod tests {
             .get_or_encode(&prob, EncoderKind::Hadamard, 2.0, 8, 3, StorageKind::Dense)
             .unwrap();
         assert_eq!((cache.encodes(), cache.hits()), (2, 1));
+        // regression: both entry points must key identically — a
+        // get_or_encode after a get_or_encode_prec(F64) of the same
+        // request is a *hit* on the same Arc, never a second encode
+        let c = cache
+            .get_or_encode_prec(
+                &prob,
+                EncoderKind::Hadamard,
+                2.0,
+                8,
+                2,
+                StorageKind::Dense,
+                Precision::F64,
+            )
+            .unwrap();
+        assert!(
+            Arc::ptr_eq(&a, &c),
+            "get_or_encode and get_or_encode_prec(F64) diverged on the cache key"
+        );
+        assert_eq!((cache.encodes(), cache.hits()), (2, 2));
+        // while an F32 encode of the same request is a distinct entry
+        let f32_enc = cache
+            .get_or_encode_prec(
+                &prob,
+                EncoderKind::Hadamard,
+                2.0,
+                8,
+                2,
+                StorageKind::Dense,
+                Precision::F32,
+            )
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &f32_enc));
+        assert_eq!((cache.encodes(), cache.hits()), (3, 2));
         // a different problem (one bit of data) is a different key
         let mut prob2 = prob.clone();
         prob2.y[0] += 1e-9;

@@ -40,7 +40,7 @@
 //! handles are still alive instead of a generic message.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Admission policy a [`Collector`] applies as responses land.
 enum Admission {
@@ -72,6 +72,11 @@ struct Inner<T> {
 struct Shared<T> {
     inner: Mutex<Inner<T>>,
     cancel: AtomicBool,
+    /// Signalled (under the `inner` lock) when the cancellation flag
+    /// flips, so a leader blocked in
+    /// [`Collector::wait_cancelled_snapshot`] wakes exactly at the k-th
+    /// admission instead of polling.
+    cancelled_cv: Condvar,
     workers: usize,
     first_k: bool,
     /// Job this round belongs to (0 for single-tenant engines; retagged
@@ -137,6 +142,7 @@ impl<T> Collector<T> {
                     admission,
                 }),
                 cancel: AtomicBool::new(false),
+                cancelled_cv: Condvar::new(),
                 workers,
                 first_k,
                 job: AtomicUsize::new(0),
@@ -229,9 +235,48 @@ impl<T> Collector<T> {
             if eligible[worker] && inner.admitted.len() < k {
                 inner.admitted.push(worker);
                 if inner.admitted.len() == k {
+                    // Flag and wake while still holding the inner lock:
+                    // a waiter in `wait_cancelled_snapshot` re-checks the
+                    // flag under the same lock, so this wakeup cannot be
+                    // missed.
                     self.shared.cancel.store(true, Ordering::Release);
+                    self.shared.cancelled_cv.notify_all();
                 }
             }
+        }
+    }
+
+    /// Block until the round's cancellation flag flips (the k-th eligible
+    /// response landed — or nothing ever can, because every worker
+    /// failed), then snapshot what the collector has observed *at that
+    /// moment*. First-k sinks only: collect-all sinks never cancel, so
+    /// waiting on one would hang forever.
+    ///
+    /// This is the pipelined round loop's retirement point: the leader
+    /// learns the admitted set the instant admission closes, while lane
+    /// handles may still be alive delivering straggler responses (those
+    /// land in the shared state after the snapshot and are recorded but
+    /// never admitted — exactly the serial path's "drop their updates
+    /// upon arrival" semantics, observed earlier). The admitted set and
+    /// every admitted payload are final at cancellation time, so the
+    /// snapshot is deterministic wherever the serial path is.
+    pub fn wait_cancelled_snapshot(&self) -> Collected<T>
+    where
+        T: Clone,
+    {
+        assert!(
+            self.shared.first_k,
+            "wait_cancelled_snapshot requires a first-k collector \
+             (a collect-all sink never cancels)"
+        );
+        let mut guard = self.shared.inner.lock().expect("collector poisoned");
+        while !self.shared.cancel.load(Ordering::Acquire) {
+            guard = self.shared.cancelled_cv.wait(guard).expect("collector poisoned");
+        }
+        Collected {
+            responses: guard.responses.clone(),
+            delivery_order: guard.delivery_order.clone(),
+            admitted: guard.admitted.clone(),
         }
     }
 
@@ -398,5 +443,44 @@ mod tests {
         c.tag_job(7);
         let _leaked = c.clone_for_lane(3);
         let _ = c.into_collected();
+    }
+
+    #[test]
+    fn wait_snapshot_returns_at_kth_admission() {
+        let c: Collector<u32> = Collector::first_k(4, 2, vec![true; 4]);
+        let h = c.clone();
+        let deliverer = std::thread::spawn(move || {
+            h.deliver(3, 30, 1.0);
+            h.deliver(1, 10, 2.0);
+            // straggler lands after cancellation; still recorded in the
+            // shared state, but the snapshot may or may not see it
+            h.deliver(0, 0, 9.0);
+        });
+        let snap = c.wait_cancelled_snapshot();
+        assert_eq!(snap.admitted, vec![3, 1]);
+        assert_eq!(snap.responses[3].as_ref().unwrap().0, 30);
+        assert_eq!(snap.responses[1].as_ref().unwrap().0, 10);
+        deliverer.join().unwrap();
+        // the consuming extraction still sees every delivery
+        let full = c.into_collected();
+        assert_eq!(full.admitted, vec![3, 1]);
+        assert_eq!(full.delivery_order, vec![3, 1, 0]);
+    }
+
+    #[test]
+    fn wait_snapshot_immediate_when_precancelled() {
+        // all workers failed: first_k pre-cancels at construction, so the
+        // wait must return immediately with an empty admitted set
+        let c: Collector<u32> = Collector::first_k(2, 2, vec![false, false]);
+        let snap = c.wait_cancelled_snapshot();
+        assert!(snap.admitted.is_empty());
+        assert!(snap.responses.iter().all(|r| r.is_none()));
+    }
+
+    #[test]
+    #[should_panic(expected = "requires a first-k collector")]
+    fn wait_snapshot_rejects_collect_all() {
+        let c: Collector<u32> = Collector::collect_all(2);
+        let _ = c.wait_cancelled_snapshot();
     }
 }

@@ -1,0 +1,199 @@
+//! Temporal execution: the k-deep pipelined round loop.
+//!
+//! Every scheme in [`encoding`](crate::encoding) codes *within* a round;
+//! this module (with [`encoding::temporal`](crate::encoding::temporal))
+//! is the *across*-round half of temporal coding: a [`PipelinedStepper`]
+//! keeps up to `depth` gradient rounds' straggler tails in flight on the
+//! job-id'd pool protocol, retiring rounds strictly in order with a
+//! bounded reorder window.
+//!
+//! # What actually overlaps
+//!
+//! Synchronous first-k optimization is a serial recurrence: iterate
+//! `w_{t+1}` needs round `t`'s aggregated gradient, so round `t+1`'s
+//! *dispatch* cannot precede round `t`'s *admission*. What it does not
+//! need is round `t`'s stragglers: once the k-th eligible response has
+//! landed, the admitted set and every admitted payload are final, and the
+//! cancelled tail (workers that will notice the flag late, lanes that
+//! still owe their acknowledgements) is pure bookkeeping. The pipelined
+//! loop therefore retires a round at its **k-th admission** — blocking on
+//! the collector's cancellation condvar
+//! ([`Collector::wait_cancelled_snapshot`]) instead of the pool's ack
+//! drain — and defers up to `depth - 1` rounds' ack drains into the
+//! background while the optimizer's next iteration runs leader-side math
+//! and dispatches round `t+1`.
+//!
+//! # Why depth 1 is bitwise-serial
+//!
+//! At depth 1 the stepper never defers anything: the cluster keeps
+//! `pipeline_depth == 1`, every round runs the historical blocking
+//! measured arm, and the wrapped [`JobStep`] executes exactly the rounds
+//! of the solo path — pinned by `rust/tests/temporal_equivalence.rs`. At
+//! any depth the *admitted set* is computed by the identical first-k
+//! delivery-order rule, so virtual-clock traces (whose admission is post
+//! hoc over a collect-all gather and never deferred at all) are
+//! byte-identical at every depth.
+//!
+//! [`Collector::wait_cancelled_snapshot`]: super::stream::Collector::wait_cancelled_snapshot
+
+use crate::cluster::Cluster;
+use crate::optim::{JobStep, RunOutput, SteppedOptimizer};
+use crate::problem::EncodedProblem;
+use anyhow::{ensure, Result};
+
+/// A [`JobStep`] adapter that runs its inner stepper with up to `depth`
+/// rounds' straggler tails in flight (see the module docs). Depth 1 is
+/// structurally the serial stepper: the cluster's pipeline depth stays 1
+/// and the flush is a no-op.
+///
+/// The stepper restores the cluster to blocking semantics
+/// (`pipeline_depth = 1`, pipeline drained) when its run finishes or
+/// errors, so a cluster shared across jobs (the serve runtime) never
+/// leaks pipelining into a neighbor's rounds.
+pub struct PipelinedStepper {
+    inner: Option<Box<dyn JobStep>>,
+    depth: usize,
+    finished: bool,
+}
+
+impl PipelinedStepper {
+    /// Wrap `inner` at pipeline depth `depth` (≥ 1; 1 = serial).
+    pub fn new(inner: Box<dyn JobStep>, depth: usize) -> Result<Self> {
+        ensure!(depth >= 1, "pipeline depth must be at least 1, got {depth}");
+        Ok(PipelinedStepper { inner: Some(inner), depth, finished: false })
+    }
+
+    /// The configured pipeline depth.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Flush the pipeline and restore blocking round semantics on the
+    /// cluster. Idempotent; called automatically when the inner stepper
+    /// finishes or errors.
+    fn rewind(&mut self, cluster: &mut Cluster) -> Result<()> {
+        cluster.set_pipeline_depth(1);
+        cluster.drain_pipeline()
+    }
+}
+
+impl JobStep for PipelinedStepper {
+    fn step(&mut self, prob: &EncodedProblem, cluster: &mut Cluster) -> Result<bool> {
+        ensure!(!self.finished, "step called on a finished pipelined run");
+        cluster.set_pipeline_depth(self.depth);
+        let inner = self.inner.as_mut().expect("inner stepper present until output");
+        match inner.step(prob, cluster) {
+            Ok(true) => Ok(true),
+            Ok(false) => {
+                self.finished = true;
+                self.rewind(cluster)?;
+                Ok(false)
+            }
+            Err(e) => {
+                self.finished = true;
+                // the inner error is the primary failure; a drain error
+                // here means a lane died too, which the pool reports on
+                // the next dispatch anyway
+                let _ = self.rewind(cluster);
+                Err(e)
+            }
+        }
+    }
+
+    fn output(mut self: Box<Self>) -> RunOutput {
+        self.inner.take().expect("output called once").output()
+    }
+}
+
+/// Run `opt` for `iters` iterations from `w0` with a `depth`-deep
+/// pipelined round loop — the pipelined counterpart of
+/// [`Optimizer::run_from`](crate::optim::Optimizer::run_from), sharing
+/// its stepper code path (so depth 1 is the serial run, structurally).
+pub fn run_pipelined(
+    opt: &dyn SteppedOptimizer,
+    prob: &EncodedProblem,
+    cluster: &mut Cluster,
+    iters: usize,
+    w0: Option<Vec<f64>>,
+    depth: usize,
+) -> Result<RunOutput> {
+    let inner = opt.stepper(prob, cluster.config().wait_for, iters, w0)?;
+    let mut stepper = PipelinedStepper::new(inner, depth)?;
+    while stepper.step(prob, cluster)? {}
+    Ok(Box::new(stepper).output())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClockMode, ClusterConfig, DelayModel};
+    use crate::encoding::EncoderKind;
+    use crate::optim::{CodedGd, GdConfig, Optimizer};
+    use crate::problem::QuadProblem;
+    use crate::runtime::NativeEngine;
+
+    fn setup(clock: ClockMode) -> (EncodedProblem, Cluster) {
+        let prob = QuadProblem::synthetic_gaussian(64, 6, 0.0, 1);
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 2).unwrap();
+        let eng = Box::new(NativeEngine::new(&enc));
+        let cfg = ClusterConfig {
+            workers: 8,
+            wait_for: 6,
+            delay: DelayModel::Exp { mean_ms: 5.0 },
+            clock,
+            ms_per_mflop: 0.5,
+            seed: 7,
+        };
+        let c = Cluster::new(&enc, eng, cfg).unwrap();
+        (enc, c)
+    }
+
+    fn gd() -> CodedGd {
+        CodedGd::new(GdConfig { epsilon: Some(0.4), ..GdConfig::default() })
+    }
+
+    #[test]
+    fn depth_one_is_bitwise_the_serial_run() {
+        let (enc, mut c1) = setup(ClockMode::Virtual);
+        let serial = gd().run(&enc, &mut c1, 12).unwrap();
+        let (_, mut c2) = setup(ClockMode::Virtual);
+        let piped = run_pipelined(&gd(), &enc, &mut c2, 12, None, 1).unwrap();
+        assert_eq!(serial.trace.to_csv(), piped.trace.to_csv());
+        for (a, b) in serial.w.iter().zip(&piped.w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn virtual_clock_traces_are_depth_invariant() {
+        let (enc, mut c1) = setup(ClockMode::Virtual);
+        let d1 = run_pipelined(&gd(), &enc, &mut c1, 12, None, 1).unwrap();
+        for depth in [2, 4] {
+            let (_, mut c) = setup(ClockMode::Virtual);
+            let dk = run_pipelined(&gd(), &enc, &mut c, 12, None, depth).unwrap();
+            assert_eq!(d1.trace.to_csv(), dk.trace.to_csv(), "depth {depth} virtual trace differs");
+        }
+    }
+
+    #[test]
+    fn measured_pipeline_admits_k_per_round_and_drains() {
+        let (enc, mut c) = setup(ClockMode::Measured);
+        let out = run_pipelined(&gd(), &enc, &mut c, 10, None, 3).unwrap();
+        assert_eq!(out.trace.records.len(), 10);
+        for r in &out.trace.records {
+            assert_eq!(r.responders, 6, "every pipelined round admits exactly k");
+            assert!(r.compute_ms.is_finite());
+        }
+        // the run handed the cluster back in blocking state
+        assert_eq!(c.pipeline_depth(), 1);
+        // a fresh blocking round runs cleanly (nothing left in flight)
+        let (_, round) = c.grad_round(&out.w).unwrap();
+        assert_eq!(round.admitted.len(), 6);
+    }
+
+    #[test]
+    fn rejects_zero_depth() {
+        let (enc, mut c) = setup(ClockMode::Virtual);
+        assert!(run_pipelined(&gd(), &enc, &mut c, 3, None, 0).is_err());
+    }
+}

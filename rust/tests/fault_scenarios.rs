@@ -299,6 +299,25 @@ fn golden_trace_serve_scoped_slow() {
     assert_eq!(csvs[1], solo.trace.to_csv(), "sibling trace drifted from its solo run");
 }
 
+/// The per-*iteration* rotate contract, pinned end to end: L-BFGS runs
+/// two cluster rounds per iteration (gradient + line search), so a
+/// rotate window that slid per *dispatch* would step the adversary twice
+/// as fast and hand the line search a different straggler set than its
+/// own gradient round. The golden trace pins the per-iteration sliding
+/// byte for byte; the responder assertion catches the half-window
+/// regression directly (with `rotate:k` every round still admits k, but
+/// the trace bytes shift because the admitted *sets* change).
+#[test]
+fn golden_trace_lbfgs_rotate_slides_per_iteration() {
+    let (enc, mut cluster) = golden_cluster(EncoderKind::Hadamard, 2.0, StorageKind::Dense);
+    cluster.set_scenario(Scenario::parse("admit:rotate:k").unwrap()).unwrap();
+    let out = run_optimizer("lbfgs", &enc, &mut cluster, GOLDEN_ITERS);
+    for r in &out.trace.records {
+        assert_eq!(r.responders, 6, "rotate:k admits exactly k each iteration");
+    }
+    check_golden("lbfgs_hadamard_dense_rotate.csv", &out.trace.to_csv());
+}
+
 /// L-BFGS runs two cluster rounds per iteration (gradient + line
 /// search); events firing on the line-search round must still reach the
 /// iteration's trace record.
@@ -403,7 +422,13 @@ fn optimizers_survive_rounds_with_no_responders() {
             assert!(r.f_true.is_finite(), "{opt}: objective went non-finite");
             assert_eq!(r.responders, 0, "{opt}");
             assert_eq!(r.sim_ms, 0.0, "{opt}: empty rounds advance no simulated time");
+            // regression: the per-record compute-time summary averages
+            // over the admitted set; on an all-workers-gone round it is
+            // *defined* as 0.0, never a 0/0 NaN
+            assert_eq!(r.compute_ms, 0.0, "{opt}: empty-round compute_ms must be 0");
         }
+        let csv = out.trace.to_csv();
+        assert!(!csv.contains("NaN"), "{opt}: NaN leaked into the trace CSV:\n{csv}");
     }
 }
 

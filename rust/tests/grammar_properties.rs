@@ -1,12 +1,13 @@
 //! Property tests for every CLI/config grammar: `DelayModel`,
-//! `LrSchedule`, `RebalanceConfig`, `ServePolicy`, and the
-//! fault-scenario DSL all promise `parse(x.to_string()) == x` (the
+//! `LrSchedule`, `RebalanceConfig`, `ServePolicy`, `TemporalScheme`, and
+//! the fault-scenario DSL all promise `parse(x.to_string()) == x` (the
 //! config/JSON round-trip contract) and strict rejection of malformed
 //! input — plus a scheduler-fairness property for the serve scheduler.
 //! Driven by the seeded `testutil::property` harness, so every failure
 //! reports a reproducible case seed.
 
 use codedopt::cluster::{AdmitPolicy, DelayModel, FaultEvent, Scenario};
+use codedopt::encoding::temporal::TemporalScheme;
 use codedopt::optim::LrSchedule;
 use codedopt::rng::Pcg64;
 use codedopt::runtime::{RebalanceConfig, SchedJob, Scheduler, ServePolicy};
@@ -188,6 +189,43 @@ fn fair_scheduler_never_starves_an_active_job() {
         }
         assert_eq!(counts, lens, "every job must run exactly its round budget");
     });
+}
+
+fn any_temporal_scheme(rng: &mut Pcg64) -> TemporalScheme {
+    match gen_range(rng, 0, 2) {
+        0 => TemporalScheme::None,
+        1 => {
+            // the validated domain: window ≥ 1, 1 ≤ burst ≤ window
+            let window = gen_range(rng, 1, 16);
+            TemporalScheme::Seq { window, burst: gen_range(rng, 1, window) }
+        }
+        // q ∈ (0, 1]; Display/parse of f64 is shortest-round-trip
+        _ => TemporalScheme::Stoch { q: rng.range_f64(1e-6, 1.0) },
+    }
+}
+
+#[test]
+fn temporal_scheme_grammar_round_trips_every_variant() {
+    property("temporal scheme parse<->Display", 200, |rng| {
+        let scheme = any_temporal_scheme(rng);
+        let text = scheme.to_string();
+        let back = TemporalScheme::parse(&text)
+            .unwrap_or_else(|e| panic!("reparse of {text:?} failed: {e}"));
+        assert_eq!(back, scheme, "round trip drifted for {text:?}");
+    });
+}
+
+#[test]
+fn temporal_scheme_rejects_malformed_grammar() {
+    // wrong arity (both directions), out-of-domain numerics, unknown heads
+    for bad in [
+        "", ":", "none:1", "seq", "seq:", "seq:4", "seq:4:", "seq:4:2:1", "seq:0:1",
+        "seq:4:0", "seq:2:3", "seq:abc:1", "seq:4:abc", "seq:4,2", "stoch", "stoch:",
+        "stoch:0", "stoch:1.5", "stoch:-0.5", "stoch:nan", "stoch:inf", "stoch:abc",
+        "stoch:0.5:1", "burst:3", "window:4:2",
+    ] {
+        assert!(TemporalScheme::parse(bad).is_err(), "should reject {bad:?}");
+    }
 }
 
 fn any_event(rng: &mut Pcg64) -> FaultEvent {

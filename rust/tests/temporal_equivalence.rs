@@ -1,0 +1,189 @@
+//! Pipelined-round equivalence pinning for `runtime::temporal`.
+//!
+//! The contract the tentpole rests on: pipelining is a *latency* change,
+//! never a *numerics* change.
+//!
+//! 1. **Depth 1 is the serial loop** — `run_pipelined(.., depth = 1)`
+//!    reproduces `Optimizer::run` bit for bit (final iterate and full CSV
+//!    trace) for gd/lbfgs/sgd across hadamard, replication, and uncoded
+//!    encodings, with and without an adversarial `admit:rotate:k`
+//!    scenario in the loop.
+//! 2. **Virtual-clock depth invariance** — under `ClockMode::Virtual` the
+//!    simulated clock stays serial at any depth, so depths 2 and 4 must
+//!    replay the depth-1 trace byte for byte. Any drift means pipeline
+//!    state (deferred acks, reorder window, scenario RNG) leaked into the
+//!    numerics.
+//! 3. **Temporal schemes ride the same rails** — `seq:W:B` and `stoch:Q`
+//!    encodings run under the pipelined stepper with the same depth
+//!    invariance, and descend on the true objective.
+//! 4. **Determinism** — a pipelined run replays itself exactly.
+
+use codedopt::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, Scenario};
+use codedopt::encoding::temporal::TemporalScheme;
+use codedopt::encoding::EncoderKind;
+use codedopt::linalg::StorageKind;
+use codedopt::optim::{
+    CodedGd, CodedLbfgs, CodedSgd, GdConfig, LbfgsConfig, LrSchedule, RunOutput, SgdConfig,
+    SteppedOptimizer,
+};
+use codedopt::problem::{EncodedProblem, QuadProblem};
+use codedopt::runtime::{run_pipelined, NativeEngine};
+
+const ITERS: usize = 12;
+
+fn problem() -> QuadProblem {
+    QuadProblem::synthetic_gaussian(96, 8, 0.05, 7)
+}
+
+fn encode(kind: EncoderKind, beta: f64) -> EncodedProblem {
+    EncodedProblem::encode_stored(&problem(), kind, beta, 8, 3, StorageKind::Dense)
+        .expect("encode")
+}
+
+fn encode_temporal(scheme: TemporalScheme) -> EncodedProblem {
+    EncodedProblem::encode_temporal(&problem(), scheme, 8, 3).expect("encode temporal")
+}
+
+/// Fresh cluster per run: pipelining equivalence only holds when both
+/// sides start from identical scenario/RNG state.
+fn cluster(enc: &EncodedProblem, scenario: Option<&str>) -> Cluster {
+    let eng = Box::new(NativeEngine::new(enc));
+    let cfg = ClusterConfig {
+        workers: 8,
+        wait_for: 6,
+        delay: DelayModel::Constant { ms: 2.0 },
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed: 11,
+    };
+    let mut cluster = Cluster::new(enc, eng, cfg).expect("cluster");
+    if let Some(dsl) = scenario {
+        cluster.set_scenario(Scenario::parse(dsl).expect("scenario")).expect("set_scenario");
+    }
+    cluster
+}
+
+fn optimizer(name: &str) -> Box<dyn SteppedOptimizer> {
+    match name {
+        "gd" => Box::new(CodedGd::new(GdConfig {
+            zeta: 0.5,
+            epsilon: Some(0.3),
+            ..Default::default()
+        })),
+        "lbfgs" => Box::new(CodedLbfgs::new(LbfgsConfig {
+            epsilon: Some(0.3),
+            ..Default::default()
+        })),
+        "sgd" => Box::new(CodedSgd::new(SgdConfig {
+            lr: Some(0.02),
+            schedule: LrSchedule::InvT { t0: 10.0 },
+            momentum: 0.5,
+            batch_frac: 0.5,
+            seed: 5,
+            ..Default::default()
+        })),
+        other => panic!("unknown optimizer {other}"),
+    }
+}
+
+fn run_serial(name: &str, enc: &EncodedProblem, scenario: Option<&str>) -> RunOutput {
+    let mut cluster = cluster(enc, scenario);
+    optimizer(name).run(enc, &mut cluster, ITERS).expect("serial run")
+}
+
+fn run_at_depth(
+    name: &str,
+    enc: &EncodedProblem,
+    scenario: Option<&str>,
+    depth: usize,
+) -> RunOutput {
+    let mut cluster = cluster(enc, scenario);
+    run_pipelined(&*optimizer(name), enc, &mut cluster, ITERS, None, depth)
+        .expect("pipelined run")
+}
+
+fn assert_outputs_identical(a: &RunOutput, b: &RunOutput, what: &str) {
+    assert_eq!(a.w, b.w, "{what}: final iterates differ");
+    assert_eq!(a.trace.to_csv(), b.trace.to_csv(), "{what}: traces differ");
+}
+
+// ------------------------------------------------------------- contract 1
+
+#[test]
+fn depth_one_matches_the_serial_loop_bit_for_bit() {
+    let combos: &[(EncoderKind, f64)] = &[
+        (EncoderKind::Hadamard, 2.0),
+        (EncoderKind::Replication, 2.0),
+        (EncoderKind::Identity, 1.0),
+    ];
+    for &(kind, beta) in combos {
+        let enc = encode(kind, beta);
+        for opt in ["gd", "lbfgs", "sgd"] {
+            for scenario in [None, Some("admit:rotate:k")] {
+                let serial = run_serial(opt, &enc, scenario);
+                let piped = run_at_depth(opt, &enc, scenario, 1);
+                assert_outputs_identical(
+                    &serial,
+                    &piped,
+                    &format!("{opt}/{kind}/scenario={scenario:?}/depth=1"),
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- contract 2
+
+#[test]
+fn virtual_clock_traces_are_depth_invariant() {
+    let enc = encode(EncoderKind::Hadamard, 2.0);
+    for opt in ["gd", "lbfgs", "sgd"] {
+        for scenario in [None, Some("admit:rotate:k")] {
+            let base = run_at_depth(opt, &enc, scenario, 1);
+            for depth in [2, 4] {
+                let deep = run_at_depth(opt, &enc, scenario, depth);
+                assert_outputs_identical(
+                    &base,
+                    &deep,
+                    &format!("{opt}/hadamard/scenario={scenario:?}/depth={depth}"),
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- contract 3
+
+#[test]
+fn temporal_schemes_are_depth_invariant_and_descend() {
+    let schemes = [
+        TemporalScheme::parse("seq:4:2").unwrap(),
+        TemporalScheme::parse("stoch:0.5").unwrap(),
+    ];
+    let prob = problem();
+    let f0 = prob.objective(&vec![0.0; prob.p()]);
+    for scheme in schemes {
+        let enc = encode_temporal(scheme);
+        for opt in ["gd", "lbfgs"] {
+            let base = run_at_depth(opt, &enc, None, 1);
+            let deep = run_at_depth(opt, &enc, None, 4);
+            assert_outputs_identical(&base, &deep, &format!("{opt}/{scheme}/depth=4"));
+            let f_final = prob.objective(&base.w);
+            assert!(
+                f_final < f0,
+                "{opt}/{scheme}: no descent on the true objective ({f_final} vs {f0})"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------- contract 4
+
+#[test]
+fn pipelined_runs_replay_themselves() {
+    let enc = encode(EncoderKind::Hadamard, 2.0);
+    let dsl = "crash:3@2,recover:3@6,slow:1:4@1";
+    let a = run_at_depth("gd", &enc, Some(dsl), 4);
+    let b = run_at_depth("gd", &enc, Some(dsl), 4);
+    assert_outputs_identical(&a, &b, "gd/hadamard/churn/depth=4 replay");
+}
