@@ -10,7 +10,8 @@
 //!  * full cluster gradient round (native engine) — leader overhead
 //!  * XLA engine round latency (artifacts required; skipped otherwise)
 //!  * kernel matrix: scalar-f64 / SIMD-f64 / f32 across dense + CSR
-//!    fused_grad and gemv, plus the blocked FWHT — written to
+//!    fused_grad and gemv, the `--grad-mode` gram-cache worker gradient
+//!    vs its gemv recompute, plus the blocked FWHT — written to
 //!    `target/microbench/BENCH_kernels.json` (`FIG_KERNELS_OUT=dir`
 //!    overrides the directory). Both the scalar and SIMD f64 kernel
 //!    bodies are always compiled (`linalg::kernels`), so one run
@@ -418,6 +419,46 @@ fn bench_kernel_matrix() {
     });
     table.push(kernel_row("fused_grad", "csr", "f32", true, csr32_bytes, rows, ms));
 
+    // worker_grad: per-round gemv recompute vs the --grad-mode gram
+    // cache (G = XᵀX, c = Xᵀy precomputed once) on the same 2048×512
+    // shard — 2·nnz ≈ 2.1M madds/round vs p² ≈ 262k, the regime where
+    // the auto cost model (p² < 2·nnz) picks gram
+    let gram = x.gram();
+    let cvec = x.gemv_t(&y);
+    let yty = linalg::dot(&y, &y);
+    let ms = time_ms(reps, || {
+        let f = x.fused_grad(&w, &y, &mut g, &mut buf);
+        std::hint::black_box(f);
+    });
+    table.push(kernel_row(
+        "worker_grad_gemv",
+        "dense",
+        "f64",
+        kernels::simd_active(),
+        dense_bytes,
+        rows,
+        ms,
+    ));
+    let gram_bytes = p * p * 8;
+    let ms = time_ms(reps, || {
+        gram.gemv_into(&w, &mut g);
+        let wgw = linalg::dot(&w, &g);
+        let wc = linalg::dot(&w, &cvec);
+        for (gi, ci) in g.iter_mut().zip(&cvec) {
+            *gi -= ci;
+        }
+        std::hint::black_box(wgw - 2.0 * wc + yty);
+    });
+    table.push(kernel_row(
+        "worker_grad_gram",
+        "dense",
+        "f64",
+        kernels::simd_active(),
+        gram_bytes,
+        rows,
+        ms,
+    ));
+
     // blocked + threaded FWHT (the encode-side hot loop)
     let (n, c) = (4096usize, 64usize);
     let mut fbuf: Vec<f64> = (0..n * c).map(|_| rng.next_gaussian()).collect();
@@ -449,6 +490,18 @@ fn bench_kernel_matrix() {
         .map(|r| r.ns_per_row);
     if let (Some(b), Some(f)) = (base, fast) {
         println!("dense fused_grad speedup simd+f32 vs scalar f64: {:.2}x", b / f);
+    }
+    let gemv = table.iter().find(|r| r.kernel == "worker_grad_gemv").map(|r| r.ns_per_row);
+    let gram = table.iter().find(|r| r.kernel == "worker_grad_gram").map(|r| r.ns_per_row);
+    if let (Some(ge), Some(gr)) = (gemv, gram) {
+        println!(
+            "worker_grad gram cache vs gemv recompute: {:.2}x ({:.1} vs {:.1} ns/row; \
+             cost model predicts {:.1}x from madd counts)",
+            ge / gr,
+            gram.unwrap(),
+            gemv.unwrap(),
+            2.0 * rows as f64 * p as f64 / (p * p) as f64
+        );
     }
 
     // JSON artifact (fig_serve convention: FIG_*_OUT overrides the dir)

@@ -17,7 +17,7 @@ use crate::cluster::{ClockMode, Cluster, ClusterConfig, DelayModel, Scenario};
 use crate::config::Json;
 use crate::encoding::temporal::TemporalScheme;
 use crate::encoding::EncoderKind;
-use crate::linalg::{Precision, StorageKind};
+use crate::linalg::{GradMode, Precision, StorageKind};
 use crate::optim::{
     CodedGd, CodedLbfgs, CodedSgd, GdConfig, LbfgsConfig, LrSchedule, Optimizer, SgdConfig,
     SteppedOptimizer,
@@ -52,6 +52,12 @@ SUBCOMMANDS
                                f32 halves shard memory and runs the f32
                                kernels on workers while encoding and the
                                leader stay f64 (needs --engine native)
+    --grad-mode gemv|gram|auto  full-shard gradient kernel (default gemv):
+                               gram precomputes G_w = X̃ᵀX̃ and c_w = X̃ᵀỹ at
+                               staging and serves each round as one p×p
+                               gemv (wins when p² < 2·nnz per shard); auto
+                               picks per shard by that cost model; needs
+                               dense f64 shards and --engine native
     --threads 0     native-engine resident worker-pool size: the pool is
                     spawned once per run and every round is dispatched to
                     its shard-owning lanes (0 = all cores)
@@ -107,9 +113,9 @@ SUBCOMMANDS
                     job id, default 1); sibling jobs never observe it
     plus the ridge problem/cluster flags: --n --p --lambda --workers --k
     --beta --encoder --optimizer (gd|lbfgs|sgd, default gd; alias --algo)
-    --iters --delay --clock --storage --precision --threads --seed and the
-    SGD-only flags (--batch-frac --lr --lr-schedule --momentum --epoch-len
-    --plateau-patience --plateau-tol)
+    --iters --delay --clock --storage --precision --grad-mode --threads
+    --seed and the SGD-only flags (--batch-frac --lr --lr-schedule
+    --momentum --epoch-len --plateau-patience --plateau-tol)
 
   mf                coded matrix factorization on synthetic MovieLens (Fig. 5/6)
     --users 240 --items 160 --ratings 8000 --embed 15 --lambda 10
@@ -184,6 +190,13 @@ fn cmd_ridge(args: &Args) -> Result<()> {
              are compiled for f64 dense shards"
         );
     }
+    let grad_mode = GradMode::parse(args.flag_str("grad-mode", "gemv"))?;
+    if grad_mode != GradMode::Gemv && engine_kind == EngineKind::Xla {
+        anyhow::bail!(
+            "--grad-mode {grad_mode} needs --engine native: the AOT HLO \
+             artifacts are compiled for the gemv gradient kernel"
+        );
+    }
     let threads = args.flag_usize("threads", 0)?;
     let scheme = TemporalScheme::parse(args.flag_str("scheme", "none"))?;
     if scheme != TemporalScheme::None && args.flag("encoder").is_some() {
@@ -234,11 +247,13 @@ fn cmd_ridge(args: &Args) -> Result<()> {
         EncodedProblem::encode_stored_prec(&prob, kind, beta, m, seed, storage, precision)?
     } else {
         EncodedProblem::encode_temporal_stored_prec(&prob, scheme, m, seed, storage, precision)?
-    };
+    }
+    .with_grad_mode(grad_mode)?;
     println!(
-        "# storage={} precision={} ({} shard bytes across {} workers){}",
+        "# storage={} precision={} grad-mode={} ({} shard bytes across {} workers){}",
         enc.storage,
         enc.precision,
+        grad_mode,
         enc.shard_mem_bytes(),
         enc.m(),
         if threads > 0 { format!("  threads={threads}") } else { String::new() }
@@ -367,6 +382,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let clock = ClockMode::parse(args.flag_str("clock", "virtual"))?;
     let storage = StorageKind::parse(args.flag_str("storage", "auto"))?;
     let precision = Precision::parse(args.flag_str("precision", "f64"))?;
+    let grad_mode = GradMode::parse(args.flag_str("grad-mode", "gemv"))?;
     let threads = args.flag_usize("threads", 0)?;
     let policy = ServePolicy::parse(args.flag_str("serve-policy", "fair"))?;
     let optimizer = parse_serve_optimizer(args, seed)?;
@@ -388,7 +404,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut cache = EncodedShardCache::new();
     let mut server = JobServer::with_lanes(threads, policy);
     for j in 0..jobs {
-        let enc = cache.get_or_encode_prec(&prob, kind, beta, m, seed, storage, precision)?;
+        let enc =
+            cache.get_or_encode_mode(&prob, kind, beta, m, seed, storage, precision, grad_mode)?;
         let cluster = ClusterConfig {
             workers: m,
             wait_for: k,
@@ -672,6 +689,60 @@ mod tests {
     }
 
     #[test]
+    fn tiny_ridge_gram_mode_runs() {
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "5",
+            "--grad-mode", "gram",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn tiny_ridge_auto_grad_mode_runs() {
+        run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "3",
+            "--grad-mode", "auto", "--optimizer", "sgd", "--batch-frac", "0.5",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn ridge_rejects_bad_grad_mode() {
+        assert!(run(&[
+            "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "4", "--iters", "1",
+            "--grad-mode", "hessian",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn ridge_rejects_gram_with_sparse_storage() {
+        assert!(run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "1",
+            "--encoder", "uncoded", "--storage", "sparse", "--grad-mode", "gram",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn ridge_rejects_gram_with_f32_precision() {
+        assert!(run(&[
+            "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "1",
+            "--precision", "f32", "--grad-mode", "gram",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn ridge_rejects_gram_with_xla_engine() {
+        assert!(run(&[
+            "ridge", "--n", "32", "--p", "4", "--workers", "4", "--k", "4", "--iters", "1",
+            "--engine", "xla", "--grad-mode", "gram",
+        ])
+        .is_err());
+    }
+
+    #[test]
     fn tiny_ridge_thread_cap_runs() {
         run(&[
             "ridge", "--n", "64", "--p", "8", "--workers", "4", "--k", "3", "--iters", "3",
@@ -730,6 +801,24 @@ mod tests {
             "--iters", "3", "--threads", "2", "--precision", "f32",
         ])
         .unwrap();
+    }
+
+    #[test]
+    fn tiny_serve_gram_mode_runs() {
+        run(&[
+            "serve", "--jobs", "2", "--n", "64", "--p", "8", "--workers", "4", "--k", "3",
+            "--iters", "3", "--threads", "2", "--grad-mode", "gram",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_rejects_gram_with_f32_precision() {
+        assert!(run(&[
+            "serve", "--jobs", "2", "--n", "64", "--p", "8", "--workers", "4", "--k", "3",
+            "--iters", "1", "--precision", "f32", "--grad-mode", "gram",
+        ])
+        .is_err());
     }
 
     #[test]

@@ -397,6 +397,26 @@ pub struct Cluster {
     /// Rounds whose delay schedule has been sampled — must track
     /// `rounds_run` exactly (see [`Cluster::sample_delays`]).
     delay_rounds: u64,
+    /// Persistent collect-all gradient sink, rearmed across virtual-clock
+    /// rounds (lazily built on the first such round). Blocking rounds own
+    /// their sink again by drain time, so the collector's inner vectors —
+    /// response slots, delivery order, admitted list — keep their
+    /// capacity round over round instead of being reallocated.
+    grad_all_sink: Option<GradCollector>,
+    /// Persistent first-k gradient sink for *blocking* measured rounds.
+    /// Pipelined rounds (depth > 1) never use it: their straggler lanes
+    /// keep collector clones alive past the round, which violates the
+    /// sole-owner precondition of `rearm_first_k` — each pipelined round
+    /// builds a fresh collector instead (recycling is a depth-1 luxury).
+    grad_firstk_sink: Option<GradCollector>,
+    /// Persistent collect-all line-search sink (virtual clock).
+    curv_all_sink: Option<CurvCollector>,
+    /// Persistent first-k line-search sink (measured clock; line-search
+    /// rounds are never pipelined).
+    curv_firstk_sink: Option<CurvCollector>,
+    /// Reusable eligibility-mask scratch for measured-round admission
+    /// (filled in place by [`Cluster::scripted_eligibility_into`]).
+    eligible_buf: Vec<bool>,
     /// Accumulated simulated time.
     pub sim_ms: f64,
     /// Rounds executed so far (gradient + line-search).
@@ -410,11 +430,26 @@ pub struct Cluster {
 /// identical to the historical model, bit for bit — and `nnz` for CSR
 /// shards, so sparse storage is not just a memory win: the straggler
 /// simulation charges each worker the flops its kernel actually
-/// executes. Shared by [`Cluster::new`] and the rebalancer's
-/// post-migration refresh, so a migrated worker's simulated compute
-/// cost tracks its new shard exactly.
+/// executes. A shard resolved to [`GradMode::Gram`] serves its gradient
+/// from the staged `p×p` cache instead of re-reading the shard, so its
+/// gradient cost is the `p²` madds of one symmetric gemv — the same cost
+/// model `GradMode::Auto` picks by, keeping the virtual clock honest
+/// about the fast path. Line search always runs the gemv kernels, so
+/// `ls_mflops` never changes. Shared by [`Cluster::new`] and the
+/// rebalancer's post-migration refresh, so a migrated worker's simulated
+/// compute cost tracks its new shard exactly.
+///
+/// [`GradMode::Gram`]: crate::linalg::GradMode::Gram
+/// [`GradMode::Auto`]: crate::linalg::GradMode::Auto
 fn shard_flops(s: &crate::problem::WorkerShard) -> (f64, f64) {
-    (2.0 * s.x.gemv_madds() * 2.0 / 1e6, 2.0 * s.x.gemv_madds() / 1e6)
+    let grad = match s.grad_mode {
+        crate::linalg::GradMode::Gram => {
+            let p = s.x.cols() as f64;
+            p * p * 2.0 / 1e6
+        }
+        _ => 2.0 * s.x.gemv_madds() * 2.0 / 1e6,
+    };
+    (grad, 2.0 * s.x.gemv_madds() / 1e6)
 }
 
 impl Cluster {
@@ -457,6 +492,11 @@ impl Cluster {
             parked,
             pipeline_depth: 1,
             delay_rounds: 0,
+            grad_all_sink: None,
+            grad_firstk_sink: None,
+            curv_all_sink: None,
+            curv_firstk_sink: None,
+            eligible_buf: Vec::new(),
             sim_ms: 0.0,
             rounds_run: 0,
         })
@@ -692,22 +732,27 @@ impl Cluster {
     /// admission count k (the scripted set size under an override, so the
     /// collector's cancellation flag flips exactly when the scripted
     /// responders have all delivered).
-    fn scripted_eligibility(
-        &self,
+    /// Associated (not `&self`) so round impls can fill the cluster's own
+    /// `eligible_buf` scratch while other fields stay borrowed; writes the
+    /// mask in place and returns k.
+    fn scripted_eligibility_into(
+        wait_for: usize,
         delays: &[f64],
         script: Option<&RoundScript>,
-    ) -> (Vec<bool>, usize) {
+        eligible: &mut Vec<bool>,
+    ) -> usize {
         let admit = script.and_then(|s| s.admit.as_deref());
-        let eligible: Vec<bool> = delays
-            .iter()
-            .enumerate()
-            .map(|(i, d)| d.is_finite() && admit.map_or(true, |set| set.contains(&i)))
-            .collect();
-        let k = match admit {
-            None => self.cfg.wait_for,
+        eligible.clear();
+        eligible.extend(
+            delays
+                .iter()
+                .enumerate()
+                .map(|(i, d)| d.is_finite() && admit.map_or(true, |set| set.contains(&i))),
+        );
+        match admit {
+            None => wait_for,
             Some(_) => eligible.iter().filter(|&&e| e).count(),
-        };
-        (eligible, k)
+        }
     }
 
     /// Virtual-clock round: deterministic post-hoc admission over the
@@ -933,9 +978,16 @@ impl Cluster {
         let (mut delays, script) = self.stage_round(RoundKind::Iteration);
         let (responses, mut round) = match self.cfg.clock {
             ClockMode::Virtual => {
-                let sink = GradCollector::collect_all(m);
+                let sink = match self.grad_all_sink.take() {
+                    Some(s) => {
+                        s.rearm_all();
+                        s
+                    }
+                    None => GradCollector::collect_all(m),
+                };
                 self.engine.worker_grad_streamed(w, &sink)?;
-                let collected = sink.into_collected();
+                let collected = sink.drain_collected();
+                self.grad_all_sink = Some(sink);
                 let mut compute: Vec<f64> =
                     self.grad_mflops.iter().map(|f| f * self.cfg.ms_per_mflop).collect();
                 Self::apply_virtual_script(&mut compute, &mut delays, script.as_ref());
@@ -951,8 +1003,19 @@ impl Cluster {
                 // admitted payload are final at cancellation time, so
                 // this arm is admission-identical to the blocking arm
                 // below — only *when* straggler acks are reaped differs.
-                let (eligible, k) = self.scripted_eligibility(&delays, script.as_ref());
-                let sink = GradCollector::first_k(m, k, eligible);
+                // The collector is built fresh every round: straggler
+                // lanes of earlier rounds may still hold clones, so the
+                // sole-owner rearm precondition can never be met here —
+                // pipelining trades collector recycling for overlap.
+                let mut eligible = std::mem::take(&mut self.eligible_buf);
+                let k = Self::scripted_eligibility_into(
+                    self.cfg.wait_for,
+                    &delays,
+                    script.as_ref(),
+                    &mut eligible,
+                );
+                let sink = GradCollector::first_k(m, k, eligible.clone());
+                self.eligible_buf = eligible;
                 self.engine.worker_grad_dispatch(w, &sink)?;
                 let collected = sink.wait_cancelled_snapshot();
                 drop(sink); // our handle; lane clones die as lanes finish
@@ -961,10 +1024,24 @@ impl Cluster {
                 (Self::take_admitted(&round, collected)?, round)
             }
             ClockMode::Measured => {
-                let (eligible, k) = self.scripted_eligibility(&delays, script.as_ref());
-                let sink = GradCollector::first_k(m, k, eligible);
+                let mut eligible = std::mem::take(&mut self.eligible_buf);
+                let k = Self::scripted_eligibility_into(
+                    self.cfg.wait_for,
+                    &delays,
+                    script.as_ref(),
+                    &mut eligible,
+                );
+                let sink = match self.grad_firstk_sink.take() {
+                    Some(s) => {
+                        s.rearm_first_k(k, &eligible);
+                        s
+                    }
+                    None => GradCollector::first_k(m, k, eligible.clone()),
+                };
+                self.eligible_buf = eligible;
                 self.engine.worker_grad_streamed(w, &sink)?;
-                let collected = sink.into_collected();
+                let collected = sink.drain_collected();
+                self.grad_firstk_sink = Some(sink);
                 let round = Self::measured_round(&collected, &delays);
                 (Self::take_admitted(&round, collected)?, round)
             }
@@ -1016,9 +1093,16 @@ impl Cluster {
         let (mut delays, script) = self.stage_round(RoundKind::Iteration);
         let (responses, mut round) = match self.cfg.clock {
             ClockMode::Virtual => {
-                let sink = GradCollector::collect_all(m);
+                let sink = match self.grad_all_sink.take() {
+                    Some(s) => {
+                        s.rearm_all();
+                        s
+                    }
+                    None => GradCollector::collect_all(m),
+                };
                 self.engine.worker_grad_batch_streamed(w, plan, &sink)?;
-                let collected = sink.into_collected();
+                let collected = sink.drain_collected();
+                self.grad_all_sink = Some(sink);
                 let mut compute: Vec<f64> = (0..m)
                     .map(|i| {
                         let frac = plan.rows(i) as f64 / self.shard_rows[i] as f64;
@@ -1031,10 +1115,24 @@ impl Cluster {
                 (Self::take_admitted(&round, collected)?, round)
             }
             ClockMode::Measured => {
-                let (eligible, k) = self.scripted_eligibility(&delays, script.as_ref());
-                let sink = GradCollector::first_k(m, k, eligible);
+                let mut eligible = std::mem::take(&mut self.eligible_buf);
+                let k = Self::scripted_eligibility_into(
+                    self.cfg.wait_for,
+                    &delays,
+                    script.as_ref(),
+                    &mut eligible,
+                );
+                let sink = match self.grad_firstk_sink.take() {
+                    Some(s) => {
+                        s.rearm_first_k(k, &eligible);
+                        s
+                    }
+                    None => GradCollector::first_k(m, k, eligible.clone()),
+                };
+                self.eligible_buf = eligible;
                 self.engine.worker_grad_batch_streamed(w, plan, &sink)?;
-                let collected = sink.into_collected();
+                let collected = sink.drain_collected();
+                self.grad_firstk_sink = Some(sink);
                 let round = Self::measured_round(&collected, &delays);
                 (Self::take_admitted(&round, collected)?, round)
             }
@@ -1062,9 +1160,16 @@ impl Cluster {
         let (mut delays, script) = self.stage_round(RoundKind::Auxiliary);
         let (responses, mut round) = match self.cfg.clock {
             ClockMode::Virtual => {
-                let sink = CurvCollector::collect_all(m);
+                let sink = match self.curv_all_sink.take() {
+                    Some(s) => {
+                        s.rearm_all();
+                        s
+                    }
+                    None => CurvCollector::collect_all(m),
+                };
                 self.engine.linesearch_streamed(d, &sink)?;
-                let collected = sink.into_collected();
+                let collected = sink.drain_collected();
+                self.curv_all_sink = Some(sink);
                 let mut compute: Vec<f64> =
                     self.ls_mflops.iter().map(|f| f * self.cfg.ms_per_mflop).collect();
                 Self::apply_virtual_script(&mut compute, &mut delays, script.as_ref());
@@ -1073,10 +1178,24 @@ impl Cluster {
                 (Self::take_admitted(&round, collected)?, round)
             }
             ClockMode::Measured => {
-                let (eligible, k) = self.scripted_eligibility(&delays, script.as_ref());
-                let sink = CurvCollector::first_k(m, k, eligible);
+                let mut eligible = std::mem::take(&mut self.eligible_buf);
+                let k = Self::scripted_eligibility_into(
+                    self.cfg.wait_for,
+                    &delays,
+                    script.as_ref(),
+                    &mut eligible,
+                );
+                let sink = match self.curv_firstk_sink.take() {
+                    Some(s) => {
+                        s.rearm_first_k(k, &eligible);
+                        s
+                    }
+                    None => CurvCollector::first_k(m, k, eligible.clone()),
+                };
+                self.eligible_buf = eligible;
                 self.engine.linesearch_streamed(d, &sink)?;
-                let collected = sink.into_collected();
+                let collected = sink.drain_collected();
+                self.curv_firstk_sink = Some(sink);
                 let round = Self::measured_round(&collected, &delays);
                 (Self::take_admitted(&round, collected)?, round)
             }
@@ -1351,6 +1470,7 @@ mod tests {
             y.push(1.0);
         }
         let prob = QuadProblem::new(CsrMat::from_raw(n, p, row_ptr, cols, vals), y, 0.0);
+        let w0 = vec![0.0; p];
         let round_time = |storage: StorageKind| -> f64 {
             let enc =
                 EncodedProblem::encode_stored(&prob, EncoderKind::Identity, 1.0, 4, 0, storage)
@@ -1365,7 +1485,7 @@ mod tests {
                 seed: 0,
             };
             let mut c = Cluster::new(&enc, eng, cfg).unwrap();
-            c.grad_round(&vec![0.0; p]).unwrap().1.elapsed_ms
+            c.grad_round(&w0).unwrap().1.elapsed_ms
         };
         let dense_ms = round_time(StorageKind::Dense);
         let sparse_ms = round_time(StorageKind::Sparse);
@@ -1420,12 +1540,14 @@ mod tests {
                 y: prob.y[..rows_small].to_vec(),
                 rows_real: rows_small,
                 partition_id: 0,
+                grad_mode: crate::linalg::GradMode::Gemv,
             },
             WorkerShard {
                 x: prob.x.row_band(rows_small, rows_small + rows_big),
                 y: prob.y[rows_small..].to_vec(),
                 rows_real: rows_big,
                 partition_id: 1,
+                grad_mode: crate::linalg::GradMode::Gemv,
             },
         ];
         let enc = EncodedProblem {
@@ -1436,6 +1558,7 @@ mod tests {
             gram_scale: 1.0,
             storage: crate::linalg::StorageKind::Dense,
             precision: crate::linalg::Precision::F64,
+            grad_mode: crate::linalg::GradMode::Gemv,
             raw: prob,
         };
         let eng = Box::new(NativeEngine::new(&enc));
@@ -1448,7 +1571,8 @@ mod tests {
             seed: 0,
         };
         let mut c = Cluster::new(&enc, eng, cfg).unwrap();
-        let (responses, round) = c.grad_round(&vec![0.1; p]).unwrap();
+        let w0 = vec![0.1; p];
+        let (responses, round) = c.grad_round(&w0).unwrap();
         assert_eq!(responses.len(), 2);
         let (small, big) = (round.compute_ms[0], round.compute_ms[1]);
         assert!(small.is_finite() && big.is_finite(), "times: {small} vs {big}");

@@ -25,7 +25,7 @@ pub use chol::{
 pub use eig::{sym_eigenvalues, sym_eigen};
 pub use fwht::{fwht_inplace, fwht_columns};
 pub use mat::Mat;
-pub use storage::{CsrMat, CsrMatF32, DataMat, MatF32, Precision, StorageKind};
+pub use storage::{CsrMat, CsrMatF32, DataMat, GradMode, MatF32, Precision, StorageKind};
 
 /// The kernel-equivalence testing surface: both compiled implementations
 /// of every hot kernel, regardless of whether the `simd` cargo feature is
@@ -238,6 +238,13 @@ pub fn scale(alpha: f64, x: &mut [f64]) {
 pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
     assert_eq!(a.len(), b.len(), "sub: length mismatch");
     a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// `out ← a − b`, reusing `out`'s allocation (scratch-friendly [`sub`]).
+pub fn sub_into(a: &[f64], b: &[f64], out: &mut Vec<f64>) {
+    assert_eq!(a.len(), b.len(), "sub_into: length mismatch");
+    out.clear();
+    out.extend(a.iter().zip(b).map(|(x, y)| x - y));
 }
 
 #[cfg(test)]

@@ -120,6 +120,65 @@ impl fmt::Display for Precision {
 }
 
 // ---------------------------------------------------------------------------
+// GradMode
+// ---------------------------------------------------------------------------
+
+/// Worker-gradient evaluation strategy (CLI/config surface: `--grad-mode`).
+///
+/// A ridge worker gradient factors as `g = G·w − c` with `G = X̃ᵀX̃` and
+/// `c = X̃ᵀỹ` fixed for the life of the shard, and the local objective as
+/// `f = wᵀGw − 2wᵀc + ỹᵀỹ` — so a worker can trade `O(2·nnz)` madds per
+/// round (two passes over the shard) for `O(p²)` madds against a
+/// precomputed Gram cache, at `p²` extra resident doubles. [`GradMode`]
+/// selects that trade per run; `Auto` resolves it per *shard* from the
+/// madd cost model (`p² < 2·nnz`).
+///
+/// The Gram path reassociates the accumulation, so it carries a numeric
+/// (≤ 1e-9 final iterate) pin rather than the bitwise pin of the default
+/// `Gemv` mode — see DESIGN.md "Steady-state memory & the Gram fast path".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum GradMode {
+    /// Recompute `X̃ᵀ(X̃w − ỹ)` from the shard every round (the
+    /// historical mode; bit-for-bit traces, works on every backend).
+    #[default]
+    Gemv,
+    /// Serve gradients from a per-shard Gram cache (`G = X̃ᵀX̃`,
+    /// `c = X̃ᵀỹ` precomputed at staging): one symmetric f64 gemv per
+    /// round. Dense f64 shards only.
+    Gram,
+    /// Per shard: `Gram` iff the cost model favors it (`p² < 2·nnz`) and
+    /// the shard is dense f64, else `Gemv`.
+    Auto,
+}
+
+impl GradMode {
+    /// Parse the CLI forms `gemv`, `gram`, `auto`.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "gemv" => GradMode::Gemv,
+            "gram" => GradMode::Gram,
+            "auto" => GradMode::Auto,
+            other => bail!("unknown grad mode {other:?} (gemv|gram|auto)"),
+        })
+    }
+
+    /// Canonical CLI/table label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            GradMode::Gemv => "gemv",
+            GradMode::Gram => "gram",
+            GradMode::Auto => "auto",
+        }
+    }
+}
+
+impl fmt::Display for GradMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+// ---------------------------------------------------------------------------
 // CsrMat
 // ---------------------------------------------------------------------------
 

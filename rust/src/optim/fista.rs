@@ -12,7 +12,7 @@
 //! need `α ≤ 1/L`); acceleration is the standard Nesterov sequence
 //! (Beck–Teboulle FISTA, reference 2 of the paper).
 
-use super::{Optimizer, RunOutput};
+use super::{JobStep, Optimizer, RunOutput, SteppedOptimizer};
 use crate::cluster::Cluster;
 use crate::linalg;
 use crate::metrics::{IterRecord, Trace};
@@ -129,6 +129,103 @@ impl CodedFista {
     }
 }
 
+/// Resumable FISTA run state: the iterate, the extrapolated point, the
+/// Nesterov counter, and scratch for the aggregated gradient and the
+/// prox step — all allocated once at `stepper()` time so steady-state
+/// rounds reuse them. One [`JobStep::step`] = one gradient round.
+struct FistaStep {
+    prox: Prox,
+    accelerate: bool,
+    w: Vec<f64>,
+    /// Extrapolated point `z_t` the gradient round is evaluated at.
+    z: Vec<f64>,
+    /// Aggregated-gradient scratch, reused every round.
+    g_buf: Vec<f64>,
+    /// Prox-step staging for `w_{t+1}`; swapped with `w`, never cloned.
+    w_next: Vec<f64>,
+    alpha: f64,
+    t_acc: f64,
+    t: usize,
+    iters: usize,
+    trace: Trace,
+}
+
+impl JobStep for FistaStep {
+    fn step(&mut self, prob: &EncodedProblem, cluster: &mut Cluster) -> Result<bool> {
+        if self.t >= self.iters {
+            return Ok(false);
+        }
+        let t = self.t;
+        // gradient round at the extrapolated point z
+        let (responses, round) = cluster.grad_round(&self.z)?;
+        let f_est = prob.aggregate_grad_into(&self.z, &responses, &mut self.g_buf);
+        // prox-gradient step, staged in the held w_next scratch
+        self.w_next.clear();
+        self.w_next.extend_from_slice(&self.z);
+        linalg::axpy(-self.alpha, &self.g_buf, &mut self.w_next);
+        self.prox.apply(&mut self.w_next, self.alpha);
+        // Nesterov extrapolation
+        if self.accelerate {
+            let t_next = 0.5 * (1.0 + (1.0 + 4.0 * self.t_acc * self.t_acc).sqrt());
+            let mom = (self.t_acc - 1.0) / t_next;
+            for ((zi, wn), wo) in self.z.iter_mut().zip(&self.w_next).zip(&self.w) {
+                *zi = wn + mom * (wn - wo);
+            }
+            self.t_acc = t_next;
+        } else {
+            self.z.copy_from_slice(&self.w_next);
+        }
+        std::mem::swap(&mut self.w, &mut self.w_next);
+        self.trace.push(IterRecord {
+            iter: t,
+            f_true: prob.raw.objective(&self.w) + self.prox.value(&self.w),
+            f_est,
+            grad_norm: linalg::norm2(&self.g_buf),
+            alpha: self.alpha,
+            responders: round.admitted.len(),
+            sim_ms: cluster.sim_ms,
+            compute_ms: round.admitted_compute_ms(),
+            events: round.events.join("|"),
+            migrations: round.migrations.join("|"),
+        });
+        self.t += 1;
+        Ok(self.t < self.iters)
+    }
+
+    fn output(self: Box<Self>) -> RunOutput {
+        RunOutput { w: self.w, trace: self.trace }
+    }
+}
+
+impl SteppedOptimizer for CodedFista {
+    fn stepper(
+        &self,
+        prob: &EncodedProblem,
+        wait_for: usize,
+        iters: usize,
+        w0: Option<Vec<f64>>,
+    ) -> Result<Box<dyn JobStep>> {
+        let p = prob.p();
+        let w = w0.unwrap_or_else(|| vec![0.0; p]);
+        ensure!(w.len() == p, "w0 dimension mismatch");
+        let alpha = self.step_size(prob, wait_for);
+        let z = w.clone();
+        Ok(Box::new(FistaStep {
+            prox: self.cfg.prox.clone(),
+            accelerate: self.cfg.accelerate,
+            w,
+            z,
+            g_buf: vec![0.0; p],
+            w_next: vec![0.0; p],
+            alpha,
+            t_acc: 1.0,
+            t: 0,
+            iters,
+            trace: Trace::default(),
+        }))
+    }
+}
+
 impl Optimizer for CodedFista {
     fn run_from(
         &self,
@@ -137,50 +234,9 @@ impl Optimizer for CodedFista {
         iters: usize,
         w0: Option<Vec<f64>>,
     ) -> Result<RunOutput> {
-        let p = prob.p();
-        let mut w = w0.unwrap_or_else(|| vec![0.0; p]);
-        ensure!(w.len() == p, "w0 dimension mismatch");
-        let alpha = self.step_size(prob, cluster.config().wait_for);
-        let mut trace = Trace::default();
-        // momentum state
-        let mut z = w.clone();
-        let mut t_acc = 1.0f64;
-        for t in 0..iters {
-            // gradient round at the extrapolated point z
-            let (responses, round) = cluster.grad_round(&z)?;
-            let (g, f_est) = prob.aggregate_grad(&z, &responses);
-            // prox-gradient step
-            let mut w_next = z.clone();
-            linalg::axpy(-alpha, &g, &mut w_next);
-            self.cfg.prox.apply(&mut w_next, alpha);
-            // Nesterov extrapolation
-            if self.cfg.accelerate {
-                let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t_acc * t_acc).sqrt());
-                let mom = (t_acc - 1.0) / t_next;
-                z = w_next
-                    .iter()
-                    .zip(&w)
-                    .map(|(wn, wo)| wn + mom * (wn - wo))
-                    .collect();
-                t_acc = t_next;
-            } else {
-                z = w_next.clone();
-            }
-            w = w_next;
-            trace.push(IterRecord {
-                iter: t,
-                f_true: prob.raw.objective(&w) + self.cfg.prox.value(&w),
-                f_est,
-                grad_norm: linalg::norm2(&g),
-                alpha,
-                responders: round.admitted.len(),
-                sim_ms: cluster.sim_ms,
-                compute_ms: round.admitted_compute_ms(),
-                events: round.events.join("|"),
-                migrations: round.migrations.join("|"),
-            });
-        }
-        Ok(RunOutput { w, trace })
+        let mut step = self.stepper(prob, cluster.config().wait_for, iters, w0)?;
+        while step.step(prob, cluster)? {}
+        Ok(step.output())
     }
 }
 

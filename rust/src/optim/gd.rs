@@ -71,9 +71,13 @@ fn ensure_valid(cfg: &GdConfig) {
 }
 
 /// Resumable GD run state: the iterate, the precomputed Theorem-1 step,
-/// and the trace so far. One [`JobStep::step`] = one gradient round.
+/// the aggregation scratch (allocated once at `stepper()` time — the
+/// steady-state round loop reuses it), and the trace so far. One
+/// [`JobStep::step`] = one gradient round.
 struct GdStep {
     w: Vec<f64>,
+    /// Aggregated-gradient scratch, reused every round.
+    g_buf: Vec<f64>,
     alpha: f64,
     iters: usize,
     t: usize,
@@ -87,13 +91,13 @@ impl JobStep for GdStep {
         }
         let t = self.t;
         let (responses, round) = cluster.grad_round(&self.w)?;
-        let (g, f_est) = prob.aggregate_grad(&self.w, &responses);
-        linalg::axpy(-self.alpha, &g, &mut self.w);
+        let f_est = prob.aggregate_grad_into(&self.w, &responses, &mut self.g_buf);
+        linalg::axpy(-self.alpha, &self.g_buf, &mut self.w);
         self.trace.push(IterRecord {
             iter: t,
             f_true: prob.raw.objective(&self.w),
             f_est,
-            grad_norm: linalg::norm2(&g),
+            grad_norm: linalg::norm2(&self.g_buf),
             alpha: self.alpha,
             responders: round.admitted.len(),
             sim_ms: cluster.sim_ms,
@@ -122,7 +126,14 @@ impl SteppedOptimizer for CodedGd {
         let w = w0.unwrap_or_else(|| vec![0.0; p]);
         ensure!(w.len() == p, "w0 dimension mismatch");
         let alpha = self.step_size(prob, wait_for)?;
-        Ok(Box::new(GdStep { w, alpha, iters, t: 0, trace: Trace::default() }))
+        Ok(Box::new(GdStep {
+            w,
+            g_buf: vec![0.0; p],
+            alpha,
+            iters,
+            t: 0,
+            trace: Trace::default(),
+        }))
     }
 }
 

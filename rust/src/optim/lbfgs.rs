@@ -93,30 +93,47 @@ impl CodedLbfgs {
 }
 
 /// Two-loop recursion: `d = −H g` over the stored pairs, with
-/// `H⁰ = (uᵀr)/(rᵀr)·I` scaling from the newest pair.
-fn two_loop(g: &[f64], pairs: &[(Vec<f64>, Vec<f64>)]) -> Vec<f64> {
-    let mut q = g.to_vec();
+/// `H⁰ = (uᵀr)/(rᵀr)·I` scaling from the newest pair. Writes the
+/// direction into `q` and the per-pair coefficients into `alphas`,
+/// both caller-held scratch so steady-state rounds allocate nothing.
+fn two_loop_into(
+    g: &[f64],
+    pairs: &[(Vec<f64>, Vec<f64>)],
+    alphas: &mut Vec<f64>,
+    q: &mut Vec<f64>,
+) {
+    q.clear();
+    q.extend_from_slice(g);
     if pairs.is_empty() {
-        linalg::scale(-1.0, &mut q);
-        return q;
+        linalg::scale(-1.0, q);
+        return;
     }
-    let mut alphas = vec![0.0; pairs.len()];
+    alphas.clear();
+    alphas.resize(pairs.len(), 0.0);
     // newest last; first loop runs newest → oldest
     for (idx, (u, r)) in pairs.iter().enumerate().rev() {
         let rho = 1.0 / linalg::dot(r, u);
-        let a = rho * linalg::dot(u, &q);
+        let a = rho * linalg::dot(u, q);
         alphas[idx] = a;
-        linalg::axpy(-a, r, &mut q);
+        linalg::axpy(-a, r, q);
     }
     let (u_new, r_new) = pairs.last().unwrap();
     let gamma = linalg::dot(u_new, r_new) / linalg::dot(r_new, r_new);
-    linalg::scale(gamma, &mut q);
+    linalg::scale(gamma, q);
     for (idx, (u, r)) in pairs.iter().enumerate() {
         let rho = 1.0 / linalg::dot(r, u);
-        let b = rho * linalg::dot(r, &q);
-        linalg::axpy(alphas[idx] - b, u, &mut q);
+        let b = rho * linalg::dot(r, q);
+        linalg::axpy(alphas[idx] - b, u, q);
     }
-    linalg::scale(-1.0, &mut q);
+    linalg::scale(-1.0, q);
+}
+
+/// Allocating convenience wrapper over [`two_loop_into`] for the unit
+/// tests; the round loop uses the `_into` form directly.
+#[cfg(test)]
+fn two_loop(g: &[f64], pairs: &[(Vec<f64>, Vec<f64>)]) -> Vec<f64> {
+    let (mut alphas, mut q) = (Vec::new(), Vec::new());
+    two_loop_into(g, pairs, &mut alphas, &mut q);
     q
 }
 
@@ -132,6 +149,21 @@ struct LbfgsStep {
     // leader's response cache from the previous round
     prev_grads: HashMap<usize, Vec<f64>>,
     w_prev: Option<Vec<f64>>,
+    /// Aggregated-gradient scratch, reused every round.
+    g_buf: Vec<f64>,
+    /// Two-loop direction scratch (`d = −H·g`), reused every round.
+    d_buf: Vec<f64>,
+    /// Two-loop per-pair coefficients, reused every round.
+    alpha_buf: Vec<f64>,
+    /// Iterate difference `u_t = w_t − w_{t−1}`; copied into the pair
+    /// memory only when the curvature test accepts the pair.
+    u_buf: Vec<f64>,
+    /// Aggregated overlap difference `r_t`, same lifecycle as `u_buf`.
+    r_buf: Vec<f64>,
+    /// Per-worker overlap staging `(wid, g_i(w_t) − g_i(w_{t−1}))`.
+    diff_buf: Vec<(usize, Vec<f64>)>,
+    /// Recycled inner vectors for `diff_buf` (drained back each round).
+    diff_spares: Vec<Vec<f64>>,
     trace: Trace,
     t: usize,
     iters: usize,
@@ -144,38 +176,48 @@ impl JobStep for LbfgsStep {
         }
         let t = self.t;
         let (responses, round) = cluster.grad_round(&self.w)?;
-        let (g, f_est) = prob.aggregate_grad(&self.w, &responses);
+        let f_est = prob.aggregate_grad_into(&self.w, &responses, &mut self.g_buf);
 
-        // overlap curvature pair from A_t ∩ A_{t−1}
+        // overlap curvature pair from A_t ∩ A_{t−1}, staged through the
+        // held u/r/diff scratch; pair vectors are recycled from the
+        // evicted oldest pair once the memory is full, so a steady-state
+        // round at capacity allocates nothing here.
         if let Some(wp) = &self.w_prev {
-            let u = linalg::sub(&self.w, wp);
-            let diffs: Vec<(usize, Vec<f64>)> = responses
-                .iter()
-                .filter_map(|(wid, gi, _)| {
-                    self.prev_grads
-                        .get(wid)
-                        .map(|gprev| (*wid, linalg::sub(gi, gprev)))
-                })
-                .collect();
-            if !diffs.is_empty() {
-                let r = prob.aggregate_grad_diff(&u, &diffs);
-                let ru = linalg::dot(&r, &u);
-                if ru > self.cfg.curvature_tol * linalg::dot(&u, &u) {
-                    self.pairs.push((u, r));
-                    if self.pairs.len() > self.cfg.memory {
-                        self.pairs.remove(0);
-                    }
+            linalg::sub_into(&self.w, wp, &mut self.u_buf);
+            self.diff_spares
+                .extend(self.diff_buf.drain(..).map(|(_, v)| v));
+            for (wid, gi, _) in &responses {
+                if let Some(gprev) = self.prev_grads.get(wid) {
+                    let mut dv = self.diff_spares.pop().unwrap_or_default();
+                    linalg::sub_into(gi, gprev, &mut dv);
+                    self.diff_buf.push((*wid, dv));
+                }
+            }
+            if !self.diff_buf.is_empty() {
+                prob.aggregate_grad_diff_into(&self.u_buf, &self.diff_buf, &mut self.r_buf);
+                let ru = linalg::dot(&self.r_buf, &self.u_buf);
+                if ru > self.cfg.curvature_tol * linalg::dot(&self.u_buf, &self.u_buf) {
+                    let (mut pu, mut pr) = if self.pairs.len() == self.cfg.memory {
+                        self.pairs.remove(0)
+                    } else {
+                        (Vec::new(), Vec::new())
+                    };
+                    pu.clear();
+                    pu.extend_from_slice(&self.u_buf);
+                    pr.clear();
+                    pr.extend_from_slice(&self.r_buf);
+                    self.pairs.push((pu, pr));
                 }
             }
         }
 
         // descent direction via two-loop recursion
-        let d = two_loop(&g, &self.pairs);
+        two_loop_into(&self.g_buf, &self.pairs, &mut self.alpha_buf, &mut self.d_buf);
 
         // exact line search over a fresh first-k set D_t (eq. (3))
-        let (ls_responses, ls_round) = cluster.linesearch_round(&d)?;
-        let curv = prob.aggregate_curvature(&d, &ls_responses);
-        let dg = linalg::dot(&d, &g);
+        let (ls_responses, ls_round) = cluster.linesearch_round(&self.d_buf)?;
+        let curv = prob.aggregate_curvature(&self.d_buf, &ls_responses);
+        let dg = linalg::dot(&self.d_buf, &self.g_buf);
         let alpha = if curv > 0.0 && dg < 0.0 {
             (-self.nu * dg / curv).min(self.cfg.alpha_max)
         } else {
@@ -185,20 +227,28 @@ impl JobStep for LbfgsStep {
             1e-4
         };
 
-        // cache this round's responses for the next overlap
-        self.prev_grads = responses
-            .iter()
-            .map(|(wid, gi, _)| (*wid, gi.clone()))
-            .collect();
-        self.w_prev = Some(self.w.clone());
+        // cache this round's responses for the next overlap, reusing the
+        // map's existing per-worker buffers; drop workers that missed
+        // this round so stale gradients never enter a future overlap
+        self.prev_grads
+            .retain(|wid, _| responses.iter().any(|(r, _, _)| r == wid));
+        for (wid, gi, _) in &responses {
+            let e = self.prev_grads.entry(*wid).or_default();
+            e.clear();
+            e.extend_from_slice(gi);
+        }
+        match &mut self.w_prev {
+            Some(wp) => wp.copy_from_slice(&self.w),
+            None => self.w_prev = Some(self.w.clone()),
+        }
 
-        linalg::axpy(alpha, &d, &mut self.w);
+        linalg::axpy(alpha, &self.d_buf, &mut self.w);
 
         self.trace.push(IterRecord {
             iter: t,
             f_true: prob.raw.objective(&self.w),
             f_est,
-            grad_norm: linalg::norm2(&g),
+            grad_norm: linalg::norm2(&self.g_buf),
             alpha,
             responders: round.admitted.len(),
             sim_ms: cluster.sim_ms,
@@ -248,6 +298,13 @@ impl SteppedOptimizer for CodedLbfgs {
             pairs: Vec::new(),
             prev_grads: HashMap::new(),
             w_prev: None,
+            g_buf: vec![0.0; p],
+            d_buf: vec![0.0; p],
+            alpha_buf: Vec::new(),
+            u_buf: vec![0.0; p],
+            r_buf: vec![0.0; p],
+            diff_buf: Vec::new(),
+            diff_spares: Vec::new(),
             trace: Trace::default(),
             t: 0,
             iters,

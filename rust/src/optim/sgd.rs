@@ -321,6 +321,8 @@ struct SgdStep {
     rng: Pcg64,
     w: Vec<f64>,
     velocity: Vec<f64>,
+    /// Aggregated-gradient scratch, reused every round.
+    g_buf: Vec<f64>,
     trace: Trace,
     t: usize,
     iters: usize,
@@ -339,20 +341,21 @@ impl JobStep for SgdStep {
         }
         let t = self.t;
         let alpha = self.alpha0 * self.cfg.schedule.factor(t);
-        let (g, f_est, round) = if self.full_batch {
+        let (f_est, round) = if self.full_batch {
             let (responses, round) = cluster.grad_round(&self.w)?;
-            let (g, f_est) = prob.aggregate_grad(&self.w, &responses);
-            (g, f_est, round)
+            let f_est = prob.aggregate_grad_into(&self.w, &responses, &mut self.g_buf);
+            (f_est, round)
         } else {
             let plan = prob.sample_batch(self.cfg.batch_frac, &mut self.rng);
             let (responses, round) = cluster.grad_batch_round(&self.w, &plan)?;
-            let (g, f_est) = prob.aggregate_grad_batch(&self.w, &responses, &plan);
-            (g, f_est, round)
+            let f_est =
+                prob.aggregate_grad_batch_into(&self.w, &responses, &plan, &mut self.g_buf);
+            (f_est, round)
         };
         if self.cfg.momentum == 0.0 {
-            linalg::axpy(-alpha, &g, &mut self.w);
+            linalg::axpy(-alpha, &self.g_buf, &mut self.w);
         } else {
-            for (v, gi) in self.velocity.iter_mut().zip(&g) {
+            for (v, gi) in self.velocity.iter_mut().zip(&self.g_buf) {
                 *v = self.cfg.momentum * *v + gi;
             }
             linalg::axpy(-alpha, &self.velocity, &mut self.w);
@@ -361,7 +364,7 @@ impl JobStep for SgdStep {
             iter: t,
             f_true: prob.raw.objective(&self.w),
             f_est,
-            grad_norm: linalg::norm2(&g),
+            grad_norm: linalg::norm2(&self.g_buf),
             alpha,
             responders: round.admitted.len(),
             sim_ms: cluster.sim_ms,
@@ -417,6 +420,7 @@ impl SteppedOptimizer for CodedSgd {
             cfg: self.cfg.clone(),
             alpha0,
             velocity: vec![0.0; p],
+            g_buf: vec![0.0; p],
             w,
             trace: Trace::default(),
             t: 0,

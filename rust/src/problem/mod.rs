@@ -18,7 +18,7 @@
 //! backend: coding-obliviousness extends to storage.
 
 use crate::encoding::EncoderKind;
-use crate::linalg::{self, DataMat, Mat, Precision, StorageKind};
+use crate::linalg::{self, DataMat, GradMode, Mat, Precision, StorageKind};
 use crate::rng::Pcg64;
 use anyhow::{bail, ensure, Result};
 
@@ -162,9 +162,16 @@ pub struct WorkerShard {
     /// Which raw partition this shard replicates (replication scheme);
     /// equals the worker index otherwise.
     pub partition_id: usize,
+    /// Resolved worker-gradient strategy for *this* shard (never
+    /// [`GradMode::Auto`] — `Auto` requests are resolved per shard at
+    /// [`EncodedProblem::with_grad_mode`] time from the madd cost model).
+    /// Engines read this at staging time to decide whether to build the
+    /// Gram cache.
+    pub grad_mode: GradMode,
 }
 
 /// The encoded, partitioned problem the cluster serves (Figure 1, right).
+#[derive(Clone)]
 pub struct EncodedProblem {
     /// Per-worker encoded shards (length m).
     pub shards: Vec<WorkerShard>,
@@ -185,6 +192,11 @@ pub struct EncodedProblem {
     /// workers compute in f32 while the leader (aggregation, step, true
     /// objective on `raw`) stays f64 throughout.
     pub precision: Precision,
+    /// Requested worker-gradient strategy (`--grad-mode`; default
+    /// [`GradMode::Gemv`], the bitwise-pinned historical path). The
+    /// *resolved* per-shard answer lives on [`WorkerShard::grad_mode`];
+    /// this field records the request for reporting and cache keys.
+    pub grad_mode: GradMode,
     /// Raw problem (kept for true-objective evaluation in traces).
     pub raw: QuadProblem,
 }
@@ -210,6 +222,27 @@ fn resolved_storage(shards: &[WorkerShard], requested: StorageKind) -> StorageKi
     }
 }
 
+/// Resolve a requested [`GradMode`] for one shard. `Auto` compares the
+/// per-round madd cost of the two strategies — `p²` for the symmetric
+/// Gram gemv vs `2·nnz` for the two shard passes of the fused kernel —
+/// and only ever picks `Gram` on a dense f64 shard (the cache is dense
+/// f64 by construction, so sparse or narrowed shards gain nothing).
+fn resolve_grad_mode(requested: GradMode, x: &DataMat) -> GradMode {
+    match requested {
+        GradMode::Gemv => GradMode::Gemv,
+        GradMode::Gram => GradMode::Gram,
+        GradMode::Auto => {
+            let p = x.cols();
+            let dense_f64 = !x.is_sparse() && x.precision() == Precision::F64;
+            if dense_f64 && p * p < 2 * x.rows() * x.cols() {
+                GradMode::Gram
+            } else {
+                GradMode::Gemv
+            }
+        }
+    }
+}
+
 /// Narrow fully-built (encoded, padded, storage-resolved) shards to the
 /// requested precision. `ỹ` stays f64 — it is leader-visible state (the
 /// residual subtraction widens per-entry), and its footprint is one
@@ -217,11 +250,12 @@ fn resolved_storage(shards: &[WorkerShard], requested: StorageKind) -> StorageKi
 fn shards_to_precision(shards: Vec<WorkerShard>, precision: Precision) -> Vec<WorkerShard> {
     shards
         .into_iter()
-        .map(|WorkerShard { x, y, rows_real, partition_id }| WorkerShard {
+        .map(|WorkerShard { x, y, rows_real, partition_id, grad_mode }| WorkerShard {
             x: x.to_precision(precision),
             y,
             rows_real,
             partition_id,
+            grad_mode,
         })
         .collect()
 }
@@ -334,7 +368,13 @@ impl EncodedProblem {
                         let padded = pad_bucket(rows_real);
                         let xs = xs.pad_rows(padded).into_storage(storage);
                         ys.resize(padded, 0.0);
-                        shards.push(WorkerShard { x: xs, y: ys, rows_real, partition_id: j });
+                        shards.push(WorkerShard {
+                            x: xs,
+                            y: ys,
+                            rows_real,
+                            partition_id: j,
+                            grad_mode: GradMode::Gemv,
+                        });
                     }
                 }
                 let storage = resolved_storage(&shards, storage);
@@ -347,6 +387,7 @@ impl EncodedProblem {
                     gram_scale: 1.0, // per-partition gradients are raw-scale
                     storage,
                     precision,
+                    grad_mode: GradMode::Gemv,
                     raw: prob.clone(),
                 })
             }
@@ -419,7 +460,13 @@ impl EncodedProblem {
                 let padded = pad_bucket(rows_real);
                 let xs = xs.pad_rows(padded).into_storage(storage);
                 ys.resize(padded, 0.0);
-                shards.push(WorkerShard { x: xs, y: ys, rows_real, partition_id: g });
+                shards.push(WorkerShard {
+                    x: xs,
+                    y: ys,
+                    rows_real,
+                    partition_id: g,
+                    grad_mode: GradMode::Gemv,
+                });
             }
         }
         let storage = resolved_storage(&shards, storage);
@@ -432,6 +479,7 @@ impl EncodedProblem {
             gram_scale: 1.0,
             storage,
             precision,
+            grad_mode: GradMode::Gemv,
             raw: prob.clone(),
         })
     }
@@ -506,7 +554,13 @@ impl EncodedProblem {
                 let padded = pad_bucket(rows_real);
                 let xs = xs.pad_rows(padded).into_storage(storage);
                 ys.resize(padded, 0.0);
-                WorkerShard { x: xs, y: ys, rows_real, partition_id: i }
+                WorkerShard {
+                    x: xs,
+                    y: ys,
+                    rows_real,
+                    partition_id: i,
+                    grad_mode: GradMode::Gemv,
+                }
             })
             .collect();
         let storage = resolved_storage(&shards, storage);
@@ -519,6 +573,7 @@ impl EncodedProblem {
             gram_scale: enc.gram_scale(),
             storage,
             precision,
+            grad_mode: GradMode::Gemv,
             raw: prob.clone(),
         })
     }
@@ -598,7 +653,13 @@ impl EncodedProblem {
                 let padded = pad_bucket(rows_real);
                 let xs = xs.pad_rows(padded).into_storage(storage);
                 ys.resize(padded, 0.0);
-                WorkerShard { x: xs, y: ys, rows_real, partition_id: i }
+                WorkerShard {
+                    x: xs,
+                    y: ys,
+                    rows_real,
+                    partition_id: i,
+                    grad_mode: GradMode::Gemv,
+                }
             })
             .collect();
         let scheme = if kind == EncoderKind::Identity {
@@ -616,6 +677,7 @@ impl EncodedProblem {
             gram_scale: enc.gram_scale(),
             storage,
             precision,
+            grad_mode: GradMode::Gemv,
             raw: prob.clone(),
         })
     }
@@ -637,11 +699,59 @@ impl EncodedProblem {
 
     /// Total resident bytes across all shards (`X̃` payload arrays plus
     /// the `ỹ` vectors) — the memory axis the storage backends trade on.
+    /// Shards resolved to [`GradMode::Gram`] also count their engine-side
+    /// cache (`G` is p×p, `c` is p, plus the scalar `ỹᵀỹ`): the cache is
+    /// built at staging time, but it is this encoding that mandates it,
+    /// so the trade shows up here.
     pub fn shard_mem_bytes(&self) -> usize {
+        let p = self.p();
+        let gram_bytes = (p * p + p + 1) * std::mem::size_of::<f64>();
         self.shards
             .iter()
-            .map(|s| s.x.mem_bytes() + s.y.len() * std::mem::size_of::<f64>())
+            .map(|s| {
+                s.x.mem_bytes()
+                    + s.y.len() * std::mem::size_of::<f64>()
+                    + if s.grad_mode == GradMode::Gram { gram_bytes } else { 0 }
+            })
             .sum()
+    }
+
+    /// Select the worker-gradient evaluation strategy (`--grad-mode`;
+    /// default [`GradMode::Gemv`]) and resolve it per shard.
+    ///
+    /// * `Gemv` — the historical bitwise-pinned path; a no-op.
+    /// * `Gram` — every shard serves `g = G·w − c` from a staged Gram
+    ///   cache. Requires dense f64 shards: CSR and f32 shards are hard
+    ///   errors naming the offending axis (a CSR Gram cache is dense
+    ///   anyway, and an f32 source would break the ≤1e-9 numeric pin).
+    /// * `Auto` — per shard, `Gram` iff `p² < 2·nnz` on a dense f64
+    ///   shard (the madd cost model), else `Gemv`.
+    ///
+    /// Engines read the resolved [`WorkerShard::grad_mode`] when staging
+    /// shards and build the cache there, so call this *before* handing
+    /// the encoding to an engine.
+    pub fn with_grad_mode(mut self, mode: GradMode) -> Result<Self> {
+        if mode == GradMode::Gram {
+            if let Some(s) = self.shards.iter().find(|s| s.x.is_sparse()) {
+                bail!(
+                    "--grad-mode gram needs dense shards, but worker {} holds CSR: \
+                     its Gram cache G = X̃ᵀX̃ would be dense anyway — use \
+                     --storage dense, or --grad-mode gemv|auto",
+                    s.partition_id
+                );
+            }
+            ensure!(
+                self.precision == Precision::F64,
+                "--grad-mode gram needs f64 shards: the cache accumulates in f64 and \
+                 an f32 source would break the ≤1e-9 equivalence pin — use \
+                 --precision f64, or --grad-mode gemv|auto"
+            );
+        }
+        self.grad_mode = mode;
+        for s in &mut self.shards {
+            s.grad_mode = resolve_grad_mode(mode, &s.x);
+        }
+        Ok(self)
     }
 
     /// Count of *distinct* data contributions in a responder set: distinct
@@ -676,24 +786,63 @@ impl EncodedProblem {
         w: &[f64],
         responses: &[(usize, Vec<f64>, f64)],
     ) -> (Vec<f64>, f64) {
+        let mut g = Vec::new();
+        let f_est = self.aggregate_grad_into(w, responses, &mut g);
+        (g, f_est)
+    }
+
+    /// [`EncodedProblem::aggregate_grad`] writing the gradient into a
+    /// caller-held buffer (resized to `p`, then zeroed) and returning
+    /// `f̂(w)` — the steady-state form that lets an optimizer stepper
+    /// keep one gradient scratch vector for a whole run instead of
+    /// allocating per round.
+    pub fn aggregate_grad_into(
+        &self,
+        w: &[f64],
+        responses: &[(usize, Vec<f64>, f64)],
+        g: &mut Vec<f64>,
+    ) -> f64 {
         let p = self.p();
-        let mut g = vec![0.0; p];
+        g.clear();
+        g.resize(p, 0.0);
         let mut f = 0.0;
-        let responders: Vec<usize> = responses.iter().map(|r| r.0).collect();
-        let used = self.effective_responders(&responders);
-        let scale = self.gradient_scale(&used);
-        for (wid, gi, fi) in responses {
-            if used.contains(wid) {
-                linalg::axpy(scale, gi, &mut g);
-                f += scale * fi;
+        match self.scheme {
+            Scheme::Replicated { .. } | Scheme::GradientCoded { .. } => {
+                // partition dedup needs per-round scratch; replication-
+                // style schemes keep the allocating path
+                let responders: Vec<usize> = responses.iter().map(|r| r.0).collect();
+                let used = self.effective_responders(&responders);
+                let scale = self.gradient_scale(&used);
+                for (wid, gi, fi) in responses {
+                    if used.contains(wid) {
+                        linalg::axpy(scale, gi, g);
+                        f += scale * fi;
+                    }
+                }
+            }
+            _ => {
+                // identity responder set: every response is used and the
+                // scale depends only on the count, so the steady-state
+                // round aggregates with no heap traffic (same arithmetic
+                // order as the scratch path — bitwise-pinned traces are
+                // unaffected)
+                let eta = responses.len() as f64 / self.m() as f64;
+                let scale = if eta == 0.0 {
+                    0.0
+                } else {
+                    1.0 / (self.gram_scale * eta * self.n_raw() as f64)
+                };
+                for (_, gi, fi) in responses {
+                    linalg::axpy(scale, gi, g);
+                    f += scale * fi;
+                }
             }
         }
         let lambda = self.raw.lambda;
         for (gi, wi) in g.iter_mut().zip(w) {
             *gi += lambda * wi;
         }
-        let f_est = 0.5 * f + 0.5 * lambda * linalg::dot(w, w);
-        (g, f_est)
+        0.5 * f + 0.5 * lambda * linalg::dot(w, w)
     }
 
     /// Sample one round's block-row mini-batch plan: every worker gets a
@@ -754,8 +903,23 @@ impl EncodedProblem {
         responses: &[(usize, Vec<f64>, f64)],
         plan: &BatchPlan,
     ) -> (Vec<f64>, f64) {
+        let mut g = Vec::new();
+        let f_est = self.aggregate_grad_batch_into(w, responses, plan, &mut g);
+        (g, f_est)
+    }
+
+    /// [`EncodedProblem::aggregate_grad_batch`] writing into a
+    /// caller-held buffer, like [`EncodedProblem::aggregate_grad_into`].
+    pub fn aggregate_grad_batch_into(
+        &self,
+        w: &[f64],
+        responses: &[(usize, Vec<f64>, f64)],
+        plan: &BatchPlan,
+        g: &mut Vec<f64>,
+    ) -> f64 {
         let p = self.p();
-        let mut g = vec![0.0; p];
+        g.clear();
+        g.resize(p, 0.0);
         let mut f = 0.0;
         let responders: Vec<usize> = responses.iter().map(|r| r.0).collect();
         let used = self.effective_responders(&responders);
@@ -767,7 +931,7 @@ impl EncodedProblem {
                 // divide by zero and silently poison the gradient with NaN
                 assert!(b >= 1, "aggregate_grad_batch: empty batch for worker {wid}");
                 let unbias = self.shards[*wid].rows_real as f64 / b as f64;
-                linalg::axpy(scale * unbias, gi, &mut g);
+                linalg::axpy(scale * unbias, gi, g);
                 f += scale * unbias * fi;
             }
         }
@@ -775,8 +939,7 @@ impl EncodedProblem {
         for (gi, wi) in g.iter_mut().zip(w) {
             *gi += lambda * wi;
         }
-        let f_est = 0.5 * f + 0.5 * lambda * linalg::dot(w, w);
-        (g, f_est)
+        0.5 * f + 0.5 * lambda * linalg::dot(w, w)
     }
 
     /// Overlap gradient-difference aggregation for L-BFGS (§3): given
@@ -785,19 +948,32 @@ impl EncodedProblem {
     /// (ridge curvature `λ·u_t` included). This is the paper's `r_t`
     /// re-expressed in our `SᵀS = c·I` normalization.
     pub fn aggregate_grad_diff(&self, u: &[f64], diffs: &[(usize, Vec<f64>)]) -> Vec<f64> {
-        let mut r = vec![0.0; self.p()];
+        let mut r = Vec::new();
+        self.aggregate_grad_diff_into(u, diffs, &mut r);
+        r
+    }
+
+    /// [`EncodedProblem::aggregate_grad_diff`] writing into a
+    /// caller-held buffer (resized to `p`, then zeroed).
+    pub fn aggregate_grad_diff_into(
+        &self,
+        u: &[f64],
+        diffs: &[(usize, Vec<f64>)],
+        r: &mut Vec<f64>,
+    ) {
+        r.clear();
+        r.resize(self.p(), 0.0);
         let responders: Vec<usize> = diffs.iter().map(|d| d.0).collect();
         let used = self.effective_responders(&responders);
         let scale = self.gradient_scale(&used);
         for (wid, dg) in diffs {
             if used.contains(wid) {
-                linalg::axpy(scale, dg, &mut r);
+                linalg::axpy(scale, dg, r);
             }
         }
         for (ri, ui) in r.iter_mut().zip(u) {
             *ri += self.raw.lambda * ui;
         }
-        r
     }
 
     /// Line-search curvature aggregation (eq. (3) denominator): combines

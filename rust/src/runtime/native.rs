@@ -86,6 +86,14 @@ impl NativeEngine {
     pub fn pool_size(&mut self) -> usize {
         self.pool().size()
     }
+
+    /// Broadcast-slab acquisition counters `(reused, fresh)` — how many
+    /// round broadcasts recycled a reclaimed `Arc<[f64]>` vs allocated
+    /// one (spawns the pool if still staged; benches read this to pin
+    /// the steady-state recycling rate).
+    pub fn broadcast_buffer_stats(&mut self) -> (u64, u64) {
+        self.pool().broadcast_buffer_stats()
+    }
 }
 
 impl ComputeEngine for NativeEngine {

@@ -70,7 +70,7 @@
 //! they are a staging/debug surface, not round fan-out.
 
 use super::stream::{CurvCollector, GradCollector};
-use crate::linalg::DataMat;
+use crate::linalg::{DataMat, GradMode, Mat};
 use crate::problem::{BatchPlan, EncodedProblem, WorkerShard};
 use anyhow::{anyhow, ensure, Result};
 use std::collections::{BTreeMap, VecDeque};
@@ -78,15 +78,122 @@ use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+/// Recycling slab for the `Arc<[f64]>` broadcast buffers that cross the
+/// lane channels every round (`w` for gradient rounds, `d` for
+/// line-search rounds — same length `p`, so one slab serves both).
+///
+/// Lifecycle: [`BufferPool::acquire`] first sweeps `in_flight` — every
+/// buffer whose refcount has dropped back to 1 (all lanes acked and
+/// dropped their clones, the dispatch call returned) moves to `free` —
+/// then serves the request from `free` via `Arc::get_mut` +
+/// `copy_from_slice`, falling back to a fresh `Arc::from` when nothing
+/// round-tripped yet. Under pipelined dispatch (depth > 1) the lanes
+/// still hold clones of the previous rounds' buffers at acquire time, so
+/// their refcounts stay above 1 and the slab *naturally* degrades to
+/// fresh allocation — exactly the fallback the deferred path needs, with
+/// no mode flag. A problem swap that changes `p` retires stale-length
+/// buffers on the way through (`free` only ever holds current-length
+/// buffers; mismatched reclaims are dropped).
+pub(crate) struct BufferPool {
+    free: Vec<Arc<[f64]>>,
+    in_flight: Vec<Arc<[f64]>>,
+    /// Buffers served by recycling an earlier round's allocation.
+    reused: u64,
+    /// Buffers served by a fresh heap allocation.
+    fresh: u64,
+}
+
+impl BufferPool {
+    pub(crate) fn new() -> Self {
+        BufferPool { free: Vec::new(), in_flight: Vec::new(), reused: 0, fresh: 0 }
+    }
+
+    /// Hand out a broadcast buffer holding a copy of `data`, recycling a
+    /// round-tripped buffer when one is available (see the type docs).
+    /// The slab keeps one clone in `in_flight` to observe the refcount.
+    pub(crate) fn acquire(&mut self, data: &[f64]) -> Arc<[f64]> {
+        let mut i = 0;
+        while i < self.in_flight.len() {
+            if Arc::strong_count(&self.in_flight[i]) == 1 {
+                let buf = self.in_flight.swap_remove(i);
+                if buf.len() == data.len() {
+                    self.free.push(buf);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        let buf = loop {
+            match self.free.pop() {
+                Some(mut buf) if buf.len() == data.len() => {
+                    Arc::get_mut(&mut buf)
+                        .expect("free slab buffers are sole-owned")
+                        .copy_from_slice(data);
+                    self.reused += 1;
+                    break buf;
+                }
+                Some(_) => continue, // stale length from a problem swap
+                None => {
+                    self.fresh += 1;
+                    break Arc::from(data);
+                }
+            }
+        };
+        self.in_flight.push(buf.clone());
+        buf
+    }
+
+    /// `(reused, fresh)` acquisition counts since construction.
+    pub(crate) fn stats(&self) -> (u64, u64) {
+        (self.reused, self.fresh)
+    }
+}
+
+/// Per-shard Gram cache: `G = X̃ᵀX̃` (p×p, exactly symmetric), `c = X̃ᵀỹ`
+/// and `yty = ỹᵀỹ`, precomputed once at staging time so every gradient
+/// round is one symmetric f64 GEMV:
+///
+/// ```text
+/// g = G·w − c          (≡ X̃ᵀ(X̃w − ỹ))
+/// f = wᵀ(G·w) − 2·wᵀc + yty   (≡ ‖X̃w − ỹ‖²)
+/// ```
+///
+/// The identity is exact in real arithmetic; in floats the accumulation
+/// is reassociated (p-length dot products instead of row-wise fused
+/// passes), which is why `--grad-mode gram` carries a ≤1e-9 *numeric*
+/// equivalence pin rather than the gemv path's bitwise one.
+struct GramCache {
+    g: Mat,
+    c: Vec<f64>,
+    yty: f64,
+}
+
+impl GramCache {
+    fn build(x: &DataMat, y: &[f64]) -> GramCache {
+        let g = x.gram();
+        let mut c = vec![0.0; x.cols()];
+        x.gemv_t_into(y, &mut c);
+        let yty = crate::linalg::dot(y, y);
+        GramCache { g, c, yty }
+    }
+}
+
 /// One worker's resident data + scratch (the kernels allocate nothing;
-/// the delivered payload clone is the only per-worker allocation). The
-/// shard keeps whatever storage backend the partitioner produced — the
-/// fused kernels are storage-dispatched inside [`DataMat`].
+/// the delivered payload is recycled through the collector's spare list
+/// when one round-tripped, cloned fresh otherwise). The shard keeps
+/// whatever storage backend the partitioner produced — the fused kernels
+/// are storage-dispatched inside [`DataMat`] — plus an optional Gram
+/// cache when the shard was resolved to `--grad-mode gram`.
 pub(crate) struct Slot {
     x: DataMat,
     y: Vec<f64>,
     grad_buf: Vec<f64>,
     resid_buf: Vec<f64>,
+    /// `Some` iff the shard's resolved grad mode is [`GradMode::Gram`]:
+    /// full-shard gradient rounds take the cached-Gram fast path.
+    /// Mini-batch rounds always use the row-restricted fused kernels —
+    /// a Gram matrix has no row structure left to restrict.
+    gram: Option<GramCache>,
 }
 
 impl Slot {
@@ -96,12 +203,17 @@ impl Slot {
     }
 
     /// Stage a single shard (the rebalancer's migration handoff unit).
+    /// Gram-mode shards rebuild their cache here, which is what keeps a
+    /// migrated shard's cache consistent with its data by construction.
     pub(crate) fn stage_shard(shard: &WorkerShard, p: usize) -> Slot {
+        let gram = (shard.grad_mode == GradMode::Gram)
+            .then(|| GramCache::build(&shard.x, &shard.y));
         Slot {
             x: shard.x.clone(),
             y: shard.y.clone(),
             grad_buf: vec![0.0; p],
             resid_buf: vec![0.0; shard.x.rows()],
+            gram,
         }
     }
 }
@@ -174,9 +286,23 @@ impl JobSlots {
                 break;
             }
             let t0 = std::time::Instant::now();
-            let f = slot.x.fused_grad(w, &slot.y, &mut slot.grad_buf, &mut slot.resid_buf);
+            let f = match &slot.gram {
+                // Gram fast path: g = G·w − c, f = wᵀ(Gw) − 2wᵀc + yty.
+                // The wᵀ(Gw) dot runs *before* the c subtraction so the
+                // objective uses the unmodified G·w product.
+                Some(gc) => {
+                    gc.g.gemv_into(w, &mut slot.grad_buf);
+                    let wgw = crate::linalg::dot(w, &slot.grad_buf);
+                    let wc = crate::linalg::dot(w, &gc.c);
+                    for (gi, ci) in slot.grad_buf.iter_mut().zip(&gc.c) {
+                        *gi -= ci;
+                    }
+                    wgw - 2.0 * wc + gc.yty
+                }
+                None => slot.x.fused_grad(w, &slot.y, &mut slot.grad_buf, &mut slot.resid_buf),
+            };
             let ms = t0.elapsed().as_secs_f64() * 1e3;
-            sink.deliver(wid, (slot.grad_buf.clone(), f), ms);
+            sink.deliver(wid, recycle_payload(sink, &slot.grad_buf, f), ms);
         }
     }
 
@@ -214,7 +340,7 @@ impl JobSlots {
                 );
             }
             let ms = t0.elapsed().as_secs_f64() * 1e3;
-            sink.deliver(wid, (slot.grad_buf.clone(), f), ms);
+            sink.deliver(wid, recycle_payload(sink, &slot.grad_buf, f), ms);
         }
     }
 
@@ -244,6 +370,23 @@ impl JobSlots {
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             sink.deliver(wid, q, ms);
         }
+    }
+}
+
+/// Build one gradient delivery, recycling a spare payload vector donated
+/// by the collector's previous round when one is available (the
+/// steady-state case under a rearmed sink: the spare has the right
+/// capacity already, so `clear` + `extend_from_slice` copies without
+/// allocating). A fresh sink, or a sink whose payloads were drained out
+/// by the caller, has no spares and falls back to a plain clone.
+fn recycle_payload(sink: &GradCollector, grad: &[f64], f: f64) -> (Vec<f64>, f64) {
+    match sink.take_spare() {
+        Some((mut buf, _)) => {
+            buf.clear();
+            buf.extend_from_slice(grad);
+            (buf, f)
+        }
+        None => (grad.to_vec(), f),
     }
 }
 
@@ -366,6 +509,14 @@ pub struct WorkerPool {
     /// a deferred round's acks as its own (see
     /// [`WorkerPool::grad_deferred_for`]).
     deferred: VecDeque<Vec<bool>>,
+    /// Recycling slab for the per-round `Arc<[f64]>` broadcast buffers.
+    wbuf: BufferPool,
+    /// Reusable sent-mask for blocking broadcasts (cleared and resized
+    /// in place each round — zero allocations once capacity settles).
+    sent_mask: Vec<bool>,
+    /// Retired sent-masks of drained deferred rounds, recycled by the
+    /// next deferred dispatch (bounded by the deepest pipeline seen).
+    mask_spares: Vec<Vec<bool>>,
 }
 
 fn resolve_threads(threads: usize) -> usize {
@@ -402,7 +553,16 @@ impl WorkerPool {
         }
         let mut jobs = BTreeMap::new();
         jobs.insert(0, JobMeta { workers, chunk, parked: vec![false; workers] });
-        WorkerPool { lanes, jobs, spawned, poisoned: false, deferred: VecDeque::new() }
+        WorkerPool {
+            lanes,
+            jobs,
+            spawned,
+            poisoned: false,
+            deferred: VecDeque::new(),
+            wbuf: BufferPool::new(),
+            sent_mask: Vec::new(),
+            mask_spares: Vec::new(),
+        }
     }
 
     /// Spawn a job-less pool with `threads` resident lanes (`0` =
@@ -422,6 +582,9 @@ impl WorkerPool {
             spawned: lane_count as u64,
             poisoned: false,
             deferred: VecDeque::new(),
+            wbuf: BufferPool::new(),
+            sent_mask: Vec::new(),
+            mask_spares: Vec::new(),
         }
     }
 
@@ -479,7 +642,12 @@ impl WorkerPool {
         // ack channels are FIFO): retire every outstanding deferred
         // dispatch before taking our own acks.
         self.drain_deferred()?;
-        let mut sent = vec![false; self.lanes.len()];
+        // reusable mask: blocking rounds own their acks within this call,
+        // so one resident mask serves every round (disjoint field borrow
+        // against `self.lanes` below)
+        self.sent_mask.clear();
+        self.sent_mask.resize(self.lanes.len(), false);
+        let sent = &mut self.sent_mask;
         let mut err: Option<anyhow::Error> = None;
         for (i, lane) in self.lanes.iter().enumerate() {
             match lane.tx.send(make(i)) {
@@ -576,7 +744,7 @@ impl WorkerPool {
         let workers = self.meta(job)?.workers;
         ensure!(sink.workers() == workers, "sink worker count mismatch for job {job}");
         sink.tag_job(job);
-        let w: Arc<[f64]> = Arc::from(w);
+        let w: Arc<[f64]> = self.wbuf.acquire(w);
         self.broadcast(|i| Command::Grad {
             job,
             w: w.clone(),
@@ -584,6 +752,14 @@ impl WorkerPool {
             only: None,
             skip_parked: true,
         })
+    }
+
+    /// `(reused, fresh)` broadcast-buffer acquisition counts of the
+    /// recycling slab — the structural observable the slab tests and the
+    /// dispatch bench assert on (a depth-1 steady state reuses every
+    /// round; pipelined depth > 1 falls back to fresh buffers).
+    pub fn broadcast_buffer_stats(&self) -> (u64, u64) {
+        self.wbuf.stats()
     }
 
     /// Stream one mini-batch gradient round for `job` into `sink` (skips
@@ -602,7 +778,7 @@ impl WorkerPool {
         assert_eq!(plan.workers(), workers, "batch plan worker count mismatch");
         ensure!(sink.workers() == workers, "sink worker count mismatch for job {job}");
         sink.tag_job(job);
-        let w: Arc<[f64]> = Arc::from(w);
+        let w: Arc<[f64]> = self.wbuf.acquire(w);
         let plan = Arc::new(plan.clone());
         self.broadcast(|i| Command::GradBatch {
             job,
@@ -624,7 +800,7 @@ impl WorkerPool {
         let workers = self.meta(job)?.workers;
         ensure!(sink.workers() == workers, "sink worker count mismatch for job {job}");
         sink.tag_job(job);
-        let d: Arc<[f64]> = Arc::from(d);
+        let d: Arc<[f64]> = self.wbuf.acquire(d);
         self.broadcast(|i| Command::Curv {
             job,
             d: d.clone(),
@@ -860,8 +1036,14 @@ impl WorkerPool {
         let workers = self.meta(job)?.workers;
         ensure!(sink.workers() == workers, "sink worker count mismatch for job {job}");
         sink.tag_job(job);
-        let w: Arc<[f64]> = Arc::from(w);
-        let mut sent = vec![false; self.lanes.len()];
+        // the slab hands out a *fresh* buffer whenever earlier rounds'
+        // buffers are still pinned by lane clones — which is exactly the
+        // pipelined steady state, so depth > 1 degrades gracefully to
+        // one allocation per in-flight round
+        let w: Arc<[f64]> = self.wbuf.acquire(w);
+        let mut sent = self.mask_spares.pop().unwrap_or_default();
+        sent.clear();
+        sent.resize(self.lanes.len(), false);
         let mut err: Option<anyhow::Error> = None;
         for (i, lane) in self.lanes.iter().enumerate() {
             let cmd = Command::Grad {
@@ -907,6 +1089,7 @@ impl WorkerPool {
                     err.get_or_insert_with(|| anyhow!("pool lane {i} died mid-round"));
                 }
             }
+            self.mask_spares.push(sent);
         }
         match err {
             None => Ok(()),
@@ -1306,6 +1489,97 @@ mod tests {
             sink.into_collected().responses[3].is_some(),
             "job 2's worker 3 must still answer its rounds"
         );
+    }
+
+    // ------------------------------------------------ buffer-slab tests
+
+    #[test]
+    fn slab_reuses_the_same_arc_once_the_round_trip_completes() {
+        let mut slab = BufferPool::new();
+        let a = slab.acquire(&[1.0, 2.0, 3.0]);
+        let ptr = Arc::as_ptr(&a);
+        drop(a); // all outside refs gone: next acquire must recycle
+        let b = slab.acquire(&[4.0, 5.0, 6.0]);
+        assert_eq!(Arc::as_ptr(&b), ptr, "round-tripped buffer must be recycled in place");
+        assert_eq!(&b[..], &[4.0, 5.0, 6.0]);
+        assert_eq!(slab.stats(), (1, 1));
+    }
+
+    #[test]
+    fn slab_allocates_fresh_while_buffers_are_pinned() {
+        let mut slab = BufferPool::new();
+        let a = slab.acquire(&[1.0; 4]);
+        // `a` still alive (a lane still holds its clone): no recycling
+        let b = slab.acquire(&[2.0; 4]);
+        assert_ne!(Arc::as_ptr(&a), Arc::as_ptr(&b));
+        assert_eq!(slab.stats(), (0, 2));
+    }
+
+    #[test]
+    fn slab_retires_stale_length_buffers_on_problem_swap() {
+        let mut slab = BufferPool::new();
+        drop(slab.acquire(&[1.0; 4]));
+        let b = slab.acquire(&[2.0; 6]);
+        assert_eq!(b.len(), 6);
+        assert_eq!(slab.stats(), (0, 2), "a stale-length buffer must not be reused");
+        drop(b);
+        assert_eq!(slab.acquire(&[3.0; 6]).len(), 6);
+        assert_eq!(slab.stats(), (1, 2));
+    }
+
+    #[test]
+    fn blocking_rounds_recycle_broadcast_buffers_at_depth_one() {
+        let (_, mut p) = pool(2);
+        let w = vec![0.1; 6];
+        for _ in 0..5 {
+            let sink = GradCollector::collect_all(8);
+            p.grad_streamed(&w, &sink).unwrap();
+            sink.into_collected();
+        }
+        let (reused, fresh) = p.broadcast_buffer_stats();
+        assert_eq!(fresh, 1, "depth-1 steady state allocates one broadcast buffer ever");
+        assert_eq!(reused, 4);
+    }
+
+    #[test]
+    fn pipelined_rounds_fall_back_to_fresh_buffers() {
+        let (_, mut p) = pool(1);
+        let w = vec![0.2; 6];
+        let mut sinks = Vec::new();
+        for _ in 0..4 {
+            let sink = GradCollector::first_k(8, 1, vec![true; 8]);
+            p.grad_deferred(&w, &sink).unwrap();
+            let _ = sink.wait_cancelled_snapshot();
+            sinks.push(sink);
+        }
+        // a single-lane pool acks each round as soon as its lane finishes,
+        // so *some* reuse may still occur; what must hold is that the slab
+        // never blocked dispatch and served every round
+        let (reused, fresh) = p.broadcast_buffer_stats();
+        assert_eq!(reused + fresh, 4);
+        assert!(fresh >= 1);
+        p.drain_deferred().unwrap();
+        for sink in sinks {
+            assert_eq!(sink.into_collected().admitted.len(), 1);
+        }
+    }
+
+    #[test]
+    fn gram_slot_matches_gemv_slot_closely() {
+        let prob = QuadProblem::synthetic_gaussian(64, 6, 0.05, 7);
+        let enc = EncodedProblem::encode(&prob, EncoderKind::Hadamard, 2.0, 8, 2).unwrap();
+        let gram_enc = enc.clone().with_grad_mode(GradMode::Gram).unwrap();
+        let mut pg = WorkerPool::new(&enc, 2);
+        let mut pm = WorkerPool::new(&gram_enc, 2);
+        let w = vec![0.3; 6];
+        for i in 0..8 {
+            let (g1, f1) = pg.grad_one(i, &w).unwrap();
+            let (g2, f2) = pm.grad_one(i, &w).unwrap();
+            assert!((f1 - f2).abs() <= 1e-9 * f1.abs().max(1.0), "worker {i}: f {f1} vs {f2}");
+            for (a, b) in g1.iter().zip(&g2) {
+                assert!((a - b).abs() <= 1e-9 * a.abs().max(1.0), "worker {i}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

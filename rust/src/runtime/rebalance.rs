@@ -411,6 +411,10 @@ impl Rebalancer {
             y: new_dy,
             rows_real: keep,
             partition_id: d.partition_id,
+            // the resolved grad mode is sticky across migrations: the
+            // engine rebuilds the Gram cache when it restages the shard,
+            // but auto's cost-model choice is made once, at encode time
+            grad_mode: d.grad_mode,
         };
         let r = &self.shards[plan.to];
         let r_rows = r.rows_real + plan.rows;
@@ -424,6 +428,7 @@ impl Rebalancer {
             y: new_ry,
             rows_real: r_rows,
             partition_id: r.partition_id,
+            grad_mode: r.grad_mode,
         };
         self.shards[plan.from] = donor.clone();
         self.shards[plan.to] = recip.clone();
@@ -485,7 +490,13 @@ mod tests {
         let x = Mat::from_fn(rows_real, cols, |_, _| fill).pad_rows(pad_bucket(rows_real));
         let mut y = vec![fill; rows_real];
         y.resize(pad_bucket(rows_real), 0.0);
-        WorkerShard { x: x.into(), y, rows_real, partition_id: 0 }
+        WorkerShard {
+            x: x.into(),
+            y,
+            rows_real,
+            partition_id: 0,
+            grad_mode: crate::linalg::GradMode::Gemv,
+        }
     }
 
     fn rebalancer(shards: Vec<WorkerShard>, threshold: f64) -> Rebalancer {
@@ -642,7 +653,13 @@ mod tests {
             let x = CsrMat::from_dense(&dense).pad_rows(pad_bucket(rows_real));
             let mut y = vec![fill; rows_real];
             y.resize(pad_bucket(rows_real), 0.0);
-            WorkerShard { x: x.into(), y, rows_real, partition_id: 0 }
+            WorkerShard {
+                x: x.into(),
+                y,
+                rows_real,
+                partition_id: 0,
+                grad_mode: crate::linalg::GradMode::Gemv,
+            }
         };
         let mut rb = rebalancer(vec![csr(24, 1.0), csr(24, 2.0)], 1.5);
         rb.observe(0, 10.0, 10.0);

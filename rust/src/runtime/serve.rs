@@ -38,7 +38,7 @@ use super::stream::{CurvCollector, GradCollector};
 use super::{ComputeEngine, EngineSession};
 use crate::cluster::{Cluster, ClusterConfig, Scenario};
 use crate::encoding::EncoderKind;
-use crate::linalg::{DataMat, Precision, StorageKind};
+use crate::linalg::{DataMat, GradMode, Precision, StorageKind};
 use crate::optim::{
     CodedGd, CodedLbfgs, CodedSgd, GdConfig, JobStep, LbfgsConfig, RunOutput, SgdConfig,
     SteppedOptimizer,
@@ -185,9 +185,12 @@ impl Scheduler {
 /// Cache key: everything [`EncodedProblem::encode_stored_prec`] depends
 /// on. The fingerprint digests the raw data (`n`, `p`, `λ`, every matrix
 /// and label entry, bit-exact); the rest are the encoding parameters plus
-/// the shard precision. `k` is deliberately excluded — see the module
-/// docs.
-type CacheKey = (u64, &'static str, u64, usize, u64, String, &'static str);
+/// the shard precision and the requested grad mode. Grad mode is a key
+/// component because [`EncodedProblem::with_grad_mode`] changes the
+/// per-shard resolution (and therefore what engines stage — a Gram-mode
+/// entry must never alias a gemv-mode one, and vice versa). `k` is
+/// deliberately excluded — see the module docs.
+type CacheKey = (u64, &'static str, u64, usize, u64, String, &'static str, &'static str);
 
 /// Encode-once cache for served jobs: hyperparameter sweeps and repeated
 /// queries over the same data reuse one [`EncodedProblem`] (shared via
@@ -281,6 +284,7 @@ impl EncodedShardCache {
     /// As [`get_or_encode`](Self::get_or_encode), with an explicit shard
     /// precision. f64 and f32 encodes of the same problem are distinct
     /// cache entries (the f32 shards are narrowed copies, not views).
+    /// Serves the default [`GradMode::Gemv`] resolution.
     #[allow(clippy::too_many_arguments)]
     pub fn get_or_encode_prec(
         &mut self,
@@ -292,6 +296,26 @@ impl EncodedShardCache {
         storage: StorageKind,
         precision: Precision,
     ) -> Result<Arc<EncodedProblem>> {
+        self.get_or_encode_mode(prob, kind, beta, m, seed, storage, precision, GradMode::Gemv)
+    }
+
+    /// As [`get_or_encode_prec`](Self::get_or_encode_prec), with an
+    /// explicit worker-gradient strategy. Distinct grad modes of the same
+    /// encode are distinct cache entries: a `gram`-keyed entry carries
+    /// per-shard Gram resolution (and stages a `p×p` cache per shard in
+    /// the engine), so it must never be served to a `gemv` request.
+    #[allow(clippy::too_many_arguments)]
+    pub fn get_or_encode_mode(
+        &mut self,
+        prob: &QuadProblem,
+        kind: EncoderKind,
+        beta: f64,
+        m: usize,
+        seed: u64,
+        storage: StorageKind,
+        precision: Precision,
+        grad_mode: GradMode,
+    ) -> Result<Arc<EncodedProblem>> {
         let key: CacheKey = (
             fingerprint(prob),
             kind.label(),
@@ -300,14 +324,15 @@ impl EncodedShardCache {
             seed,
             storage.to_string(),
             precision.label(),
+            grad_mode.label(),
         );
         if let Some(enc) = self.map.get(&key) {
             self.hits += 1;
             return Ok(Arc::clone(enc));
         }
-        let enc = Arc::new(EncodedProblem::encode_stored_prec(
-            prob, kind, beta, m, seed, storage, precision,
-        )?);
+        let enc = EncodedProblem::encode_stored_prec(prob, kind, beta, m, seed, storage, precision)?
+            .with_grad_mode(grad_mode)?;
+        let enc = Arc::new(enc);
         self.encodes += 1;
         self.map.insert(key, Arc::clone(&enc));
         Ok(enc)
@@ -772,6 +797,54 @@ mod tests {
         let mut prob2 = prob.clone();
         prob2.y[0] += 1e-9;
         assert_ne!(fingerprint(&prob), fingerprint(&prob2));
+    }
+
+    #[test]
+    fn cache_keys_gram_and_gemv_entries_separately() {
+        let prob = QuadProblem::synthetic_gaussian(64, 6, 0.05, 3);
+        let mut cache = EncodedShardCache::new();
+        let gemv = cache
+            .get_or_encode(&prob, EncoderKind::Hadamard, 2.0, 8, 2, StorageKind::Dense)
+            .unwrap();
+        let gram = cache
+            .get_or_encode_mode(
+                &prob,
+                EncoderKind::Hadamard,
+                2.0,
+                8,
+                2,
+                StorageKind::Dense,
+                Precision::F64,
+                GradMode::Gram,
+            )
+            .unwrap();
+        assert!(
+            !Arc::ptr_eq(&gemv, &gram),
+            "a gram-keyed entry must never alias the gemv entry of the same encode"
+        );
+        assert_eq!((cache.encodes(), cache.hits()), (2, 0));
+        assert_eq!(gemv.grad_mode, GradMode::Gemv);
+        assert_eq!(gram.grad_mode, GradMode::Gram);
+        assert!(gram.shards.iter().all(|s| s.grad_mode == GradMode::Gram));
+        assert!(
+            gram.shard_mem_bytes() > gemv.shard_mem_bytes(),
+            "gram entries must report their cache in shard_mem_bytes"
+        );
+        // and each repeat request hits its own entry
+        let gram2 = cache
+            .get_or_encode_mode(
+                &prob,
+                EncoderKind::Hadamard,
+                2.0,
+                8,
+                2,
+                StorageKind::Dense,
+                Precision::F64,
+                GradMode::Gram,
+            )
+            .unwrap();
+        assert!(Arc::ptr_eq(&gram, &gram2));
+        assert_eq!((cache.encodes(), cache.hits()), (2, 1));
     }
 
     #[test]

@@ -66,6 +66,13 @@ struct Inner<T> {
     /// `All`, where admission is decided post hoc by the caller).
     admitted: Vec<usize>,
     admission: Admission,
+    /// Recycled payloads donated by [`Collector::rearm_all`] /
+    /// [`Collector::rearm_first_k`] from the previous round's responses,
+    /// served back out through [`Collector::take_spare`] so a
+    /// steady-state deliverer (the pool's gradient lanes) can refill a
+    /// previous round's buffer instead of allocating a fresh one.
+    /// Capped at `workers` entries.
+    spares: Vec<T>,
 }
 
 /// The round state every [`Collector`] handle points at.
@@ -140,6 +147,7 @@ impl<T> Collector<T> {
                     delivery_order: Vec::with_capacity(workers),
                     admitted: Vec::with_capacity(k_cap),
                     admission,
+                    spares: Vec::new(),
                 }),
                 cancel: AtomicBool::new(false),
                 cancelled_cv: Condvar::new(),
@@ -277,6 +285,117 @@ impl<T> Collector<T> {
             responses: guard.responses.clone(),
             delivery_order: guard.delivery_order.clone(),
             admitted: guard.admitted.clone(),
+        }
+    }
+
+    /// Reset a collect-all collector for a new round, recycling the
+    /// previous round's payloads into the spare bin
+    /// ([`Collector::take_spare`]). Panics if any lane-registered clone
+    /// is still alive — rearming under an in-flight round would corrupt
+    /// it, which is exactly why the pipelined round loop (depth > 1,
+    /// straggler tails still settling) builds fresh collectors instead
+    /// of reusing one.
+    ///
+    /// After a warmup round has sized the inner vectors, a
+    /// rearm → dispatch → [`Collector::visit_responses`] round performs
+    /// no heap allocation in the collector (asserted by the
+    /// `alloc_regression` suite and reported by `fig_dispatch`).
+    pub fn rearm_all(&self) {
+        assert!(!self.shared.first_k, "rearm_all requires a collect-all collector");
+        self.rearm_inner(None);
+        self.shared.cancel.store(false, Ordering::Release);
+    }
+
+    /// Reset a first-k collector for a new round with a fresh admission
+    /// target and eligibility mask (copied into the retained buffer — no
+    /// allocation once capacity exists). Same recycling and sole-use
+    /// contract as [`Collector::rearm_all`]; like
+    /// [`Collector::first_k`], an all-failed mask pre-cancels the round.
+    pub fn rearm_first_k(&self, k: usize, eligible: &[bool]) {
+        assert!(self.shared.first_k, "rearm_first_k requires a first-k collector");
+        assert_eq!(eligible.len(), self.shared.workers, "eligibility mask length mismatch");
+        let k_eff = k.min(eligible.iter().filter(|&&e| e).count());
+        self.rearm_inner(Some((k_eff, eligible)));
+        self.shared.cancel.store(k_eff == 0, Ordering::Release);
+    }
+
+    fn rearm_inner(&self, first_k: Option<(usize, &[bool])>) {
+        {
+            let lanes = self.shared.live_lanes.lock().expect("collector poisoned");
+            assert!(
+                lanes.is_empty(),
+                "collector rearmed while lanes {:?} still hold clones \
+                 (the previous round has not finished)",
+                *lanes
+            );
+        }
+        let mut guard = self.shared.inner.lock().expect("collector poisoned");
+        let inner = &mut *guard;
+        let workers = self.shared.workers;
+        for slot in inner.responses.iter_mut() {
+            if let Some((payload, _)) = slot.take() {
+                if inner.spares.len() < workers {
+                    inner.spares.push(payload);
+                }
+            }
+        }
+        inner.responses.resize_with(workers, || None);
+        inner.delivery_order.clear();
+        inner.admitted.clear();
+        match (first_k, &mut inner.admission) {
+            (Some((k, eligible)), Admission::FirstK { k: kk, eligible: el }) => {
+                *kk = k;
+                el.clear();
+                el.extend_from_slice(eligible);
+            }
+            (None, Admission::All) => {}
+            _ => unreachable!("admission kind is fixed at construction"),
+        }
+    }
+
+    /// Pop a payload recycled by the last rearm. Deliverers that can
+    /// refill a buffer (the pool's gradient lanes) call this before
+    /// allocating; an empty bin (first rounds, or a consuming extraction
+    /// took the payloads away) just means a fresh allocation this round.
+    pub fn take_spare(&self) -> Option<T> {
+        self.shared.inner.lock().expect("collector poisoned").spares.pop()
+    }
+
+    /// Visit every delivered response in worker order without moving the
+    /// payloads — the zero-allocation read of a finished reusable round
+    /// (the payloads stay in place for the next rearm to recycle).
+    pub fn visit_responses(&self, mut f: impl FnMut(usize, &T, f64)) {
+        let guard = self.shared.inner.lock().expect("collector poisoned");
+        for (w, slot) in guard.responses.iter().enumerate() {
+            if let Some((payload, ms)) = slot {
+                f(w, payload, *ms);
+            }
+        }
+    }
+
+    /// Extract the finished round's observations while keeping the
+    /// handle alive for a future rearm — the reusable-collector
+    /// counterpart of [`Collector::into_collected`]. Panics (like the
+    /// consuming form) if a lane-registered clone is still alive. The
+    /// payloads move out to the caller, so the next rearm finds nothing
+    /// to recycle — use [`Collector::visit_responses`] when the round's
+    /// buffers should stay resident.
+    pub fn drain_collected(&self) -> Collected<T> {
+        {
+            let lanes = self.shared.live_lanes.lock().expect("collector poisoned");
+            assert!(
+                lanes.is_empty(),
+                "collector drained while lanes {:?} still hold clones",
+                *lanes
+            );
+        }
+        let mut guard = self.shared.inner.lock().expect("collector poisoned");
+        let inner = &mut *guard;
+        let responses = std::mem::take(&mut inner.responses);
+        Collected {
+            responses,
+            delivery_order: std::mem::take(&mut inner.delivery_order),
+            admitted: std::mem::take(&mut inner.admitted),
         }
     }
 
@@ -482,5 +601,93 @@ mod tests {
     fn wait_snapshot_rejects_collect_all() {
         let c: Collector<u32> = Collector::collect_all(2);
         let _ = c.wait_cancelled_snapshot();
+    }
+
+    #[test]
+    fn rearm_all_recycles_payloads_into_spares() {
+        let c: Collector<Vec<f64>> = Collector::collect_all(2);
+        c.deliver(0, vec![1.0, 2.0], 0.1);
+        c.deliver(1, vec![3.0, 4.0], 0.2);
+        assert!(c.take_spare().is_none(), "spares appear only at rearm");
+        c.rearm_all();
+        // both payloads recycled; round state reset for fresh deliveries
+        let mut spares = [c.take_spare().unwrap(), c.take_spare().unwrap()];
+        spares.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+        assert_eq!(spares, [vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert!(c.take_spare().is_none());
+        c.deliver(0, vec![9.0], 0.3);
+        let got = c.into_collected();
+        assert_eq!(got.delivery_order, vec![0]);
+        assert_eq!(got.responses[0].as_ref().unwrap().0, vec![9.0]);
+        assert!(got.responses[1].is_none());
+    }
+
+    #[test]
+    fn rearm_first_k_resets_admission_and_mask() {
+        let c: Collector<u32> = Collector::first_k(3, 2, vec![true; 3]);
+        c.deliver(0, 1, 0.1);
+        c.deliver(1, 2, 0.1);
+        assert!(c.is_cancelled());
+        // new round: tighter k, worker 0 failed this time
+        c.rearm_first_k(1, &[false, true, true]);
+        assert!(!c.is_cancelled());
+        c.deliver(0, 3, 0.1); // ineligible: recorded, not admitted
+        assert!(!c.is_cancelled());
+        c.deliver(2, 4, 0.1);
+        assert!(c.is_cancelled());
+        let got = c.into_collected();
+        assert_eq!(got.admitted, vec![2]);
+        assert_eq!(got.delivery_order, vec![0, 2]);
+    }
+
+    #[test]
+    fn rearm_first_k_all_failed_precancels() {
+        let c: Collector<u32> = Collector::first_k(2, 2, vec![true; 2]);
+        c.rearm_first_k(2, &[false, false]);
+        assert!(c.is_cancelled());
+    }
+
+    #[test]
+    #[should_panic(expected = "rearmed while lanes")]
+    fn rearm_panics_while_lane_clone_alive() {
+        let c: Collector<u32> = Collector::collect_all(2);
+        let _lane = c.clone_for_lane(1);
+        c.rearm_all();
+    }
+
+    #[test]
+    #[should_panic(expected = "requires a collect-all collector")]
+    fn rearm_all_rejects_first_k_collector() {
+        let c: Collector<u32> = Collector::first_k(2, 1, vec![true; 2]);
+        c.rearm_all();
+    }
+
+    #[test]
+    fn drain_collected_keeps_handle_reusable() {
+        let c: Collector<u32> = Collector::first_k(2, 1, vec![true; 2]);
+        c.deliver(1, 7, 0.5);
+        let got = c.drain_collected();
+        assert_eq!(got.admitted, vec![1]);
+        // drained payloads left nothing to recycle, but the handle rearms
+        c.rearm_first_k(1, &[true, true]);
+        assert!(c.take_spare().is_none());
+        c.deliver(0, 8, 0.1);
+        let got = c.drain_collected();
+        assert_eq!(got.admitted, vec![0]);
+        assert_eq!(got.responses[0].as_ref().unwrap().0, 8);
+    }
+
+    #[test]
+    fn visit_responses_reads_in_worker_order_without_moving() {
+        let c: Collector<u32> = Collector::collect_all(3);
+        c.deliver(2, 20, 0.2);
+        c.deliver(0, 10, 0.1);
+        let mut seen = Vec::new();
+        c.visit_responses(|w, v, ms| seen.push((w, *v, ms)));
+        assert_eq!(seen, vec![(0, 10, 0.1), (2, 20, 0.2)]);
+        // payloads stayed in place: the consuming read still sees them
+        let got = c.into_collected();
+        assert_eq!(got.delivery_order, vec![2, 0]);
+        assert_eq!(got.responses[2].as_ref().unwrap().0, 20);
     }
 }

@@ -1,0 +1,135 @@
+//! Zero-allocation steady state — the regression gate behind the
+//! broadcast slab, the rearmable collector, and the recycled payload
+//! pool.
+//!
+//! A counting global allocator watches a `NativeEngine` drive gradient
+//! rounds through the recycled dispatch path (persistent collector,
+//! `visit_responses` by reference, `rearm_all`, broadcast slab). The
+//! assertion is **min allocations over steady rounds == 0**: std's mpsc
+//! channels amortize one message-block allocation per ~31 sends per
+//! channel, so *some* rounds legitimately touch the heap — but between
+//! block refills every round must be completely allocation-free, or a
+//! per-round `Vec` has crept back into the dispatch path. With one lane
+//! thread (`with_threads(1)`) the channel count is minimal and the
+//! alloc-free rounds dominate the window.
+//!
+//! Everything lives in one `#[test]` because the allocation counter is
+//! process-global: concurrently running tests would bleed into each
+//! other's per-round deltas.
+
+use codedopt::encoding::EncoderKind;
+use codedopt::linalg::GradMode;
+use codedopt::problem::{EncodedProblem, QuadProblem};
+use codedopt::runtime::{ComputeEngine, GradCollector, NativeEngine};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: defers every operation to `System`; the counter is a relaxed
+// atomic with no other side effects.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const WARMUP: usize = 6;
+const ROUNDS: usize = 48;
+
+/// One recycled round: broadcast through the slab, read responses by
+/// reference, rearm the collector in place.
+fn recycled_round(eng: &mut NativeEngine, w: &[f64], sink: &GradCollector) {
+    eng.worker_grad_streamed(w, sink).unwrap();
+    sink.visit_responses(|wid, payload, _ms| {
+        std::hint::black_box((wid, &payload.0, payload.1));
+    });
+    sink.rearm_all();
+}
+
+/// Drive `ROUNDS` steady rounds and return (min, sum) of per-round
+/// allocation counts, after `WARMUP` rounds fill the slab and the
+/// collector's spare pool.
+fn steady_allocs(eng: &mut NativeEngine, w: &[f64], m: usize) -> (u64, u64) {
+    let sink = GradCollector::collect_all(m);
+    for _ in 0..WARMUP {
+        recycled_round(eng, w, &sink);
+    }
+    let mut min = u64::MAX;
+    let mut sum = 0u64;
+    for _ in 0..ROUNDS {
+        let a0 = ALLOCS.load(Ordering::Relaxed);
+        recycled_round(eng, w, &sink);
+        let a = ALLOCS.load(Ordering::Relaxed) - a0;
+        min = min.min(a);
+        sum += a;
+    }
+    (min, sum)
+}
+
+#[test]
+fn steady_state_rounds_allocate_zero() {
+    let m = 4;
+    let prob = QuadProblem::synthetic_gaussian(16 * m, 12, 0.05, 7);
+    let enc = EncodedProblem::encode(&prob, EncoderKind::Identity, 1.0, m, 7).unwrap();
+    let w = vec![0.1; 12];
+
+    // gemv path
+    let mut eng = NativeEngine::new(&enc).with_threads(1);
+    let (min, sum) = steady_allocs(&mut eng, &w, m);
+    assert_eq!(
+        min, 0,
+        "gemv dispatch path allocated on every steady round \
+         (mean {:.2}/round) — a per-round Vec crept back in",
+        sum as f64 / ROUNDS as f64
+    );
+    let (reused, fresh) = eng.broadcast_buffer_stats();
+    assert!(
+        reused > fresh,
+        "broadcast slab barely recycling: {reused} reused vs {fresh} fresh"
+    );
+
+    // the mpsc amortized cost is small: well under one block per round
+    // per channel would be ~2/round here; anything bigger means a
+    // structural per-round allocation slipped past the min statistic
+    assert!(
+        (sum as f64 / ROUNDS as f64) < 2.0,
+        "steady rounds average {:.2} allocations — more than mpsc block \
+         amortization can explain",
+        sum as f64 / ROUNDS as f64
+    );
+
+    // gram path: the cached-Gram fast path must be as quiet — its round
+    // serves g = G·w − c from staged buffers with no temporaries
+    let gram_enc = enc.clone().with_grad_mode(GradMode::Gram).unwrap();
+    let mut eng = NativeEngine::new(&gram_enc).with_threads(1);
+    let (min, sum) = steady_allocs(&mut eng, &w, m);
+    assert_eq!(
+        min, 0,
+        "gram dispatch path allocated on every steady round \
+         (mean {:.2}/round)",
+        sum as f64 / ROUNDS as f64
+    );
+    let (reused, _fresh) = eng.broadcast_buffer_stats();
+    assert!(reused > 0, "gram-mode engine never recycled a broadcast buffer");
+}

@@ -1,0 +1,207 @@
+//! `--grad-mode gram` ≡ `--grad-mode gemv` — the numeric contract behind
+//! the per-shard Gram-cache gradient fast path.
+//!
+//! The Gram path serves a full-shard gradient round as one symmetric
+//! p×p gemv (`g = G·w − c` with `G = X̃ᵀX̃`, `c = X̃ᵀỹ` staged once)
+//! instead of streaming the n_w×p shard twice. Floating point is not
+//! associative, so the two paths are *not* bitwise-equal — the pin is
+//! numeric: on every optimizer that takes full-shard rounds (GD,
+//! L-BFGS, full-batch SGD) and across encoder families, the final
+//! iterate agrees to ≤1e-9 relative error, with the responder schedule
+//! identical under the virtual clock. Alongside the equivalence pin:
+//! the `auto` cost model (`p² < 2·nnz` madds per shard), the dense-f64
+//! precondition (CSR and f32 shards are hard errors), and the
+//! memory-accounting contract (`shard_mem_bytes` counts the cache).
+
+use codedopt::linalg::{GradMode, Mat, Precision, StorageKind};
+use codedopt::prelude::*;
+use codedopt::rng::Pcg64;
+
+fn random_problem(n: usize, p: usize, lambda: f64, seed: u64) -> QuadProblem {
+    let mut rng = Pcg64::new(seed, 77);
+    let x = Mat::from_fn(n, p, |_, _| rng.next_gaussian());
+    let y: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+    QuadProblem::new(x, y, lambda)
+}
+
+/// Run `opt` on `enc` under the virtual clock and return the output.
+/// `wait_for = m` + no delay makes the admission schedule trivially
+/// identical across grad modes, isolating the numeric comparison.
+fn run_collect_all(enc: &EncodedProblem, opt: &dyn Optimizer, iters: usize) -> RunOutput {
+    let m = enc.m();
+    let engine = Box::new(NativeEngine::new(enc));
+    let cfg = ClusterConfig {
+        workers: m,
+        wait_for: m,
+        delay: DelayModel::None,
+        clock: ClockMode::Virtual,
+        ms_per_mflop: 0.5,
+        seed: 13,
+    };
+    let mut cluster = Cluster::new(enc, engine, cfg).unwrap();
+    opt.run(enc, &mut cluster, iters).unwrap()
+}
+
+fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+    let num: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt();
+    let den: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+    num / den.max(1e-300)
+}
+
+#[test]
+fn gram_matches_gemv_on_every_full_round_optimizer() {
+    let prob = random_problem(256, 24, 0.05, 5);
+    let optimizers: Vec<(&str, Box<dyn Optimizer>)> = vec![
+        ("gd", Box::new(CodedGd::new(GdConfig { epsilon: Some(0.5), seed: 9, ..Default::default() }))),
+        ("lbfgs", Box::new(CodedLbfgs::new(LbfgsConfig { epsilon: Some(0.0), ..Default::default() }))),
+        (
+            "sgd-full",
+            Box::new(CodedSgd::new(SgdConfig {
+                lr: Some(0.02),
+                batch_frac: 1.0,
+                momentum: 0.25,
+                seed: 3,
+                ..Default::default()
+            })),
+        ),
+    ];
+    for (kind, beta) in [
+        (EncoderKind::Hadamard, 2.0),
+        (EncoderKind::Replication, 2.0),
+        (EncoderKind::Identity, 1.0),
+    ] {
+        let gemv =
+            EncodedProblem::encode_stored(&prob, kind, beta, 8, 7, StorageKind::Dense).unwrap();
+        let gram = gemv.clone().with_grad_mode(GradMode::Gram).unwrap();
+        assert!(gram.shards.iter().all(|s| s.grad_mode == GradMode::Gram));
+        for (name, opt) in &optimizers {
+            let a = run_collect_all(&gemv, opt.as_ref(), 15);
+            let b = run_collect_all(&gram, opt.as_ref(), 15);
+            let err = rel_err(&a.w, &b.w);
+            assert!(
+                err <= 1e-9,
+                "{kind:?}/{name}: final iterates diverged, rel err {err:e}"
+            );
+            assert_eq!(a.trace.len(), b.trace.len(), "{kind:?}/{name}: trace length");
+            for (ra, rb) in a.trace.records.iter().zip(&b.trace.records) {
+                let df = (ra.f_true - rb.f_true).abs() / ra.f_true.abs().max(1e-300);
+                assert!(df <= 1e-9, "{kind:?}/{name} iter {}: f_true drift {df:e}", ra.iter);
+            }
+        }
+    }
+}
+
+#[test]
+fn gram_matches_gemv_under_first_k_straggling() {
+    // first-k admission with exponential delays: the delay draws dwarf
+    // the (mode-dependent) virtual compute charge, so both modes admit
+    // the same responder sets round for round — and must then agree on
+    // the η-scaled aggregate to ≤1e-9.
+    let prob = random_problem(256, 16, 0.1, 11);
+    let gemv =
+        EncodedProblem::encode_stored(&prob, EncoderKind::Hadamard, 2.0, 8, 3, StorageKind::Dense)
+            .unwrap();
+    let gram = gemv.clone().with_grad_mode(GradMode::Gram).unwrap();
+    let run = |enc: &EncodedProblem| {
+        let engine = Box::new(NativeEngine::new(enc));
+        let cfg = ClusterConfig {
+            workers: 8,
+            wait_for: 6,
+            delay: DelayModel::Exp { mean_ms: 50.0 },
+            clock: ClockMode::Virtual,
+            ms_per_mflop: 1e-6,
+            seed: 21,
+        };
+        let mut cluster = Cluster::new(enc, engine, cfg).unwrap();
+        let gd = CodedGd::new(GdConfig { epsilon: Some(0.5), seed: 9, ..Default::default() });
+        gd.run(enc, &mut cluster, 12).unwrap()
+    };
+    let a = run(&gemv);
+    let b = run(&gram);
+    for (ra, rb) in a.trace.records.iter().zip(&b.trace.records) {
+        assert_eq!(ra.responders, rb.responders, "iter {}: responder schedule", ra.iter);
+    }
+    let err = rel_err(&a.w, &b.w);
+    assert!(err <= 1e-9, "straggling run diverged, rel err {err:e}");
+}
+
+#[test]
+fn auto_selects_gram_iff_cost_model_wins() {
+    // tall shards: p² = 576 ≪ 2·rows·p per shard → every shard Gram
+    let tall = random_problem(512, 24, 0.05, 17);
+    let enc = EncodedProblem::encode_stored(&tall, EncoderKind::Hadamard, 2.0, 8, 5, StorageKind::Dense)
+        .unwrap()
+        .with_grad_mode(GradMode::Auto)
+        .unwrap();
+    assert_eq!(enc.grad_mode, GradMode::Auto);
+    for s in &enc.shards {
+        let (rows, p) = (s.x.rows(), s.x.cols());
+        assert!(p * p < 2 * rows * p, "test shape no longer in the gram regime");
+        assert_eq!(s.grad_mode, GradMode::Gram, "worker {}", s.partition_id);
+    }
+
+    // short wide shards: p² ≥ 2·rows·p per shard → every shard Gemv
+    let wide = random_problem(64, 48, 0.05, 19);
+    let enc =
+        EncodedProblem::encode_stored(&wide, EncoderKind::Identity, 1.0, 8, 5, StorageKind::Dense)
+            .unwrap()
+            .with_grad_mode(GradMode::Auto)
+            .unwrap();
+    for s in &enc.shards {
+        let (rows, p) = (s.x.rows(), s.x.cols());
+        assert!(p * p >= 2 * rows * p, "test shape no longer in the gemv regime");
+        assert_eq!(s.grad_mode, GradMode::Gemv, "worker {}", s.partition_id);
+    }
+
+    // CSR shards never auto-promote, whatever the shape says
+    let enc =
+        EncodedProblem::encode_stored(&tall, EncoderKind::Identity, 1.0, 8, 5, StorageKind::Sparse)
+            .unwrap()
+            .with_grad_mode(GradMode::Auto)
+            .unwrap();
+    assert!(enc.shards.iter().all(|s| s.grad_mode == GradMode::Gemv));
+}
+
+#[test]
+fn gram_rejects_csr_shards_naming_the_worker() {
+    let prob = random_problem(128, 12, 0.05, 23);
+    let enc =
+        EncodedProblem::encode_stored(&prob, EncoderKind::Identity, 1.0, 4, 5, StorageKind::Sparse)
+            .unwrap();
+    let err = enc.with_grad_mode(GradMode::Gram).unwrap_err().to_string();
+    assert!(err.contains("CSR"), "error should name the storage axis: {err}");
+    assert!(err.contains("worker 0"), "error should name the offending worker: {err}");
+}
+
+#[test]
+fn gram_rejects_f32_shards() {
+    let prob = random_problem(128, 12, 0.05, 29);
+    let enc = EncodedProblem::encode_stored_prec(
+        &prob,
+        EncoderKind::Hadamard,
+        2.0,
+        4,
+        5,
+        StorageKind::Dense,
+        Precision::F32,
+    )
+    .unwrap();
+    let err = enc.with_grad_mode(GradMode::Gram).unwrap_err().to_string();
+    assert!(err.contains("f64"), "error should name the precision axis: {err}");
+}
+
+#[test]
+fn shard_mem_bytes_counts_the_gram_cache() {
+    let prob = random_problem(256, 24, 0.05, 31);
+    let gemv =
+        EncodedProblem::encode_stored(&prob, EncoderKind::Hadamard, 2.0, 8, 7, StorageKind::Dense)
+            .unwrap();
+    let gram = gemv.clone().with_grad_mode(GradMode::Gram).unwrap();
+    let p = gemv.p();
+    let cache = (p * p + p + 1) * std::mem::size_of::<f64>();
+    assert_eq!(
+        gram.shard_mem_bytes(),
+        gemv.shard_mem_bytes() + 8 * cache,
+        "every one of the 8 shards should account one Gram cache"
+    );
+}

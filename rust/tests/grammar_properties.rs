@@ -1,5 +1,6 @@
 //! Property tests for every CLI/config grammar: `DelayModel`,
-//! `LrSchedule`, `RebalanceConfig`, `ServePolicy`, `TemporalScheme`, and
+//! `LrSchedule`, `GradMode`, `RebalanceConfig`, `ServePolicy`,
+//! `TemporalScheme`, and
 //! the fault-scenario DSL all promise `parse(x.to_string()) == x` (the
 //! config/JSON round-trip contract) and strict rejection of malformed
 //! input — plus a scheduler-fairness property for the serve scheduler.
@@ -8,6 +9,7 @@
 
 use codedopt::cluster::{AdmitPolicy, DelayModel, FaultEvent, Scenario};
 use codedopt::encoding::temporal::TemporalScheme;
+use codedopt::linalg::GradMode;
 use codedopt::optim::LrSchedule;
 use codedopt::rng::Pcg64;
 use codedopt::runtime::{RebalanceConfig, SchedJob, Scheduler, ServePolicy};
@@ -89,6 +91,40 @@ fn lr_schedule_rejects_malformed_grammar() {
         "const:1", "warp", "warp:9", "1/t:0",
     ] {
         assert!(LrSchedule::parse(bad).is_err(), "should reject {bad:?}");
+    }
+}
+
+fn any_grad_mode(rng: &mut Pcg64) -> GradMode {
+    match gen_range(rng, 0, 2) {
+        0 => GradMode::Gemv,
+        1 => GradMode::Gram,
+        _ => GradMode::Auto,
+    }
+}
+
+#[test]
+fn grad_mode_grammar_round_trips_every_variant() {
+    property("grad mode parse<->Display", 60, |rng| {
+        let mode = any_grad_mode(rng);
+        let text = mode.to_string();
+        let back = GradMode::parse(&text)
+            .unwrap_or_else(|e| panic!("reparse of {text:?} failed: {e}"));
+        assert_eq!(back, mode, "round trip drifted for {text:?}");
+        // labels are case-insensitive on input, canonical on output
+        let upper = GradMode::parse(&text.to_ascii_uppercase())
+            .unwrap_or_else(|e| panic!("uppercase reparse of {text:?} failed: {e}"));
+        assert_eq!(upper, mode);
+        assert_eq!(mode.label(), text);
+    });
+}
+
+#[test]
+fn grad_mode_rejects_malformed_grammar() {
+    for bad in [
+        "", " ", "gem", "gemv ", " gram", "grams", "auto:1", "gemv|gram", "hessian", "g",
+        "full", "cache",
+    ] {
+        assert!(GradMode::parse(bad).is_err(), "should reject {bad:?}");
     }
 }
 

@@ -10,6 +10,13 @@
 # *supposed* to alter the traces (new CSV column, intentional numeric
 # change), run this script and commit the rewritten files; CI's drift job
 # fails if the checked-in goldens differ from freshly regenerated output.
+#
+# Every golden is generated under `--grad-mode gemv` (the harness uses
+# the default, which is pinned to gemv): the bitwise contract belongs to
+# the streamed-gemv worker gradient only. `--grad-mode gram|auto` carries
+# a 1e-9 *numeric* contract instead (rust/tests/gram_equivalence.rs) and
+# must never be wired into this script — a gram-generated golden would
+# pin the wrong arithmetic.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
